@@ -1,0 +1,160 @@
+//! **End-to-end driver** (DESIGN.md deliverable): the full HAQA pipeline on
+//! a real small workload, proving all three layers compose.
+//!
+//! 1. Pretrain the tiny-LM base on the synthetic corpus (PJRT, Layer-2
+//!    graph with Pallas DoReFa kernels).
+//! 2. HAQA fine-tunes QLoRA hyperparameters for `--rounds` rounds — several
+//!    hundred real optimizer steps per round through the AOT train step —
+//!    logging the loss curve and per-task accuracy.
+//! 3. HAQA tunes the deployment kernel execution config on the simulated
+//!    A6000 and selects a bit-width under the memory limit.
+//! 4. The token engine serves generation with the tuned decode artifact,
+//!    reporting real latency/throughput.
+//!
+//! ```sh
+//! cargo run --release --example e2e_finetune_and_deploy -- [--quick]
+//! ```
+
+use haqa::agent::TaskKind;
+use haqa::coordinator::scenario::Track;
+use haqa::coordinator::{Scenario, Workflow};
+use haqa::deploy::TokenEngine;
+use haqa::hardware::ExecConfig;
+use haqa::optimizers::best;
+use haqa::runtime::{ArtifactSet, InputRole};
+use haqa::trainer::lm::{LmBase, QloraJob};
+use haqa::util::bench;
+use haqa::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let quick = bench::flag("quick");
+    let rounds = bench::opt("rounds")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if quick { 3 } else { 8 });
+    let pretrain_steps = if quick { 200 } else { 600 };
+    let step_scale = if quick { 0.1 } else { 0.25 };
+    let t0 = std::time::Instant::now();
+
+    println!("== stage 1: pretrain tiny-LM base ({pretrain_steps} steps, PJRT) ==");
+    let set = ArtifactSet::load_default()?;
+    let base = LmBase::pretrained(&set, 0, pretrain_steps)?;
+    println!("   done in {:.1}s", t0.elapsed().as_secs_f64());
+
+    println!("\n== stage 2: HAQA QLoRA fine-tuning ({rounds} rounds, INT4 base) ==");
+    let sc = Scenario {
+        name: "e2e".into(),
+        track: Track::FinetuneLm,
+        model: "tiny-lm".into(),
+        bits: 4.0,
+        optimizer: "haqa".into(),
+        budget: rounds,
+        seed: 0,
+        step_scale,
+        ..Scenario::default()
+    };
+    let wf = Workflow::new(&set);
+    let ft = wf.run_finetune(&sc)?;
+    for (i, o) in ft.history.iter().enumerate() {
+        println!("   round {i}: avg accuracy {:.2}%", o.score * 100.0);
+    }
+    let best_cfg = best(&ft.history).unwrap().config.clone();
+    println!(
+        "   best {:.2}% with {}",
+        ft.best_score * 100.0,
+        haqa::search::spaces::llama_qlora()
+            .config_to_json(&best_cfg)
+            .to_string()
+    );
+    // Re-train the winner and print its loss curve (the paper's Fig. 3
+    // feedback payload).
+    let job = QloraJob {
+        set: &set,
+        base: &base,
+        bits: 4.0,
+        seed: 0,
+        step_scale,
+    };
+    let winner = job.run(&best_cfg)?;
+    let curve: Vec<String> = winner
+        .loss_curve
+        .iter()
+        .step_by((winner.loss_curve.len() / 12).max(1))
+        .map(|l| format!("{l:.3}"))
+        .collect();
+    println!("   loss curve: [{}]", curve.join(", "));
+    println!("   per-task: {}", winner.report.to_json().to_string());
+
+    println!("\n== stage 3: deployment tuning (simulated A6000) ==");
+    let ksc = Scenario {
+        name: "e2e".into(),
+        track: Track::Kernel,
+        kernel: "matmul:64".into(),
+        optimizer: "haqa".into(),
+        budget: rounds.max(6),
+        seed: 0,
+        ..Scenario::default()
+    };
+    let kt = wf.run_kernel(&ksc)?;
+    println!(
+        "   kernel latency: informed start {:.2} µs -> tuned {:.2} µs (llama.cpp default 52.29)",
+        -kt.history[0].score,
+        -kt.best_score
+    );
+    let bsc = Scenario {
+        name: "e2e".into(),
+        track: Track::Bitwidth,
+        model: "llama2-7b".into(),
+        memory_limit_gb: 10.0,
+        ..Scenario::default()
+    };
+    let bw = wf.run_bitwidth(&bsc)?;
+    println!(
+        "   bit-width pick: {:?} ({:.1} simulated tokens/s)",
+        bw.history[0].config.get("quant"),
+        bw.best_score
+    );
+
+    println!("\n== stage 4: serve generation on the PJRT token engine ==");
+    let train_art = set.get("lm_train_b8")?;
+    let mut rng = Rng::new(1);
+    let lora: Vec<_> = train_art
+        .inputs_with_role(InputRole::State)
+        .iter()
+        .take(8)
+        .map(|s| s.init_tensor(&mut rng))
+        .collect();
+    // Decode-tile choice comes from the tuned exec config: snap its tiling
+    // to the nearest AOT'd variant.
+    let tuned = ExecConfig::from_config(&best(&kt.history).unwrap().config);
+    let tile = match tuned.tiling {
+        0..=23 => "mm16x16x16",
+        24..=47 => "mm32x32x32",
+        _ => "mm64x64x64",
+    };
+    let engine = TokenEngine::new(
+        &set,
+        &format!("lm_decode_{tile}"),
+        &base.tensors,
+        &lora,
+        4.0,
+        16,
+        8.0,
+    )?;
+    let n = if quick { 16 } else { 48 };
+    let stats = engine.generate(&[1, 2, 3, 4, 5], n)?;
+    println!(
+        "   generated {} tokens via {}: {:.1} tokens/s (median {:.0} µs/token)",
+        stats.tokens.len(),
+        format!("lm_decode_{tile}"),
+        stats.tokens_per_sec(),
+        stats.median_token_us()
+    );
+
+    println!(
+        "\n== e2e complete in {:.1}s — all three layers composed \
+         (Pallas kernels -> JAX graphs -> Rust coordinator) ==",
+        t0.elapsed().as_secs_f64()
+    );
+    let _ = TaskKind::Finetune; // (referenced for doc completeness)
+    Ok(())
+}

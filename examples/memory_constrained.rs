@@ -1,0 +1,49 @@
+//! Table 5 demo — deploying LLaMA2-13B under shrinking memory budgets: the
+//! agent computes footprints, rejects infeasible schemes, and picks the
+//! fastest feasible one (or rejects deployment outright at 4 GB).
+
+use haqa::coordinator::scenario::Track;
+use haqa::coordinator::{Scenario, Workflow};
+use haqa::hardware::{memory, ModelProfile};
+use haqa::quant::Scheme;
+use haqa::runtime::ArtifactSet;
+use haqa::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    let set = ArtifactSet::load_default()?;
+    let wf = Workflow::new(&set);
+    let model = ModelProfile::llama2_13b();
+
+    let mut t = Table::new(
+        "LLaMA2-13B footprints",
+        &["Scheme", "weights GB", "KV cache GB", "runtime GB", "total GB"],
+    );
+    for s in Scheme::ALL {
+        let b = memory::footprint(&model, s, memory::DEFAULT_CONTEXT_TOKENS);
+        t.row(vec![
+            s.label().to_string(),
+            format!("{:.2}", b.weights_gb),
+            format!("{:.2}", b.kv_cache_gb),
+            format!("{:.2}", b.runtime_gb),
+            format!("{:.2}", b.total_gb()),
+        ]);
+    }
+    print!("{}", t.to_markdown());
+
+    for budget in memory::TABLE5_BUDGETS_GB {
+        let sc = Scenario {
+            name: format!("memdemo_{budget}"),
+            track: Track::Bitwidth,
+            model: "llama2-13b".into(),
+            memory_limit_gb: budget,
+            ..Scenario::default()
+        };
+        let out = wf.run_bitwidth(&sc)?;
+        println!(
+            "budget {budget:>4} GB -> agent picks {:?}",
+            out.history[0].config.get("quant")
+        );
+    }
+    println!("\n(paper Table 5: 4 GB ×××, 12 GB INT4 only, 20 GB INT8+INT4, 28 GB all)");
+    Ok(())
+}

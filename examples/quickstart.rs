@@ -1,0 +1,58 @@
+//! Quickstart: the smallest end-to-end HAQA loop.
+//!
+//! Loads the AOT artifacts, asks the agent for a QAT configuration, trains
+//! the small CNN on the PJRT CPU client for two rounds, and prints the
+//! agent's reasoning, the accuracy feedback, and the Appendix-C cost line.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use haqa::agent::simulated::SimulatedLlm;
+use haqa::agent::{Agent, TaskContext, TaskKind};
+use haqa::optimizers::Observation;
+use haqa::quant::QatPrecision;
+use haqa::runtime::ArtifactSet;
+use haqa::search::spaces;
+use haqa::trainer::qat::QatJob;
+use haqa::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let set = ArtifactSet::load_default()?;
+    let space = spaces::resnet_qat();
+    let mut agent = Agent::new(Box::new(SimulatedLlm::new(42)));
+    let job = QatJob {
+        set: &set,
+        model: "cnn_s",
+        precision: QatPrecision::W4A4,
+        seed: 0,
+        steps_per_epoch: 2,
+    };
+
+    let mut history: Vec<Observation> = Vec::new();
+    for round in 0..3 {
+        let ctx = TaskContext {
+            kind: TaskKind::Finetune,
+            space: &space,
+            history: &history,
+            rounds_left: 3 - round,
+            hardware: None,
+            objective: Json::obj(),
+        };
+        let (cfg, reply) = agent.propose(&ctx)?;
+        println!("--- round {round} ---");
+        println!("agent thought: {}", reply.thought);
+        println!("config: {}", space.config_to_json(&cfg).to_string());
+        let result = job.run(&cfg)?;
+        println!(
+            "accuracy {:.2}%  (final train loss {:.3})",
+            result.accuracy * 100.0,
+            result.loss_curve.last().copied().unwrap_or(f64::NAN)
+        );
+        let mut obs = Observation::new(cfg, result.accuracy);
+        obs.feedback = result.feedback();
+        history.push(obs);
+    }
+    println!("\n{}", agent.cost.report());
+    Ok(())
+}

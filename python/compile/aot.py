@@ -1,0 +1,129 @@
+"""AOT driver: lower every ArtifactDef to HLO **text** + emit the manifest.
+
+HLO text (never ``.serialize()``) is the interchange format: the image's
+xla_extension 0.5.1 rejects jax>=0.5 protos (64-bit instruction ids); the
+text parser reassigns ids and round-trips cleanly.  See
+/opt/xla-example/README.md.
+
+Usage (from ``python/``):
+    python -m compile.aot --out-dir ../artifacts [--only REGEX] [--report]
+
+``--report`` prints the L1 perf-structure report: per-kernel VMEM footprint
+of the chosen BlockSpec tiles and the estimated MXU utilization of the
+matmul tiles (interpret=True gives no TPU wallclock; structure is the
+optimizable signal — DESIGN.md §6).
+"""
+
+import argparse
+import json
+import os
+import re
+import sys
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import all_artifacts
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_artifact(art):
+    lowered = jax.jit(art.fn).lower(*art.input_specs())
+    return to_hlo_text(lowered)
+
+
+def manifest_entry(art):
+    return {
+        "name": art.name,
+        "file": f"{art.name}.hlo.txt",
+        "inputs": [
+            {"name": i.name, "shape": list(i.shape), "role": i.role,
+             "init": i.init}
+            for i in art.inputs
+        ],
+        "outputs": [{"shape": list(s)} for s in art.output_shapes()],
+        "state_count": art.state_count,
+        "meta": art.meta,
+    }
+
+
+def vmem_report(arts):
+    """Structural perf report for L1 (DESIGN.md §6): VMEM bytes per tile and
+    MXU-tile utilization for the matmul artifacts."""
+    rows = []
+    for art in arts:
+        meta = art.meta
+        if meta.get("family") != "micro" or meta.get("kernel") != "matmul":
+            continue
+        bm, bn, bk = meta.get("tile", [64, 64, 64])
+        vmem = 4 * (bm * bk + bk * bn + bm * bn)
+        # MXU is a 128x128 systolic array; utilization of an (bm x bn)
+        # output tile is how much of the array a pass fills.
+        mxu = min(bm, 128) * min(bn, 128) / (128.0 * 128.0)
+        rows.append((art.name, f"{vmem / 1024.0:.1f} KiB", f"{mxu:.2f}"))
+    if rows:
+        print(f"{'artifact':40s} {'VMEM/tile':>12s} {'MXU util':>9s}")
+        for name, vmem, mxu in rows:
+            print(f"{name:40s} {vmem:>12s} {mxu:>9s}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="regex filter over artifact names")
+    ap.add_argument("--report", action="store_true",
+                    help="print the L1 VMEM/MXU structure report")
+    # kept for Makefile compatibility with the scaffold
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args()
+
+    out_dir = args.out_dir
+    if args.out:
+        out_dir = os.path.dirname(args.out) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    arts = all_artifacts()
+    if args.report:
+        vmem_report(arts)
+        return
+    manifest = {"version": 1, "artifacts": []}
+    if args.only:
+        rx = re.compile(args.only)
+        arts = [a for a in arts if rx.search(a.name)]
+        # Merge into the existing manifest (a partial relower must not
+        # orphan the other artifacts).
+        mpath = os.path.join(out_dir, "manifest.json")
+        if os.path.exists(mpath):
+            with open(mpath) as f:
+                old = json.load(f)
+            keep = {a.name for a in arts}
+            manifest["artifacts"] = [
+                e for e in old.get("artifacts", []) if e["name"] not in keep
+            ]
+    t_total = time.time()
+    for art in arts:
+        t0 = time.time()
+        text = lower_artifact(art)
+        path = os.path.join(out_dir, f"{art.name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(manifest_entry(art))
+        print(f"  {art.name:32s} {len(text) / 1024.0:8.1f} KiB "
+              f"{time.time() - t0:6.2f}s", file=sys.stderr)
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"lowered {len(arts)} artifacts to {out_dir} "
+          f"in {time.time() - t_total:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,165 @@
+"""Layer-2: ResNet-style CNNs with DoReFa QAT (paper Table 1 track).
+
+Stand-ins for ResNet20/32/50 at laptop scale (DESIGN.md substitution table):
+three sizes S/M/L of a norm-free residual CNN over 16x16x3 synthetic images,
+with every non-boundary conv fake-quantized by the DoReFa Pallas kernel
+(bit-widths are runtime scalars) and activations quantized per DoReFa's
+clip-[0,1] scheme.
+
+Train step = SGD with momentum, decoupled weight decay, and global-norm
+gradient clipping — the hyperparameters the HAQA agent tunes (Appendix D's
+ResNet search space).  Batch size is shape-affecting, so `aot.py` emits
+variants at batch in {32, 64, 128, 256}.
+
+The graph convention consumed by the Rust runtime (see artifact manifest):
+    inputs  = [state..., data..., scalars...]
+    outputs = (state'..., metrics...)
+where state = params ++ velocities for the train step.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.dorefa import dorefa_weight_quant, dorefa_act_quant
+
+NUM_CLASSES = 10
+IMG = 16
+
+SIZES = {
+    # name: (stage_channels, blocks_per_stage)  — S/M/L widths mirror the
+    # relative capacities of ResNet20/32/50 in the paper.
+    "cnn_s": ((8, 16, 24), 1),
+    "cnn_m": ((12, 24, 36), 1),
+    "cnn_l": ((16, 32, 48), 2),
+}
+
+
+def param_spec(size_name):
+    """Ordered list of (name, shape, init, quantized) for a model size."""
+    channels, blocks = SIZES[size_name]
+    spec = []
+    c_in = 3
+    spec.append((f"stem", (3, 3, 3, channels[0]), "he", False))
+    spec.append((f"stem_g", (channels[0],), "ones", False))
+    c_in = channels[0]
+    for si, c_out in enumerate(channels):
+        for bi in range(blocks):
+            pfx = f"s{si}b{bi}"
+            spec.append((f"{pfx}_c1", (3, 3, c_in, c_out), "he", True))
+            spec.append((f"{pfx}_g1", (c_out,), "ones", False))
+            spec.append((f"{pfx}_c2", (3, 3, c_out, c_out), "he", True))
+            spec.append((f"{pfx}_g2", (c_out,), "ones", False))
+            if c_in != c_out:
+                spec.append((f"{pfx}_proj", (1, 1, c_in, c_out), "he", True))
+            c_in = c_out
+    spec.append(("head_w", (channels[-1], NUM_CLASSES), "he", False))
+    spec.append(("head_b", (NUM_CLASSES,), "zeros", False))
+    return spec
+
+
+def _conv(x, w, stride):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def _channel_rms(x, gain, eps=1e-5):
+    """Stateless normalization over the channel axis (BN stand-in: QAT-safe,
+    no running statistics to thread through the AOT boundary)."""
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * gain
+
+
+def forward(size_name, params, x, wbits, abits):
+    """Logits (B, 10).  params is a dict name->array."""
+    channels, blocks = SIZES[size_name]
+
+    def qw(w):
+        return dorefa_weight_quant(w, wbits)
+
+    def qa(a):
+        return dorefa_act_quant(jax.nn.relu(a), abits)
+
+    h = _conv(x, params["stem"], 1)
+    h = _channel_rms(h, params["stem_g"])
+    h = qa(h)
+    c_in = channels[0]
+    for si, c_out in enumerate(channels):
+        for bi in range(blocks):
+            pfx = f"s{si}b{bi}"
+            stride = 2 if (si > 0 and bi == 0) else 1
+            y = _conv(h, qw(params[f"{pfx}_c1"]), stride)
+            y = _channel_rms(y, params[f"{pfx}_g1"])
+            y = qa(y)
+            y = _conv(y, qw(params[f"{pfx}_c2"]), 1)
+            y = _channel_rms(y, params[f"{pfx}_g2"])
+            if c_in != c_out:
+                skip = _conv(h, qw(params[f"{pfx}_proj"]), stride)
+            elif stride != 1:
+                skip = h[:, ::stride, ::stride, :]
+            else:
+                skip = h
+            h = qa(y + skip)
+            c_in = c_out
+    h = jnp.mean(h, axis=(1, 2))  # global average pool (B, C)
+    return h @ params["head_w"] + params["head_b"]
+
+
+def _loss_acc(logits, y_onehot):
+    logz = jax.nn.log_softmax(logits, axis=-1)
+    loss = -jnp.mean(jnp.sum(y_onehot * logz, axis=-1))
+    picked = jnp.sum(y_onehot * logits, axis=-1)
+    acc = jnp.mean((picked >= jnp.max(logits, axis=-1) - 1e-6).astype(jnp.float32))
+    return loss, acc
+
+
+def make_train_step(size_name):
+    """Returns fn(params..., vel..., x, y, lr, momentum, wd, clip, wbits, abits)
+    -> (params'..., vel'..., loss, acc)."""
+    spec = param_spec(size_name)
+    names = [s[0] for s in spec]
+    n = len(names)
+
+    def step(*args):
+        params = dict(zip(names, args[:n]))
+        vels = dict(zip(names, args[n:2 * n]))
+        x, y, lr, momentum, wd, clip, wbits, abits = args[2 * n:]
+
+        def loss_fn(p):
+            logits = forward(size_name, p, x, wbits, abits)
+            loss, acc = _loss_acc(logits, y)
+            return loss, acc
+
+        (loss, acc), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+
+        # Global-norm gradient clipping (max_grad_norm hyperparameter).
+        gnorm = jnp.sqrt(
+            sum(jnp.sum(g * g) for g in grads.values()) + 1e-12)
+        scale = jnp.minimum(1.0, clip / gnorm)
+
+        new_p, new_v = [], []
+        for name in names:
+            g = grads[name] * scale + wd * params[name]
+            v = momentum * vels[name] + g
+            new_v.append(v)
+            new_p.append(params[name] - lr * v)
+        return tuple(new_p) + tuple(new_v) + (loss, acc)
+
+    return step, spec
+
+
+def make_eval_step(size_name):
+    """Returns fn(params..., x, y, wbits, abits) -> (loss, acc)."""
+    spec = param_spec(size_name)
+    names = [s[0] for s in spec]
+    n = len(names)
+
+    def step(*args):
+        params = dict(zip(names, args[:n]))
+        x, y, wbits, abits = args[n:]
+        logits = forward(size_name, params, x, wbits, abits)
+        loss, acc = _loss_acc(logits, y)
+        return (loss, acc)
+
+    return step, spec

@@ -1,0 +1,22 @@
+"""Layer-1 Pallas kernels for HAQA-RS.
+
+Every kernel here is authored with ``jax.experimental.pallas`` and lowered
+with ``interpret=True`` so the resulting HLO executes on the CPU PJRT client
+(real-TPU lowering emits Mosaic custom-calls the CPU plugin cannot run).
+Each kernel has a pure-jnp oracle in :mod:`ref` checked by pytest/hypothesis.
+
+Tunable surface (the TPU analogue of the paper's CUDA launch geometry): each
+kernel exposes its BlockSpec tile shape, which is the HBM->VMEM schedule knob
+on TPU hardware. See DESIGN.md "Hardware-Adaptation".
+"""
+
+from .dorefa import (  # noqa: F401
+    quantize_levels,
+    dorefa_weight_quant,
+    dorefa_act_quant,
+)
+from .qmatmul import qmatmul  # noqa: F401
+from .softmax import softmax  # noqa: F401
+from .rmsnorm import rmsnorm  # noqa: F401
+from .silu import silu_gate  # noqa: F401
+from .rope import rope  # noqa: F401

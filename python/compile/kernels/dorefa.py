@@ -1,0 +1,103 @@
+"""DoReFa fake-quantization Pallas kernels (Zhou et al., 2016).
+
+The paper (HAQA) runs DoReFa QAT on ResNets and selects bit-widths at
+deployment time.  A key AOT design decision (DESIGN.md §5): the bit-width is
+a *runtime scalar* — uniform quantization ``q = round(x * L) / L`` with
+``L = 2^k - 1`` traces cleanly with ``k`` as an f32 input, so one HLO
+artifact serves every precision (w8a8 / w4a4 / w2a2 / "fp16" via large k).
+
+Gradients use the straight-through estimator (STE), exactly as DoReFa
+prescribes, wired through ``jax.custom_vjp`` so the Pallas forward kernel is
+differentiable inside the L2 train-step graphs.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile height for the elementwise quantization kernels.  This is the
+# HBM->VMEM block schedule knob: rows are streamed through VMEM in chunks of
+# ``block_rows`` full rows.  8x128 lanes per step keeps the VPU saturated.
+DEFAULT_BLOCK_ROWS = None  # None => whole array in one VMEM tile (grid=1)
+
+
+def _quant_kernel(x_ref, levels_ref, o_ref):
+    """o = round(x * L) / L  (uniform quantization to L+1 levels in [0,1])."""
+    levels = levels_ref[0, 0]
+    x = x_ref[...]
+    o_ref[...] = jnp.round(x * levels) / levels
+
+
+def _pallas_quant(x2d, levels, block_rows):
+    rows, cols = x2d.shape
+    block_rows = rows if block_rows is None else max(1, min(block_rows, rows))
+    grid = (pl.cdiv(rows, block_rows),)
+    return pl.pallas_call(
+        _quant_kernel,
+        out_shape=jax.ShapeDtypeStruct((rows, cols), x2d.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, cols), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, cols), lambda i: (i, 0)),
+        interpret=True,
+    )(x2d, levels)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2,))
+def quantize_levels(x, levels, block_rows=DEFAULT_BLOCK_ROWS):
+    """Uniform fake-quantization of ``x`` (values in [0,1]) to ``levels``
+    steps, as a Pallas kernel with an STE backward pass.
+
+    ``levels`` is a scalar f32 array (``2^k - 1``); it is a runtime input so
+    the lowered HLO serves every bit-width.
+    """
+    shape = x.shape
+    x2d = x.reshape((-1, shape[-1])) if x.ndim != 2 else x
+    lv = jnp.asarray(levels, jnp.float32).reshape((1, 1))
+    out = _pallas_quant(x2d, lv, block_rows)
+    return out.reshape(shape)
+
+
+def _quantize_fwd(x, levels, block_rows):
+    return quantize_levels(x, levels, block_rows), None
+
+
+def _quantize_bwd(block_rows, _res, g):
+    # Straight-through estimator: d round(x*L)/L / dx ~= 1.
+    return (g, jnp.zeros((), jnp.float32))
+
+
+quantize_levels.defvjp(_quantize_fwd, _quantize_bwd)
+
+
+def dorefa_weight_quant(w, kbits, block_rows=DEFAULT_BLOCK_ROWS):
+    """DoReFa weight quantization.
+
+    w_n = tanh(w) / (2 * max|tanh(w)|) + 0.5   in [0, 1]
+    q   = 2 * quantize_k(w_n) - 1              in [-1, 1]
+
+    ``kbits`` is a runtime f32 scalar.  Gradients flow via STE through the
+    rounding; tanh/normalization gradients are exact (as in the original
+    DoReFa-Net formulation).
+    """
+    t = jnp.tanh(w)
+    denom = 2.0 * jnp.max(jnp.abs(t)) + 1e-8
+    wn = t / denom + 0.5
+    levels = jnp.exp2(kbits) - 1.0
+    q = quantize_levels(wn, levels, block_rows)
+    return 2.0 * q - 1.0
+
+
+def dorefa_act_quant(a, kbits, block_rows=DEFAULT_BLOCK_ROWS):
+    """DoReFa activation quantization: quantize_k(clip(a, 0, 1)).
+
+    ``kbits`` is a runtime f32 scalar.  STE through the rounding; the clip is
+    exact (zero gradient outside [0,1], as DoReFa prescribes).
+    """
+    ac = jnp.clip(a, 0.0, 1.0)
+    levels = jnp.exp2(kbits) - 1.0
+    return quantize_levels(ac, levels, block_rows)

@@ -1,0 +1,75 @@
+"""Tiled matmul Pallas kernel — the paper's dominant kernel (~90% of LLM
+inference runtime, Table 3).
+
+The CUDA version the paper tunes exposes gridDim/blockDim/tiling/unroll; the
+TPU analogue is the (block_m, block_n, block_k) tile schedule: each grid step
+streams an (bm, bk) x (bk, bn) pair through VMEM and accumulates into an
+(bm, bn) output tile, which is exactly what the MXU systolic array consumes.
+128x128 tiles are MXU-native; the tuner sweeps these knobs (see
+``deploy::tuner`` on the Rust side and the tile-variant artifacts).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = (64, 64, 64)
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def qmatmul(x, w, block=DEFAULT_BLOCK):
+    """``x @ w`` with an explicit (bm, bn, bk) VMEM tile schedule.
+
+    ``x``: (M, K), ``w``: (K, N) -> (M, N), all f32 (weights are expected to
+    be fake-quantized by :func:`dorefa_weight_quant` upstream, which is how
+    INT8/INT4 execution is modelled in the interpret-mode artifacts).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    bm, bn, bk = block
+    bm = max(1, min(bm, m))
+    bn = max(1, min(bn, n))
+    bk = max(1, min(bk, k))
+    # Zero-pad ragged edges to tile multiples: interpret-mode pallas fills
+    # out-of-bounds input blocks with NaN, and zero K-padding is exact for
+    # the accumulation.
+    mp, np_, kp = _ceil(m, bm), _ceil(n, bn), _ceil(k, bk)
+    if (mp, kp) != (m, k):
+        x = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    if (kp, np_) != (k, n):
+        w = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
+    out = _call(x, w, (mp, np_, kp), (bm, bn, bk))
+    if (mp, np_) != (m, n):
+        out = out[:m, :n]
+    return out
+
+
+def _ceil(x, b):
+    return ((x + b - 1) // b) * b
+
+
+def _call(x, w, dims, block):
+    m, n, k = dims
+    bm, bn, bk = block
+    grid = (pl.cdiv(m, bm), pl.cdiv(n, bn), pl.cdiv(k, bk))
+    return pl.pallas_call(
+        _matmul_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        interpret=True,
+    )(x, w)

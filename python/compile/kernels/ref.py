@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for every Pallas kernel — the CORE correctness signal.
+
+pytest (python/tests/test_kernel.py) asserts allclose between each kernel
+under interpret=True and its oracle here, across a hypothesis-driven sweep of
+shapes and block sizes.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_levels(x, levels):
+    return jnp.round(x * levels) / levels
+
+
+def dorefa_weight_quant(w, kbits):
+    t = jnp.tanh(w)
+    denom = 2.0 * jnp.max(jnp.abs(t)) + 1e-8
+    wn = t / denom + 0.5
+    levels = jnp.exp2(kbits) - 1.0
+    return 2.0 * quantize_levels(wn, levels) - 1.0
+
+
+def dorefa_act_quant(a, kbits):
+    levels = jnp.exp2(kbits) - 1.0
+    return quantize_levels(jnp.clip(a, 0.0, 1.0), levels)
+
+
+def qmatmul(x, w):
+    return jnp.matmul(x, w)
+
+
+def softmax(x):
+    return jax.nn.softmax(x, axis=-1)
+
+
+def rmsnorm(x, gain, eps=1e-5):
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * gain
+
+
+def silu_gate(gate, up):
+    return gate * jax.nn.sigmoid(gate) * up
+
+
+def rope(x, cos, sin):
+    d_half = x.shape[-1] // 2
+    x1 = x[:, :d_half]
+    x2 = x[:, d_half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)

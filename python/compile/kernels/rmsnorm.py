@@ -1,0 +1,39 @@
+"""RMSNorm Pallas kernel (Table 3 kernel #3).
+
+y = x / sqrt(mean(x^2) + eps) * g, rowwise over the last axis.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = None  # None => whole array in one VMEM tile (grid=1)
+EPS = 1e-5
+
+
+def _rmsnorm_kernel(x_ref, g_ref, o_ref):
+    x = x_ref[...]
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = x * jax.lax.rsqrt(ms + EPS) * g_ref[...]
+
+
+def rmsnorm(x, gain, block_rows=DEFAULT_BLOCK_ROWS):
+    """RMS-normalize the last axis of ``x`` (..., D) with gain (D,)."""
+    shape = x.shape
+    d = shape[-1]
+    x2d = x.reshape((-1, d))
+    rows = x2d.shape[0]
+    br = rows if block_rows is None else max(1, min(block_rows, rows))
+    g2d = gain.reshape((1, d))
+    out = pl.pallas_call(
+        _rmsnorm_kernel,
+        out_shape=jax.ShapeDtypeStruct((rows, d), x2d.dtype),
+        grid=(pl.cdiv(rows, br),),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        interpret=True,
+    )(x2d, g2d)
+    return out.reshape(shape)

@@ -1,0 +1,51 @@
+"""Rotary position embedding (RoPE) Pallas kernel (Table 3 kernel #4).
+
+x is (S, D) with D even; cos/sin tables are (S, D/2), precomputed in plain
+jnp (they are position-only and fold into constants at AOT time).  The
+kernel rotates feature pairs (x1, x2) -> (x1*cos - x2*sin, x1*sin + x2*cos)
+using the half-split convention (first D/2 features pair with last D/2),
+matching the LLaMA/GPT-NeoX layout.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = None  # None => whole array in one VMEM tile (grid=1)
+
+
+def _rope_kernel(x_ref, cos_ref, sin_ref, o_ref):
+    x = x_ref[...]
+    d_half = x.shape[-1] // 2
+    x1 = x[:, :d_half]
+    x2 = x[:, d_half:]
+    c = cos_ref[...]
+    s = sin_ref[...]
+    o_ref[...] = jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+
+
+def rope_tables(seq_len, d, base=10000.0):
+    """cos/sin tables of shape (seq_len, d//2)."""
+    half = d // 2
+    inv_freq = 1.0 / (base ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    pos = jnp.arange(seq_len, dtype=jnp.float32)[:, None]
+    ang = pos * inv_freq[None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def rope(x, cos, sin, block_rows=DEFAULT_BLOCK_ROWS):
+    """Apply rotary embedding to ``x`` (S, D) with tables (S, D/2)."""
+    s, d = x.shape
+    br = s if block_rows is None else max(1, min(block_rows, s))
+    return pl.pallas_call(
+        _rope_kernel,
+        out_shape=jax.ShapeDtypeStruct((s, d), x.dtype),
+        grid=(pl.cdiv(s, br),),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((br, d // 2), lambda i: (i, 0)),
+            pl.BlockSpec((br, d // 2), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        interpret=True,
+    )(x, cos, sin)

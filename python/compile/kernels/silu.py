@@ -1,0 +1,38 @@
+"""SiLU-gate Pallas kernel (Table 3 kernel #2).
+
+LLaMA's gated MLP activation: y = silu(g) * u where silu(g) = g * sigmoid(g).
+The paper benches the SiLU kernel at the LLaMA FFN width (11008); we fuse the
+gate multiply, which is how llama.cpp executes it.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = None  # None => whole array in one VMEM tile (grid=1)
+
+
+def _silu_gate_kernel(g_ref, u_ref, o_ref):
+    g = g_ref[...]
+    o_ref[...] = g * jax.nn.sigmoid(g) * u_ref[...]
+
+
+def silu_gate(gate, up, block_rows=DEFAULT_BLOCK_ROWS):
+    """Fused ``silu(gate) * up`` over matching (..., F) arrays."""
+    shape = gate.shape
+    g2d = gate.reshape((-1, shape[-1]))
+    u2d = up.reshape((-1, shape[-1]))
+    rows, cols = g2d.shape
+    br = rows if block_rows is None else max(1, min(block_rows, rows))
+    out = pl.pallas_call(
+        _silu_gate_kernel,
+        out_shape=jax.ShapeDtypeStruct((rows, cols), g2d.dtype),
+        grid=(pl.cdiv(rows, br),),
+        in_specs=[
+            pl.BlockSpec((br, cols), lambda i: (i, 0)),
+            pl.BlockSpec((br, cols), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, cols), lambda i: (i, 0)),
+        interpret=True,
+    )(g2d, u2d)
+    return out.reshape(shape)

@@ -1,0 +1,35 @@
+"""Row-softmax Pallas kernel (Table 3 kernel #1).
+
+Numerically stable (max-subtracted) softmax over the last axis.  The tile
+knob is ``block_rows``: how many rows are resident in VMEM per grid step.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = None  # None => whole array in one VMEM tile (grid=1)
+
+
+def _softmax_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    o_ref[...] = e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def softmax(x, block_rows=DEFAULT_BLOCK_ROWS):
+    """Softmax over the last axis of a 2-D array ``x`` of shape (R, C)."""
+    shape = x.shape
+    x2d = x.reshape((-1, shape[-1])) if x.ndim != 2 else x
+    rows, cols = x2d.shape
+    br = rows if block_rows is None else max(1, min(block_rows, rows))
+    out = pl.pallas_call(
+        _softmax_kernel,
+        out_shape=jax.ShapeDtypeStruct((rows, cols), x2d.dtype),
+        grid=(pl.cdiv(rows, br),),
+        in_specs=[pl.BlockSpec((br, cols), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, cols), lambda i: (i, 0)),
+        interpret=True,
+    )(x2d)
+    return out.reshape(shape)

@@ -1,0 +1,319 @@
+"""Layer-2: tiny decoder-only transformer with QLoRA-style training
+(paper Table 2 / Figure 4 track) plus the deployment-side decode step
+(paper Table 3/4/5, Figure 5 track).
+
+Substitution (DESIGN.md): LLaMA2-7B..LLaMA3-8B + Alpaca become a vocab-64,
+d=64, 2-layer LLaMA-architecture decoder (RMSNorm / RoPE / SwiGLU / tied
+head) trained on synthetic corpora.  QLoRA mechanics are faithful:
+
+* the base weights are **frozen** and fake-quantized by the DoReFa Pallas
+  weight kernel with a *runtime* bit-width scalar (INT4/INT8/FP16-as-high-k);
+* trainable state is LoRA adapters on Wq/Wv with rank masked up to R_MAX=64,
+  so `lora_r` in [8, 64] is a runtime input (rank mask + alpha/r scale);
+* optimizer = Adam with decoupled weight decay, grad clipping; warmup and
+  bias correction are folded into scalar inputs computed by the Rust driver.
+
+Two graph families:
+* train/eval — differentiable, use pure-jnp math for the transformer body
+  (Pallas appears via the custom_vjp DoReFa kernels);
+* decode — the inference hot path, built *entirely* from the Pallas kernels
+  (qmatmul / softmax / rmsnorm / silu_gate / rope), mirroring the paper's
+  kernel-level deployment tuning on llama.cpp.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.dorefa import dorefa_weight_quant
+from .kernels import qmatmul as pallas_qmatmul
+from .kernels import softmax as pallas_softmax
+from .kernels import rmsnorm as pallas_rmsnorm
+from .kernels import silu_gate as pallas_silu_gate
+from .kernels import rope as pallas_rope
+from .kernels.rope import rope_tables
+from .kernels import ref
+
+VOCAB = 64
+D = 64
+HEADS = 4
+DH = D // HEADS
+LAYERS = 2
+FF = 128
+SEQ = 32
+R_MAX = 64
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+
+def base_spec():
+    """Ordered (name, shape, init) for the frozen base weights."""
+    spec = [("embed", (VOCAB, D), "embed")]
+    for l in range(LAYERS):
+        spec += [
+            (f"l{l}_wq", (D, D), "he"),
+            (f"l{l}_wk", (D, D), "he"),
+            (f"l{l}_wv", (D, D), "he"),
+            (f"l{l}_wo", (D, D), "he"),
+            (f"l{l}_wgate", (D, FF), "he"),
+            (f"l{l}_wup", (D, FF), "he"),
+            (f"l{l}_wdown", (FF, D), "he"),
+            (f"l{l}_rms1", (D,), "ones"),
+            (f"l{l}_rms2", (D,), "ones"),
+        ]
+    spec.append(("rmsf", (D,), "ones"))
+    return spec
+
+
+def lora_spec():
+    """Ordered (name, shape, init) for the trainable LoRA adapters (Wq, Wv)."""
+    spec = []
+    for l in range(LAYERS):
+        for tgt in ("q", "v"):
+            spec.append((f"l{l}_{tgt}_a", (D, R_MAX), "lora_a"))
+            spec.append((f"l{l}_{tgt}_b", (R_MAX, D), "zeros"))
+    return spec
+
+
+def _causal_mask(t):
+    i = jnp.arange(t)[:, None]
+    j = jnp.arange(t)[None, :]
+    return jnp.where(j <= i, 0.0, -1e9).astype(jnp.float32)
+
+
+def _lora_apply(x, a, b, rank_mask, scale, dropout_mask=None):
+    """x (B,T,D) -> (B,T,D) through the masked-rank adapter."""
+    xin = x if dropout_mask is None else x * dropout_mask
+    z = (xin @ a) * rank_mask[None, None, :]
+    return (z @ b) * scale
+
+
+def forward_train(base, lora, tokens_oh, bits, rank_mask, lora_scale,
+                  dropout_mask):
+    """Differentiable forward (pure-jnp body + DoReFa Pallas quant).
+
+    tokens_oh: (B, T, V) one-hot.  Returns logits (B, T, V).
+    """
+    b, t, _ = tokens_oh.shape
+    cos, sin = rope_tables(t, DH)
+    mask = _causal_mask(t)
+
+    def qw(w):
+        return dorefa_weight_quant(w, bits)
+
+    h = tokens_oh @ base["embed"]  # (B,T,D) one-hot matmul (gather-free HLO)
+    for l in range(LAYERS):
+        x1 = ref.rmsnorm(h, base[f"l{l}_rms1"])
+        q = x1 @ qw(base[f"l{l}_wq"]) + _lora_apply(
+            x1, lora[f"l{l}_q_a"], lora[f"l{l}_q_b"], rank_mask, lora_scale,
+            dropout_mask)
+        k = x1 @ qw(base[f"l{l}_wk"])
+        v = x1 @ qw(base[f"l{l}_wv"]) + _lora_apply(
+            x1, lora[f"l{l}_v_a"], lora[f"l{l}_v_b"], rank_mask, lora_scale,
+            dropout_mask)
+        q = q.reshape(b, t, HEADS, DH).transpose(0, 2, 1, 3)
+        k = k.reshape(b, t, HEADS, DH).transpose(0, 2, 1, 3)
+        v = v.reshape(b, t, HEADS, DH).transpose(0, 2, 1, 3)
+        q = ref.rope(q.reshape(-1, DH),
+                     jnp.tile(cos, (b * HEADS, 1)),
+                     jnp.tile(sin, (b * HEADS, 1))).reshape(b, HEADS, t, DH)
+        k = ref.rope(k.reshape(-1, DH),
+                     jnp.tile(cos, (b * HEADS, 1)),
+                     jnp.tile(sin, (b * HEADS, 1))).reshape(b, HEADS, t, DH)
+        scores = jnp.einsum("bhid,bhjd->bhij", q, k) / jnp.sqrt(float(DH))
+        attn = ref.softmax(scores + mask[None, None])
+        out = jnp.einsum("bhij,bhjd->bhid", attn, v)
+        out = out.transpose(0, 2, 1, 3).reshape(b, t, D)
+        h = h + out @ qw(base[f"l{l}_wo"])
+        x2 = ref.rmsnorm(h, base[f"l{l}_rms2"])
+        gate = x2 @ qw(base[f"l{l}_wgate"])
+        up = x2 @ qw(base[f"l{l}_wup"])
+        h = h + ref.silu_gate(gate, up) @ qw(base[f"l{l}_wdown"])
+    xf = ref.rmsnorm(h, base["rmsf"])
+    return xf @ base["embed"].T  # tied head
+
+
+def _ce_loss(logits, targets_oh):
+    logz = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.sum(targets_oh * logz, axis=-1))
+
+
+def make_train_step():
+    """fn(base..., lora..., m..., v..., tokens, targets, dropout_noise,
+    rank_mask, lr, wd, clip, bits, lora_scale, dropout_p, bc1, bc2)
+    -> (lora'..., m'..., v'..., loss)
+
+    bc1/bc2 are Adam bias corrections 1/(1-beta^t) computed by the driver;
+    lr is the post-warmup effective rate (schedule lives in Rust).
+    """
+    bnames = [s[0] for s in base_spec()]
+    lnames = [s[0] for s in lora_spec()]
+    nb, nl = len(bnames), len(lnames)
+
+    def step(*args):
+        i = 0
+        base = dict(zip(bnames, args[i:i + nb])); i += nb
+        lora = dict(zip(lnames, args[i:i + nl])); i += nl
+        m = dict(zip(lnames, args[i:i + nl])); i += nl
+        v = dict(zip(lnames, args[i:i + nl])); i += nl
+        (tokens, targets, noise, rank_mask,
+         lr, wd, clip, bits, lora_scale, dropout_p, bc1, bc2) = args[i:]
+
+        keep = (noise >= dropout_p).astype(jnp.float32)
+        dropout_mask = keep / jnp.maximum(1.0 - dropout_p, 1e-3)
+
+        def loss_fn(lp):
+            logits = forward_train(base, lp, tokens, bits, rank_mask,
+                                   lora_scale, dropout_mask)
+            return _ce_loss(logits, targets)
+
+        loss, grads = jax.value_and_grad(loss_fn)(lora)
+
+        gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in grads.values()) + 1e-12)
+        scale = jnp.minimum(1.0, clip / gnorm)
+
+        new_l, new_m, new_v = [], [], []
+        for name in lnames:
+            g = grads[name] * scale
+            mi = ADAM_B1 * m[name] + (1 - ADAM_B1) * g
+            vi = ADAM_B2 * v[name] + (1 - ADAM_B2) * g * g
+            upd = (mi * bc1) / (jnp.sqrt(vi * bc2) + ADAM_EPS)
+            new_m.append(mi)
+            new_v.append(vi)
+            new_l.append(lora[name] - lr * (upd + wd * lora[name]))
+        return tuple(new_l) + tuple(new_m) + tuple(new_v) + (loss,)
+
+    return step
+
+
+def make_pretrain_step():
+    """Full-parameter Adam pretraining of the base (bits=16, no adapters).
+
+    The paper fine-tunes *pretrained* LLaMA checkpoints; at laptop scale the
+    Rust driver pretrains the tiny base once per model variant with this
+    graph, then freezes + quantizes it for the QLoRA track.
+
+    fn(base..., m..., v..., tokens, targets, lr, clip, bc1, bc2)
+    -> (base'..., m'..., v'..., loss)
+    """
+    bnames = [s[0] for s in base_spec()]
+    nb = len(bnames)
+    zero_lora = {n: jnp.zeros(s, jnp.float32) for n, s, _ in lora_spec()}
+    rank_mask = jnp.zeros((R_MAX,), jnp.float32)
+
+    def step(*args):
+        base = dict(zip(bnames, args[:nb]))
+        m = dict(zip(bnames, args[nb:2 * nb]))
+        v = dict(zip(bnames, args[2 * nb:3 * nb]))
+        tokens, targets, lr, clip, bc1, bc2 = args[3 * nb:]
+
+        def loss_fn(p):
+            logits = forward_train(p, zero_lora, tokens, jnp.float32(16.0),
+                                   rank_mask, jnp.float32(0.0), None)
+            return _ce_loss(logits, targets)
+
+        loss, grads = jax.value_and_grad(loss_fn)(base)
+        gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in grads.values()) + 1e-12)
+        scale = jnp.minimum(1.0, clip / gnorm)
+        new_b, new_m, new_v = [], [], []
+        for name in bnames:
+            g = grads[name] * scale
+            mi = ADAM_B1 * m[name] + (1 - ADAM_B1) * g
+            vi = ADAM_B2 * v[name] + (1 - ADAM_B2) * g * g
+            upd = (mi * bc1) / (jnp.sqrt(vi * bc2) + ADAM_EPS)
+            new_m.append(mi)
+            new_v.append(vi)
+            new_b.append(base[name] - lr * upd)
+        return tuple(new_b) + tuple(new_m) + tuple(new_v) + (loss,)
+
+    return step
+
+
+def make_eval_step():
+    """fn(base..., lora..., tokens, targets, rank_mask, bits, lora_scale)
+    -> (loss, logits(B,T,V))"""
+    bnames = [s[0] for s in base_spec()]
+    lnames = [s[0] for s in lora_spec()]
+    nb, nl = len(bnames), len(lnames)
+
+    def step(*args):
+        base = dict(zip(bnames, args[:nb]))
+        lora = dict(zip(lnames, args[nb:nb + nl]))
+        tokens, targets, rank_mask, bits, lora_scale = args[nb + nl:]
+        logits = forward_train(base, lora, tokens, bits, rank_mask,
+                               lora_scale, None)
+        return (_ce_loss(logits, targets), logits)
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Inference path: every op is a Pallas kernel (the deployment hot spot the
+# paper tunes per-kernel on llama.cpp).
+# ---------------------------------------------------------------------------
+
+def forward_decode(base, lora, tokens_oh, bits, rank_mask, lora_scale,
+                   mm_block=(32, 64, 32)):
+    """Pallas-kernel forward for a single sequence (1, T, V); returns the
+    next-token logits (V,).  ``mm_block`` is the qmatmul tile schedule —
+    the deployment tunable exposed to the L3 tuner."""
+    _, t, _ = tokens_oh.shape
+    cos, sin = rope_tables(t, DH)
+    mask = _causal_mask(t)
+
+    def qw(w):
+        return dorefa_weight_quant(w, bits)
+
+    def mm(x2d, w):
+        return pallas_qmatmul(x2d, w, mm_block)
+
+    x = tokens_oh.reshape(t, VOCAB)
+    h = mm(x, base["embed"])  # (T, D)
+    for l in range(LAYERS):
+        x1 = pallas_rmsnorm(h, base[f"l{l}_rms1"])
+        q = mm(x1, qw(base[f"l{l}_wq"])) + (
+            (mm(x1, lora[f"l{l}_q_a"]) * rank_mask[None, :])
+            @ lora[f"l{l}_q_b"]) * lora_scale
+        k = mm(x1, qw(base[f"l{l}_wk"]))
+        v = mm(x1, qw(base[f"l{l}_wv"])) + (
+            (mm(x1, lora[f"l{l}_v_a"]) * rank_mask[None, :])
+            @ lora[f"l{l}_v_b"]) * lora_scale
+        # (T, D) -> per-head (HEADS, T, DH)
+        qh = q.reshape(t, HEADS, DH).transpose(1, 0, 2)
+        kh = k.reshape(t, HEADS, DH).transpose(1, 0, 2)
+        vh = v.reshape(t, HEADS, DH).transpose(1, 0, 2)
+        qh = pallas_rope(qh.reshape(-1, DH), jnp.tile(cos, (HEADS, 1)),
+                         jnp.tile(sin, (HEADS, 1))).reshape(HEADS, t, DH)
+        kh = pallas_rope(kh.reshape(-1, DH), jnp.tile(cos, (HEADS, 1)),
+                         jnp.tile(sin, (HEADS, 1))).reshape(HEADS, t, DH)
+        scores = jnp.einsum("hid,hjd->hij", qh, kh) / jnp.sqrt(float(DH))
+        attn = pallas_softmax((scores + mask[None]).reshape(HEADS * t, t))
+        attn = attn.reshape(HEADS, t, t)
+        out = jnp.einsum("hij,hjd->hid", attn, vh)
+        out = out.transpose(1, 0, 2).reshape(t, D)
+        h = h + mm(out, qw(base[f"l{l}_wo"]))
+        x2 = pallas_rmsnorm(h, base[f"l{l}_rms2"])
+        gate = mm(x2, qw(base[f"l{l}_wgate"]))
+        up = mm(x2, qw(base[f"l{l}_wup"]))
+        h = h + mm(pallas_silu_gate(gate, up), qw(base[f"l{l}_wdown"]))
+    xf = pallas_rmsnorm(h, base["rmsf"])
+    logits = mm(xf, base["embed"].T)
+    return logits[-1]
+
+
+def make_decode_step(mm_block=(32, 64, 32)):
+    """fn(base..., lora..., tokens(1,T,V), rank_mask, bits, lora_scale)
+    -> (next_logits(V,),)"""
+    bnames = [s[0] for s in base_spec()]
+    lnames = [s[0] for s in lora_spec()]
+    nb, nl = len(bnames), len(lnames)
+
+    def step(*args):
+        base = dict(zip(bnames, args[:nb]))
+        lora = dict(zip(lnames, args[nb:nb + nl]))
+        tokens, rank_mask, bits, lora_scale = args[nb + nl:]
+        return (forward_decode(base, lora, tokens, bits, rank_mask,
+                               lora_scale, mm_block),)
+
+    return step

@@ -1,0 +1,107 @@
+"""Layer-2: standalone per-kernel computations at the paper's Table 3 shapes.
+
+Each function wraps exactly one Pallas kernel so the Rust deploy tuner and
+criterion-style benches can measure real PJRT-CPU latency per kernel, and so
+tile-schedule variants of the dominant matmul can be compared against each
+other (the artifact-level analogue of the paper's per-kernel CUDA exec-config
+search).
+
+Shape mapping from the paper's [N, B, H] notation (Table 3):
+  Softmax [1024, b, 32]  -> rows = 32*b softmaxed over 1024
+  SiLU    [11008, b, 1]  -> (b, 11008) gate * up
+  RMSNorm [4096, b, 1]   -> (b, 4096)
+  RoPE    [128, b, 1]    -> sequence of length b, head dim 128
+  MatMul  [2048, b, 2048]-> (b, 2048) @ (2048, 2048)
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import softmax, silu_gate, rmsnorm, rope, qmatmul
+from .kernels.rope import rope_tables
+
+# (kernel, paper_size_label, builder) — builder returns (fn, [input specs])
+F32 = jnp.float32
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(tuple(shape), F32)
+
+
+def softmax_case(batch):
+    rows = 32 * batch
+
+    def fn(x):
+        return (softmax(x),)
+
+    return fn, [_spec(rows, 1024)]
+
+
+def silu_case(batch):
+    def fn(g, u):
+        return (silu_gate(g, u),)
+
+    return fn, [_spec(batch, 11008), _spec(batch, 11008)]
+
+
+def rmsnorm_case(batch):
+    def fn(x, g):
+        return (rmsnorm(x, g),)
+
+    return fn, [_spec(batch, 4096), _spec(4096)]
+
+
+def rope_case(batch):
+    cos, sin = rope_tables(batch, 128)
+
+    def fn(x):
+        return (rope(x, cos, sin),)
+
+    return fn, [_spec(batch, 128)]
+
+
+def matmul_case(batch, block=(128, 256, 256)):
+    def fn(x, w):
+        return (qmatmul(x, w, block),)
+
+    return fn, [_spec(batch, 2048), _spec(2048, 2048)]
+
+
+BATCHES = (1, 64, 128)
+
+# Tile-schedule variants for the dominant kernel at the mid size (b=64):
+# the real-artifact half of the deployment tuning demo.
+MATMUL_TILE_VARIANTS = {
+    "t32": (32, 32, 32),
+    "t64": (64, 64, 64),
+    "t128": (128, 128, 128),
+    "t64w": (64, 128, 64),
+}
+
+
+def all_cases():
+    """name -> (fn, input_specs, meta) for every microbench artifact."""
+    cases = {}
+    for b in BATCHES:
+        fn, specs = softmax_case(b)
+        cases[f"micro_softmax_b{b}"] = (fn, specs,
+                                        {"kernel": "softmax", "batch": b})
+        fn, specs = silu_case(b)
+        cases[f"micro_silu_b{b}"] = (fn, specs,
+                                     {"kernel": "silu", "batch": b})
+        fn, specs = rmsnorm_case(b)
+        cases[f"micro_rmsnorm_b{b}"] = (fn, specs,
+                                        {"kernel": "rmsnorm", "batch": b})
+        fn, specs = rope_case(b)
+        cases[f"micro_rope_b{b}"] = (fn, specs,
+                                     {"kernel": "rope", "batch": b})
+        fn, specs = matmul_case(b)
+        cases[f"micro_matmul_b{b}"] = (
+            fn, specs,
+            {"kernel": "matmul", "batch": b, "tile": [128, 256, 256]})
+    for tag, block in MATMUL_TILE_VARIANTS.items():
+        fn, specs = matmul_case(64, block)
+        cases[f"micro_matmul_b64_{tag}"] = (
+            fn, specs,
+            {"kernel": "matmul", "batch": 64, "tile": list(block)})
+    return cases

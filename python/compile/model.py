@@ -1,0 +1,184 @@
+"""Layer-2 hub: the complete artifact catalogue.
+
+Every computation the Rust runtime executes is declared here as an
+:class:`ArtifactDef` — name, jax function, typed input list (with *roles*
+consumed by the generic Rust driver), and metadata.  ``aot.py`` lowers each
+one to ``artifacts/<name>.hlo.txt`` and emits ``artifacts/manifest.json``.
+
+Input roles (the contract with ``runtime::artifact`` on the Rust side):
+  state  — threaded: output i replaces input i on the next call
+  frozen — provided every call, never updated (e.g. QLoRA base weights)
+  data   — per-call payload (batches, token windows, noise)
+  scalar — per-call f32 scalar hyperparameters
+
+Batch sizes and LoRA max-rank are shape-affecting, hence the variant fan-out
+(DESIGN.md §5); every other hyperparameter is a runtime input.
+"""
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from . import cnn, lm, micro
+
+CNN_TRAIN_BATCHES = (32, 64, 128, 256)
+CNN_EVAL_BATCH = 256
+LM_TRAIN_BATCHES = (4, 8, 16)
+LM_EVAL_BATCH = 32
+
+
+@dataclass
+class Input:
+    name: str
+    shape: tuple
+    role: str  # state | frozen | data | scalar
+    init: str = "none"  # he | zeros | ones | embed | lora_a | none
+
+    def spec(self):
+        return jax.ShapeDtypeStruct(tuple(self.shape), jnp.float32)
+
+
+@dataclass
+class ArtifactDef:
+    name: str
+    fn: object
+    inputs: list
+    state_count: int = 0
+    meta: dict = field(default_factory=dict)
+
+    def input_specs(self):
+        return [i.spec() for i in self.inputs]
+
+    def output_shapes(self):
+        out = jax.eval_shape(self.fn, *self.input_specs())
+        return [tuple(int(d) for d in o.shape) for o in out]
+
+
+def _scalar(name):
+    return Input(name, (), "scalar")
+
+
+def cnn_artifacts():
+    arts = []
+    for size_name in cnn.SIZES:
+        step, spec = cnn.make_train_step(size_name)
+        params = [Input(n, s, "state", init) for n, s, init, _q in spec]
+        vels = [Input(f"vel_{n}", s, "state", "zeros") for n, s, _i, _q in spec]
+        for b in CNN_TRAIN_BATCHES:
+            inputs = (params + vels + [
+                Input("x", (b, cnn.IMG, cnn.IMG, 3), "data"),
+                Input("y", (b, cnn.NUM_CLASSES), "data"),
+                _scalar("lr"), _scalar("momentum"), _scalar("weight_decay"),
+                _scalar("grad_clip"), _scalar("wbits"), _scalar("abits"),
+            ])
+            arts.append(ArtifactDef(
+                name=f"{size_name}_train_b{b}",
+                fn=step, inputs=inputs, state_count=2 * len(spec),
+                meta={"family": "cnn_train", "model": size_name, "batch": b},
+            ))
+        estep, _ = cnn.make_eval_step(size_name)
+        einputs = ([Input(n, s, "frozen", init) for n, s, init, _q in spec] + [
+            Input("x", (CNN_EVAL_BATCH, cnn.IMG, cnn.IMG, 3), "data"),
+            Input("y", (CNN_EVAL_BATCH, cnn.NUM_CLASSES), "data"),
+            _scalar("wbits"), _scalar("abits"),
+        ])
+        arts.append(ArtifactDef(
+            name=f"{size_name}_eval",
+            fn=estep, inputs=einputs, state_count=0,
+            meta={"family": "cnn_eval", "model": size_name,
+                  "batch": CNN_EVAL_BATCH},
+        ))
+    return arts
+
+
+def _lm_base_inputs(role="frozen"):
+    return [Input(n, s, role, init) for n, s, init in lm.base_spec()]
+
+
+def lm_artifacts():
+    arts = []
+    step = lm.make_train_step()
+    lspec = lm.lora_spec()
+    lora = [Input(n, s, "state", init) for n, s, init in lspec]
+    adam_m = [Input(f"m_{n}", s, "state", "zeros") for n, s, _ in lspec]
+    adam_v = [Input(f"v_{n}", s, "state", "zeros") for n, s, _ in lspec]
+    for b in LM_TRAIN_BATCHES:
+        inputs = (_lm_base_inputs() + lora + adam_m + adam_v + [
+            Input("tokens", (b, lm.SEQ, lm.VOCAB), "data"),
+            Input("targets", (b, lm.SEQ, lm.VOCAB), "data"),
+            Input("dropout_noise", (b, lm.SEQ, lm.D), "data"),
+            Input("rank_mask", (lm.R_MAX,), "data"),
+            _scalar("lr"), _scalar("weight_decay"), _scalar("grad_clip"),
+            _scalar("bits"), _scalar("lora_scale"), _scalar("dropout_p"),
+            _scalar("bc1"), _scalar("bc2"),
+        ])
+        # NB: frozen base comes first in the arg list, but state threading on
+        # the Rust side is positional over the `state` role, so the driver
+        # maps outputs [0..3*len(lspec)) onto the lora/m/v inputs.
+        arts.append(ArtifactDef(
+            name=f"lm_train_b{b}",
+            fn=step, inputs=inputs, state_count=3 * len(lspec),
+            meta={"family": "lm_train", "batch": b,
+                  "vocab": lm.VOCAB, "seq": lm.SEQ, "r_max": lm.R_MAX},
+        ))
+    pstep = lm.make_pretrain_step()
+    pbase = [Input(n, s, "state", init) for n, s, init in lm.base_spec()]
+    pm = [Input(f"m_{n}", s, "state", "zeros") for n, s, _ in lm.base_spec()]
+    pv = [Input(f"v_{n}", s, "state", "zeros") for n, s, _ in lm.base_spec()]
+    pinputs = (pbase + pm + pv + [
+        Input("tokens", (16, lm.SEQ, lm.VOCAB), "data"),
+        Input("targets", (16, lm.SEQ, lm.VOCAB), "data"),
+        _scalar("lr"), _scalar("grad_clip"), _scalar("bc1"), _scalar("bc2"),
+    ])
+    arts.append(ArtifactDef(
+        name="lm_pretrain_b16", fn=pstep, inputs=pinputs,
+        state_count=3 * len(lm.base_spec()),
+        meta={"family": "lm_pretrain", "batch": 16,
+              "vocab": lm.VOCAB, "seq": lm.SEQ},
+    ))
+    estep = lm.make_eval_step()
+    einputs = (_lm_base_inputs() +
+               [Input(n, s, "frozen", init) for n, s, init in lspec] + [
+        Input("tokens", (LM_EVAL_BATCH, lm.SEQ, lm.VOCAB), "data"),
+        Input("targets", (LM_EVAL_BATCH, lm.SEQ, lm.VOCAB), "data"),
+        Input("rank_mask", (lm.R_MAX,), "data"),
+        _scalar("bits"), _scalar("lora_scale"),
+    ])
+    arts.append(ArtifactDef(
+        name="lm_eval", fn=estep, inputs=einputs, state_count=0,
+        meta={"family": "lm_eval", "batch": LM_EVAL_BATCH,
+              "vocab": lm.VOCAB, "seq": lm.SEQ},
+    ))
+    for tag, block in (("default", (32, 64, 32)),) + tuple(
+            (f"mm{bm}x{bn}x{bk}", (bm, bn, bk))
+            for bm, bn, bk in ((16, 16, 16), (32, 32, 32), (64, 64, 64))):
+        dstep = lm.make_decode_step(block)
+        dinputs = (_lm_base_inputs() +
+                   [Input(n, s, "frozen", init) for n, s, init in lspec] + [
+            Input("tokens", (1, lm.SEQ, lm.VOCAB), "data"),
+            Input("rank_mask", (lm.R_MAX,), "data"),
+            _scalar("bits"), _scalar("lora_scale"),
+        ])
+        arts.append(ArtifactDef(
+            name=f"lm_decode_{tag}", fn=dstep, inputs=dinputs, state_count=0,
+            meta={"family": "lm_decode", "tile": list(block),
+                  "vocab": lm.VOCAB, "seq": lm.SEQ},
+        ))
+    return arts
+
+
+def micro_artifacts():
+    arts = []
+    for name, (fn, specs, meta) in micro.all_cases().items():
+        inputs = [Input(f"in{i}", tuple(int(d) for d in s.shape), "data")
+                  for i, s in enumerate(specs)]
+        meta = dict(meta)
+        meta["family"] = "micro"
+        arts.append(ArtifactDef(name=name, fn=fn, inputs=inputs,
+                                state_count=0, meta=meta))
+    return arts
+
+
+def all_artifacts():
+    return cnn_artifacts() + lm_artifacts() + micro_artifacts()

@@ -1,0 +1,190 @@
+"""Pallas kernels (interpret=True) vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and block sizes; assert_allclose against ref.py.
+This is the CORE correctness signal for Layer 1.
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+import compile.kernels as K
+from compile.kernels import ref
+from compile.kernels.rope import rope_tables
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def arr(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32))
+
+
+@st.composite
+def shape_and_block(draw, max_rows=64, max_cols=96):
+    rows = draw(st.integers(1, max_rows))
+    cols = draw(st.integers(1, max_cols))
+    block = draw(st.one_of(st.none(), st.integers(1, max_rows + 8)))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return rows, cols, block, seed
+
+
+# ---------------------------------------------------------------------------
+# dorefa
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(shape_and_block(), st.sampled_from([2.0, 4.0, 8.0, 16.0]))
+def test_dorefa_weight_matches_ref(sb, kbits):
+    rows, cols, block, seed = sb
+    rng = np.random.default_rng(seed)
+    w = arr(rng, rows, cols)
+    got = K.dorefa_weight_quant(w, jnp.float32(kbits), block)
+    want = ref.dorefa_weight_quant(w, jnp.float32(kbits))
+    np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(shape_and_block(), st.sampled_from([2.0, 4.0, 8.0]))
+def test_dorefa_act_matches_ref(sb, kbits):
+    rows, cols, block, seed = sb
+    rng = np.random.default_rng(seed)
+    a = arr(rng, rows, cols)
+    got = K.dorefa_act_quant(a, jnp.float32(kbits), block)
+    want = ref.dorefa_act_quant(a, jnp.float32(kbits))
+    np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+def test_dorefa_weight_levels_and_range():
+    rng = np.random.default_rng(0)
+    w = arr(rng, 32, 32)
+    q = np.asarray(K.dorefa_weight_quant(w, jnp.float32(2.0)))
+    # k=2 -> 4 levels in [-1, 1]
+    assert np.all(q >= -1.0 - 1e-6) and np.all(q <= 1.0 + 1e-6)
+    assert len(np.unique(np.round(q, 5))) <= 4
+
+
+def test_dorefa_act_is_clipped():
+    rng = np.random.default_rng(1)
+    a = arr(rng, 16, 16) * 10.0
+    q = np.asarray(K.dorefa_act_quant(a, jnp.float32(4.0)))
+    assert np.all(q >= 0.0) and np.all(q <= 1.0)
+
+
+def test_dorefa_ste_gradient_passthrough():
+    rng = np.random.default_rng(2)
+    x = arr(rng, 8, 8) * 0.4 + 0.5  # interior of [0,1]
+
+    def f(x):
+        return jnp.sum(K.quantize_levels(x, jnp.float32(15.0)))
+
+    g = jax.grad(f)(x)
+    np.testing.assert_allclose(g, np.ones_like(g), atol=1e-6)
+
+
+def test_dorefa_high_bits_near_identity():
+    rng = np.random.default_rng(3)
+    w = arr(rng, 16, 16)
+    q16 = np.asarray(K.dorefa_weight_quant(w, jnp.float32(16.0)))
+    qref = np.asarray(ref.dorefa_weight_quant(w, jnp.float32(24.0)))
+    # High-k quantization ~ the tanh-normalized weights themselves.
+    np.testing.assert_allclose(q16, qref, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# qmatmul
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    st.integers(1, 48), st.integers(1, 48), st.integers(1, 48),
+    st.tuples(st.integers(1, 64), st.integers(1, 64), st.integers(1, 64)),
+    st.integers(0, 2**31 - 1),
+)
+def test_qmatmul_matches_ref(m, k, n, block, seed):
+    rng = np.random.default_rng(seed)
+    x = arr(rng, m, k)
+    w = arr(rng, k, n)
+    got = K.qmatmul(x, w, block)
+    np.testing.assert_allclose(got, ref.qmatmul(x, w), atol=1e-4, rtol=1e-4)
+
+
+def test_qmatmul_tile_bigger_than_shape():
+    rng = np.random.default_rng(4)
+    x, w = arr(rng, 3, 5), arr(rng, 5, 2)
+    got = K.qmatmul(x, w, (128, 128, 128))
+    np.testing.assert_allclose(got, ref.qmatmul(x, w), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# softmax / rmsnorm / silu / rope
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(shape_and_block())
+def test_softmax_matches_ref(sb):
+    rows, cols, block, seed = sb
+    rng = np.random.default_rng(seed)
+    x = arr(rng, rows, cols) * 4.0
+    got = K.softmax(x, block)
+    np.testing.assert_allclose(got, ref.softmax(x), atol=1e-6)
+
+
+def test_softmax_rows_sum_to_one():
+    rng = np.random.default_rng(5)
+    x = arr(rng, 20, 33) * 50.0  # large logits: stability check
+    s = np.asarray(K.softmax(x)).sum(axis=-1)
+    np.testing.assert_allclose(s, np.ones(20), atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(shape_and_block())
+def test_rmsnorm_matches_ref(sb):
+    rows, cols, block, seed = sb
+    rng = np.random.default_rng(seed)
+    x = arr(rng, rows, cols)
+    g = arr(rng, cols)
+    got = K.rmsnorm(x, g, block)
+    np.testing.assert_allclose(got, ref.rmsnorm(x, g), atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(shape_and_block())
+def test_silu_matches_ref(sb):
+    rows, cols, block, seed = sb
+    rng = np.random.default_rng(seed)
+    g = arr(rng, rows, cols)
+    u = arr(rng, rows, cols)
+    got = K.silu_gate(g, u, block)
+    np.testing.assert_allclose(got, ref.silu_gate(g, u), atol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(st.integers(1, 48), st.sampled_from([2, 4, 8, 16, 64, 128]),
+       st.one_of(st.none(), st.integers(1, 64)), st.integers(0, 2**31 - 1))
+def test_rope_matches_ref(s, d, block, seed):
+    rng = np.random.default_rng(seed)
+    x = arr(rng, s, d)
+    cos, sin = rope_tables(s, d)
+    got = K.rope(x, cos, sin, block)
+    np.testing.assert_allclose(got, ref.rope(x, cos, sin), atol=1e-5)
+
+
+def test_rope_preserves_norm():
+    # Rotation preserves per-pair L2 norm.
+    rng = np.random.default_rng(6)
+    x = arr(rng, 12, 16)
+    cos, sin = rope_tables(12, 16)
+    y = np.asarray(K.rope(x, cos, sin))
+    nx = np.linalg.norm(np.asarray(x), axis=-1)
+    ny = np.linalg.norm(y, axis=-1)
+    np.testing.assert_allclose(nx, ny, rtol=1e-5)
+
+
+def test_rope_position_zero_is_identity():
+    rng = np.random.default_rng(7)
+    x = arr(rng, 4, 8)
+    cos, sin = rope_tables(4, 8)
+    y = np.asarray(K.rope(x, cos, sin))
+    np.testing.assert_allclose(y[0], np.asarray(x)[0], atol=1e-6)

@@ -1,0 +1,108 @@
+//! Table 1 regenerator — ResNet-style DoReFa QAT accuracy under
+//! {w8a8, w4a4, w2a2} across all seven HPO methods (paper §4.2).
+//!
+//! Real training: every cell drives the AOT'd CNN train-step artifacts on
+//! the PJRT CPU client for `budget` rounds per method.
+//!
+//! Flags: `--quick` (cnn_s only, fewer rounds), `--models=s,m,l`,
+//! `--rounds=N`, `--seeds=N`, `--epoch-steps=N`.
+
+use haqa::optimizers::{self, best, Observation};
+use haqa::quant::QatPrecision;
+use haqa::report::acc_pm;
+use haqa::runtime::ArtifactSet;
+use haqa::search::spaces;
+use haqa::trainer::qat::QatJob;
+use haqa::util::bench;
+use haqa::util::rng::Rng;
+use haqa::util::stats;
+use haqa::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    let full = bench::flag("full");
+    let quick = bench::flag("quick");
+    let models: Vec<String> = bench::opt("models")
+        .unwrap_or_else(|| if full { "s,m,l".into() } else { "s".into() })
+        .split(',')
+        .map(|m| format!("cnn_{m}"))
+        .collect();
+    let rounds: usize = bench::opt("rounds")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if full { 8 } else { 5 });
+    let seeds: u64 = bench::opt("seeds")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if full { 2 } else { 1 });
+    let epoch_steps: usize = bench::opt("epoch-steps")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if full { 3 } else { 2 });
+    let precisions: Vec<QatPrecision> = if quick {
+        vec![QatPrecision::W4A4]
+    } else {
+        QatPrecision::TABLE1.to_vec()
+    };
+
+    let set = ArtifactSet::load_default()?;
+    let space = spaces::resnet_qat();
+    let mut table = Table::new(
+        "Table 1 — QAT accuracy (%) by HPO method (mean ± std over seeds)",
+        &["Model", "Precision", "Default", "Human", "Local search",
+          "Bayesian opt.", "Random search", "NSGA2", "HAQA"],
+    );
+    let t_start = std::time::Instant::now();
+    for model in &models {
+        for prec in &precisions {
+            let mut cells = vec![model.clone(), prec.label()];
+            for method in optimizers::METHODS {
+                let mut bests = Vec::new();
+                for seed in 0..seeds {
+                    let job = QatJob {
+                        set: &set,
+                        model,
+                        precision: *prec,
+                        seed,
+                        steps_per_epoch: epoch_steps,
+                    };
+                    let mut opt = if *method == "haqa" {
+                        Box::new(
+                            optimizers::haqa::HaqaOptimizer::with_seed(seed)
+                                .with_objective({
+                                    let mut o = haqa::util::json::Json::obj();
+                                    o.set("model", haqa::util::json::Json::Str(model.clone()));
+                                    o.set("bits", haqa::util::json::Json::Num(prec.wbits as f64));
+                                    o
+                                }),
+                        ) as Box<dyn optimizers::Optimizer>
+                    } else {
+                        optimizers::by_name(method)?
+                    };
+                    let mut rng = Rng::new(seed).split(0x7b1);
+                    let mut hist: Vec<Observation> = Vec::new();
+                    // "Default" evaluates the default config once.
+                    let budget = if *method == "default" { 1 } else { rounds };
+                    for _ in 0..budget {
+                        let cfg = opt.propose(&space, &hist, &mut rng);
+                        let r = job.run(&cfg)?;
+                        let mut obs = Observation::new(cfg, r.accuracy);
+                        obs.feedback = r.feedback();
+                        hist.push(obs);
+                    }
+                    bests.push(best(&hist).unwrap().score);
+                }
+                cells.push(acc_pm(stats::mean(&bests), stats::std(&bests)));
+                eprintln!(
+                    "  [{:5.0}s] {model} {} {method}: {}",
+                    t_start.elapsed().as_secs_f64(),
+                    prec.label(),
+                    cells.last().unwrap()
+                );
+            }
+            table.row(cells);
+        }
+    }
+    table.emit("table1_qat_accuracy.csv");
+    println!(
+        "\n(paper shape: HAQA > Human/Local/Bayesian > Random/NSGA2 > Default; \
+         gaps widen at w2a2)"
+    );
+    Ok(())
+}

@@ -1,0 +1,48 @@
+//! Table 4 regenerator — mobile (Adreno 740) throughput under FP16/INT8/
+//! INT4: the §4.4 counterintuitive result (INT8 ≥ FP16 > INT4, because the
+//! Adreno has no native INT4 path).
+
+use haqa::deploy::e2e;
+use haqa::hardware::{DeviceProfile, ExecConfig, ModelProfile};
+use haqa::quant::Scheme;
+use haqa::util::table::Table;
+
+fn main() {
+    let dev = DeviceProfile::adreno740();
+    let exec = ExecConfig::llamacpp_default();
+    let mut table = Table::new(
+        "Table 4 — model throughput (tokens/s) on the simulated Adreno 740",
+        &["Model", "FP16", "INT8", "INT4"],
+    );
+    let paper: &[(&str, [f64; 3])] = &[
+        ("openllama-3B", [5.11, 5.25, 4.95]),
+        ("tinylama-1.1B", [11.17, 11.23, 10.43]),
+        ("gpt2-large-774M", [13.41, 13.20, 12.29]),
+    ];
+    for (m, (paper_name, paper_rates)) in
+        ModelProfile::table4_models().iter().zip(paper)
+    {
+        let rates: Vec<f64> = Scheme::ALL
+            .iter()
+            .map(|&s| e2e::tokens_per_sec(m, s, &dev, &exec))
+            .collect();
+        table.row(vec![
+            m.name.clone(),
+            format!("{:.2}", rates[0]),
+            format!("{:.2}", rates[1]),
+            format!("{:.2}", rates[2]),
+        ]);
+        // Shape assertions (who wins), printed for EXPERIMENTS.md.
+        let int8_beats_int4 = rates[1] > rates[2];
+        let fp16_beats_int4 = rates[0] > rates[2];
+        println!(
+            "shape {paper_name}: INT8>INT4 {} (paper {}), FP16>INT4 {} (paper {})",
+            int8_beats_int4,
+            paper_rates[1] > paper_rates[2],
+            fp16_beats_int4,
+            paper_rates[0] > paper_rates[2],
+        );
+    }
+    table.emit("table4_mobile_throughput.csv");
+    println!("\n(paper: INT4 loses on mobile despite the smaller bit-width — no native INT4 path)");
+}

@@ -1,0 +1,69 @@
+//! Table 5 regenerator — HAQA-selected quantization configurations for
+//! LLaMA2-13B under 4/12/20/28 GB memory budgets (paper §4.3).
+//!
+//! Each cell is the memory model's feasibility check; the agent's bit-width
+//! choice per budget is cross-checked against the analytic selector.
+
+use haqa::agent::simulated::SimulatedLlm;
+use haqa::agent::{Agent, TaskContext, TaskKind};
+use haqa::hardware::{adaptive, memory, DeviceProfile, ModelProfile};
+use haqa::quant::Scheme;
+use haqa::report::check_cell;
+use haqa::util::json::Json;
+use haqa::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    let model = ModelProfile::llama2_13b();
+    let dev = DeviceProfile::a6000();
+    let space = haqa::search::spaces::bitwidth();
+    let mut table = Table::new(
+        "Table 5 — feasible quantization for LLaMA2-13B by memory budget",
+        &["Memory (GB)", "FP16", "INT8", "INT4", "agent pick", "analytic pick"],
+    );
+    for budget in memory::TABLE5_BUDGETS_GB {
+        let cells: Vec<String> = Scheme::ALL
+            .iter()
+            .map(|&s| check_cell(memory::fits(&model, s, budget)))
+            .collect();
+
+        // Agent decision for this budget.
+        let mut objective = Json::obj();
+        objective.set("model", Json::Str(model.name.clone()));
+        objective.set("memory_limit_gb", Json::Num(budget));
+        let mut mem = Json::obj();
+        for s in Scheme::ALL {
+            mem.set(s.label(), Json::Num(memory::footprint_gb(&model, s)));
+        }
+        objective.set("mem_gb", mem);
+        let mut agent = Agent::new(Box::new(SimulatedLlm::new(1)));
+        let ctx = TaskContext {
+            kind: TaskKind::Bitwidth,
+            space: &space,
+            history: &[],
+            rounds_left: 1,
+            hardware: Some(dev.to_json()),
+            objective,
+        };
+        let (cfg, _) = agent.propose(&ctx)?;
+        let agent_pick = match cfg.get("quant").and_then(|v| v.as_str()) {
+            Some("NONE") | None => "×".to_string(),
+            Some(s) => s.to_string(),
+        };
+        let analytic = adaptive::select(&model, &dev, budget);
+        let analytic_pick = analytic
+            .scheme
+            .map(|s| s.label().to_string())
+            .unwrap_or_else(|| "×".into());
+        table.row(vec![
+            format!("{budget}"),
+            cells[0].clone(),
+            cells[1].clone(),
+            cells[2].clone(),
+            agent_pick,
+            analytic_pick,
+        ]);
+    }
+    table.emit("table5_memory_constraints.csv");
+    println!("\n(paper: 4 GB → none; 12 GB → INT4 only; 20 GB → INT8+INT4; 28 GB → all)");
+    Ok(())
+}

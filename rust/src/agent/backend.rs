@@ -1,0 +1,63 @@
+//! The LLM backend interface.
+//!
+//! The workflow is backend-agnostic: the paper runs GPT-4-0613 over HTTP;
+//! this repo runs [`super::simulated::SimulatedLlm`] so results are
+//! deterministic and offline.  Anything that maps a chat transcript to a
+//! completion can drive HAQA.
+
+use anyhow::Result;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Role {
+    System,
+    User,
+    Assistant,
+}
+
+impl Role {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Role::System => "system",
+            Role::User => "user",
+            Role::Assistant => "assistant",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Message {
+    pub role: Role,
+    pub content: String,
+}
+
+impl Message {
+    pub fn system(content: impl Into<String>) -> Message {
+        Message {
+            role: Role::System,
+            content: content.into(),
+        }
+    }
+
+    pub fn user(content: impl Into<String>) -> Message {
+        Message {
+            role: Role::User,
+            content: content.into(),
+        }
+    }
+
+    pub fn assistant(content: impl Into<String>) -> Message {
+        Message {
+            role: Role::Assistant,
+            content: content.into(),
+        }
+    }
+}
+
+/// A chat-completion backend.
+pub trait LlmBackend {
+    /// Human-readable model identifier (logged in task logs / cost report).
+    fn model_name(&self) -> &str;
+
+    /// Produce the assistant completion for a transcript.
+    fn complete(&mut self, messages: &[Message]) -> Result<String>;
+}

@@ -1,0 +1,155 @@
+//! The agent driver: prompt assembly → backend call → validation → retry.
+//!
+//! This is the inner loop of Figure 3: each round, the static prompt and
+//! the (history-managed) dynamic prompt are sent to the backend; the reply
+//! is parsed and validated; on a §3.2 failure the corrective message is
+//! appended and the backend re-queried (bounded retries); the final fallback
+//! repairs the last reply into range so the workflow never stalls.
+
+use anyhow::Result;
+
+use crate::search::Config;
+
+use super::backend::{LlmBackend, Message};
+use super::history::HistoryManager;
+use super::prompt::{dynamic_prompt, static_prompt, SYSTEM_PROMPT};
+use super::react::{parse_reply, AgentReply};
+use super::tokens::CostTracker;
+use super::validator;
+use super::TaskContext;
+
+pub struct Agent {
+    backend: Box<dyn LlmBackend>,
+    pub history_mgr: HistoryManager,
+    pub cost: CostTracker,
+    pub max_retries: usize,
+    /// Transcript of (thought, config) per round for the task log (§3.3).
+    pub log: Vec<AgentReply>,
+    /// Static-prompt memo — the paper's point of the static/dynamic split
+    /// is that the static half never changes within a task, so it is built
+    /// once per (task, space) and reused every round (§Perf L3).
+    static_memo: Option<(String, String)>,
+}
+
+impl Agent {
+    pub fn new(backend: Box<dyn LlmBackend>) -> Agent {
+        Agent {
+            backend,
+            history_mgr: HistoryManager::default(),
+            cost: CostTracker::default(),
+            max_retries: 3,
+            log: Vec::new(),
+            static_memo: None,
+        }
+    }
+
+    pub fn model_name(&self) -> &str {
+        self.backend.model_name()
+    }
+
+    /// One round: returns the validated configuration and the reply.
+    pub fn propose(&mut self, ctx: &TaskContext) -> Result<(Config, AgentReply)> {
+        let window = self.history_mgr.window(ctx.history);
+        let memo_key = format!("{}/{}", ctx.kind.as_str(), ctx.space.name);
+        let static_text = match &self.static_memo {
+            Some((k, text)) if *k == memo_key => text.clone(),
+            _ => {
+                let text = static_prompt(ctx);
+                self.static_memo = Some((memo_key, text.clone()));
+                text
+            }
+        };
+        let mut messages = vec![
+            Message::system(SYSTEM_PROMPT),
+            Message::user(static_text),
+            Message::user(dynamic_prompt(ctx, &window)),
+        ];
+        let mut last_reply: Option<AgentReply> = None;
+        for attempt in 0..=self.max_retries {
+            let completion = self.backend.complete(&messages)?;
+            self.cost.record(&messages, &completion);
+            let reply = parse_reply(&completion);
+            match validator::check(ctx.space, &reply) {
+                Ok(cfg) => {
+                    self.log.push(reply.clone());
+                    return Ok((cfg, reply));
+                }
+                Err(err) => {
+                    last_reply = Some(reply);
+                    if attempt < self.max_retries {
+                        self.cost.record_retry();
+                        messages.push(Message::assistant(completion));
+                        messages.push(Message::user(validator::retry_message(
+                            &err, ctx.space,
+                        )));
+                    }
+                }
+            }
+        }
+        // Fallback: repair whatever the agent last said (never stall the
+        // workflow — §3.3's robustness requirement).
+        let reply = last_reply.unwrap_or_else(|| parse_reply(""));
+        let cfg = reply
+            .config
+            .as_ref()
+            .map(|j| ctx.space.repair(&ctx.space.config_from_json(j)))
+            .unwrap_or_else(|| ctx.space.default_config());
+        self.log.push(reply.clone());
+        Ok((cfg, reply))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agent::simulated::SimulatedLlm;
+    use crate::agent::{TaskContext, TaskKind};
+    use crate::optimizers::Observation;
+    use crate::search::spaces;
+    use crate::util::json::Json;
+
+    #[test]
+    fn retry_loop_recovers_from_injected_failures() {
+        let space = spaces::resnet_qat();
+        // 100% failure rate on first attempts; retries always valid.
+        let backend = SimulatedLlm::new(1).with_failure_rate(1.0);
+        let mut agent = Agent::new(Box::new(backend));
+        let history = vec![Observation::new(space.default_config(), 0.8)];
+        let ctx = TaskContext {
+            kind: TaskKind::Finetune,
+            space: &space,
+            history: &history,
+            rounds_left: 4,
+            hardware: None,
+            objective: Json::obj(),
+        };
+        let (cfg, _) = agent.propose(&ctx).unwrap();
+        assert!(space.is_valid(&cfg));
+        assert!(agent.cost.retries >= 1, "no retry recorded");
+        assert!(agent.cost.queries >= 2);
+    }
+
+    #[test]
+    fn cost_accumulates_across_rounds() {
+        let space = spaces::resnet_qat();
+        let backend = SimulatedLlm::new(2).with_failure_rate(0.0);
+        let mut agent = Agent::new(Box::new(backend));
+        let mut history = Vec::new();
+        for round in 0..5 {
+            let ctx = TaskContext {
+                kind: TaskKind::Finetune,
+                space: &space,
+                history: &history,
+                rounds_left: 5 - round,
+                hardware: None,
+                objective: Json::obj(),
+            };
+            let (cfg, _) = agent.propose(&ctx).unwrap();
+            history.push(Observation::new(cfg, 0.5 + round as f64 * 0.01));
+        }
+        assert_eq!(agent.cost.queries, 5);
+        assert!(agent.cost.total_tokens() > 1000);
+        assert!(agent.cost.cost_usd() > 0.0);
+        assert_eq!(agent.log.len(), 5);
+    }
+}

@@ -1,0 +1,117 @@
+//! Conversation-history length management (paper §3.3).
+//!
+//! The paper observed that unmanaged history exceeds the agent's context
+//! window and interrupts the workflow; HAQA therefore keeps a budgeted
+//! window.  Policy: always keep the *first* round (the anchor showing the
+//! default-config result — the paper's transcripts reference it) plus the
+//! most recent rounds that fit the token budget.
+
+use crate::optimizers::Observation;
+
+use super::tokens::estimate_tokens;
+
+#[derive(Debug, Clone)]
+pub struct HistoryManager {
+    /// Token budget for the serialized history window.
+    pub max_tokens: usize,
+    /// Hard cap on entries regardless of tokens (user-controllable length,
+    /// §3.3 "allows users to control the length of the optimization
+    /// history").
+    pub max_entries: usize,
+}
+
+impl Default for HistoryManager {
+    fn default() -> Self {
+        HistoryManager {
+            max_tokens: 3000,
+            max_entries: 16,
+        }
+    }
+}
+
+impl HistoryManager {
+    /// Select the `(round_index, observation)` window to include.
+    pub fn window<'a>(&self, history: &'a [Observation]) -> Vec<(usize, &'a Observation)> {
+        if history.is_empty() {
+            return Vec::new();
+        }
+        let cost = |o: &Observation| {
+            estimate_tokens(&format!("{:?}", o.config)) + estimate_tokens(&o.feedback) + 16
+        };
+        let mut selected: Vec<usize> = Vec::new();
+        let mut budget = self.max_tokens as i64;
+        let last = history.len() - 1;
+
+        // The latest round is the current feedback: always kept, whatever
+        // the budget.  The anchor (round 0) is next in priority.
+        selected.push(last);
+        budget -= cost(&history[last]) as i64;
+        if last != 0 {
+            budget -= cost(&history[0]) as i64;
+            if budget >= 0 || self.max_entries >= 2 {
+                selected.push(0);
+            }
+        }
+
+        // Then most recent first, then re-sort ascending.
+        for i in (1..last).rev() {
+            if selected.len() >= self.max_entries {
+                break;
+            }
+            let c = cost(&history[i]) as i64;
+            if budget - c < 0 {
+                break;
+            }
+            budget -= c;
+            selected.push(i);
+        }
+        selected.sort_unstable();
+        selected.dedup();
+        selected.into_iter().map(|i| (i, &history[i])).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::search::spaces;
+
+    fn obs(feedback_len: usize) -> Observation {
+        let space = spaces::resnet_qat();
+        let mut o = Observation::new(space.default_config(), 0.5);
+        o.feedback = "x".repeat(feedback_len);
+        o
+    }
+
+    #[test]
+    fn keeps_everything_when_small() {
+        let h: Vec<Observation> = (0..5).map(|_| obs(10)).collect();
+        let m = HistoryManager::default();
+        assert_eq!(m.window(&h).len(), 5);
+    }
+
+    #[test]
+    fn truncates_but_keeps_anchor_and_recent() {
+        let h: Vec<Observation> = (0..50).map(|_| obs(400)).collect();
+        let m = HistoryManager {
+            max_tokens: 1200,
+            max_entries: 16,
+        };
+        let w = m.window(&h);
+        assert!(w.len() < 50);
+        assert_eq!(w[0].0, 0, "anchor round dropped");
+        assert_eq!(w.last().unwrap().0, 49, "most recent round dropped");
+        // Window indices strictly increasing.
+        assert!(w.windows(2).all(|p| p[0].0 < p[1].0));
+    }
+
+    #[test]
+    fn entry_cap_respected() {
+        let h: Vec<Observation> = (0..40).map(|_| obs(5)).collect();
+        let m = HistoryManager {
+            max_tokens: 100_000,
+            max_entries: 8,
+        };
+        assert!(m.window(&h).len() <= 8);
+    }
+}

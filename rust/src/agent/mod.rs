@@ -1,0 +1,65 @@
+//! The LLM-agent workflow (paper §3) — HAQA's core contribution.
+//!
+//! * [`backend`] — the `LlmBackend` trait: messages in, completion out.
+//!   The paper uses GPT-4-0613; this repo ships [`simulated::SimulatedLlm`],
+//!   a deterministic rule-based ReAct policy implementing the tuning
+//!   heuristics visible in the paper's Appendix E transcripts (substitution
+//!   table in DESIGN.md §2).  A real HTTP backend can be slotted in without
+//!   touching the workflow.
+//! * [`prompt`] — static/dynamic prompt construction (§3.1, Fig. 2/3).
+//! * [`history`] — conversation-history length management (§3.3).
+//! * [`react`] — ReAct reply structure: Thought / Action / config JSON (§3.2).
+//! * [`validator`] — format/range violation detection + retry loop (§3.2's
+//!   three observed failure modes).
+//! * [`tokens`] — token & cost accounting (Appendix C).
+
+pub mod backend;
+pub mod driver;
+pub mod history;
+pub mod prompt;
+pub mod react;
+pub mod simulated;
+pub mod tokens;
+pub mod validator;
+
+use crate::optimizers::Observation;
+use crate::search::Space;
+use crate::util::json::Json;
+
+pub use backend::{LlmBackend, Message, Role};
+pub use driver::Agent;
+pub use react::AgentReply;
+
+/// What the agent is optimizing this round.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskKind {
+    /// Quantization fine-tuning hyperparameters (Table 1/2 track).
+    Finetune,
+    /// Per-kernel execution configuration (Table 3 track).
+    KernelTuning,
+    /// Deployment bit-width selection under constraints (Table 5 / §4.4).
+    Bitwidth,
+}
+
+impl TaskKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            TaskKind::Finetune => "finetune",
+            TaskKind::KernelTuning => "kernel_tuning",
+            TaskKind::Bitwidth => "bitwidth",
+        }
+    }
+}
+
+/// Everything the prompt builder needs for one round.
+pub struct TaskContext<'a> {
+    pub kind: TaskKind,
+    pub space: &'a Space,
+    pub history: &'a [Observation],
+    pub rounds_left: usize,
+    /// Hardware platform description (Fig. 2a) — the §3.4 adaptive-strategy
+    /// input.  JSON mirrors the paper's spec blocks.
+    pub hardware: Option<Json>,
+    /// Task-specific detail (model name, quantization bits, memory limit…).
+    pub objective: Json,
+}

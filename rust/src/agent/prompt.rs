@@ -1,0 +1,253 @@
+//! Static / Dynamic prompt construction (paper §3.1, Figures 2 and 3).
+//!
+//! The *static prompt* carries the unchanging task description: hardware
+//! platform specification (Fig. 2a), deployment objective (2b), fine-tuning
+//! objective (2c), the search space, and the ReAct instruction block.  The
+//! *dynamic prompt* carries per-round state: rounds left, current config,
+//! evaluation feedback, and the conversation history window (2d).
+//!
+//! A machine-readable `CONTEXT_JSON:` line is embedded alongside the prose —
+//! the paper's prompts already embed JSON blocks (configs, kernel specs);
+//! centralizing one canonical block is what makes the workflow
+//! backend-agnostic (the simulated policy parses it; a real LLM reads the
+//! surrounding prose too).
+
+use crate::optimizers::Observation;
+use crate::util::json::Json;
+
+use super::{TaskContext, TaskKind};
+
+/// The ReAct instruction block (paper §3.2, highlighted purple in Fig. 2).
+pub const REACT_BLOCK: &str = "\
+Before making a decision, always generate a reasoning step (Thought) to \
+analyze the current context, considering previous results and constraints. \
+Then, take an appropriate action (Action) based on your reasoning. After \
+the action, observe (Observation) the outcomes we feed back to you and \
+adjust your approach accordingly. Identify missing information, potential \
+errors, and formulate a strategy before taking any action. Each trial's \
+configuration and results should be taken into account for a comprehensive \
+analysis of the optimization process. Please review the history and \
+consider your next steps before proceeding.";
+
+pub const SYSTEM_PROMPT: &str = "\
+You are an expert assistant specialized in optimizing hyperparameters for \
+both fine-tuning and deployment of quantized neural networks. Your goal is \
+to help improve the accuracy and inference speed of the network by \
+providing optimized hyperparameter configurations.";
+
+/// Build the static prompt for a task (sent once, reused every round).
+pub fn static_prompt(ctx: &TaskContext) -> String {
+    let mut s = String::new();
+    match ctx.kind {
+        TaskKind::Finetune => {
+            s.push_str(
+                "You are helping optimize the hyperparameters of quantized \
+                 model fine-tuning.\n",
+            );
+        }
+        TaskKind::KernelTuning => {
+            s.push_str(
+                "You are helping optimize the execution configuration of the \
+                 model's computational kernels for deployment. Optimize the \
+                 kernel execution parameters (computation block size for \
+                 parallelization, tiling size for memory access, loop \
+                 unrolling) and the execution strategy (memory hierarchy \
+                 placement, thread scheduling). The deployment latency \
+                 results will be fed back to you.\n",
+            );
+        }
+        TaskKind::Bitwidth => {
+            s.push_str(
+                "Please choose an appropriate quantization bit width that \
+                 satisfies the memory limitations and achieves better \
+                 performance on this hardware.\n",
+            );
+        }
+    }
+    if let Some(hw) = &ctx.hardware {
+        s.push_str("\nHere are more details about the hardware: ");
+        s.push_str(&hw.to_string());
+        s.push('\n');
+    }
+    s.push_str("\nObjective details: ");
+    s.push_str(&ctx.objective.to_string());
+    s.push_str("\n\nHere is the hyperparameter search space:\n");
+    s.push_str(&ctx.space.describe());
+    s.push_str(
+        "\nYou will get the evaluation result after each trial. The goal is \
+         to find the configuration that maximizes the objective within a \
+         given budget. If the result does not change, explore different \
+         parts of the search space. You provide one set of configurations \
+         at a time; when the results are given, you return an optimized \
+         configuration. **Make sure that all hyperparameters remain within \
+         the defined range**. It is recommended to use the default \
+         parameters for the first round. Please provide the configuration \
+         in **JSON format**.\n\n",
+    );
+    s.push_str(REACT_BLOCK);
+    s
+}
+
+/// Serialize one history entry the way the paper's transcripts do.
+fn history_entry(round: usize, obs: &Observation) -> Json {
+    let mut o = Json::obj();
+    o.set("round", Json::Num(round as f64));
+    o.set(
+        "config",
+        Json::from_pairs(
+            obs.config
+                .iter()
+                .map(|(k, v)| (k.clone(), v.to_json()))
+                .collect(),
+        ),
+    );
+    o.set("score", Json::Num(obs.score));
+    if !obs.feedback.is_empty() {
+        o.set("feedback", Json::Str(obs.feedback.clone()));
+    }
+    o
+}
+
+/// Build the dynamic prompt for the current round (paper Fig. 2d): budget
+/// note, latest config + result, history window, and the canonical
+/// CONTEXT_JSON block.
+pub fn dynamic_prompt(ctx: &TaskContext, history_window: &[(usize, &Observation)]) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "Note that there are {} rounds left, please try to make effective \
+         attempts. Finish tasks with interleaving Thought, Action, \
+         Observation steps.\n",
+        ctx.rounds_left
+    ));
+    if let Some((round, last)) = history_window.last() {
+        s.push_str(&format!(
+            "\nThe current configuration (round {round}) is: {}\n",
+            Json::from_pairs(
+                last.config
+                    .iter()
+                    .map(|(k, v)| (k.clone(), v.to_json()))
+                    .collect()
+            )
+            .to_string()
+        ));
+        s.push_str(&format!(
+            "The result based on this configuration: score = {:.6}.",
+            last.score
+        ));
+        if !last.feedback.is_empty() {
+            s.push_str(&format!(" Evaluation feedback: {}", last.feedback));
+        }
+        s.push('\n');
+    } else {
+        s.push_str(
+            "\nThis is the first round. It is recommended to use the default \
+             parameters.\n",
+        );
+    }
+    let hist = Json::Arr(
+        history_window
+            .iter()
+            .map(|(round, obs)| history_entry(*round, obs))
+            .collect(),
+    );
+    s.push_str(&format!("\nHistory: {}\n", hist.to_string()));
+
+    // Canonical machine-readable context (see module docs).
+    let mut ctx_json = Json::obj();
+    ctx_json.set("task", Json::Str(ctx.kind.as_str().to_string()));
+    ctx_json.set("rounds_left", Json::Num(ctx.rounds_left as f64));
+    ctx_json.set("space", space_json(ctx.space));
+    ctx_json.set("history", hist);
+    if let Some(hw) = &ctx.hardware {
+        ctx_json.set("hardware", hw.clone());
+    }
+    ctx_json.set("objective", ctx.objective.clone());
+    s.push_str(&format!("\nCONTEXT_JSON: {}\n", ctx_json.to_string()));
+    s.push_str(
+        "\nPlease check the history and think about your next plan before \
+         action, then provide the next configuration in JSON format.",
+    );
+    s
+}
+
+/// The search space as JSON (used in CONTEXT_JSON).
+pub fn space_json(space: &crate::search::Space) -> Json {
+    use crate::search::param::ParamKind;
+    let mut arr = Vec::new();
+    for p in &space.params {
+        let mut o = Json::obj();
+        o.set("name", Json::Str(p.name.clone()));
+        match &p.kind {
+            ParamKind::Float { lo, hi, log } => {
+                o.set("type", Json::Str("float".into()));
+                o.set("lo", Json::Num(*lo));
+                o.set("hi", Json::Num(*hi));
+                o.set("log", Json::Bool(*log));
+            }
+            ParamKind::Int { lo, hi, log } => {
+                o.set("type", Json::Str("int".into()));
+                o.set("lo", Json::Num(*lo as f64));
+                o.set("hi", Json::Num(*hi as f64));
+                o.set("log", Json::Bool(*log));
+            }
+            ParamKind::Cat { choices } => {
+                o.set("type", Json::Str("cat".into()));
+                o.set(
+                    "choices",
+                    Json::Arr(choices.iter().map(|c| Json::Str(c.clone())).collect()),
+                );
+            }
+        }
+        o.set("default", p.default.to_json());
+        arr.push(o);
+    }
+    Json::Arr(arr)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::search::spaces;
+
+    fn ctx<'a>(space: &'a crate::search::Space, hist: &'a [Observation]) -> TaskContext<'a> {
+        TaskContext {
+            kind: TaskKind::Finetune,
+            space,
+            history: hist,
+            rounds_left: 7,
+            hardware: None,
+            objective: Json::obj(),
+        }
+    }
+
+    #[test]
+    fn static_prompt_contains_space_and_react() {
+        let space = spaces::resnet_qat();
+        let c = ctx(&space, &[]);
+        let s = static_prompt(&c);
+        assert!(s.contains("learning_rate"));
+        assert!(s.contains("Thought"));
+        assert!(s.contains("JSON format"));
+    }
+
+    #[test]
+    fn dynamic_prompt_embeds_context_json() {
+        let space = spaces::resnet_qat();
+        let hist = vec![Observation::new(space.default_config(), 0.89)];
+        let window: Vec<(usize, &Observation)> =
+            hist.iter().enumerate().collect();
+        let c = ctx(&space, &hist);
+        let s = dynamic_prompt(&c, &window);
+        assert!(s.contains("7 rounds left"));
+        let json_line = s
+            .lines()
+            .find(|l| l.starts_with("CONTEXT_JSON: "))
+            .expect("context json line");
+        let v = crate::util::json::parse(
+            json_line.trim_start_matches("CONTEXT_JSON: "),
+        )
+        .unwrap();
+        assert_eq!(v.req_str("task").unwrap(), "finetune");
+        assert_eq!(v.req_arr("history").unwrap().len(), 1);
+    }
+}

@@ -1,0 +1,91 @@
+//! ReAct reply structure (paper §3.2).
+//!
+//! The agent's completions interleave free-text reasoning with a JSON
+//! configuration, exactly like the paper's Appendix E transcripts.  This
+//! module extracts the structured parts: the Thought text, the Action
+//! (proposed config JSON) and any declared code change flag.
+
+use crate::util::json::{self, Json};
+
+#[derive(Debug, Clone)]
+pub struct AgentReply {
+    /// Free-text reasoning (the `Thought:` section, or the whole prose).
+    pub thought: String,
+    /// The proposed configuration object, if one was found.
+    pub config: Option<Json>,
+    /// The raw completion (for task logs).
+    pub raw: String,
+}
+
+/// Parse a completion into a structured reply.
+pub fn parse_reply(raw: &str) -> AgentReply {
+    let thought = raw
+        .split("Thought:")
+        .nth(1)
+        .map(|rest| {
+            rest.split("Action:")
+                .next()
+                .unwrap_or(rest)
+                .trim()
+                .to_string()
+        })
+        .unwrap_or_else(|| {
+            // No explicit tag: treat leading prose (up to the JSON) as thought.
+            raw.split('{').next().unwrap_or("").trim().to_string()
+        });
+    AgentReply {
+        thought,
+        config: json::extract_object(raw),
+        raw: raw.to_string(),
+    }
+}
+
+/// Render a reply in the canonical ReAct form (used by the simulated
+/// backend so its transcripts read like the paper's).
+pub fn render_reply(thought: &str, config: &Json) -> String {
+    format!(
+        "Thought: {thought}\nAction: propose the next configuration.\n\
+         The suggested new CONFIG is as follows: {}",
+        config.to_string()
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_tagged_reply() {
+        let raw = "Thought: lr seems high; halving.\nAction: update config.\n\
+                   {\"learning_rate\": 0.005, \"batch_size\": 128}";
+        let r = parse_reply(raw);
+        assert!(r.thought.contains("halving"));
+        let cfg = r.config.unwrap();
+        assert_eq!(cfg.req_f64("learning_rate").unwrap(), 0.005);
+    }
+
+    #[test]
+    fn parses_untagged_prose_reply() {
+        let raw = "From the training loss the model is improving. The \
+                   suggested new CONFIG is as follows: {\"momentum\": 0.88}";
+        let r = parse_reply(raw);
+        assert!(r.thought.contains("improving"));
+        assert_eq!(r.config.unwrap().req_f64("momentum").unwrap(), 0.88);
+    }
+
+    #[test]
+    fn missing_json_yields_none() {
+        let r = parse_reply("I cannot decide yet.");
+        assert!(r.config.is_none());
+    }
+
+    #[test]
+    fn render_then_parse_roundtrips() {
+        let mut cfg = Json::obj();
+        cfg.set("learning_rate", Json::Num(0.004));
+        let raw = render_reply("continue the trend", &cfg);
+        let r = parse_reply(&raw);
+        assert_eq!(r.config.unwrap().req_f64("learning_rate").unwrap(), 0.004);
+        assert!(r.thought.contains("continue"));
+    }
+}

@@ -1,0 +1,712 @@
+//! `SimulatedLlm` — the deterministic GPT-4 stand-in (DESIGN.md §2).
+//!
+//! Implements [`LlmBackend`] with a rule-based ReAct policy that encodes the
+//! tuning heuristics visible in the paper's Appendix E transcripts:
+//!
+//! * **fine-tuning**: first round defaults; continue a move that improved;
+//!   roll back + redirect after a regression ("roll back the previous more
+//!   aggressive optimization"); one-knob playbook moves on plateau; special
+//!   handling for divergence (learning rate down) and low-bit instability.
+//! * **kernel tuning**: hardware-informed initial launch geometry, then
+//!   coordinate descent with rollback, reasoning about occupancy / register
+//!   pressure / coalescing exactly like the appendix deployment transcript.
+//! * **bit-width selection**: §3.4/§4.4 hardware analysis — feasibility from
+//!   the memory model, preference order from native instruction support
+//!   (tensor-core GPUs prefer INT4; mobile GPUs without native INT4 prefer
+//!   INT8 despite the smaller bit-width "looking" faster).
+//!
+//! It also injects the paper's §3.2 failure modes at a configurable rate
+//! (malformed replies, out-of-range values) so the validator/retry machinery
+//! is exercised on every long run.
+//!
+//! The policy reads the canonical `CONTEXT_JSON:` block from the latest user
+//! message — the same information a human/GPT-4 reads from the surrounding
+//! prose — and returns a paper-style completion (Thought + JSON config).
+
+use anyhow::{anyhow, Result};
+
+use crate::search::param::{ParamKind, Value};
+use crate::search::{Config, Space};
+use crate::util::json::{self, Json};
+use crate::util::rng::Rng;
+
+use super::backend::{LlmBackend, Message, Role};
+use super::react::render_reply;
+
+pub struct SimulatedLlm {
+    rng: Rng,
+    /// Probability of emitting a §3.2 failure-mode reply (retries always
+    /// produce a valid one, as GPT-4 does after correction).
+    pub failure_rate: f64,
+}
+
+impl SimulatedLlm {
+    pub fn new(seed: u64) -> Self {
+        SimulatedLlm {
+            rng: Rng::new(seed),
+            failure_rate: 0.05,
+        }
+    }
+
+    pub fn with_failure_rate(mut self, p: f64) -> Self {
+        self.failure_rate = p;
+        self
+    }
+}
+
+impl LlmBackend for SimulatedLlm {
+    fn model_name(&self) -> &str {
+        "simulated-react-policy"
+    }
+
+    fn complete(&mut self, messages: &[Message]) -> Result<String> {
+        let ctx = extract_context(messages)
+            .ok_or_else(|| anyhow!("no CONTEXT_JSON block in transcript"))?;
+        let is_retry = messages
+            .last()
+            .map(|m| m.role == Role::User && m.content.contains("previous response was invalid"))
+            .unwrap_or(false);
+
+        let space = Space::from_json("ctx", ctx.req("space")?)?;
+        let history = parse_history(&ctx, &space);
+        let task = ctx.req_str("task")?.to_string();
+
+        let (thought, cfg) = match task.as_str() {
+            "kernel_tuning" => kernel_policy(&ctx, &space, &history, &mut self.rng),
+            "bitwidth" => bitwidth_policy(&ctx, &space),
+            _ => finetune_policy(&ctx, &space, &history, &mut self.rng),
+        };
+        let cfg = space.repair(&cfg);
+
+        // §3.2 failure injection (never on a retry).
+        if !is_retry && self.rng.bool(self.failure_rate) {
+            return Ok(self.faulty_reply(&space, &cfg, &thought));
+        }
+        Ok(render_reply(&thought, &space.config_to_json(&cfg)))
+    }
+}
+
+impl SimulatedLlm {
+    /// Emit one of the paper's three observed failure modes.
+    fn faulty_reply(&mut self, space: &Space, cfg: &Config, thought: &str) -> String {
+        match self.rng.usize(3) {
+            0 => {
+                // Mode 1: response without the required JSON format.
+                format!(
+                    "Thought: {thought}\nI believe the next configuration \
+                     should decrease the learning rate slightly and increase \
+                     regularization, as discussed above."
+                )
+            }
+            1 => {
+                // Mode 2: a constraint violation (first numeric param 10x
+                // over its upper bound).
+                let mut bad = cfg.clone();
+                if let Some(p) = space.params.iter().find(|p| {
+                    matches!(p.kind, ParamKind::Float { .. } | ParamKind::Int { .. })
+                }) {
+                    let v = match &p.kind {
+                        ParamKind::Float { hi, .. } => Value::Float(hi * 10.0),
+                        ParamKind::Int { hi, .. } => Value::Int(hi * 10),
+                        _ => unreachable!(),
+                    };
+                    bad.insert(p.name.clone(), v);
+                }
+                render_reply(thought, &space.config_to_json(&bad))
+            }
+            _ => {
+                // Mode 3: irrelevant content around a broken JSON object.
+                format!(
+                    "Thought: {thought}\nAs an aside, transformers were \
+                     introduced in 2017 and attention scales quadratically. \
+                     {{\"learning_rate\": oops}}"
+                )
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// context parsing
+// ---------------------------------------------------------------------------
+
+fn extract_context(messages: &[Message]) -> Option<Json> {
+    for m in messages.iter().rev() {
+        if m.role != Role::User {
+            continue;
+        }
+        for line in m.content.lines().rev() {
+            if let Some(rest) = line.strip_prefix("CONTEXT_JSON: ") {
+                if let Ok(v) = json::parse(rest) {
+                    return Some(v);
+                }
+            }
+        }
+    }
+    None
+}
+
+struct Hist {
+    config: Config,
+    score: f64,
+    feedback: Json,
+}
+
+fn parse_history(ctx: &Json, space: &Space) -> Vec<Hist> {
+    let mut out = Vec::new();
+    if let Some(arr) = ctx.get("history").and_then(|h| h.as_arr()) {
+        for item in arr {
+            let config = item
+                .get("config")
+                .map(|c| space.config_from_json(c))
+                .unwrap_or_default();
+            let score = item.get("score").and_then(|s| s.as_f64()).unwrap_or(0.0);
+            let feedback = item
+                .get("feedback")
+                .and_then(|f| f.as_str())
+                .and_then(|s| json::parse(s).ok())
+                .unwrap_or(Json::obj());
+            out.push(Hist {
+                config,
+                score,
+                feedback,
+            });
+        }
+    }
+    out
+}
+
+fn best_idx(history: &[Hist]) -> usize {
+    let mut bi = 0;
+    for (i, h) in history.iter().enumerate() {
+        if h.score > history[bi].score {
+            bi = i;
+        }
+    }
+    bi
+}
+
+// ---------------------------------------------------------------------------
+// fine-tuning policy
+// ---------------------------------------------------------------------------
+
+fn finetune_policy(
+    ctx: &Json,
+    space: &Space,
+    history: &[Hist],
+    rng: &mut Rng,
+) -> (String, Config) {
+    if history.is_empty() {
+        return (
+            "First round: it is recommended to use the default parameters \
+             for training, establishing a calibrated baseline."
+                .into(),
+            space.default_config(),
+        );
+    }
+    let last = history.len() - 1;
+    let bi = best_idx(history);
+    let best = &history[bi];
+    let diverged = best.score - history[last].score > 0.25 * best.score.abs().max(0.05)
+        || history[last]
+            .feedback
+            .get("diverged")
+            .and_then(|v| v.as_bool())
+            .unwrap_or(false);
+
+    // Low-bit context: be conservative with lr, generous with budget.
+    let low_bit = ctx
+        .get("objective")
+        .and_then(|o| o.get("bits"))
+        .and_then(|b| b.as_f64())
+        .map(|b| b <= 2.5)
+        .unwrap_or(false);
+
+    let mut cfg = best.config.clone();
+
+    if diverged {
+        scale(space, &mut cfg, "learning_rate", 0.35);
+        scale(space, &mut cfg, "max_grad_norm", 0.7);
+        return (
+            "The last configuration regressed sharply — the loss list \
+             suggests the model is skipping over minima. Rolling back to \
+             the best configuration and reducing the learning rate and \
+             gradient-clipping norm for fine-grained optimization."
+                .into(),
+            cfg,
+        );
+    }
+
+    let improved_last = last == bi && history.len() >= 2;
+    if improved_last {
+        // Continue the successful direction with momentum (0.7 step).
+        let prev_best = best_idx(&history[..last]);
+        let u_prev = space.encode(&history[prev_best].config);
+        let u_last = space.encode(&history[last].config);
+        let u_next: Vec<f64> = u_prev
+            .iter()
+            .zip(&u_last)
+            .map(|(p, l)| (l + 0.7 * (l - p)).clamp(0.0, 1.0))
+            .collect();
+        return (
+            "The last change improved the validation result. The loss \
+             trend is healthy, so I continue in the same direction with a \
+             slightly smaller step to avoid overshooting."
+                .into(),
+            space.decode(&u_next),
+        );
+    }
+
+    // Plateau / mild regression: one-knob playbook from the best config,
+    // informed by the loss-curve feedback.
+    let slope = history[last]
+        .feedback
+        .get("loss_slope")
+        .and_then(|v| v.as_f64())
+        .unwrap_or(-0.01);
+    let round = history.len();
+    if round % 4 == 0 {
+        // Periodic exploration within a trust region of the incumbent
+        // ("if the loss remains unchanged, explore different parts of the
+        // search space" — the static prompt's own instruction).
+        let mut u = space.encode(&cfg);
+        for _ in 0..2 {
+            let i = rng.usize(u.len());
+            u[i] = (u[i] + rng.normal() * 0.2).clamp(0.0, 1.0);
+        }
+        return (
+            "Results have plateaued around the incumbent. Exploring a \
+             nearby region of the search space to find new features that \
+             help accuracy."
+                .into(),
+            space.decode(&u),
+        );
+    }
+    let thought;
+    let low_score = best.score < 0.45; // far from a trained model's accuracy
+    if slope > -8e-3 || low_score {
+        // Loss flat (or accuracy still near chance): training is not making
+        // real progress — raise the learning rate / training budget.
+        if low_bit {
+            scale(space, &mut cfg, "num_epochs", 1.4);
+            scale(space, &mut cfg, "max_steps", 1.4);
+            scale(space, &mut cfg, "learning_rate", 1.5);
+            thought = "Loss has flattened under aggressive quantization; \
+                       the straight-through gradients are small, so low-bit \
+                       training needs a longer schedule and a *larger* \
+                       learning rate to make progress — extending the \
+                       budget and raising lr."
+                .to_string();
+        } else {
+            scale(space, &mut cfg, "learning_rate", 2.2);
+            scale(space, &mut cfg, "num_epochs", 1.3);
+            scale(space, &mut cfg, "max_steps", 1.3);
+            scale(space, &mut cfg, "lora_r", 1.5);
+            scale(space, &mut cfg, "lora_alpha", 1.5);
+            thought = "The training loss has flattened early and accuracy \
+                       is far below what this model should reach — it is \
+                       under-fitting. Increasing the learning rate, the \
+                       training budget and the adapter capacity \
+                       (lora_r/alpha) to add expressiveness."
+                .to_string();
+        }
+    } else {
+        // Loss still falling but validation flat: regularize.
+        match round % 3 {
+            0 => {
+                scale(space, &mut cfg, "weight_decay", 2.5);
+                scale(space, &mut cfg, "lora_dropout", 1.5);
+                thought = "Training loss decreases while validation is \
+                           flat — likely mild overfitting. Increasing \
+                           weight decay (and adapter dropout) to control \
+                           generalization error."
+                    .to_string();
+            }
+            1 => {
+                scale(space, &mut cfg, "learning_rate", 0.6);
+                scale(space, &mut cfg, "batch_size", 0.75);
+                scale(space, &mut cfg, "per_device_train_batch_size", 0.75);
+                thought = "Now is a good time for finer-grained \
+                           optimization: lower the learning rate and \
+                           shrink the batch for more frequent parameter \
+                           updates."
+                    .to_string();
+            }
+            _ => {
+                nudge_float(space, &mut cfg, "momentum", -0.04);
+                scale(space, &mut cfg, "warmup_ratio", 1.5);
+                thought = "Momentum can make the optimizer miss the \
+                           minimum; reducing it slightly (and lengthening \
+                           warmup) for a more careful descent."
+                    .to_string();
+            }
+        }
+    }
+    (thought, cfg)
+}
+
+fn scale(space: &Space, cfg: &mut Config, name: &str, factor: f64) {
+    if let Some(p) = space.get(name) {
+        let v = cfg.get(name).cloned().unwrap_or_else(|| p.default.clone());
+        let moved = match v {
+            Value::Float(x) => Value::Float(x * factor),
+            Value::Int(k) => Value::Int(((k as f64) * factor).round() as i64),
+            other => other,
+        };
+        cfg.insert(name.to_string(), p.clamp(&moved));
+    }
+}
+
+fn nudge_float(space: &Space, cfg: &mut Config, name: &str, delta: f64) {
+    if let Some(p) = space.get(name) {
+        let v = cfg.get(name).map(|v| v.as_f64()).unwrap_or(p.default.as_f64());
+        cfg.insert(name.to_string(), p.clamp(&Value::Float(v + delta)));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// kernel-tuning policy (deployment)
+// ---------------------------------------------------------------------------
+
+/// Coordinate-descent order with the appendix transcript's reasoning.
+const KERNEL_KNOBS: &[&str] = &[
+    "blockdim_x",
+    "tiling_size",
+    "unroll",
+    "griddim_x",
+    "memory_hierarchy",
+    "simd_width",
+    "prefetch",
+    "layout",
+    "loop_order",
+];
+
+fn kernel_policy(
+    ctx: &Json,
+    space: &Space,
+    history: &[Hist],
+    rng: &mut Rng,
+) -> (String, Config) {
+    let hw = ctx.get("hardware").cloned().unwrap_or(Json::obj());
+    let is_matmul = ctx
+        .get("objective")
+        .and_then(|o| o.get("kernel"))
+        .and_then(|k| k.as_str())
+        .map(|k| k.contains("matmul"))
+        .unwrap_or(false);
+    let tensor_cores = hw
+        .get("tensor_cores")
+        .and_then(|v| v.as_bool())
+        .unwrap_or(false);
+
+    if history.is_empty() {
+        // Hardware-informed starting point.
+        let mut cfg = space.default_config();
+        set_int(space, &mut cfg, "blockdim_x", if tensor_cores { 128 } else { 64 });
+        set_int(space, &mut cfg, "griddim_x", 64);
+        set_int(space, &mut cfg, "tiling_size", if is_matmul { 32 } else { 16 });
+        set_int(space, &mut cfg, "unroll", 4);
+        if is_matmul {
+            set_cat(space, &mut cfg, "memory_hierarchy", "shared");
+        }
+        return (
+            "Analyzing the hardware: given the SM count and shared-memory \
+             size, a 128-thread block with a 32-wide tile in shared memory \
+             should give good occupancy for this kernel; starting there."
+                .into(),
+            cfg,
+        );
+    }
+
+    let last = history.len() - 1;
+    let bi = best_idx(history);
+    let improved_last = last == bi;
+    let mut cfg = history[bi].config.clone();
+    let knob = KERNEL_KNOBS[(history.len() - 1) % KERNEL_KNOBS.len()];
+
+    if improved_last && history.len() >= 2 {
+        // Push the knob that just worked, further in the same direction.
+        let prev = &history[last - 1].config;
+        for name in KERNEL_KNOBS {
+            let (Some(a), Some(b)) = (prev.get(*name), cfg.get(*name)) else {
+                continue;
+            };
+            if a != b {
+                let dir = if b.as_f64() > a.as_f64() { 2.0 } else { 0.5 };
+                scale(space, &mut cfg, name, dir);
+                return (
+                    format!(
+                        "The last optimization significantly improved \
+                         latency. Pushing {name} further in the same \
+                         direction to exploit remaining headroom while \
+                         watching for register pressure."
+                    ),
+                    cfg,
+                );
+            }
+        }
+    }
+
+    // Rollback + next knob (the appendix's regression reasoning).
+    let (thought, dir): (String, f64) = match knob {
+        "blockdim_x" => (
+            "The previous change regressed, likely from register pressure \
+             and shared-memory contention. Rolling back to the best \
+             configuration and rebalancing threads per block."
+                .into(),
+            if rng.bool(0.5) { 2.0 } else { 0.5 },
+        ),
+        "tiling_size" => (
+            "Adjusting the tile size to improve data reuse in the memory \
+             hierarchy without overflowing shared memory."
+                .into(),
+            if improved_last { 2.0 } else { 0.5 },
+        ),
+        "unroll" => (
+            "Unrolling balances instruction-level parallelism against \
+             register spills; moving the unroll factor one notch."
+                .into(),
+            if rng.bool(0.5) { 2.0 } else { 0.5 },
+        ),
+        "griddim_x" => (
+            "Ensuring more SMs are occupied by adjusting the grid \
+             dimension for balanced workload distribution."
+                .into(),
+            2.0,
+        ),
+        _ => (
+            format!(
+                "Switching the execution strategy knob '{knob}' to test an \
+                 alternative memory/scheduling arrangement."
+            ),
+            1.0,
+        ),
+    };
+    match knob {
+        "memory_hierarchy" => cycle_cat(space, &mut cfg, knob),
+        "layout" => cycle_cat(space, &mut cfg, knob),
+        "loop_order" => cycle_cat(space, &mut cfg, knob),
+        "simd_width" => scale(space, &mut cfg, knob, 2.0),
+        "prefetch" => nudge_int(space, &mut cfg, knob, 4),
+        _ => scale(space, &mut cfg, knob, dir),
+    }
+    (thought, cfg)
+}
+
+fn set_int(space: &Space, cfg: &mut Config, name: &str, v: i64) {
+    if let Some(p) = space.get(name) {
+        cfg.insert(name.to_string(), p.clamp(&Value::Int(v)));
+    }
+}
+
+fn nudge_int(space: &Space, cfg: &mut Config, name: &str, d: i64) {
+    if let Some(p) = space.get(name) {
+        let v = cfg.get(name).map(|v| v.as_i64()).unwrap_or(0);
+        cfg.insert(name.to_string(), p.clamp(&Value::Int(v + d)));
+    }
+}
+
+fn set_cat(space: &Space, cfg: &mut Config, name: &str, v: &str) {
+    if let Some(p) = space.get(name) {
+        cfg.insert(name.to_string(), p.clamp(&Value::Cat(v.into())));
+    }
+}
+
+fn cycle_cat(space: &Space, cfg: &mut Config, name: &str) {
+    if let Some(p) = space.get(name) {
+        if let ParamKind::Cat { choices } = &p.kind {
+            let cur = cfg
+                .get(name)
+                .and_then(|v| v.as_str().map(|s| s.to_string()))
+                .unwrap_or_else(|| choices[0].clone());
+            let idx = choices.iter().position(|c| *c == cur).unwrap_or(0);
+            let next = choices[(idx + 1) % choices.len()].clone();
+            cfg.insert(name.to_string(), Value::Cat(next));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// bit-width policy (§3.4 adaptive quantization strategies)
+// ---------------------------------------------------------------------------
+
+fn bitwidth_policy(ctx: &Json, space: &Space) -> (String, Config) {
+    let hw = ctx.get("hardware").cloned().unwrap_or(Json::obj());
+    let obj = ctx.get("objective").cloned().unwrap_or(Json::obj());
+    let limit_gb = obj
+        .get("memory_limit_gb")
+        .and_then(|v| v.as_f64())
+        .unwrap_or(f64::INFINITY);
+    let mem = obj.get("mem_gb").cloned().unwrap_or(Json::obj());
+    let tensor_cores = hw.get("tensor_cores").and_then(|v| v.as_bool()).unwrap_or(false);
+    let int4_native = hw.get("int4_native").and_then(|v| v.as_bool()).unwrap_or(false);
+    let int8_native = hw.get("int8_native").and_then(|v| v.as_bool()).unwrap_or(true);
+
+    // Preference order from the hardware analysis (paper §4.4):
+    // tensor-core GPUs execute INT4 MMA with FP32 accumulate at the highest
+    // throughput; platforms without native INT4 pay FP16-conversion and
+    // bit-unpacking overhead, so INT8 wins there.
+    let order: Vec<&str> = if tensor_cores && int4_native {
+        vec!["INT4", "INT8", "FP16"]
+    } else if int8_native {
+        vec!["INT8", "FP16", "INT4"]
+    } else {
+        vec!["FP16", "INT8", "INT4"]
+    };
+    for q in &order {
+        let fits = mem
+            .get(q)
+            .and_then(|v| v.as_f64())
+            .map(|gb| gb <= limit_gb)
+            .unwrap_or(false);
+        if fits {
+            let mut cfg = Config::new();
+            cfg.insert("quant".to_string(), Value::Cat(q.to_string()));
+            let thought = if *q == "INT8" && !int4_native {
+                "This GPU does not natively support INT4: INT4 elements \
+                 must be converted to FP16 with extra bitwise unpacking \
+                 (shift/AND/OR) before accumulation, negating the expected \
+                 benefit. INT8 hits the accelerated path, so despite the \
+                 smaller bit-width looking faster on paper, INT8 is the \
+                 right choice here — it also fits the memory limit."
+                    .to_string()
+            } else {
+                format!(
+                    "{q} fits within the {limit_gb} GB budget and maps onto \
+                     this platform's fastest supported execution path \
+                     (tensor-core MMA with FP32 accumulation), so I select \
+                     {q}."
+                )
+            };
+            return (thought, space.repair(&cfg));
+        }
+    }
+    // Nothing fits: reject (the coordinator reports infeasibility, Table 5's
+    // "x" cells).
+    let mut cfg = Config::new();
+    cfg.insert("quant".to_string(), Value::Cat("NONE".to_string()));
+    (
+        "No quantization type satisfies the memory limit on this device; \
+         the deployment must be rejected."
+            .into(),
+        cfg,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agent::prompt::dynamic_prompt;
+    use crate::agent::react::parse_reply;
+    use crate::agent::{TaskContext, TaskKind};
+    use crate::optimizers::Observation;
+    use crate::search::spaces;
+
+    fn run_round(
+        kind: TaskKind,
+        space: &Space,
+        history: &[Observation],
+        hardware: Option<Json>,
+        objective: Json,
+    ) -> String {
+        let ctx = TaskContext {
+            kind,
+            space,
+            history,
+            rounds_left: 5,
+            hardware,
+            objective,
+        };
+        let window: Vec<(usize, &Observation)> = history.iter().enumerate().collect();
+        let prompt = dynamic_prompt(&ctx, &window);
+        let mut llm = SimulatedLlm::new(3).with_failure_rate(0.0);
+        llm.complete(&[Message::user(prompt)]).unwrap()
+    }
+
+    #[test]
+    fn first_round_proposes_defaults() {
+        let space = spaces::resnet_qat();
+        let raw = run_round(TaskKind::Finetune, &space, &[], None, Json::obj());
+        let cfg = space.config_from_json(&parse_reply(&raw).config.unwrap());
+        assert_eq!(space.repair(&cfg), space.default_config());
+    }
+
+    #[test]
+    fn divergence_triggers_lr_cut() {
+        let space = spaces::resnet_qat();
+        let mut h = vec![Observation::new(space.default_config(), 0.80)];
+        let mut bad = space.default_config();
+        bad.insert("learning_rate".into(), Value::Float(0.15));
+        let mut o = Observation::new(bad, 0.10);
+        o.feedback = "{\"diverged\": true}".into();
+        h.push(o);
+        let raw = run_round(TaskKind::Finetune, &space, &h, None, Json::obj());
+        assert!(raw.contains("Rolling back"), "{raw}");
+        let cfg = space.config_from_json(&parse_reply(&raw).config.unwrap());
+        let lr = cfg["learning_rate"].as_f64();
+        assert!(lr < 0.01, "lr {lr} not reduced from best 0.01");
+    }
+
+    #[test]
+    fn mobile_hardware_prefers_int8() {
+        let space = spaces::bitwidth();
+        let mut hw = Json::obj();
+        hw.set("tensor_cores", Json::Bool(false));
+        hw.set("int4_native", Json::Bool(false));
+        hw.set("int8_native", Json::Bool(true));
+        let mut obj = Json::obj();
+        obj.set("memory_limit_gb", Json::Num(10.0));
+        let mut mem = Json::obj();
+        mem.set("FP16", Json::Num(6.0));
+        mem.set("INT8", Json::Num(3.0));
+        mem.set("INT4", Json::Num(1.5));
+        obj.set("mem_gb", mem);
+        let raw = run_round(TaskKind::Bitwidth, &space, &[], Some(hw), obj);
+        assert!(raw.contains("INT8"), "{raw}");
+        let cfg = space.config_from_json(&parse_reply(&raw).config.unwrap());
+        assert_eq!(cfg["quant"].as_str(), Some("INT8"));
+    }
+
+    #[test]
+    fn a6000_prefers_int4_when_it_fits() {
+        let space = spaces::bitwidth();
+        let mut hw = Json::obj();
+        hw.set("tensor_cores", Json::Bool(true));
+        hw.set("int4_native", Json::Bool(true));
+        hw.set("int8_native", Json::Bool(true));
+        let mut obj = Json::obj();
+        obj.set("memory_limit_gb", Json::Num(10.0));
+        let mut mem = Json::obj();
+        mem.set("FP16", Json::Num(26.0));
+        mem.set("INT8", Json::Num(13.0));
+        mem.set("INT4", Json::Num(6.5));
+        obj.set("mem_gb", mem);
+        let raw = run_round(TaskKind::Bitwidth, &space, &[], Some(hw), obj);
+        let cfg = space.config_from_json(&parse_reply(&raw).config.unwrap());
+        assert_eq!(cfg["quant"].as_str(), Some("INT4"));
+    }
+
+    #[test]
+    fn failure_injection_produces_invalid_replies_sometimes() {
+        let space = spaces::resnet_qat();
+        let history = vec![Observation::new(space.default_config(), 0.8)];
+        let ctx = TaskContext {
+            kind: TaskKind::Finetune,
+            space: &space,
+            history: &history,
+            rounds_left: 5,
+            hardware: None,
+            objective: Json::obj(),
+        };
+        let window: Vec<(usize, &Observation)> = history.iter().enumerate().collect();
+        let prompt = dynamic_prompt(&ctx, &window);
+        let mut llm = SimulatedLlm::new(7).with_failure_rate(1.0);
+        let raw = llm.complete(&[Message::user(prompt)]).unwrap();
+        let reply = parse_reply(&raw);
+        let invalid = match &reply.config {
+            None => true,
+            Some(j) => !space.is_valid(&space.config_from_json(j)),
+        };
+        assert!(invalid, "expected an injected failure: {raw}");
+    }
+}

@@ -1,0 +1,126 @@
+//! Token & cost accounting (paper Appendix C).
+//!
+//! The paper reports ~150K tokens ≈ $5 and 2.34 s average round-trip per
+//! query for end-to-end optimization of 2-3 models on GPT-4's list pricing.
+//! We count estimated tokens per call (a ~4-chars/token word-piece
+//! estimator, the standard rule of thumb for English+JSON) and price them
+//! at GPT-4-0613 rates so every bench can print its Appendix-C line.
+
+use super::backend::Message;
+
+/// GPT-4-0613 list pricing (USD per 1K tokens), as of the paper's writing.
+pub const PROMPT_PRICE_PER_1K: f64 = 0.03;
+pub const COMPLETION_PRICE_PER_1K: f64 = 0.06;
+
+/// Paper-reported mean API round-trip (seconds), used by the simulated
+/// backend's latency accounting (we do NOT sleep; we account).
+pub const SIMULATED_ROUNDTRIP_S: f64 = 2.34;
+
+/// Word-piece token estimate: ceil(chars / 4), plus a small per-message
+/// framing overhead (role tags), matching OpenAI's accounting shape.
+pub fn estimate_tokens(text: &str) -> usize {
+    text.chars().count().div_ceil(4)
+}
+
+pub fn estimate_prompt_tokens(messages: &[Message]) -> usize {
+    messages
+        .iter()
+        .map(|m| estimate_tokens(&m.content) + 4)
+        .sum()
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct CostTracker {
+    pub queries: usize,
+    pub prompt_tokens: usize,
+    pub completion_tokens: usize,
+    pub retries: usize,
+    /// Accounted (not slept) API latency, seconds.
+    pub api_seconds: f64,
+}
+
+impl CostTracker {
+    pub fn record(&mut self, messages: &[Message], completion: &str) {
+        self.queries += 1;
+        self.prompt_tokens += estimate_prompt_tokens(messages);
+        self.completion_tokens += estimate_tokens(completion);
+        self.api_seconds += SIMULATED_ROUNDTRIP_S;
+    }
+
+    pub fn record_retry(&mut self) {
+        self.retries += 1;
+    }
+
+    pub fn total_tokens(&self) -> usize {
+        self.prompt_tokens + self.completion_tokens
+    }
+
+    pub fn cost_usd(&self) -> f64 {
+        self.prompt_tokens as f64 / 1000.0 * PROMPT_PRICE_PER_1K
+            + self.completion_tokens as f64 / 1000.0 * COMPLETION_PRICE_PER_1K
+    }
+
+    /// The Appendix-C style one-liner.
+    pub fn report(&self) -> String {
+        format!(
+            "agent cost: {} queries ({} retries), {} tokens ({} prompt + {} completion), \
+             ≈ ${:.2} @ GPT-4 list pricing, {:.1} s accounted API latency \
+             ({:.2} s/query)",
+            self.queries,
+            self.retries,
+            self.total_tokens(),
+            self.prompt_tokens,
+            self.completion_tokens,
+            self.cost_usd(),
+            self.api_seconds,
+            if self.queries > 0 {
+                self.api_seconds / self.queries as f64
+            } else {
+                0.0
+            },
+        )
+    }
+
+    pub fn merge(&mut self, other: &CostTracker) {
+        self.queries += other.queries;
+        self.prompt_tokens += other.prompt_tokens;
+        self.completion_tokens += other.completion_tokens;
+        self.retries += other.retries;
+        self.api_seconds += other.api_seconds;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn token_estimate_scales_with_length() {
+        assert_eq!(estimate_tokens(""), 0);
+        assert_eq!(estimate_tokens("abcd"), 1);
+        assert_eq!(estimate_tokens("abcde"), 2);
+    }
+
+    #[test]
+    fn cost_math() {
+        let mut t = CostTracker::default();
+        t.record(&[Message::user("x".repeat(4000))], &"y".repeat(2000));
+        assert_eq!(t.queries, 1);
+        assert!(t.prompt_tokens >= 1000);
+        // 1000 prompt tokens * 0.03/1k + 500 completion * 0.06/1k ≈ 0.06
+        let c = t.cost_usd();
+        assert!(c > 0.05 && c < 0.08, "{c}");
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = CostTracker::default();
+        let mut b = CostTracker::default();
+        a.record(&[Message::user("hello world")], "ok");
+        b.record(&[Message::user("hi")], "fine");
+        b.record_retry();
+        a.merge(&b);
+        assert_eq!(a.queries, 2);
+        assert_eq!(a.retries, 1);
+    }
+}

@@ -1,0 +1,122 @@
+//! Response validation + retry-message construction (paper §3.2).
+//!
+//! The paper lists three failure modes observed in agent replies:
+//!   1. responses that do not adhere to the required format,
+//!   2. configurations violating predefined constraints,
+//!   3. irrelevant information unrelated to the task.
+//! The validator detects (1) and (2) — (3) is harmless once (1)/(2) pass,
+//! because only the extracted JSON drives the workflow — and produces the
+//! corrective user message for the retry loop.
+
+use crate::search::{space::Violation, Config, Space};
+
+use super::react::AgentReply;
+
+#[derive(Debug, Clone)]
+pub enum ValidationError {
+    /// No JSON configuration could be extracted (failure mode 1).
+    NoConfig,
+    /// The config violates the declared space (failure mode 2).
+    Violations(Vec<Violation>),
+}
+
+impl std::fmt::Display for ValidationError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ValidationError::NoConfig => {
+                write!(f, "the reply did not contain a JSON configuration")
+            }
+            ValidationError::Violations(v) => {
+                let msgs: Vec<String> = v.iter().map(|x| x.to_string()).collect();
+                write!(f, "{}", msgs.join("; "))
+            }
+        }
+    }
+}
+
+/// Check a reply against a space; returns the parsed config when valid.
+pub fn check(space: &Space, reply: &AgentReply) -> Result<Config, ValidationError> {
+    let Some(cfg_json) = &reply.config else {
+        return Err(ValidationError::NoConfig);
+    };
+    let cfg = space.config_from_json(cfg_json);
+    let violations = space.validate(&cfg);
+    // Unknown keys alone are tolerated (the paper's agent sometimes echoes
+    // extra fields like "code_changed"); range/missing errors are not.
+    let hard: Vec<Violation> = violations
+        .into_iter()
+        .filter(|v| !matches!(v, Violation::UnknownKey(_)))
+        .collect();
+    if hard.is_empty() {
+        // Strip unknown keys for the returned config.
+        let clean: Config = cfg
+            .into_iter()
+            .filter(|(k, _)| space.get(k).is_some())
+            .collect();
+        Ok(clean)
+    } else {
+        Err(ValidationError::Violations(hard))
+    }
+}
+
+/// The corrective message sent back to the agent on validation failure.
+pub fn retry_message(err: &ValidationError, space: &Space) -> String {
+    format!(
+        "Your previous response was invalid: {err}. Please provide exactly \
+         one configuration in JSON format with every hyperparameter inside \
+         its declared range. The search space is:\n{}",
+        space.describe()
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agent::react::parse_reply;
+    use crate::search::spaces;
+
+    #[test]
+    fn accepts_valid_config_with_extra_keys() {
+        let space = spaces::resnet_qat();
+        let reply = parse_reply(
+            "{\"learning_rate\": 0.004, \"batch_size\": 170, \"weight_decay\": \
+             0.0009, \"momentum\": 0.9, \"num_epochs\": 12, \"code_changed\": \
+             \"false\"}",
+        );
+        let cfg = check(&space, &reply).unwrap();
+        assert_eq!(cfg.len(), 5);
+    }
+
+    #[test]
+    fn rejects_out_of_range() {
+        let space = spaces::resnet_qat();
+        let reply = parse_reply("{\"learning_rate\": 5.0, \"batch_size\": 128, \
+             \"weight_decay\": 0.0005, \"momentum\": 0.9, \"num_epochs\": 12}");
+        match check(&space, &reply) {
+            Err(ValidationError::Violations(v)) => assert_eq!(v.len(), 1),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_missing_keys_and_no_json() {
+        let space = spaces::resnet_qat();
+        assert!(matches!(
+            check(&space, &parse_reply("{\"learning_rate\": 0.01}")),
+            Err(ValidationError::Violations(_))
+        ));
+        assert!(matches!(
+            check(&space, &parse_reply("thinking...")),
+            Err(ValidationError::NoConfig)
+        ));
+    }
+
+    #[test]
+    fn retry_message_names_the_problem() {
+        let space = spaces::resnet_qat();
+        let err = check(&space, &parse_reply("no json here")).unwrap_err();
+        let msg = retry_message(&err, &space);
+        assert!(msg.contains("JSON"));
+        assert!(msg.contains("learning_rate"));
+    }
+}

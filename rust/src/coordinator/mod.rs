@@ -1,0 +1,9 @@
+//! The HAQA workflow (paper Figure 3): joint fine-tuning + deployment
+//! optimization driven by the agent, with task logs and cost accounting.
+
+pub mod scenario;
+pub mod tasklog;
+pub mod workflow;
+
+pub use scenario::Scenario;
+pub use workflow::Workflow;

@@ -1,0 +1,177 @@
+//! Scenario configuration — the launcher's input (JSON file or CLI flags).
+//!
+//! A scenario fixes everything the workflow needs: which track (QAT CNN,
+//! QLoRA LM, kernel tuning, bit-width, or the joint pipeline), the model,
+//! precision, optimizer, device, round budget and seeds.
+
+use anyhow::{bail, Result};
+
+use crate::quant::QatPrecision;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Track {
+    FinetuneCnn,
+    FinetuneLm,
+    Kernel,
+    Bitwidth,
+    Joint,
+}
+
+impl Track {
+    pub fn parse(s: &str) -> Result<Track> {
+        Ok(match s {
+            "finetune_cnn" | "cnn" => Track::FinetuneCnn,
+            "finetune_lm" | "lm" => Track::FinetuneLm,
+            "kernel" => Track::Kernel,
+            "bitwidth" => Track::Bitwidth,
+            "joint" => Track::Joint,
+            other => bail!("unknown track '{other}'"),
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub name: String,
+    pub track: Track,
+    /// `cnn_s|cnn_m|cnn_l` for CNN; base-seed tag for the LM.
+    pub model: String,
+    /// QAT precision (CNN track).
+    pub precision: QatPrecision,
+    /// Deployment bit-width for the LM base (4/8/16).
+    pub bits: f32,
+    pub optimizer: String,
+    pub budget: usize,
+    pub seed: u64,
+    pub device: String,
+    /// Kernel-tuning target, e.g. "matmul:64".
+    pub kernel: String,
+    pub steps_per_epoch: usize,
+    pub step_scale: f64,
+    /// Full-parameter pretraining steps for the LM base (disk-cached).
+    pub pretrain_steps: usize,
+    pub memory_limit_gb: f64,
+}
+
+impl Default for Scenario {
+    fn default() -> Self {
+        Scenario {
+            name: "scenario".into(),
+            track: Track::FinetuneLm,
+            model: "cnn_s".into(),
+            precision: QatPrecision::W4A4,
+            bits: 8.0,
+            optimizer: "haqa".into(),
+            budget: 10,
+            seed: 0,
+            device: "a6000".into(),
+            kernel: "matmul:64".into(),
+            steps_per_epoch: 3,
+            step_scale: 0.25,
+            pretrain_steps: 400,
+            memory_limit_gb: 10.0,
+        }
+    }
+}
+
+impl Scenario {
+    pub fn from_json(j: &Json) -> Result<Scenario> {
+        let mut s = Scenario::default();
+        if let Some(v) = j.get("name").and_then(|v| v.as_str()) {
+            s.name = v.to_string();
+        }
+        if let Some(v) = j.get("task").and_then(|v| v.as_str()) {
+            s.track = Track::parse(v)?;
+        }
+        if let Some(v) = j.get("model").and_then(|v| v.as_str()) {
+            s.model = v.to_string();
+        }
+        if let Some(v) = j.get("precision").and_then(|v| v.as_str()) {
+            s.precision = parse_precision(v)?;
+        }
+        if let Some(v) = j.get("bits").and_then(|v| v.as_f64()) {
+            s.bits = v as f32;
+        }
+        if let Some(v) = j.get("optimizer").and_then(|v| v.as_str()) {
+            s.optimizer = v.to_string();
+        }
+        if let Some(v) = j.get("budget").and_then(|v| v.as_f64()) {
+            s.budget = v as usize;
+        }
+        if let Some(v) = j.get("seed").and_then(|v| v.as_f64()) {
+            s.seed = v as u64;
+        }
+        if let Some(v) = j.get("device").and_then(|v| v.as_str()) {
+            s.device = v.to_string();
+        }
+        if let Some(v) = j.get("kernel").and_then(|v| v.as_str()) {
+            s.kernel = v.to_string();
+        }
+        if let Some(v) = j.get("steps_per_epoch").and_then(|v| v.as_f64()) {
+            s.steps_per_epoch = v as usize;
+        }
+        if let Some(v) = j.get("step_scale").and_then(|v| v.as_f64()) {
+            s.step_scale = v;
+        }
+        if let Some(v) = j.get("pretrain_steps").and_then(|v| v.as_f64()) {
+            s.pretrain_steps = v as usize;
+        }
+        if let Some(v) = j.get("memory_limit_gb").and_then(|v| v.as_f64()) {
+            s.memory_limit_gb = v;
+        }
+        Ok(s)
+    }
+
+    pub fn load(path: &str) -> Result<Scenario> {
+        let text = std::fs::read_to_string(path)?;
+        let j = crate::util::json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("scenario {path}: {e}"))?;
+        Scenario::from_json(&j)
+    }
+
+    pub fn device_profile(&self) -> crate::hardware::DeviceProfile {
+        match self.device.as_str() {
+            "adreno740" | "mobile" => crate::hardware::DeviceProfile::adreno740(),
+            "cpu" => crate::hardware::DeviceProfile::host_cpu(),
+            _ => crate::hardware::DeviceProfile::a6000(),
+        }
+    }
+}
+
+pub fn parse_precision(s: &str) -> Result<QatPrecision> {
+    Ok(match s.to_ascii_lowercase().as_str() {
+        "w8a8" => QatPrecision::W8A8,
+        "w4a4" => QatPrecision::W4A4,
+        "w2a2" => QatPrecision::W2A2,
+        other => bail!("unknown precision '{other}'"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn parses_full_scenario() {
+        let j = json::parse(
+            r#"{"name": "t", "task": "kernel", "model": "cnn_m",
+                "precision": "w2a2", "optimizer": "bayesian", "budget": 6,
+                "seed": 3, "device": "adreno740", "kernel": "softmax:128",
+                "memory_limit_gb": 12}"#,
+        )
+        .unwrap();
+        let s = Scenario::from_json(&j).unwrap();
+        assert_eq!(s.track, Track::Kernel);
+        assert_eq!(s.precision, QatPrecision::W2A2);
+        assert_eq!(s.budget, 6);
+        assert_eq!(s.device_profile().name, "Adreno 740 (Snapdragon 8 Gen 2)");
+    }
+
+    #[test]
+    fn rejects_unknown_track() {
+        let j = json::parse(r#"{"task": "nope"}"#).unwrap();
+        assert!(Scenario::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,97 @@
+//! Task logs (paper §3.3: "HAQA generates task logs at the end of each
+//! task, providing users with a clear record of configurations, results,
+//! and optimization progress").
+//!
+//! One JSON file per task under `results/logs/`, containing every round's
+//! configuration, score, feedback, the agent's Thought text, and the
+//! Appendix-C cost line.
+
+use anyhow::Result;
+
+use crate::optimizers::Observation;
+use crate::util::json::Json;
+
+#[derive(Debug)]
+pub struct TaskLog {
+    pub name: String,
+    pub rounds: Vec<Json>,
+    pub summary: Json,
+}
+
+impl TaskLog {
+    pub fn new(name: &str) -> TaskLog {
+        TaskLog {
+            name: name.to_string(),
+            rounds: Vec::new(),
+            summary: Json::obj(),
+        }
+    }
+
+    pub fn record_round(&mut self, round: usize, obs: &Observation, thought: Option<&str>) {
+        let mut o = Json::obj();
+        o.set("round", Json::Num(round as f64));
+        o.set(
+            "config",
+            Json::from_pairs(
+                obs.config
+                    .iter()
+                    .map(|(k, v)| (k.clone(), v.to_json()))
+                    .collect(),
+            ),
+        );
+        o.set("score", Json::Num(obs.score));
+        if !obs.feedback.is_empty() {
+            o.set("feedback", Json::Str(obs.feedback.clone()));
+        }
+        if let Some(t) = thought {
+            o.set("thought", Json::Str(t.to_string()));
+        }
+        self.rounds.push(o);
+    }
+
+    pub fn set_summary(&mut self, key: &str, value: Json) {
+        self.summary.set(key, value);
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("task", Json::Str(self.name.clone()));
+        o.set("rounds", Json::Arr(self.rounds.clone()));
+        o.set("summary", self.summary.clone());
+        o
+    }
+
+    /// Write to `results/logs/<name>.json`.
+    pub fn save(&self) -> Result<std::path::PathBuf> {
+        let dir = std::path::Path::new("results").join("logs");
+        std::fs::create_dir_all(&dir)?;
+        let path = dir.join(format!("{}.json", self.name.replace(['/', ' '], "_")));
+        std::fs::write(&path, self.to_json().to_string_pretty())?;
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::search::spaces;
+
+    #[test]
+    fn log_accumulates_and_serializes() {
+        let space = spaces::resnet_qat();
+        let mut log = TaskLog::new("test task");
+        let mut obs = Observation::new(space.default_config(), 0.9);
+        obs.feedback = "{\"final_loss\": 0.3}".into();
+        log.record_round(0, &obs, Some("use defaults first"));
+        log.set_summary("best_score", Json::Num(0.9));
+        let j = log.to_json();
+        assert_eq!(j.req_arr("rounds").unwrap().len(), 1);
+        assert_eq!(
+            j.get("summary").unwrap().req_f64("best_score").unwrap(),
+            0.9
+        );
+        // Round-trips through the parser.
+        let text = j.to_string_pretty();
+        assert!(crate::util::json::parse(&text).is_ok());
+    }
+}

@@ -1,0 +1,248 @@
+//! The HAQA workflow (paper Figure 3): the iterative loop that combines the
+//! static+dynamic prompts, the agent (or a baseline optimizer), the
+//! evaluation substrate (real PJRT training / the hardware simulator), and
+//! the feedback path into the next round's dynamic prompt.
+//!
+//! `run_finetune` / `run_kernel` / `run_bitwidth` are the three tracks; the
+//! `run_joint` pipeline chains them the way the paper's Llama2-7b prompt
+//! does (fine-tune + deploy in one conversation, shared cost accounting).
+
+use anyhow::{bail, Result};
+
+use crate::agent::TaskKind;
+use crate::hardware::{adaptive, memory, KernelKind, ModelProfile, Workload};
+use crate::optimizers::{best, haqa::HaqaOptimizer, Observation, Optimizer};
+use crate::quant::Scheme;
+use crate::runtime::ArtifactSet;
+use crate::search::spaces;
+use crate::trainer::lm::{LmBase, QloraJob};
+use crate::trainer::qat::QatJob;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+use super::scenario::{Scenario, Track};
+use super::tasklog::TaskLog;
+
+pub struct Workflow<'a> {
+    pub set: &'a ArtifactSet,
+}
+
+#[derive(Debug)]
+pub struct TrackOutcome {
+    pub history: Vec<Observation>,
+    pub best_score: f64,
+    pub cost_report: Option<String>,
+    pub log_path: Option<std::path::PathBuf>,
+}
+
+impl<'a> Workflow<'a> {
+    pub fn new(set: &'a ArtifactSet) -> Workflow<'a> {
+        Workflow { set }
+    }
+
+    fn make_optimizer(&self, sc: &Scenario, kind: TaskKind, objective: Json) -> Result<Box<dyn Optimizer>> {
+        if sc.optimizer == "haqa" {
+            let mut h = HaqaOptimizer::with_seed(sc.seed ^ 0x4a9a)
+                .for_task(kind)
+                .with_objective(objective);
+            h.budget = sc.budget;
+            if kind != TaskKind::Finetune {
+                h = h.with_hardware(sc.device_profile().to_json());
+            }
+            Ok(Box::new(h))
+        } else {
+            crate::optimizers::by_name(&sc.optimizer)
+        }
+    }
+
+    /// Fine-tuning track (Table 1/2): optimizer proposes → trainer runs on
+    /// PJRT → accuracy + loss feedback threads back into the next round.
+    pub fn run_finetune(&self, sc: &Scenario) -> Result<TrackOutcome> {
+        let mut rng = Rng::new(sc.seed).split(0xf1);
+        let is_cnn = sc.track == Track::FinetuneCnn || sc.model.starts_with("cnn");
+        let space = if is_cnn {
+            spaces::resnet_qat()
+        } else {
+            spaces::llama_qlora()
+        };
+        let mut objective = Json::obj();
+        objective.set("model", Json::Str(sc.model.clone()));
+        objective.set(
+            "bits",
+            Json::Num(if is_cnn {
+                sc.precision.wbits as f64
+            } else {
+                sc.bits as f64
+            }),
+        );
+        let mut opt = self.make_optimizer(sc, TaskKind::Finetune, objective)?;
+
+        let lm_base = if is_cnn {
+            None
+        } else {
+            // The paper fine-tunes pretrained checkpoints: pretrain the tiny
+            // base once (disk-cached) before the QLoRA rounds.
+            Some(LmBase::pretrained(self.set, sc.seed, sc.pretrain_steps)?)
+        };
+        let mut log = TaskLog::new(&format!("{}_finetune", sc.name));
+        let mut history: Vec<Observation> = Vec::new();
+        for round in 0..sc.budget {
+            let cfg = opt.propose(&space, &history, &mut rng);
+            let (score, feedback) = if is_cnn {
+                let job = QatJob {
+                    set: self.set,
+                    model: &sc.model,
+                    precision: sc.precision,
+                    seed: sc.seed,
+                    steps_per_epoch: sc.steps_per_epoch,
+                };
+                let r = job.run(&cfg)?;
+                (r.accuracy, r.feedback())
+            } else {
+                let job = QloraJob {
+                    set: self.set,
+                    base: lm_base.as_ref().unwrap(),
+                    bits: sc.bits,
+                    seed: sc.seed,
+                    step_scale: sc.step_scale,
+                };
+                let r = job.run(&cfg)?;
+                (r.score(), r.feedback())
+            };
+            let mut obs = Observation::new(cfg, score);
+            obs.feedback = feedback;
+            log.record_round(round, &obs, None);
+            history.push(obs);
+        }
+        self.finish(sc, history, log)
+    }
+
+    /// Kernel-tuning track (Table 3): simulated hardware latency feedback.
+    pub fn run_kernel(&self, sc: &Scenario) -> Result<TrackOutcome> {
+        let mut rng = Rng::new(sc.seed).split(0xde);
+        let space = spaces::kernel_exec();
+        let (kname, kbatch) = sc
+            .kernel
+            .split_once(':')
+            .unwrap_or((sc.kernel.as_str(), "64"));
+        let kernel = KernelKind::parse(kname)
+            .ok_or_else(|| anyhow::anyhow!("unknown kernel '{kname}'"))?;
+        let workload = Workload::new(kernel, kbatch.parse().unwrap_or(64));
+        let profile = sc.device_profile();
+        let tuner = crate::deploy::KernelTuner {
+            profile: &profile,
+            workload,
+            noise_seed: sc.seed,
+        };
+        let mut objective = Json::obj();
+        objective.set("kernel", Json::Str(kname.to_string()));
+        objective.set("size", Json::Str(workload.size_label()));
+        let mut opt = self.make_optimizer(sc, TaskKind::KernelTuning, objective)?;
+        let mut log = TaskLog::new(&format!("{}_kernel", sc.name));
+        let mut history: Vec<Observation> = Vec::new();
+        for round in 0..sc.budget {
+            let cfg = opt.propose(&space, &history, &mut rng);
+            let lat = tuner.measure(&cfg);
+            let mut obs = Observation::new(cfg, -lat);
+            obs.feedback = format!("{{\"latency_us\": {lat:.3}}}");
+            log.record_round(round, &obs, None);
+            history.push(obs);
+        }
+        self.finish(sc, history, log)
+    }
+
+    /// Bit-width selection track (Table 5 / §4.4): one agent decision,
+    /// cross-checked against the analytic selector.
+    pub fn run_bitwidth(&self, sc: &Scenario) -> Result<TrackOutcome> {
+        let mut rng = Rng::new(sc.seed).split(0xb1);
+        let space = spaces::bitwidth();
+        let model = model_by_name(&sc.model)?;
+        let dev = sc.device_profile();
+        let mut objective = Json::obj();
+        objective.set("model", Json::Str(model.name.clone()));
+        objective.set("memory_limit_gb", Json::Num(sc.memory_limit_gb));
+        let mut mem = Json::obj();
+        for s in Scheme::ALL {
+            mem.set(s.label(), Json::Num(memory::footprint_gb(&model, s)));
+        }
+        objective.set("mem_gb", mem);
+        let mut opt = self.make_optimizer(sc, TaskKind::Bitwidth, objective)?;
+        let cfg = opt.propose(&space, &[], &mut rng);
+        let picked = cfg.get("quant").and_then(|v| v.as_str().map(|s| s.to_string()));
+        let analytic = adaptive::select(&model, &dev, sc.memory_limit_gb);
+
+        let score = picked
+            .as_deref()
+            .and_then(Scheme::parse)
+            .map(|s| adaptive::tokens_per_sec(&model, s, &dev))
+            .unwrap_or(0.0);
+        let mut obs = Observation::new(cfg, score);
+        obs.feedback = format!(
+            "{{\"analytic_choice\": \"{}\", \"rationale\": {}}}",
+            analytic
+                .scheme
+                .map(|s| s.label().to_string())
+                .unwrap_or_else(|| "NONE".into()),
+            Json::Str(analytic.rationale.clone()).to_string()
+        );
+        let mut log = TaskLog::new(&format!("{}_bitwidth", sc.name));
+        log.record_round(0, &obs, None);
+        self.finish(sc, vec![obs], log)
+    }
+
+    /// The joint pipeline (paper Fig. 1b / Fig. 3): fine-tune, then tune the
+    /// deployment kernels, then select the bit-width — one shared budget and
+    /// cost account, like the paper's combined Llama2-7b prompt.
+    pub fn run_joint(&self, sc: &Scenario) -> Result<(TrackOutcome, TrackOutcome, TrackOutcome)> {
+        let ft = self.run_finetune(sc)?;
+        let kt = self.run_kernel(sc)?;
+        let bw = self.run_bitwidth(sc)?;
+        Ok((ft, kt, bw))
+    }
+
+    pub fn run(&self, sc: &Scenario) -> Result<TrackOutcome> {
+        match sc.track {
+            Track::FinetuneCnn | Track::FinetuneLm => self.run_finetune(sc),
+            Track::Kernel => self.run_kernel(sc),
+            Track::Bitwidth => self.run_bitwidth(sc),
+            Track::Joint => {
+                let (ft, _, _) = self.run_joint(sc)?;
+                Ok(ft)
+            }
+        }
+    }
+
+    fn finish(
+        &self,
+        _sc: &Scenario,
+        history: Vec<Observation>,
+        mut log: TaskLog,
+    ) -> Result<TrackOutcome> {
+        if history.is_empty() {
+            bail!("empty history");
+        }
+        let best_score = best(&history).map(|o| o.score).unwrap_or(f64::NAN);
+        log.set_summary("best_score", Json::Num(best_score));
+        log.set_summary("rounds", Json::Num(history.len() as f64));
+        let log_path = log.save().ok();
+        Ok(TrackOutcome {
+            history,
+            best_score,
+            cost_report: None,
+            log_path,
+        })
+    }
+}
+
+pub fn model_by_name(name: &str) -> Result<ModelProfile> {
+    Ok(match name.to_ascii_lowercase().as_str() {
+        "llama2-7b" | "llama2_7b" => ModelProfile::llama2_7b(),
+        "llama2-13b" | "llama2_13b" => ModelProfile::llama2_13b(),
+        "llama3.2-3b" | "llama32_3b" => ModelProfile::llama32_3b(),
+        "llama3-8b" | "llama3_8b" => ModelProfile::llama3_8b(),
+        "openllama-3b" | "openllama_3b" => ModelProfile::openllama_3b(),
+        "tinyllama-1.1b" | "tinyllama_1_1b" => ModelProfile::tinyllama_1_1b(),
+        "gpt2-large" | "gpt2_large" => ModelProfile::gpt2_large(),
+        other => bail!("unknown deployment model '{other}'"),
+    })
+}

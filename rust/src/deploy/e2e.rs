@@ -1,0 +1,106 @@
+//! End-to-end deployment throughput (paper Table 4 / Figure 5).
+//!
+//! Combines the §3.4 roofline token-time model with the kernel-level
+//! execution-config penalty (matmul-dominated, per §4.3's "90% of inference
+//! runtime"): `tokens/s = 1000 / (token_time_ms * config_penalty)`.
+
+use crate::hardware::latency::e2e_config_penalty;
+use crate::hardware::{adaptive, DeviceProfile, ExecConfig, ModelProfile};
+use crate::quant::Scheme;
+
+/// Simulated decode throughput for a model/scheme/device/exec-config.
+pub fn tokens_per_sec(
+    model: &ModelProfile,
+    scheme: Scheme,
+    dev: &DeviceProfile,
+    exec: &ExecConfig,
+) -> f64 {
+    let base_ms = adaptive::token_time_ms(model, scheme, dev);
+    1000.0 / (base_ms * e2e_config_penalty(dev, exec))
+}
+
+/// Figure 5 pair: (llama.cpp default, agent-tuned) throughput.
+pub fn default_vs_tuned(
+    model: &ModelProfile,
+    scheme: Scheme,
+    dev: &DeviceProfile,
+    tuned: &ExecConfig,
+) -> (f64, f64) {
+    (
+        tokens_per_sec(model, scheme, dev, &ExecConfig::llamacpp_default()),
+        tokens_per_sec(model, scheme, dev, tuned),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::exec::MemHier;
+
+    fn tuned() -> ExecConfig {
+        ExecConfig {
+            griddim: 256,
+            blockdim: 128,
+            tiling: 64,
+            unroll: 4,
+            simd_width: 16,
+            row_major: true,
+            transpose: false,
+            prefetch: 8,
+            memory_hierarchy: MemHier::Shared,
+            loop_order: crate::hardware::exec::LoopOrder::Mnk,
+        }
+    }
+
+    /// Figure 5's headline: agent-optimized 1.2-1.5x over defaults on the
+    /// A6000, INT4 > INT8 > FP16 ordering.
+    #[test]
+    fn figure5_shape() {
+        let dev = DeviceProfile::a6000();
+        for m in ModelProfile::figure5_models() {
+            let (d, t) = default_vs_tuned(&m, Scheme::INT4, &dev, &tuned());
+            let speedup = t / d;
+            assert!(
+                (1.1..=1.8).contains(&speedup),
+                "{}: speedup {speedup:.2}",
+                m.name
+            );
+            let fp16 = tokens_per_sec(&m, Scheme::FP16, &dev, &tuned());
+            let int8 = tokens_per_sec(&m, Scheme::INT8, &dev, &tuned());
+            let int4 = tokens_per_sec(&m, Scheme::INT4, &dev, &tuned());
+            assert!(int4 > int8 && int8 > fp16, "{}: {fp16} {int8} {int4}", m.name);
+        }
+    }
+
+    /// Table 4's shape on mobile: INT8 >= FP16 > INT4.
+    #[test]
+    fn table4_shape() {
+        let dev = DeviceProfile::adreno740();
+        for m in ModelProfile::table4_models() {
+            let fp16 = tokens_per_sec(&m, Scheme::FP16, &dev, &tuned());
+            let int8 = tokens_per_sec(&m, Scheme::INT8, &dev, &tuned());
+            let int4 = tokens_per_sec(&m, Scheme::INT4, &dev, &tuned());
+            assert!(int8 > int4, "{}: int8 {int8} int4 {int4}", m.name);
+            assert!(fp16 > int4, "{}: fp16 {fp16} int4 {int4}", m.name);
+        }
+    }
+
+    /// Bigger models decode slower under every scheme.
+    #[test]
+    fn throughput_monotone_in_model_size() {
+        let dev = DeviceProfile::a6000();
+        let small = tokens_per_sec(
+            &ModelProfile::llama32_3b(),
+            Scheme::INT8,
+            &dev,
+            &ExecConfig::llamacpp_default(),
+        );
+        let big = tokens_per_sec(
+            &ModelProfile::llama2_13b(),
+            Scheme::INT8,
+            &dev,
+            &ExecConfig::llamacpp_default(),
+        );
+        assert!(small > big);
+    }
+}

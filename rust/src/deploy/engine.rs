@@ -1,0 +1,108 @@
+//! Token-generation engine — the llama.cpp analogue (DESIGN.md §2).
+//!
+//! Serves the tiny LM end-to-end on the PJRT CPU client: the decode-step
+//! artifact (whose forward pass is built *entirely* from the Pallas
+//! kernels) is executed once per generated token over a sliding context
+//! window.  Latency is measured for real; the qmatmul tile schedule is
+//! selectable per the AOT'd variants, which is the deployment tunable.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::runtime::{ArtifactSet, Tensor};
+use crate::trainer::data::{SEQ, VOCAB};
+use crate::trainer::lm::R_MAX;
+
+pub struct TokenEngine<'a> {
+    set: &'a ArtifactSet,
+    /// Decode artifact name (`lm_decode_default` or a tile variant).
+    pub artifact: String,
+    /// frozen inputs: base ++ lora in manifest order.
+    frozen: Vec<Tensor>,
+    pub bits: f32,
+    rank_mask: Tensor,
+    lora_scale: f32,
+}
+
+#[derive(Debug, Clone)]
+pub struct GenerationStats {
+    pub tokens: Vec<usize>,
+    pub per_token_us: Vec<f64>,
+}
+
+impl GenerationStats {
+    pub fn tokens_per_sec(&self) -> f64 {
+        let total_s: f64 = self.per_token_us.iter().sum::<f64>() / 1e6;
+        self.tokens.len() as f64 / total_s.max(1e-12)
+    }
+
+    pub fn median_token_us(&self) -> f64 {
+        crate::util::stats::median(&self.per_token_us)
+    }
+}
+
+impl<'a> TokenEngine<'a> {
+    pub fn new(
+        set: &'a ArtifactSet,
+        artifact: &str,
+        base: &[Tensor],
+        lora: &[Tensor],
+        bits: f32,
+        lora_r: usize,
+        lora_alpha: f64,
+    ) -> Result<TokenEngine<'a>> {
+        let mut frozen = Vec::with_capacity(base.len() + lora.len());
+        frozen.extend_from_slice(base);
+        frozen.extend_from_slice(lora);
+        let mut rank_mask = Tensor::zeros(&[R_MAX]);
+        for i in 0..lora_r.min(R_MAX) {
+            rank_mask.data[i] = 1.0;
+        }
+        Ok(TokenEngine {
+            set,
+            artifact: artifact.to_string(),
+            frozen,
+            bits,
+            rank_mask,
+            lora_scale: (lora_alpha / lora_r.max(1) as f64) as f32,
+        })
+    }
+
+    /// Greedy-decode `n_tokens` continuations of `prompt` (token ids),
+    /// timing each decode step.
+    pub fn generate(&self, prompt: &[usize], n_tokens: usize) -> Result<GenerationStats> {
+        let exec = self.set.executor(&self.artifact)?;
+        let mut window: Vec<usize> = vec![0; SEQ];
+        let start = SEQ.saturating_sub(prompt.len());
+        for (i, &t) in prompt.iter().rev().take(SEQ).rev().enumerate() {
+            window[start + i] = t % VOCAB;
+        }
+        let mut tokens = Vec::with_capacity(n_tokens);
+        let mut per_token_us = Vec::with_capacity(n_tokens);
+        for _ in 0..n_tokens {
+            let mut x = Tensor::zeros(&[1, SEQ, VOCAB]);
+            for (t, &id) in window.iter().enumerate() {
+                x.data[t * VOCAB + id] = 1.0;
+            }
+            let mut named: HashMap<&str, Tensor> = HashMap::new();
+            named.insert("tokens", x);
+            named.insert("rank_mask", self.rank_mask.clone());
+            named.insert("bits", Tensor::scalar(self.bits));
+            named.insert("lora_scale", Tensor::scalar(self.lora_scale));
+            let t0 = Instant::now();
+            let (_, out) = exec.step(Vec::new(), &self.frozen, &named)?;
+            per_token_us.push(t0.elapsed().as_secs_f64() * 1e6);
+            let logits = &out[0]; // (V,)
+            let next = logits.argmax_last()[0];
+            tokens.push(next);
+            window.rotate_left(1);
+            window[SEQ - 1] = next;
+        }
+        Ok(GenerationStats {
+            tokens,
+            per_token_us,
+        })
+    }
+}

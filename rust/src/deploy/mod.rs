@@ -1,0 +1,9 @@
+//! Deployment side: kernel tuning, the token-generation engine (llama.cpp
+//! analogue over PJRT), and end-to-end throughput aggregation.
+
+pub mod engine;
+pub mod e2e;
+pub mod tuner;
+
+pub use engine::TokenEngine;
+pub use tuner::KernelTuner;

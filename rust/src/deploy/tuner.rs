@@ -1,0 +1,123 @@
+//! Per-kernel execution-config tuning (paper Table 3 track).
+//!
+//! Two evaluation paths:
+//! * [`KernelTuner`] — the simulated A6000/Adreno path: any `kernel_exec`
+//!   configuration is scored by the hardware latency model (10 averaged
+//!   noisy measurements, like the paper's protocol);
+//! * [`PallasTuner`] — the real-artifact path: the qmatmul tile-schedule
+//!   variants AOT'd by `aot.py` are executed on the PJRT CPU client and
+//!   timed for real (the TPU-analogue demo of the same loop; DESIGN.md
+//!   §Hardware-Adaptation).
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::hardware::{kernel_latency_us, DeviceProfile, ExecConfig, Workload};
+use crate::optimizers::{Observation, Optimizer};
+use crate::runtime::{ArtifactSet, Tensor};
+use crate::search::{Config, Space};
+use crate::util::rng::Rng;
+
+/// Averaged measurement count (paper §4.1: "each experiment is repeated 10
+/// times and the average result is taken").
+pub const REPEATS: usize = 10;
+
+pub struct KernelTuner<'a> {
+    pub profile: &'a DeviceProfile,
+    pub workload: Workload,
+    pub noise_seed: u64,
+}
+
+impl<'a> KernelTuner<'a> {
+    /// Mean simulated latency (µs) of an execution config.
+    pub fn measure(&self, cfg: &Config) -> f64 {
+        let exec = ExecConfig::from_config(cfg);
+        let mut rng = Rng::new(self.noise_seed).split(exec.blockdim as u64);
+        let mut acc = 0.0;
+        for _ in 0..REPEATS {
+            acc += kernel_latency_us(&self.workload, self.profile, &exec, Some(&mut rng));
+        }
+        acc / REPEATS as f64
+    }
+
+    /// Drive an optimizer for `rounds`; score = −latency (maximized).
+    pub fn tune(
+        &self,
+        opt: &mut dyn Optimizer,
+        space: &Space,
+        rounds: usize,
+        rng: &mut Rng,
+    ) -> Vec<Observation> {
+        let mut history: Vec<Observation> = Vec::with_capacity(rounds);
+        for _ in 0..rounds {
+            let cfg = opt.propose(space, &history, rng);
+            let lat = self.measure(&cfg);
+            let mut obs = Observation::new(cfg, -lat);
+            obs.feedback = format!("{{\"latency_us\": {lat:.3}}}");
+            history.push(obs);
+        }
+        history
+    }
+
+    /// Best (config, latency µs) of a tuning trace.
+    pub fn best(history: &[Observation]) -> (Config, f64) {
+        let best = crate::optimizers::best(history).expect("non-empty history");
+        (best.config.clone(), -best.score)
+    }
+}
+
+/// Real-latency tuning over the AOT'd Pallas tile variants.
+pub struct PallasTuner<'a> {
+    pub set: &'a ArtifactSet,
+}
+
+#[derive(Debug, Clone)]
+pub struct PallasMeasurement {
+    pub variant: String,
+    pub tile: Vec<i64>,
+    pub median_us: f64,
+}
+
+impl<'a> PallasTuner<'a> {
+    /// Measure every `micro_matmul_b64_*` tile variant on the PJRT CPU
+    /// client; returns measurements sorted fastest-first.
+    pub fn measure_variants(&self, iters: usize) -> Result<Vec<PallasMeasurement>> {
+        let mut out = Vec::new();
+        let mut rng = Rng::new(0xbe);
+        for art in self.set.family("micro") {
+            if !art.name.starts_with("micro_matmul_b64_") {
+                continue;
+            }
+            let exec = self.set.executor(&art.name)?;
+            let mut named: HashMap<&str, Tensor> = HashMap::new();
+            for spec in &art.inputs {
+                let mut t = Tensor::zeros(&spec.shape);
+                rng.fill_uniform(&mut t.data);
+                named.insert(spec.name.as_str(), t);
+            }
+            let args = exec.build_args(&[], &[], &named)?;
+            // Warmup + timed runs.
+            exec.run_raw(&args)?;
+            let mut samples = Vec::with_capacity(iters);
+            for _ in 0..iters {
+                let t0 = std::time::Instant::now();
+                exec.run_raw(&args)?;
+                samples.push(t0.elapsed().as_secs_f64() * 1e6);
+            }
+            let tile = art
+                .meta
+                .get("tile")
+                .and_then(|t| t.as_arr())
+                .map(|a| a.iter().map(|v| v.as_i64().unwrap_or(0)).collect())
+                .unwrap_or_default();
+            out.push(PallasMeasurement {
+                variant: art.name.clone(),
+                tile,
+                median_us: crate::util::stats::median(&samples),
+            });
+        }
+        out.sort_by(|a, b| a.median_us.partial_cmp(&b.median_us).unwrap());
+        Ok(out)
+    }
+}

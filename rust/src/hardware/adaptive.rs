@@ -1,0 +1,151 @@
+//! The analytic §3.4 adaptive-quantization strategy selector.
+//!
+//! Same decision procedure the agent's bit-width policy implements, exposed
+//! as a plain function so (a) Table 5 can be generated without an agent in
+//! the loop, and (b) tests can cross-check that the agent's hardware
+//! analysis agrees with the analytic model (§4.4's "after extensive
+//! validation, HAQA's recommendations proved accurate").
+
+use crate::quant::Scheme;
+
+use super::memory;
+use super::models::ModelProfile;
+use super::profile::DeviceProfile;
+
+/// Decode-path token time (ms) for a model/scheme/device — the §4.4
+/// roofline: memory streaming + per-parameter compute overhead + per-layer
+/// launch overhead.  On devices without native INT4 the overhead term
+/// dominates the bandwidth savings, which is exactly the counterintuitive
+/// INT8-beats-INT4 result.
+pub fn token_time_ms(model: &ModelProfile, scheme: Scheme, dev: &DeviceProfile) -> f64 {
+    let params = model.params_b * 1e9;
+    let bytes = params * scheme.bytes_per_weight();
+    let mem_ms = bytes / (dev.mem_bw_gbps * 1e9) * 1e3;
+    let compute_ms = model.params_b * dev.ov_ps(scheme);
+    let launch_ms = model.layers as f64 * dev.launch_overhead_ms;
+    mem_ms + compute_ms + launch_ms
+}
+
+pub fn tokens_per_sec(model: &ModelProfile, scheme: Scheme, dev: &DeviceProfile) -> f64 {
+    1000.0 / token_time_ms(model, scheme, dev)
+}
+
+#[derive(Debug, Clone)]
+pub struct StrategyChoice {
+    pub scheme: Option<Scheme>,
+    pub rationale: String,
+    /// (scheme, fits, tokens/s) per candidate, fastest-first.
+    pub candidates: Vec<(Scheme, bool, f64)>,
+}
+
+/// Pick the fastest quantization scheme that fits `limit_gb` on `dev`.
+pub fn select(model: &ModelProfile, dev: &DeviceProfile, limit_gb: f64) -> StrategyChoice {
+    let mut candidates: Vec<(Scheme, bool, f64)> = Scheme::ALL
+        .iter()
+        .map(|&s| {
+            (
+                s,
+                memory::fits(model, s, limit_gb),
+                tokens_per_sec(model, s, dev),
+            )
+        })
+        .collect();
+    candidates.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap());
+    let pick = candidates.iter().find(|(_, fits, _)| *fits).map(|(s, _, _)| *s);
+    let rationale = match pick {
+        Some(Scheme::INT8) if !dev.int4_native => format!(
+            "{} lacks native INT4: INT4 operands must be unpacked \
+             (shift/AND/OR) and converted to FP16 before accumulation, so \
+             INT4 falls off the accelerated path. INT8 hits the native \
+             integer pipeline and fits the {limit_gb} GB budget.",
+            dev.name
+        ),
+        Some(s) => format!(
+            "{} supports {} on its fastest execution path (tensor-core MMA \
+             with FP32 accumulation) and it fits the {limit_gb} GB budget.",
+            dev.name,
+            s.label()
+        ),
+        None => format!(
+            "no quantization type fits {limit_gb} GB for {}; deployment \
+             rejected.",
+            model.name
+        ),
+    };
+    StrategyChoice {
+        scheme: pick,
+        rationale,
+        candidates,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// §4.4's headline: INT8 beats INT4 on the Adreno 740 for every
+    /// Table 4 model, while INT4 wins on the A6000.
+    #[test]
+    fn mobile_int8_beats_int4_desktop_opposite() {
+        let mob = DeviceProfile::adreno740();
+        let gpu = DeviceProfile::a6000();
+        for m in ModelProfile::table4_models() {
+            assert!(
+                tokens_per_sec(&m, Scheme::INT8, &mob)
+                    > tokens_per_sec(&m, Scheme::INT4, &mob),
+                "{}: INT4 should lose on mobile",
+                m.name
+            );
+        }
+        for m in ModelProfile::figure5_models() {
+            assert!(
+                tokens_per_sec(&m, Scheme::INT4, &gpu)
+                    > tokens_per_sec(&m, Scheme::INT8, &gpu),
+                "{}: INT4 should win on the A6000",
+                m.name
+            );
+        }
+    }
+
+    /// Table 4 magnitudes: within 2x of the paper's mobile numbers and the
+    /// right ordering (INT8 ≥ FP16 > INT4 in throughput-per-scheme shape).
+    #[test]
+    fn table4_magnitudes_plausible() {
+        let mob = DeviceProfile::adreno740();
+        let paper: &[(fn() -> ModelProfile, [f64; 3])] = &[
+            (ModelProfile::openllama_3b, [5.11, 5.25, 4.95]),
+            (ModelProfile::tinyllama_1_1b, [11.17, 11.23, 10.43]),
+            (ModelProfile::gpt2_large, [13.41, 13.20, 12.29]),
+        ];
+        for (mk, rates) in paper {
+            let m = mk();
+            for (s, want) in Scheme::ALL.iter().zip(rates) {
+                let got = tokens_per_sec(&m, *s, &mob);
+                assert!(
+                    got > want * 0.5 && got < want * 2.0,
+                    "{} {}: {got:.2} vs paper {want}",
+                    m.name,
+                    s.label()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn selector_respects_memory_and_rejects() {
+        let gpu = DeviceProfile::a6000();
+        let m = ModelProfile::llama2_13b();
+        assert_eq!(select(&m, &gpu, 12.0).scheme, Some(Scheme::INT4));
+        assert_eq!(select(&m, &gpu, 20.0).scheme, Some(Scheme::INT4));
+        assert_eq!(select(&m, &gpu, 4.0).scheme, None);
+    }
+
+    #[test]
+    fn mobile_selector_explains_the_int4_trap() {
+        let mob = DeviceProfile::adreno740();
+        let m = ModelProfile::openllama_3b();
+        let choice = select(&m, &mob, 10.0);
+        assert_eq!(choice.scheme, Some(Scheme::INT8));
+        assert!(choice.rationale.contains("unpack"), "{}", choice.rationale);
+    }
+}

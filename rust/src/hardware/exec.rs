@@ -1,0 +1,174 @@
+//! Typed execution configuration — the deployment tunable (paper §3.1's
+//! kernel execution parameters + execution strategy).
+
+use crate::search::{Config, Space};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExecConfig {
+    pub griddim: u32,
+    pub blockdim: u32,
+    pub tiling: u32,
+    pub unroll: u32,
+    pub simd_width: u32,
+    pub row_major: bool,
+    pub transpose: bool,
+    pub prefetch: u32,
+    pub memory_hierarchy: MemHier,
+    pub loop_order: LoopOrder,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemHier {
+    Global,
+    Shared,
+    Local,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LoopOrder {
+    Mnk,
+    Mkn,
+    Nmk,
+    Nkm,
+    Kmn,
+    Knm,
+}
+
+impl LoopOrder {
+    fn parse(s: &str) -> LoopOrder {
+        match s {
+            "mkn" => LoopOrder::Mkn,
+            "nmk" => LoopOrder::Nmk,
+            "nkm" => LoopOrder::Nkm,
+            "kmn" => LoopOrder::Kmn,
+            "knm" => LoopOrder::Knm,
+            _ => LoopOrder::Mnk,
+        }
+    }
+
+    /// Relative badness for the matmul inner loop (k-innermost orders keep
+    /// the accumulator in registers; k-outermost thrash the output tile).
+    pub fn matmul_badness(&self) -> f64 {
+        match self {
+            LoopOrder::Mnk | LoopOrder::Nmk => 0.0,
+            LoopOrder::Mkn | LoopOrder::Nkm => 0.08,
+            LoopOrder::Kmn | LoopOrder::Knm => 0.15,
+        }
+    }
+}
+
+impl ExecConfig {
+    /// llama.cpp's stock launch configuration — the "Default" column of
+    /// Table 3 (and the default of `search::spaces::kernel_exec`).
+    pub fn llamacpp_default() -> ExecConfig {
+        ExecConfig {
+            griddim: 32,
+            blockdim: 64,
+            tiling: 16,
+            unroll: 2,
+            simd_width: 4,
+            row_major: true,
+            transpose: false,
+            prefetch: 0,
+            memory_hierarchy: MemHier::Global,
+            loop_order: LoopOrder::Mnk,
+        }
+    }
+
+    /// Parse from a `kernel_exec` space configuration.
+    pub fn from_config(cfg: &Config) -> ExecConfig {
+        let geti = |k: &str, d: i64| cfg.get(k).map(|v| v.as_i64()).unwrap_or(d) as u32;
+        let gets = |k: &str, d: &str| {
+            cfg.get(k)
+                .and_then(|v| v.as_str().map(|s| s.to_string()))
+                .unwrap_or_else(|| d.to_string())
+        };
+        ExecConfig {
+            griddim: geti("griddim_x", 32).max(1),
+            blockdim: geti("blockdim_x", 64).max(1),
+            tiling: geti("tiling_size", 16).max(1),
+            unroll: geti("unroll", 2).max(1),
+            simd_width: geti("simd_width", 4).max(1),
+            row_major: gets("layout", "row_major") == "row_major",
+            transpose: gets("transpose", "no") == "yes",
+            prefetch: geti("prefetch", 0),
+            memory_hierarchy: match gets("memory_hierarchy", "global").as_str() {
+                "shared" => MemHier::Shared,
+                "local" => MemHier::Local,
+                _ => MemHier::Global,
+            },
+            loop_order: LoopOrder::parse(&gets("loop_order", "mnk")),
+        }
+    }
+
+    /// Render back into a `kernel_exec` configuration (for prompts/logs).
+    pub fn to_config(&self, space: &Space) -> Config {
+        use crate::search::param::Value;
+        let mut cfg = Config::new();
+        cfg.insert("griddim_x".into(), Value::Int(self.griddim as i64));
+        cfg.insert("blockdim_x".into(), Value::Int(self.blockdim as i64));
+        cfg.insert("tiling_size".into(), Value::Int(self.tiling as i64));
+        cfg.insert("unroll".into(), Value::Int(self.unroll as i64));
+        cfg.insert("simd_width".into(), Value::Int(self.simd_width as i64));
+        cfg.insert(
+            "layout".into(),
+            Value::Cat(if self.row_major { "row_major" } else { "col_major" }.into()),
+        );
+        cfg.insert(
+            "transpose".into(),
+            Value::Cat(if self.transpose { "yes" } else { "no" }.into()),
+        );
+        cfg.insert("prefetch".into(), Value::Int(self.prefetch as i64));
+        cfg.insert(
+            "memory_hierarchy".into(),
+            Value::Cat(
+                match self.memory_hierarchy {
+                    MemHier::Global => "global",
+                    MemHier::Shared => "shared",
+                    MemHier::Local => "local",
+                }
+                .into(),
+            ),
+        );
+        cfg.insert(
+            "loop_order".into(),
+            Value::Cat(
+                match self.loop_order {
+                    LoopOrder::Mnk => "mnk",
+                    LoopOrder::Mkn => "mkn",
+                    LoopOrder::Nmk => "nmk",
+                    LoopOrder::Nkm => "nkm",
+                    LoopOrder::Kmn => "kmn",
+                    LoopOrder::Knm => "knm",
+                }
+                .into(),
+            ),
+        );
+        space.repair(&cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::search::spaces;
+
+    #[test]
+    fn default_matches_space_default() {
+        let space = spaces::kernel_exec();
+        let from_space = ExecConfig::from_config(&space.default_config());
+        assert_eq!(from_space, ExecConfig::llamacpp_default());
+    }
+
+    #[test]
+    fn config_roundtrip() {
+        let space = spaces::kernel_exec();
+        let mut rng = crate::util::rng::Rng::new(3);
+        for _ in 0..50 {
+            let cfg = space.sample(&mut rng);
+            let exec = ExecConfig::from_config(&cfg);
+            let back = exec.to_config(&space);
+            assert_eq!(ExecConfig::from_config(&back), exec);
+        }
+    }
+}

@@ -1,0 +1,228 @@
+//! The kernel latency model — the Table 3 testbed substitution.
+//!
+//! Shape: `latency = base_us * (1 + κ * badness(exec))` where `badness ≥ 0`
+//! sums per-knob suboptimality terms (occupancy, tile reuse vs shared-memory
+//! capacity, unroll vs register pressure, memory hierarchy placement,
+//! coalescing, loop order), and the pair (base_us, κ) is **self-calibrated**
+//! per workload so that:
+//!
+//! * the llama.cpp default configuration reproduces the paper's measured
+//!   *default* latency exactly, and
+//! * a perfectly tuned configuration (badness → 0) reproduces the paper's
+//!   *HAQA* latency exactly.
+//!
+//! A real tuner therefore lands somewhere in between, and the *shape* of
+//! Table 3 (who wins, by what factor, which sizes are most tunable) is
+//! preserved by construction while the search problem stays non-trivial
+//! (10 interacting knobs, a narrow optimum, rollback-worthy cliffs).
+
+use crate::util::rng::Rng;
+
+use super::exec::{ExecConfig, MemHier};
+use super::profile::{DeviceKind, DeviceProfile};
+use super::workload::{calibrated, KernelKind, Workload};
+
+/// Sum of per-knob suboptimality terms (0 = perfectly tuned).
+pub fn badness(w: &Workload, p: &DeviceProfile, e: &ExecConfig) -> f64 {
+    let mut b = 0.0;
+
+    // --- launch geometry / occupancy ---------------------------------------
+    let opt_block: f64 = match p.kind {
+        DeviceKind::DesktopGpu => {
+            if w.rows() >= 64 || w.kernel.is_matmul() {
+                128.0
+            } else {
+                64.0
+            }
+        }
+        DeviceKind::MobileGpu => 64.0,
+        DeviceKind::Cpu => 16.0,
+    };
+    let blk = e.blockdim as f64;
+    b += 0.35 * ((blk.log2() - opt_block.log2()).abs() / 3.0).powf(1.4);
+    // Register pressure: too many threads * unroll spills.
+    let regs_needed = e.blockdim as f64 * e.unroll as f64 * 32.0;
+    if p.registers_per_sm > 0 && regs_needed > p.registers_per_sm as f64 {
+        b += 0.35 * (regs_needed / p.registers_per_sm as f64 - 1.0).min(1.5);
+    }
+
+    // Grid utilization: enough blocks to cover the work and the SMs.
+    let work_units = (w.rows() as f64 / 4.0).max(1.0) * if w.kernel.is_matmul() { 16.0 } else { 1.0 };
+    let needed_blocks = work_units.max(p.sm_count as f64);
+    let grid = e.griddim as f64;
+    if grid < needed_blocks {
+        b += 0.30 * ((needed_blocks / grid).log2() / 6.0).min(1.0);
+    } else if grid > 4.0 * needed_blocks {
+        b += 0.10 * ((grid / (4.0 * needed_blocks)).log2() / 4.0).min(1.0);
+    }
+
+    // --- tiling (data reuse vs shared-memory capacity) ----------------------
+    if w.kernel.is_matmul() {
+        let opt_tile: f64 = if p.kind == DeviceKind::MobileGpu { 32.0 } else { 64.0 };
+        let t = e.tiling as f64;
+        b += 0.40 * ((t.log2() - opt_tile.log2()).abs() / 3.0).powf(1.3);
+        let tile_bytes = 2.0 * t * t * 4.0;
+        if tile_bytes > p.shared_mem_kb as f64 * 1024.0 {
+            b += 0.5; // shared-memory overflow cliff
+        }
+        b += e.loop_order.matmul_badness();
+        // Memory hierarchy: the inner tile belongs in shared memory.
+        b += match e.memory_hierarchy {
+            MemHier::Shared => 0.0,
+            MemHier::Local => 0.15,
+            MemHier::Global => 0.35,
+        };
+        // Column-major weight access is uncoalesced unless pre-transposed.
+        if !e.row_major && !e.transpose {
+            b += 0.12;
+        }
+    } else {
+        // Elementwise/rowwise kernels: modest tile sensitivity, global is
+        // fine (a staging copy through shared memory just adds traffic).
+        let opt_tile = 32.0_f64;
+        b += 0.10 * ((e.tiling as f64).log2() - opt_tile.log2()).abs() / 4.0;
+        b += match e.memory_hierarchy {
+            MemHier::Global => 0.0,
+            MemHier::Local => 0.05,
+            MemHier::Shared => 0.08,
+        };
+        if !e.row_major {
+            b += 0.25; // strided access on a bandwidth-bound kernel
+        }
+    }
+
+    // --- unroll / ILP --------------------------------------------------------
+    let opt_unroll = 4.0_f64;
+    b += 0.20 * ((e.unroll as f64).log2() - opt_unroll.log2()).abs() / 2.0;
+
+    // --- vector width --------------------------------------------------------
+    b += 0.12 * (1.0 - (e.simd_width as f64 / 16.0)).max(0.0);
+
+    // --- prefetch -------------------------------------------------------------
+    let opt_pf = 8.0_f64;
+    b += 0.06 * ((e.prefetch as f64 - opt_pf).abs() / opt_pf).min(1.0);
+
+    b
+}
+
+/// Per-workload tunability: how much of the default->HAQA gap the knobs
+/// explain.  κ is derived from the calibration table so that
+/// `1 + κ * badness(default) = paper_default / paper_haqa`.
+pub fn kappa(w: &Workload, p: &DeviceProfile) -> f64 {
+    let (d, h) = calibrated(w);
+    let ratio = (d / h).max(1.0);
+    let b0 = badness(w, p, &ExecConfig::llamacpp_default()).max(1e-6);
+    (ratio - 1.0) / b0
+}
+
+/// Simulated kernel latency in microseconds.
+///
+/// `noise_rng`: when provided, multiplies by ~N(1, 0.01²) measurement noise
+/// (the paper averages 10 repetitions; benches do the same).
+pub fn kernel_latency_us(
+    w: &Workload,
+    p: &DeviceProfile,
+    e: &ExecConfig,
+    noise_rng: Option<&mut Rng>,
+) -> f64 {
+    let (_, haqa_us) = calibrated(w);
+    let base = haqa_us * p.kernel_scale;
+    let lat = base * (1.0 + kappa(w, p) * badness(w, p, e));
+    match noise_rng {
+        Some(rng) => lat * (1.0 + rng.normal() * 0.01),
+        None => lat,
+    }
+}
+
+/// Aggregate execution-config penalty for the end-to-end decode path
+/// (Fig. 5's "Defaults" vs agent-optimized): matmul dominates inference
+/// (~90% per the paper §4.3), the rest is elementwise.
+pub fn e2e_config_penalty(p: &DeviceProfile, e: &ExecConfig) -> f64 {
+    let mm = Workload::new(KernelKind::MatMul, 64);
+    let sm = Workload::new(KernelKind::Softmax, 64);
+    let pen_mm = 1.0 + kappa(&mm, p) * badness(&mm, p, e);
+    let pen_el = 1.0 + kappa(&sm, p) * badness(&sm, p, e);
+    0.9 * pen_mm + 0.1 * pen_el
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::workload::PAPER_TABLE3;
+
+    #[test]
+    fn default_config_reproduces_paper_defaults() {
+        let p = DeviceProfile::a6000();
+        let e = ExecConfig::llamacpp_default();
+        for (k, b, d, _) in PAPER_TABLE3 {
+            let w = Workload::new(*k, *b);
+            let lat = kernel_latency_us(&w, &p, &e, None);
+            assert!(
+                (lat - d).abs() / d < 1e-6,
+                "{}@{b}: {lat} vs paper {d}",
+                k.label()
+            );
+        }
+    }
+
+    #[test]
+    fn tuned_configs_approach_paper_haqa() {
+        // A hand-tuned config close to the model's optimum should land
+        // within ~15% of the paper's HAQA latency.
+        let p = DeviceProfile::a6000();
+        let tuned = ExecConfig {
+            griddim: 256,
+            blockdim: 128,
+            tiling: 64,
+            unroll: 4,
+            simd_width: 16,
+            row_major: true,
+            transpose: false,
+            prefetch: 8,
+            memory_hierarchy: MemHier::Shared,
+            loop_order: super::super::exec::LoopOrder::Mnk,
+        };
+        let w = Workload::new(KernelKind::MatMul, 64);
+        let lat = kernel_latency_us(&w, &p, &tuned, None);
+        let (_, h) = calibrated(&w);
+        assert!(lat < h * 1.20, "tuned {lat} vs haqa {h}");
+    }
+
+    #[test]
+    fn badness_nonnegative_and_latency_positive() {
+        let p = DeviceProfile::a6000();
+        let space = crate::search::spaces::kernel_exec();
+        let mut rng = Rng::new(5);
+        for _ in 0..300 {
+            let cfg = space.sample(&mut rng);
+            let e = ExecConfig::from_config(&cfg);
+            for k in KernelKind::ALL {
+                let w = Workload::new(k, 64);
+                assert!(badness(&w, &p, &e) >= 0.0);
+                assert!(kernel_latency_us(&w, &p, &e, None) > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn shared_memory_overflow_is_a_cliff() {
+        let p = DeviceProfile::a6000();
+        let w = Workload::new(KernelKind::MatMul, 64);
+        let mut e = ExecConfig::llamacpp_default();
+        e.memory_hierarchy = MemHier::Shared;
+        e.tiling = 64;
+        let ok = kernel_latency_us(&w, &p, &e, None);
+        e.tiling = 256; // 2*256*256*4 = 512 KiB >> 100 KiB shared
+        let bad = kernel_latency_us(&w, &p, &e, None);
+        assert!(bad > ok * 1.2, "{bad} vs {ok}");
+    }
+
+    #[test]
+    fn mobile_kernels_slower_than_desktop() {
+        let e = ExecConfig::llamacpp_default();
+        let w = Workload::new(KernelKind::Softmax, 64);
+        let d = kernel_latency_us(&w, &DeviceProfile::a6000(), &e, None);
+        let m = kernel_latency_us(&w, &DeviceProfile::adreno740(), &e, None);
+        assert!(m > 3.0 * d);
+    }
+}

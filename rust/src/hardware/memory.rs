@@ -1,0 +1,104 @@
+//! Deployment memory-footprint model (paper Table 5).
+//!
+//! `footprint = weights + quantization-group overhead + KV cache +
+//! activations/runtime`.  The paper's worked example: LLaMA2-13B at INT8
+//! needs 13 GB, so a 12 GB budget rejects INT8 but admits INT4 (Table 5).
+
+use crate::quant::Scheme;
+
+use super::models::ModelProfile;
+
+/// Default evaluation context (paper §4.1: input 128 + output 256 tokens).
+pub const DEFAULT_CONTEXT_TOKENS: usize = 128 + 256;
+
+#[derive(Debug, Clone, Copy)]
+pub struct MemoryBreakdown {
+    pub weights_gb: f64,
+    pub kv_cache_gb: f64,
+    pub runtime_gb: f64,
+}
+
+impl MemoryBreakdown {
+    pub fn total_gb(&self) -> f64 {
+        self.weights_gb + self.kv_cache_gb + self.runtime_gb
+    }
+}
+
+/// Footprint of deploying `model` under `scheme` with a given context size.
+pub fn footprint(model: &ModelProfile, scheme: Scheme, context_tokens: usize) -> MemoryBreakdown {
+    let params = model.params_b * 1e9;
+    // Group-wise quantization stores per-group scales/zeros (~6% overhead
+    // at group size 32, llama.cpp's q4/q8 layouts).
+    let group_overhead = match scheme {
+        Scheme::FP16 => 1.0,
+        Scheme::INT8 => 1.06,
+        Scheme::INT4 => 1.12,
+    };
+    let weights_gb = params * scheme.bytes_per_weight() * group_overhead / 1e9;
+    let kv_cache_gb = model.kv_bytes_per_token() * context_tokens as f64 / 1e9;
+    // Activations + runtime buffers: scales with hidden size, floor 0.25 GB.
+    let runtime_gb = 0.25 + model.hidden as f64 * 4096.0 * 4.0 / 1e9;
+    MemoryBreakdown {
+        weights_gb,
+        kv_cache_gb,
+        runtime_gb,
+    }
+}
+
+pub fn footprint_gb(model: &ModelProfile, scheme: Scheme) -> f64 {
+    footprint(model, scheme, DEFAULT_CONTEXT_TOKENS).total_gb()
+}
+
+/// Does `scheme` fit under `limit_gb`? (a Table 5 cell)
+pub fn fits(model: &ModelProfile, scheme: Scheme, limit_gb: f64) -> bool {
+    footprint_gb(model, scheme) <= limit_gb
+}
+
+/// The paper's Table 5 memory budgets.
+pub const TABLE5_BUDGETS_GB: [f64; 4] = [4.0, 12.0, 20.0, 28.0];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Table 5's exact ✓/✗ matrix for LLaMA2-13B.
+    #[test]
+    fn reproduces_table5_matrix() {
+        let m = ModelProfile::llama2_13b();
+        let expect = [
+            (4.0, [false, false, false]),
+            (12.0, [false, false, true]),
+            (20.0, [false, true, true]),
+            (28.0, [true, true, true]),
+        ];
+        for (budget, cells) in expect {
+            let got = [
+                fits(&m, Scheme::FP16, budget),
+                fits(&m, Scheme::INT8, budget),
+                fits(&m, Scheme::INT4, budget),
+            ];
+            assert_eq!(got, cells, "budget {budget} GB");
+        }
+    }
+
+    /// The paper's worked example: 13B @ INT8 ≈ 13 GB weights.
+    #[test]
+    fn int8_13b_weighs_about_13gb() {
+        let m = ModelProfile::llama2_13b();
+        let b = footprint(&m, Scheme::INT8, DEFAULT_CONTEXT_TOKENS);
+        assert!(
+            (b.weights_gb - 13.0).abs() < 1.5,
+            "weights {} GB",
+            b.weights_gb
+        );
+        assert!(b.total_gb() > 12.0, "must reject a 12 GB budget");
+    }
+
+    #[test]
+    fn footprint_monotone_in_bits() {
+        for m in ModelProfile::figure5_models() {
+            assert!(footprint_gb(&m, Scheme::INT4) < footprint_gb(&m, Scheme::INT8));
+            assert!(footprint_gb(&m, Scheme::INT8) < footprint_gb(&m, Scheme::FP16));
+        }
+    }
+}

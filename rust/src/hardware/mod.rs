@@ -1,0 +1,34 @@
+//! Hardware simulator — the testbed substitution (DESIGN.md §2).
+//!
+//! The paper measures on an NVIDIA A6000 and a OnePlus 11 (Snapdragon 8
+//! Gen 2 / Adreno 740); neither is available here, so this module provides
+//! an analytic device model encoding the same physical mechanisms the paper
+//! names in §4.4: roofline compute-vs-memory bounds, launch-geometry
+//! occupancy, register pressure, shared-memory capacity, coalescing, native
+//! vs emulated low-precision paths (tensor-core INT4/INT8 MMA vs FP16
+//! conversion + bit-unpacking).
+//!
+//! * [`profile`] — device profiles (A6000, Adreno 740, generic CPU).
+//! * [`workload`] — the Table 3 kernel workloads + paper calibration table.
+//! * [`exec`] — typed execution configuration (the tunable the agent moves).
+//! * [`latency`] — the kernel latency model, self-calibrated so the paper's
+//!   default config reproduces the paper's default latencies exactly and a
+//!   perfect tuner recovers the paper's HAQA latencies.
+//! * [`models`] — LLM descriptors (params/layers/dims) for Tables 4-5, Fig 5.
+//! * [`memory`] — deployment memory-footprint model (Table 5).
+//! * [`adaptive`] — the analytic §3.4 strategy selector (cross-checks the
+//!   agent's bit-width decisions).
+
+pub mod adaptive;
+pub mod exec;
+pub mod latency;
+pub mod memory;
+pub mod models;
+pub mod profile;
+pub mod workload;
+
+pub use exec::ExecConfig;
+pub use latency::kernel_latency_us;
+pub use models::ModelProfile;
+pub use profile::DeviceProfile;
+pub use workload::{KernelKind, Workload};

@@ -1,0 +1,89 @@
+//! LLM descriptors for the deployment experiments (Tables 4-5, Figure 5).
+
+/// Architecture summary of the paper's deployment models.
+#[derive(Debug, Clone)]
+pub struct ModelProfile {
+    pub name: String,
+    /// Parameters, billions.
+    pub params_b: f64,
+    pub layers: u32,
+    pub hidden: u32,
+    pub ffn: u32,
+    pub heads: u32,
+    pub vocab: u32,
+}
+
+impl ModelProfile {
+    fn new(name: &str, params_b: f64, layers: u32, hidden: u32, ffn: u32,
+           heads: u32, vocab: u32) -> ModelProfile {
+        ModelProfile {
+            name: name.into(),
+            params_b,
+            layers,
+            hidden,
+            ffn,
+            heads,
+            vocab,
+        }
+    }
+
+    // Figure 5 / Table 5 models (A6000 track).
+    pub fn llama2_7b() -> Self {
+        Self::new("LLaMA2-7B", 6.74, 32, 4096, 11008, 32, 32000)
+    }
+    pub fn llama2_13b() -> Self {
+        Self::new("LLaMA2-13B", 13.02, 40, 5120, 13824, 40, 32000)
+    }
+    pub fn llama32_3b() -> Self {
+        Self::new("LLaMA3.2-3B", 3.21, 28, 3072, 8192, 24, 128256)
+    }
+    pub fn llama3_8b() -> Self {
+        Self::new("LLaMA3-8B", 8.03, 32, 4096, 14336, 32, 128256)
+    }
+
+    // Table 4 models (mobile track).
+    pub fn openllama_3b() -> Self {
+        Self::new("openllama-3B", 3.43, 26, 3200, 8640, 32, 32000)
+    }
+    pub fn tinyllama_1_1b() -> Self {
+        Self::new("tinylama-1.1B", 1.10, 22, 2048, 5632, 32, 32000)
+    }
+    pub fn gpt2_large() -> Self {
+        Self::new("gpt2-large-774M", 0.774, 36, 1280, 5120, 20, 50257)
+    }
+
+    pub fn figure5_models() -> Vec<ModelProfile> {
+        vec![
+            Self::llama32_3b(),
+            Self::llama2_7b(),
+            Self::llama3_8b(),
+            Self::llama2_13b(),
+        ]
+    }
+
+    pub fn table4_models() -> Vec<ModelProfile> {
+        vec![Self::openllama_3b(), Self::tinyllama_1_1b(), Self::gpt2_large()]
+    }
+
+    /// KV-cache bytes per token at fp16 (2 tensors * layers * hidden * 2B).
+    pub fn kv_bytes_per_token(&self) -> f64 {
+        2.0 * self.layers as f64 * self.hidden as f64 * 2.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rosters_complete() {
+        assert_eq!(ModelProfile::figure5_models().len(), 4);
+        assert_eq!(ModelProfile::table4_models().len(), 3);
+    }
+
+    #[test]
+    fn params_ordering_sane() {
+        assert!(ModelProfile::llama2_13b().params_b > ModelProfile::llama2_7b().params_b);
+        assert!(ModelProfile::tinyllama_1_1b().params_b < ModelProfile::openllama_3b().params_b);
+    }
+}

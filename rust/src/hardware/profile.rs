@@ -1,0 +1,173 @@
+//! Device profiles.  Field values mirror the hardware spec blocks the
+//! paper's prompts embed (Fig. 2a and Appendix F).
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeviceKind {
+    DesktopGpu,
+    MobileGpu,
+    Cpu,
+}
+
+#[derive(Debug, Clone)]
+pub struct DeviceProfile {
+    pub name: String,
+    pub kind: DeviceKind,
+    /// Streaming multiprocessors (or shader core clusters).
+    pub sm_count: u32,
+    pub cuda_cores: u32,
+    pub tensor_cores: bool,
+    pub int8_native: bool,
+    pub int4_native: bool,
+    pub fp16_tflops: f64,
+    /// Effective DRAM bandwidth for the decode path, GB/s.
+    pub mem_bw_gbps: f64,
+    pub shared_mem_kb: u32,
+    pub registers_per_sm: u32,
+    pub dram_gb: f64,
+    /// Per-layer kernel-launch overhead on the decode path, ms.
+    pub launch_overhead_ms: f64,
+    /// Per-parameter compute overhead (dequant/MMA issue), picoseconds, by
+    /// scheme — the §4.4 mechanism: INT4 without native support pays
+    /// unpack + FP16-convert ALU work that outweighs its bandwidth savings.
+    pub ov_ps_fp16: f64,
+    pub ov_ps_int8: f64,
+    pub ov_ps_int4: f64,
+    /// Kernel-latency scale relative to the A6000 (1.0 = A6000).
+    pub kernel_scale: f64,
+}
+
+impl DeviceProfile {
+    /// NVIDIA RTX A6000 (Ampere): the paper's desktop testbed (§4.1).
+    pub fn a6000() -> DeviceProfile {
+        DeviceProfile {
+            name: "NVIDIA A6000".into(),
+            kind: DeviceKind::DesktopGpu,
+            sm_count: 84,
+            cuda_cores: 10752,
+            tensor_cores: true,
+            int8_native: true,
+            int4_native: true,
+            fp16_tflops: 309.0,
+            mem_bw_gbps: 600.0,
+            shared_mem_kb: 100,
+            registers_per_sm: 65536,
+            dram_gb: 48.0,
+            launch_overhead_ms: 0.02,
+            ov_ps_fp16: 0.5,
+            ov_ps_int8: 0.8,
+            ov_ps_int4: 1.2,
+            kernel_scale: 1.0,
+        }
+    }
+
+    /// Qualcomm Adreno 740 (Snapdragon 8 Gen 2, OnePlus 11): the paper's
+    /// mobile testbed (§4.4, Appendix F).  No native INT4; INT4 elements
+    /// must be unpacked (shift/AND/OR) and converted to FP16 before
+    /// accumulation — hence the large `ov_ps_int4`.
+    pub fn adreno740() -> DeviceProfile {
+        DeviceProfile {
+            name: "Adreno 740 (Snapdragon 8 Gen 2)".into(),
+            kind: DeviceKind::MobileGpu,
+            sm_count: 6,
+            cuda_cores: 768,
+            tensor_cores: false,
+            int8_native: true,
+            int4_native: false,
+            fp16_tflops: 8.0,
+            mem_bw_gbps: 36.0,
+            shared_mem_kb: 32,
+            registers_per_sm: 16384,
+            dram_gb: 16.0,
+            launch_overhead_ms: 0.8,
+            ov_ps_fp16: 1.0,
+            ov_ps_int8: 21.0,
+            ov_ps_int4: 45.0,
+            kernel_scale: 9.0,
+        }
+    }
+
+    /// The host CPU (PJRT CPU client) — the device the real-latency path
+    /// actually runs on.
+    pub fn host_cpu() -> DeviceProfile {
+        DeviceProfile {
+            name: "host CPU (PJRT)".into(),
+            kind: DeviceKind::Cpu,
+            sm_count: 1,
+            cuda_cores: 16,
+            tensor_cores: false,
+            int8_native: true,
+            int4_native: false,
+            fp16_tflops: 0.5,
+            mem_bw_gbps: 20.0,
+            shared_mem_kb: 512,
+            registers_per_sm: 0,
+            dram_gb: 32.0,
+            launch_overhead_ms: 0.05,
+            ov_ps_fp16: 4.0,
+            ov_ps_int8: 8.0,
+            ov_ps_int4: 16.0,
+            kernel_scale: 30.0,
+        }
+    }
+
+    /// Per-parameter decode-time overhead for a scheme (ps).
+    pub fn ov_ps(&self, scheme: crate::quant::Scheme) -> f64 {
+        match scheme {
+            crate::quant::Scheme::FP16 => self.ov_ps_fp16,
+            crate::quant::Scheme::INT8 => self.ov_ps_int8,
+            crate::quant::Scheme::INT4 => self.ov_ps_int4,
+        }
+    }
+
+    /// The hardware spec block for the agent prompt (mirrors Fig. 2a /
+    /// Appendix F formatting).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("name", Json::Str(self.name.clone()));
+        o.set(
+            "kind",
+            Json::Str(
+                match self.kind {
+                    DeviceKind::DesktopGpu => "desktop_gpu",
+                    DeviceKind::MobileGpu => "mobile_gpu",
+                    DeviceKind::Cpu => "cpu",
+                }
+                .into(),
+            ),
+        );
+        o.set("sm_count", Json::Num(self.sm_count as f64));
+        o.set("cuda_cores", Json::Num(self.cuda_cores as f64));
+        o.set("tensor_cores", Json::Bool(self.tensor_cores));
+        o.set("int8_native", Json::Bool(self.int8_native));
+        o.set("int4_native", Json::Bool(self.int4_native));
+        o.set("fp16_tflops", Json::Num(self.fp16_tflops));
+        o.set("mem_bw_gbps", Json::Num(self.mem_bw_gbps));
+        o.set("shared_mem_kb", Json::Num(self.shared_mem_kb as f64));
+        o.set("dram_gb", Json::Num(self.dram_gb));
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profiles_expose_the_4_4_asymmetry() {
+        let gpu = DeviceProfile::a6000();
+        let mob = DeviceProfile::adreno740();
+        assert!(gpu.int4_native && !mob.int4_native);
+        // Mobile INT4 overhead per param exceeds its INT8 overhead by more
+        // than the bandwidth it saves (the §4.4 mechanism).
+        assert!(mob.ov_ps_int4 > 2.0 * mob.ov_ps_int8 * 0.5);
+    }
+
+    #[test]
+    fn json_block_has_prompt_fields() {
+        let j = DeviceProfile::a6000().to_json();
+        assert_eq!(j.get("tensor_cores").unwrap().as_bool(), Some(true));
+        assert!(j.req_f64("mem_bw_gbps").unwrap() > 0.0);
+    }
+}

@@ -1,0 +1,212 @@
+//! Kernel workloads at the paper's Table 3 shapes, plus the calibration
+//! table (the paper's measured default/HAQA latencies on the A6000).
+
+/// The five LLM kernels the paper tunes (Table 3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KernelKind {
+    Softmax,
+    Silu,
+    RmsNorm,
+    Rope,
+    MatMul,
+}
+
+impl KernelKind {
+    pub const ALL: [KernelKind; 5] = [
+        KernelKind::Softmax,
+        KernelKind::Silu,
+        KernelKind::RmsNorm,
+        KernelKind::Rope,
+        KernelKind::MatMul,
+    ];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            KernelKind::Softmax => "Softmax",
+            KernelKind::Silu => "SiLU",
+            KernelKind::RmsNorm => "RMSNorm",
+            KernelKind::Rope => "RoPE",
+            KernelKind::MatMul => "MatMul",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<KernelKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "softmax" => Some(KernelKind::Softmax),
+            "silu" => Some(KernelKind::Silu),
+            "rmsnorm" => Some(KernelKind::RmsNorm),
+            "rope" => Some(KernelKind::Rope),
+            "matmul" => Some(KernelKind::MatMul),
+            _ => None,
+        }
+    }
+
+    pub fn is_matmul(&self) -> bool {
+        matches!(self, KernelKind::MatMul)
+    }
+}
+
+/// A kernel at a concrete Table 3 size (`batch` is the paper's middle
+/// dimension: 1, 64 or 128).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Workload {
+    pub kernel: KernelKind,
+    pub batch: usize,
+}
+
+impl Workload {
+    pub fn new(kernel: KernelKind, batch: usize) -> Workload {
+        Workload { kernel, batch }
+    }
+
+    /// The paper's [N, B, H] size label.
+    pub fn size_label(&self) -> String {
+        match self.kernel {
+            KernelKind::Softmax => format!("[1024,{},32]", self.batch),
+            KernelKind::Silu => format!("[11008,{},1]", self.batch),
+            KernelKind::RmsNorm => format!("[4096,{},1]", self.batch),
+            KernelKind::Rope => format!("[128,{},1]", self.batch),
+            KernelKind::MatMul => format!("[2048,{},2048]", self.batch),
+        }
+    }
+
+    /// Independent row-level work items (drives occupancy in the model).
+    pub fn rows(&self) -> usize {
+        match self.kernel {
+            KernelKind::Softmax => 32 * self.batch,
+            KernelKind::Silu => self.batch,
+            KernelKind::RmsNorm => self.batch,
+            KernelKind::Rope => self.batch,
+            KernelKind::MatMul => self.batch,
+        }
+    }
+
+    /// Elements touched (drives the memory side of the roofline).
+    pub fn elements(&self) -> usize {
+        match self.kernel {
+            KernelKind::Softmax => 1024 * 32 * self.batch,
+            KernelKind::Silu => 11008 * self.batch * 2,
+            KernelKind::RmsNorm => 4096 * self.batch,
+            KernelKind::Rope => 128 * self.batch,
+            KernelKind::MatMul => 2048 * 2048 + 2048 * self.batch * 2,
+        }
+    }
+
+    /// Floating-point operations.
+    pub fn flops(&self) -> usize {
+        match self.kernel {
+            KernelKind::Softmax => 1024 * 32 * self.batch * 5,
+            KernelKind::Silu => 11008 * self.batch * 4,
+            KernelKind::RmsNorm => 4096 * self.batch * 3,
+            KernelKind::Rope => 128 * self.batch * 6,
+            KernelKind::MatMul => 2 * 2048 * 2048 * self.batch,
+        }
+    }
+}
+
+/// Paper Table 3 on the A6000: (kernel, batch, default µs, HAQA µs).
+/// The latency model self-calibrates to this table (see `latency.rs`).
+pub const PAPER_TABLE3: &[(KernelKind, usize, f64, f64)] = &[
+    (KernelKind::Softmax, 1, 3.45, 2.57),
+    (KernelKind::Softmax, 64, 51.70, 27.96),
+    (KernelKind::Softmax, 128, 98.15, 52.87),
+    (KernelKind::Silu, 1, 6.29, 5.11),
+    (KernelKind::Silu, 64, 10.44, 4.51),
+    (KernelKind::Silu, 128, 31.02, 19.71),
+    (KernelKind::RmsNorm, 1, 10.19, 8.61),
+    (KernelKind::RmsNorm, 64, 10.75, 8.95),
+    (KernelKind::RmsNorm, 128, 11.11, 9.10),
+    (KernelKind::Rope, 1, 6.75, 6.32),
+    (KernelKind::Rope, 64, 9.04, 8.00),
+    (KernelKind::Rope, 128, 11.70, 9.62),
+    (KernelKind::MatMul, 1, 16.49, 12.24),
+    (KernelKind::MatMul, 64, 52.29, 36.86),
+    (KernelKind::MatMul, 128, 63.20, 38.85),
+];
+
+/// Calibration lookup: paper (default, haqa) µs for a workload on A6000.
+pub fn paper_latencies(w: &Workload) -> Option<(f64, f64)> {
+    PAPER_TABLE3
+        .iter()
+        .find(|(k, b, _, _)| *k == w.kernel && *b == w.batch)
+        .map(|(_, _, d, h)| (*d, *h))
+}
+
+/// Interpolated calibration for batches outside the table (geometric in
+/// batch, clamped to table endpoints).
+pub fn calibrated(w: &Workload) -> (f64, f64) {
+    if let Some(v) = paper_latencies(w) {
+        return v;
+    }
+    // Find bracketing batches in the table for this kernel.
+    let mut entries: Vec<(usize, f64, f64)> = PAPER_TABLE3
+        .iter()
+        .filter(|(k, _, _, _)| *k == w.kernel)
+        .map(|(_, b, d, h)| (*b, *d, *h))
+        .collect();
+    entries.sort_by_key(|e| e.0);
+    let b = w.batch as f64;
+    let (lo, hi) = (entries.first().unwrap(), entries.last().unwrap());
+    if b <= lo.0 as f64 {
+        let s = b / lo.0 as f64;
+        return (lo.1 * s.max(0.25), lo.2 * s.max(0.25));
+    }
+    if b >= hi.0 as f64 {
+        let s = b / hi.0 as f64;
+        return (hi.1 * s, hi.2 * s);
+    }
+    for pair in entries.windows(2) {
+        let (b0, d0, h0) = pair[0];
+        let (b1, d1, h1) = pair[1];
+        if b >= b0 as f64 && b <= b1 as f64 {
+            let t = (b.ln() - (b0 as f64).ln()) / ((b1 as f64).ln() - (b0 as f64).ln());
+            return (
+                (d0.ln() + t * (d1.ln() - d0.ln())).exp(),
+                (h0.ln() + t * (h1.ln() - h0.ln())).exp(),
+            );
+        }
+    }
+    (lo.1, lo.2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_has_all_15_rows() {
+        assert_eq!(PAPER_TABLE3.len(), 15);
+        for k in KernelKind::ALL {
+            for b in [1usize, 64, 128] {
+                assert!(paper_latencies(&Workload::new(k, b)).is_some());
+            }
+        }
+    }
+
+    #[test]
+    fn ratios_match_paper_range() {
+        for (k, b, d, h) in PAPER_TABLE3 {
+            let r = d / h;
+            assert!(
+                (1.0..=2.4).contains(&r),
+                "{}@{b}: ratio {r}",
+                k.label()
+            );
+        }
+    }
+
+    #[test]
+    fn interpolation_bracketed_and_monotone() {
+        let (d32, _) = calibrated(&Workload::new(KernelKind::Softmax, 32));
+        let (d1, _) = calibrated(&Workload::new(KernelKind::Softmax, 1));
+        let (d64, _) = calibrated(&Workload::new(KernelKind::Softmax, 64));
+        assert!(d1 < d32 && d32 < d64, "{d1} {d32} {d64}");
+    }
+
+    #[test]
+    fn matmul_flops_dominant() {
+        let mm = Workload::new(KernelKind::MatMul, 64).flops();
+        let sm = Workload::new(KernelKind::Softmax, 64).flops();
+        assert!(mm > 10 * sm);
+    }
+}

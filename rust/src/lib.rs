@@ -1,0 +1,42 @@
+//! # HAQA-RS
+//!
+//! Reproduction of *"From Bits to Chips: An LLM-based Hardware-Aware
+//! Quantization Agent for Streamlined Deployment of LLMs"* as a three-layer
+//! Rust + JAX + Pallas system.
+//!
+//! * **Layer 1/2** (build time, `python/`): Pallas kernels + JAX train/eval/
+//!   decode graphs, AOT-lowered to HLO text in `artifacts/`.
+//! * **Layer 3** (this crate): the paper's contribution — the agentic
+//!   quantization + deployment workflow — plus every substrate it needs
+//!   (optimizers, hardware simulator, PJRT runtime, trainer, deploy engine).
+//!
+//! Python never runs on the request path: after `make artifacts`, the `haqa`
+//! binary is self-contained.
+//!
+//! Module map (see DESIGN.md for the full inventory):
+//!
+//! | module | role |
+//! |---|---|
+//! | [`util`] | zero-dep substrates: RNG, JSON, CLI, stats, tables, bench, property testing |
+//! | [`search`] | typed hyperparameter spaces (paper Appendix D) |
+//! | [`optimizers`] | Random / Local / Bayesian(GP) / NSGA-II / Human / HAQA |
+//! | [`agent`] | LLM-agent workflow: prompts, ReAct, history, validation, cost |
+//! | [`hardware`] | device profiles, latency & memory models, adaptive strategy |
+//! | [`quant`] | quantization schemes + Rust-side DoReFa/QLoRA oracles |
+//! | [`runtime`] | PJRT client, artifact registry, executable cache |
+//! | [`trainer`] | synthetic datasets + QAT/QLoRA training loops |
+//! | [`deploy`] | kernel tuner, token-generation engine, e2e throughput |
+//! | [`coordinator`] | the HAQA iteration loop (paper Fig. 3) |
+//! | [`report`] | table/figure emitters for every paper table & figure |
+
+pub mod agent;
+pub mod coordinator;
+pub mod deploy;
+pub mod hardware;
+pub mod optimizers;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod search;
+pub mod trainer;
+pub mod util;

@@ -1,0 +1,171 @@
+//! Gaussian-process surrogate over the unit cube (squared-exponential
+//! kernel, Cholesky-based exact inference) — the substrate for the
+//! Bayesian-optimization baseline (Snoek et al., 2012).
+
+use super::linalg::{self, Mat};
+
+#[derive(Debug, Clone)]
+pub struct GpParams {
+    /// RBF length scale (shared across dims; inputs are unit-cube encoded).
+    pub length_scale: f64,
+    /// Signal variance.
+    pub signal: f64,
+    /// Observation noise variance.
+    pub noise: f64,
+}
+
+impl Default for GpParams {
+    fn default() -> Self {
+        GpParams {
+            length_scale: 0.3,
+            signal: 1.0,
+            noise: 1e-4,
+        }
+    }
+}
+
+pub struct Gp {
+    params: GpParams,
+    x: Vec<Vec<f64>>,
+    /// Cholesky factor of K + noise I.
+    l: Mat,
+    /// alpha = K^{-1} (y - mean)
+    alpha: Vec<f64>,
+    y_mean: f64,
+    y_std: f64,
+}
+
+fn rbf(p: &GpParams, a: &[f64], b: &[f64]) -> f64 {
+    let d2: f64 = a
+        .iter()
+        .zip(b)
+        .map(|(x, y)| {
+            let d = x - y;
+            d * d
+        })
+        .sum();
+    p.signal * (-0.5 * d2 / (p.length_scale * p.length_scale)).exp()
+}
+
+impl Gp {
+    /// Fit exact GP regression on (x, y); y is standardized internally.
+    pub fn fit(params: GpParams, x: Vec<Vec<f64>>, y: &[f64]) -> Option<Gp> {
+        let n = x.len();
+        if n == 0 || y.len() != n {
+            return None;
+        }
+        let y_mean = y.iter().sum::<f64>() / n as f64;
+        let mut y_std = (y.iter().map(|v| (v - y_mean) * (v - y_mean)).sum::<f64>()
+            / n as f64)
+            .sqrt();
+        if y_std < 1e-9 {
+            y_std = 1.0;
+        }
+        let ys: Vec<f64> = y.iter().map(|v| (v - y_mean) / y_std).collect();
+        let mut k = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                k[(i, j)] = rbf(&params, &x[i], &x[j]) + if i == j { params.noise } else { 0.0 };
+            }
+        }
+        let l = linalg::cholesky(&k)?;
+        let alpha = linalg::solve_upper_t(&l, &linalg::solve_lower(&l, &ys));
+        Some(Gp {
+            params,
+            x,
+            l,
+            alpha,
+            y_mean,
+            y_std,
+        })
+    }
+
+    /// Posterior mean and standard deviation at a query point.
+    pub fn predict(&self, q: &[f64]) -> (f64, f64) {
+        let n = self.x.len();
+        let kstar: Vec<f64> = (0..n).map(|i| rbf(&self.params, &self.x[i], q)).collect();
+        let mean_s = linalg::dot(&kstar, &self.alpha);
+        let v = linalg::solve_lower(&self.l, &kstar);
+        let var_s = (self.params.signal + self.params.noise - linalg::dot(&v, &v)).max(1e-12);
+        (mean_s * self.y_std + self.y_mean, var_s.sqrt() * self.y_std)
+    }
+
+    /// Expected improvement (maximization) over incumbent `best_y`.
+    pub fn expected_improvement(&self, q: &[f64], best_y: f64, xi: f64) -> f64 {
+        let (mu, sigma) = self.predict(q);
+        if sigma < 1e-12 {
+            return 0.0;
+        }
+        let z = (mu - best_y - xi) / sigma;
+        sigma * (z * phi_cdf(z) + phi_pdf(z))
+    }
+}
+
+fn phi_pdf(z: f64) -> f64 {
+    (-0.5 * z * z).exp() / (2.0 * std::f64::consts::PI).sqrt()
+}
+
+/// Standard normal CDF via erf approximation (Abramowitz & Stegun 7.1.26).
+fn phi_cdf(z: f64) -> f64 {
+    0.5 * (1.0 + erf(z / std::f64::consts::SQRT_2))
+}
+
+fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interpolates_training_points() {
+        let x = vec![vec![0.0], vec![0.5], vec![1.0]];
+        let y = [1.0, 2.0, 0.5];
+        let gp = Gp::fit(GpParams::default(), x.clone(), &y).unwrap();
+        for (xi, yi) in x.iter().zip(&y) {
+            let (mu, sigma) = gp.predict(xi);
+            assert!((mu - yi).abs() < 0.05, "mu {mu} vs {yi}");
+            assert!(sigma < 0.2);
+        }
+    }
+
+    #[test]
+    fn uncertainty_grows_far_from_data() {
+        let gp = Gp::fit(
+            GpParams::default(),
+            vec![vec![0.0, 0.0]],
+            &[0.0],
+        )
+        .unwrap();
+        let (_, s_near) = gp.predict(&[0.01, 0.0]);
+        let (_, s_far) = gp.predict(&[1.0, 1.0]);
+        assert!(s_far > s_near * 2.0, "{s_far} vs {s_near}");
+    }
+
+    #[test]
+    fn ei_prefers_promising_regions() {
+        // y rises towards x=1
+        let x = vec![vec![0.0], vec![0.4], vec![0.8]];
+        let y = [0.0, 0.4, 0.8];
+        let gp = Gp::fit(GpParams::default(), x, &y).unwrap();
+        let ei_hi = gp.expected_improvement(&[0.95], 0.8, 0.0);
+        let ei_lo = gp.expected_improvement(&[0.05], 0.8, 0.0);
+        assert!(ei_hi > ei_lo, "{ei_hi} vs {ei_lo}");
+    }
+
+    #[test]
+    fn erf_sane() {
+        assert!((erf(0.0)).abs() < 1e-6);
+        assert!((erf(2.0) - 0.9953).abs() < 1e-3);
+        assert!((phi_cdf(0.0) - 0.5).abs() < 1e-9);
+    }
+}

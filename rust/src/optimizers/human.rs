@@ -1,0 +1,119 @@
+//! "Human" column: the average behaviour of experienced practitioners
+//! (paper §4.2 cites PACT/DoReFa author-recommended settings).
+//!
+//! Modelled as a fixed playbook of expert moves: start from the published
+//! defaults, then apply the classic manual-tuning sequence — halve/raise the
+//! learning rate based on the loss trend, bump weight decay on overfit,
+//! lower batch size for more update noise — one knob at a time, exactly the
+//! "experts tweak one parameter at a time" behaviour Figure 1 describes.
+
+use super::{best, Observation, Optimizer};
+use crate::search::param::Value;
+use crate::search::{Config, Space};
+use crate::util::rng::Rng;
+
+pub struct HumanPriors {
+    step: usize,
+}
+
+impl HumanPriors {
+    pub fn new() -> Self {
+        HumanPriors { step: 0 }
+    }
+
+    /// One-knob expert move `i` applied to `cfg` (multiplicative nudges on
+    /// the canonical knobs, skipped when the space lacks the knob).
+    fn apply_move(&self, space: &Space, cfg: &mut Config, i: usize) {
+        // (knob, factor) pairs in the order a practitioner tries them.
+        const MOVES: &[(&str, f64)] = &[
+            ("learning_rate", 3.0),
+            ("learning_rate", 0.5),
+            ("weight_decay", 3.0),
+            ("batch_size", 0.5),
+            ("momentum", 1.05),
+            ("learning_rate", 0.25),
+            ("lora_r", 2.0),
+            ("max_steps", 1.5),
+            ("weight_decay", 0.3),
+            ("lora_dropout", 2.0),
+            ("per_device_train_batch_size", 0.5),
+            ("warmup_ratio", 1.5),
+        ];
+        let mut applied = 0;
+        for (knob, factor) in MOVES {
+            if space.get(knob).is_none() {
+                continue;
+            }
+            if applied == i {
+                let p = space.get(knob).unwrap();
+                let v = cfg.get(*knob).cloned().unwrap_or_else(|| p.default.clone());
+                let moved = match v {
+                    Value::Float(x) => Value::Float(x * factor),
+                    Value::Int(k) => Value::Int(((k as f64) * factor).round() as i64),
+                    other => other,
+                };
+                cfg.insert(knob.to_string(), p.clamp(&moved));
+                return;
+            }
+            applied += 1;
+        }
+    }
+}
+
+impl Default for HumanPriors {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Optimizer for HumanPriors {
+    fn name(&self) -> &str {
+        "human"
+    }
+
+    fn propose(&mut self, space: &Space, history: &[Observation], _rng: &mut Rng) -> Config {
+        if history.is_empty() {
+            self.step = 0;
+            return space.default_config();
+        }
+        // Tweak the best config seen so far with the next playbook move.
+        let mut cfg = best(history)
+            .map(|o| o.config.clone())
+            .unwrap_or_else(|| space.default_config());
+        self.apply_move(space, &mut cfg, self.step % 12);
+        self.step += 1;
+        space.repair(&cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::search::spaces;
+
+    #[test]
+    fn playbook_stays_valid() {
+        for space in [spaces::resnet_qat(), spaces::llama_qlora()] {
+            let mut opt = HumanPriors::new();
+            let mut rng = Rng::new(0);
+            let mut hist = Vec::new();
+            for round in 0..10 {
+                let c = opt.propose(&space, &hist, &mut rng);
+                assert!(space.is_valid(&c), "{} round {round}: {c:?}", space.name);
+                hist.push(Observation::new(c, 0.5 - round as f64 * 0.01));
+            }
+        }
+    }
+
+    #[test]
+    fn first_move_changes_one_knob() {
+        let space = spaces::resnet_qat();
+        let mut opt = HumanPriors::new();
+        let mut rng = Rng::new(0);
+        let hist = vec![Observation::new(space.default_config(), 0.5)];
+        let c = opt.propose(&space, &hist, &mut rng);
+        let d = space.default_config();
+        let changed: Vec<_> = c.iter().filter(|(k, v)| d.get(*k) != Some(v)).collect();
+        assert_eq!(changed.len(), 1, "{changed:?}");
+    }
+}

@@ -1,0 +1,180 @@
+//! Dense linear algebra substrate for the GP surrogate (offline image:
+//! no nalgebra/ndarray): row-major matrices, Cholesky factorization,
+//! triangular solves.
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[Vec<f64>]) -> Mat {
+        let r = rows.len();
+        let c = rows.first().map(|v| v.len()).unwrap_or(0);
+        let mut m = Mat::zeros(r, c);
+        for (i, row) in rows.iter().enumerate() {
+            debug_assert_eq!(row.len(), c);
+            m.data[i * c..(i + 1) * c].copy_from_slice(row);
+        }
+        m
+    }
+
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+/// Cholesky factorization A = L L^T for symmetric positive-definite A.
+/// Adds escalating jitter to the diagonal if needed (standard GP practice);
+/// returns None only if even the largest jitter fails.
+pub fn cholesky(a: &Mat) -> Option<Mat> {
+    debug_assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    'jitter: for &jit in &[0.0, 1e-10, 1e-8, 1e-6, 1e-4] {
+        let mut l = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let mut sum = a[(i, j)] + if i == j { jit } else { 0.0 };
+                for k in 0..j {
+                    sum -= l[(i, k)] * l[(j, k)];
+                }
+                if i == j {
+                    if sum <= 0.0 || !sum.is_finite() {
+                        continue 'jitter;
+                    }
+                    l[(i, j)] = sum.sqrt();
+                } else {
+                    l[(i, j)] = sum / l[(j, j)];
+                }
+            }
+        }
+        return Some(l);
+    }
+    None
+}
+
+/// Solve L y = b (L lower-triangular).
+pub fn solve_lower(l: &Mat, b: &[f64]) -> Vec<f64> {
+    let n = l.rows;
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut sum = b[i];
+        for k in 0..i {
+            sum -= l[(i, k)] * y[k];
+        }
+        y[i] = sum / l[(i, i)];
+    }
+    y
+}
+
+/// Solve L^T x = y (L lower-triangular).
+pub fn solve_upper_t(l: &Mat, y: &[f64]) -> Vec<f64> {
+    let n = l.rows;
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut sum = y[i];
+        for k in i + 1..n {
+            sum -= l[(k, i)] * x[k];
+        }
+        x[i] = sum / l[(i, i)];
+    }
+    x
+}
+
+/// Solve A x = b via Cholesky (A SPD).
+pub fn solve_spd(a: &Mat, b: &[f64]) -> Option<Vec<f64>> {
+    let l = cholesky(a)?;
+    Some(solve_upper_t(&l, &solve_lower(&l, b)))
+}
+
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cholesky_recomposes() {
+        // A = M M^T + n I is SPD
+        let m = Mat::from_rows(&[
+            vec![2.0, 1.0, 0.0],
+            vec![1.0, 3.0, 0.5],
+            vec![0.5, 0.2, 1.5],
+        ]);
+        let mut a = Mat::zeros(3, 3);
+        for i in 0..3 {
+            for j in 0..3 {
+                a[(i, j)] = dot(m.row(i), m.row(j)) + if i == j { 3.0 } else { 0.0 };
+            }
+        }
+        let l = cholesky(&a).unwrap();
+        for i in 0..3 {
+            for j in 0..3 {
+                let mut v = 0.0;
+                for k in 0..3 {
+                    v += l[(i, k)] * l[(j, k)];
+                }
+                assert!((v - a[(i, j)]).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn spd_solve_matches_direct() {
+        let a = Mat::from_rows(&[vec![4.0, 1.0], vec![1.0, 3.0]]);
+        let x = solve_spd(&a, &[1.0, 2.0]).unwrap();
+        // verify A x = b
+        assert!((4.0 * x[0] + x[1] - 1.0).abs() < 1e-10);
+        assert!((x[0] + 3.0 * x[1] - 2.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn jitter_rescues_semidefinite() {
+        // Rank-deficient PSD matrix
+        let a = Mat::from_rows(&[vec![1.0, 1.0], vec![1.0, 1.0]]);
+        assert!(cholesky(&a).is_some());
+    }
+
+    #[test]
+    fn triangular_solves() {
+        let l = Mat::from_rows(&[vec![2.0, 0.0], vec![1.0, 3.0]]);
+        let y = solve_lower(&l, &[4.0, 11.0]);
+        assert!((y[0] - 2.0).abs() < 1e-12 && (y[1] - 3.0).abs() < 1e-12);
+        let x = solve_upper_t(&l, &y);
+        // L^T x = y  =>  [2 1; 0 3] x = [2, 3] => x1 = 1, x0 = 0.5
+        assert!((x[1] - 1.0).abs() < 1e-12 && (x[0] - 0.5).abs() < 1e-12);
+    }
+}

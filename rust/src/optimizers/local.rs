@@ -1,0 +1,108 @@
+//! Local search (hill climbing) — the paper's "Local search" column.
+//!
+//! Starts at the default config, then perturbs the incumbent (best-so-far)
+//! in the unit cube: a random subset of coordinates gets Gaussian noise
+//! whose scale anneals with the round number.  Accept/reject is implicit
+//! (we always move from the incumbent, so a bad step is abandoned).
+
+use super::{best, Observation, Optimizer};
+use crate::search::{Config, Space};
+use crate::util::rng::Rng;
+
+pub struct LocalSearch {
+    /// Initial perturbation scale in unit-cube coordinates.
+    pub sigma0: f64,
+    /// Multiplicative decay per round.
+    pub decay: f64,
+}
+
+impl LocalSearch {
+    pub fn new() -> Self {
+        LocalSearch {
+            sigma0: 0.25,
+            decay: 0.85,
+        }
+    }
+}
+
+impl Default for LocalSearch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Optimizer for LocalSearch {
+    fn name(&self) -> &str {
+        "local"
+    }
+
+    fn propose(&mut self, space: &Space, history: &[Observation], rng: &mut Rng) -> Config {
+        let Some(incumbent) = best(history) else {
+            return space.default_config();
+        };
+        let sigma = self.sigma0 * self.decay.powi(history.len() as i32 - 1);
+        let mut u = space.encode(&incumbent.config);
+        // Perturb 1..=ceil(d/3) random coordinates.
+        let d = u.len();
+        let k = 1 + rng.usize(d.div_ceil(3));
+        for _ in 0..k {
+            let i = rng.usize(d);
+            u[i] = (u[i] + rng.normal() * sigma).clamp(0.0, 1.0);
+        }
+        space.decode(&u)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::search::spaces;
+
+    #[test]
+    fn proposals_stay_valid_and_near_incumbent() {
+        let space = spaces::llama_qlora();
+        let mut opt = LocalSearch::new();
+        let mut rng = Rng::new(1);
+        let mut hist = vec![Observation::new(space.default_config(), 0.6)];
+        for round in 1..10 {
+            let c = opt.propose(&space, &hist, &mut rng);
+            assert!(space.is_valid(&c), "round {round}: {c:?}");
+            hist.push(Observation::new(c, 0.1)); // worse: incumbent stays
+        }
+        // All proposals perturb the incumbent, not the last (bad) config.
+        let inc = space.encode(&hist[0].config);
+        let last = space.encode(&hist.last().unwrap().config);
+        let dist: f64 = inc
+            .iter()
+            .zip(&last)
+            .map(|(a, b)| (a - b).abs())
+            .sum::<f64>();
+        assert!(dist < 2.0, "drifted too far: {dist}");
+    }
+
+    /// On a smooth unimodal objective, hill climbing should improve over the
+    /// default within a 10-round budget.
+    #[test]
+    fn improves_on_quadratic_objective() {
+        let space = spaces::resnet_qat();
+        let target = space.encode(&space.sample(&mut Rng::new(42)));
+        let score = |cfg: &Config| {
+            let u = space.encode(cfg);
+            -u.iter()
+                .zip(&target)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f64>()
+        };
+        let mut opt = LocalSearch::new();
+        let mut rng = Rng::new(2);
+        let mut hist: Vec<Observation> = Vec::new();
+        for _ in 0..10 {
+            let c = opt.propose(&space, &hist, &mut rng);
+            let s = score(&c);
+            hist.push(Observation::new(c, s));
+        }
+        let first = hist[0].score;
+        let best_score = best(&hist).unwrap().score;
+        assert!(best_score > first, "no improvement: {first} vs {best_score}");
+    }
+}

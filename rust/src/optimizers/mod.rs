@@ -1,0 +1,98 @@
+//! Hyperparameter optimizers: the paper's baselines + the HAQA agent.
+//!
+//! Table 1/2 columns map to: [`DefaultConfig`] ("Default"),
+//! [`HumanPriors`] ("Human"), [`LocalSearch`] ("Local search"),
+//! [`bayesian::BayesianOpt`] ("Bayesian opt."), [`RandomSearch`] ("Random
+//! search"), [`nsga2::Nsga2`] ("NSGA2"), and [`haqa::HaqaOptimizer`]
+//! ("HAQA", the agent).  All share the round-based [`Optimizer`] interface
+//! the coordinator drives with a 10-round budget (paper §4.2).
+
+pub mod bayesian;
+pub mod gp;
+pub mod haqa;
+pub mod human;
+pub mod linalg;
+pub mod local;
+pub mod nsga2;
+pub mod random;
+
+use crate::search::{Config, Space};
+use crate::util::rng::Rng;
+
+/// One completed evaluation.
+#[derive(Debug, Clone)]
+pub struct Observation {
+    pub config: Config,
+    /// Primary objective, **maximized** (accuracy; negative latency for
+    /// deployment tuning).
+    pub score: f64,
+    /// Optional secondary objectives for multi-objective methods
+    /// (also maximized).
+    pub extra: Vec<f64>,
+    /// Free-form evaluation feedback surfaced to the agent (loss curve,
+    /// per-task accuracy, latency breakdown).
+    pub feedback: String,
+}
+
+impl Observation {
+    pub fn new(config: Config, score: f64) -> Self {
+        Observation {
+            config,
+            score,
+            extra: Vec::new(),
+            feedback: String::new(),
+        }
+    }
+}
+
+/// Round-based ask interface; the coordinator evaluates and appends to
+/// `history` between calls.
+pub trait Optimizer {
+    fn name(&self) -> &str;
+
+    /// Propose the configuration for round `history.len()`.
+    fn propose(&mut self, space: &Space, history: &[Observation], rng: &mut Rng) -> Config;
+}
+
+/// Best observation by score (ties -> earliest, i.e. fewest rounds).
+pub fn best(history: &[Observation]) -> Option<&Observation> {
+    history
+        .iter()
+        .max_by(|a, b| a.score.partial_cmp(&b.score).unwrap_or(std::cmp::Ordering::Equal))
+}
+
+pub use human::HumanPriors;
+pub use local::LocalSearch;
+pub use random::RandomSearch;
+
+/// "Default" column: always the space's default configuration.
+pub struct DefaultConfig;
+
+impl Optimizer for DefaultConfig {
+    fn name(&self) -> &str {
+        "default"
+    }
+
+    fn propose(&mut self, space: &Space, _history: &[Observation], _rng: &mut Rng) -> Config {
+        space.default_config()
+    }
+}
+
+/// Build an optimizer by the names used in benches/CLI.
+pub fn by_name(name: &str) -> anyhow::Result<Box<dyn Optimizer>> {
+    Ok(match name {
+        "default" => Box::new(DefaultConfig),
+        "human" => Box::new(HumanPriors::new()),
+        "local" => Box::new(LocalSearch::new()),
+        "bayesian" => Box::new(bayesian::BayesianOpt::new()),
+        "random" => Box::new(RandomSearch),
+        "nsga2" => Box::new(nsga2::Nsga2::new()),
+        "haqa" => Box::new(haqa::HaqaOptimizer::simulated()),
+        other => anyhow::bail!("unknown optimizer '{other}'"),
+    })
+}
+
+/// The Table 1/2 method roster, in the paper's column order.
+pub const METHODS: &[&str] = &[
+    "default", "human", "local", "bayesian", "random", "nsga2", "haqa",
+];

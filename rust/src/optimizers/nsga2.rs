@@ -1,0 +1,260 @@
+//! NSGA-II (Deb et al.) — the paper's "NSGA2" column.
+//!
+//! Full implementation: fast non-dominated sorting, crowding distance,
+//! binary tournament selection, SBX-style blend crossover and polynomial
+//! mutation in the unit cube.  Under the paper's 10-round budget it runs in
+//! steady-state mode: a small initial population, then one offspring per
+//! round bred from the current non-dominated set.
+//!
+//! Works single-objective (score only) or multi-objective (score + extras),
+//! which is how the accuracy-vs-latency ablation bench uses it.
+
+use super::{Observation, Optimizer};
+use crate::search::{Config, Space};
+use crate::util::rng::Rng;
+
+pub struct Nsga2 {
+    pub init_pop: usize,
+    pub eta: f64,
+    pub mutation_p: f64,
+}
+
+impl Nsga2 {
+    pub fn new() -> Self {
+        Nsga2 {
+            init_pop: 4,
+            eta: 10.0,
+            mutation_p: 0.2,
+        }
+    }
+}
+
+impl Default for Nsga2 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Objective vector for an observation (all maximized).
+fn objectives(o: &Observation) -> Vec<f64> {
+    let mut v = vec![o.score];
+    v.extend_from_slice(&o.extra);
+    v
+}
+
+/// Does `a` Pareto-dominate `b`? (>= everywhere, > somewhere)
+pub fn dominates(a: &[f64], b: &[f64]) -> bool {
+    let mut strictly = false;
+    for (x, y) in a.iter().zip(b) {
+        if x < y {
+            return false;
+        }
+        if x > y {
+            strictly = true;
+        }
+    }
+    strictly
+}
+
+/// Fast non-dominated sort: returns front index per item (0 = best front).
+pub fn non_dominated_fronts(objs: &[Vec<f64>]) -> Vec<usize> {
+    let n = objs.len();
+    let mut dominated_by = vec![0usize; n];
+    let mut dominates_list: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for i in 0..n {
+        for j in 0..n {
+            if i != j && dominates(&objs[i], &objs[j]) {
+                dominates_list[i].push(j);
+                dominated_by[j] += 1;
+            }
+        }
+    }
+    let mut front = vec![usize::MAX; n];
+    let mut current: Vec<usize> = (0..n).filter(|&i| dominated_by[i] == 0).collect();
+    let mut level = 0;
+    while !current.is_empty() {
+        let mut next = Vec::new();
+        for &i in &current {
+            front[i] = level;
+            for &j in &dominates_list[i] {
+                dominated_by[j] -= 1;
+                if dominated_by[j] == 0 {
+                    next.push(j);
+                }
+            }
+        }
+        current = next;
+        level += 1;
+    }
+    front
+}
+
+/// Crowding distance within one front (larger = more isolated = preferred).
+pub fn crowding_distance(objs: &[Vec<f64>], members: &[usize]) -> Vec<f64> {
+    let m = members.len();
+    let mut dist = vec![0.0f64; m];
+    if m == 0 {
+        return dist;
+    }
+    let n_obj = objs[members[0]].len();
+    for k in 0..n_obj {
+        let mut order: Vec<usize> = (0..m).collect();
+        order.sort_by(|&a, &b| {
+            objs[members[a]][k]
+                .partial_cmp(&objs[members[b]][k])
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        let lo = objs[members[order[0]]][k];
+        let hi = objs[members[order[m - 1]]][k];
+        dist[order[0]] = f64::INFINITY;
+        dist[order[m - 1]] = f64::INFINITY;
+        if (hi - lo).abs() < 1e-15 {
+            continue;
+        }
+        for w in 1..m - 1 {
+            dist[order[w]] +=
+                (objs[members[order[w + 1]]][k] - objs[members[order[w - 1]]][k]) / (hi - lo);
+        }
+    }
+    dist
+}
+
+impl Nsga2 {
+    /// Binary tournament by (front, crowding).
+    fn select<'a>(
+        &self,
+        history: &'a [Observation],
+        fronts: &[usize],
+        crowd: &[f64],
+        rng: &mut Rng,
+    ) -> &'a Observation {
+        let a = rng.usize(history.len());
+        let b = rng.usize(history.len());
+        let better = |i: usize, j: usize| {
+            (fronts[i], std::cmp::Reverse(ordered(crowd[i])))
+                < (fronts[j], std::cmp::Reverse(ordered(crowd[j])))
+        };
+        if better(a, b) {
+            &history[a]
+        } else {
+            &history[b]
+        }
+    }
+}
+
+fn ordered(x: f64) -> u64 {
+    // Total order for positive floats incl. inf.
+    x.max(0.0).to_bits()
+}
+
+impl Optimizer for Nsga2 {
+    fn name(&self) -> &str {
+        "nsga2"
+    }
+
+    fn propose(&mut self, space: &Space, history: &[Observation], rng: &mut Rng) -> Config {
+        if history.is_empty() {
+            return space.default_config();
+        }
+        if history.len() < self.init_pop {
+            return space.sample(rng);
+        }
+        let objs: Vec<Vec<f64>> = history.iter().map(objectives).collect();
+        let fronts = non_dominated_fronts(&objs);
+        // Per-item crowding within its own front.
+        let mut crowd = vec![0.0f64; history.len()];
+        let max_front = fronts.iter().copied().max().unwrap_or(0);
+        for level in 0..=max_front {
+            let members: Vec<usize> = (0..history.len())
+                .filter(|&i| fronts[i] == level)
+                .collect();
+            let d = crowding_distance(&objs, &members);
+            for (mi, &i) in members.iter().enumerate() {
+                crowd[i] = d[mi];
+            }
+        }
+        let p1 = self.select(history, &fronts, &crowd, rng);
+        let p2 = self.select(history, &fronts, &crowd, rng);
+        let u1 = space.encode(&p1.config);
+        let u2 = space.encode(&p2.config);
+        // Blend crossover + polynomial-ish mutation in the unit cube.
+        let mut child = Vec::with_capacity(u1.len());
+        for (a, b) in u1.iter().zip(&u2) {
+            let w = rng.f64();
+            let mut v = w * a + (1.0 - w) * b;
+            if rng.bool(self.mutation_p) {
+                let delta = rng.normal() / self.eta;
+                v += delta;
+            }
+            child.push(v.clamp(0.0, 1.0));
+        }
+        space.decode(&child)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::search::spaces;
+
+    #[test]
+    fn domination_and_fronts() {
+        let objs = vec![
+            vec![1.0, 1.0], // dominated by 2
+            vec![2.0, 0.5],
+            vec![2.0, 2.0], // dominates 0
+            vec![0.5, 3.0],
+        ];
+        assert!(dominates(&objs[2], &objs[0]));
+        assert!(!dominates(&objs[1], &objs[3]));
+        let fronts = non_dominated_fronts(&objs);
+        assert_eq!(fronts[2], 0);
+        assert_eq!(fronts[3], 0);
+        assert!(fronts[0] > 0);
+    }
+
+    #[test]
+    fn crowding_extremes_infinite() {
+        let objs = vec![vec![0.0], vec![0.5], vec![1.0]];
+        let d = crowding_distance(&objs, &[0, 1, 2]);
+        assert!(d[0].is_infinite() && d[2].is_infinite());
+        assert!(d[1].is_finite());
+    }
+
+    #[test]
+    fn proposals_valid_over_budget() {
+        let space = spaces::kernel_exec();
+        let mut opt = Nsga2::new();
+        let mut rng = Rng::new(7);
+        let mut hist = Vec::new();
+        for i in 0..12 {
+            let c = opt.propose(&space, &hist, &mut rng);
+            assert!(space.is_valid(&c), "{c:?}");
+            let mut o = Observation::new(c, (i as f64).sin());
+            o.extra = vec![-(i as f64)];
+            hist.push(o);
+        }
+    }
+
+    /// Multi-objective run keeps non-dominated diversity: the front of the
+    /// final history should contain >1 distinct config.
+    #[test]
+    fn maintains_pareto_front() {
+        let space = spaces::resnet_qat();
+        let mut opt = Nsga2::new();
+        let mut rng = Rng::new(8);
+        let mut hist: Vec<Observation> = Vec::new();
+        for _ in 0..20 {
+            let c = opt.propose(&space, &hist, &mut rng);
+            let u = space.encode(&c);
+            // Conflicting objectives: f1 = u0, f2 = 1 - u0.
+            let mut o = Observation::new(c, u[0]);
+            o.extra = vec![1.0 - u[0]];
+            hist.push(o);
+        }
+        let objs: Vec<Vec<f64>> = hist.iter().map(objectives).collect();
+        let fronts = non_dominated_fronts(&objs);
+        let front0 = fronts.iter().filter(|&&f| f == 0).count();
+        assert!(front0 >= 2, "front collapsed: {front0}");
+    }
+}

@@ -1,0 +1,46 @@
+//! Random search (Bergstra & Bengio, 2012) — the paper's "Random" column.
+//!
+//! Round 0 uses the default configuration (the paper's protocol recommends
+//! defaults first for every method), then i.i.d. samples from the space.
+
+use super::{Observation, Optimizer};
+use crate::search::{Config, Space};
+use crate::util::rng::Rng;
+
+pub struct RandomSearch;
+
+impl Optimizer for RandomSearch {
+    fn name(&self) -> &str {
+        "random"
+    }
+
+    fn propose(&mut self, space: &Space, history: &[Observation], rng: &mut Rng) -> Config {
+        if history.is_empty() {
+            space.default_config()
+        } else {
+            space.sample(rng)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::search::spaces;
+
+    #[test]
+    fn first_round_is_default_then_valid_samples() {
+        let space = spaces::resnet_qat();
+        let mut opt = RandomSearch;
+        let mut rng = Rng::new(0);
+        let mut hist = Vec::new();
+        let c0 = opt.propose(&space, &hist, &mut rng);
+        assert_eq!(c0, space.default_config());
+        hist.push(Observation::new(c0, 0.5));
+        for _ in 0..20 {
+            let c = opt.propose(&space, &hist, &mut rng);
+            assert!(space.is_valid(&c));
+            hist.push(Observation::new(c, 0.1));
+        }
+    }
+}

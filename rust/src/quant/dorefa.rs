@@ -1,0 +1,111 @@
+//! DoReFa fake-quantization in Rust — mirror of the L1 Pallas kernel
+//! (`python/compile/kernels/dorefa.py`) and its jnp oracle.
+//!
+//! Used by property tests (quantization invariants that must agree with the
+//! artifacts' behaviour) and by the deploy engine to pre-quantize host-side
+//! weights when emulating a given bit-width.
+
+/// Uniform quantization of values in [0,1] to `levels` steps:
+/// `round(x * L) / L` with round-half-to-even (matching jnp.round / HLO
+/// round_nearest_even, which the artifacts use).
+pub fn quantize_levels(x: f32, levels: f32) -> f32 {
+    round_half_even(x * levels) / levels
+}
+
+fn round_half_even(x: f32) -> f32 {
+    let r = x.round(); // half away from zero
+    if (x - x.trunc()).abs() == 0.5 {
+        // tie: pick the even neighbour
+        let below = x.floor();
+        let above = x.ceil();
+        if (below as i64) % 2 == 0 {
+            below
+        } else {
+            above
+        }
+    } else {
+        r
+    }
+}
+
+/// DoReFa weight quantization over a slice (per-tensor max-normalized tanh).
+pub fn weight_quant(w: &[f32], kbits: f32) -> Vec<f32> {
+    let levels = (2.0f32).powf(kbits) - 1.0;
+    let t: Vec<f32> = w.iter().map(|x| x.tanh()).collect();
+    let maxabs = t.iter().fold(0.0f32, |m, x| m.max(x.abs())) * 2.0 + 1e-8;
+    t.iter()
+        .map(|x| 2.0 * quantize_levels(x / maxabs + 0.5, levels) - 1.0)
+        .collect()
+}
+
+/// DoReFa activation quantization: quantize_k(clip(a, 0, 1)).
+pub fn act_quant(a: &[f32], kbits: f32) -> Vec<f32> {
+    let levels = (2.0f32).powf(kbits) - 1.0;
+    a.iter()
+        .map(|x| quantize_levels(x.clamp(0.0, 1.0), levels))
+        .collect()
+}
+
+/// Number of distinct representable weight values at k bits.
+pub fn weight_levels(kbits: u32) -> usize {
+    (1usize << kbits).max(2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, F64Range, PairGen, VecGen};
+
+    #[test]
+    fn weight_quant_bounded_and_leveled() {
+        let w: Vec<f32> = (0..64).map(|i| (i as f32 - 32.0) / 8.0).collect();
+        for k in [2.0, 4.0, 8.0] {
+            let q = weight_quant(&w, k);
+            assert!(q.iter().all(|x| (-1.0..=1.0).contains(x)));
+            let mut distinct: Vec<i64> =
+                q.iter().map(|x| (x * 1e5).round() as i64).collect();
+            distinct.sort_unstable();
+            distinct.dedup();
+            assert!(distinct.len() <= weight_levels(k as u32), "k={k}");
+        }
+    }
+
+    #[test]
+    fn act_quant_idempotent_property() {
+        let gen = PairGen(
+            VecGen {
+                elem: F64Range(-2.0, 2.0),
+                min_len: 1,
+                max_len: 64,
+            },
+            F64Range(2.0, 8.0),
+        );
+        check(11, 100, &gen, |(v, k)| {
+            let a: Vec<f32> = v.iter().map(|x| *x as f32).collect();
+            let k = k.round() as u32 as f32;
+            let q1 = act_quant(&a, k);
+            let q2 = act_quant(&q1, k);
+            for (x, y) in q1.iter().zip(&q2) {
+                if (x - y).abs() > 1e-6 {
+                    return Err(format!("not idempotent: {x} vs {y}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn monotone_in_bits_error() {
+        // More bits => smaller quantization error on average.
+        let a: Vec<f32> = (0..256).map(|i| i as f32 / 255.0).collect();
+        let err = |k: f32| -> f32 {
+            act_quant(&a, k)
+                .iter()
+                .zip(&a)
+                .map(|(q, x)| (q - x).abs())
+                .sum::<f32>()
+        };
+        assert!(err(2.0) > err(4.0));
+        assert!(err(4.0) > err(8.0));
+    }
+}

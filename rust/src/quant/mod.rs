@@ -1,0 +1,95 @@
+//! Quantization schemes and Rust-side reference implementations.
+//!
+//! * [`Scheme`] — deployment bit-widths (FP16/INT8/INT4, Table 4/5, Fig. 5)
+//!   and QAT precisions (w8a8/w4a4/w2a2, Table 1).
+//! * [`dorefa`] — DoReFa fake-quantization in Rust, the oracle used by the
+//!   property tests to cross-check the simulator's quantization assumptions
+//!   and by the deploy engine to quantize host-side weights.
+
+pub mod dorefa;
+
+/// Deployment quantization type (paper Tables 3-5, Figure 5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Scheme {
+    FP16,
+    INT8,
+    INT4,
+}
+
+impl Scheme {
+    pub const ALL: [Scheme; 3] = [Scheme::FP16, Scheme::INT8, Scheme::INT4];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Scheme::FP16 => "FP16",
+            Scheme::INT8 => "INT8",
+            Scheme::INT4 => "INT4",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Scheme> {
+        match s.to_ascii_uppercase().as_str() {
+            "FP16" => Some(Scheme::FP16),
+            "INT8" => Some(Scheme::INT8),
+            "INT4" => Some(Scheme::INT4),
+            _ => None,
+        }
+    }
+
+    pub fn bits(&self) -> u32 {
+        match self {
+            Scheme::FP16 => 16,
+            Scheme::INT8 => 8,
+            Scheme::INT4 => 4,
+        }
+    }
+
+    pub fn bytes_per_weight(&self) -> f64 {
+        self.bits() as f64 / 8.0
+    }
+
+    /// The runtime `bits` scalar fed to the DoReFa artifacts ("FP16" is
+    /// modelled as 16-level-exponent quantization, effectively lossless for
+    /// these models).
+    pub fn dorefa_bits(&self) -> f32 {
+        self.bits() as f32
+    }
+}
+
+/// QAT precision pair (Table 1 rows).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QatPrecision {
+    pub wbits: u32,
+    pub abits: u32,
+}
+
+impl QatPrecision {
+    pub const W8A8: QatPrecision = QatPrecision { wbits: 8, abits: 8 };
+    pub const W4A4: QatPrecision = QatPrecision { wbits: 4, abits: 4 };
+    pub const W2A2: QatPrecision = QatPrecision { wbits: 2, abits: 2 };
+    pub const TABLE1: [QatPrecision; 3] =
+        [QatPrecision::W8A8, QatPrecision::W4A4, QatPrecision::W2A2];
+
+    pub fn label(&self) -> String {
+        format!("w{}a{}", self.wbits, self.abits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scheme_roundtrip_and_sizes() {
+        for s in Scheme::ALL {
+            assert_eq!(Scheme::parse(s.label()), Some(s));
+        }
+        assert_eq!(Scheme::FP16.bytes_per_weight(), 2.0);
+        assert_eq!(Scheme::INT4.bytes_per_weight(), 0.5);
+    }
+
+    #[test]
+    fn qat_labels() {
+        assert_eq!(QatPrecision::W2A2.label(), "w2a2");
+    }
+}

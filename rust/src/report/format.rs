@@ -1,0 +1,33 @@
+//! Formatting helpers shared by the table regenerators.
+
+/// "92.80 ± 0.22" accuracy cell (paper Tables 1/2/6 style).
+pub fn acc_pm(mean_frac: f64, std_frac: f64) -> String {
+    format!("{:.2} ± {:.2}", mean_frac * 100.0, std_frac * 100.0)
+}
+
+/// "1.85×" speedup cell (paper Table 3 style).
+pub fn speedup(default_us: f64, tuned_us: f64) -> String {
+    format!("{:.2}×", default_us / tuned_us)
+}
+
+/// "52.87" latency cell.
+pub fn us(v: f64) -> String {
+    format!("{v:.2}")
+}
+
+/// Table 5 cell.
+pub fn check_cell(fits: bool) -> String {
+    (if fits { "✓" } else { "×" }).to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn formats() {
+        assert_eq!(acc_pm(0.9280, 0.0022), "92.80 ± 0.22");
+        assert_eq!(speedup(51.70, 27.96), "1.85×");
+        assert_eq!(check_cell(true), "✓");
+    }
+}

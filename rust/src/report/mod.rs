@@ -1,0 +1,5 @@
+//! Paper table/figure emitters (stdout markdown + `results/*.csv`).
+
+pub mod format;
+
+pub use format::{acc_pm, check_cell, speedup, us};

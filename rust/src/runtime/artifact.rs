@@ -1,0 +1,327 @@
+//! Manifest-driven artifact registry + executable cache.
+//!
+//! `python/compile/aot.py` writes `artifacts/manifest.json` describing every
+//! lowered graph: typed input list (name / shape / role / init) and output
+//! shapes.  This module loads the manifest, compiles HLO text on demand
+//! through the shared PJRT client (caching executables), and provides the
+//! generic state-threading call convention used by the trainer and the
+//! token-generation engine:
+//!
+//! * inputs = `[state..., frozen..., data..., scalars...]` in manifest order
+//! * outputs `[0..state_count)` replace the `state` inputs on the next call
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::client::global_client;
+use super::tensor::Tensor;
+use crate::util::json::{self, Json};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InputRole {
+    State,
+    Frozen,
+    Data,
+    Scalar,
+}
+
+impl InputRole {
+    fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "state" => InputRole::State,
+            "frozen" => InputRole::Frozen,
+            "data" => InputRole::Data,
+            "scalar" => InputRole::Scalar,
+            other => bail!("unknown input role '{other}'"),
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct InputSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub role: InputRole,
+    pub init: String,
+}
+
+impl InputSpec {
+    /// Build the initial tensor for a state/frozen input per its init spec.
+    pub fn init_tensor(&self, rng: &mut Rng) -> Tensor {
+        match self.init.as_str() {
+            "he" => Tensor::he_normal(&self.shape, rng),
+            "zeros" | "none" => Tensor::zeros(&self.shape),
+            "ones" => Tensor::ones(&self.shape),
+            "embed" => Tensor::embed_init(&self.shape, rng),
+            "lora_a" => Tensor::lora_a_init(&self.shape, rng),
+            other => {
+                debug_assert!(false, "unknown init '{other}'");
+                Tensor::zeros(&self.shape)
+            }
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<InputSpec>,
+    pub output_shapes: Vec<Vec<usize>>,
+    pub state_count: usize,
+    pub meta: Json,
+}
+
+impl Artifact {
+    fn from_json(dir: &Path, v: &Json) -> Result<Artifact> {
+        let name = v.req_str("name")?.to_string();
+        let file = dir.join(v.req_str("file")?);
+        let mut inputs = Vec::new();
+        for item in v.req_arr("inputs")? {
+            inputs.push(InputSpec {
+                name: item.req_str("name")?.to_string(),
+                shape: shape_of(item.req_arr("shape")?),
+                role: InputRole::parse(item.req_str("role")?)?,
+                init: item
+                    .get("init")
+                    .and_then(|j| j.as_str())
+                    .unwrap_or("none")
+                    .to_string(),
+            });
+        }
+        let output_shapes = v
+            .req_arr("outputs")?
+            .iter()
+            .map(|o| Ok(shape_of(o.req_arr("shape")?)))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Artifact {
+            name,
+            file,
+            inputs,
+            output_shapes,
+            state_count: v.req_f64("state_count")? as usize,
+            meta: v.get("meta").cloned().unwrap_or(Json::obj()),
+        })
+    }
+
+    pub fn inputs_with_role(&self, role: InputRole) -> Vec<&InputSpec> {
+        self.inputs.iter().filter(|i| i.role == role).collect()
+    }
+
+    /// Initial tensors for every `state` input (threaded params/opt-state).
+    pub fn init_state(&self, rng: &mut Rng) -> Vec<Tensor> {
+        self.inputs_with_role(InputRole::State)
+            .iter()
+            .map(|s| s.init_tensor(rng))
+            .collect()
+    }
+
+    /// Initial tensors for every `frozen` input (e.g. QLoRA base weights).
+    pub fn init_frozen(&self, rng: &mut Rng) -> Vec<Tensor> {
+        self.inputs_with_role(InputRole::Frozen)
+            .iter()
+            .map(|s| s.init_tensor(rng))
+            .collect()
+    }
+}
+
+fn shape_of(arr: &[Json]) -> Vec<usize> {
+    arr.iter()
+        .map(|d| d.as_f64().unwrap_or(0.0) as usize)
+        .collect()
+}
+
+/// The registry: manifest + lazily compiled executables.
+pub struct ArtifactSet {
+    pub dir: PathBuf,
+    artifacts: HashMap<String, Artifact>,
+    // PJRT handles are Rc-backed (single-threaded); the cache follows suit.
+    cache: RefCell<HashMap<String, Rc<Executor>>>,
+}
+
+impl ArtifactSet {
+    /// Load `dir/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<ArtifactSet> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                manifest_path.display()
+            )
+        })?;
+        let v = json::parse(&text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let mut artifacts = HashMap::new();
+        for item in v.req_arr("artifacts")? {
+            let art = Artifact::from_json(&dir, item)?;
+            artifacts.insert(art.name.clone(), art);
+        }
+        Ok(ArtifactSet {
+            dir,
+            artifacts,
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Default location: `$HAQA_ARTIFACTS` or `artifacts/` under the cwd
+    /// (walking up so `cargo test` from anywhere in the workspace works).
+    pub fn load_default() -> Result<ArtifactSet> {
+        if let Ok(dir) = std::env::var("HAQA_ARTIFACTS") {
+            return ArtifactSet::load(dir);
+        }
+        let mut cur = std::env::current_dir()?;
+        loop {
+            let cand = cur.join("artifacts");
+            if cand.join("manifest.json").exists() {
+                return ArtifactSet::load(cand);
+            }
+            if !cur.pop() {
+                bail!("artifacts/manifest.json not found — run `make artifacts`");
+            }
+        }
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.artifacts.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Artifact> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))
+    }
+
+    /// Artifacts whose meta.family matches.
+    pub fn family(&self, family: &str) -> Vec<&Artifact> {
+        let mut v: Vec<&Artifact> = self
+            .artifacts
+            .values()
+            .filter(|a| a.meta.get("family").and_then(|j| j.as_str()) == Some(family))
+            .collect();
+        v.sort_by(|a, b| a.name.cmp(&b.name));
+        v
+    }
+
+    /// Compile (or fetch the cached) executable for an artifact.
+    pub fn executor(&self, name: &str) -> Result<Rc<Executor>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let art = self.get(name)?.clone();
+        let client = global_client()?;
+        let proto = xla::HloModuleProto::from_text_file(
+            art.file
+                .to_str()
+                .ok_or_else(|| anyhow!("non-utf8 path {:?}", art.file))?,
+        )
+        .map_err(|e| anyhow!("parse {}: {e:?}", art.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        let executor = Rc::new(Executor { artifact: art, exe });
+        self.cache
+            .borrow_mut()
+            .insert(name.to_string(), executor.clone());
+        Ok(executor)
+    }
+}
+
+/// A compiled artifact plus its typed calling convention.
+pub struct Executor {
+    pub artifact: Artifact,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executor {
+    /// Assemble the full positional argument list from role-sorted sources.
+    ///
+    /// * `state`  — current threaded state (order = manifest order of
+    ///   `state` inputs); must match `state_count` tensors.
+    /// * `frozen` — tensors for `frozen` inputs (manifest order).
+    /// * `named`  — `data` and `scalar` inputs by name.
+    pub fn build_args(
+        &self,
+        state: &[Tensor],
+        frozen: &[Tensor],
+        named: &HashMap<&str, Tensor>,
+    ) -> Result<Vec<Tensor>> {
+        let mut out = Vec::with_capacity(self.artifact.inputs.len());
+        let (mut si, mut fi) = (0usize, 0usize);
+        for spec in &self.artifact.inputs {
+            let t = match spec.role {
+                InputRole::State => {
+                    let t = state
+                        .get(si)
+                        .ok_or_else(|| anyhow!("missing state tensor #{si}"))?;
+                    si += 1;
+                    t.clone()
+                }
+                InputRole::Frozen => {
+                    let t = frozen
+                        .get(fi)
+                        .ok_or_else(|| anyhow!("missing frozen tensor #{fi}"))?;
+                    fi += 1;
+                    t.clone()
+                }
+                InputRole::Data | InputRole::Scalar => named
+                    .get(spec.name.as_str())
+                    .ok_or_else(|| anyhow!("missing input '{}'", spec.name))?
+                    .clone(),
+            };
+            if t.shape != spec.shape {
+                bail!(
+                    "input '{}' shape {:?} != expected {:?}",
+                    spec.name,
+                    t.shape,
+                    spec.shape
+                );
+            }
+            out.push(t);
+        }
+        Ok(out)
+    }
+
+    /// Execute with a fully assembled positional argument list.
+    pub fn run_raw(&self, args: &[Tensor]) -> Result<Vec<Tensor>> {
+        let literals: Vec<xla::Literal> = args
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<Vec<_>>>()?;
+        let bufs = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.artifact.name))?;
+        let result = bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal_sync: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: always a tuple.
+        let parts = result
+            .to_tuple()
+            .map_err(|e| anyhow!("to_tuple: {e:?}"))?;
+        parts.iter().map(Tensor::from_literal).collect()
+    }
+
+    /// The common call: thread state, return (new_state, metrics).
+    ///
+    /// Outputs `[0..state_count)` become the next state; the rest are
+    /// returned as metrics/payload.
+    pub fn step(
+        &self,
+        state: Vec<Tensor>,
+        frozen: &[Tensor],
+        named: &HashMap<&str, Tensor>,
+    ) -> Result<(Vec<Tensor>, Vec<Tensor>)> {
+        let args = self.build_args(&state, frozen, named)?;
+        let mut outs = self.run_raw(&args)?;
+        let metrics = outs.split_off(self.artifact.state_count);
+        Ok((outs, metrics))
+    }
+}

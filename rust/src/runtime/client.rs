@@ -1,0 +1,28 @@
+//! Thread-local PJRT CPU client.
+//!
+//! `PjRtClient` is `Rc`-backed (not `Send`/`Sync`), so the shared-client
+//! pattern is per-thread: each thread that touches the runtime gets one
+//! client, created on first use.  Creating a client per executable would be
+//! slow (TFRT thread-pool spin-up) and noisy; cloning the handle is an `Rc`
+//! bump.
+
+use std::cell::RefCell;
+
+use anyhow::Result;
+
+thread_local! {
+    static CLIENT: RefCell<Option<xla::PjRtClient>> = const { RefCell::new(None) };
+}
+
+/// The thread's PJRT CPU client (created on first use; handle clone is cheap).
+pub fn global_client() -> Result<xla::PjRtClient> {
+    CLIENT.with(|slot| {
+        let mut slot = slot.borrow_mut();
+        if slot.is_none() {
+            let c = xla::PjRtClient::cpu()
+                .map_err(|e| anyhow::anyhow!("PjRtClient::cpu failed: {e:?}"))?;
+            *slot = Some(c);
+        }
+        Ok(slot.as_ref().expect("set above").clone())
+    })
+}

@@ -1,0 +1,16 @@
+//! PJRT runtime: load `artifacts/*.hlo.txt`, compile once, execute from the
+//! Rust hot path.  Python never runs here — this is the deployment side of
+//! the AOT boundary (see DESIGN.md §3).
+//!
+//! * [`tensor`] — host-side f32 tensor type ⇄ `xla::Literal`.
+//! * [`client`] — process-wide PJRT CPU client singleton.
+//! * [`artifact`] — manifest-driven artifact registry + executable cache +
+//!   the generic state-threading executor every trainer/engine uses.
+
+pub mod artifact;
+pub mod client;
+pub mod tensor;
+
+pub use artifact::{Artifact, ArtifactSet, Executor, InputRole};
+pub use client::global_client;
+pub use tensor::Tensor;

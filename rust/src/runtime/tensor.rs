@@ -1,0 +1,248 @@
+//! Host-side f32 tensor: the currency between the coordinator and PJRT.
+//!
+//! Deliberately minimal — row-major f32 with shape — because everything the
+//! AOT graphs consume/produce is f32 (DESIGN.md §5: one dtype end-to-end
+//! keeps the HLO-text interchange with xla_extension 0.5.1 trivially safe).
+
+use anyhow::Result;
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![0.0; n],
+        }
+    }
+
+    pub fn ones(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![1.0; n],
+        }
+    }
+
+    pub fn scalar(x: f32) -> Self {
+        Tensor {
+            shape: vec![],
+            data: vec![x],
+        }
+    }
+
+    pub fn filled(shape: &[usize], x: f32) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![x; n],
+        }
+    }
+
+    /// He-normal init: N(0, sqrt(2 / fan_in)).  fan_in = product of all but
+    /// the last dim (conv HWIO and dense (in, out) both satisfy this).
+    pub fn he_normal(shape: &[usize], rng: &mut Rng) -> Self {
+        let n: usize = shape.iter().product();
+        let fan_in: usize = if shape.len() >= 2 {
+            shape[..shape.len() - 1].iter().product()
+        } else {
+            1
+        };
+        let scale = (2.0 / fan_in.max(1) as f64).sqrt() as f32;
+        let mut data = vec![0.0; n];
+        rng.fill_normal(&mut data, scale);
+        Tensor {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    /// Embedding init: N(0, 0.02) (GPT-style).
+    pub fn embed_init(shape: &[usize], rng: &mut Rng) -> Self {
+        let n: usize = shape.iter().product();
+        let mut data = vec![0.0; n];
+        rng.fill_normal(&mut data, 0.02);
+        Tensor {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    /// LoRA-A init: N(0, 1/sqrt(d_in)) (Hu et al.; B stays zero so the
+    /// adapter starts as the identity).
+    pub fn lora_a_init(shape: &[usize], rng: &mut Rng) -> Self {
+        let n: usize = shape.iter().product();
+        let fan_in = shape.first().copied().unwrap_or(1);
+        let scale = (1.0 / fan_in.max(1) as f64).sqrt() as f32;
+        let mut data = vec![0.0; n];
+        rng.fill_normal(&mut data, scale);
+        Tensor {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn item(&self) -> f32 {
+        debug_assert_eq!(self.data.len(), 1, "item() on non-scalar tensor");
+        self.data[0]
+    }
+
+    /// Row-major argmax over the last axis; returns indices per row.
+    pub fn argmax_last(&self) -> Vec<usize> {
+        let cols = *self.shape.last().unwrap_or(&1);
+        self.data
+            .chunks(cols)
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap_or(0)
+            })
+            .collect()
+    }
+
+    // ---- Literal interop ---------------------------------------------------
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = xla::Literal::vec1(&self.data);
+        if self.shape.is_empty() {
+            // () scalar: reshape to rank-0
+            lit.reshape(&[])
+                .map_err(|e| anyhow::anyhow!("scalar reshape: {e:?}"))
+        } else {
+            let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+            lit.reshape(&dims)
+                .map_err(|e| anyhow::anyhow!("reshape {:?}: {e:?}", self.shape))
+        }
+    }
+
+    pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit
+            .array_shape()
+            .map_err(|e| anyhow::anyhow!("array_shape: {e:?}"))?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("to_vec<f32>: {e:?}"))?;
+        Ok(Tensor::new(dims, data))
+    }
+}
+
+/// Save a tensor list to a simple little-endian binary container
+/// (`HAQT` magic; used for the pretrained-base cache).
+pub fn save_tensors(path: &std::path::Path, tensors: &[Tensor]) -> Result<()> {
+    let mut buf: Vec<u8> = Vec::new();
+    buf.extend_from_slice(b"HAQT");
+    buf.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
+    for t in tensors {
+        buf.extend_from_slice(&(t.shape.len() as u32).to_le_bytes());
+        for &d in &t.shape {
+            buf.extend_from_slice(&(d as u64).to_le_bytes());
+        }
+        for &x in &t.data {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, buf)?;
+    Ok(())
+}
+
+/// Load a tensor list saved by [`save_tensors`].
+pub fn load_tensors(path: &std::path::Path) -> Result<Vec<Tensor>> {
+    let buf = std::fs::read(path)?;
+    anyhow::ensure!(buf.len() >= 8 && &buf[..4] == b"HAQT", "bad tensor file");
+    let mut off = 4usize;
+    let rd_u32 = |b: &[u8], o: &mut usize| {
+        let v = u32::from_le_bytes(b[*o..*o + 4].try_into().unwrap());
+        *o += 4;
+        v
+    };
+    let count = rd_u32(&buf, &mut off) as usize;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let ndim = rd_u32(&buf, &mut off) as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            let d = u64::from_le_bytes(buf[off..off + 8].try_into().unwrap());
+            off += 8;
+            shape.push(d as usize);
+        }
+        let n: usize = shape.iter().product();
+        let mut data = Vec::with_capacity(n);
+        for _ in 0..n {
+            data.push(f32::from_le_bytes(buf[off..off + 4].try_into().unwrap()));
+            off += 4;
+        }
+        out.push(Tensor::new(shape, data));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_item() {
+        let t = Tensor::scalar(3.5);
+        assert_eq!(t.item(), 3.5);
+        let z = Tensor::zeros(&[2, 3]);
+        assert_eq!(z.len(), 6);
+        assert_eq!(z.shape, vec![2, 3]);
+    }
+
+    #[test]
+    fn argmax_rows() {
+        let t = Tensor::new(vec![2, 3], vec![0.0, 5.0, 1.0, 9.0, 2.0, 3.0]);
+        assert_eq!(t.argmax_last(), vec![1, 0]);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let mut rng = Rng::new(9);
+        let tensors = vec![
+            Tensor::he_normal(&[3, 4], &mut rng),
+            Tensor::scalar(2.5),
+            Tensor::zeros(&[2, 2, 2]),
+        ];
+        let path = std::env::temp_dir().join("haqa_tensor_test.bin");
+        save_tensors(&path, &tensors).unwrap();
+        let back = load_tensors(&path).unwrap();
+        assert_eq!(tensors, back);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn he_normal_scale() {
+        let mut rng = Rng::new(1);
+        let t = Tensor::he_normal(&[64, 64], &mut rng);
+        let var: f32 =
+            t.data.iter().map(|x| x * x).sum::<f32>() / t.len() as f32;
+        let expect = 2.0 / 64.0;
+        assert!((var - expect).abs() < expect * 0.3, "var {var} vs {expect}");
+    }
+}

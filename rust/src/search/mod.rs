@@ -1,0 +1,15 @@
+//! Typed hyperparameter search spaces (paper Appendix D).
+//!
+//! * [`param`] — parameter kinds: log/linear uniform floats, integers,
+//!   categorical choices.
+//! * [`space`] — named collections with sampling, validation, clamping and
+//!   unit-cube encoding (used by the GP and NSGA-II).
+//! * [`spaces`] — the paper's concrete search spaces, verbatim: ResNet QAT,
+//!   LLaMA QLoRA, and the per-kernel deployment execution space.
+
+pub mod param;
+pub mod space;
+pub mod spaces;
+
+pub use param::{Param, ParamKind, Value};
+pub use space::{Config, Space};

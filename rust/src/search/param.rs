@@ -1,0 +1,273 @@
+//! Parameter kinds and values.
+//!
+//! Mirrors the typing the paper's prompts use (Appendix E): `UniformFloat`
+//! (optionally log-scale), `UniformInteger` (optionally log-scale) and
+//! categorical choices (e.g. memory layout row/col-major).
+
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Float(f64),
+    Int(i64),
+    Cat(String),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> f64 {
+        match self {
+            Value::Float(x) => *x,
+            Value::Int(k) => *k as f64,
+            Value::Cat(_) => f64::NAN,
+        }
+    }
+
+    pub fn as_i64(&self) -> i64 {
+        match self {
+            Value::Float(x) => x.round() as i64,
+            Value::Int(k) => *k,
+            Value::Cat(_) => 0,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Cat(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            Value::Float(x) => Json::Num(*x),
+            Value::Int(k) => Json::Num(*k as f64),
+            Value::Cat(s) => Json::Str(s.clone()),
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum ParamKind {
+    /// Uniform float in [lo, hi]; `log` samples/encodes in log space.
+    Float { lo: f64, hi: f64, log: bool },
+    /// Uniform integer in [lo, hi] inclusive; `log` samples in log space.
+    Int { lo: i64, hi: i64, log: bool },
+    /// One of a fixed set of strings.
+    Cat { choices: Vec<String> },
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Param {
+    pub name: String,
+    pub kind: ParamKind,
+    pub default: Value,
+    pub help: String,
+}
+
+impl Param {
+    pub fn float(name: &str, lo: f64, hi: f64, default: f64, help: &str) -> Param {
+        Param {
+            name: name.into(),
+            kind: ParamKind::Float { lo, hi, log: false },
+            default: Value::Float(default),
+            help: help.into(),
+        }
+    }
+
+    pub fn log_float(name: &str, lo: f64, hi: f64, default: f64, help: &str) -> Param {
+        Param {
+            name: name.into(),
+            kind: ParamKind::Float { lo, hi, log: true },
+            default: Value::Float(default),
+            help: help.into(),
+        }
+    }
+
+    pub fn int(name: &str, lo: i64, hi: i64, default: i64, help: &str) -> Param {
+        Param {
+            name: name.into(),
+            kind: ParamKind::Int { lo, hi, log: false },
+            default: Value::Int(default),
+            help: help.into(),
+        }
+    }
+
+    pub fn log_int(name: &str, lo: i64, hi: i64, default: i64, help: &str) -> Param {
+        Param {
+            name: name.into(),
+            kind: ParamKind::Int { lo, hi, log: true },
+            default: Value::Int(default),
+            help: help.into(),
+        }
+    }
+
+    pub fn cat(name: &str, choices: &[&str], default: &str, help: &str) -> Param {
+        Param {
+            name: name.into(),
+            kind: ParamKind::Cat {
+                choices: choices.iter().map(|s| s.to_string()).collect(),
+            },
+            default: Value::Cat(default.into()),
+            help: help.into(),
+        }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> Value {
+        match &self.kind {
+            ParamKind::Float { lo, hi, log } => Value::Float(if *log {
+                rng.log_uniform(*lo, *hi)
+            } else {
+                rng.uniform(*lo, *hi)
+            }),
+            ParamKind::Int { lo, hi, log } => Value::Int(if *log {
+                let x = rng.log_uniform(*lo as f64, *hi as f64 + 1.0);
+                (x.floor() as i64).clamp(*lo, *hi)
+            } else {
+                rng.int(*lo, *hi)
+            }),
+            ParamKind::Cat { choices } => Value::Cat(rng.choice(choices).clone()),
+        }
+    }
+
+    /// Is `v` inside the declared range / choice set?
+    pub fn contains(&self, v: &Value) -> bool {
+        match (&self.kind, v) {
+            (ParamKind::Float { lo, hi, .. }, Value::Float(x)) => {
+                x.is_finite() && *x >= *lo && *x <= *hi
+            }
+            (ParamKind::Float { lo, hi, .. }, Value::Int(k)) => {
+                (*k as f64) >= *lo && (*k as f64) <= *hi
+            }
+            (ParamKind::Int { lo, hi, .. }, Value::Int(k)) => k >= lo && k <= hi,
+            (ParamKind::Int { lo, hi, .. }, Value::Float(x)) => {
+                x.fract() == 0.0 && *x >= *lo as f64 && *x <= *hi as f64
+            }
+            (ParamKind::Cat { choices }, Value::Cat(s)) => choices.contains(s),
+            _ => false,
+        }
+    }
+
+    /// Clamp a raw value into range (used by optimizers after perturbation,
+    /// never by the validator — the agent must stay in range on its own).
+    pub fn clamp(&self, v: &Value) -> Value {
+        match (&self.kind, v) {
+            (ParamKind::Float { lo, hi, .. }, v) => {
+                Value::Float(v.as_f64().clamp(*lo, *hi))
+            }
+            (ParamKind::Int { lo, hi, .. }, v) => Value::Int(v.as_i64().clamp(*lo, *hi)),
+            (ParamKind::Cat { choices }, Value::Cat(s)) if choices.contains(s) => {
+                Value::Cat(s.clone())
+            }
+            (ParamKind::Cat { choices }, _) => Value::Cat(choices[0].clone()),
+        }
+    }
+
+    /// Encode to [0,1] (log-aware); categorical -> index fraction.
+    pub fn encode(&self, v: &Value) -> f64 {
+        match &self.kind {
+            ParamKind::Float { lo, hi, log } => {
+                let x = v.as_f64();
+                if *log {
+                    (x.ln() - lo.ln()) / (hi.ln() - lo.ln())
+                } else {
+                    (x - lo) / (hi - lo)
+                }
+            }
+            ParamKind::Int { lo, hi, log } => {
+                let x = v.as_i64() as f64;
+                if *log {
+                    (x.ln() - (*lo as f64).ln())
+                        / ((*hi as f64).ln() - (*lo as f64).ln() + 1e-12)
+                } else {
+                    (x - *lo as f64) / ((*hi - *lo) as f64).max(1e-12)
+                }
+            }
+            ParamKind::Cat { choices } => {
+                let idx = v
+                    .as_str()
+                    .and_then(|s| choices.iter().position(|c| c == s))
+                    .unwrap_or(0);
+                if choices.len() <= 1 {
+                    0.0
+                } else {
+                    idx as f64 / (choices.len() - 1) as f64
+                }
+            }
+        }
+    }
+
+    /// Decode from [0,1] back into a valid value (inverse of `encode`).
+    pub fn decode(&self, u: f64) -> Value {
+        let u = u.clamp(0.0, 1.0);
+        match &self.kind {
+            ParamKind::Float { lo, hi, log } => Value::Float(
+                if *log {
+                    (lo.ln() + u * (hi.ln() - lo.ln())).exp()
+                } else {
+                    lo + u * (hi - lo)
+                }
+                // Guard float roundoff at the boundaries (exp(ln(lo)) < lo).
+                .clamp(*lo, *hi),
+            ),
+            ParamKind::Int { lo, hi, log } => {
+                let x = if *log {
+                    ((*lo as f64).ln() + u * ((*hi as f64).ln() - (*lo as f64).ln())).exp()
+                } else {
+                    *lo as f64 + u * (*hi - *lo) as f64
+                };
+                Value::Int((x.round() as i64).clamp(*lo, *hi))
+            }
+            ParamKind::Cat { choices } => {
+                let idx = ((u * (choices.len() - 1) as f64).round() as usize)
+                    .min(choices.len() - 1);
+                Value::Cat(choices[idx].clone())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_in_range() {
+        let p = Param::log_float("lr", 1e-5, 0.2, 0.01, "");
+        let mut rng = Rng::new(1);
+        for _ in 0..500 {
+            let v = p.sample(&mut rng);
+            assert!(p.contains(&v), "{v:?}");
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let p = Param::log_float("lr", 1e-5, 0.2, 0.01, "");
+        let v = Value::Float(3e-3);
+        let u = p.encode(&v);
+        let back = p.decode(u);
+        assert!((back.as_f64() - 3e-3).abs() / 3e-3 < 1e-9);
+
+        let q = Param::int("batch", 32, 256, 128, "");
+        for k in [32i64, 100, 256] {
+            let u = q.encode(&Value::Int(k));
+            assert_eq!(q.decode(u).as_i64(), k);
+        }
+    }
+
+    #[test]
+    fn categorical_contains_and_clamp() {
+        let p = Param::cat("layout", &["row", "col"], "row", "");
+        assert!(p.contains(&Value::Cat("col".into())));
+        assert!(!p.contains(&Value::Cat("diag".into())));
+        assert_eq!(p.clamp(&Value::Cat("diag".into())), Value::Cat("row".into()));
+    }
+
+    #[test]
+    fn int_accepts_integral_float() {
+        let p = Param::int("n", 1, 10, 5, "");
+        assert!(p.contains(&Value::Float(7.0)));
+        assert!(!p.contains(&Value::Float(7.5)));
+    }
+}

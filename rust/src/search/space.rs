@@ -1,0 +1,318 @@
+//! Named parameter collections: sampling, validation, encoding.
+
+use std::collections::BTreeMap;
+
+use super::param::{Param, Value};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// A concrete assignment of every parameter in a space.
+pub type Config = BTreeMap<String, Value>;
+
+#[derive(Debug, Clone, Default)]
+pub struct Space {
+    pub name: String,
+    pub params: Vec<Param>,
+}
+
+/// A range/format violation found by [`Space::validate`] — these are exactly
+/// the agent failure modes §3.2 of the paper lists (missing keys, values out
+/// of the declared range, wrong types), surfaced so the coordinator can ask
+/// the agent to retry.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Violation {
+    Missing(String),
+    OutOfRange { name: String, got: String },
+    UnknownKey(String),
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Violation::Missing(k) => write!(f, "missing hyperparameter '{k}'"),
+            Violation::OutOfRange { name, got } => {
+                write!(f, "'{name}' = {got} violates the declared range")
+            }
+            Violation::UnknownKey(k) => write!(f, "unknown hyperparameter '{k}'"),
+        }
+    }
+}
+
+impl Space {
+    pub fn new(name: &str, params: Vec<Param>) -> Space {
+        Space {
+            name: name.into(),
+            params,
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.params.len()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Param> {
+        self.params.iter().find(|p| p.name == name)
+    }
+
+    pub fn default_config(&self) -> Config {
+        self.params
+            .iter()
+            .map(|p| (p.name.clone(), p.default.clone()))
+            .collect()
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> Config {
+        self.params
+            .iter()
+            .map(|p| (p.name.clone(), p.sample(rng)))
+            .collect()
+    }
+
+    /// All violations in `cfg` (empty == valid).
+    pub fn validate(&self, cfg: &Config) -> Vec<Violation> {
+        let mut v = Vec::new();
+        for p in &self.params {
+            match cfg.get(&p.name) {
+                None => v.push(Violation::Missing(p.name.clone())),
+                Some(val) if !p.contains(val) => v.push(Violation::OutOfRange {
+                    name: p.name.clone(),
+                    got: format!("{val:?}"),
+                }),
+                _ => {}
+            }
+        }
+        for k in cfg.keys() {
+            if self.get(k).is_none() {
+                v.push(Violation::UnknownKey(k.clone()));
+            }
+        }
+        v
+    }
+
+    pub fn is_valid(&self, cfg: &Config) -> bool {
+        self.validate(cfg).is_empty()
+    }
+
+    /// Clamp every value into range, fill missing with defaults, drop unknowns.
+    pub fn repair(&self, cfg: &Config) -> Config {
+        self.params
+            .iter()
+            .map(|p| {
+                let v = cfg
+                    .get(&p.name)
+                    .map(|v| p.clamp(v))
+                    .unwrap_or_else(|| p.default.clone());
+                (p.name.clone(), v)
+            })
+            .collect()
+    }
+
+    /// Encode a config to the unit cube (GP / NSGA-II representation).
+    pub fn encode(&self, cfg: &Config) -> Vec<f64> {
+        self.params
+            .iter()
+            .map(|p| {
+                cfg.get(&p.name)
+                    .map(|v| p.encode(v).clamp(0.0, 1.0))
+                    .unwrap_or(0.5)
+            })
+            .collect()
+    }
+
+    /// Decode a unit-cube point back to a valid config.
+    pub fn decode(&self, u: &[f64]) -> Config {
+        self.params
+            .iter()
+            .enumerate()
+            .map(|(i, p)| (p.name.clone(), p.decode(u.get(i).copied().unwrap_or(0.5))))
+            .collect()
+    }
+
+    /// Parse a JSON object (e.g. an agent reply) into a Config.  Unknown
+    /// keys are preserved as violations at validate-time, not dropped here.
+    pub fn config_from_json(&self, j: &Json) -> Config {
+        let mut cfg = Config::new();
+        if let Some(obj) = j.as_obj() {
+            for (k, v) in obj {
+                let val = match v {
+                    Json::Num(x) => {
+                        // ints stay ints when the param says so
+                        match self.get(k).map(|p| &p.kind) {
+                            Some(super::param::ParamKind::Int { .. }) => {
+                                Value::Int(x.round() as i64)
+                            }
+                            _ => Value::Float(*x),
+                        }
+                    }
+                    Json::Str(s) => Value::Cat(s.clone()),
+                    Json::Bool(b) => Value::Cat(b.to_string()),
+                    _ => continue,
+                };
+                cfg.insert(k.clone(), val);
+            }
+        }
+        cfg
+    }
+
+    pub fn config_to_json(&self, cfg: &Config) -> Json {
+        // Emit in declared parameter order (prompt readability).
+        let mut pairs = Vec::new();
+        for p in &self.params {
+            if let Some(v) = cfg.get(&p.name) {
+                pairs.push((p.name.clone(), v.to_json()));
+            }
+        }
+        Json::from_pairs(pairs)
+    }
+
+    /// Rebuild a Space from the JSON emitted by `agent::prompt::space_json`
+    /// (the simulated backend reconstructs the space from CONTEXT_JSON, the
+    /// same information a real LLM reads from the prose).
+    pub fn from_json(name: &str, j: &Json) -> anyhow::Result<Space> {
+        use super::param::{Param, ParamKind};
+        let mut params = Vec::new();
+        for item in j.as_arr().unwrap_or(&[]) {
+            let pname = item.req_str("name")?;
+            let kind = match item.req_str("type")? {
+                "float" => ParamKind::Float {
+                    lo: item.req_f64("lo")?,
+                    hi: item.req_f64("hi")?,
+                    log: item.get("log").and_then(|v| v.as_bool()).unwrap_or(false),
+                },
+                "int" => ParamKind::Int {
+                    lo: item.req_f64("lo")? as i64,
+                    hi: item.req_f64("hi")? as i64,
+                    log: item.get("log").and_then(|v| v.as_bool()).unwrap_or(false),
+                },
+                "cat" => ParamKind::Cat {
+                    choices: item
+                        .req_arr("choices")?
+                        .iter()
+                        .filter_map(|c| c.as_str().map(|s| s.to_string()))
+                        .collect(),
+                },
+                other => anyhow::bail!("unknown param type '{other}'"),
+            };
+            let default = match (&kind, item.req("default")?) {
+                (ParamKind::Int { .. }, Json::Num(x)) => Value::Int(x.round() as i64),
+                (_, Json::Num(x)) => Value::Float(*x),
+                (_, Json::Str(s)) => Value::Cat(s.clone()),
+                _ => anyhow::bail!("bad default for '{pname}'"),
+            };
+            params.push(Param {
+                name: pname.to_string(),
+                kind,
+                default,
+                help: String::new(),
+            });
+        }
+        Ok(Space::new(name, params))
+    }
+
+    /// Human-readable search-space description for the static prompt
+    /// (mirrors the paper's Appendix E formatting).
+    pub fn describe(&self) -> String {
+        let mut s = String::new();
+        for p in &self.params {
+            let (ty, range, log) = match &p.kind {
+                super::param::ParamKind::Float { lo, hi, log } => (
+                    "UniformFloat",
+                    format!("[{lo}, {hi}]"),
+                    *log,
+                ),
+                super::param::ParamKind::Int { lo, hi, log } => (
+                    "UniformInteger",
+                    format!("[{lo}, {hi}]"),
+                    *log,
+                ),
+                super::param::ParamKind::Cat { choices } => (
+                    "Categorical",
+                    format!("{{{}}}", choices.join(", ")),
+                    false,
+                ),
+            };
+            s.push_str(&format!(
+                "'{}': {}. Type: {}, Range: {}, Default: {:?}{}\n",
+                p.name,
+                p.help,
+                ty,
+                range,
+                p.default,
+                if log { ", Log scale" } else { "" }
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::search::param::Param;
+
+    fn space() -> Space {
+        Space::new(
+            "t",
+            vec![
+                Param::log_float("lr", 1e-5, 0.2, 0.01, "learning rate"),
+                Param::int("batch_size", 32, 256, 128, "batch"),
+                Param::cat("layout", &["row", "col"], "row", "layout"),
+            ],
+        )
+    }
+
+    #[test]
+    fn sample_validates() {
+        let s = space();
+        let mut rng = Rng::new(2);
+        for _ in 0..200 {
+            assert!(s.is_valid(&s.sample(&mut rng)));
+        }
+    }
+
+    #[test]
+    fn validate_reports_all_failure_modes() {
+        let s = space();
+        let mut cfg = s.default_config();
+        cfg.insert("lr".into(), Value::Float(5.0)); // out of range
+        cfg.remove("batch_size"); // missing
+        cfg.insert("bogus".into(), Value::Int(1)); // unknown
+        let v = s.validate(&cfg);
+        assert_eq!(v.len(), 3, "{v:?}");
+    }
+
+    #[test]
+    fn repair_produces_valid() {
+        let s = space();
+        let mut cfg = Config::new();
+        cfg.insert("lr".into(), Value::Float(99.0));
+        cfg.insert("layout".into(), Value::Cat("diag".into()));
+        let r = s.repair(&cfg);
+        assert!(s.is_valid(&r), "{r:?}");
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let s = space();
+        let mut rng = Rng::new(3);
+        for _ in 0..50 {
+            let cfg = s.sample(&mut rng);
+            let u = s.encode(&cfg);
+            let back = s.decode(&u);
+            assert!(s.is_valid(&back));
+            // floats should round-trip tightly
+            let lr0 = cfg["lr"].as_f64();
+            let lr1 = back["lr"].as_f64();
+            assert!((lr0.ln() - lr1.ln()).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let s = space();
+        let cfg = s.default_config();
+        let j = s.config_to_json(&cfg);
+        let back = s.config_from_json(&j);
+        assert_eq!(cfg, back);
+    }
+}

@@ -1,0 +1,139 @@
+//! The paper's concrete search spaces (Appendix D / Appendix E), verbatim.
+//!
+//! The trainer maps budget-like parameters (epochs, max_steps) onto the
+//! laptop-scale models with a fixed scale factor; the *space* the optimizers
+//! and the agent see is the paper's.
+
+use super::param::Param;
+use super::space::Space;
+
+/// ResNet-style QAT fine-tuning space (Appendix D, "ResNet-style models").
+pub fn resnet_qat() -> Space {
+    Space::new(
+        "resnet_qat",
+        vec![
+            Param::log_float(
+                "learning_rate", 1e-5, 0.2, 0.01,
+                "The learning rate for the SGD optimizer",
+            ),
+            Param::log_int("batch_size", 32, 256, 128,
+                           "The number of samples per batch"),
+            Param::log_float("weight_decay", 1e-6, 0.1, 5e-4,
+                             "The L2 regularization coefficient"),
+            Param::float("momentum", 0.5, 0.99, 0.9,
+                         "The momentum for the SGD optimizer"),
+            Param::int("num_epochs", 8, 24, 12, "The number of training epochs"),
+        ],
+    )
+}
+
+/// LLaMA QLoRA fine-tuning space (Appendix E, Llama2-7b static prompt).
+pub fn llama_qlora() -> Space {
+    Space::new(
+        "llama_qlora",
+        vec![
+            Param::log_float("learning_rate", 1e-5, 1e-3, 4e-4,
+                             "Learning rate for the optimizer"),
+            Param::int("per_device_train_batch_size", 4, 16, 8,
+                       "Batch size for per-device training"),
+            Param::int("gradient_accumulation_steps", 4, 32, 8,
+                       "Number of steps for gradient accumulation"),
+            Param::log_float("weight_decay", 0.001, 0.1, 0.01,
+                             "L2 regularization coefficient"),
+            Param::int("max_steps", 200, 1000, 400,
+                       "Maximum number of steps for training"),
+            Param::float("max_grad_norm", 0.1, 1.0, 0.3,
+                         "Maximum norm for gradient clipping"),
+            Param::int("lora_r", 8, 64, 16, "Rank parameter for LoRA"),
+            Param::int("lora_alpha", 4, 32, 8, "Alpha parameter for LoRA"),
+            Param::float("lora_dropout", 0.0, 0.3, 0.05,
+                         "Dropout probability for LoRA"),
+            Param::float("warmup_ratio", 0.0, 0.08, 0.03, "warmup_ratio"),
+        ],
+    )
+}
+
+/// Per-kernel execution configuration space (Appendix D, "End-to-end
+/// deployment search" + the §3.1 kernel knobs: block size, tiling, unroll,
+/// memory hierarchy, thread scheduling).
+pub fn kernel_exec() -> Space {
+    Space::new(
+        "kernel_exec",
+        vec![
+            Param::log_int("griddim_x", 1, 256, 32,
+                           "Grid dimension (thread blocks)"),
+            Param::log_int("blockdim_x", 1, 256, 64,
+                           "Threads per block (x)"),
+            Param::log_int("tiling_size", 8, 256, 16,
+                           "Tile edge for memory-access blocking"),
+            Param::log_int("unroll", 1, 16, 2, "Loop unrolling factor"),
+            Param::int("simd_width", 4, 16, 4, "Vector lanes per ALU op"),
+            Param::cat("layout", &["row_major", "col_major"], "row_major",
+                       "Memory layout for operand tensors"),
+            Param::cat("transpose", &["no", "yes"], "no",
+                       "Pre-transpose the weight operand"),
+            Param::int("prefetch", 0, 16, 0, "Software prefetch distance"),
+            Param::cat("memory_hierarchy", &["global", "shared", "local"],
+                       "global", "Tensor placement for the inner tile"),
+            Param::cat(
+                "loop_order",
+                &["mnk", "mkn", "nmk", "nkm", "kmn", "knm"],
+                "mnk",
+                "Loop-nest order for the kernel's 3 loops",
+            ),
+        ],
+    )
+}
+
+/// Bit-width selection space (§3.4 adaptive quantization strategies).
+pub fn bitwidth() -> Space {
+    Space::new(
+        "bitwidth",
+        // "NONE" = reject deployment (no scheme satisfies the constraints —
+        // the Table 5 "×" row at 4 GB).
+        vec![Param::cat("quant", &["FP16", "INT8", "INT4", "NONE"], "INT8",
+                        "Deployment quantization type (NONE = reject)")],
+    )
+}
+
+/// Pallas tile-schedule space for the real-artifact tuning demo (the TPU
+/// analogue; see DESIGN.md §Hardware-Adaptation).  Choices mirror the
+/// AOT'd `micro_matmul_b64_*` tile variants.
+pub fn pallas_tiles() -> Space {
+    Space::new(
+        "pallas_tiles",
+        vec![Param::cat(
+            "tile",
+            &["t32", "t64", "t128", "t64w"],
+            "t64",
+            "qmatmul (bm, bn, bk) VMEM tile schedule",
+        )],
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn paper_spaces_sample_valid() {
+        let mut rng = Rng::new(9);
+        for space in [resnet_qat(), llama_qlora(), kernel_exec(), bitwidth()] {
+            for _ in 0..100 {
+                let cfg = space.sample(&mut rng);
+                assert!(space.is_valid(&cfg), "{}: {cfg:?}", space.name);
+            }
+            assert!(space.is_valid(&space.default_config()));
+        }
+    }
+
+    #[test]
+    fn describe_mentions_every_param() {
+        let s = llama_qlora();
+        let d = s.describe();
+        for p in &s.params {
+            assert!(d.contains(&p.name));
+        }
+    }
+}

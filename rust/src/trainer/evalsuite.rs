@@ -1,0 +1,102 @@
+//! The eight-task evaluation suite (the paper's BoolQ…MathQA stand-ins).
+//!
+//! Each task is scored as next-token accuracy over its predictable
+//! positions using the `lm_eval` artifact's logits, mirroring how the paper
+//! feeds per-task accuracies back into the dynamic prompt.
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::runtime::{ArtifactSet, Tensor};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+use super::data::{ids_to_tensors, lm_batch_ids, LmTaskKind, SEQ, VOCAB};
+
+pub const EVAL_BATCH: usize = 32;
+
+#[derive(Debug, Clone)]
+pub struct EvalReport {
+    /// (task label, accuracy in [0,1]) per task, suite order.
+    pub tasks: Vec<(String, f64)>,
+    pub average: f64,
+    pub mean_loss: f64,
+}
+
+impl EvalReport {
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        for (name, acc) in &self.tasks {
+            o.set(name, Json::Num((*acc * 1e4).round() / 1e4));
+        }
+        o.set("average", Json::Num((self.average * 1e4).round() / 1e4));
+        o
+    }
+}
+
+/// Evaluate (base, lora) across all eight tasks.
+#[allow(clippy::too_many_arguments)]
+pub fn evaluate(
+    set: &ArtifactSet,
+    base: &[Tensor],
+    lora: &[Tensor],
+    bits: f32,
+    rank_mask: &Tensor,
+    lora_scale: f32,
+    seed: u64,
+) -> Result<EvalReport> {
+    let eval = set.executor("lm_eval")?;
+    // frozen inputs = base ++ lora (manifest order).
+    let mut frozen: Vec<Tensor> = Vec::with_capacity(base.len() + lora.len());
+    frozen.extend_from_slice(base);
+    frozen.extend_from_slice(lora);
+
+    let mut tasks = Vec::new();
+    let mut loss_sum = 0.0;
+    for task in LmTaskKind::ALL {
+        // Fixed per-task eval stream (independent of the training stream).
+        let mut rng = Rng::new(seed).split(0xe5 + task as u64);
+        let ids = lm_batch_ids(&mut rng, EVAL_BATCH, task);
+        let (tokens, targets) = ids_to_tensors(&ids);
+        let mut named: HashMap<&str, Tensor> = HashMap::new();
+        named.insert("tokens", tokens);
+        named.insert("targets", targets);
+        named.insert("rank_mask", rank_mask.clone());
+        named.insert("bits", Tensor::scalar(bits));
+        named.insert("lora_scale", Tensor::scalar(lora_scale));
+        let (_, metrics) = eval.step(Vec::new(), &frozen, &named)?;
+        let loss = metrics[0].item() as f64;
+        let logits = &metrics[1]; // (B, T, V)
+        loss_sum += loss;
+
+        let preds = logits.argmax_last(); // B*T entries
+        let range = task.scored_positions();
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for (i, s) in ids.iter().enumerate() {
+            for t in range.clone() {
+                let want = s[t + 1] as usize;
+                if preds[i * SEQ + t] == want {
+                    correct += 1;
+                }
+                total += 1;
+            }
+        }
+        tasks.push((
+            task.label().to_string(),
+            correct as f64 / total.max(1) as f64,
+        ));
+    }
+    let average = tasks.iter().map(|(_, a)| a).sum::<f64>() / tasks.len() as f64;
+    Ok(EvalReport {
+        tasks,
+        average,
+        mean_loss: loss_sum / LmTaskKind::ALL.len() as f64,
+    })
+}
+
+/// Chance-level accuracy for the suite (uniform next-token guessing).
+pub fn chance_level() -> f64 {
+    1.0 / VOCAB as f64
+}

@@ -1,0 +1,233 @@
+//! QLoRA fine-tuning loop (paper Table 2 / Figure 4 track).
+//!
+//! Drives `lm_train_b{4,8,16}`: the frozen DoReFa-quantized base is a
+//! `frozen` input (bit-width is a runtime scalar), the LoRA adapters plus
+//! Adam moments are the threaded state, and every paper hyperparameter maps
+//! to a runtime input:
+//!
+//! * `lora_r`      → rank mask over the rank-64 adapter,
+//! * `lora_alpha`  → the `lora_scale = alpha / r` scalar,
+//! * `warmup_ratio`→ the per-step effective lr schedule computed here,
+//! * `max_steps`   → optimizer updates (scaled by `step_scale` to laptop
+//!   size), and `gradient_accumulation_steps` trades updates for effective
+//!   batch exactly as under a fixed sample budget: updates ≍ 1/accum.
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::runtime::{ArtifactSet, Tensor};
+use crate::search::Config;
+use crate::util::rng::Rng;
+
+use super::data::{lm_batch, SEQ};
+use super::evalsuite::{self, EvalReport};
+use super::qat::snap_batch;
+
+pub const LM_BATCHES: [usize; 3] = [4, 8, 16];
+pub const R_MAX: usize = 64;
+const ADAM_B1: f64 = 0.9;
+const ADAM_B2: f64 = 0.999;
+const D_MODEL: usize = 64;
+
+/// The frozen quantized base weights of one model variant.
+pub struct LmBase {
+    pub tensors: Vec<Tensor>,
+    pub seed: u64,
+}
+
+impl LmBase {
+    /// Initialize from the manifest's frozen-input specs (deterministic in
+    /// `seed`; different seeds = the different "model variants" of Table 2).
+    pub fn new(set: &ArtifactSet, seed: u64) -> Result<LmBase> {
+        let art = set.get("lm_train_b8")?;
+        let mut rng = Rng::new(seed).split(0xba5e);
+        Ok(LmBase {
+            tensors: art.init_frozen(&mut rng),
+            seed,
+        })
+    }
+
+    /// A *pretrained* base: full-parameter Adam training on the task
+    /// mixture via the `lm_pretrain_b16` artifact (the paper fine-tunes
+    /// pretrained checkpoints, so the QLoRA track starts from one too).
+    /// Cached on disk under `artifacts/cache/`, keyed by (seed, steps).
+    pub fn pretrained(set: &ArtifactSet, seed: u64, steps: usize) -> Result<LmBase> {
+        let cache = set
+            .dir
+            .join("cache")
+            .join(format!("lm_base_s{seed}_t{steps}.bin"));
+        if let Ok(tensors) = crate::runtime::tensor::load_tensors(&cache) {
+            return Ok(LmBase { tensors, seed });
+        }
+        let exec = set.executor("lm_pretrain_b16")?;
+        let mut rng = Rng::new(seed).split(0xba5e);
+        let mut state = exec.artifact.init_state(&mut rng);
+        let mut data_rng = Rng::new(seed).split(0x9e7a);
+        let mut named: HashMap<&str, Tensor> = HashMap::new();
+        named.insert("lr", Tensor::scalar(3e-3));
+        named.insert("grad_clip", Tensor::scalar(1.0));
+        for t in 1..=steps {
+            // Pretraining sees only the "generic corpus" subset; QLoRA
+            // fine-tuning sees the full mixture (see data::PRETRAIN_TASKS).
+            let (tokens, targets) = super::data::lm_batch_from(
+                &mut data_rng, 16, None, &super::data::PRETRAIN_TASKS);
+            named.insert("tokens", tokens);
+            named.insert("targets", targets);
+            named.insert(
+                "bc1",
+                Tensor::scalar((1.0 / (1.0 - ADAM_B1.powi(t as i32))) as f32),
+            );
+            named.insert(
+                "bc2",
+                Tensor::scalar((1.0 / (1.0 - ADAM_B2.powi(t as i32))) as f32),
+            );
+            let (new_state, metrics) = exec.step(state, &[], &named)?;
+            state = new_state;
+            let loss = metrics[0].item();
+            anyhow::ensure!(loss.is_finite(), "pretraining diverged at step {t}");
+        }
+        // Base weights are the first third of the state (base, m, v).
+        let nb = exec.artifact.state_count / 3;
+        let tensors: Vec<Tensor> = state[..nb].to_vec();
+        let _ = crate::runtime::tensor::save_tensors(&cache, &tensors);
+        Ok(LmBase { tensors, seed })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct QloraResult {
+    pub report: EvalReport,
+    pub loss_curve: Vec<f64>,
+    pub diverged: bool,
+    pub updates: usize,
+}
+
+impl QloraResult {
+    pub fn score(&self) -> f64 {
+        self.report.average
+    }
+
+    pub fn feedback(&self) -> String {
+        let n = self.loss_curve.len();
+        let tail = &self.loss_curve[n - (n / 3).max(1)..];
+        let slope = if tail.len() >= 2 {
+            (tail[tail.len() - 1] - tail[0]) / tail.len() as f64
+        } else {
+            0.0
+        };
+        format!(
+            "{{\"final_loss\": {:.4}, \"loss_slope\": {:.5}, \"diverged\": {}, \
+             \"tasks\": {}}}",
+            self.loss_curve.last().copied().unwrap_or(f64::NAN),
+            slope,
+            self.diverged,
+            self.report.to_json().to_string(),
+        )
+    }
+}
+
+pub struct QloraJob<'a> {
+    pub set: &'a ArtifactSet,
+    pub base: &'a LmBase,
+    /// Deployment bit-width for the frozen base (4 / 8 / 16).
+    pub bits: f32,
+    pub seed: u64,
+    /// Fraction of the paper's `max_steps` actually run (laptop scale).
+    pub step_scale: f64,
+}
+
+impl<'a> QloraJob<'a> {
+    pub fn run(&self, cfg: &Config) -> Result<QloraResult> {
+        let get = |k: &str, d: f64| cfg.get(k).map(|v| v.as_f64()).unwrap_or(d);
+        let lr0 = get("learning_rate", 4e-4);
+        let wd = get("weight_decay", 0.01);
+        let clip = get("max_grad_norm", 0.3);
+        let max_steps = get("max_steps", 400.0);
+        let accum = get("gradient_accumulation_steps", 8.0).max(1.0);
+        let lora_r = get("lora_r", 16.0).clamp(1.0, R_MAX as f64) as usize;
+        let lora_alpha = get("lora_alpha", 8.0);
+        let dropout_p = get("lora_dropout", 0.05);
+        let warmup = get("warmup_ratio", 0.03);
+        let batch = snap_batch(
+            cfg.get("per_device_train_batch_size")
+                .map(|v| v.as_i64())
+                .unwrap_or(8),
+            &LM_BATCHES,
+        );
+        // Fixed sample budget: more accumulation -> fewer, larger-effective-
+        // batch updates (reference point accum=8).
+        let updates = ((max_steps * self.step_scale * 8.0 / accum).round() as usize).max(4);
+
+        let train = self.set.executor(&format!("lm_train_b{batch}"))?;
+        let mut rng = Rng::new(self.seed).split(0x10ad);
+        let mut state = train.artifact.init_state(&mut rng);
+
+        let mut rank_mask = Tensor::zeros(&[R_MAX]);
+        for i in 0..lora_r {
+            rank_mask.data[i] = 1.0;
+        }
+        let lora_scale = (lora_alpha / lora_r as f64) as f32;
+
+        let mut named: HashMap<&str, Tensor> = HashMap::new();
+        named.insert("weight_decay", Tensor::scalar(wd as f32));
+        named.insert("grad_clip", Tensor::scalar(clip as f32));
+        named.insert("bits", Tensor::scalar(self.bits));
+        named.insert("lora_scale", Tensor::scalar(lora_scale));
+        named.insert("dropout_p", Tensor::scalar(dropout_p as f32));
+        named.insert("rank_mask", rank_mask.clone());
+
+        let warmup_steps = (warmup * updates as f64).ceil().max(1.0);
+        let mut loss_curve = Vec::with_capacity(updates);
+        let mut diverged = false;
+        let mut data_rng = Rng::new(self.seed).split(0xda7a);
+        for t in 1..=updates {
+            let (tokens, targets) = lm_batch(&mut data_rng, batch, None);
+            let mut noise = Tensor::zeros(&[batch, SEQ, D_MODEL]);
+            data_rng.fill_uniform(&mut noise.data);
+            let lr_t = lr0 * (t as f64 / warmup_steps).min(1.0);
+            named.insert("tokens", tokens);
+            named.insert("targets", targets);
+            named.insert("dropout_noise", noise);
+            named.insert("lr", Tensor::scalar(lr_t as f32));
+            named.insert(
+                "bc1",
+                Tensor::scalar((1.0 / (1.0 - ADAM_B1.powi(t as i32))) as f32),
+            );
+            named.insert(
+                "bc2",
+                Tensor::scalar((1.0 / (1.0 - ADAM_B2.powi(t as i32))) as f32),
+            );
+            let (new_state, metrics) = train.step(state, &self.base.tensors, &named)?;
+            state = new_state;
+            let loss = metrics[0].item() as f64;
+            loss_curve.push(loss);
+            if !loss.is_finite() || loss > 50.0 {
+                diverged = true;
+                break;
+            }
+        }
+
+        // LoRA adapters are the first third of the state (lora, m, v).
+        let n_lora = train.artifact.state_count / 3;
+        let lora = &state[..n_lora];
+        let mut report = evalsuite::evaluate(
+            self.set,
+            &self.base.tensors,
+            lora,
+            self.bits,
+            &rank_mask,
+            lora_scale,
+            self.seed,
+        )?;
+        if diverged {
+            report.average = 1.0 / 64.0; // chance level
+        }
+        Ok(QloraResult {
+            report,
+            loss_curve,
+            diverged,
+            updates,
+        })
+    }
+}

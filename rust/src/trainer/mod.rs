@@ -1,0 +1,9 @@
+//! Training substrate: synthetic datasets + the QAT/QLoRA loops that drive
+//! the AOT-lowered train-step artifacts through PJRT.
+
+pub mod data;
+pub mod evalsuite;
+pub mod lm;
+pub mod qat;
+
+pub use data::{ImageDataset, LmTaskKind};

@@ -1,0 +1,160 @@
+//! DoReFa QAT training loop (paper Table 1 track).
+//!
+//! Drives the AOT-lowered `cnn_{s,m,l}_train_b{32,64,128,256}` artifacts:
+//! Rust owns the step loop, the dataset stream, and the hyperparameter →
+//! scalar-input mapping; the fused train-step graph (fwd + bwd + SGD update
+//! with runtime wbits/abits) runs on PJRT.  One "epoch" of the paper's
+//! search space maps to `steps_per_epoch` optimizer steps at laptop scale.
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::quant::QatPrecision;
+use crate::runtime::{ArtifactSet, Tensor};
+use crate::search::Config;
+use crate::util::rng::Rng;
+
+use super::data::ImageDataset;
+
+pub const CNN_BATCHES: [usize; 4] = [32, 64, 128, 256];
+pub const EVAL_BATCH: usize = 256;
+
+/// Snap a requested batch size to the nearest AOT'd variant (log distance).
+pub fn snap_batch(b: i64, options: &[usize]) -> usize {
+    let lb = (b.max(1) as f64).ln();
+    *options
+        .iter()
+        .min_by(|x, y| {
+            let dx = ((**x as f64).ln() - lb).abs();
+            let dy = ((**y as f64).ln() - lb).abs();
+            dx.partial_cmp(&dy).unwrap()
+        })
+        .unwrap()
+}
+
+#[derive(Debug, Clone)]
+pub struct QatResult {
+    /// Held-out accuracy in [0,1] — the optimization objective.
+    pub accuracy: f64,
+    pub eval_loss: f64,
+    pub loss_curve: Vec<f64>,
+    pub diverged: bool,
+    pub steps: usize,
+}
+
+impl QatResult {
+    /// The structured feedback string surfaced to the agent (parsed by the
+    /// simulated policy; readable by a real LLM).
+    pub fn feedback(&self) -> String {
+        let n = self.loss_curve.len();
+        let tail = &self.loss_curve[n - (n / 3).max(1)..];
+        let slope = if tail.len() >= 2 {
+            (tail[tail.len() - 1] - tail[0]) / tail.len() as f64
+        } else {
+            0.0
+        };
+        format!(
+            "{{\"final_loss\": {:.4}, \"loss_slope\": {:.5}, \"diverged\": {}, \
+             \"eval_loss\": {:.4}}}",
+            self.loss_curve.last().copied().unwrap_or(f64::NAN),
+            slope,
+            self.diverged,
+            self.eval_loss
+        )
+    }
+}
+
+pub struct QatJob<'a> {
+    pub set: &'a ArtifactSet,
+    /// `cnn_s` | `cnn_m` | `cnn_l`.
+    pub model: &'a str,
+    pub precision: QatPrecision,
+    pub seed: u64,
+    /// Steps per search-space "epoch" (laptop-scale mapping; see DESIGN.md).
+    pub steps_per_epoch: usize,
+}
+
+impl<'a> QatJob<'a> {
+    /// Train under `cfg` (a `resnet_qat` configuration) and evaluate.
+    pub fn run(&self, cfg: &Config) -> Result<QatResult> {
+        let lr = cfg.get("learning_rate").map(|v| v.as_f64()).unwrap_or(0.01);
+        let momentum = cfg.get("momentum").map(|v| v.as_f64()).unwrap_or(0.9);
+        let wd = cfg.get("weight_decay").map(|v| v.as_f64()).unwrap_or(5e-4);
+        let epochs = cfg.get("num_epochs").map(|v| v.as_i64()).unwrap_or(12).max(1);
+        let batch = snap_batch(
+            cfg.get("batch_size").map(|v| v.as_i64()).unwrap_or(128),
+            &CNN_BATCHES,
+        );
+        let steps = epochs as usize * self.steps_per_epoch;
+
+        let train = self.set.executor(&format!("{}_train_b{batch}", self.model))?;
+        let mut rng = Rng::new(self.seed).split(0x7a7);
+        let mut state = train.artifact.init_state(&mut rng);
+        let mut data = ImageDataset::new(self.seed);
+
+        let mut named: HashMap<&str, Tensor> = HashMap::new();
+        named.insert("lr", Tensor::scalar(lr as f32));
+        named.insert("momentum", Tensor::scalar(momentum as f32));
+        named.insert("weight_decay", Tensor::scalar(wd as f32));
+        named.insert("grad_clip", Tensor::scalar(5.0));
+        named.insert("wbits", Tensor::scalar(self.precision.wbits as f32));
+        named.insert("abits", Tensor::scalar(self.precision.abits as f32));
+
+        let mut loss_curve = Vec::with_capacity(steps);
+        let mut diverged = false;
+        for _ in 0..steps {
+            let (x, y) = data.batch(batch);
+            named.insert("x", x);
+            named.insert("y", y);
+            let (new_state, metrics) = train.step(state, &[], &named)?;
+            state = new_state;
+            let loss = metrics[0].item() as f64;
+            loss_curve.push(loss);
+            if !loss.is_finite() || loss > 50.0 {
+                diverged = true;
+                break;
+            }
+        }
+
+        // Evaluation on the fixed held-out set (params = first half of the
+        // threaded state: [params..., velocities...]).
+        let eval = self.set.executor(&format!("{}_eval", self.model))?;
+        let n_params = train.artifact.state_count / 2;
+        let params = &state[..n_params];
+        let (xe, ye) = ImageDataset::eval_set(self.seed, EVAL_BATCH);
+        let mut enamed: HashMap<&str, Tensor> = HashMap::new();
+        enamed.insert("x", xe);
+        enamed.insert("y", ye);
+        enamed.insert("wbits", Tensor::scalar(self.precision.wbits as f32));
+        enamed.insert("abits", Tensor::scalar(self.precision.abits as f32));
+        let (_, metrics) = eval.step(Vec::new(), params, &enamed)?;
+        let eval_loss = metrics[0].item() as f64;
+        let mut accuracy = metrics[1].item() as f64;
+        if diverged || !accuracy.is_finite() {
+            accuracy = 1.0 / super::data::NUM_CLASSES as f64; // chance
+        }
+        Ok(QatResult {
+            accuracy,
+            eval_loss,
+            loss_curve,
+            diverged,
+            steps,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snap_batch_picks_nearest_log() {
+        assert_eq!(snap_batch(32, &CNN_BATCHES), 32);
+        assert_eq!(snap_batch(45, &CNN_BATCHES), 32);
+        assert_eq!(snap_batch(46, &CNN_BATCHES), 64);
+        assert_eq!(snap_batch(100, &CNN_BATCHES), 128);
+        assert_eq!(snap_batch(256, &CNN_BATCHES), 256);
+        assert_eq!(snap_batch(10_000, &CNN_BATCHES), 256);
+    }
+}

@@ -1,0 +1,142 @@
+//! Micro-benchmark harness (criterion stand-in, offline image).
+//!
+//! All `benches/*.rs` binaries are `harness = false` and use this module:
+//! warmup, timed iterations, robust summary (median / MAD / mean ± std),
+//! and a uniform one-line report so `cargo bench` output is diffable.
+
+use std::time::Instant;
+
+use super::stats;
+
+#[derive(Debug, Clone, Copy)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub iters: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup_iters: 3,
+            iters: 10,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples_us: Vec<f64>,
+}
+
+impl BenchResult {
+    pub fn median_us(&self) -> f64 {
+        stats::median(&self.samples_us)
+    }
+
+    pub fn mad_us(&self) -> f64 {
+        stats::mad(&self.samples_us)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        stats::mean(&self.samples_us)
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} median {:>10.2} µs  mad {:>8.2} µs  mean {:>10.2} µs  (n={})",
+            self.name,
+            self.median_us(),
+            self.mad_us(),
+            self.mean_us(),
+            self.samples_us.len(),
+        )
+    }
+}
+
+/// Time `f` (already including any per-iteration setup) `cfg.iters` times
+/// after warmup; returns per-iteration wall time in microseconds.
+pub fn bench<F: FnMut()>(name: &str, cfg: BenchConfig, mut f: F) -> BenchResult {
+    for _ in 0..cfg.warmup_iters {
+        f();
+    }
+    let mut samples = Vec::with_capacity(cfg.iters);
+    for _ in 0..cfg.iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    BenchResult {
+        name: name.to_string(),
+        samples_us: samples,
+    }
+}
+
+/// Time a batch of `n` inner repetitions per sample (for sub-microsecond
+/// bodies); reports per-repetition time.
+pub fn bench_batched<F: FnMut()>(
+    name: &str,
+    cfg: BenchConfig,
+    inner: usize,
+    mut f: F,
+) -> BenchResult {
+    for _ in 0..cfg.warmup_iters {
+        f();
+    }
+    let mut samples = Vec::with_capacity(cfg.iters);
+    for _ in 0..cfg.iters {
+        let t0 = Instant::now();
+        for _ in 0..inner {
+            f();
+        }
+        samples.push(t0.elapsed().as_secs_f64() * 1e6 / inner as f64);
+    }
+    BenchResult {
+        name: name.to_string(),
+        samples_us: samples,
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Bench-binary flag lookup, tolerant of cargo-bench's extra args
+/// (`--bench`, filters): `--quick` or env `HAQA_QUICK=1`.
+pub fn flag(name: &str) -> bool {
+    let want = format!("--{name}");
+    std::env::args().any(|a| a == want)
+        || std::env::var(format!("HAQA_{}", name.to_uppercase()))
+            .map(|v| v == "1" || v == "true")
+            .unwrap_or(false)
+}
+
+/// Bench-binary `--key=value` / env `HAQA_KEY` lookup.
+pub fn opt(name: &str) -> Option<String> {
+    let pref = format!("--{name}=");
+    std::env::args()
+        .find_map(|a| a.strip_prefix(&pref).map(|s| s.to_string()))
+        .or_else(|| std::env::var(format!("HAQA_{}", name.to_uppercase())).ok())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn produces_requested_samples() {
+        let r = bench(
+            "noop",
+            BenchConfig {
+                warmup_iters: 1,
+                iters: 5,
+            },
+            || {
+                black_box(1 + 1);
+            },
+        );
+        assert_eq!(r.samples_us.len(), 5);
+        assert!(r.median_us() >= 0.0);
+    }
+}

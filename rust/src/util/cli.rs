@@ -1,0 +1,189 @@
+//! Minimal CLI argument parser (clap stand-in, offline image).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional arguments,
+//! with declared options for `--help` generation.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    specs: Vec<OptSpec>,
+    prog: String,
+    about: String,
+}
+
+impl Args {
+    pub fn new(prog: &str, about: &str) -> Self {
+        Args {
+            prog: prog.to_string(),
+            about: about.to_string(),
+            ..Default::default()
+        }
+    }
+
+    pub fn opt(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(OptSpec {
+            name,
+            help,
+            takes_value: true,
+            default: None,
+        });
+        self
+    }
+
+    pub fn opt_default(
+        mut self,
+        name: &'static str,
+        default: &'static str,
+        help: &'static str,
+    ) -> Self {
+        self.specs.push(OptSpec {
+            name,
+            help,
+            takes_value: true,
+            default: Some(default),
+        });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(OptSpec {
+            name,
+            help,
+            takes_value: false,
+            default: None,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\noptions:\n", self.prog, self.about);
+        for spec in &self.specs {
+            let val = if spec.takes_value { " <value>" } else { "" };
+            let def = spec
+                .default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("  --{}{:<24} {}{}\n", spec.name, val, spec.help, def));
+        }
+        s
+    }
+
+    /// Parse an iterator of argument strings (not including argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(mut self, argv: I) -> anyhow::Result<Self> {
+        for spec in &self.specs {
+            if let Some(d) = spec.default {
+                self.flags.insert(spec.name.to_string(), d.to_string());
+            }
+        }
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if arg == "--help" || arg == "-h" {
+                print!("{}", self.usage());
+                std::process::exit(0);
+            }
+            if let Some(body) = arg.strip_prefix("--") {
+                let (key, inline_val) = match body.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| anyhow::anyhow!("unknown option --{key}\n{}", self.usage()))?;
+                if spec.takes_value {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| anyhow::anyhow!("--{key} needs a value"))?,
+                    };
+                    self.flags.insert(key, val);
+                } else {
+                    self.flags.insert(key, "true".to_string());
+                }
+            } else {
+                self.positional.push(arg);
+            }
+        }
+        Ok(self)
+    }
+
+    pub fn parse_env(self) -> anyhow::Result<Self> {
+        self.parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        self.get(name) == Some("true")
+    }
+
+    pub fn get_f64(&self, name: &str) -> anyhow::Result<Option<f64>> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => Ok(Some(s.parse::<f64>().map_err(|_| {
+                anyhow::anyhow!("--{name} expects a number, got '{s}'")
+            })?)),
+        }
+    }
+
+    pub fn get_usize(&self, name: &str) -> anyhow::Result<Option<usize>> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => Ok(Some(s.parse::<usize>().map_err(|_| {
+                anyhow::anyhow!("--{name} expects an integer, got '{s}'")
+            })?)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed_forms() {
+        let a = Args::new("t", "")
+            .opt("seed", "")
+            .opt_default("rounds", "10", "")
+            .flag("quick", "")
+            .parse(argv(&["run", "--seed=42", "--quick", "--rounds", "5"]))
+            .unwrap();
+        assert_eq!(a.positional, vec!["run"]);
+        assert_eq!(a.get("seed"), Some("42"));
+        assert_eq!(a.get_usize("rounds").unwrap(), Some(5));
+        assert!(a.get_bool("quick"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::new("t", "")
+            .opt_default("rounds", "10", "")
+            .parse(argv(&[]))
+            .unwrap();
+        assert_eq!(a.get_usize("rounds").unwrap(), Some(10));
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(Args::new("t", "").parse(argv(&["--nope"])).is_err());
+    }
+}

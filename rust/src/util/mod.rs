@@ -1,0 +1,26 @@
+//! Zero-dependency substrates.
+//!
+//! The build image is offline (only the `xla` crate closure is vendored),
+//! so the pieces a framework would normally pull from crates.io are
+//! implemented here: a JSON parser/writer, a seeded RNG family, descriptive
+//! statistics, a CLI argument parser, a markdown/CSV table renderer, a
+//! micro-benchmark harness (criterion stand-in) and a miniature
+//! property-testing library used by the test suite.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+/// Format a float with engineering-friendly precision (tables/logs).
+pub fn fmt_sig(x: f64, digits: usize) -> String {
+    if x == 0.0 || !x.is_finite() {
+        return format!("{x}");
+    }
+    let mag = x.abs().log10().floor() as i32;
+    let dec = (digits as i32 - 1 - mag).max(0) as usize;
+    format!("{:.*}", dec, x)
+}

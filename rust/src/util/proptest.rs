@@ -1,0 +1,179 @@
+//! Miniature property-testing library (proptest stand-in, offline image).
+//!
+//! `check(seed, cases, gen, prop)` runs `prop` over `cases` generated
+//! inputs; on failure it performs a bounded greedy shrink using the
+//! generator's `shrink` and panics with the minimal counterexample.  Used
+//! throughout `tests/` for coordinator/optimizer/simulator invariants.
+
+use super::rng::Rng;
+
+/// A value generator with an optional shrinker.
+pub trait Gen {
+    type Value: std::fmt::Debug + Clone;
+    fn generate(&self, rng: &mut Rng) -> Self::Value;
+    /// Candidate "smaller" values; default: no shrinking.
+    fn shrink(&self, _v: &Self::Value) -> Vec<Self::Value> {
+        Vec::new()
+    }
+}
+
+/// Run a property over `cases` random inputs.
+pub fn check<G: Gen, P: Fn(&G::Value) -> Result<(), String>>(
+    seed: u64,
+    cases: usize,
+    gen: &G,
+    prop: P,
+) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let v = gen.generate(&mut rng);
+        if let Err(msg) = prop(&v) {
+            // Greedy bounded shrink.
+            let mut best = v.clone();
+            let mut best_msg = msg;
+            let mut budget = 200;
+            'outer: while budget > 0 {
+                for cand in gen.shrink(&best) {
+                    budget -= 1;
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        continue 'outer;
+                    }
+                    if budget == 0 {
+                        break;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed (case {case}, seed {seed}):\n  input: {best:?}\n  error: {best_msg}"
+            );
+        }
+    }
+}
+
+/// Uniform f64 in [lo, hi].
+pub struct F64Range(pub f64, pub f64);
+
+impl Gen for F64Range {
+    type Value = f64;
+    fn generate(&self, rng: &mut Rng) -> f64 {
+        rng.uniform(self.0, self.1)
+    }
+    fn shrink(&self, v: &f64) -> Vec<f64> {
+        let mut out = Vec::new();
+        if (*v - self.0).abs() > 1e-12 {
+            out.push(self.0);
+            out.push(self.0 + (*v - self.0) / 2.0);
+        }
+        out
+    }
+}
+
+/// Uniform integer in [lo, hi].
+pub struct I64Range(pub i64, pub i64);
+
+impl Gen for I64Range {
+    type Value = i64;
+    fn generate(&self, rng: &mut Rng) -> i64 {
+        rng.int(self.0, self.1)
+    }
+    fn shrink(&self, v: &i64) -> Vec<i64> {
+        let mut out = Vec::new();
+        if *v != self.0 {
+            out.push(self.0);
+            out.push(self.0 + (*v - self.0) / 2);
+        }
+        out
+    }
+}
+
+/// Vector of values from an element generator with length in [min_len, max_len].
+pub struct VecGen<G> {
+    pub elem: G,
+    pub min_len: usize,
+    pub max_len: usize,
+}
+
+impl<G: Gen> Gen for VecGen<G> {
+    type Value = Vec<G::Value>;
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        let len = self.min_len + rng.usize(self.max_len - self.min_len + 1);
+        (0..len).map(|_| self.elem.generate(rng)).collect()
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out = Vec::new();
+        if v.len() > self.min_len {
+            out.push(v[..v.len() / 2.max(self.min_len)].to_vec());
+            let mut shorter = v.clone();
+            shorter.pop();
+            out.push(shorter);
+        }
+        out
+    }
+}
+
+/// Pair of independent generators.
+pub struct PairGen<A, B>(pub A, pub B);
+
+impl<A: Gen, B: Gen> Gen for PairGen<A, B> {
+    type Value = (A::Value, B::Value);
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> = self
+            .0
+            .shrink(&v.0)
+            .into_iter()
+            .map(|a| (a, v.1.clone()))
+            .collect();
+        out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check(1, 200, &F64Range(0.0, 1.0), |x| {
+            if (0.0..=1.0).contains(x) {
+                Ok(())
+            } else {
+                Err(format!("{x} out of range"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        check(1, 50, &I64Range(0, 100), |x| {
+            if *x < 95 {
+                Ok(())
+            } else {
+                Err("too big".into())
+            }
+        });
+    }
+
+    #[test]
+    fn vec_gen_respects_bounds() {
+        let g = VecGen {
+            elem: I64Range(0, 5),
+            min_len: 2,
+            max_len: 6,
+        };
+        check(2, 100, &g, |v| {
+            if (2..=6).contains(&v.len()) {
+                Ok(())
+            } else {
+                Err(format!("len {}", v.len()))
+            }
+        });
+    }
+}

@@ -1,0 +1,116 @@
+//! Descriptive statistics for benches and table generation.
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub median: f64,
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation (n-1); 0 for n < 2.
+pub fn std(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+/// Linear-interpolated percentile, p in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut s: Vec<f64> = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (s.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        s[lo]
+    } else {
+        s[lo] + (s[hi] - s[lo]) * (rank - lo as f64)
+    }
+}
+
+/// Median absolute deviation (robust spread for latency benches).
+pub fn mad(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let m = median(xs);
+    let dev: Vec<f64> = xs.iter().map(|x| (x - m).abs()).collect();
+    median(&dev)
+}
+
+pub fn summarize(xs: &[f64]) -> Summary {
+    if xs.is_empty() {
+        return Summary::default();
+    }
+    Summary {
+        n: xs.len(),
+        mean: mean(xs),
+        std: std(xs),
+        min: xs.iter().cloned().fold(f64::INFINITY, f64::min),
+        max: xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+        median: median(xs),
+    }
+}
+
+/// Best-so-far transform for convergence curves (maximization).
+pub fn running_max(xs: &[f64]) -> Vec<f64> {
+    let mut best = f64::NEG_INFINITY;
+    xs.iter()
+        .map(|&x| {
+            best = best.max(x);
+            best
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_moments() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((std(&xs) - 1.2909944487).abs() < 1e-6);
+        assert_eq!(median(&xs), 2.5);
+    }
+
+    #[test]
+    fn percentile_interp() {
+        let xs = [10.0, 20.0, 30.0, 40.0, 50.0];
+        assert_eq!(percentile(&xs, 0.0), 10.0);
+        assert_eq!(percentile(&xs, 100.0), 50.0);
+        assert_eq!(percentile(&xs, 25.0), 20.0);
+    }
+
+    #[test]
+    fn running_max_monotone() {
+        let xs = [3.0, 1.0, 4.0, 1.0, 5.0];
+        assert_eq!(running_max(&xs), vec![3.0, 3.0, 4.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn mad_robust() {
+        let xs = [1.0, 1.0, 1.0, 100.0];
+        assert_eq!(mad(&xs), 0.0);
+    }
+}

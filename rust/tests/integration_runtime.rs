@@ -1,0 +1,144 @@
+//! Integration: manifest → PJRT compile → execute → state threading, across
+//! the real artifacts (requires `make artifacts`).
+
+use std::collections::HashMap;
+
+use haqa::runtime::{ArtifactSet, Tensor};
+use haqa::trainer::data::ImageDataset;
+use haqa::util::rng::Rng;
+
+fn set() -> ArtifactSet {
+    ArtifactSet::load_default().expect("run `make artifacts` first")
+}
+
+#[test]
+fn manifest_covers_all_families() {
+    let s = set();
+    for family in ["cnn_train", "cnn_eval", "lm_train", "lm_eval", "lm_decode",
+                   "lm_pretrain", "micro"] {
+        assert!(!s.family(family).is_empty(), "no artifacts for {family}");
+    }
+    assert!(s.names().len() >= 40, "{}", s.names().len());
+}
+
+#[test]
+fn micro_kernel_executes_and_is_finite() {
+    let s = set();
+    let exec = s.executor("micro_rmsnorm_b1").unwrap();
+    let mut rng = Rng::new(0);
+    let mut named = HashMap::new();
+    for spec in &exec.artifact.inputs {
+        let mut t = Tensor::zeros(&spec.shape);
+        rng.fill_uniform(&mut t.data);
+        named.insert(spec.name.as_str(), t);
+    }
+    let (_, out) = exec.step(Vec::new(), &[], &named).unwrap();
+    assert_eq!(out[0].shape, vec![1, 4096]);
+    assert!(out[0].data.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn cnn_train_state_threading_reduces_loss_on_pjrt() {
+    let s = set();
+    let exec = s.executor("cnn_s_train_b32").unwrap();
+    let mut rng = Rng::new(3);
+    let mut state = exec.artifact.init_state(&mut rng);
+    let mut data = ImageDataset::new(3);
+    let mut named: HashMap<&str, Tensor> = HashMap::new();
+    named.insert("lr", Tensor::scalar(0.05));
+    named.insert("momentum", Tensor::scalar(0.9));
+    named.insert("weight_decay", Tensor::scalar(1e-4));
+    named.insert("grad_clip", Tensor::scalar(5.0));
+    named.insert("wbits", Tensor::scalar(8.0));
+    named.insert("abits", Tensor::scalar(8.0));
+    let mut losses = Vec::new();
+    for _ in 0..12 {
+        let (x, y) = data.batch(32);
+        named.insert("x", x);
+        named.insert("y", y);
+        let (new_state, metrics) = exec.step(state, &[], &named).unwrap();
+        state = new_state;
+        losses.push(metrics[0].item());
+    }
+    assert!(
+        losses.last().unwrap() < losses.first().unwrap(),
+        "{losses:?}"
+    );
+}
+
+#[test]
+fn decode_tile_variants_agree_numerically() {
+    // The tile schedule must not change the math (same check as the pytest
+    // suite, but through the full HLO-text -> PJRT path).
+    let s = set();
+    let a = s.executor("lm_decode_default").unwrap();
+    let b = s.executor("lm_decode_mm64x64x64").unwrap();
+    let mut rng = Rng::new(5);
+    let frozen = a.artifact.init_frozen(&mut rng);
+    let mut named: HashMap<&str, Tensor> = HashMap::new();
+    let tok_spec = a
+        .artifact
+        .inputs
+        .iter()
+        .find(|i| i.name == "tokens")
+        .unwrap();
+    let mut tokens = Tensor::zeros(&tok_spec.shape);
+    // valid one-hot rows
+    for t in 0..tok_spec.shape[1] {
+        tokens.data[t * tok_spec.shape[2] + (t * 7) % tok_spec.shape[2]] = 1.0;
+    }
+    named.insert("tokens", tokens);
+    named.insert("rank_mask", Tensor::ones(&[64]));
+    named.insert("bits", Tensor::scalar(8.0));
+    named.insert("lora_scale", Tensor::scalar(0.5));
+    let (_, la) = a.step(Vec::new(), &frozen, &named).unwrap();
+    let (_, lb) = b.step(Vec::new(), &frozen, &named).unwrap();
+    for (x, y) in la[0].data.iter().zip(&lb[0].data) {
+        assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+    }
+}
+
+#[test]
+fn runtime_bits_scalar_changes_quantization() {
+    let s = set();
+    let exec = s.executor("lm_eval").unwrap();
+    let mut rng = Rng::new(6);
+    let frozen = exec.artifact.init_frozen(&mut rng);
+    let mut named: HashMap<&str, Tensor> = HashMap::new();
+    let tok_spec = exec
+        .artifact
+        .inputs
+        .iter()
+        .find(|i| i.name == "tokens")
+        .unwrap()
+        .clone();
+    let mut tokens = Tensor::zeros(&tok_spec.shape);
+    for b in 0..tok_spec.shape[0] {
+        for t in 0..tok_spec.shape[1] {
+            tokens.data[(b * tok_spec.shape[1] + t) * tok_spec.shape[2] + (b + t) % 64] = 1.0;
+        }
+    }
+    named.insert("targets", tokens.clone());
+    named.insert("tokens", tokens);
+    named.insert("rank_mask", Tensor::ones(&[64]));
+    named.insert("lora_scale", Tensor::scalar(0.5));
+    named.insert("bits", Tensor::scalar(16.0));
+    let (_, hi) = exec.step(Vec::new(), &frozen, &named).unwrap();
+    named.insert("bits", Tensor::scalar(2.0));
+    let (_, lo) = exec.step(Vec::new(), &frozen, &named).unwrap();
+    assert!(
+        (hi[0].item() - lo[0].item()).abs() > 1e-4,
+        "2-bit quantization should change the loss: {} vs {}",
+        hi[0].item(),
+        lo[0].item()
+    );
+}
+
+#[test]
+fn executor_rejects_shape_mismatch() {
+    let s = set();
+    let exec = s.executor("micro_rope_b1").unwrap();
+    let mut named: HashMap<&str, Tensor> = HashMap::new();
+    named.insert("in0", Tensor::zeros(&[2, 128])); // expected (1, 128)
+    assert!(exec.build_args(&[], &[], &named).is_err());
+}

@@ -1,0 +1,186 @@
+//! Cross-module property tests (mini-proptest; coordinator / simulator /
+//! agent invariants).
+
+use haqa::agent::simulated::SimulatedLlm;
+use haqa::agent::{Agent, TaskContext, TaskKind};
+use haqa::hardware::{kernel_latency_us, DeviceProfile, ExecConfig, KernelKind, Workload};
+use haqa::hardware::{memory, ModelProfile};
+use haqa::optimizers::Observation;
+use haqa::quant::Scheme;
+use haqa::search::spaces;
+use haqa::util::json::Json;
+use haqa::util::proptest::{check, Gen, I64Range, PairGen};
+use haqa::util::rng::Rng;
+
+/// Generator: a random valid kernel_exec configuration.
+struct ExecGen;
+
+impl Gen for ExecGen {
+    type Value = haqa::search::Config;
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        spaces::kernel_exec().sample(rng)
+    }
+}
+
+#[test]
+fn prop_simulated_latency_positive_and_bounded() {
+    // Latency is positive, finite, and never better than the calibrated
+    // HAQA optimum for that workload (the model's floor).
+    check(1, 300, &ExecGen, |cfg| {
+        let exec = ExecConfig::from_config(cfg);
+        for kernel in KernelKind::ALL {
+            for batch in [1usize, 64, 128] {
+                let w = Workload::new(kernel, batch);
+                for dev in [DeviceProfile::a6000(), DeviceProfile::adreno740()] {
+                    let lat = kernel_latency_us(&w, &dev, &exec, None);
+                    if !(lat.is_finite() && lat > 0.0) {
+                        return Err(format!("latency {lat}"));
+                    }
+                    let floor =
+                        haqa::hardware::workload::calibrated(&w).1 * dev.kernel_scale;
+                    if lat < floor - 1e-9 {
+                        return Err(format!("below floor: {lat} < {floor}"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_memory_monotone_in_bits_and_size() {
+    check(
+        2,
+        100,
+        &PairGen(I64Range(0, 6), I64Range(0, 6)),
+        |(a, b)| {
+            let all = [
+                ModelProfile::llama2_7b(),
+                ModelProfile::llama2_13b(),
+                ModelProfile::llama32_3b(),
+                ModelProfile::llama3_8b(),
+                ModelProfile::openllama_3b(),
+                ModelProfile::tinyllama_1_1b(),
+                ModelProfile::gpt2_large(),
+            ];
+            let (ma, mb) = (&all[*a as usize], &all[*b as usize]);
+            // fewer bits => less memory
+            let f = memory::footprint_gb(ma, Scheme::FP16);
+            let i8 = memory::footprint_gb(ma, Scheme::INT8);
+            let i4 = memory::footprint_gb(ma, Scheme::INT4);
+            if !(i4 < i8 && i8 < f) {
+                return Err(format!("not monotone in bits: {i4} {i8} {f}"));
+            }
+            // bigger model => more memory at the same scheme
+            if ma.params_b > mb.params_b {
+                let (xa, xb) = (
+                    memory::footprint_gb(ma, Scheme::INT8),
+                    memory::footprint_gb(mb, Scheme::INT8),
+                );
+                if xa <= xb {
+                    return Err(format!("not monotone in size: {xa} <= {xb}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_agent_always_returns_valid_config_despite_failures() {
+    // Whatever the failure-injection seed does, the retry/repair loop must
+    // deliver an in-range config — the §3.3 no-stall guarantee.
+    check(3, 25, &I64Range(0, 10_000), |seed| {
+        let space = spaces::resnet_qat();
+        let backend = SimulatedLlm::new(*seed as u64).with_failure_rate(0.8);
+        let mut agent = Agent::new(Box::new(backend));
+        let mut history = Vec::new();
+        for round in 0..4 {
+            let ctx = TaskContext {
+                kind: TaskKind::Finetune,
+                space: &space,
+                history: &history,
+                rounds_left: 4 - round,
+                hardware: None,
+                objective: Json::obj(),
+            };
+            let (cfg, _) = agent.propose(&ctx).map_err(|e| e.to_string())?;
+            if !space.is_valid(&cfg) {
+                return Err(format!("invalid config: {cfg:?}"));
+            }
+            history.push(Observation::new(cfg, 0.5 + round as f64 * 0.01));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_history_window_monotone_and_budgeted() {
+    check(4, 100, &PairGen(I64Range(1, 60), I64Range(80, 4000)), |(n, budget)| {
+        let space = spaces::llama_qlora();
+        let hist: Vec<Observation> = (0..*n)
+            .map(|i| {
+                let mut o = Observation::new(space.default_config(), i as f64);
+                o.feedback = "f".repeat(200);
+                o
+            })
+            .collect();
+        let mgr = haqa::agent::history::HistoryManager {
+            max_tokens: *budget as usize,
+            max_entries: 16,
+        };
+        let w = mgr.window(&hist);
+        if w.is_empty() {
+            return Err("empty window".into());
+        }
+        if w[0].0 != 0 {
+            return Err("anchor not kept".into());
+        }
+        if w.last().unwrap().0 != (*n as usize) - 1 {
+            return Err("latest round dropped".into());
+        }
+        if !w.windows(2).all(|p| p[0].0 < p[1].0) {
+            return Err("not strictly increasing".into());
+        }
+        if w.len() > 16 {
+            return Err("entry cap violated".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_exec_roundtrip_through_space() {
+    // Config -> ExecConfig -> Config is stable (idempotent repair).
+    check(5, 200, &ExecGen, |cfg| {
+        let space = spaces::kernel_exec();
+        let e1 = ExecConfig::from_config(cfg);
+        let back = e1.to_config(&space);
+        let e2 = ExecConfig::from_config(&back);
+        if e1 != e2 {
+            return Err(format!("{e1:?} != {e2:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dorefa_quant_within_levels() {
+    check(6, 200, &PairGen(I64Range(2, 8), I64Range(1, 512)), |(k, n)| {
+        let mut rng = Rng::new((*k as u64) << 16 | *n as u64);
+        let w: Vec<f32> = (0..*n).map(|_| rng.normal_f32() * 2.0).collect();
+        let q = haqa::quant::dorefa::weight_quant(&w, *k as f32);
+        let levels = haqa::quant::dorefa::weight_levels(*k as u32);
+        let mut distinct: Vec<i64> = q.iter().map(|x| (x * 1e5).round() as i64).collect();
+        distinct.sort_unstable();
+        distinct.dedup();
+        if distinct.len() > levels {
+            return Err(format!("{} levels at k={k}", distinct.len()));
+        }
+        if q.iter().any(|x| !(-1.0..=1.0).contains(x)) {
+            return Err("out of [-1,1]".into());
+        }
+        Ok(())
+    });
+}
