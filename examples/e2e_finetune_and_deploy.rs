@@ -17,7 +17,7 @@
 
 use haqa::agent::TaskKind;
 use haqa::coordinator::scenario::Track;
-use haqa::coordinator::{Scenario, Workflow};
+use haqa::coordinator::{FleetRunner, Scenario, Workflow};
 use haqa::deploy::TokenEngine;
 use haqa::hardware::ExecConfig;
 use haqa::optimizers::best;
@@ -84,35 +84,47 @@ fn main() -> anyhow::Result<()> {
     println!("   loss curve: [{}]", curve.join(", "));
     println!("   per-task: {}", winner.report.to_json().to_string());
 
-    println!("\n== stage 3: deployment tuning (simulated A6000) ==");
-    let ksc = Scenario {
-        name: "e2e".into(),
-        track: Track::Kernel,
-        kernel: "matmul:64".into(),
-        optimizer: "haqa".into(),
-        budget: rounds.max(6),
-        seed: 0,
-        ..Scenario::default()
-    };
-    let kt = wf.run_kernel(&ksc)?;
+    println!("\n== stage 3: deployment tuning fleet (simulated A6000, 2 workers) ==");
+    // Kernel tuning and bit-width selection are independent — run them as a
+    // two-scenario fleet sharing the content-addressed evaluation cache.
+    let deploy_scs = vec![
+        Scenario {
+            name: "e2e_kernel".into(),
+            track: Track::Kernel,
+            kernel: "matmul:64".into(),
+            optimizer: "haqa".into(),
+            budget: rounds.max(6),
+            seed: 0,
+            ..Scenario::default()
+        },
+        Scenario {
+            name: "e2e_bitwidth".into(),
+            track: Track::Bitwidth,
+            model: "llama2-7b".into(),
+            memory_limit_gb: 10.0,
+            ..Scenario::default()
+        },
+    ];
+    let fleet_report = FleetRunner::new(2).run(&deploy_scs);
+    let mut outcomes = fleet_report.outcomes.into_iter();
+    let kt = outcomes.next().unwrap()?;
+    let bw = outcomes.next().unwrap()?;
     println!(
         "   kernel latency: informed start {:.2} µs -> tuned {:.2} µs (llama.cpp default 52.29)",
         -kt.history[0].score,
         -kt.best_score
     );
-    let bsc = Scenario {
-        name: "e2e".into(),
-        track: Track::Bitwidth,
-        model: "llama2-7b".into(),
-        memory_limit_gb: 10.0,
-        ..Scenario::default()
-    };
-    let bw = wf.run_bitwidth(&bsc)?;
     println!(
         "   bit-width pick: {:?} ({:.1} simulated tokens/s)",
         bw.history[0].config.get("quant"),
         bw.best_score
     );
+    if let Some(st) = fleet_report.cache {
+        println!(
+            "   fleet cache: {} hits / {} misses across both tracks",
+            st.hits, st.misses
+        );
+    }
 
     println!("\n== stage 4: serve generation on the PJRT token engine ==");
     let train_art = set.get("lm_train_b8")?;

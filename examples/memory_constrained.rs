@@ -6,12 +6,11 @@ use haqa::coordinator::scenario::Track;
 use haqa::coordinator::{Scenario, Workflow};
 use haqa::hardware::{memory, ModelProfile};
 use haqa::quant::Scheme;
-use haqa::runtime::ArtifactSet;
 use haqa::util::table::Table;
 
 fn main() -> anyhow::Result<()> {
-    let set = ArtifactSet::load_default()?;
-    let wf = Workflow::new(&set);
+    // Bit-width selection runs on the analytic models — no artifacts needed.
+    let wf = Workflow::simulated();
     let model = ModelProfile::llama2_13b();
 
     let mut t = Table::new(

@@ -2,19 +2,21 @@
 //! {w8a8, w4a4, w2a2} across all seven HPO methods (paper §4.2).
 //!
 //! Real training: every cell drives the AOT'd CNN train-step artifacts on
-//! the PJRT CPU client for `budget` rounds per method.
+//! the PJRT CPU client for `budget` rounds per method.  The method sweep
+//! runs as a **scenario fleet**: all (model × precision × method × seed)
+//! cells execute across a worker pool sharing one content-addressed
+//! evaluation cache, so identical configurations proposed by different
+//! methods (e.g. every optimizer's default-config round) train once.
 //!
 //! Flags: `--quick` (cnn_s only, fewer rounds), `--models=s,m,l`,
-//! `--rounds=N`, `--seeds=N`, `--epoch-steps=N`.
+//! `--rounds=N`, `--seeds=N`, `--epoch-steps=N`; env `HAQA_WORKERS`.
 
-use haqa::optimizers::{self, best, Observation};
+use haqa::coordinator::scenario::Track;
+use haqa::coordinator::{FleetRunner, Scenario};
+use haqa::optimizers;
 use haqa::quant::QatPrecision;
 use haqa::report::acc_pm;
-use haqa::runtime::ArtifactSet;
-use haqa::search::spaces;
-use haqa::trainer::qat::QatJob;
 use haqa::util::bench;
-use haqa::util::rng::Rng;
 use haqa::util::stats;
 use haqa::util::table::Table;
 
@@ -41,52 +43,55 @@ fn main() -> anyhow::Result<()> {
         QatPrecision::TABLE1.to_vec()
     };
 
-    let set = ArtifactSet::load_default()?;
-    let space = spaces::resnet_qat();
+    // One scenario per table cell per seed, flattened in table order.
+    let mut scenarios = Vec::new();
+    for model in &models {
+        for prec in &precisions {
+            for method in optimizers::METHODS {
+                for seed in 0..seeds {
+                    scenarios.push(Scenario {
+                        name: format!("t1_{model}_{}_{}_s{seed}", prec.label(), method),
+                        track: Track::FinetuneCnn,
+                        model: model.clone(),
+                        precision: *prec,
+                        optimizer: method.to_string(),
+                        // "Default" evaluates the default config once.
+                        budget: if *method == "default" { 1 } else { rounds },
+                        seed,
+                        steps_per_epoch: epoch_steps,
+                        ..Scenario::default()
+                    });
+                }
+            }
+        }
+    }
+
+    let workers = FleetRunner::workers_from_env(None);
+    let t_start = std::time::Instant::now();
+    let report = FleetRunner::new(workers).run(&scenarios);
+    eprintln!(
+        "  [{:5.0}s] fleet: {} scenarios on {workers} workers",
+        t_start.elapsed().as_secs_f64(),
+        scenarios.len()
+    );
+
     let mut table = Table::new(
         "Table 1 — QAT accuracy (%) by HPO method (mean ± std over seeds)",
         &["Model", "Precision", "Default", "Human", "Local search",
           "Bayesian opt.", "Random search", "NSGA2", "HAQA"],
     );
-    let t_start = std::time::Instant::now();
+    let mut i = 0usize;
     for model in &models {
         for prec in &precisions {
             let mut cells = vec![model.clone(), prec.label()];
             for method in optimizers::METHODS {
                 let mut bests = Vec::new();
-                for seed in 0..seeds {
-                    let job = QatJob {
-                        set: &set,
-                        model,
-                        precision: *prec,
-                        seed,
-                        steps_per_epoch: epoch_steps,
-                    };
-                    let mut opt = if *method == "haqa" {
-                        Box::new(
-                            optimizers::haqa::HaqaOptimizer::with_seed(seed)
-                                .with_objective({
-                                    let mut o = haqa::util::json::Json::obj();
-                                    o.set("model", haqa::util::json::Json::Str(model.clone()));
-                                    o.set("bits", haqa::util::json::Json::Num(prec.wbits as f64));
-                                    o
-                                }),
-                        ) as Box<dyn optimizers::Optimizer>
-                    } else {
-                        optimizers::by_name(method)?
-                    };
-                    let mut rng = Rng::new(seed).split(0x7b1);
-                    let mut hist: Vec<Observation> = Vec::new();
-                    // "Default" evaluates the default config once.
-                    let budget = if *method == "default" { 1 } else { rounds };
-                    for _ in 0..budget {
-                        let cfg = opt.propose(&space, &hist, &mut rng);
-                        let r = job.run(&cfg)?;
-                        let mut obs = Observation::new(cfg, r.accuracy);
-                        obs.feedback = r.feedback();
-                        hist.push(obs);
-                    }
-                    bests.push(best(&hist).unwrap().score);
+                for _seed in 0..seeds {
+                    let out = report.outcomes[i]
+                        .as_ref()
+                        .map_err(|e| anyhow::anyhow!("{}: {e:#}", scenarios[i].name))?;
+                    bests.push(out.best_score);
+                    i += 1;
                 }
                 cells.push(acc_pm(stats::mean(&bests), stats::std(&bests)));
                 eprintln!(
@@ -100,6 +105,12 @@ fn main() -> anyhow::Result<()> {
         }
     }
     table.emit("table1_qat_accuracy.csv");
+    if let Some(st) = report.cache {
+        println!(
+            "evaluation cache: {} hits / {} misses ({} entries) across the sweep",
+            st.hits, st.misses, st.entries
+        );
+    }
     println!(
         "\n(paper shape: HAQA > Human/Local/Bayesian > Random/NSGA2 > Default; \
          gaps widen at w2a2)"

@@ -1,22 +1,22 @@
 //! Table 2/6 regenerator — QLoRA accuracy across the eight-task suite for
 //! INT4/INT8 frozen bases, per HPO method (paper §4.2, Appendix B).
 //!
-//! Real training: the tiny-LM base is pretrained once per variant via the
-//! `lm_pretrain_b16` artifact, then every cell runs the QLoRA train-step
-//! artifacts on PJRT for `budget` rounds per method.
+//! Real training: the tiny-LM base is pretrained once per variant (the
+//! disk cache is written atomically, so parallel workers share it), then
+//! every (variant × bits × method) cell runs as a fleet scenario on the
+//! QLoRA train-step artifacts, with the shared evaluation cache
+//! deduplicating identical configurations across methods.
 //!
 //! Flags: `--quick`, `--variants=N`, `--rounds=N`, `--pretrain=N`,
-//! `--step-scale=F`.
+//! `--step-scale=F`; env `HAQA_WORKERS`.
 
-use haqa::optimizers::{self, best, Observation};
+use haqa::coordinator::scenario::Track;
+use haqa::coordinator::{FleetRunner, Scenario};
+use haqa::optimizers::best;
 use haqa::report::acc_pm;
-use haqa::runtime::ArtifactSet;
-use haqa::search::spaces;
 use haqa::trainer::data::LmTaskKind;
-use haqa::trainer::lm::{LmBase, QloraJob};
 use haqa::util::bench;
-use haqa::util::json::Json;
-use haqa::util::rng::Rng;
+use haqa::util::json;
 use haqa::util::table::Table;
 
 /// Table 2's method roster (no "Default" column in the paper's Table 2).
@@ -39,8 +39,35 @@ fn main() -> anyhow::Result<()> {
         .unwrap_or(0.25);
     let bits_list: Vec<f32> = if quick { vec![4.0] } else { vec![4.0, 8.0] };
 
-    let set = ArtifactSet::load_default()?;
-    let space = spaces::llama_qlora();
+    let mut scenarios = Vec::new();
+    for variant in 0..variants {
+        for &bits in &bits_list {
+            for method in METHODS {
+                scenarios.push(Scenario {
+                    name: format!("t2_v{variant}_int{}_{method}", bits as u32),
+                    track: Track::FinetuneLm,
+                    model: format!("tiny-lm-v{variant}"),
+                    bits,
+                    optimizer: method.to_string(),
+                    budget: rounds,
+                    seed: variant,
+                    step_scale,
+                    pretrain_steps: pretrain,
+                    ..Scenario::default()
+                });
+            }
+        }
+    }
+
+    let workers = FleetRunner::workers_from_env(None);
+    let t_start = std::time::Instant::now();
+    let report = FleetRunner::new(workers).run(&scenarios);
+    eprintln!(
+        "  [{:5.0}s] fleet: {} scenarios on {workers} workers",
+        t_start.elapsed().as_secs_f64(),
+        scenarios.len()
+    );
+
     let mut headers: Vec<&str> = vec!["Model", "Precision", "Method"];
     for t in LmTaskKind::ALL {
         headers.push(t.label());
@@ -51,65 +78,51 @@ fn main() -> anyhow::Result<()> {
         &headers,
     );
 
-    let t_start = std::time::Instant::now();
+    let mut i = 0usize;
     for variant in 0..variants {
-        let base = LmBase::pretrained(&set, variant, pretrain)?;
         for &bits in &bits_list {
             for method in METHODS {
-                let job = QloraJob {
-                    set: &set,
-                    base: &base,
-                    bits,
-                    seed: variant,
-                    step_scale,
-                };
-                let mut opt = if method == "haqa" {
-                    let mut o = Json::obj();
-                    o.set("model", Json::Str(format!("tiny-lm-v{variant}")));
-                    o.set("bits", Json::Num(bits as f64));
-                    Box::new(
-                        optimizers::haqa::HaqaOptimizer::with_seed(variant)
-                            .with_objective(o),
-                    ) as Box<dyn optimizers::Optimizer>
-                } else {
-                    optimizers::by_name(method)?
-                };
-                let mut rng = Rng::new(variant).split(0x7b2);
-                let mut hist: Vec<Observation> = Vec::new();
-                let mut best_report = None;
-                for _ in 0..rounds {
-                    let cfg = opt.propose(&space, &hist, &mut rng);
-                    let r = job.run(&cfg)?;
-                    let score = r.score();
-                    let mut obs = Observation::new(cfg, score);
-                    obs.feedback = r.feedback();
-                    hist.push(obs);
-                    let is_best = best(&hist).map(|b| b.score == score).unwrap_or(false);
-                    if is_best || best_report.is_none() {
-                        best_report = Some(r.report.clone());
-                    }
-                }
-                let report = best_report.unwrap();
+                let out = report.outcomes[i]
+                    .as_ref()
+                    .map_err(|e| anyhow::anyhow!("{}: {e:#}", scenarios[i].name))?;
+                i += 1;
+                // Per-task accuracies ride in the best round's feedback.
+                let b = best(&out.history).expect("non-empty history");
+                let fb = json::parse(&b.feedback)
+                    .map_err(|e| anyhow::anyhow!("feedback not JSON: {e}"))?;
+                let tasks = fb.get("tasks").cloned().unwrap_or(json::Json::obj());
                 let mut cells = vec![
                     format!("tiny-lm-v{variant}"),
                     format!("INT{}", bits as u32),
                     method.to_string(),
                 ];
-                for (_, acc) in &report.tasks {
-                    cells.push(format!("{:.2}", acc * 100.0));
+                for t in LmTaskKind::ALL {
+                    cells.push(
+                        tasks
+                            .get(t.label())
+                            .and_then(|v| v.as_f64())
+                            .map(|a| format!("{:.2}", a * 100.0))
+                            .unwrap_or_else(|| "-".into()),
+                    );
                 }
-                cells.push(acc_pm(report.average, 0.0));
+                cells.push(acc_pm(out.best_score, 0.0));
                 eprintln!(
                     "  [{:5.0}s] v{variant} INT{} {method}: avg {:.2}%",
                     t_start.elapsed().as_secs_f64(),
                     bits as u32,
-                    report.average * 100.0
+                    out.best_score * 100.0
                 );
                 table.row(cells);
             }
         }
     }
     table.emit("table2_qlora_accuracy.csv");
+    if let Some(st) = report.cache {
+        println!(
+            "evaluation cache: {} hits / {} misses ({} entries) across the sweep",
+            st.hits, st.misses, st.entries
+        );
+    }
     println!("\n(paper shape: HAQA best on AVG; INT4 close to INT8 after tuning)");
     Ok(())
 }

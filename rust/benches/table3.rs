@@ -1,22 +1,28 @@
 //! Table 3 regenerator — kernel-level latency, llama.cpp default vs
 //! HAQA-tuned execution configuration, on the simulated A6000 (paper §4.3).
 //!
-//! Also prints the real-artifact section: PJRT-CPU latencies of the AOT'd
-//! qmatmul Pallas tile variants (the TPU-analogue of the same tuning loop).
+//! All 15 (kernel × size) cells run as a parallel scenario fleet through
+//! the unified kernel evaluator; the default-config latency comes from the
+//! same evaluator, so the two columns share one measurement path.
 //!
-//! Flags: `--rounds=N` (agent budget per kernel, default 10), `--skip-real`.
+//! Also prints the real-artifact section: PJRT-CPU latencies of the AOT'd
+//! qmatmul Pallas tile variants (the TPU-analogue of the same loop;
+//! requires `--features pjrt` + `make artifacts`).
+//!
+//! Flags: `--rounds=N` (agent budget per kernel, default 10), `--skip-real`;
+//! env `HAQA_WORKERS`.
 
-use haqa::agent::TaskKind;
+use haqa::coordinator::scenario::Track;
+use haqa::coordinator::{FleetRunner, Scenario};
 use haqa::deploy::tuner::{KernelTuner, PallasTuner};
 use haqa::hardware::{DeviceProfile, ExecConfig, KernelKind, Workload};
-use haqa::optimizers::haqa::HaqaOptimizer;
 use haqa::report::{speedup, us};
 use haqa::runtime::ArtifactSet;
 use haqa::search::spaces;
 use haqa::util::bench;
-use haqa::util::json::Json;
-use haqa::util::rng::Rng;
 use haqa::util::table::Table;
+
+const NOISE_SEED: u64 = 7;
 
 fn main() -> anyhow::Result<()> {
     let rounds: usize = bench::opt("rounds")
@@ -24,31 +30,45 @@ fn main() -> anyhow::Result<()> {
         .unwrap_or(10);
     let profile = DeviceProfile::a6000();
     let space = spaces::kernel_exec();
+
+    let mut scenarios = Vec::new();
+    for kernel in KernelKind::ALL {
+        for batch in [1usize, 64, 128] {
+            scenarios.push(Scenario {
+                name: format!("t3_{}_{batch}", kernel.label().to_lowercase()),
+                track: Track::Kernel,
+                kernel: format!("{}:{batch}", kernel.label().to_lowercase()),
+                device: "a6000".into(),
+                optimizer: "haqa".into(),
+                budget: rounds,
+                seed: NOISE_SEED,
+                ..Scenario::default()
+            });
+        }
+    }
+    let workers = FleetRunner::workers_from_env(None);
+    let report = FleetRunner::new(workers).run(&scenarios);
+
     let mut table = Table::new(
         "Table 3 — kernel latency, default vs HAQA (simulated A6000)",
         &["Kernel", "Input Size", "Default (µs)", "HAQA (µs)", "Speed-up"],
     );
+    let mut i = 0usize;
     for kernel in KernelKind::ALL {
         for batch in [1usize, 64, 128] {
             let w = Workload::new(kernel, batch);
             let tuner = KernelTuner {
                 profile: &profile,
                 workload: w,
-                noise_seed: 7,
+                noise_seed: NOISE_SEED,
             };
             let default_lat =
                 tuner.measure(&ExecConfig::llamacpp_default().to_config(&space));
-            let mut obj = Json::obj();
-            obj.set("kernel", Json::Str(kernel.label().to_lowercase()));
-            obj.set("size", Json::Str(w.size_label()));
-            let mut agent = HaqaOptimizer::with_seed(11 + batch as u64)
-                .for_task(TaskKind::KernelTuning)
-                .with_hardware(profile.to_json())
-                .with_objective(obj);
-            agent.budget = rounds;
-            let mut rng = Rng::new(3);
-            let hist = tuner.tune(&mut agent, &space, rounds, &mut rng);
-            let (_, tuned_lat) = KernelTuner::best(&hist);
+            let out = report.outcomes[i]
+                .as_ref()
+                .map_err(|e| anyhow::anyhow!("{}: {e:#}", scenarios[i].name))?;
+            i += 1;
+            let tuned_lat = -out.best_score;
             table.row(vec![
                 kernel.label().to_string(),
                 w.size_label(),
@@ -59,6 +79,16 @@ fn main() -> anyhow::Result<()> {
         }
     }
     table.emit("table3_kernel_latency.csv");
+    if let Some(st) = report.cache {
+        println!(
+            "evaluation cache: {} hits / {} misses ({} entries); \
+             fleet of {} cells on {workers} workers",
+            st.hits,
+            st.misses,
+            st.entries,
+            scenarios.len()
+        );
+    }
 
     if !bench::flag("skip-real") {
         let set = ArtifactSet::load_default()?;

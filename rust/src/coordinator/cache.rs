@@ -1,0 +1,233 @@
+//! Content-addressed evaluation cache.
+//!
+//! Evaluations are deterministic in (track, scenario knobs, configuration)
+//! — see [`Evaluator`]'s contract — so repeated configurations across
+//! optimizer rounds, method sweeps, bench tables and fleet workers can be
+//! evaluated exactly once.  The key is a 128-bit content hash of the
+//! canonical-JSON rendering (sorted keys, no whitespace, minimal numbers)
+//! of the three components, making it independent of JSON key ordering and
+//! stable across runs.
+//!
+//! The cache is a cheap cloneable handle (`Arc<Mutex<…>>`) shared by every
+//! worker of a fleet; hit/miss counters are surfaced both globally
+//! ([`EvalCache::stats`]) and per-track via
+//! [`TrackOutcome`](super::workflow::TrackOutcome).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use anyhow::Result;
+
+use crate::search::Config;
+use crate::util::hash;
+use crate::util::json::{self, Json};
+
+use super::evaluator::{Evaluation, Evaluator};
+
+/// Aggregate cache counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: usize,
+    pub misses: usize,
+    pub entries: usize,
+}
+
+struct Inner {
+    map: HashMap<u128, Evaluation>,
+    hits: usize,
+    misses: usize,
+}
+
+/// Thread-safe content-addressed cache handle (clone to share).
+#[derive(Clone)]
+pub struct EvalCache {
+    inner: Arc<Mutex<Inner>>,
+}
+
+impl Default for EvalCache {
+    fn default() -> Self {
+        EvalCache::new()
+    }
+}
+
+impl EvalCache {
+    pub fn new() -> EvalCache {
+        EvalCache {
+            inner: Arc::new(Mutex::new(Inner {
+                map: HashMap::new(),
+                hits: 0,
+                misses: 0,
+            })),
+        }
+    }
+
+    /// The deterministic cache key: a content hash of
+    /// `track \n canonical(scope) \n canonical(config)`.
+    pub fn key(track: &str, scope: &Json, config: &Json) -> u128 {
+        let payload = format!(
+            "{}\n{}\n{}",
+            track,
+            json::canonical(scope),
+            json::canonical(config)
+        );
+        hash::content_hash_128(payload.as_bytes())
+    }
+
+    /// Look the configuration up under the evaluator's (track, scope); on a
+    /// miss, evaluate and memoize.  Returns the evaluation and whether it
+    /// was served from the cache.
+    pub fn get_or_evaluate(&self, ev: &dyn Evaluator, cfg: &Config) -> Result<(Evaluation, bool)> {
+        let cfg_json = ev.space().config_to_json(cfg);
+        let key = Self::key(ev.track(), &ev.scope(), &cfg_json);
+        let cached = {
+            let mut g = self.lock();
+            let found = g.map.get(&key).cloned();
+            if found.is_some() {
+                g.hits += 1;
+            }
+            found
+        };
+        if let Some(hit) = cached {
+            return Ok((hit, true));
+        }
+        // Evaluate outside the lock: evaluations can be expensive (training
+        // runs), and determinism means a racing duplicate computes the
+        // identical value, so first-write-wins is safe.
+        let fresh = ev.evaluate(cfg)?;
+        let mut g = self.lock();
+        g.misses += 1;
+        g.map.entry(key).or_insert_with(|| fresh.clone());
+        Ok((fresh, false))
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let g = self.lock();
+        CacheStats {
+            hits: g.hits,
+            misses: g.misses,
+            entries: g.map.len(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.lock().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn lock(&self) -> MutexGuard<'_, Inner> {
+        // A worker that panicked mid-insert cannot corrupt the map (inserts
+        // are single statements); recover instead of propagating poison.
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::cell::Cell;
+
+    use super::*;
+    use crate::search::{spaces, Space};
+
+    /// Counts real evaluations; scores the learning rate so hits are
+    /// distinguishable from misses only by the counter.
+    struct CountingEval {
+        space: Space,
+        scope_tag: f64,
+        calls: Cell<usize>,
+    }
+
+    impl CountingEval {
+        fn new(scope_tag: f64) -> CountingEval {
+            CountingEval {
+                space: spaces::resnet_qat(),
+                scope_tag,
+                calls: Cell::new(0),
+            }
+        }
+    }
+
+    impl Evaluator for CountingEval {
+        fn track(&self) -> &'static str {
+            "counting"
+        }
+        fn space(&self) -> &Space {
+            &self.space
+        }
+        fn scope(&self) -> Json {
+            let mut o = Json::obj();
+            o.set("tag", Json::Num(self.scope_tag));
+            o
+        }
+        fn evaluate(&self, cfg: &Config) -> Result<Evaluation> {
+            self.calls.set(self.calls.get() + 1);
+            Ok(Evaluation {
+                score: cfg["learning_rate"].as_f64(),
+                extra: Vec::new(),
+                feedback: String::new(),
+            })
+        }
+    }
+
+    #[test]
+    fn hit_and_miss_semantics() {
+        let cache = EvalCache::new();
+        let ev = CountingEval::new(1.0);
+        let cfg = ev.space.default_config();
+        let (a, hit_a) = cache.get_or_evaluate(&ev, &cfg).unwrap();
+        let (b, hit_b) = cache.get_or_evaluate(&ev, &cfg).unwrap();
+        assert!(!hit_a && hit_b);
+        assert_eq!(a.score.to_bits(), b.score.to_bits());
+        assert_eq!(ev.calls.get(), 1, "second lookup must be served cached");
+        assert_eq!(
+            cache.stats(),
+            CacheStats {
+                hits: 1,
+                misses: 1,
+                entries: 1
+            }
+        );
+    }
+
+    #[test]
+    fn scope_separates_entries() {
+        let cache = EvalCache::new();
+        let ev1 = CountingEval::new(1.0);
+        let ev2 = CountingEval::new(2.0);
+        let cfg = ev1.space.default_config();
+        cache.get_or_evaluate(&ev1, &cfg).unwrap();
+        let (_, hit) = cache.get_or_evaluate(&ev2, &cfg).unwrap();
+        assert!(!hit, "different scope must not hit");
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn key_stable_across_key_orderings() {
+        let scope_a = crate::util::json::parse(r#"{"batch": 64, "kernel": "matmul"}"#).unwrap();
+        let scope_b = crate::util::json::parse(r#"{"kernel": "matmul", "batch": 64}"#).unwrap();
+        let cfg_a = crate::util::json::parse(r#"{"unroll": 2, "tiling_size": 16}"#).unwrap();
+        let cfg_b = crate::util::json::parse(r#"{"tiling_size": 16, "unroll": 2}"#).unwrap();
+        assert_eq!(
+            EvalCache::key("kernel", &scope_a, &cfg_a),
+            EvalCache::key("kernel", &scope_b, &cfg_b)
+        );
+        assert_ne!(
+            EvalCache::key("kernel", &scope_a, &cfg_a),
+            EvalCache::key("finetune", &scope_a, &cfg_a),
+            "track must separate keys"
+        );
+    }
+
+    #[test]
+    fn shared_handle_sees_one_store() {
+        let cache = EvalCache::new();
+        let clone = cache.clone();
+        let ev = CountingEval::new(3.0);
+        let cfg = ev.space.default_config();
+        clone.get_or_evaluate(&ev, &cfg).unwrap();
+        let (_, hit) = cache.get_or_evaluate(&ev, &cfg).unwrap();
+        assert!(hit, "clones share the underlying store");
+    }
+}

@@ -1,0 +1,170 @@
+//! Parallel scenario-fleet runner.
+//!
+//! Executes a batch of [`Scenario`]s across a pool of scoped OS threads —
+//! the ROADMAP's "as many scenarios as you can imagine" seam.  Guarantees:
+//!
+//! * **Bit-identical to serial.** Every scenario owns its seeded RNG
+//!   streams and its own optimizer, and every [`Evaluator`] is
+//!   deterministic, so a fleet run with N workers produces exactly the
+//!   scores a serial run produces, in input order.
+//! * **Shared deduplication.** All workers share one content-addressed
+//!   [`EvalCache`] (unless disabled), so equal evaluations across
+//!   scenarios, methods and rounds are computed once fleet-wide.
+//! * **Thread-locality respected.** PJRT handles are `Rc`-backed and
+//!   thread-local, so each worker lazily loads its own [`ArtifactSet`] the
+//!   first time it picks up a scenario that trains on PJRT; simulator-only
+//!   scenarios never touch the artifact registry at all.
+//!
+//! Worker count comes from the caller (CLI `--workers`) or the
+//! `HAQA_WORKERS` environment variable, defaulting to 4.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::ArtifactSet;
+
+use super::cache::{CacheStats, EvalCache};
+use super::scenario::Scenario;
+use super::workflow::{TrackOutcome, Workflow};
+
+pub const DEFAULT_WORKERS: usize = 4;
+
+pub struct FleetRunner {
+    pub workers: usize,
+    /// Shared across all workers; `None` disables caching.
+    pub cache: Option<EvalCache>,
+}
+
+/// Results of a fleet run; `outcomes[i]` corresponds to `scenarios[i]`.
+pub struct FleetReport {
+    pub outcomes: Vec<Result<TrackOutcome>>,
+    /// Fleet-wide cache counters (None when caching was disabled).
+    pub cache: Option<CacheStats>,
+}
+
+impl FleetRunner {
+    pub fn new(workers: usize) -> FleetRunner {
+        FleetRunner {
+            workers: workers.max(1),
+            cache: Some(EvalCache::new()),
+        }
+    }
+
+    /// Run every evaluation for real (determinism checks, A/B timing).
+    pub fn without_cache(mut self) -> FleetRunner {
+        self.cache = None;
+        self
+    }
+
+    /// Resolve the worker count: explicit CLI value, else `HAQA_WORKERS`,
+    /// else [`DEFAULT_WORKERS`].
+    pub fn workers_from_env(cli: Option<usize>) -> usize {
+        cli.or_else(|| {
+            std::env::var("HAQA_WORKERS")
+                .ok()
+                .and_then(|v| v.parse().ok())
+        })
+        .unwrap_or(DEFAULT_WORKERS)
+        .max(1)
+    }
+
+    /// Execute the batch; blocks until every scenario finished.
+    pub fn run(&self, scenarios: &[Scenario]) -> FleetReport {
+        let n = scenarios.len();
+        let slots: Mutex<Vec<Option<Result<TrackOutcome>>>> =
+            Mutex::new((0..n).map(|_| None).collect());
+        let next = AtomicUsize::new(0);
+        let workers = self.workers.min(n.max(1));
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(|| {
+                    // Lazily-loaded per-thread artifact registry (PJRT
+                    // clients and executable caches are thread-local).
+                    let mut set: Option<ArtifactSet> = None;
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        // Isolate per-scenario panics: one poisoned cell
+                        // must not abort the rest of the batch.
+                        let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                            || run_one(&scenarios[i], &mut set, self.cache.clone()),
+                        ))
+                        .unwrap_or_else(|p| {
+                            Err(anyhow!(
+                                "scenario '{}' panicked: {}",
+                                scenarios[i].name,
+                                panic_message(&p)
+                            ))
+                        });
+                        slots.lock().unwrap_or_else(|p| p.into_inner())[i] = Some(out);
+                    }
+                });
+            }
+        });
+        let outcomes = slots
+            .into_inner()
+            .unwrap_or_else(|p| p.into_inner())
+            .into_iter()
+            .enumerate()
+            .map(|(i, o)| o.unwrap_or_else(|| Err(anyhow!("scenario #{i}: worker died"))))
+            .collect();
+        FleetReport {
+            outcomes,
+            cache: self.cache.as_ref().map(|c| c.stats()),
+        }
+    }
+}
+
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".into()
+    }
+}
+
+/// Note: a `Track::Joint` scenario reports its *finetune* outcome here (the
+/// kernel and bit-width outcomes are written to their task logs) — see
+/// [`Workflow::run`].
+fn run_one(
+    sc: &Scenario,
+    set: &mut Option<ArtifactSet>,
+    cache: Option<EvalCache>,
+) -> Result<TrackOutcome> {
+    if sc.needs_artifacts() && set.is_none() {
+        *set = Some(ArtifactSet::load_default()?);
+    }
+    let mut wf = match set.as_ref() {
+        Some(s) => Workflow::new(s),
+        None => Workflow::simulated(),
+    };
+    if let Some(c) = cache {
+        wf = wf.with_cache(c);
+    }
+    wf.run(sc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn worker_count_clamps_and_resolves() {
+        assert_eq!(FleetRunner::new(0).workers, 1);
+        assert_eq!(FleetRunner::workers_from_env(Some(7)), 7);
+        assert_eq!(FleetRunner::workers_from_env(Some(0)), 1);
+    }
+
+    #[test]
+    fn empty_batch_is_fine() {
+        let report = FleetRunner::new(4).run(&[]);
+        assert!(report.outcomes.is_empty());
+        assert_eq!(report.cache.unwrap(), CacheStats::default());
+    }
+}

@@ -1,9 +1,25 @@
-//! The HAQA workflow (paper Figure 3): joint fine-tuning + deployment
-//! optimization driven by the agent, with task logs and cost accounting.
+//! The HAQA coordinator (paper Fig. 3): one generic propose→evaluate→
+//! feedback loop behind an [`Evaluator`] seam, with task logs, cost
+//! accounting, a content-addressed evaluation cache and a parallel
+//! scenario-fleet runner.
+//!
+//! * [`scenario`] — launcher input: track, model, device, budget, seeds.
+//! * [`evaluator`] — the `Evaluator` trait + the three track backends
+//!   (fine-tune / kernel / bit-width).
+//! * [`cache`] — deterministic content-addressed evaluation cache.
+//! * [`fleet`] — scoped-thread scenario fleet, bit-identical to serial.
+//! * [`workflow`] — the generic round loop and the joint pipeline.
+//! * [`tasklog`] — per-task JSON logs (§3.3).
 
+pub mod cache;
+pub mod evaluator;
+pub mod fleet;
 pub mod scenario;
 pub mod tasklog;
 pub mod workflow;
 
+pub use cache::{CacheStats, EvalCache};
+pub use evaluator::{Evaluation, Evaluator};
+pub use fleet::{FleetReport, FleetRunner};
 pub use scenario::Scenario;
-pub use workflow::Workflow;
+pub use workflow::{TrackOutcome, Workflow};

@@ -130,6 +130,54 @@ impl Scenario {
         Scenario::from_json(&j)
     }
 
+    /// Load a scenario batch for the fleet runner: a top-level array, an
+    /// object with a `"scenarios"` array, or a single scenario object.
+    /// An object that looks like neither (e.g. a typo'd wrapper key) is a
+    /// hard error — `from_json` ignores unknown keys, so falling through to
+    /// a single default scenario would silently run the wrong batch.
+    pub fn load_many(path: &str) -> Result<Vec<Scenario>> {
+        const KNOWN_KEYS: &[&str] = &[
+            "name", "task", "model", "precision", "bits", "optimizer", "budget",
+            "seed", "device", "kernel", "steps_per_epoch", "step_scale",
+            "pretrain_steps", "memory_limit_gb",
+        ];
+        let text = std::fs::read_to_string(path)?;
+        let j = crate::util::json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("scenarios {path}: {e}"))?;
+        let items: Vec<&Json> = if let Some(arr) = j.as_arr() {
+            arr.iter().collect()
+        } else if let Some(scenarios) = j.get("scenarios") {
+            scenarios
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("scenarios {path}: \"scenarios\" is not an array"))?
+                .iter()
+                .collect()
+        } else if j
+            .as_obj()
+            .map(|kv| kv.iter().any(|(k, _)| KNOWN_KEYS.contains(&k.as_str())))
+            .unwrap_or(false)
+        {
+            vec![&j]
+        } else {
+            bail!(
+                "scenarios {path}: expected an array, an object with a \
+                 \"scenarios\" array, or a single scenario object with at \
+                 least one known field"
+            );
+        };
+        items.into_iter().map(Scenario::from_json).collect()
+    }
+
+    /// Does this scenario's track drive PJRT training (and therefore need
+    /// the AOT artifact registry)?  Kernel and bit-width tracks run
+    /// entirely on the analytic hardware simulator.
+    pub fn needs_artifacts(&self) -> bool {
+        matches!(
+            self.track,
+            Track::FinetuneCnn | Track::FinetuneLm | Track::Joint
+        )
+    }
+
     pub fn device_profile(&self) -> crate::hardware::DeviceProfile {
         match self.device.as_str() {
             "adreno740" | "mobile" => crate::hardware::DeviceProfile::adreno740(),
@@ -173,5 +221,47 @@ mod tests {
     fn rejects_unknown_track() {
         let j = json::parse(r#"{"task": "nope"}"#).unwrap();
         assert!(Scenario::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn load_many_accepts_array_and_wrapper_forms() {
+        let dir = std::env::temp_dir();
+        let arr = dir.join("haqa_scenarios_arr.json");
+        std::fs::write(
+            &arr,
+            r#"[{"name": "a", "task": "kernel"}, {"name": "b", "task": "bitwidth"}]"#,
+        )
+        .unwrap();
+        let v = Scenario::load_many(arr.to_str().unwrap()).unwrap();
+        assert_eq!(v.len(), 2);
+        assert_eq!(v[0].track, Track::Kernel);
+        assert!(!v[1].needs_artifacts());
+
+        let wrapped = dir.join("haqa_scenarios_obj.json");
+        std::fs::write(
+            &wrapped,
+            r#"{"scenarios": [{"name": "c", "task": "lm"}]}"#,
+        )
+        .unwrap();
+        let v = Scenario::load_many(wrapped.to_str().unwrap()).unwrap();
+        assert_eq!(v.len(), 1);
+        assert!(v[0].needs_artifacts());
+        let _ = std::fs::remove_file(arr);
+        let _ = std::fs::remove_file(wrapped);
+    }
+
+    #[test]
+    fn load_many_rejects_unrecognized_shapes() {
+        let dir = std::env::temp_dir();
+        // Typo'd wrapper key must not silently become one default scenario.
+        let typo = dir.join("haqa_scenarios_typo.json");
+        std::fs::write(&typo, r#"{"scenaros": [{"task": "kernel"}]}"#).unwrap();
+        assert!(Scenario::load_many(typo.to_str().unwrap()).is_err());
+        // A "scenarios" key that is not an array is also an error.
+        let notarr = dir.join("haqa_scenarios_notarr.json");
+        std::fs::write(&notarr, r#"{"scenarios": {"task": "kernel"}}"#).unwrap();
+        assert!(Scenario::load_many(notarr.to_str().unwrap()).is_err());
+        let _ = std::fs::remove_file(typo);
+        let _ = std::fs::remove_file(notarr);
     }
 }

@@ -1,46 +1,86 @@
 //! The HAQA workflow (paper Figure 3): the iterative loop that combines the
 //! static+dynamic prompts, the agent (or a baseline optimizer), the
-//! evaluation substrate (real PJRT training / the hardware simulator), and
-//! the feedback path into the next round's dynamic prompt.
+//! evaluation substrate, and the feedback path into the next round's
+//! dynamic prompt.
 //!
-//! `run_finetune` / `run_kernel` / `run_bitwidth` are the three tracks; the
-//! `run_joint` pipeline chains them the way the paper's Llama2-7b prompt
-//! does (fine-tune + deploy in one conversation, shared cost accounting).
+//! Every track runs on the same generic [`Workflow::run_track`] loop over a
+//! [`dyn Evaluator`](super::evaluator::Evaluator): `run_finetune` /
+//! `run_kernel` / `run_bitwidth` only pick the evaluator and the agent's
+//! task objective.  The `run_joint` pipeline chains them the way the
+//! paper's Llama2-7b prompt does (fine-tune + deploy in one conversation,
+//! shared cost accounting), and an optional content-addressed
+//! [`EvalCache`] deduplicates repeated evaluations across rounds, methods
+//! and fleet workers.
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::agent::TaskKind;
-use crate::hardware::{adaptive, memory, KernelKind, ModelProfile, Workload};
+use crate::hardware::ModelProfile;
 use crate::optimizers::{best, haqa::HaqaOptimizer, Observation, Optimizer};
-use crate::quant::Scheme;
 use crate::runtime::ArtifactSet;
-use crate::search::spaces;
-use crate::trainer::lm::{LmBase, QloraJob};
-use crate::trainer::qat::QatJob;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
+use super::cache::EvalCache;
+use super::evaluator::{BitwidthEvaluator, Evaluator, FinetuneEvaluator, KernelEvaluator};
 use super::scenario::{Scenario, Track};
 use super::tasklog::TaskLog;
 
+/// Per-track RNG stream tags (kept identical to the seed so existing
+/// seeded results regenerate bit-for-bit).
+const RNG_FINETUNE: u64 = 0xf1;
+const RNG_KERNEL: u64 = 0xde;
+const RNG_BITWIDTH: u64 = 0xb1;
+
 pub struct Workflow<'a> {
-    pub set: &'a ArtifactSet,
+    /// AOT artifact registry — only the fine-tuning track needs one; the
+    /// kernel and bit-width tracks run on the analytic simulator.
+    set: Option<&'a ArtifactSet>,
+    cache: Option<EvalCache>,
 }
 
 #[derive(Debug)]
 pub struct TrackOutcome {
     pub history: Vec<Observation>,
     pub best_score: f64,
+    /// The agent's Appendix-C cost line (None for baseline optimizers).
     pub cost_report: Option<String>,
     pub log_path: Option<std::path::PathBuf>,
+    /// Evaluations served from the content-addressed cache in this track.
+    pub cache_hits: usize,
+    /// Evaluations actually computed (cache disabled counts all here).
+    pub cache_misses: usize,
 }
 
 impl<'a> Workflow<'a> {
     pub fn new(set: &'a ArtifactSet) -> Workflow<'a> {
-        Workflow { set }
+        Workflow {
+            set: Some(set),
+            cache: None,
+        }
     }
 
-    fn make_optimizer(&self, sc: &Scenario, kind: TaskKind, objective: Json) -> Result<Box<dyn Optimizer>> {
+    /// Simulation-only workflow: kernel and bit-width tracks work in full;
+    /// the fine-tuning track (which drives PJRT training) errors cleanly.
+    pub fn simulated() -> Workflow<'static> {
+        Workflow {
+            set: None,
+            cache: None,
+        }
+    }
+
+    /// Attach a (shareable) content-addressed evaluation cache.
+    pub fn with_cache(mut self, cache: EvalCache) -> Self {
+        self.cache = Some(cache);
+        self
+    }
+
+    fn make_optimizer(
+        &self,
+        sc: &Scenario,
+        kind: TaskKind,
+        objective: Json,
+    ) -> Result<Box<dyn Optimizer>> {
         if sc.optimizer == "haqa" {
             let mut h = HaqaOptimizer::with_seed(sc.seed ^ 0x4a9a)
                 .for_task(kind)
@@ -58,136 +98,30 @@ impl<'a> Workflow<'a> {
     /// Fine-tuning track (Table 1/2): optimizer proposes → trainer runs on
     /// PJRT → accuracy + loss feedback threads back into the next round.
     pub fn run_finetune(&self, sc: &Scenario) -> Result<TrackOutcome> {
-        let mut rng = Rng::new(sc.seed).split(0xf1);
-        let is_cnn = sc.track == Track::FinetuneCnn || sc.model.starts_with("cnn");
-        let space = if is_cnn {
-            spaces::resnet_qat()
-        } else {
-            spaces::llama_qlora()
-        };
-        let mut objective = Json::obj();
-        objective.set("model", Json::Str(sc.model.clone()));
-        objective.set(
-            "bits",
-            Json::Num(if is_cnn {
-                sc.precision.wbits as f64
-            } else {
-                sc.bits as f64
-            }),
-        );
-        let mut opt = self.make_optimizer(sc, TaskKind::Finetune, objective)?;
-
-        let lm_base = if is_cnn {
-            None
-        } else {
-            // The paper fine-tunes pretrained checkpoints: pretrain the tiny
-            // base once (disk-cached) before the QLoRA rounds.
-            Some(LmBase::pretrained(self.set, sc.seed, sc.pretrain_steps)?)
-        };
-        let mut log = TaskLog::new(&format!("{}_finetune", sc.name));
-        let mut history: Vec<Observation> = Vec::new();
-        for round in 0..sc.budget {
-            let cfg = opt.propose(&space, &history, &mut rng);
-            let (score, feedback) = if is_cnn {
-                let job = QatJob {
-                    set: self.set,
-                    model: &sc.model,
-                    precision: sc.precision,
-                    seed: sc.seed,
-                    steps_per_epoch: sc.steps_per_epoch,
-                };
-                let r = job.run(&cfg)?;
-                (r.accuracy, r.feedback())
-            } else {
-                let job = QloraJob {
-                    set: self.set,
-                    base: lm_base.as_ref().unwrap(),
-                    bits: sc.bits,
-                    seed: sc.seed,
-                    step_scale: sc.step_scale,
-                };
-                let r = job.run(&cfg)?;
-                (r.score(), r.feedback())
-            };
-            let mut obs = Observation::new(cfg, score);
-            obs.feedback = feedback;
-            log.record_round(round, &obs, None);
-            history.push(obs);
-        }
-        self.finish(sc, history, log)
+        let set = self.set.ok_or_else(|| {
+            anyhow!(
+                "the fine-tuning track needs the AOT artifacts — construct \
+                 the Workflow with an ArtifactSet (run `make artifacts`)"
+            )
+        })?;
+        let ev = FinetuneEvaluator::new(set, sc)?;
+        let mut opt = self.make_optimizer(sc, TaskKind::Finetune, ev.objective())?;
+        self.run_track(sc, opt.as_mut(), &ev, RNG_FINETUNE)
     }
 
     /// Kernel-tuning track (Table 3): simulated hardware latency feedback.
     pub fn run_kernel(&self, sc: &Scenario) -> Result<TrackOutcome> {
-        let mut rng = Rng::new(sc.seed).split(0xde);
-        let space = spaces::kernel_exec();
-        let (kname, kbatch) = sc
-            .kernel
-            .split_once(':')
-            .unwrap_or((sc.kernel.as_str(), "64"));
-        let kernel = KernelKind::parse(kname)
-            .ok_or_else(|| anyhow::anyhow!("unknown kernel '{kname}'"))?;
-        let workload = Workload::new(kernel, kbatch.parse().unwrap_or(64));
-        let profile = sc.device_profile();
-        let tuner = crate::deploy::KernelTuner {
-            profile: &profile,
-            workload,
-            noise_seed: sc.seed,
-        };
-        let mut objective = Json::obj();
-        objective.set("kernel", Json::Str(kname.to_string()));
-        objective.set("size", Json::Str(workload.size_label()));
-        let mut opt = self.make_optimizer(sc, TaskKind::KernelTuning, objective)?;
-        let mut log = TaskLog::new(&format!("{}_kernel", sc.name));
-        let mut history: Vec<Observation> = Vec::new();
-        for round in 0..sc.budget {
-            let cfg = opt.propose(&space, &history, &mut rng);
-            let lat = tuner.measure(&cfg);
-            let mut obs = Observation::new(cfg, -lat);
-            obs.feedback = format!("{{\"latency_us\": {lat:.3}}}");
-            log.record_round(round, &obs, None);
-            history.push(obs);
-        }
-        self.finish(sc, history, log)
+        let ev = KernelEvaluator::from_scenario(sc)?;
+        let mut opt = self.make_optimizer(sc, TaskKind::KernelTuning, ev.objective())?;
+        self.run_track(sc, opt.as_mut(), &ev, RNG_KERNEL)
     }
 
     /// Bit-width selection track (Table 5 / §4.4): one agent decision,
     /// cross-checked against the analytic selector.
     pub fn run_bitwidth(&self, sc: &Scenario) -> Result<TrackOutcome> {
-        let mut rng = Rng::new(sc.seed).split(0xb1);
-        let space = spaces::bitwidth();
-        let model = model_by_name(&sc.model)?;
-        let dev = sc.device_profile();
-        let mut objective = Json::obj();
-        objective.set("model", Json::Str(model.name.clone()));
-        objective.set("memory_limit_gb", Json::Num(sc.memory_limit_gb));
-        let mut mem = Json::obj();
-        for s in Scheme::ALL {
-            mem.set(s.label(), Json::Num(memory::footprint_gb(&model, s)));
-        }
-        objective.set("mem_gb", mem);
-        let mut opt = self.make_optimizer(sc, TaskKind::Bitwidth, objective)?;
-        let cfg = opt.propose(&space, &[], &mut rng);
-        let picked = cfg.get("quant").and_then(|v| v.as_str().map(|s| s.to_string()));
-        let analytic = adaptive::select(&model, &dev, sc.memory_limit_gb);
-
-        let score = picked
-            .as_deref()
-            .and_then(Scheme::parse)
-            .map(|s| adaptive::tokens_per_sec(&model, s, &dev))
-            .unwrap_or(0.0);
-        let mut obs = Observation::new(cfg, score);
-        obs.feedback = format!(
-            "{{\"analytic_choice\": \"{}\", \"rationale\": {}}}",
-            analytic
-                .scheme
-                .map(|s| s.label().to_string())
-                .unwrap_or_else(|| "NONE".into()),
-            Json::Str(analytic.rationale.clone()).to_string()
-        );
-        let mut log = TaskLog::new(&format!("{}_bitwidth", sc.name));
-        log.record_round(0, &obs, None);
-        self.finish(sc, vec![obs], log)
+        let ev = BitwidthEvaluator::from_scenario(sc)?;
+        let mut opt = self.make_optimizer(sc, TaskKind::Bitwidth, ev.objective())?;
+        self.run_track(sc, opt.as_mut(), &ev, RNG_BITWIDTH)
     }
 
     /// The joint pipeline (paper Fig. 1b / Fig. 3): fine-tune, then tune the
@@ -200,6 +134,10 @@ impl<'a> Workflow<'a> {
         Ok((ft, kt, bw))
     }
 
+    /// Run the scenario's track.  For `Track::Joint` the three stages all
+    /// execute (and write their task logs), but the returned outcome is the
+    /// *finetune* stage's — callers that need the kernel/bit-width outcomes
+    /// as values should call [`Workflow::run_joint`] directly.
     pub fn run(&self, sc: &Scenario) -> Result<TrackOutcome> {
         match sc.track {
             Track::FinetuneCnn | Track::FinetuneLm => self.run_finetune(sc),
@@ -212,24 +150,60 @@ impl<'a> Workflow<'a> {
         }
     }
 
-    fn finish(
+    /// The one generic HAQA round loop (paper Fig. 3) every track runs on:
+    /// propose → evaluate (through the cache when attached) → feed back —
+    /// with the task log, the best-score summary and the agent's cost
+    /// report threaded uniformly.
+    pub fn run_track(
         &self,
-        _sc: &Scenario,
-        history: Vec<Observation>,
-        mut log: TaskLog,
+        sc: &Scenario,
+        opt: &mut dyn Optimizer,
+        ev: &dyn Evaluator,
+        rng_tag: u64,
     ) -> Result<TrackOutcome> {
+        let mut rng = Rng::new(sc.seed).split(rng_tag);
+        let space = ev.space();
+        let mut log = TaskLog::new(&format!("{}_{}", sc.name, ev.track()));
+        let mut history: Vec<Observation> = Vec::new();
+        let (mut hits, mut misses) = (0usize, 0usize);
+        for round in 0..ev.rounds(sc.budget) {
+            let cfg = opt.propose(space, &history, &mut rng);
+            let (evaluation, from_cache) = match &self.cache {
+                Some(cache) => cache.get_or_evaluate(ev, &cfg)?,
+                None => (ev.evaluate(&cfg)?, false),
+            };
+            if from_cache {
+                hits += 1;
+            } else {
+                misses += 1;
+            }
+            let mut obs = Observation::new(cfg, evaluation.score);
+            obs.extra = evaluation.extra;
+            obs.feedback = evaluation.feedback;
+            log.record_round(round, &obs, None);
+            history.push(obs);
+        }
         if history.is_empty() {
             bail!("empty history");
         }
         let best_score = best(&history).map(|o| o.score).unwrap_or(f64::NAN);
         log.set_summary("best_score", Json::Num(best_score));
         log.set_summary("rounds", Json::Num(history.len() as f64));
+        if hits > 0 {
+            log.set_summary("cache_hits", Json::Num(hits as f64));
+        }
+        let cost_report = opt.cost_report();
+        if let Some(cost) = &cost_report {
+            log.set_summary("cost", Json::Str(cost.clone()));
+        }
         let log_path = log.save().ok();
         Ok(TrackOutcome {
             history,
             best_score,
-            cost_report: None,
+            cost_report,
             log_path,
+            cache_hits: hits,
+            cache_misses: misses,
         })
     }
 }
@@ -245,4 +219,57 @@ pub fn model_by_name(name: &str) -> Result<ModelProfile> {
         "gpt2-large" | "gpt2_large" => ModelProfile::gpt2_large(),
         other => bail!("unknown deployment model '{other}'"),
     })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generic_loop_runs_kernel_track_without_artifacts() {
+        let wf = Workflow::simulated();
+        let sc = Scenario {
+            name: "wf_unit_kernel".into(),
+            track: Track::Kernel,
+            kernel: "rmsnorm:64".into(),
+            optimizer: "random".into(),
+            budget: 3,
+            seed: 4,
+            ..Scenario::default()
+        };
+        let out = wf.run(&sc).unwrap();
+        assert_eq!(out.history.len(), 3);
+        assert_eq!(out.cache_hits, 0);
+        assert_eq!(out.cache_misses, 3);
+        assert!(out.cost_report.is_none(), "baselines report no agent cost");
+    }
+
+    #[test]
+    fn haqa_track_threads_cost_report() {
+        let wf = Workflow::simulated();
+        let sc = Scenario {
+            name: "wf_unit_cost".into(),
+            track: Track::Kernel,
+            kernel: "matmul:64".into(),
+            optimizer: "haqa".into(),
+            budget: 3,
+            seed: 1,
+            ..Scenario::default()
+        };
+        let out = wf.run(&sc).unwrap();
+        let cost = out.cost_report.expect("haqa threads its cost report");
+        assert!(cost.contains("tokens"), "{cost}");
+    }
+
+    #[test]
+    fn finetune_without_artifacts_is_a_clean_error() {
+        let wf = Workflow::simulated();
+        let sc = Scenario {
+            name: "wf_unit_ft".into(),
+            track: Track::FinetuneCnn,
+            ..Scenario::default()
+        };
+        let err = wf.run(&sc).unwrap_err();
+        assert!(format!("{err:#}").contains("ArtifactSet"), "{err:#}");
+    }
 }

@@ -23,11 +23,19 @@
 //! | [`agent`] | LLM-agent workflow: prompts, ReAct, history, validation, cost |
 //! | [`hardware`] | device profiles, latency & memory models, adaptive strategy |
 //! | [`quant`] | quantization schemes + Rust-side DoReFa/QLoRA oracles |
-//! | [`runtime`] | PJRT client, artifact registry, executable cache |
+//! | [`runtime`] | PJRT client (behind the `pjrt` feature), artifact registry, executable cache, pure-Rust literal fallback |
 //! | [`trainer`] | synthetic datasets + QAT/QLoRA training loops |
 //! | [`deploy`] | kernel tuner, token-generation engine, e2e throughput |
-//! | [`coordinator`] | the HAQA iteration loop (paper Fig. 3) |
+//! | [`coordinator`] | the HAQA iteration loop (paper Fig. 3) behind one seam: |
+//! | [`coordinator::evaluator`] | the `Evaluator` trait + fine-tune / kernel / bit-width backends |
+//! | [`coordinator::cache`] | content-addressed evaluation cache (canonical-JSON keys) |
+//! | [`coordinator::fleet`] | parallel scenario-fleet runner, bit-identical to serial |
 //! | [`report`] | table/figure emitters for every paper table & figure |
+//!
+//! Feature `pjrt` (default off) gates the `xla` dependency: the default
+//! build is fully offline — coordinator, optimizers, agent, simulator,
+//! cache and fleet all run — and only AOT-graph execution needs the
+//! feature plus the real xla_extension binding.
 
 pub mod agent;
 pub mod coordinator;

@@ -8,10 +8,11 @@
 //! haqa bitwidth [--flags]      bit-width selection (Table 5 / §4.4)
 //! haqa generate [--flags]      serve token generation (llama.cpp analogue)
 //! haqa run <scenario.json>     run a scenario file (incl. the joint loop)
+//! haqa fleet <scenarios.json>  run a scenario batch across a worker pool
 //! ```
 
 use anyhow::Result;
-use haqa::coordinator::{Scenario, Workflow};
+use haqa::coordinator::{FleetRunner, Scenario, Workflow};
 use haqa::coordinator::scenario::{parse_precision, Track};
 use haqa::optimizers::best;
 use haqa::runtime::{ArtifactSet, InputRole, Tensor};
@@ -40,6 +41,7 @@ fn real_main() -> Result<()> {
         "bitwidth" => bitwidth(rest),
         "generate" => generate(rest),
         "run" => run_scenario(rest),
+        "fleet" => fleet(rest),
         "perf" => perf(),
         "help" | "--help" => {
             print!("{}", HELP);
@@ -59,6 +61,7 @@ haqa — hardware-aware quantization agent (paper reproduction)
   haqa bitwidth             adaptive bit-width selection; --help
   haqa generate             token-generation engine on PJRT; --help
   haqa run <scenario.json>  run a scenario file (finetune/kernel/bitwidth/joint)
+  haqa fleet <batch.json>   run a scenario batch on a worker pool w/ eval cache
 
 Benches regenerating every paper table/figure: `cargo bench` (see DESIGN.md).
 ";
@@ -109,6 +112,9 @@ fn tune(rest: Vec<String>) -> Result<()> {
             .position(|o| o.score == out.best_score)
             .unwrap_or(0)
     );
+    if let Some(cost) = &out.cost_report {
+        println!("{cost}");
+    }
     if let Some(p) = out.log_path {
         println!("task log: {}", p.display());
     }
@@ -133,14 +139,17 @@ fn kernel(rest: Vec<String>) -> Result<()> {
         seed: a.get_f64("seed")?.unwrap_or(0.0) as u64,
         ..Scenario::default()
     };
-    let set = ArtifactSet::load_default()?;
-    let wf = Workflow::new(&set);
+    // Kernel tuning runs on the analytic simulator — no artifacts needed.
+    let wf = Workflow::simulated();
     let out = wf.run_kernel(&sc)?;
     for (i, o) in out.history.iter().enumerate() {
         println!("round {i:2}  latency {:9.3} µs", -o.score);
     }
     let b = best(&out.history).unwrap();
     println!("best latency {:.3} µs", -b.score);
+    if let Some(cost) = &out.cost_report {
+        println!("{cost}");
+    }
     Ok(())
 }
 
@@ -158,8 +167,8 @@ fn bitwidth(rest: Vec<String>) -> Result<()> {
         memory_limit_gb: a.get_f64("memory-gb")?.unwrap_or(10.0),
         ..Scenario::default()
     };
-    let set = ArtifactSet::load_default()?;
-    let wf = Workflow::new(&set);
+    // Bit-width selection runs on the analytic models — no artifacts needed.
+    let wf = Workflow::simulated();
     let out = wf.run_bitwidth(&sc)?;
     let o = &out.history[0];
     println!(
@@ -213,8 +222,16 @@ fn run_scenario(rest: Vec<String>) -> Result<()> {
         .first()
         .ok_or_else(|| anyhow::anyhow!("usage: haqa run <scenario.json>"))?;
     let sc = Scenario::load(path)?;
-    let set = ArtifactSet::load_default()?;
-    let wf = Workflow::new(&set);
+    // Load the artifact registry only for tracks that train on PJRT.
+    let set = if sc.needs_artifacts() {
+        Some(ArtifactSet::load_default()?)
+    } else {
+        None
+    };
+    let wf = match &set {
+        Some(s) => Workflow::new(s),
+        None => Workflow::simulated(),
+    };
     if sc.track == Track::Joint {
         let (ft, kt, bw) = wf.run_joint(&sc)?;
         println!("finetune best score: {:.4}", ft.best_score);
@@ -223,6 +240,69 @@ fn run_scenario(rest: Vec<String>) -> Result<()> {
     } else {
         let out = wf.run(&sc)?;
         println!("best score: {:.4}", out.best_score);
+    }
+    Ok(())
+}
+
+/// Run a scenario batch across a scoped-thread worker pool with the shared
+/// content-addressed evaluation cache (`haqa fleet <batch.json>`).
+fn fleet(rest: Vec<String>) -> Result<()> {
+    let a = Args::new("haqa fleet", "run a scenario batch across a worker pool")
+        .opt("workers", "worker threads (default: env HAQA_WORKERS or 4)")
+        .flag("no-cache", "disable the content-addressed evaluation cache")
+        .flag("check-serial", "re-run serially and verify bit-identical scores")
+        .parse(rest)?;
+    let path = a
+        .positional
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("usage: haqa fleet <scenarios.json> [--workers N]"))?;
+    let scenarios = Scenario::load_many(path)?;
+    anyhow::ensure!(!scenarios.is_empty(), "no scenarios in {path}");
+    let workers = FleetRunner::workers_from_env(a.get_usize("workers")?);
+    let mut runner = FleetRunner::new(workers);
+    if a.get_bool("no-cache") {
+        runner = runner.without_cache();
+    }
+    let t0 = std::time::Instant::now();
+    let report = runner.run(&scenarios);
+    for (sc, out) in scenarios.iter().zip(&report.outcomes) {
+        match out {
+            Ok(o) => println!(
+                "{:<24} {:?}: best {:.4}  ({} rounds, {} cache hits)",
+                sc.name,
+                sc.track,
+                o.best_score,
+                o.history.len(),
+                o.cache_hits
+            ),
+            Err(e) => println!("{:<24} {:?}: error: {e:#}", sc.name, sc.track),
+        }
+    }
+    println!(
+        "fleet: {} scenarios on {} workers in {:.2}s",
+        scenarios.len(),
+        workers,
+        t0.elapsed().as_secs_f64()
+    );
+    if let Some(st) = report.cache {
+        println!(
+            "evaluation cache: {} hits / {} misses ({} entries)",
+            st.hits, st.misses, st.entries
+        );
+    }
+    if a.get_bool("check-serial") {
+        let serial = FleetRunner::new(1).run(&scenarios);
+        let identical = serial
+            .outcomes
+            .iter()
+            .zip(&report.outcomes)
+            .all(|(s, p)| match (s, p) {
+                (Ok(a), Ok(b)) => a.best_score.to_bits() == b.best_score.to_bits(),
+                (Err(_), Err(_)) => true,
+                _ => false,
+            });
+        anyhow::ensure!(identical, "serial and parallel fleet runs diverged");
+        println!("serial check: bit-identical best scores");
     }
     Ok(())
 }

@@ -75,6 +75,15 @@ impl Optimizer for HaqaOptimizer {
             }
         }
     }
+
+    /// The Appendix-C accounting the coordinator surfaces per track.
+    fn cost_report(&self) -> Option<String> {
+        if self.agent.cost.queries == 0 {
+            None
+        } else {
+            Some(self.agent.cost.report())
+        }
+    }
 }
 
 #[cfg(test)]

@@ -52,13 +52,28 @@ pub trait Optimizer {
 
     /// Propose the configuration for round `history.len()`.
     fn propose(&mut self, space: &Space, history: &[Observation], rng: &mut Rng) -> Config;
+
+    /// The Appendix-C cost line for agent-backed optimizers; baselines cost
+    /// nothing and return `None`.  The coordinator threads this into
+    /// `TrackOutcome::cost_report`.
+    fn cost_report(&self) -> Option<String> {
+        None
+    }
 }
 
 /// Best observation by score (ties -> earliest, i.e. fewest rounds).
+/// A later observation replaces the incumbent only when strictly better,
+/// which is what makes the tie contract hold (`max_by` would keep the
+/// *last* maximum).  NaN scores never displace a real incumbent.
 pub fn best(history: &[Observation]) -> Option<&Observation> {
-    history
-        .iter()
-        .max_by(|a, b| a.score.partial_cmp(&b.score).unwrap_or(std::cmp::Ordering::Equal))
+    let mut it = history.iter();
+    let mut incumbent = it.next()?;
+    for o in it {
+        if o.score > incumbent.score || incumbent.score.is_nan() {
+            incumbent = o;
+        }
+    }
+    Some(incumbent)
 }
 
 pub use human::HumanPriors;
@@ -96,3 +111,43 @@ pub fn by_name(name: &str) -> anyhow::Result<Box<dyn Optimizer>> {
 pub const METHODS: &[&str] = &[
     "default", "human", "local", "bayesian", "random", "nsga2", "haqa",
 ];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::search::spaces;
+
+    fn obs(score: f64) -> Observation {
+        Observation::new(spaces::bitwidth().default_config(), score)
+    }
+
+    #[test]
+    fn best_breaks_ties_toward_earliest_round() {
+        // Regression: `max_by` returns the *last* maximum on ties, which
+        // contradicted the documented "ties -> earliest" contract.
+        let hist = vec![obs(0.3), obs(0.9), obs(0.9), obs(0.5)];
+        let b = best(&hist).unwrap();
+        assert_eq!(b.score, 0.9);
+        assert!(
+            std::ptr::eq(b, &hist[1]),
+            "tie must resolve to the earliest observation"
+        );
+    }
+
+    #[test]
+    fn best_handles_empty_and_nan() {
+        assert!(best(&[]).is_none());
+        let hist = vec![obs(f64::NAN), obs(0.2), obs(0.1)];
+        assert_eq!(best(&hist).unwrap().score, 0.2);
+        let hist = vec![obs(0.2), obs(f64::NAN)];
+        assert_eq!(best(&hist).unwrap().score, 0.2);
+    }
+
+    #[test]
+    fn baseline_optimizers_have_no_cost_report() {
+        for name in METHODS.iter().filter(|m| **m != "haqa") {
+            let opt = by_name(name).unwrap();
+            assert!(opt.cost_report().is_none(), "{name}");
+        }
+    }
+}

@@ -17,6 +17,7 @@ use std::rc::Rc;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+#[cfg(feature = "pjrt")]
 use super::client::global_client;
 use super::tensor::Tensor;
 use crate::util::json::{self, Json};
@@ -209,24 +210,31 @@ impl ArtifactSet {
         v
     }
 
-    /// Compile (or fetch the cached) executable for an artifact.
+    /// Compile (or fetch the cached) executable for an artifact.  Without
+    /// the `pjrt` feature the returned executor carries metadata only
+    /// (shapes, roles, argument assembly) and errors on execution.
     pub fn executor(&self, name: &str) -> Result<Rc<Executor>> {
         if let Some(e) = self.cache.borrow().get(name) {
             return Ok(e.clone());
         }
         let art = self.get(name)?.clone();
-        let client = global_client()?;
-        let proto = xla::HloModuleProto::from_text_file(
-            art.file
-                .to_str()
-                .ok_or_else(|| anyhow!("non-utf8 path {:?}", art.file))?,
-        )
-        .map_err(|e| anyhow!("parse {}: {e:?}", art.file.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
-        let executor = Rc::new(Executor { artifact: art, exe });
+        #[cfg(feature = "pjrt")]
+        let executor = {
+            let client = global_client()?;
+            let proto = xla::HloModuleProto::from_text_file(
+                art.file
+                    .to_str()
+                    .ok_or_else(|| anyhow!("non-utf8 path {:?}", art.file))?,
+            )
+            .map_err(|e| anyhow!("parse {}: {e:?}", art.file.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+            Rc::new(Executor { artifact: art, exe })
+        };
+        #[cfg(not(feature = "pjrt"))]
+        let executor = Rc::new(Executor { artifact: art });
         self.cache
             .borrow_mut()
             .insert(name.to_string(), executor.clone());
@@ -237,6 +245,7 @@ impl ArtifactSet {
 /// A compiled artifact plus its typed calling convention.
 pub struct Executor {
     pub artifact: Artifact,
+    #[cfg(feature = "pjrt")]
     exe: xla::PjRtLoadedExecutable,
 }
 
@@ -290,6 +299,7 @@ impl Executor {
     }
 
     /// Execute with a fully assembled positional argument list.
+    #[cfg(feature = "pjrt")]
     pub fn run_raw(&self, args: &[Tensor]) -> Result<Vec<Tensor>> {
         let literals: Vec<xla::Literal> = args
             .iter()
@@ -307,6 +317,18 @@ impl Executor {
             .to_tuple()
             .map_err(|e| anyhow!("to_tuple: {e:?}"))?;
         parts.iter().map(Tensor::from_literal).collect()
+    }
+
+    /// Without the `pjrt` feature there is no execution backend; artifact
+    /// metadata and argument assembly still work, execution errors.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn run_raw(&self, _args: &[Tensor]) -> Result<Vec<Tensor>> {
+        bail!(
+            "cannot execute artifact '{}': haqa was built without the `pjrt` \
+             feature (rebuild with `--features pjrt` and the real `xla` \
+             binding to run AOT graphs)",
+            self.artifact.name
+        )
     }
 
     /// The common call: thread state, return (new_state, metrics).

@@ -1,0 +1,73 @@
+//! Pure-Rust host literal — the `pjrt`-free stand-in for `xla::Literal` on
+//! the `Tensor` interop boundary.
+//!
+//! The PJRT path converts `Tensor` ⇄ `xla::Literal` at the executor
+//! boundary; this type mirrors that contract (shape bookkeeping + row-major
+//! f32 buffer) with zero external dependencies, so the conversion layer
+//! stays covered by tests in the default offline build.  It does **not**
+//! execute graphs — without `pjrt`, `Executor::run_raw` errors; this is the
+//! data-interchange half of the fallback only, and the seam future CPU
+//! interpreters plug into.
+
+use anyhow::{ensure, Result};
+
+/// Shape + row-major f32 buffer, the same payload an `xla::Literal` carries
+/// for every artifact in this repo (one dtype end-to-end; DESIGN.md §5).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostLiteral {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostLiteral {
+    /// Rank-1 literal over a buffer (mirror of `xla::Literal::vec1`).
+    pub fn vec1(data: &[f32]) -> HostLiteral {
+        HostLiteral {
+            shape: vec![data.len()],
+            data: data.to_vec(),
+        }
+    }
+
+    /// Reinterpret the buffer under a new shape (element count must match;
+    /// `[]` is the rank-0 scalar).
+    pub fn reshape(&self, shape: &[usize]) -> Result<HostLiteral> {
+        let want: usize = shape.iter().product();
+        ensure!(
+            want == self.data.len(),
+            "reshape to {:?} ({} elements) from {} elements",
+            shape,
+            want,
+            self.data.len()
+        );
+        Ok(HostLiteral {
+            shape: shape.to_vec(),
+            data: self.data.clone(),
+        })
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.data.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vec1_and_reshape() {
+        let l = HostLiteral::vec1(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(l.shape, vec![6]);
+        let r = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(r.shape, vec![2, 3]);
+        assert_eq!(r.data, l.data);
+        assert!(l.reshape(&[4, 2]).is_err());
+    }
+
+    #[test]
+    fn scalar_rank0() {
+        let s = HostLiteral::vec1(&[2.5]).reshape(&[]).unwrap();
+        assert!(s.shape.is_empty());
+        assert_eq!(s.element_count(), 1);
+    }
+}

@@ -3,14 +3,23 @@
 //! the AOT boundary (see DESIGN.md §3).
 //!
 //! * [`tensor`] — host-side f32 tensor type ⇄ `xla::Literal`.
-//! * [`client`] — process-wide PJRT CPU client singleton.
+//! * [`literal`] — pure-Rust literal fallback (no-`pjrt` builds).
+//! * [`client`] — process-wide PJRT CPU client singleton (`pjrt` feature).
 //! * [`artifact`] — manifest-driven artifact registry + executable cache +
 //!   the generic state-threading executor every trainer/engine uses.
+//!
+//! The `xla` dependency is gated behind the default-off `pjrt` feature:
+//! without it, manifests, shapes, argument assembly and literal interop all
+//! work, and only actual HLO execution returns an error.
 
 pub mod artifact;
+#[cfg(feature = "pjrt")]
 pub mod client;
+pub mod literal;
 pub mod tensor;
 
 pub use artifact::{Artifact, ArtifactSet, Executor, InputRole};
+#[cfg(feature = "pjrt")]
 pub use client::global_client;
+pub use literal::HostLiteral;
 pub use tensor::Tensor;

@@ -124,6 +124,17 @@ impl Tensor {
 
     // ---- Literal interop ---------------------------------------------------
 
+    /// Pure-Rust literal (the `pjrt`-free stand-in on this boundary; same
+    /// shape/buffer contract as the xla path below).
+    pub fn to_host_literal(&self) -> Result<super::literal::HostLiteral> {
+        super::literal::HostLiteral::vec1(&self.data).reshape(&self.shape)
+    }
+
+    pub fn from_host_literal(lit: &super::literal::HostLiteral) -> Tensor {
+        Tensor::new(lit.shape.clone(), lit.data.clone())
+    }
+
+    #[cfg(feature = "pjrt")]
     pub fn to_literal(&self) -> Result<xla::Literal> {
         let lit = xla::Literal::vec1(&self.data);
         if self.shape.is_empty() {
@@ -137,6 +148,7 @@ impl Tensor {
         }
     }
 
+    #[cfg(feature = "pjrt")]
     pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
         let shape = lit
             .array_shape()
@@ -167,36 +179,58 @@ pub fn save_tensors(path: &std::path::Path, tensors: &[Tensor]) -> Result<()> {
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir)?;
     }
-    std::fs::write(path, buf)?;
+    // Atomic publish: parallel fleet workers can race to materialize the
+    // same disk-cached base, so each writer lands on a private temp file and
+    // renames — a concurrent `load_tensors` never sees a partial file.
+    static TMP_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+    let seq = TMP_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    let tmp = path.with_extension(format!("tmp.{}.{seq}", std::process::id()));
+    std::fs::write(&tmp, buf)?;
+    std::fs::rename(&tmp, path)?;
     Ok(())
 }
 
-/// Load a tensor list saved by [`save_tensors`].
+/// Load a tensor list saved by [`save_tensors`].  Bounds-checked: a
+/// truncated or corrupt file is an error, never a panic.
 pub fn load_tensors(path: &std::path::Path) -> Result<Vec<Tensor>> {
+    fn take<'a>(buf: &'a [u8], off: &mut usize, n: usize) -> Result<&'a [u8]> {
+        let end = off
+            .checked_add(n)
+            .filter(|&e| e <= buf.len())
+            .ok_or_else(|| anyhow::anyhow!("truncated tensor file"))?;
+        let s = &buf[*off..end];
+        *off = end;
+        Ok(s)
+    }
     let buf = std::fs::read(path)?;
-    anyhow::ensure!(buf.len() >= 8 && &buf[..4] == b"HAQT", "bad tensor file");
+    anyhow::ensure!(
+        buf.len() >= 8 && &buf[..4] == b"HAQT",
+        "bad tensor file {}",
+        path.display()
+    );
     let mut off = 4usize;
-    let rd_u32 = |b: &[u8], o: &mut usize| {
-        let v = u32::from_le_bytes(b[*o..*o + 4].try_into().unwrap());
-        *o += 4;
-        v
-    };
-    let count = rd_u32(&buf, &mut off) as usize;
-    let mut out = Vec::with_capacity(count);
+    let count = u32::from_le_bytes(take(&buf, &mut off, 4)?.try_into().unwrap()) as usize;
+    let mut out = Vec::with_capacity(count.min(4096));
     for _ in 0..count {
-        let ndim = rd_u32(&buf, &mut off) as usize;
+        let ndim = u32::from_le_bytes(take(&buf, &mut off, 4)?.try_into().unwrap()) as usize;
+        anyhow::ensure!(ndim <= 16, "implausible tensor rank {ndim}");
         let mut shape = Vec::with_capacity(ndim);
         for _ in 0..ndim {
-            let d = u64::from_le_bytes(buf[off..off + 8].try_into().unwrap());
-            off += 8;
+            let d = u64::from_le_bytes(take(&buf, &mut off, 8)?.try_into().unwrap());
             shape.push(d as usize);
         }
-        let n: usize = shape.iter().product();
-        let mut data = Vec::with_capacity(n);
-        for _ in 0..n {
-            data.push(f32::from_le_bytes(buf[off..off + 4].try_into().unwrap()));
-            off += 4;
-        }
+        let n: usize = shape
+            .iter()
+            .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+            .ok_or_else(|| anyhow::anyhow!("tensor size overflow"))?;
+        let nbytes = n
+            .checked_mul(4)
+            .ok_or_else(|| anyhow::anyhow!("tensor size overflow"))?;
+        let bytes = take(&buf, &mut off, nbytes)?;
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
         out.push(Tensor::new(shape, data));
     }
     Ok(out)
@@ -233,6 +267,31 @@ mod tests {
         save_tensors(&path, &tensors).unwrap();
         let back = load_tensors(&path).unwrap();
         assert_eq!(tensors, back);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn host_literal_roundtrip() {
+        let t = Tensor::new(vec![2, 3], vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+        let lit = t.to_host_literal().unwrap();
+        assert_eq!(lit.shape, vec![2, 3]);
+        assert_eq!(Tensor::from_host_literal(&lit), t);
+        // scalars reshape to rank-0 like the xla path
+        let s = Tensor::scalar(1.5);
+        let sl = s.to_host_literal().unwrap();
+        assert!(sl.shape.is_empty());
+        assert_eq!(Tensor::from_host_literal(&sl).item(), 1.5);
+    }
+
+    #[test]
+    fn load_rejects_truncated_file() {
+        let mut rng = Rng::new(11);
+        let tensors = vec![Tensor::he_normal(&[4, 4], &mut rng)];
+        let path = std::env::temp_dir().join("haqa_tensor_trunc_test.bin");
+        save_tensors(&path, &tensors).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() / 2]).unwrap();
+        assert!(load_tensors(&path).is_err(), "truncated file must not load");
         let _ = std::fs::remove_file(path);
     }
 

@@ -52,11 +52,33 @@ impl LmBase {
     /// mixture via the `lm_pretrain_b16` artifact (the paper fine-tunes
     /// pretrained checkpoints, so the QLoRA track starts from one too).
     /// Cached on disk under `artifacts/cache/`, keyed by (seed, steps).
+    ///
+    /// Pretraining is the most expensive step in a fleet sweep, so
+    /// same-key requests are serialized process-wide: the first fleet
+    /// worker trains and publishes the disk cache, concurrent workers wait
+    /// on the per-key lock and then load it.
     pub fn pretrained(set: &ArtifactSet, seed: u64, steps: usize) -> Result<LmBase> {
+        use std::collections::HashMap;
+        use std::sync::{Arc, Mutex, OnceLock};
+
         let cache = set
             .dir
             .join("cache")
             .join(format!("lm_base_s{seed}_t{steps}.bin"));
+        if let Ok(tensors) = crate::runtime::tensor::load_tensors(&cache) {
+            return Ok(LmBase { tensors, seed });
+        }
+        static LOCKS: OnceLock<Mutex<HashMap<(u64, usize), Arc<Mutex<()>>>>> = OnceLock::new();
+        let key_lock = {
+            let mut map = LOCKS
+                .get_or_init(|| Mutex::new(HashMap::new()))
+                .lock()
+                .unwrap_or_else(|p| p.into_inner());
+            map.entry((seed, steps)).or_default().clone()
+        };
+        let _guard = key_lock.lock().unwrap_or_else(|p| p.into_inner());
+        // Re-check after acquiring the lock: a concurrent worker may have
+        // finished pretraining and published the cache while we waited.
         if let Ok(tensors) = crate::runtime::tensor::load_tensors(&cache) {
             return Ok(LmBase { tensors, seed });
         }

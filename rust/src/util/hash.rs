@@ -1,0 +1,65 @@
+//! Deterministic content hashing for cache keys.
+//!
+//! The evaluation cache is content-addressed: the key is a hash of the
+//! canonical-JSON rendering of (track, scenario knobs, configuration), so
+//! the same evaluation requested from any round, method sweep, bench table
+//! or worker thread maps to the same entry.  Two independent FNV-1a lanes
+//! are combined into a 128-bit digest — pure Rust, no crates, stable across
+//! platforms and runs (never hash pointer or iteration-order dependent
+//! data; canonicalize first).
+
+/// FNV-1a over `bytes` from an explicit basis (64-bit lane).
+pub fn fnv1a64(bytes: &[u8], basis: u64) -> u64 {
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = basis;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(PRIME);
+    }
+    h
+}
+
+/// The standard FNV-1a 64 offset basis.
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// 128-bit content digest: two decorrelated FNV-1a lanes plus a
+/// length-mixed term so prefixes of each other cannot collide trivially.
+pub fn content_hash_128(bytes: &[u8]) -> u128 {
+    let lo = fnv1a64(bytes, FNV_OFFSET);
+    let hi = fnv1a64(bytes, FNV_OFFSET ^ 0x9e37_79b9_7f4a_7c15)
+        .wrapping_add((bytes.len() as u64).wrapping_mul(0xbf58_476d_1ce4_e5b9));
+    ((hi as u128) << 64) | lo as u128
+}
+
+/// Hex rendering of a 128-bit digest (log/debug output).
+pub fn hex128(h: u128) -> String {
+    format!("{h:032x}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stable_across_calls() {
+        let a = content_hash_128(b"track\n{\"a\":1}\n{\"lr\":0.01}");
+        let b = content_hash_128(b"track\n{\"a\":1}\n{\"lr\":0.01}");
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn sensitive_to_any_byte() {
+        let base = content_hash_128(b"kernel\n{\"batch\":64}");
+        assert_ne!(base, content_hash_128(b"kernel\n{\"batch\":65}"));
+        assert_ne!(base, content_hash_128(b"kernel\n{\"batch\":64} "));
+        assert_ne!(base, content_hash_128(b""));
+    }
+
+    #[test]
+    fn lanes_decorrelated() {
+        // lo and hi lanes must not be equal for ordinary inputs.
+        let h = content_hash_128(b"haqa");
+        assert_ne!((h >> 64) as u64, h as u64);
+        assert_eq!(hex128(h).len(), 32);
+    }
+}

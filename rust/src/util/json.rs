@@ -192,6 +192,47 @@ impl Json {
     }
 }
 
+/// Canonical JSON for content-addressed hashing (the deterministic
+/// cache-key spec): object keys sorted lexicographically, no whitespace,
+/// minimal number representation.  Array order is preserved (it is
+/// semantic).  Two `Json` values that differ only in object key order
+/// canonicalize identically.
+pub fn canonical(v: &Json) -> String {
+    let mut s = String::new();
+    write_canonical(v, &mut s);
+    s
+}
+
+fn write_canonical(v: &Json, out: &mut String) {
+    match v {
+        Json::Obj(kv) => {
+            let mut idx: Vec<usize> = (0..kv.len()).collect();
+            idx.sort_by(|&a, &b| kv[a].0.cmp(&kv[b].0));
+            out.push('{');
+            for (n, &i) in idx.iter().enumerate() {
+                if n > 0 {
+                    out.push(',');
+                }
+                write_escaped(out, &kv[i].0);
+                out.push(':');
+                write_canonical(&kv[i].1, out);
+            }
+            out.push('}');
+        }
+        Json::Arr(a) => {
+            out.push('[');
+            for (i, x) in a.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_canonical(x, out);
+            }
+            out.push(']');
+        }
+        other => other.write(out, None, 0),
+    }
+}
+
 fn newline(out: &mut String, indent: Option<usize>, depth: usize) {
     if let Some(n) = indent {
         out.push('\n');
@@ -487,6 +528,17 @@ mod tests {
         let text = "weird {not json} but {\"k\": [1,2]} ok";
         let v = extract_object(text).unwrap();
         assert_eq!(v.req_arr("k").unwrap().len(), 2);
+    }
+
+    #[test]
+    fn canonical_is_key_order_independent() {
+        let a = parse(r#"{"b": 1, "a": {"z": [1, 2], "y": 0.5}}"#).unwrap();
+        let b = parse(r#"{ "a": {"y": 0.5, "z": [1,2]}, "b": 1 }"#).unwrap();
+        assert_eq!(canonical(&a), canonical(&b));
+        assert_eq!(canonical(&a), r#"{"a":{"y":0.5,"z":[1,2]},"b":1}"#);
+        // Array order is semantic and must NOT be normalized away.
+        let c = parse(r#"{"a": {"z": [2, 1], "y": 0.5}, "b": 1}"#).unwrap();
+        assert_ne!(canonical(&a), canonical(&c));
     }
 
     #[test]

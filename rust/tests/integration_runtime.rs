@@ -1,5 +1,7 @@
 //! Integration: manifest → PJRT compile → execute → state threading, across
-//! the real artifacts (requires `make artifacts`).
+//! the real artifacts (requires `make artifacts` and `--features pjrt`;
+//! the default offline build has no execution backend).
+#![cfg(feature = "pjrt")]
 
 use std::collections::HashMap;
 

@@ -1,19 +1,18 @@
-//! Integration: the full HAQA workflow (agent + evaluators + task logs)
-//! across the kernel-tuning, bit-width and fine-tuning tracks.
+//! Integration: the unified `Evaluator` workflow (agent + evaluators + task
+//! logs + cache + fleet) across the kernel-tuning and bit-width tracks.
+//!
+//! Everything here runs on the analytic hardware simulator — no artifacts
+//! and no PJRT — so tier-1 `cargo test` exercises the full coordinator
+//! offline.  The fine-tuning track (real PJRT training) is covered by the
+//! `pjrt`-gated module at the bottom.
 
 use haqa::coordinator::scenario::Track;
-use haqa::coordinator::{Scenario, Workflow};
+use haqa::coordinator::{EvalCache, FleetRunner, Scenario, Workflow};
 use haqa::optimizers::best;
-use haqa::runtime::ArtifactSet;
-
-fn set() -> ArtifactSet {
-    ArtifactSet::load_default().expect("run `make artifacts` first")
-}
 
 #[test]
 fn kernel_track_haqa_beats_default_config() {
-    let set = set();
-    let wf = Workflow::new(&set);
+    let wf = Workflow::simulated();
     let sc = Scenario {
         name: "it_kernel".into(),
         track: Track::Kernel,
@@ -31,12 +30,13 @@ fn kernel_track_haqa_beats_default_config() {
     // The simulated llama.cpp default for matmul@64 is 52.29 µs; the agent
     // must improve on it within 8 rounds.
     assert!(best_lat < 52.29, "best {best_lat}");
+    // The agent's cost report threads through the generic loop.
+    assert!(out.cost_report.unwrap().contains("tokens"));
 }
 
 #[test]
 fn bitwidth_track_agent_matches_analytic_choice() {
-    let set = set();
-    let wf = Workflow::new(&set);
+    let wf = Workflow::simulated();
     for (device, limit, expect) in [
         ("a6000", 12.0, "INT4"),
         ("a6000", 28.0, "INT4"),
@@ -68,32 +68,8 @@ fn bitwidth_track_agent_matches_analytic_choice() {
 }
 
 #[test]
-fn finetune_track_runs_and_logs() {
-    let set = set();
-    let wf = Workflow::new(&set);
-    let sc = Scenario {
-        name: "it_ft".into(),
-        track: Track::FinetuneCnn,
-        model: "cnn_s".into(),
-        optimizer: "haqa".into(),
-        budget: 2,
-        steps_per_epoch: 1,
-        seed: 2,
-        ..Scenario::default()
-    };
-    let out = wf.run_finetune(&sc).unwrap();
-    assert_eq!(out.history.len(), 2);
-    assert!(out.best_score > 0.05, "accuracy {}", out.best_score);
-    let log = out.log_path.expect("task log written");
-    let text = std::fs::read_to_string(log).unwrap();
-    let j = haqa::util::json::parse(&text).unwrap();
-    assert_eq!(j.req_arr("rounds").unwrap().len(), 2);
-}
-
-#[test]
 fn baseline_optimizers_run_through_the_same_workflow() {
-    let set = set();
-    let wf = Workflow::new(&set);
+    let wf = Workflow::simulated();
     for opt in ["random", "local", "bayesian", "nsga2", "human"] {
         let sc = Scenario {
             name: format!("it_k_{opt}"),
@@ -107,5 +83,143 @@ fn baseline_optimizers_run_through_the_same_workflow() {
         let out = wf.run_kernel(&sc).unwrap();
         assert_eq!(out.history.len(), 4, "{opt}");
         assert!(out.history.iter().all(|o| o.score.is_finite()), "{opt}");
+        assert!(out.cost_report.is_none(), "{opt} is not agent-backed");
+    }
+}
+
+#[test]
+fn malformed_kernel_batch_is_a_hard_error() {
+    let wf = Workflow::simulated();
+    let sc = Scenario {
+        name: "it_badbatch".into(),
+        track: Track::Kernel,
+        kernel: "matmul:banana".into(),
+        budget: 2,
+        ..Scenario::default()
+    };
+    let err = wf.run_kernel(&sc).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("matmul:banana"), "{msg}");
+    // A missing batch still uses the documented default of 64.
+    let ok = wf.run_kernel(&Scenario {
+        name: "it_nobatch".into(),
+        track: Track::Kernel,
+        kernel: "softmax".into(),
+        budget: 2,
+        ..Scenario::default()
+    });
+    assert!(ok.is_ok());
+}
+
+/// Acceptance: a mixed-track fleet of ≥ 6 scenarios run with 4 workers
+/// yields bit-identical best scores to the serial (1-worker) run.
+#[test]
+fn fleet_matches_serial_bit_for_bit() {
+    let mut scenarios = Vec::new();
+    let kernel_cells: [(&str, &str, &str); 6] = [
+        ("haqa", "matmul:64", "a6000"),
+        ("random", "softmax:128", "adreno740"),
+        ("bayesian", "silu:64", "a6000"),
+        ("nsga2", "rmsnorm:1", "adreno740"),
+        ("local", "rope:64", "a6000"),
+        ("human", "matmul:128", "a6000"),
+    ];
+    for (i, (opt, kernel, dev)) in kernel_cells.iter().enumerate() {
+        scenarios.push(Scenario {
+            name: format!("fleet_k{i}"),
+            track: Track::Kernel,
+            kernel: (*kernel).into(),
+            device: (*dev).into(),
+            optimizer: (*opt).into(),
+            budget: 5,
+            seed: i as u64,
+            ..Scenario::default()
+        });
+    }
+    scenarios.push(Scenario {
+        name: "fleet_bw0".into(),
+        track: Track::Bitwidth,
+        model: "llama2-13b".into(),
+        memory_limit_gb: 12.0,
+        ..Scenario::default()
+    });
+    scenarios.push(Scenario {
+        name: "fleet_bw1".into(),
+        track: Track::Bitwidth,
+        model: "openllama-3b".into(),
+        device: "adreno740".into(),
+        memory_limit_gb: 10.0,
+        ..Scenario::default()
+    });
+
+    let parallel = FleetRunner::new(4).run(&scenarios);
+    let serial = FleetRunner::new(1).run(&scenarios);
+    assert_eq!(parallel.outcomes.len(), scenarios.len());
+    for (i, (p, s)) in parallel.outcomes.iter().zip(&serial.outcomes).enumerate() {
+        let (p, s) = (p.as_ref().unwrap(), s.as_ref().unwrap());
+        assert_eq!(
+            p.best_score.to_bits(),
+            s.best_score.to_bits(),
+            "scenario {} diverged between parallel and serial",
+            scenarios[i].name
+        );
+        assert_eq!(p.history.len(), s.history.len());
+    }
+}
+
+/// Acceptance: the cache reports > 0 hits on a repeated-method sweep —
+/// identical (track, scenario knobs, config) evaluate once fleet-wide.
+#[test]
+fn cache_hits_on_repeated_method_sweep() {
+    let cache = EvalCache::new();
+    let sweep = |name: &str| Scenario {
+        name: name.into(),
+        track: Track::Kernel,
+        kernel: "matmul:64".into(),
+        optimizer: "default".into(), // proposes the same config every round
+        budget: 3,
+        seed: 9,
+        ..Scenario::default()
+    };
+    let wf = Workflow::simulated().with_cache(cache.clone());
+    let a = wf.run(&sweep("sweep_a")).unwrap();
+    assert_eq!((a.cache_misses, a.cache_hits), (1, 2));
+    // A second method over the same knobs re-proposes the same config:
+    // everything is served from the cache.
+    let b = wf.run(&sweep("sweep_b")).unwrap();
+    assert_eq!((b.cache_misses, b.cache_hits), (0, 3));
+    assert_eq!(a.best_score.to_bits(), b.best_score.to_bits());
+    let st = cache.stats();
+    assert_eq!((st.hits, st.misses, st.entries), (5, 1, 1));
+}
+
+/// The fine-tuning track needs PJRT + `make artifacts`; keep it exercised
+/// in `--features pjrt` builds.
+#[cfg(feature = "pjrt")]
+mod pjrt_tracks {
+    use super::*;
+    use haqa::runtime::ArtifactSet;
+
+    #[test]
+    fn finetune_track_runs_and_logs() {
+        let set = ArtifactSet::load_default().expect("run `make artifacts` first");
+        let wf = Workflow::new(&set);
+        let sc = Scenario {
+            name: "it_ft".into(),
+            track: Track::FinetuneCnn,
+            model: "cnn_s".into(),
+            optimizer: "haqa".into(),
+            budget: 2,
+            steps_per_epoch: 1,
+            seed: 2,
+            ..Scenario::default()
+        };
+        let out = wf.run_finetune(&sc).unwrap();
+        assert_eq!(out.history.len(), 2);
+        assert!(out.best_score > 0.05, "accuracy {}", out.best_score);
+        let log = out.log_path.expect("task log written");
+        let text = std::fs::read_to_string(log).unwrap();
+        let j = haqa::util::json::parse(&text).unwrap();
+        assert_eq!(j.req_arr("rounds").unwrap().len(), 2);
     }
 }

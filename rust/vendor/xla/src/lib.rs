@@ -1,0 +1,169 @@
+//! Offline API stub of the `xla` (xla_extension 0.5.1) binding surface that
+//! haqa's `pjrt` feature compiles against.
+//!
+//! The build image has no network access and no libxla_extension, so this
+//! crate provides just enough of the binding's types for
+//! `cargo build --features pjrt` to type-check; every operation that would
+//! touch PJRT returns an error at runtime.  To execute the AOT'd HLO
+//! artifacts for real, point Cargo at the real binding:
+//!
+//! ```toml
+//! [patch."crates-io"]            # or a workspace [patch] on the path dep
+//! xla = { git = "https://github.com/LaurentMazare/xla-rs" }
+//! ```
+//!
+//! Host-side `Literal` construction/reshape is implemented for real (it is
+//! pure bookkeeping), which keeps the conversion layer in
+//! `haqa::runtime::tensor` testable even under this stub.
+
+/// The binding's error type; formatted with `{:?}` at every call site.
+#[derive(Clone)]
+pub struct XlaError(pub String);
+
+impl std::fmt::Debug for XlaError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "xla stub: {}", self.0)
+    }
+}
+
+fn unavailable<T>(what: &str) -> Result<T, XlaError> {
+    Err(XlaError(format!(
+        "{what} requires the real xla_extension binding — this offline build \
+         links the API stub (see rust/vendor/xla/src/lib.rs)"
+    )))
+}
+
+/// Element types `Literal::to_vec` can produce (f32 is all haqa uses).
+pub trait NativeType: Copy {
+    fn from_f32(x: f32) -> Self;
+}
+
+impl NativeType for f32 {
+    fn from_f32(x: f32) -> f32 {
+        x
+    }
+}
+
+/// Host-side literal: shape + row-major f32 buffer.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    dims: Vec<i64>,
+    data: Vec<f32>,
+}
+
+impl Literal {
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal {
+            dims: vec![data.len() as i64],
+            data: data.to_vec(),
+        }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal, XlaError> {
+        let n: i64 = dims.iter().product();
+        let want = if dims.is_empty() { 1 } else { n.max(0) as usize };
+        if want != self.data.len() {
+            return Err(XlaError(format!(
+                "reshape to {dims:?} ({} elements) from {} elements",
+                want,
+                self.data.len()
+            )));
+        }
+        Ok(Literal {
+            dims: dims.to_vec(),
+            data: self.data.clone(),
+        })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape, XlaError> {
+        Ok(ArrayShape {
+            dims: self.dims.clone(),
+        })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, XlaError> {
+        Ok(self.data.iter().map(|&x| T::from_f32(x)).collect())
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>, XlaError> {
+        unavailable("Literal::to_tuple")
+    }
+}
+
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+#[derive(Clone)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, XlaError> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn compile(&self, _c: &XlaComputation) -> Result<PjRtLoadedExecutable, XlaError> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, XlaError> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_p: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_bookkeeping_works_offline() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.array_shape().unwrap().dims(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3, 3]).is_err());
+        // () scalar reshape
+        let s = Literal::vec1(&[7.0]).reshape(&[]).unwrap();
+        assert!(s.array_shape().unwrap().dims().is_empty());
+    }
+
+    #[test]
+    fn pjrt_paths_error_cleanly() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x").is_err());
+    }
+}
