@@ -59,7 +59,7 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
-    let workers = FleetRunner::workers_from_env(None);
+    let workers = FleetRunner::workers_from_env(None)?;
     let t_start = std::time::Instant::now();
     let report = FleetRunner::new(workers).run(&scenarios);
     eprintln!(

@@ -12,10 +12,11 @@
 //! Flags: `--rounds=N` (agent budget per kernel, default 10), `--skip-real`;
 //! env `HAQA_WORKERS`.
 
+use haqa::coordinator::evaluator::KernelEvaluator;
 use haqa::coordinator::scenario::Track;
-use haqa::coordinator::{FleetRunner, Scenario};
-use haqa::deploy::tuner::{KernelTuner, PallasTuner};
-use haqa::hardware::{DeviceProfile, ExecConfig, KernelKind, Workload};
+use haqa::coordinator::{Evaluator, FleetRunner, Scenario};
+use haqa::deploy::tuner::PallasTuner;
+use haqa::hardware::{ExecConfig, KernelKind, Workload};
 use haqa::report::{speedup, us};
 use haqa::runtime::ArtifactSet;
 use haqa::search::spaces;
@@ -28,7 +29,6 @@ fn main() -> anyhow::Result<()> {
     let rounds: usize = bench::opt("rounds")
         .and_then(|s| s.parse().ok())
         .unwrap_or(10);
-    let profile = DeviceProfile::a6000();
     let space = spaces::kernel_exec();
 
     let mut scenarios = Vec::new();
@@ -46,7 +46,7 @@ fn main() -> anyhow::Result<()> {
             });
         }
     }
-    let workers = FleetRunner::workers_from_env(None);
+    let workers = FleetRunner::workers_from_env(None)?;
     let report = FleetRunner::new(workers).run(&scenarios);
 
     let mut table = Table::new(
@@ -57,13 +57,11 @@ fn main() -> anyhow::Result<()> {
     for kernel in KernelKind::ALL {
         for batch in [1usize, 64, 128] {
             let w = Workload::new(kernel, batch);
-            let tuner = KernelTuner {
-                profile: &profile,
-                workload: w,
-                noise_seed: NOISE_SEED,
-            };
+            // The default column runs through the same batched evaluator
+            // path as the fleet (one latency-model build per cell).
+            let ev = KernelEvaluator::from_scenario(&scenarios[i])?;
             let default_lat =
-                tuner.measure(&ExecConfig::llamacpp_default().to_config(&space));
+                -ev.evaluate_batch(&[ExecConfig::llamacpp_default().to_config(&space)])?[0].score;
             let out = report.outcomes[i]
                 .as_ref()
                 .map_err(|e| anyhow::anyhow!("{}: {e:#}", scenarios[i].name))?;

@@ -18,8 +18,10 @@
 
 use anyhow::{anyhow, ensure, Result};
 
-use crate::deploy::KernelTuner;
-use crate::hardware::{adaptive, memory, DeviceProfile, KernelKind, ModelProfile, Workload};
+use crate::deploy::tuner::measure_with;
+use crate::hardware::{
+    adaptive, memory, DeviceProfile, KernelKind, LatencyModel, ModelProfile, Workload,
+};
 use crate::quant::Scheme;
 use crate::runtime::ArtifactSet;
 use crate::search::{spaces, Config, Space};
@@ -61,6 +63,15 @@ pub trait Evaluator {
     /// Evaluate one configuration.  Must be deterministic in
     /// (`scope`, `cfg`).
     fn evaluate(&self, cfg: &Config) -> Result<Evaluation>;
+
+    /// Evaluate a slice of configurations in one call.  Backends with
+    /// per-call setup (latency-model calibration, artifact lookups)
+    /// override this to pay it once per batch; results must be
+    /// element-wise identical to calling [`evaluate`](Evaluator::evaluate)
+    /// per config, and `result[i]` corresponds to `cfgs[i]`.
+    fn evaluate_batch(&self, cfgs: &[Config]) -> Result<Vec<Evaluation>> {
+        cfgs.iter().map(|c| self.evaluate(c)).collect()
+    }
 
     /// Rounds actually run under a scenario budget (single-decision tracks
     /// override this to 1).
@@ -206,9 +217,14 @@ impl Evaluator for FinetuneEvaluator<'_> {
 // ---- kernel-tuning track (Table 3) -----------------------------------------
 
 /// Simulated hardware latency of a kernel execution configuration.
+///
+/// The latency model is calibrated **once at construction** — a fleet
+/// worker that runs a whole kernel scenario (or a batched measurement
+/// slice) pays the per-(workload, device) setup exactly once, where the
+/// seed re-derived it inside every evaluation.
 pub struct KernelEvaluator {
     profile: DeviceProfile,
-    workload: Workload,
+    model: LatencyModel,
     noise_seed: u64,
     space: Space,
 }
@@ -216,26 +232,26 @@ pub struct KernelEvaluator {
 impl KernelEvaluator {
     pub fn from_scenario(sc: &Scenario) -> Result<KernelEvaluator> {
         let (kernel, batch) = parse_kernel_spec(&sc.kernel)?;
+        let profile = sc.device_profile();
+        let model = LatencyModel::new(Workload::new(kernel, batch), &profile);
         Ok(KernelEvaluator {
-            profile: sc.device_profile(),
-            workload: Workload::new(kernel, batch),
+            profile,
+            model,
             noise_seed: sc.seed,
             space: spaces::kernel_exec(),
         })
     }
 
     pub fn objective(&self) -> Json {
+        let w = self.workload();
         let mut o = Json::obj();
-        o.set(
-            "kernel",
-            Json::Str(self.workload.kernel.label().to_lowercase()),
-        );
-        o.set("size", Json::Str(self.workload.size_label()));
+        o.set("kernel", Json::Str(w.kernel.label().to_lowercase()));
+        o.set("size", Json::Str(w.size_label()));
         o
     }
 
     pub fn workload(&self) -> Workload {
-        self.workload
+        self.model.workload()
     }
 }
 
@@ -249,29 +265,38 @@ impl Evaluator for KernelEvaluator {
     }
 
     fn scope(&self) -> Json {
+        let w = self.workload();
         let mut o = Json::obj();
-        o.set(
-            "kernel",
-            Json::Str(self.workload.kernel.label().to_lowercase()),
-        );
-        o.set("batch", Json::Num(self.workload.batch as f64));
+        o.set("kernel", Json::Str(w.kernel.label().to_lowercase()));
+        o.set("batch", Json::Num(w.batch as f64));
         o.set("device", Json::Str(self.profile.name.clone()));
         o.set("noise_seed", Json::Num(self.noise_seed as f64));
         o
     }
 
     fn evaluate(&self, cfg: &Config) -> Result<Evaluation> {
-        let tuner = KernelTuner {
-            profile: &self.profile,
-            workload: self.workload,
-            noise_seed: self.noise_seed,
-        };
-        let lat = tuner.measure(cfg);
+        let lat = measure_with(&self.model, self.noise_seed, cfg);
         Ok(Evaluation {
             score: -lat,
             extra: Vec::new(),
             feedback: format!("{{\"latency_us\": {lat:.3}}}"),
         })
+    }
+
+    /// Batched measurement: the model is already built, so a slice of
+    /// configs is a tight loop over `badness` walks with zero setup.
+    fn evaluate_batch(&self, cfgs: &[Config]) -> Result<Vec<Evaluation>> {
+        Ok(cfgs
+            .iter()
+            .map(|cfg| {
+                let lat = measure_with(&self.model, self.noise_seed, cfg);
+                Evaluation {
+                    score: -lat,
+                    extra: Vec::new(),
+                    feedback: format!("{{\"latency_us\": {lat:.3}}}"),
+                }
+            })
+            .collect())
     }
 }
 
@@ -387,6 +412,26 @@ mod tests {
         assert_eq!(a.score.to_bits(), b.score.to_bits());
         assert_eq!(a.feedback, b.feedback);
         assert!(a.score < 0.0, "score is negative latency");
+    }
+
+    #[test]
+    fn kernel_batch_matches_single_evaluations() {
+        let sc = Scenario {
+            track: Track::Kernel,
+            kernel: "matmul:64".into(),
+            seed: 2,
+            ..Scenario::default()
+        };
+        let ev = KernelEvaluator::from_scenario(&sc).unwrap();
+        let mut rng = crate::util::rng::Rng::new(8);
+        let cfgs: Vec<Config> = (0..12).map(|_| ev.space().sample(&mut rng)).collect();
+        let batch = ev.evaluate_batch(&cfgs).unwrap();
+        assert_eq!(batch.len(), cfgs.len());
+        for (cfg, b) in cfgs.iter().zip(&batch) {
+            let single = ev.evaluate(cfg).unwrap();
+            assert_eq!(single.score.to_bits(), b.score.to_bits());
+            assert_eq!(single.feedback, b.feedback);
+        }
     }
 
     #[test]

@@ -6,17 +6,28 @@
 //! * **Bit-identical to serial.** Every scenario owns its seeded RNG
 //!   streams and its own optimizer, and every [`Evaluator`] is
 //!   deterministic, so a fleet run with N workers produces exactly the
-//!   scores a serial run produces, in input order.
+//!   scores a serial run produces, in input order — whatever the sharding.
 //! * **Shared deduplication.** All workers share one content-addressed
-//!   [`EvalCache`] (unless disabled), so equal evaluations across
-//!   scenarios, methods and rounds are computed once fleet-wide.
+//!   [`EvalCache`] (unless disabled) — optionally a persistent one
+//!   ([`EvalCache::with_dir`]) so evaluations survive across processes.
+//! * **Family-sharded work queue.** Scenarios are ordered by their
+//!   [`Scenario::family`] grouping key, so workers drain one family before
+//!   touching the next: the artifact-loading (PJRT) scenarios cluster onto
+//!   as few workers as possible — each compiles and loads the set once —
+//!   instead of the round-robin seed behavior where every worker
+//!   redundantly loaded it.  Workers still steal across family boundaries
+//!   when a family drains, so parallelism is never throttled by the
+//!   grouping.
 //! * **Thread-locality respected.** PJRT handles are `Rc`-backed and
 //!   thread-local, so each worker lazily loads its own [`ArtifactSet`] the
 //!   first time it picks up a scenario that trains on PJRT; simulator-only
 //!   scenarios never touch the artifact registry at all.
 //!
 //! Worker count comes from the caller (CLI `--workers`) or the
-//! `HAQA_WORKERS` environment variable, defaulting to 4.
+//! `HAQA_WORKERS` environment variable, defaulting to 4 and clamped to the
+//! machine's available parallelism.
+//!
+//! [`Evaluator`]: super::evaluator::Evaluator
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -35,6 +46,9 @@ pub struct FleetRunner {
     pub workers: usize,
     /// Shared across all workers; `None` disables caching.
     pub cache: Option<EvalCache>,
+    /// Write per-scenario task logs (disable for perf harnesses where the
+    /// log I/O would pollute wall-clock numbers).
+    pub write_logs: bool,
 }
 
 /// Results of a fleet run; `outcomes[i]` corresponds to `scenarios[i]`.
@@ -42,6 +56,9 @@ pub struct FleetReport {
     pub outcomes: Vec<Result<TrackOutcome>>,
     /// Fleet-wide cache counters (None when caching was disabled).
     pub cache: Option<CacheStats>,
+    /// Distinct [`Scenario::family`] groups the work queue was sharded
+    /// into.
+    pub families: usize,
 }
 
 impl FleetRunner {
@@ -49,6 +66,7 @@ impl FleetRunner {
         FleetRunner {
             workers: workers.max(1),
             cache: Some(EvalCache::new()),
+            write_logs: true,
         }
     }
 
@@ -58,21 +76,65 @@ impl FleetRunner {
         self
     }
 
+    /// Share (or persist) an existing cache handle — e.g. one built with
+    /// [`EvalCache::with_dir`] so evaluations are reused across processes.
+    pub fn with_cache(mut self, cache: EvalCache) -> FleetRunner {
+        self.cache = Some(cache);
+        self
+    }
+
+    /// Skip task-log writes (perf harnesses).
+    pub fn quiet(mut self) -> FleetRunner {
+        self.write_logs = false;
+        self
+    }
+
     /// Resolve the worker count: explicit CLI value, else `HAQA_WORKERS`,
-    /// else [`DEFAULT_WORKERS`].
-    pub fn workers_from_env(cli: Option<usize>) -> usize {
-        cli.or_else(|| {
-            std::env::var("HAQA_WORKERS")
-                .ok()
-                .and_then(|v| v.parse().ok())
-        })
-        .unwrap_or(DEFAULT_WORKERS)
-        .max(1)
+    /// else [`DEFAULT_WORKERS`] — clamped to the machine's available
+    /// parallelism.  An unparseable `HAQA_WORKERS` is a hard error (the
+    /// seed silently fell back to the default, turning typos into
+    /// mis-sized fleets).
+    pub fn workers_from_env(cli: Option<usize>) -> Result<usize> {
+        let n = match cli {
+            Some(n) => n,
+            None => match std::env::var("HAQA_WORKERS") {
+                Ok(v) => v.trim().parse::<usize>().map_err(|_| {
+                    anyhow!("HAQA_WORKERS must be a positive integer, got '{v}'")
+                })?,
+                Err(_) => DEFAULT_WORKERS,
+            },
+        };
+        let max = std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(DEFAULT_WORKERS);
+        Ok(n.clamp(1, max))
     }
 
     /// Execute the batch; blocks until every scenario finished.
     pub fn run(&self, scenarios: &[Scenario]) -> FleetReport {
         let n = scenarios.len();
+        // Family-sharded work queue: scenario indices grouped by family
+        // (first-appearance order, stable within a family).  Workers pull
+        // from one shared cursor, so they naturally cluster inside a
+        // family while it lasts and spill into the next one when it
+        // drains — minimal families per worker, full parallelism.
+        let mut family_order: Vec<String> = Vec::new();
+        let ranks: Vec<usize> = scenarios
+            .iter()
+            .map(|sc| {
+                let f = sc.family();
+                match family_order.iter().position(|k| *k == f) {
+                    Some(r) => r,
+                    None => {
+                        family_order.push(f);
+                        family_order.len() - 1
+                    }
+                }
+            })
+            .collect();
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by_key(|&i| ranks[i]);
+
         let slots: Mutex<Vec<Option<Result<TrackOutcome>>>> =
             Mutex::new((0..n).map(|_| None).collect());
         let next = AtomicUsize::new(0);
@@ -81,17 +143,20 @@ impl FleetRunner {
             for _ in 0..workers {
                 s.spawn(|| {
                     // Lazily-loaded per-thread artifact registry (PJRT
-                    // clients and executable caches are thread-local).
+                    // clients and executable caches are thread-local);
+                    // loaded at most once per worker thanks to the
+                    // family-ordered queue.
                     let mut set: Option<ArtifactSet> = None;
                     loop {
-                        let i = next.fetch_add(1, Ordering::Relaxed);
-                        if i >= n {
+                        let qi = next.fetch_add(1, Ordering::Relaxed);
+                        if qi >= n {
                             break;
                         }
+                        let i = order[qi];
                         // Isolate per-scenario panics: one poisoned cell
                         // must not abort the rest of the batch.
                         let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
-                            || run_one(&scenarios[i], &mut set, self.cache.clone()),
+                            || run_one(&scenarios[i], &mut set, self.cache.clone(), self.write_logs),
                         ))
                         .unwrap_or_else(|p| {
                             Err(anyhow!(
@@ -115,6 +180,7 @@ impl FleetRunner {
         FleetReport {
             outcomes,
             cache: self.cache.as_ref().map(|c| c.stats()),
+            families: family_order.len(),
         }
     }
 }
@@ -136,6 +202,7 @@ fn run_one(
     sc: &Scenario,
     set: &mut Option<ArtifactSet>,
     cache: Option<EvalCache>,
+    write_logs: bool,
 ) -> Result<TrackOutcome> {
     if sc.needs_artifacts() && set.is_none() {
         *set = Some(ArtifactSet::load_default()?);
@@ -147,6 +214,9 @@ fn run_one(
     if let Some(c) = cache {
         wf = wf.with_cache(c);
     }
+    if !write_logs {
+        wf = wf.quiet();
+    }
     wf.run(sc)
 }
 
@@ -157,14 +227,35 @@ mod tests {
     #[test]
     fn worker_count_clamps_and_resolves() {
         assert_eq!(FleetRunner::new(0).workers, 1);
-        assert_eq!(FleetRunner::workers_from_env(Some(7)), 7);
-        assert_eq!(FleetRunner::workers_from_env(Some(0)), 1);
+        assert_eq!(FleetRunner::workers_from_env(Some(0)).unwrap(), 1);
+        let n = FleetRunner::workers_from_env(Some(7)).unwrap();
+        assert!((1..=7).contains(&n), "clamped to available parallelism: {n}");
+        // A huge request never exceeds the machine.
+        let max = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(DEFAULT_WORKERS);
+        assert_eq!(FleetRunner::workers_from_env(Some(10_000)).unwrap(), max);
+    }
+
+    #[test]
+    fn unparseable_workers_env_is_surfaced() {
+        // Serialized against other env readers by running in one test.
+        std::env::set_var("HAQA_WORKERS", "three");
+        let err = FleetRunner::workers_from_env(None);
+        std::env::remove_var("HAQA_WORKERS");
+        let msg = format!("{:#}", err.expect_err("typo must not be swallowed"));
+        assert!(msg.contains("HAQA_WORKERS") && msg.contains("three"), "{msg}");
+
+        std::env::set_var("HAQA_WORKERS", "2");
+        let ok = FleetRunner::workers_from_env(None);
+        std::env::remove_var("HAQA_WORKERS");
+        // Clamped to available parallelism, so 1 on a single-core box.
+        assert!((1..=2).contains(&ok.unwrap()));
     }
 
     #[test]
     fn empty_batch_is_fine() {
         let report = FleetRunner::new(4).run(&[]);
         assert!(report.outcomes.is_empty());
+        assert_eq!(report.families, 0);
         assert_eq!(report.cache.unwrap(), CacheStats::default());
     }
 }

@@ -5,9 +5,11 @@
 //!
 //! * [`scenario`] — launcher input: track, model, device, budget, seeds.
 //! * [`evaluator`] — the `Evaluator` trait + the three track backends
-//!   (fine-tune / kernel / bit-width).
-//! * [`cache`] — deterministic content-addressed evaluation cache.
-//! * [`fleet`] — scoped-thread scenario fleet, bit-identical to serial.
+//!   (fine-tune / kernel / bit-width), with batched evaluation.
+//! * [`cache`] — deterministic content-addressed evaluation cache:
+//!   lock-striped in memory, optional persistent journal tier.
+//! * [`fleet`] — scoped-thread scenario fleet, family-sharded work queue,
+//!   bit-identical to serial.
 //! * [`workflow`] — the generic round loop and the joint pipeline.
 //! * [`tasklog`] — per-task JSON logs (§3.3).
 

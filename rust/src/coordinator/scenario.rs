@@ -178,6 +178,24 @@ impl Scenario {
         )
     }
 
+    /// Fleet-sharding key: scenarios in one family share the heavyweight
+    /// per-worker state — the compiled/loaded artifact set for the
+    /// PJRT-training tracks.  The fleet runner orders its work queue by
+    /// family so the artifact-loading scenarios cluster onto as few
+    /// workers as possible (each loads the set once) and simulator-only
+    /// scenarios never land on a worker that had to load artifacts just
+    /// for them.  Kernel scenarios are further split by simulated device
+    /// so the queue stays cache-friendly per device profile.
+    pub fn family(&self) -> String {
+        match self.track {
+            Track::FinetuneCnn => "artifacts/cnn".into(),
+            Track::FinetuneLm => "artifacts/lm".into(),
+            Track::Joint => "artifacts/joint".into(),
+            Track::Kernel => format!("sim/kernel/{}", self.device),
+            Track::Bitwidth => "sim/bitwidth".into(),
+        }
+    }
+
     pub fn device_profile(&self) -> crate::hardware::DeviceProfile {
         match self.device.as_str() {
             "adreno740" | "mobile" => crate::hardware::DeviceProfile::adreno740(),
@@ -215,6 +233,39 @@ mod tests {
         assert_eq!(s.precision, QatPrecision::W2A2);
         assert_eq!(s.budget, 6);
         assert_eq!(s.device_profile().name, "Adreno 740 (Snapdragon 8 Gen 2)");
+    }
+
+    #[test]
+    fn family_groups_by_artifact_set_and_device() {
+        let kernel_a = Scenario {
+            track: Track::Kernel,
+            device: "a6000".into(),
+            ..Scenario::default()
+        };
+        let kernel_b = Scenario {
+            track: Track::Kernel,
+            device: "adreno740".into(),
+            kernel: "softmax:128".into(),
+            ..Scenario::default()
+        };
+        let kernel_c = Scenario {
+            track: Track::Kernel,
+            device: "a6000".into(),
+            kernel: "silu:64".into(),
+            ..Scenario::default()
+        };
+        assert_eq!(kernel_a.family(), kernel_c.family(), "same device shares");
+        assert_ne!(kernel_a.family(), kernel_b.family(), "device splits");
+        let cnn = Scenario {
+            track: Track::FinetuneCnn,
+            ..Scenario::default()
+        };
+        let lm = Scenario {
+            track: Track::FinetuneLm,
+            ..Scenario::default()
+        };
+        assert_ne!(cnn.family(), lm.family(), "artifact sets split");
+        assert_ne!(cnn.family(), kernel_a.family());
     }
 
     #[test]

@@ -37,6 +37,9 @@ pub struct Workflow<'a> {
     /// kernel and bit-width tracks run on the analytic simulator.
     set: Option<&'a ArtifactSet>,
     cache: Option<EvalCache>,
+    /// Write task logs to disk (`false` for perf harnesses, where the
+    /// per-scenario log I/O would pollute wall-clock measurements).
+    write_logs: bool,
 }
 
 #[derive(Debug)]
@@ -57,6 +60,7 @@ impl<'a> Workflow<'a> {
         Workflow {
             set: Some(set),
             cache: None,
+            write_logs: true,
         }
     }
 
@@ -66,12 +70,19 @@ impl<'a> Workflow<'a> {
         Workflow {
             set: None,
             cache: None,
+            write_logs: true,
         }
     }
 
     /// Attach a (shareable) content-addressed evaluation cache.
     pub fn with_cache(mut self, cache: EvalCache) -> Self {
         self.cache = Some(cache);
+        self
+    }
+
+    /// Skip task-log writes (perf harnesses).
+    pub fn quiet(mut self) -> Self {
+        self.write_logs = false;
         self
     }
 
@@ -196,7 +207,7 @@ impl<'a> Workflow<'a> {
         if let Some(cost) = &cost_report {
             log.set_summary("cost", Json::Str(cost.clone()));
         }
-        let log_path = log.save().ok();
+        let log_path = if self.write_logs { log.save().ok() } else { None };
         Ok(TrackOutcome {
             history,
             best_score,

@@ -72,6 +72,12 @@ impl<'a> TokenEngine<'a> {
 
     /// Greedy-decode `n_tokens` continuations of `prompt` (token ids),
     /// timing each decode step.
+    ///
+    /// The decode loop is allocation-free per token: the `[1, SEQ, VOCAB]`
+    /// one-hot buffer, the rank mask and the scalar inputs are built once
+    /// and the buffer is updated incrementally — clear the SEQ slots that
+    /// are set, slide the window, set the SEQ new slots — instead of
+    /// reallocating and re-zeroing SEQ×VOCAB floats every step.
     pub fn generate(&self, prompt: &[usize], n_tokens: usize) -> Result<GenerationStats> {
         let exec = self.set.executor(&self.artifact)?;
         let mut window: Vec<usize> = vec![0; SEQ];
@@ -79,26 +85,33 @@ impl<'a> TokenEngine<'a> {
         for (i, &t) in prompt.iter().rev().take(SEQ).rev().enumerate() {
             window[start + i] = t % VOCAB;
         }
+        let mut x = Tensor::zeros(&[1, SEQ, VOCAB]);
+        for (t, &id) in window.iter().enumerate() {
+            x.data[t * VOCAB + id] = 1.0;
+        }
+        let mut named: HashMap<&str, Tensor> = HashMap::new();
+        named.insert("tokens", x);
+        named.insert("rank_mask", self.rank_mask.clone());
+        named.insert("bits", Tensor::scalar(self.bits));
+        named.insert("lora_scale", Tensor::scalar(self.lora_scale));
         let mut tokens = Vec::with_capacity(n_tokens);
         let mut per_token_us = Vec::with_capacity(n_tokens);
         for _ in 0..n_tokens {
-            let mut x = Tensor::zeros(&[1, SEQ, VOCAB]);
-            for (t, &id) in window.iter().enumerate() {
-                x.data[t * VOCAB + id] = 1.0;
-            }
-            let mut named: HashMap<&str, Tensor> = HashMap::new();
-            named.insert("tokens", x);
-            named.insert("rank_mask", self.rank_mask.clone());
-            named.insert("bits", Tensor::scalar(self.bits));
-            named.insert("lora_scale", Tensor::scalar(self.lora_scale));
             let t0 = Instant::now();
             let (_, out) = exec.step(Vec::new(), &self.frozen, &named)?;
             per_token_us.push(t0.elapsed().as_secs_f64() * 1e6);
             let logits = &out[0]; // (V,)
             let next = logits.argmax_last()[0];
             tokens.push(next);
+            let x = named.get_mut("tokens").expect("tokens buffer");
+            for (t, &id) in window.iter().enumerate() {
+                x.data[t * VOCAB + id] = 0.0;
+            }
             window.rotate_left(1);
             window[SEQ - 1] = next;
+            for (t, &id) in window.iter().enumerate() {
+                x.data[t * VOCAB + id] = 1.0;
+            }
         }
         Ok(GenerationStats {
             tokens,

@@ -13,7 +13,7 @@ use std::collections::HashMap;
 
 use anyhow::Result;
 
-use crate::hardware::{kernel_latency_us, DeviceProfile, ExecConfig, Workload};
+use crate::hardware::{DeviceProfile, ExecConfig, LatencyModel, Workload};
 use crate::optimizers::{Observation, Optimizer};
 use crate::runtime::{ArtifactSet, Tensor};
 use crate::search::{Config, Space};
@@ -30,15 +30,26 @@ pub struct KernelTuner<'a> {
 }
 
 impl<'a> KernelTuner<'a> {
+    /// The pre-calibrated latency model for this tuner's (workload,
+    /// device).  Build it once and thread it through the free
+    /// [`measure_with`] to amortize the calibration setup across
+    /// measurements (that is what [`KernelEvaluator`] does).
+    ///
+    /// [`KernelEvaluator`]: crate::coordinator::evaluator::KernelEvaluator
+    pub fn model(&self) -> LatencyModel {
+        LatencyModel::new(self.workload, self.profile)
+    }
+
     /// Mean simulated latency (µs) of an execution config.
     pub fn measure(&self, cfg: &Config) -> f64 {
-        let exec = ExecConfig::from_config(cfg);
-        let mut rng = Rng::new(self.noise_seed).split(exec.blockdim as u64);
-        let mut acc = 0.0;
-        for _ in 0..REPEATS {
-            acc += kernel_latency_us(&self.workload, self.profile, &exec, Some(&mut rng));
-        }
-        acc / REPEATS as f64
+        measure_with(&self.model(), self.noise_seed, cfg)
+    }
+
+    /// Measure a slice of configs against one model build — the batched
+    /// path.
+    pub fn measure_batch(&self, cfgs: &[Config]) -> Vec<f64> {
+        let model = self.model();
+        cfgs.iter().map(|c| measure_with(&model, self.noise_seed, c)).collect()
     }
 
     /// Drive an optimizer for `rounds`; score = −latency (maximized).
@@ -65,6 +76,20 @@ impl<'a> KernelTuner<'a> {
         let best = crate::optimizers::best(history).expect("non-empty history");
         (best.config.clone(), -best.score)
     }
+}
+
+/// One averaged measurement against a pre-built latency model: the paper's
+/// 10-repeat protocol with the deterministic per-config noise stream
+/// (seeded by the blockdim so distinct launch geometries see distinct
+/// noise, exactly as the original per-call path did).
+pub fn measure_with(model: &LatencyModel, noise_seed: u64, cfg: &Config) -> f64 {
+    let exec = ExecConfig::from_config(cfg);
+    let mut rng = Rng::new(noise_seed).split(exec.blockdim as u64);
+    let mut acc = 0.0;
+    for _ in 0..REPEATS {
+        acc += model.latency_us(&exec, Some(&mut rng));
+    }
+    acc / REPEATS as f64
 }
 
 /// Real-latency tuning over the AOT'd Pallas tile variants.

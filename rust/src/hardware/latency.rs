@@ -119,6 +119,10 @@ pub fn kappa(w: &Workload, p: &DeviceProfile) -> f64 {
 ///
 /// `noise_rng`: when provided, multiplies by ~N(1, 0.01²) measurement noise
 /// (the paper averages 10 repetitions; benches do the same).
+///
+/// Hot loops should build a [`LatencyModel`] once instead: this free
+/// function re-derives the calibration pair (and, inside [`kappa`], the
+/// default-config badness) on every call.
 pub fn kernel_latency_us(
     w: &Workload,
     p: &DeviceProfile,
@@ -131,6 +135,51 @@ pub fn kernel_latency_us(
     match noise_rng {
         Some(rng) => lat * (1.0 + rng.normal() * 0.01),
         None => lat,
+    }
+}
+
+/// Pre-calibrated latency model for one (workload, device) pair.
+///
+/// `calibrated()` and `kappa()` are loop-invariant per workload/device but
+/// [`kernel_latency_us`] recomputed them on every call — ten times per
+/// averaged measurement, once per repeat.  The model hoists them into
+/// construction so batched measurement ([`crate::deploy::KernelTuner`])
+/// and the kernel evaluator pay the setup exactly once per worker, and
+/// each measurement is a single `badness` walk.
+///
+/// Bit-compatibility: `latency_us` performs the identical float operations
+/// in the identical order as [`kernel_latency_us`], so cached evaluations
+/// and fleet runs stay bit-for-bit reproducible (asserted in tests).
+#[derive(Debug, Clone)]
+pub struct LatencyModel {
+    profile: DeviceProfile,
+    workload: Workload,
+    base_us: f64,
+    kappa: f64,
+}
+
+impl LatencyModel {
+    pub fn new(workload: Workload, profile: &DeviceProfile) -> LatencyModel {
+        let (_, haqa_us) = calibrated(&workload);
+        LatencyModel {
+            base_us: haqa_us * profile.kernel_scale,
+            kappa: kappa(&workload, profile),
+            profile: profile.clone(),
+            workload,
+        }
+    }
+
+    pub fn workload(&self) -> Workload {
+        self.workload
+    }
+
+    /// One simulated measurement (see [`kernel_latency_us`]).
+    pub fn latency_us(&self, e: &ExecConfig, noise_rng: Option<&mut Rng>) -> f64 {
+        let lat = self.base_us * (1.0 + self.kappa * badness(&self.workload, &self.profile, e));
+        match noise_rng {
+            Some(rng) => lat * (1.0 + rng.normal() * 0.01),
+            None => lat,
+        }
     }
 }
 
@@ -215,6 +264,33 @@ mod tests {
         e.tiling = 256; // 2*256*256*4 = 512 KiB >> 100 KiB shared
         let bad = kernel_latency_us(&w, &p, &e, None);
         assert!(bad > ok * 1.2, "{bad} vs {ok}");
+    }
+
+    #[test]
+    fn latency_model_is_bit_identical_to_free_function() {
+        // The cached model must reproduce kernel_latency_us exactly — the
+        // persistent cache and fleet determinism both depend on it.
+        let space = crate::search::spaces::kernel_exec();
+        let mut rng = Rng::new(17);
+        for p in [DeviceProfile::a6000(), DeviceProfile::adreno740()] {
+            for k in KernelKind::ALL {
+                for b in [1usize, 64, 128] {
+                    let w = Workload::new(k, b);
+                    let model = LatencyModel::new(w, &p);
+                    for _ in 0..20 {
+                        let cfg = space.sample(&mut rng);
+                        let e = ExecConfig::from_config(&cfg);
+                        assert_eq!(
+                            model.latency_us(&e, None).to_bits(),
+                            kernel_latency_us(&w, &p, &e, None).to_bits(),
+                            "{}@{b} on {}",
+                            k.label(),
+                            p.name
+                        );
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -28,7 +28,7 @@ pub mod profile;
 pub mod workload;
 
 pub use exec::ExecConfig;
-pub use latency::kernel_latency_us;
+pub use latency::{kernel_latency_us, LatencyModel};
 pub use models::ModelProfile;
 pub use profile::DeviceProfile;
 pub use workload::{KernelKind, Workload};

@@ -134,19 +134,36 @@ pub fn paper_latencies(w: &Workload) -> Option<(f64, f64)> {
 
 /// Interpolated calibration for batches outside the table (geometric in
 /// batch, clamped to table endpoints).
+///
+/// Allocation-free: this sits under every simulated kernel measurement
+/// (via [`super::latency::kernel_latency_us`] and latency-model setup), so
+/// it scans `PAPER_TABLE3` directly instead of collecting and sorting a
+/// `Vec` per call.  The table rows are grouped by kernel with batches
+/// ascending (asserted in tests), which is all the bracketing scan needs.
 pub fn calibrated(w: &Workload) -> (f64, f64) {
     if let Some(v) = paper_latencies(w) {
         return v;
     }
-    // Find bracketing batches in the table for this kernel.
-    let mut entries: Vec<(usize, f64, f64)> = PAPER_TABLE3
-        .iter()
-        .filter(|(k, _, _, _)| *k == w.kernel)
-        .map(|(_, b, d, h)| (*b, *d, *h))
-        .collect();
-    entries.sort_by_key(|e| e.0);
     let b = w.batch as f64;
-    let (lo, hi) = (entries.first().unwrap(), entries.last().unwrap());
+    let mut first: Option<(usize, f64, f64)> = None;
+    let mut last: Option<(usize, f64, f64)> = None;
+    let mut bracket: Option<((usize, f64, f64), (usize, f64, f64))> = None;
+    for &(k, bb, d, h) in PAPER_TABLE3 {
+        if k != w.kernel {
+            continue;
+        }
+        if first.is_none() {
+            first = Some((bb, d, h));
+        }
+        if let Some(prev) = last {
+            if bracket.is_none() && b >= prev.0 as f64 && b <= bb as f64 {
+                bracket = Some((prev, (bb, d, h)));
+            }
+        }
+        last = Some((bb, d, h));
+    }
+    let lo = first.expect("kernel present in the calibration table");
+    let hi = last.expect("kernel present in the calibration table");
     if b <= lo.0 as f64 {
         let s = b / lo.0 as f64;
         return (lo.1 * s.max(0.25), lo.2 * s.max(0.25));
@@ -155,16 +172,12 @@ pub fn calibrated(w: &Workload) -> (f64, f64) {
         let s = b / hi.0 as f64;
         return (hi.1 * s, hi.2 * s);
     }
-    for pair in entries.windows(2) {
-        let (b0, d0, h0) = pair[0];
-        let (b1, d1, h1) = pair[1];
-        if b >= b0 as f64 && b <= b1 as f64 {
-            let t = (b.ln() - (b0 as f64).ln()) / ((b1 as f64).ln() - (b0 as f64).ln());
-            return (
-                (d0.ln() + t * (d1.ln() - d0.ln())).exp(),
-                (h0.ln() + t * (h1.ln() - h0.ln())).exp(),
-            );
-        }
+    if let Some(((b0, d0, h0), (b1, d1, h1))) = bracket {
+        let t = (b.ln() - (b0 as f64).ln()) / ((b1 as f64).ln() - (b0 as f64).ln());
+        return (
+            (d0.ln() + t * (d1.ln() - d0.ln())).exp(),
+            (h0.ln() + t * (h1.ln() - h0.ln())).exp(),
+        );
     }
     (lo.1, lo.2)
 }
@@ -180,6 +193,24 @@ mod tests {
             for b in [1usize, 64, 128] {
                 assert!(paper_latencies(&Workload::new(k, b)).is_some());
             }
+        }
+    }
+
+    #[test]
+    fn table_grouped_by_kernel_with_ascending_batches() {
+        // The allocation-free bracketing scan in `calibrated` relies on
+        // this layout; keep the invariant explicit for future table edits.
+        for k in KernelKind::ALL {
+            let batches: Vec<usize> = PAPER_TABLE3
+                .iter()
+                .filter(|(kk, _, _, _)| *kk == k)
+                .map(|(_, b, _, _)| *b)
+                .collect();
+            assert!(
+                batches.windows(2).all(|w| w[0] < w[1]),
+                "{}: batches {batches:?} not strictly ascending",
+                k.label()
+            );
         }
     }
 

@@ -9,10 +9,11 @@
 //! haqa generate [--flags]      serve token generation (llama.cpp analogue)
 //! haqa run <scenario.json>     run a scenario file (incl. the joint loop)
 //! haqa fleet <scenarios.json>  run a scenario batch across a worker pool
+//! haqa bench [--quick]         fleet/cache throughput harness → BENCH_2.json
 //! ```
 
 use anyhow::Result;
-use haqa::coordinator::{FleetRunner, Scenario, Workflow};
+use haqa::coordinator::{EvalCache, FleetRunner, Scenario, Workflow};
 use haqa::coordinator::scenario::{parse_precision, Track};
 use haqa::optimizers::best;
 use haqa::runtime::{ArtifactSet, InputRole, Tensor};
@@ -42,6 +43,7 @@ fn real_main() -> Result<()> {
         "generate" => generate(rest),
         "run" => run_scenario(rest),
         "fleet" => fleet(rest),
+        "bench" => bench_fleet(rest),
         "perf" => perf(),
         "help" | "--help" => {
             print!("{}", HELP);
@@ -62,6 +64,7 @@ haqa — hardware-aware quantization agent (paper reproduction)
   haqa generate             token-generation engine on PJRT; --help
   haqa run <scenario.json>  run a scenario file (finetune/kernel/bitwidth/joint)
   haqa fleet <batch.json>   run a scenario batch on a worker pool w/ eval cache
+  haqa bench                cold/warm serial/fleet throughput harness; --help
 
 Benches regenerating every paper table/figure: `cargo bench` (see DESIGN.md).
 ";
@@ -249,6 +252,7 @@ fn run_scenario(rest: Vec<String>) -> Result<()> {
 fn fleet(rest: Vec<String>) -> Result<()> {
     let a = Args::new("haqa fleet", "run a scenario batch across a worker pool")
         .opt("workers", "worker threads (default: env HAQA_WORKERS or 4)")
+        .opt("cache-dir", "persist the eval-cache journal here (shared across runs and processes)")
         .flag("no-cache", "disable the content-addressed evaluation cache")
         .flag("check-serial", "re-run serially and verify bit-identical scores")
         .parse(rest)?;
@@ -258,8 +262,11 @@ fn fleet(rest: Vec<String>) -> Result<()> {
         .ok_or_else(|| anyhow::anyhow!("usage: haqa fleet <scenarios.json> [--workers N]"))?;
     let scenarios = Scenario::load_many(path)?;
     anyhow::ensure!(!scenarios.is_empty(), "no scenarios in {path}");
-    let workers = FleetRunner::workers_from_env(a.get_usize("workers")?);
+    let workers = FleetRunner::workers_from_env(a.get_usize("workers")?)?;
     let mut runner = FleetRunner::new(workers);
+    if let Some(dir) = a.get("cache-dir") {
+        runner = runner.with_cache(EvalCache::with_dir(dir)?);
+    }
     if a.get_bool("no-cache") {
         runner = runner.without_cache();
     }
@@ -279,8 +286,9 @@ fn fleet(rest: Vec<String>) -> Result<()> {
         }
     }
     println!(
-        "fleet: {} scenarios on {} workers in {:.2}s",
+        "fleet: {} scenarios ({} families) on {} workers in {:.2}s",
         scenarios.len(),
+        report.families,
         workers,
         t0.elapsed().as_secs_f64()
     );
@@ -305,6 +313,228 @@ fn fleet(rest: Vec<String>) -> Result<()> {
         println!("serial check: bit-identical best scores");
     }
     Ok(())
+}
+
+/// The perf trajectory harness (`haqa bench`): run a fixed scenario fleet
+/// serial-vs-fleet and cold-vs-warm cache, verify every phase is
+/// bit-identical, and emit `BENCH_2.json` so throughput is measured
+/// instead of asserted.
+///
+/// Protocol:
+///   1. cold serial — 1 worker, fresh in-memory cache;
+///   2. cold fleet  — N workers, persistent cache on a reset journal;
+///   3. warm fleet  — N workers, a *new* cache instance that loads the
+///      journal phase 2 wrote (the cross-process path, in-process).
+/// Plus a batched-measurement microbench (per-call latency-model setup vs
+/// one setup per slice).  Hard-fails if the phases diverge or the warm
+/// run sees zero cache hits, so CI can gate on the exit code.
+fn bench_fleet(rest: Vec<String>) -> Result<()> {
+    use haqa::coordinator::cache::JOURNAL_FILE;
+    use haqa::coordinator::{CacheStats, FleetReport};
+    use haqa::util::json::Json;
+
+    let a = Args::new("haqa bench", "fleet/cache throughput harness")
+        .opt("workers", "fleet worker threads (default: env HAQA_WORKERS or 4)")
+        .opt("cache-dir", "journal directory (reset at start; default: a temp dir)")
+        .opt_default("out", "BENCH_2.json", "report output path")
+        .opt_default("rounds", "8", "tuning rounds per kernel scenario")
+        .flag("quick", "small scenario set (CI perf smoke)")
+        .parse(rest)?;
+    let quick = a.get_bool("quick");
+    let rounds = a.get_usize("rounds")?.unwrap_or(8).max(1);
+    let workers = FleetRunner::workers_from_env(a.get_usize("workers")?)?;
+    let scenarios = bench_scenarios(quick, rounds);
+
+    let dir = match a.get("cache-dir") {
+        Some(d) => std::path::PathBuf::from(d),
+        None => std::env::temp_dir().join(format!("haqa_bench_cache_{}", std::process::id())),
+    };
+    std::fs::create_dir_all(&dir)?;
+    let journal = dir.join(JOURNAL_FILE);
+    // The protocol measures cold → warm, so the journal starts empty.
+    let _ = std::fs::remove_file(&journal);
+
+    let timed = |runner: FleetRunner| -> Result<(f64, Vec<u64>, CacheStats, usize)> {
+        let t0 = std::time::Instant::now();
+        let report: FleetReport = runner.run(&scenarios);
+        let wall = t0.elapsed().as_secs_f64();
+        let mut bits = Vec::with_capacity(scenarios.len());
+        for (sc, out) in scenarios.iter().zip(&report.outcomes) {
+            let o = out.as_ref().map_err(|e| anyhow::anyhow!("{}: {e:#}", sc.name))?;
+            bits.push(o.best_score.to_bits());
+        }
+        Ok((wall, bits, report.cache.unwrap_or_default(), report.families))
+    };
+
+    println!(
+        "bench: {} scenarios, budget {rounds}, {workers} workers, journal {}",
+        scenarios.len(),
+        journal.display()
+    );
+    let (serial_wall, serial_bits, serial_stats, families) =
+        timed(FleetRunner::new(1).quiet())?;
+    println!("  cold serial : {serial_wall:8.3}s  ({} computed)", serial_stats.misses);
+    let (cold_wall, cold_bits, cold_stats, _) = timed(
+        FleetRunner::new(workers)
+            .quiet()
+            .with_cache(EvalCache::with_dir(&dir)?),
+    )?;
+    println!("  cold fleet  : {cold_wall:8.3}s  ({} computed)", cold_stats.misses);
+    // A fresh instance — the process-boundary equivalent — must serve
+    // everything from the journal.
+    let (warm_wall, warm_bits, warm_stats, _) = timed(
+        FleetRunner::new(workers)
+            .quiet()
+            .with_cache(EvalCache::with_dir(&dir)?),
+    )?;
+    println!(
+        "  warm fleet  : {warm_wall:8.3}s  ({} hits / {} computed)",
+        warm_stats.hits, warm_stats.misses
+    );
+
+    let bit_identical = serial_bits == cold_bits && serial_bits == warm_bits;
+    let warm_hit_rate = warm_stats.hit_rate();
+    let batched_speedup = batched_measure_speedup(if quick { 64 } else { 256 });
+
+    let phase = |wall: f64, st: CacheStats| -> Json {
+        let total = (st.hits + st.misses) as f64;
+        let mut o = Json::obj();
+        o.set("wall_s", Json::Num(wall));
+        o.set("rounds", Json::Num(total));
+        o.set("computed", Json::Num(st.misses as f64));
+        o.set("cache_hits", Json::Num(st.hits as f64));
+        o.set("evals_per_sec", Json::Num(total / wall.max(1e-9)));
+        o
+    };
+    let mut phases = Json::obj();
+    phases.set("cold_serial", phase(serial_wall, serial_stats));
+    phases.set("cold_fleet", phase(cold_wall, cold_stats));
+    phases.set("warm_fleet", phase(warm_wall, warm_stats));
+    let mut speedup = Json::obj();
+    speedup.set("cold_fleet_vs_cold_serial", Json::Num(serial_wall / cold_wall.max(1e-9)));
+    speedup.set("warm_fleet_vs_cold_serial", Json::Num(serial_wall / warm_wall.max(1e-9)));
+    let mut j = Json::obj();
+    j.set("bench", Json::str("haqa bench"));
+    j.set("quick", Json::Bool(quick));
+    j.set("scenarios", Json::Num(scenarios.len() as f64));
+    j.set("families", Json::Num(families as f64));
+    j.set("workers", Json::Num(workers as f64));
+    j.set("rounds_budget", Json::Num(rounds as f64));
+    j.set("phases", phases);
+    j.set("speedup", speedup);
+    j.set("warm_hit_rate", Json::Num(warm_hit_rate));
+    j.set("batched_measure_speedup", Json::Num(batched_speedup));
+    j.set("bit_identical", Json::Bool(bit_identical));
+    let out_path = a.get("out").unwrap_or("BENCH_2.json").to_string();
+    std::fs::write(&out_path, j.to_string_pretty())?;
+
+    println!(
+        "  speedup     : cold fleet {:.2}x, warm fleet {:.2}x vs cold serial; \
+         warm hit rate {:.0}%; batched measurement {:.2}x",
+        serial_wall / cold_wall.max(1e-9),
+        serial_wall / warm_wall.max(1e-9),
+        warm_hit_rate * 100.0,
+        batched_speedup
+    );
+    println!("  report      : {out_path}");
+    anyhow::ensure!(bit_identical, "serial / cold-fleet / warm-fleet runs diverged");
+    anyhow::ensure!(
+        warm_hit_rate > 0.0,
+        "warm-cache run saw zero hits — the persistent journal tier is broken"
+    );
+    Ok(())
+}
+
+/// The fixed scenario set `haqa bench` measures: simulator-only tracks
+/// (kernel + bit-width) so the harness runs offline, spanning several
+/// artifact families (two simulated devices + the bit-width track) and
+/// every optimizer class the fleet serves.
+fn bench_scenarios(quick: bool, rounds: usize) -> Vec<Scenario> {
+    let kernels: &[&str] = if quick {
+        &["matmul:64", "softmax:128"]
+    } else {
+        &["matmul:64", "matmul:128", "softmax:64", "softmax:128", "silu:64", "rmsnorm:64", "rope:128"]
+    };
+    let devices: &[&str] = if quick { &["a6000"] } else { &["a6000", "adreno740"] };
+    let optimizers: &[&str] = if quick { &["haqa", "random"] } else { &["haqa", "random", "bayesian"] };
+    let mut v = Vec::new();
+    for device in devices {
+        for kernel in kernels {
+            for optimizer in optimizers {
+                v.push(Scenario {
+                    name: format!("bench_{device}_{}_{optimizer}", kernel.replace(':', "_")),
+                    track: Track::Kernel,
+                    kernel: (*kernel).into(),
+                    device: (*device).into(),
+                    optimizer: (*optimizer).into(),
+                    budget: rounds,
+                    seed: 7,
+                    ..Scenario::default()
+                });
+            }
+        }
+    }
+    let models: &[&str] = if quick {
+        &["llama2-13b", "openllama-3b"]
+    } else {
+        &["llama2-13b", "llama2-7b", "openllama-3b", "tinyllama-1.1b"]
+    };
+    for model in models {
+        for device in devices {
+            v.push(Scenario {
+                name: format!("bench_bw_{model}_{device}"),
+                track: Track::Bitwidth,
+                model: (*model).into(),
+                device: (*device).into(),
+                memory_limit_gb: 12.0,
+                ..Scenario::default()
+            });
+        }
+    }
+    v
+}
+
+/// Microbench for the batched kernel-measurement path: time a sweep of
+/// sampled configs through the per-call path (which re-derives the latency
+/// model every call) and through `measure_batch` (one model per slice).
+/// Returns the per-call / batched wall-clock ratio (best of 5 reps each).
+fn batched_measure_speedup(sweep: usize) -> f64 {
+    use haqa::deploy::KernelTuner;
+    use haqa::hardware::{DeviceProfile, KernelKind, Workload};
+    use haqa::search::spaces;
+
+    let profile = DeviceProfile::a6000();
+    let tuner = KernelTuner {
+        profile: &profile,
+        workload: Workload::new(KernelKind::MatMul, 64),
+        noise_seed: 7,
+    };
+    let space = spaces::kernel_exec();
+    let mut rng = Rng::new(21);
+    let cfgs: Vec<_> = (0..sweep).map(|_| space.sample(&mut rng)).collect();
+    let best_of = |f: &dyn Fn() -> Vec<f64>| -> (f64, Vec<f64>) {
+        let mut best = f64::INFINITY;
+        let mut out = Vec::new();
+        for _ in 0..5 {
+            let t0 = std::time::Instant::now();
+            let r = f();
+            let dt = t0.elapsed().as_secs_f64();
+            if dt < best {
+                best = dt;
+            }
+            out = r;
+        }
+        (best, out)
+    };
+    let (per_call_s, a) = best_of(&|| cfgs.iter().map(|c| tuner.measure(c)).collect());
+    let (batched_s, b) = best_of(&|| tuner.measure_batch(&cfgs));
+    // A hard check (this harness gates CI in release builds): the batched
+    // path must be bit-identical to the per-call path.
+    assert!(
+        a.len() == b.len() && a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()),
+        "batched measurement diverged from the per-call path"
+    );
+    per_call_s / batched_s.max(1e-12)
 }
 
 /// L3 coordinator micro-benchmarks (EXPERIMENTS.md §Perf): the coordinator

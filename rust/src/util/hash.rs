@@ -31,9 +31,20 @@ pub fn content_hash_128(bytes: &[u8]) -> u128 {
     ((hi as u128) << 64) | lo as u128
 }
 
-/// Hex rendering of a 128-bit digest (log/debug output).
+/// Hex rendering of a 128-bit digest (log/debug output and the persistent
+/// cache-journal key field).
 pub fn hex128(h: u128) -> String {
     format!("{h:032x}")
+}
+
+/// Inverse of [`hex128`]: parse a lowercase/uppercase hex digest of at most
+/// 32 digits.  Returns `None` for empty, overlong or non-hex input — the
+/// cache-journal loader treats that as a corrupt record.
+pub fn parse_hex128(s: &str) -> Option<u128> {
+    if s.is_empty() || s.len() > 32 {
+        return None;
+    }
+    u128::from_str_radix(s, 16).ok()
 }
 
 #[cfg(test)]
@@ -61,5 +72,16 @@ mod tests {
         let h = content_hash_128(b"haqa");
         assert_ne!((h >> 64) as u64, h as u64);
         assert_eq!(hex128(h).len(), 32);
+    }
+
+    #[test]
+    fn hex128_round_trips() {
+        for h in [0u128, 1, u128::MAX, content_hash_128(b"haqa")] {
+            assert_eq!(parse_hex128(&hex128(h)), Some(h));
+        }
+        assert_eq!(parse_hex128("2a"), Some(0x2a), "short forms accepted");
+        assert_eq!(parse_hex128(""), None);
+        assert_eq!(parse_hex128("zz"), None);
+        assert_eq!(parse_hex128(&"f".repeat(33)), None, "overlong rejected");
     }
 }

@@ -41,6 +41,13 @@ impl Json {
         Json::Obj(pairs)
     }
 
+    /// Shorthand string constructor (`Json::str("x")` instead of
+    /// `Json::Str("x".to_string())`) — the cache journal and report
+    /// writers build many small objects.
+    pub fn str(s: impl Into<String>) -> Json {
+        Json::Str(s.into())
+    }
+
     // ---- accessors -------------------------------------------------------
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
@@ -539,6 +546,14 @@ mod tests {
         // Array order is semantic and must NOT be normalized away.
         let c = parse(r#"{"a": {"z": [2, 1], "y": 0.5}, "b": 1}"#).unwrap();
         assert_ne!(canonical(&a), canonical(&c));
+    }
+
+    #[test]
+    fn shorthand_constructors() {
+        let mut o = Json::obj();
+        o.set("name", Json::str("x"));
+        o.set("owned", Json::str(String::from("y")));
+        assert_eq!(o.to_string(), r#"{"name":"x","owned":"y"}"#);
     }
 
     #[test]

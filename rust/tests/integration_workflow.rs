@@ -167,6 +167,77 @@ fn fleet_matches_serial_bit_for_bit() {
     }
 }
 
+/// Acceptance: the family-sharded work queue plus the lock-striped,
+/// journal-backed cache stay bit-identical to serial — and a *fresh* cache
+/// instance (the process-boundary equivalent) serves the whole batch from
+/// the journal without recomputing anything.
+#[test]
+fn sharded_fleet_with_persistent_cache_matches_serial() {
+    let dir = std::env::temp_dir().join(format!("haqa_it_cache_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // Three families: kernel/a6000, kernel/adreno740, bitwidth.
+    let mut scenarios = Vec::new();
+    for (i, (opt, kernel, dev)) in [
+        ("haqa", "matmul:64", "a6000"),
+        ("random", "softmax:128", "adreno740"),
+        ("bayesian", "silu:64", "a6000"),
+        ("local", "rmsnorm:1", "adreno740"),
+    ]
+    .iter()
+    .enumerate()
+    {
+        scenarios.push(Scenario {
+            name: format!("shard_k{i}"),
+            track: Track::Kernel,
+            kernel: (*kernel).into(),
+            device: (*dev).into(),
+            optimizer: (*opt).into(),
+            budget: 4,
+            seed: i as u64,
+            ..Scenario::default()
+        });
+    }
+    scenarios.push(Scenario {
+        name: "shard_bw".into(),
+        track: Track::Bitwidth,
+        model: "llama2-13b".into(),
+        memory_limit_gb: 12.0,
+        ..Scenario::default()
+    });
+
+    let serial = FleetRunner::new(1).run(&scenarios);
+    let cold = FleetRunner::new(3)
+        .with_cache(EvalCache::with_dir(&dir).unwrap())
+        .run(&scenarios);
+    assert_eq!(cold.families, 3, "grouped into three artifact families");
+    for (i, (s, c)) in serial.outcomes.iter().zip(&cold.outcomes).enumerate() {
+        let (s, c) = (s.as_ref().unwrap(), c.as_ref().unwrap());
+        assert_eq!(
+            s.best_score.to_bits(),
+            c.best_score.to_bits(),
+            "scenario {} diverged under sharding",
+            scenarios[i].name
+        );
+    }
+
+    // Warm re-run through a brand-new cache instance: everything must be
+    // served from the journal, still bit-identical.
+    let warm = FleetRunner::new(3)
+        .with_cache(EvalCache::with_dir(&dir).unwrap())
+        .run(&scenarios);
+    let st = warm.cache.unwrap();
+    assert_eq!(st.misses, 0, "warm fleet must not recompute: {st:?}");
+    assert!(st.hits > 0);
+    for (s, w) in serial.outcomes.iter().zip(&warm.outcomes) {
+        assert_eq!(
+            s.as_ref().unwrap().best_score.to_bits(),
+            w.as_ref().unwrap().best_score.to_bits()
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 /// Acceptance: the cache reports > 0 hits on a repeated-method sweep —
 /// identical (track, scenario knobs, config) evaluate once fleet-wide.
 #[test]
