@@ -24,7 +24,7 @@ fn main() -> anyhow::Result<()> {
             mem.set(s.label(), Json::Num(memory::footprint_gb(&model, s)));
         }
         objective.set("mem_gb", mem);
-        let mut agent = Agent::new(Box::new(SimulatedLlm::new(4)));
+        let mut agent = Agent::blocking(SimulatedLlm::new(4));
         let ctx = TaskContext {
             kind: TaskKind::Bitwidth,
             space: &space,

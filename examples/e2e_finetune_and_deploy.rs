@@ -105,7 +105,9 @@ fn main() -> anyhow::Result<()> {
             ..Scenario::default()
         },
     ];
-    let fleet_report = FleetRunner::new(2).run(&deploy_scs);
+    // `with_inflight(2)` lets each worker park a scenario whose agent
+    // query is in flight and evaluate the other one meanwhile.
+    let fleet_report = FleetRunner::new(2).with_inflight(2).run(&deploy_scs);
     let mut outcomes = fleet_report.outcomes.into_iter();
     let kt = outcomes.next().unwrap()?;
     let bw = outcomes.next().unwrap()?;

@@ -20,7 +20,9 @@ use haqa::util::json::Json;
 fn main() -> anyhow::Result<()> {
     let set = ArtifactSet::load_default()?;
     let space = spaces::resnet_qat();
-    let mut agent = Agent::new(Box::new(SimulatedLlm::new(42)));
+    // `Agent::blocking` lifts the synchronous simulated policy into the
+    // request pipeline (submit → recv) behind the provided adapter.
+    let mut agent = Agent::blocking(SimulatedLlm::new(42));
     let job = QatJob {
         set: &set,
         model: "cnn_s",

@@ -32,9 +32,7 @@ fn run_tuning(
         workload: Workload::new(KernelKind::MatMul, 64),
         noise_seed: seed,
     };
-    let mut agent = Agent::new(Box::new(
-        SimulatedLlm::new(seed).with_failure_rate(failure_rate),
-    ));
+    let mut agent = Agent::blocking(SimulatedLlm::new(seed).with_failure_rate(failure_rate));
     agent.max_retries = max_retries;
     agent.history_mgr = history;
     let mut hist: Vec<Observation> = Vec::new();

@@ -35,7 +35,7 @@ fn main() -> anyhow::Result<()> {
             mem.set(s.label(), Json::Num(memory::footprint_gb(&model, s)));
         }
         objective.set("mem_gb", mem);
-        let mut agent = Agent::new(Box::new(SimulatedLlm::new(1)));
+        let mut agent = Agent::blocking(SimulatedLlm::new(1));
         let ctx = TaskContext {
             kind: TaskKind::Bitwidth,
             space: &space,

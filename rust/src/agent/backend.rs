@@ -1,11 +1,31 @@
-//! The LLM backend interface.
+//! The LLM backend interface: a request/response pipeline.
 //!
 //! The workflow is backend-agnostic: the paper runs GPT-4-0613 over HTTP;
 //! this repo runs [`super::simulated::SimulatedLlm`] so results are
 //! deterministic and offline.  Anything that maps a chat transcript to a
 //! completion can drive HAQA.
+//!
+//! Since the fleet overlaps many scenarios' agent queries, the backend is
+//! **request-oriented**: [`LlmBackend::submit`] enqueues a transcript and
+//! returns a [`RequestId`]; [`LlmBackend::try_recv`] polls it without
+//! blocking and [`LlmBackend::recv`] waits for it.  Synchronous backends
+//! (the simulated policy, a recorded-transcript replay) implement the
+//! plain [`BlockingLlm`] trait instead and are lifted into the pipeline by
+//! the provided [`Pipelined`] adapter, which completes requests at submit
+//! time — so every pre-pipeline call site keeps working and stays
+//! bit-identical.  Genuinely asynchronous backends (HTTP, the
+//! latency-simulating [`SlowLlm`]) run each request on a [`Dispatcher`]
+//! thread and overlap with whatever the fleet evaluates meanwhile.
 
-use anyhow::Result;
+use std::collections::{HashMap, HashSet};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::util::lock;
+
+use super::tokens::{estimate_prompt_tokens, estimate_tokens, SIMULATED_ROUNDTRIP_S};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Role {
@@ -53,11 +73,430 @@ impl Message {
     }
 }
 
-/// A chat-completion backend.
-pub trait LlmBackend {
+/// One chat-completion request: the full transcript to complete.
+#[derive(Debug, Clone)]
+pub struct AgentRequest {
+    pub messages: Vec<Message>,
+}
+
+impl AgentRequest {
+    pub fn new(messages: Vec<Message>) -> AgentRequest {
+        AgentRequest { messages }
+    }
+}
+
+/// Handle for an in-flight request (backend-local, monotonically issued).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct RequestId(pub u64);
+
+/// A finished completion with its per-request accounting (Appendix C).
+#[derive(Debug, Clone)]
+pub struct Completion {
+    /// The assistant's reply text.
+    pub text: String,
+    /// Prompt tokens billed for this request (estimated, or the server's
+    /// `usage.prompt_tokens` for HTTP backends).
+    pub prompt_tokens: usize,
+    /// Completion tokens billed for this request.
+    pub completion_tokens: usize,
+    /// Round-trip latency in seconds: measured for real backends,
+    /// *accounted* ([`SIMULATED_ROUNDTRIP_S`]) for simulated ones.
+    pub api_seconds: f64,
+}
+
+/// A request-oriented chat-completion backend.
+///
+/// Submission and receipt are decoupled so the fleet can keep many
+/// scenarios' queries in flight at once.  Implementations share state
+/// behind `&self` (interior mutability); each agent conversation keeps at
+/// most one request in flight, but distinct agents may share one backend.
+pub trait LlmBackend: Send {
     /// Human-readable model identifier (logged in task logs / cost report).
+    fn model_name(&self) -> &str;
+
+    /// Enqueue a transcript for completion.
+    fn submit(&self, req: AgentRequest) -> Result<RequestId>;
+
+    /// Non-blocking poll: `Ok(None)` while the request is still in flight.
+    /// A completion is handed out exactly once.
+    fn try_recv(&self, id: RequestId) -> Result<Option<Completion>>;
+
+    /// Blocking receive.
+    fn recv(&self, id: RequestId) -> Result<Completion>;
+
+    /// Provided blocking adapter: submit + recv in one call.
+    fn complete(&self, messages: &[Message]) -> Result<Completion> {
+        let id = self.submit(AgentRequest::new(messages.to_vec()))?;
+        self.recv(id)
+    }
+}
+
+/// A synchronous chat backend: the pre-pipeline `LlmBackend` shape.
+///
+/// Implementors (the simulated ReAct policy, transcript replay) are lifted
+/// into the request pipeline with [`Pipelined`], or given artificial
+/// latency with [`SlowLlm`].
+pub trait BlockingLlm: Send {
     fn model_name(&self) -> &str;
 
     /// Produce the assistant completion for a transcript.
     fn complete(&mut self, messages: &[Message]) -> Result<String>;
+}
+
+// ---------------------------------------------------------------------------
+// SyncMailbox: the hand-out-once store for complete-at-submit backends
+// ---------------------------------------------------------------------------
+
+/// Completion store for synchronous pipeline backends ([`Pipelined`],
+/// [`super::transcript::ReplayBackend`]): results exist the moment they
+/// are submitted, ids are monotonic, and each completion is handed out
+/// exactly once — a second receive (or an id never issued) is an error,
+/// since a synchronous backend is never "still in flight".
+#[derive(Default)]
+pub struct SyncMailbox {
+    next_id: u64,
+    done: HashMap<u64, Result<Completion>>,
+}
+
+impl SyncMailbox {
+    pub fn push(&mut self, result: Result<Completion>) -> RequestId {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.done.insert(id, result);
+        RequestId(id)
+    }
+
+    pub fn take(&mut self, id: RequestId, label: &str) -> Result<Completion> {
+        match self.done.remove(&id.0) {
+            Some(r) => r,
+            None => Err(anyhow!(
+                "unknown or already-received request {} on '{label}'",
+                id.0
+            )),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pipelined: the blocking adapter
+// ---------------------------------------------------------------------------
+
+struct PipeInner<B> {
+    backend: B,
+    mail: SyncMailbox,
+}
+
+/// Lifts a [`BlockingLlm`] into the request pipeline by completing each
+/// request synchronously at submit time.  `try_recv` therefore always
+/// succeeds on the first poll — the behavior (and, for deterministic
+/// backends, the output) is bit-identical to calling the blocking backend
+/// directly, which is what keeps the serial and pipelined fleet paths
+/// interchangeable.
+pub struct Pipelined<B> {
+    model: String,
+    inner: Mutex<PipeInner<B>>,
+}
+
+impl<B: BlockingLlm> Pipelined<B> {
+    pub fn new(backend: B) -> Pipelined<B> {
+        Pipelined {
+            model: backend.model_name().to_string(),
+            inner: Mutex::new(PipeInner {
+                backend,
+                mail: SyncMailbox::default(),
+            }),
+        }
+    }
+}
+
+impl<B: BlockingLlm> LlmBackend for Pipelined<B> {
+    fn model_name(&self) -> &str {
+        &self.model
+    }
+
+    fn submit(&self, req: AgentRequest) -> Result<RequestId> {
+        let mut g = lock(&self.inner);
+        let result = g.backend.complete(&req.messages).map(|text| Completion {
+            prompt_tokens: estimate_prompt_tokens(&req.messages),
+            completion_tokens: estimate_tokens(&text),
+            api_seconds: SIMULATED_ROUNDTRIP_S,
+            text,
+        });
+        Ok(g.mail.push(result))
+    }
+
+    fn try_recv(&self, id: RequestId) -> Result<Option<Completion>> {
+        lock(&self.inner).mail.take(id, &self.model).map(Some)
+    }
+
+    fn recv(&self, id: RequestId) -> Result<Completion> {
+        lock(&self.inner).mail.take(id, &self.model)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dispatcher: one-thread-per-request async executor
+// ---------------------------------------------------------------------------
+
+struct DispatchState {
+    next_id: u64,
+    done: HashMap<u64, Result<Completion>>,
+    /// Ids whose completion was already handed out — polling one again is
+    /// a caller bug and must error (the `Pipelined` contract), not park
+    /// forever on the condvar.
+    delivered: HashSet<u64>,
+}
+
+/// Shared completion mailbox for asynchronous backends: `submit` runs the
+/// work closure on a detached thread; `recv` blocks on a condvar.  The
+/// in-flight count is bounded externally (`HAQA_INFLIGHT` caps how many
+/// scenarios have a query outstanding), so a thread per request stays
+/// cheap.
+#[derive(Clone)]
+pub struct Dispatcher {
+    state: Arc<(Mutex<DispatchState>, Condvar)>,
+}
+
+impl Default for Dispatcher {
+    fn default() -> Self {
+        Dispatcher::new()
+    }
+}
+
+impl Dispatcher {
+    pub fn new() -> Dispatcher {
+        Dispatcher {
+            state: Arc::new((
+                Mutex::new(DispatchState {
+                    next_id: 0,
+                    done: HashMap::new(),
+                    delivered: HashSet::new(),
+                }),
+                Condvar::new(),
+            )),
+        }
+    }
+
+    pub fn submit<F>(&self, work: F) -> RequestId
+    where
+        F: FnOnce() -> Result<Completion> + Send + 'static,
+    {
+        let id = {
+            let mut g = lock(&self.state.0);
+            let id = g.next_id;
+            g.next_id += 1;
+            id
+        };
+        let state = Arc::clone(&self.state);
+        std::thread::spawn(move || {
+            // A panicking work closure must still deliver *something*:
+            // otherwise a blocking `recv` parks on the condvar forever and
+            // a pipelined fleet polls `Ok(None)` until the end of time.
+            let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(work))
+                .unwrap_or_else(|p| {
+                    Err(anyhow!(
+                        "backend request panicked: {}",
+                        crate::util::panic_message(&p)
+                    ))
+                });
+            let (m, cv) = &*state;
+            lock(m).done.insert(id, out);
+            cv.notify_all();
+        });
+        RequestId(id)
+    }
+
+    pub fn try_recv(&self, id: RequestId) -> Result<Option<Completion>> {
+        let mut g = lock(&self.state.0);
+        if id.0 >= g.next_id {
+            return Err(anyhow!("request {} was never submitted", id.0));
+        }
+        if g.delivered.contains(&id.0) {
+            return Err(anyhow!("request {} was already received", id.0));
+        }
+        match g.done.remove(&id.0) {
+            Some(r) => {
+                g.delivered.insert(id.0);
+                r.map(Some)
+            }
+            None => Ok(None),
+        }
+    }
+
+    pub fn recv(&self, id: RequestId) -> Result<Completion> {
+        let (m, cv) = &*self.state;
+        let mut g = lock(m);
+        if id.0 >= g.next_id {
+            return Err(anyhow!("request {} was never submitted", id.0));
+        }
+        if g.delivered.contains(&id.0) {
+            return Err(anyhow!("request {} was already received", id.0));
+        }
+        loop {
+            if let Some(r) = g.done.remove(&id.0) {
+                g.delivered.insert(id.0);
+                return r;
+            }
+            g = cv.wait(g).unwrap_or_else(|p| p.into_inner());
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SlowLlm: simulated API latency over a blocking backend
+// ---------------------------------------------------------------------------
+
+/// Wraps a [`BlockingLlm`] with artificial per-request latency, served
+/// asynchronously.  This is the `haqa bench` agent-overlap stand-in for a
+/// real HTTP round-trip: the completion *text* is exactly what the inner
+/// backend produces (so results stay bit-identical to the un-slowed run),
+/// but the reply arrives `latency` later on a dispatcher thread, giving
+/// the fleet something real to overlap.
+pub struct SlowLlm<B> {
+    model: String,
+    inner: Mutex<B>,
+    latency: Duration,
+    dispatcher: Dispatcher,
+}
+
+impl<B: BlockingLlm + 'static> SlowLlm<B> {
+    pub fn new(backend: B, latency: Duration) -> SlowLlm<B> {
+        SlowLlm {
+            model: format!("{}+{}ms", backend.model_name(), latency.as_millis()),
+            inner: Mutex::new(backend),
+            latency,
+            dispatcher: Dispatcher::new(),
+        }
+    }
+}
+
+impl<B: BlockingLlm + 'static> LlmBackend for SlowLlm<B> {
+    fn model_name(&self) -> &str {
+        &self.model
+    }
+
+    fn submit(&self, req: AgentRequest) -> Result<RequestId> {
+        // Compute on the submitting thread so the inner backend sees
+        // requests strictly in submission order (its RNG stream stays
+        // deterministic however delivery threads are scheduled); only the
+        // *delivery* is delayed asynchronously.
+        let t0 = std::time::Instant::now();
+        let text = lock(&self.inner).complete(&req.messages)?;
+        let latency = self.latency;
+        Ok(self.dispatcher.submit(move || {
+            std::thread::sleep(latency);
+            Ok(Completion {
+                prompt_tokens: estimate_prompt_tokens(&req.messages),
+                completion_tokens: estimate_tokens(&text),
+                api_seconds: t0.elapsed().as_secs_f64(),
+                text,
+            })
+        }))
+    }
+
+    fn try_recv(&self, id: RequestId) -> Result<Option<Completion>> {
+        self.dispatcher.try_recv(id)
+    }
+
+    fn recv(&self, id: RequestId) -> Result<Completion> {
+        self.dispatcher.recv(id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Echoes the last user message, counting calls.
+    struct Echo {
+        calls: usize,
+    }
+
+    impl BlockingLlm for Echo {
+        fn model_name(&self) -> &str {
+            "echo"
+        }
+        fn complete(&mut self, messages: &[Message]) -> Result<String> {
+            self.calls += 1;
+            Ok(format!(
+                "echo#{}: {}",
+                self.calls,
+                messages.last().map(|m| m.content.as_str()).unwrap_or("")
+            ))
+        }
+    }
+
+    #[test]
+    fn pipelined_completes_at_submit_and_hands_out_once() {
+        let b = Pipelined::new(Echo { calls: 0 });
+        let id = b.submit(AgentRequest::new(vec![Message::user("hi")])).unwrap();
+        let c = b.try_recv(id).unwrap().expect("ready at first poll");
+        assert_eq!(c.text, "echo#1: hi");
+        assert!(c.prompt_tokens > 0 && c.completion_tokens > 0);
+        assert!(b.try_recv(id).is_err(), "a completion is handed out once");
+    }
+
+    #[test]
+    fn pipelined_blocking_adapter_round_trips() {
+        let b = Pipelined::new(Echo { calls: 0 });
+        let c = b.complete(&[Message::user("one")]).unwrap();
+        assert_eq!(c.text, "echo#1: one");
+        let c = b.complete(&[Message::user("two")]).unwrap();
+        assert_eq!(c.text, "echo#2: two");
+        assert_eq!(c.api_seconds, SIMULATED_ROUNDTRIP_S);
+    }
+
+    #[test]
+    fn slow_backend_overlaps_and_preserves_text() {
+        let b = SlowLlm::new(Echo { calls: 0 }, Duration::from_millis(30));
+        let t0 = std::time::Instant::now();
+        let a = b.submit(AgentRequest::new(vec![Message::user("a")])).unwrap();
+        let c = b.submit(AgentRequest::new(vec![Message::user("b")])).unwrap();
+        // Both requests are in flight concurrently: total wall well under
+        // two sequential latencies.
+        let ca = b.recv(a).unwrap();
+        let cb = b.recv(c).unwrap();
+        let wall = t0.elapsed();
+        assert_eq!(ca.text, "echo#1: a");
+        assert_eq!(cb.text, "echo#2: b");
+        assert!(
+            wall < Duration::from_millis(55),
+            "requests did not overlap: {wall:?}"
+        );
+        assert!(ca.api_seconds >= 0.03);
+    }
+
+    #[test]
+    fn dispatcher_rejects_unknown_ids() {
+        let d = Dispatcher::new();
+        assert!(d.try_recv(RequestId(5)).is_err());
+        assert!(d.recv(RequestId(5)).is_err());
+    }
+
+    #[test]
+    fn dispatcher_surfaces_a_panicking_work_closure_as_an_error() {
+        let d = Dispatcher::new();
+        let id = d.submit(|| panic!("boom in the request path"));
+        let err = d.recv(id).unwrap_err();
+        assert!(format!("{err:#}").contains("boom"), "{err:#}");
+    }
+
+    #[test]
+    fn dispatcher_errors_on_double_receive_instead_of_hanging() {
+        let d = Dispatcher::new();
+        let id = d.submit(|| {
+            Ok(Completion {
+                text: "x".into(),
+                prompt_tokens: 1,
+                completion_tokens: 1,
+                api_seconds: 0.0,
+            })
+        });
+        d.recv(id).unwrap();
+        // A second receive of the same id is a caller bug: it must error
+        // like `Pipelined` does, never park on the condvar forever.
+        let err = d.recv(id).unwrap_err();
+        assert!(format!("{err:#}").contains("already received"), "{err:#}");
+        assert!(d.try_recv(id).is_err());
+    }
 }

@@ -1,22 +1,43 @@
-//! The agent driver: prompt assembly → backend call → validation → retry.
+//! The agent driver: prompt assembly → backend request → validation → retry.
 //!
-//! This is the inner loop of Figure 3: each round, the static prompt and
-//! the (history-managed) dynamic prompt are sent to the backend; the reply
-//! is parsed and validated; on a §3.2 failure the corrective message is
-//! appended and the backend re-queried (bounded retries); the final fallback
-//! repairs the last reply into range so the workflow never stalls.
+//! This is the inner loop of Figure 3, restructured as a resumable state
+//! machine over the request pipeline: [`Agent::submit_propose`] builds the
+//! static+dynamic prompt and enqueues it on the backend; a later
+//! [`Agent::poll_propose`] (non-blocking) or [`Agent::wait_propose`]
+//! (blocking) consumes the completion, parses and validates it, and on a
+//! §3.2 failure appends the corrective message and re-submits (bounded
+//! retries — each retry is itself an in-flight request the fleet can
+//! overlap).  The final fallback repairs the last reply into range so the
+//! workflow never stalls.  [`Agent::propose`] is the one-call blocking
+//! composition of the two halves, bit-identical to the pre-pipeline loop.
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::search::Config;
 
-use super::backend::{LlmBackend, Message};
+use super::backend::{
+    AgentRequest, BlockingLlm, Completion, LlmBackend, Message, Pipelined, RequestId,
+};
 use super::history::HistoryManager;
 use super::prompt::{dynamic_prompt, static_prompt, SYSTEM_PROMPT};
-use super::react::{parse_reply, AgentReply};
+use super::react::{parse_completion, AgentReply};
 use super::tokens::CostTracker;
 use super::validator;
 use super::TaskContext;
+
+/// An in-flight proposal: the transcript sent, which retry attempt it is,
+/// and the backend request to poll.  The conversation state lives here (not
+/// in the backend), so the agent can be driven from any thread that holds
+/// it between "prompt built" and "completion consumed".
+#[derive(Debug)]
+pub struct PendingPropose {
+    messages: Vec<Message>,
+    attempt: usize,
+    id: RequestId,
+    /// A completion fetched by [`Agent::completion_ready`] but not yet
+    /// consumed by the validation step.
+    arrived: Option<Completion>,
+}
 
 pub struct Agent {
     backend: Box<dyn LlmBackend>,
@@ -25,6 +46,8 @@ pub struct Agent {
     pub max_retries: usize,
     /// Transcript of (thought, config) per round for the task log (§3.3).
     pub log: Vec<AgentReply>,
+    /// The proposal currently in flight, if any.
+    pending: Option<PendingPropose>,
     /// Static-prompt memo — the paper's point of the static/dynamic split
     /// is that the static half never changes within a task, so it is built
     /// once per (task, space) and reused every round (§Perf L3).
@@ -39,16 +62,27 @@ impl Agent {
             cost: CostTracker::default(),
             max_retries: 3,
             log: Vec::new(),
+            pending: None,
             static_memo: None,
         }
+    }
+
+    /// Convenience: drive a synchronous backend through the provided
+    /// [`Pipelined`] adapter (the pre-pipeline construction shape).
+    pub fn blocking<B: BlockingLlm + 'static>(backend: B) -> Agent {
+        Agent::new(Box::new(Pipelined::new(backend)))
     }
 
     pub fn model_name(&self) -> &str {
         self.backend.model_name()
     }
 
-    /// One round: returns the validated configuration and the reply.
-    pub fn propose(&mut self, ctx: &TaskContext) -> Result<(Config, AgentReply)> {
+    /// Is a proposal currently awaiting its completion?
+    pub fn in_flight(&self) -> bool {
+        self.pending.is_some()
+    }
+
+    fn build_messages(&mut self, ctx: &TaskContext) -> Vec<Message> {
         let window = self.history_mgr.window(ctx.history);
         let memo_key = format!("{}/{}", ctx.kind.as_str(), ctx.space.name);
         let static_text = match &self.static_memo {
@@ -59,43 +93,137 @@ impl Agent {
                 text
             }
         };
-        let mut messages = vec![
+        vec![
             Message::system(SYSTEM_PROMPT),
             Message::user(static_text),
             Message::user(dynamic_prompt(ctx, &window)),
-        ];
-        let mut last_reply: Option<AgentReply> = None;
-        for attempt in 0..=self.max_retries {
-            let completion = self.backend.complete(&messages)?;
-            self.cost.record(&messages, &completion);
-            let reply = parse_reply(&completion);
-            match validator::check(ctx.space, &reply) {
-                Ok(cfg) => {
-                    self.log.push(reply.clone());
-                    return Ok((cfg, reply));
+        ]
+    }
+
+    /// Build this round's prompt and enqueue it on the backend.  The
+    /// completion is consumed by [`Agent::poll_propose`] /
+    /// [`Agent::wait_propose`] with the same `ctx`.
+    pub fn submit_propose(&mut self, ctx: &TaskContext) -> Result<()> {
+        if self.pending.is_some() {
+            return Err(anyhow!("a proposal is already in flight"));
+        }
+        let messages = self.build_messages(ctx);
+        let id = self.backend.submit(AgentRequest::new(messages.clone()))?;
+        self.pending = Some(PendingPropose {
+            messages,
+            attempt: 0,
+            id,
+            arrived: None,
+        });
+        Ok(())
+    }
+
+    /// Non-blocking check whether the in-flight request's completion has
+    /// arrived, without consuming the proposal — the cheap poll the fleet
+    /// spins on while a session is parked (no prompt/context work happens
+    /// until this returns `true`).  A backend error consumes the proposal
+    /// (same as [`Agent::poll_propose`]).
+    pub fn completion_ready(&mut self) -> Result<bool> {
+        let (id, has_arrived) = match &self.pending {
+            Some(p) => (p.id, p.arrived.is_some()),
+            None => return Err(anyhow!("no proposal in flight — call submit_propose first")),
+        };
+        if has_arrived {
+            return Ok(true);
+        }
+        match self.backend.try_recv(id) {
+            Ok(Some(c)) => {
+                if let Some(p) = self.pending.as_mut() {
+                    p.arrived = Some(c);
                 }
-                Err(err) => {
-                    last_reply = Some(reply);
-                    if attempt < self.max_retries {
-                        self.cost.record_retry();
-                        messages.push(Message::assistant(completion));
-                        messages.push(Message::user(validator::retry_message(
-                            &err, ctx.space,
-                        )));
-                    }
-                }
+                Ok(true)
+            }
+            Ok(None) => Ok(false),
+            Err(e) => {
+                self.pending = None;
+                Err(e)
             }
         }
-        // Fallback: repair whatever the agent last said (never stall the
-        // workflow — §3.3's robustness requirement).
-        let reply = last_reply.unwrap_or_else(|| parse_reply(""));
-        let cfg = reply
-            .config
-            .as_ref()
-            .map(|j| ctx.space.repair(&ctx.space.config_from_json(j)))
-            .unwrap_or_else(|| ctx.space.default_config());
-        self.log.push(reply.clone());
-        Ok((cfg, reply))
+    }
+
+    /// Non-blocking: consume the in-flight completion if it has arrived.
+    /// `Ok(None)` means it is still in flight — possibly because a §3.2
+    /// validation failure was answered with a corrective re-submission.
+    pub fn poll_propose(&mut self, ctx: &TaskContext) -> Result<Option<(Config, AgentReply)>> {
+        self.step_propose(ctx, false)
+    }
+
+    /// Blocking: wait until the in-flight proposal resolves (including any
+    /// retries) and return the validated configuration.
+    pub fn wait_propose(&mut self, ctx: &TaskContext) -> Result<(Config, AgentReply)> {
+        loop {
+            if let Some(done) = self.step_propose(ctx, true)? {
+                return Ok(done);
+            }
+        }
+    }
+
+    /// One round, blocking: submit + wait.  Bit-identical to the
+    /// pre-pipeline `propose` loop.
+    pub fn propose(&mut self, ctx: &TaskContext) -> Result<(Config, AgentReply)> {
+        if self.pending.is_none() {
+            self.submit_propose(ctx)?;
+        }
+        self.wait_propose(ctx)
+    }
+
+    /// Advance the proposal state machine by at most one completion.
+    fn step_propose(
+        &mut self,
+        ctx: &TaskContext,
+        block: bool,
+    ) -> Result<Option<(Config, AgentReply)>> {
+        let mut p = self
+            .pending
+            .take()
+            .ok_or_else(|| anyhow!("no proposal in flight — call submit_propose first"))?;
+        let completion = if let Some(c) = p.arrived.take() {
+            c
+        } else if block {
+            self.backend.recv(p.id)?
+        } else {
+            match self.backend.try_recv(p.id)? {
+                Some(c) => c,
+                None => {
+                    self.pending = Some(p);
+                    return Ok(None);
+                }
+            }
+        };
+        self.cost.record_completion(&completion);
+        let reply = parse_completion(&completion);
+        match validator::check(ctx.space, &reply) {
+            Ok(cfg) => {
+                self.log.push(reply.clone());
+                Ok(Some((cfg, reply)))
+            }
+            Err(err) if p.attempt < self.max_retries => {
+                self.cost.record_retry();
+                p.messages.push(Message::assistant(completion.text));
+                p.messages
+                    .push(Message::user(validator::retry_message(&err, ctx.space)));
+                p.attempt += 1;
+                p.id = self.backend.submit(AgentRequest::new(p.messages.clone()))?;
+                self.pending = Some(p);
+                Ok(None)
+            }
+            Err(_) => {
+                // Fallback: repair whatever the agent last said (never
+                // stall the workflow — §3.3's robustness requirement).
+                let cfg = reply
+                    .config
+                    .as_ref()
+                    .map(|j| ctx.space.repair(&ctx.space.config_from_json(j)))
+                    .unwrap_or_else(|| ctx.space.default_config());
+                self.log.push(reply.clone());
+                Ok(Some((cfg, reply)))
+            }
+        }
     }
 }
 
@@ -113,7 +241,7 @@ mod tests {
         let space = spaces::resnet_qat();
         // 100% failure rate on first attempts; retries always valid.
         let backend = SimulatedLlm::new(1).with_failure_rate(1.0);
-        let mut agent = Agent::new(Box::new(backend));
+        let mut agent = Agent::blocking(backend);
         let history = vec![Observation::new(space.default_config(), 0.8)];
         let ctx = TaskContext {
             kind: TaskKind::Finetune,
@@ -133,7 +261,7 @@ mod tests {
     fn cost_accumulates_across_rounds() {
         let space = spaces::resnet_qat();
         let backend = SimulatedLlm::new(2).with_failure_rate(0.0);
-        let mut agent = Agent::new(Box::new(backend));
+        let mut agent = Agent::blocking(backend);
         let mut history = Vec::new();
         for round in 0..5 {
             let ctx = TaskContext {
@@ -151,5 +279,55 @@ mod tests {
         assert!(agent.cost.total_tokens() > 1000);
         assert!(agent.cost.cost_usd() > 0.0);
         assert_eq!(agent.log.len(), 5);
+        assert_eq!(agent.cost.per_query.len(), 5, "one cost line per query");
+        assert!(agent.cost.per_query.iter().all(|q| q.prompt_tokens > 0));
+    }
+
+    #[test]
+    fn split_submit_poll_matches_blocking_propose() {
+        let space = spaces::resnet_qat();
+        let history = vec![Observation::new(space.default_config(), 0.8)];
+        let run = |split: bool| {
+            let mut agent = Agent::blocking(SimulatedLlm::new(9).with_failure_rate(0.5));
+            let ctx = TaskContext {
+                kind: TaskKind::Finetune,
+                space: &space,
+                history: &history,
+                rounds_left: 4,
+                hardware: None,
+                objective: Json::obj(),
+            };
+            let (cfg, reply) = if split {
+                agent.submit_propose(&ctx).unwrap();
+                loop {
+                    if let Some(done) = agent.poll_propose(&ctx).unwrap() {
+                        break done;
+                    }
+                }
+            } else {
+                agent.propose(&ctx).unwrap()
+            };
+            (space.config_to_json(&cfg).to_string(), reply.raw, agent.cost.queries)
+        };
+        assert_eq!(run(true), run(false), "split path must be bit-identical");
+    }
+
+    #[test]
+    fn double_submit_is_rejected() {
+        let space = spaces::resnet_qat();
+        let mut agent = Agent::blocking(SimulatedLlm::new(3).with_failure_rate(0.0));
+        let ctx = TaskContext {
+            kind: TaskKind::Finetune,
+            space: &space,
+            history: &[],
+            rounds_left: 1,
+            hardware: None,
+            objective: Json::obj(),
+        };
+        agent.submit_propose(&ctx).unwrap();
+        assert!(agent.in_flight());
+        assert!(agent.submit_propose(&ctx).is_err());
+        agent.wait_propose(&ctx).unwrap();
+        assert!(!agent.in_flight());
     }
 }

@@ -1,0 +1,486 @@
+//! `HttpLlmBackend` — an OpenAI-style chat-completions client over a plain
+//! `std::net::TcpStream` (feature `http-agent`, default off; no new deps).
+//!
+//! This is the seam the paper's GPT-4-0613 driver lands on: requests are
+//! the standard `{"model": …, "messages": [{"role", "content"}…]}` JSON,
+//! replies are parsed from `choices[0].message.content`, and the server's
+//! `usage` block feeds the per-request cost accounting (Appendix C) —
+//! falling back to the local token estimator when the server omits it.
+//!
+//! Transport policy:
+//! * plain HTTP only (`http://host[:port][/path]`) — TLS is expected to be
+//!   terminated by a local proxy/sidecar; `https://` is rejected eagerly;
+//! * per-attempt connect/read/write **timeouts**;
+//! * **bounded exponential-backoff retry** on connect errors, timeouts,
+//!   HTTP 429 and 5xx (client errors other than 429 are fatal);
+//! * each request runs on a [`Dispatcher`] thread, so submissions never
+//!   block and the fleet overlaps in-flight queries across scenarios.
+//!
+//! Wrap it in [`super::transcript::RecordingBackend`] to journal the
+//! session for offline, bit-identical replay in CI.
+
+use std::io::{Read, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::json::{self, Json};
+
+use super::backend::{AgentRequest, Completion, Dispatcher, LlmBackend, Message, RequestId};
+use super::tokens::{estimate_prompt_tokens, estimate_tokens};
+
+#[derive(Debug, Clone)]
+pub struct HttpConfig {
+    pub host: String,
+    pub port: u16,
+    /// Request path, e.g. `/v1/chat/completions`.
+    pub path: String,
+    /// Model name sent in the request body (`HAQA_LLM_MODEL` overrides).
+    pub model: String,
+    /// Bearer token (`HAQA_API_KEY`), if the endpoint needs one.
+    pub api_key: Option<String>,
+    /// Per-attempt connect/read/write timeout.
+    pub timeout: Duration,
+    /// Retries after the first attempt (connect errors, timeouts, 429, 5xx).
+    pub max_retries: usize,
+    /// First backoff delay; doubles per retry, capped at [`BACKOFF_CAP`].
+    pub backoff_base: Duration,
+}
+
+/// Exponential backoff is bounded: base * 2^n, never beyond this.
+pub const BACKOFF_CAP: Duration = Duration::from_secs(4);
+
+impl Default for HttpConfig {
+    fn default() -> Self {
+        HttpConfig {
+            host: "127.0.0.1".into(),
+            port: 80,
+            path: "/v1/chat/completions".into(),
+            model: std::env::var("HAQA_LLM_MODEL").unwrap_or_else(|_| "gpt-4-0613".into()),
+            api_key: std::env::var("HAQA_API_KEY").ok(),
+            timeout: Duration::from_secs(60),
+            max_retries: 3,
+            backoff_base: Duration::from_millis(250),
+        }
+    }
+}
+
+pub struct HttpLlmBackend {
+    cfg: Arc<HttpConfig>,
+    label: String,
+    dispatcher: Dispatcher,
+}
+
+impl HttpLlmBackend {
+    pub fn new(cfg: HttpConfig) -> HttpLlmBackend {
+        HttpLlmBackend {
+            label: format!("{}@{}:{}", cfg.model, cfg.host, cfg.port),
+            cfg: Arc::new(cfg),
+            dispatcher: Dispatcher::new(),
+        }
+    }
+
+    /// Parse `http://host[:port][/path]`; `https://` is rejected (terminate
+    /// TLS in a local proxy).
+    pub fn from_url(url: &str) -> Result<HttpLlmBackend> {
+        if url.starts_with("https://") {
+            bail!(
+                "https endpoints are not supported by the std-TCP backend — \
+                 terminate TLS in a local proxy and point HAQA at http://"
+            );
+        }
+        let rest = url
+            .strip_prefix("http://")
+            .ok_or_else(|| anyhow!("LLM endpoint must start with http://, got '{url}'"))?;
+        let (authority, path) = match rest.find('/') {
+            Some(i) => (&rest[..i], &rest[i..]),
+            None => (rest, ""),
+        };
+        let (host, port) = match authority.rsplit_once(':') {
+            Some((h, p)) => (
+                h.to_string(),
+                p.parse::<u16>()
+                    .map_err(|_| anyhow!("bad port in LLM endpoint '{url}'"))?,
+            ),
+            None => (authority.to_string(), 80),
+        };
+        if host.is_empty() {
+            bail!("empty host in LLM endpoint '{url}'");
+        }
+        let defaults = HttpConfig::default();
+        Ok(HttpLlmBackend::new(HttpConfig {
+            host,
+            port,
+            path: if path.is_empty() {
+                defaults.path.clone()
+            } else {
+                path.to_string()
+            },
+            ..defaults
+        }))
+    }
+}
+
+impl LlmBackend for HttpLlmBackend {
+    fn model_name(&self) -> &str {
+        &self.label
+    }
+
+    fn submit(&self, req: AgentRequest) -> Result<RequestId> {
+        let cfg = Arc::clone(&self.cfg);
+        Ok(self.dispatcher.submit(move || request_with_retry(&cfg, &req.messages)))
+    }
+
+    fn try_recv(&self, id: RequestId) -> Result<Option<Completion>> {
+        self.dispatcher.try_recv(id)
+    }
+
+    fn recv(&self, id: RequestId) -> Result<Completion> {
+        self.dispatcher.recv(id)
+    }
+}
+
+fn request_body(model: &str, messages: &[Message]) -> String {
+    let mut body = Json::obj();
+    body.set("model", Json::str(model));
+    body.set(
+        "messages",
+        Json::Arr(
+            messages
+                .iter()
+                .map(|m| {
+                    let mut o = Json::obj();
+                    o.set("role", Json::str(m.role.as_str()));
+                    o.set("content", Json::str(m.content.clone()));
+                    o
+                })
+                .collect(),
+        ),
+    );
+    body.to_string()
+}
+
+/// Should this failure be retried (with backoff)?
+fn retryable(status: Option<u16>) -> bool {
+    match status {
+        None => true, // connect/write/read failure or timeout
+        Some(429) => true,
+        Some(s) => (500..600).contains(&s),
+    }
+}
+
+fn request_with_retry(cfg: &HttpConfig, messages: &[Message]) -> Result<Completion> {
+    let body = request_body(&cfg.model, messages);
+    let mut last_err = None;
+    for attempt in 0..=cfg.max_retries {
+        if attempt > 0 {
+            let exp = cfg.backoff_base.saturating_mul(1u32 << (attempt - 1).min(16));
+            std::thread::sleep(exp.min(BACKOFF_CAP));
+        }
+        let t0 = std::time::Instant::now();
+        match request_once(cfg, &body) {
+            Ok((status, resp_body)) if (200..300).contains(&status) => {
+                return parse_completion_json(&resp_body, messages, t0.elapsed().as_secs_f64());
+            }
+            Ok((status, resp_body)) => {
+                let snip: String = resp_body.chars().take(200).collect();
+                let err =
+                    anyhow!("HTTP {status} from {}:{}{}: {snip}", cfg.host, cfg.port, cfg.path);
+                if !retryable(Some(status)) {
+                    return Err(err);
+                }
+                last_err = Some(err);
+            }
+            Err(e) => last_err = Some(e),
+        }
+    }
+    Err(last_err
+        .unwrap_or_else(|| anyhow!("unreachable: no attempt ran"))
+        .context(format!("after {} attempt(s)", cfg.max_retries + 1)))
+}
+
+/// One HTTP/1.1 POST round-trip.  Returns (status, body).
+fn request_once(cfg: &HttpConfig, body: &str) -> Result<(u16, String)> {
+    let addr = (cfg.host.as_str(), cfg.port)
+        .to_socket_addrs()?
+        .next()
+        .ok_or_else(|| anyhow!("cannot resolve {}:{}", cfg.host, cfg.port))?;
+    let mut stream = TcpStream::connect_timeout(&addr, cfg.timeout)?;
+    stream.set_read_timeout(Some(cfg.timeout))?;
+    stream.set_write_timeout(Some(cfg.timeout))?;
+
+    let auth = cfg
+        .api_key
+        .as_deref()
+        .map(|k| format!("Authorization: Bearer {k}\r\n"))
+        .unwrap_or_default();
+    let request = format!(
+        "POST {} HTTP/1.1\r\nHost: {}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\n{auth}Connection: close\r\n\r\n{body}",
+        cfg.path,
+        cfg.host,
+        body.len(),
+    );
+    stream.write_all(request.as_bytes())?;
+
+    // `Connection: close` lets us read to EOF; the per-socket timeout
+    // still bounds a stalled server.
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw)?;
+    parse_http_response(&raw)
+}
+
+fn parse_http_response(raw: &[u8]) -> Result<(u16, String)> {
+    let head_end = raw
+        .windows(4)
+        .position(|w| w == b"\r\n\r\n")
+        .ok_or_else(|| anyhow!("malformed HTTP response: no header terminator"))?;
+    let head = std::str::from_utf8(&raw[..head_end])?;
+    let mut lines = head.split("\r\n");
+    let status_line = lines.next().unwrap_or_default();
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| anyhow!("malformed HTTP status line '{status_line}'"))?;
+    let chunked = lines.clone().any(|l| {
+        let l = l.to_ascii_lowercase();
+        l.starts_with("transfer-encoding:") && l.contains("chunked")
+    });
+    let content_length: Option<usize> = lines
+        .filter_map(|l| {
+            let (k, v) = l.split_once(':')?;
+            k.eq_ignore_ascii_case("content-length")
+                .then(|| v.trim().parse().ok())?
+        })
+        .next();
+
+    let payload = &raw[head_end + 4..];
+    let body_bytes = if chunked {
+        decode_chunked(payload)?
+    } else if let Some(n) = content_length {
+        if payload.len() < n {
+            bail!("truncated HTTP body: {} of {} bytes", payload.len(), n);
+        }
+        payload[..n].to_vec()
+    } else {
+        payload.to_vec() // Connection: close — body runs to EOF
+    };
+    Ok((status, String::from_utf8(body_bytes)?))
+}
+
+fn decode_chunked(mut rest: &[u8]) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    loop {
+        let line_end = rest
+            .windows(2)
+            .position(|w| w == b"\r\n")
+            .ok_or_else(|| anyhow!("malformed chunked body"))?;
+        // A chunk-size line may carry extensions (`1a;name=value`, RFC 9112
+        // §7.1.1): everything after the first `;` is ignored.
+        let size_field = std::str::from_utf8(&rest[..line_end])?
+            .split(';')
+            .next()
+            .unwrap_or("")
+            .trim();
+        let size = usize::from_str_radix(size_field, 16)
+            .map_err(|_| anyhow!("malformed chunk size"))?;
+        rest = &rest[line_end + 2..];
+        if size == 0 {
+            return Ok(out);
+        }
+        if rest.len() < size + 2 {
+            bail!("truncated chunk: {} of {size} bytes", rest.len());
+        }
+        out.extend_from_slice(&rest[..size]);
+        rest = &rest[size + 2..];
+    }
+}
+
+fn parse_completion_json(body: &str, messages: &[Message], wall_s: f64) -> Result<Completion> {
+    let j = json::parse(body).map_err(|e| anyhow!("bad completion JSON: {e}"))?;
+    let text = j
+        .get("choices")
+        .and_then(|c| c.as_arr())
+        .and_then(|a| a.first())
+        .and_then(|c| c.get("message"))
+        .and_then(|m| m.get("content"))
+        .and_then(|t| t.as_str())
+        .ok_or_else(|| anyhow!("no choices[0].message.content in completion"))?
+        .to_string();
+    let usage = j.get("usage");
+    let prompt_tokens = usage
+        .and_then(|u| u.get("prompt_tokens"))
+        .and_then(|v| v.as_f64())
+        .map(|v| v as usize)
+        .unwrap_or_else(|| estimate_prompt_tokens(messages));
+    let completion_tokens = usage
+        .and_then(|u| u.get("completion_tokens"))
+        .and_then(|v| v.as_f64())
+        .map(|v| v as usize)
+        .unwrap_or_else(|| estimate_tokens(&text));
+    Ok(Completion {
+        text,
+        prompt_tokens,
+        completion_tokens,
+        api_seconds: wall_s,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufRead;
+    use std::net::TcpListener;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    /// Minimal in-process chat-completions stub.  Each accepted connection
+    /// is answered per `script[i]` (i = connection index): `Ok(text)` →
+    /// 200 with a usage block; `Err(status)` → that status; a negative
+    /// status → accept, read, never respond (forces the client timeout).
+    fn stub_server(script: Vec<Result<&'static str, i32>>) -> (u16, Arc<AtomicUsize>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let port = listener.local_addr().unwrap().port();
+        let hits = Arc::new(AtomicUsize::new(0));
+        let seen = Arc::clone(&hits);
+        std::thread::spawn(move || {
+            for action in script {
+                let Ok((mut sock, _)) = listener.accept() else {
+                    return;
+                };
+                seen.fetch_add(1, Ordering::SeqCst);
+                // Read the request head + declared body.
+                let mut reader = std::io::BufReader::new(sock.try_clone().unwrap());
+                let mut content_length = 0usize;
+                loop {
+                    let mut line = String::new();
+                    if reader.read_line(&mut line).is_err() || line == "\r\n" || line.is_empty() {
+                        break;
+                    }
+                    if let Some((k, v)) = line.split_once(':') {
+                        if k.eq_ignore_ascii_case("content-length") {
+                            content_length = v.trim().parse().unwrap_or(0);
+                        }
+                    }
+                }
+                let mut body = vec![0u8; content_length];
+                let _ = std::io::Read::read_exact(&mut reader, &mut body);
+                match action {
+                    Ok(text) => {
+                        let mut msg = Json::obj();
+                        msg.set("content", Json::str(text));
+                        let mut choice = Json::obj();
+                        choice.set("message", msg);
+                        let mut usage = Json::obj();
+                        usage.set("prompt_tokens", Json::Num(11.0));
+                        usage.set("completion_tokens", Json::Num(7.0));
+                        let mut resp = Json::obj();
+                        resp.set("choices", Json::Arr(vec![choice]));
+                        resp.set("usage", usage);
+                        let body = resp.to_string();
+                        let _ = sock.write_all(
+                            format!(
+                                "HTTP/1.1 200 OK\r\nContent-Length: {}\r\n\
+                                 Connection: close\r\n\r\n{body}",
+                                body.len()
+                            )
+                            .as_bytes(),
+                        );
+                    }
+                    Err(status) if status > 0 => {
+                        let _ = sock.write_all(
+                            format!(
+                                "HTTP/1.1 {status} X\r\nContent-Length: 5\r\n\
+                                 Connection: close\r\n\r\noops!"
+                            )
+                            .as_bytes(),
+                        );
+                    }
+                    Err(_) => {
+                        // Stall: hold the socket open past the client
+                        // timeout, then drop it.
+                        std::thread::sleep(Duration::from_millis(300));
+                    }
+                }
+            }
+        });
+        (port, hits)
+    }
+
+    fn client(port: u16, max_retries: usize) -> HttpLlmBackend {
+        HttpLlmBackend::new(HttpConfig {
+            host: "127.0.0.1".into(),
+            port,
+            timeout: Duration::from_millis(100),
+            max_retries,
+            backoff_base: Duration::from_millis(5),
+            api_key: Some("test-key".into()),
+            model: "test-model".into(),
+            ..HttpConfig::default()
+        })
+    }
+
+    fn ask(b: &HttpLlmBackend) -> Result<Completion> {
+        b.complete(&[Message::user("propose a config")])
+    }
+
+    #[test]
+    fn parses_completion_and_usage() {
+        let (port, hits) = stub_server(vec![Ok("Thought: ok\n{\"lr\": 0.01}")]);
+        let c = ask(&client(port, 0)).unwrap();
+        assert_eq!(c.text, "Thought: ok\n{\"lr\": 0.01}");
+        assert_eq!(c.prompt_tokens, 11, "server usage is authoritative");
+        assert_eq!(c.completion_tokens, 7);
+        assert!(c.api_seconds > 0.0);
+        assert_eq!(hits.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn retries_5xx_with_backoff_then_succeeds() {
+        let (port, hits) = stub_server(vec![Err(500), Err(503), Ok("recovered")]);
+        let c = ask(&client(port, 3)).unwrap();
+        assert_eq!(c.text, "recovered");
+        assert_eq!(hits.load(Ordering::SeqCst), 3, "two failures then success");
+    }
+
+    #[test]
+    fn client_errors_are_fatal_not_retried() {
+        let (port, hits) = stub_server(vec![Err(401), Ok("never served")]);
+        let err = ask(&client(port, 3)).unwrap_err();
+        assert!(format!("{err:#}").contains("401"), "{err:#}");
+        assert_eq!(hits.load(Ordering::SeqCst), 1, "4xx must not retry");
+    }
+
+    #[test]
+    fn timeout_is_retried_then_surfaced() {
+        let (port, hits) = stub_server(vec![Err(-1), Err(-1)]);
+        let err = ask(&client(port, 1)).unwrap_err();
+        assert!(format!("{err:#}").contains("2 attempt"), "{err:#}");
+        assert_eq!(hits.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn url_parsing_and_https_rejection() {
+        let b = HttpLlmBackend::from_url("http://example.com:8080/v2/chat").unwrap();
+        assert_eq!(b.cfg.host, "example.com");
+        assert_eq!(b.cfg.port, 8080);
+        assert_eq!(b.cfg.path, "/v2/chat");
+        let b = HttpLlmBackend::from_url("http://example.com").unwrap();
+        assert_eq!(b.cfg.port, 80);
+        assert_eq!(b.cfg.path, "/v1/chat/completions");
+        assert!(HttpLlmBackend::from_url("https://example.com").is_err());
+        assert!(HttpLlmBackend::from_url("ftp://example.com").is_err());
+    }
+
+    #[test]
+    fn chunked_bodies_decode() {
+        // First chunk carries a chunk extension (RFC 9112 §7.1.1).
+        let raw = b"HTTP/1.1 200 OK\r\nTransfer-Encoding: chunked\r\n\r\n\
+                    5;ext=1\r\nhello\r\n6\r\n world\r\n0\r\n\r\n";
+        let (status, body) = parse_http_response(raw).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body, "hello world");
+    }
+}

@@ -1,11 +1,15 @@
 //! The LLM-agent workflow (paper §3) — HAQA's core contribution.
 //!
-//! * [`backend`] — the `LlmBackend` trait: messages in, completion out.
-//!   The paper uses GPT-4-0613; this repo ships [`simulated::SimulatedLlm`],
+//! * [`backend`] — the request-oriented `LlmBackend` pipeline
+//!   (`submit`/`try_recv`/`recv`) plus the [`backend::BlockingLlm`] trait
+//!   and [`backend::Pipelined`] adapter for synchronous backends.  The
+//!   paper uses GPT-4-0613; this repo ships [`simulated::SimulatedLlm`],
 //!   a deterministic rule-based ReAct policy implementing the tuning
 //!   heuristics visible in the paper's Appendix E transcripts (substitution
-//!   table in DESIGN.md §2).  A real HTTP backend can be slotted in without
-//!   touching the workflow.
+//!   table in DESIGN.md §2).
+//! * [`http`] — the real OpenAI-style HTTP backend (feature `http-agent`).
+//! * [`transcript`] — record/replay journaling so live sessions replay
+//!   offline and bit-identically (see `docs/AGENT.md`).
 //! * [`prompt`] — static/dynamic prompt construction (§3.1, Fig. 2/3).
 //! * [`history`] — conversation-history length management (§3.3).
 //! * [`react`] — ReAct reply structure: Thought / Action / config JSON (§3.2).
@@ -16,19 +20,87 @@
 pub mod backend;
 pub mod driver;
 pub mod history;
+#[cfg(feature = "http-agent")]
+pub mod http;
 pub mod prompt;
 pub mod react;
 pub mod simulated;
 pub mod tokens;
+pub mod transcript;
 pub mod validator;
+
+use anyhow::Result;
 
 use crate::optimizers::Observation;
 use crate::search::Space;
 use crate::util::json::Json;
 
-pub use backend::{LlmBackend, Message, Role};
+pub use backend::{
+    AgentRequest, BlockingLlm, Completion, LlmBackend, Message, Pipelined, RequestId, Role, SlowLlm,
+};
 pub use driver::Agent;
 pub use react::AgentReply;
+pub use transcript::{RecordingBackend, ReplayBackend};
+
+/// Build a backend from a scenario's `backend` spec string:
+///
+/// * `"simulated"` (or empty) — the deterministic ReAct policy, seeded;
+/// * `"simulated-slow:<ms>"` — the same policy behind `<ms>` of simulated
+///   API latency, served asynchronously (the bench overlap stand-in);
+/// * `"record:<path>"` — simulated policy journaled to `<path>`;
+///   `"record:<path>=<inner-spec>"` journals any other backend (e.g.
+///   `record:run.jsonl=http://10.0.0.5:8000` records a live endpoint for
+///   later replay);
+/// * `"replay:<path>"` — serve a recorded transcript journal, offline;
+/// * `"http://host[:port][/path]"` — the real HTTP backend (needs the
+///   `http-agent` feature).
+///
+/// The seed only feeds the simulated policy; recorded/replayed/HTTP
+/// backends ignore it.
+pub fn backend_from_spec(spec: &str, seed: u64) -> Result<Box<dyn LlmBackend>> {
+    let spec = spec.trim();
+    if spec.is_empty() || spec == "simulated" {
+        return Ok(Box::new(Pipelined::new(simulated::SimulatedLlm::new(seed))));
+    }
+    if let Some(ms) = spec.strip_prefix("simulated-slow:") {
+        let ms: u64 = ms.trim().parse().map_err(|_| {
+            anyhow::anyhow!("bad latency '{ms}' in backend spec '{spec}' (expected milliseconds)")
+        })?;
+        return Ok(Box::new(SlowLlm::new(
+            simulated::SimulatedLlm::new(seed),
+            std::time::Duration::from_millis(ms),
+        )));
+    }
+    if let Some(rest) = spec.strip_prefix("record:") {
+        // Composable: `record:<path>` journals the simulated policy;
+        // `record:<path>=<inner-spec>` wraps any other backend, so a live
+        // HTTP session can be recorded for offline `replay:<path>`.
+        let (path, inner_spec) = match rest.split_once('=') {
+            Some((p, i)) => (p, i),
+            None => (rest, "simulated"),
+        };
+        let inner = backend_from_spec(inner_spec, seed)?;
+        return Ok(Box::new(RecordingBackend::create(path, inner)?));
+    }
+    if let Some(path) = spec.strip_prefix("replay:") {
+        return Ok(Box::new(ReplayBackend::open(path)?));
+    }
+    if spec.starts_with("http://") || spec.starts_with("https://") {
+        #[cfg(feature = "http-agent")]
+        {
+            return Ok(Box::new(http::HttpLlmBackend::from_url(spec)?));
+        }
+        #[cfg(not(feature = "http-agent"))]
+        anyhow::bail!(
+            "backend '{spec}' needs the `http-agent` feature \
+             (build with --features http-agent)"
+        );
+    }
+    anyhow::bail!(
+        "unknown backend spec '{spec}' (expected simulated | simulated-slow:<ms> | \
+         record:<path> | replay:<path> | http://…)"
+    )
+}
 
 /// What the agent is optimizing this round.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

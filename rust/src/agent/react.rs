@@ -7,6 +7,8 @@
 
 use crate::util::json::{self, Json};
 
+use super::backend::Completion;
+
 #[derive(Debug, Clone)]
 pub struct AgentReply {
     /// Free-text reasoning (the `Thought:` section, or the whole prose).
@@ -15,9 +17,23 @@ pub struct AgentReply {
     pub config: Option<Json>,
     /// The raw completion (for task logs).
     pub raw: String,
+    /// Tokens billed for the request that produced this reply (0 when the
+    /// reply was parsed from bare text rather than a pipeline completion).
+    pub prompt_tokens: usize,
+    pub completion_tokens: usize,
 }
 
-/// Parse a completion into a structured reply.
+/// Parse a pipeline [`Completion`] into a structured reply, carrying the
+/// per-request token accounting along for the task log.
+pub fn parse_completion(c: &Completion) -> AgentReply {
+    AgentReply {
+        prompt_tokens: c.prompt_tokens,
+        completion_tokens: c.completion_tokens,
+        ..parse_reply(&c.text)
+    }
+}
+
+/// Parse a completion's text into a structured reply.
 pub fn parse_reply(raw: &str) -> AgentReply {
     let thought = raw
         .split("Thought:")
@@ -37,6 +53,8 @@ pub fn parse_reply(raw: &str) -> AgentReply {
         thought,
         config: json::extract_object(raw),
         raw: raw.to_string(),
+        prompt_tokens: 0,
+        completion_tokens: 0,
     }
 }
 

@@ -1,6 +1,7 @@
 //! `SimulatedLlm` — the deterministic GPT-4 stand-in (DESIGN.md §2).
 //!
-//! Implements [`LlmBackend`] with a rule-based ReAct policy that encodes the
+//! Implements [`BlockingLlm`] (lifted into the request pipeline by
+//! [`super::backend::Pipelined`]) with a rule-based ReAct policy that encodes the
 //! tuning heuristics visible in the paper's Appendix E transcripts:
 //!
 //! * **fine-tuning**: first round defaults; continue a move that improved;
@@ -30,7 +31,7 @@ use crate::search::{Config, Space};
 use crate::util::json::{self, Json};
 use crate::util::rng::Rng;
 
-use super::backend::{LlmBackend, Message, Role};
+use super::backend::{BlockingLlm, Message, Role};
 use super::react::render_reply;
 
 pub struct SimulatedLlm {
@@ -54,7 +55,7 @@ impl SimulatedLlm {
     }
 }
 
-impl LlmBackend for SimulatedLlm {
+impl BlockingLlm for SimulatedLlm {
     fn model_name(&self) -> &str {
         "simulated-react-policy"
     }

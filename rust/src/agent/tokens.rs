@@ -6,7 +6,7 @@
 //! estimator, the standard rule of thumb for English+JSON) and price them
 //! at GPT-4-0613 rates so every bench can print its Appendix-C line.
 
-use super::backend::Message;
+use super::backend::{Completion, Message};
 
 /// GPT-4-0613 list pricing (USD per 1K tokens), as of the paper's writing.
 pub const PROMPT_PRICE_PER_1K: f64 = 0.03;
@@ -29,6 +29,18 @@ pub fn estimate_prompt_tokens(messages: &[Message]) -> usize {
         .sum()
 }
 
+/// Per-request accounting line: what one backend query billed.  The
+/// workflow aggregates these into per-round cost entries in the task log,
+/// so agent latency/cost is auditable request by request (not just as the
+/// final summary string).
+#[derive(Debug, Clone)]
+pub struct QueryCost {
+    pub prompt_tokens: usize,
+    pub completion_tokens: usize,
+    /// Measured (real backends) or accounted (simulated) latency, seconds.
+    pub api_seconds: f64,
+}
+
 #[derive(Debug, Clone, Default)]
 pub struct CostTracker {
     pub queries: usize,
@@ -37,14 +49,22 @@ pub struct CostTracker {
     pub retries: usize,
     /// Accounted (not slept) API latency, seconds.
     pub api_seconds: f64,
+    /// One entry per backend query, in completion-consumption order.
+    pub per_query: Vec<QueryCost>,
 }
 
 impl CostTracker {
-    pub fn record(&mut self, messages: &[Message], completion: &str) {
+    /// Record a pipeline completion with its per-request accounting.
+    pub fn record_completion(&mut self, c: &Completion) {
         self.queries += 1;
-        self.prompt_tokens += estimate_prompt_tokens(messages);
-        self.completion_tokens += estimate_tokens(completion);
-        self.api_seconds += SIMULATED_ROUNDTRIP_S;
+        self.prompt_tokens += c.prompt_tokens;
+        self.completion_tokens += c.completion_tokens;
+        self.api_seconds += c.api_seconds;
+        self.per_query.push(QueryCost {
+            prompt_tokens: c.prompt_tokens,
+            completion_tokens: c.completion_tokens,
+            api_seconds: c.api_seconds,
+        });
     }
 
     pub fn record_retry(&mut self) {
@@ -87,6 +107,7 @@ impl CostTracker {
         self.completion_tokens += other.completion_tokens;
         self.retries += other.retries;
         self.api_seconds += other.api_seconds;
+        self.per_query.extend(other.per_query.iter().cloned());
     }
 }
 
@@ -101,26 +122,40 @@ mod tests {
         assert_eq!(estimate_tokens("abcde"), 2);
     }
 
+    /// Build a completion the way the `Pipelined` adapter does: estimated
+    /// tokens, accounted round-trip latency.
+    fn estimated(messages: &[Message], text: &str) -> Completion {
+        Completion {
+            prompt_tokens: estimate_prompt_tokens(messages),
+            completion_tokens: estimate_tokens(text),
+            api_seconds: SIMULATED_ROUNDTRIP_S,
+            text: text.to_string(),
+        }
+    }
+
     #[test]
     fn cost_math() {
         let mut t = CostTracker::default();
-        t.record(&[Message::user("x".repeat(4000))], &"y".repeat(2000));
+        t.record_completion(&estimated(&[Message::user("x".repeat(4000))], &"y".repeat(2000)));
         assert_eq!(t.queries, 1);
         assert!(t.prompt_tokens >= 1000);
         // 1000 prompt tokens * 0.03/1k + 500 completion * 0.06/1k ≈ 0.06
         let c = t.cost_usd();
         assert!(c > 0.05 && c < 0.08, "{c}");
+        assert_eq!(t.per_query.len(), 1);
+        assert_eq!(t.per_query[0].api_seconds, SIMULATED_ROUNDTRIP_S);
     }
 
     #[test]
     fn merge_accumulates() {
         let mut a = CostTracker::default();
         let mut b = CostTracker::default();
-        a.record(&[Message::user("hello world")], "ok");
-        b.record(&[Message::user("hi")], "fine");
+        a.record_completion(&estimated(&[Message::user("hello world")], "ok"));
+        b.record_completion(&estimated(&[Message::user("hi")], "fine"));
         b.record_retry();
         a.merge(&b);
         assert_eq!(a.queries, 2);
         assert_eq!(a.retries, 1);
+        assert_eq!(a.per_query.len(), 2);
     }
 }

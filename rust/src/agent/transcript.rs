@@ -1,0 +1,396 @@
+//! Transcript journaling: record a live backend session to disk, replay it
+//! offline and bit-identically.
+//!
+//! [`RecordingBackend`] wraps any [`LlmBackend`] and appends one JSON line
+//! per completed request to a `transcripts.jsonl` journal;
+//! [`ReplayBackend`] loads that journal and serves the recorded
+//! completions without touching the network.  This is how HTTP agent runs
+//! become reproducible in CI: record once against the live endpoint,
+//! commit (or artifact) the journal, replay everywhere else.
+//!
+//! Records are keyed by the 128-bit content hash of the canonical-JSON
+//! rendering of the request transcript — the same hashing discipline as
+//! the evaluation cache (`docs/CACHE.md`) — so replay matches requests by
+//! *content*, not by call order, and repeated identical prompts are served
+//! FIFO.  The journal shares the cache's append-only hygiene: one
+//! `write_all` per record, corrupt or torn lines skipped with a warning,
+//! and a torn tail healed by appending a newline (never by truncating).
+
+use std::collections::{HashMap, VecDeque};
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::hash;
+use crate::util::json::{self, Json};
+use crate::util::{jsonl, lock};
+
+use super::backend::{AgentRequest, Completion, LlmBackend, Message, RequestId, SyncMailbox};
+
+/// Journal file name when a directory is given instead of a file path.
+pub const TRANSCRIPT_FILE: &str = "transcripts.jsonl";
+
+/// Content key of a request transcript: canonical JSON of the messages.
+pub fn transcript_key(messages: &[Message]) -> u128 {
+    let arr = Json::Arr(
+        messages
+            .iter()
+            .map(|m| {
+                let mut o = Json::obj();
+                o.set("role", Json::str(m.role.as_str()));
+                o.set("content", Json::str(m.content.clone()));
+                o
+            })
+            .collect(),
+    );
+    hash::content_hash_128(json::canonical(&arr).as_bytes())
+}
+
+fn journal_path(path: &Path) -> PathBuf {
+    if path.extension().is_some() {
+        path.to_path_buf()
+    } else {
+        path.join(TRANSCRIPT_FILE)
+    }
+}
+
+fn encode_record(key: u128, model: &str, c: &Completion) -> String {
+    let mut o = Json::obj();
+    o.set("key", Json::str(hash::hex128(key)));
+    o.set("model", Json::str(model));
+    o.set("completion", Json::str(c.text.clone()));
+    o.set("prompt_tokens", Json::Num(c.prompt_tokens as f64));
+    o.set("completion_tokens", Json::Num(c.completion_tokens as f64));
+    // Authoritative f64 bit pattern (hex) so replayed cost accounting is
+    // bit-identical; the plain number is informational.
+    o.set("api_seconds", Json::Num(c.api_seconds));
+    o.set("api_s_bits", Json::str(format!("{:016x}", c.api_seconds.to_bits())));
+    let mut line = o.to_string();
+    line.push('\n');
+    line
+}
+
+fn decode_record(j: &Json) -> Option<(u128, Completion)> {
+    let key = hash::parse_hex128(j.get("key")?.as_str()?)?;
+    let text = j.get("completion")?.as_str()?.to_string();
+    let prompt_tokens = j.get("prompt_tokens")?.as_f64()? as usize;
+    let completion_tokens = j.get("completion_tokens")?.as_f64()? as usize;
+    let api_seconds = j
+        .get("api_s_bits")
+        .and_then(|v| v.as_str())
+        .and_then(|s| u64::from_str_radix(s, 16).ok())
+        .map(f64::from_bits)
+        .or_else(|| j.get("api_seconds").and_then(|v| v.as_f64()))?;
+    Some((
+        key,
+        Completion {
+            text,
+            prompt_tokens,
+            completion_tokens,
+            api_seconds,
+        },
+    ))
+}
+
+// ---------------------------------------------------------------------------
+// RecordingBackend
+// ---------------------------------------------------------------------------
+
+struct Recorder {
+    file: File,
+    /// Inner request id → transcript content key, pending journaling.
+    keys: HashMap<u64, u128>,
+}
+
+/// Journals every completed request of the wrapped backend.
+pub struct RecordingBackend {
+    inner: Box<dyn LlmBackend>,
+    rec: Mutex<Recorder>,
+    path: PathBuf,
+}
+
+impl RecordingBackend {
+    /// Wrap `inner`, appending records to `path` (a `.jsonl` file, or a
+    /// directory that gets a `transcripts.jsonl`).
+    pub fn create(path: impl AsRef<Path>, inner: Box<dyn LlmBackend>) -> Result<RecordingBackend> {
+        let path = journal_path(path.as_ref());
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let mut file = OpenOptions::new().create(true).append(true).open(&path)?;
+        // Heal a torn tail by appending (never truncating) — same
+        // concurrent-writer hygiene as the eval-cache journal.
+        if let Ok(bytes) = std::fs::read(&path) {
+            if bytes.last().is_some_and(|&b| b != b'\n') {
+                let _ = file.write_all(b"\n");
+            }
+        }
+        Ok(RecordingBackend {
+            inner,
+            rec: Mutex::new(Recorder {
+                file,
+                keys: HashMap::new(),
+            }),
+            path,
+        })
+    }
+
+    pub fn journal_path(&self) -> &Path {
+        &self.path
+    }
+
+    fn journal(&self, id: RequestId, c: &Completion) {
+        let mut g = lock(&self.rec);
+        if let Some(key) = g.keys.remove(&id.0) {
+            let line = encode_record(key, self.inner.model_name(), c);
+            // One write per record; a failed append only loses the journal
+            // line, never the live completion.
+            let _ = g
+                .file
+                .write_all(line.as_bytes())
+                .and_then(|()| g.file.flush());
+        }
+    }
+}
+
+impl LlmBackend for RecordingBackend {
+    fn model_name(&self) -> &str {
+        self.inner.model_name()
+    }
+
+    fn submit(&self, req: AgentRequest) -> Result<RequestId> {
+        let key = transcript_key(&req.messages);
+        let id = self.inner.submit(req)?;
+        lock(&self.rec).keys.insert(id.0, key);
+        Ok(id)
+    }
+
+    fn try_recv(&self, id: RequestId) -> Result<Option<Completion>> {
+        let out = self.inner.try_recv(id)?;
+        if let Some(c) = &out {
+            self.journal(id, c);
+        }
+        Ok(out)
+    }
+
+    fn recv(&self, id: RequestId) -> Result<Completion> {
+        let c = self.inner.recv(id)?;
+        self.journal(id, &c);
+        Ok(c)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ReplayBackend
+// ---------------------------------------------------------------------------
+
+struct ReplayState {
+    /// FIFO of recorded completions per transcript key.
+    records: HashMap<u128, VecDeque<Completion>>,
+    mail: SyncMailbox,
+}
+
+/// Serves recorded completions by transcript content — fully offline.
+pub struct ReplayBackend {
+    model: String,
+    state: Mutex<ReplayState>,
+    path: PathBuf,
+}
+
+impl ReplayBackend {
+    pub fn open(path: impl AsRef<Path>) -> Result<ReplayBackend> {
+        let path = journal_path(path.as_ref());
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("transcript journal {}", path.display()))?;
+        let mut records: HashMap<u128, VecDeque<Completion>> = HashMap::new();
+        let mut model = String::from("replay");
+        let mut loaded = 0usize;
+        let scan = jsonl::scan(&bytes, |j, _| {
+            if let Some(m) = j.get("model").and_then(|v| v.as_str()) {
+                model = format!("replay:{m}");
+            }
+            match decode_record(j) {
+                Some((key, c)) => {
+                    records.entry(key).or_default().push_back(c);
+                    loaded += 1;
+                    true
+                }
+                None => false,
+            }
+        });
+        if scan.skipped > 0 {
+            eprintln!(
+                "transcript replay: skipped {} corrupt/truncated record(s) in {}",
+                scan.skipped,
+                path.display()
+            );
+        }
+        if loaded == 0 {
+            return Err(anyhow!("no transcript records in {}", path.display()));
+        }
+        Ok(ReplayBackend {
+            model,
+            state: Mutex::new(ReplayState {
+                records,
+                mail: SyncMailbox::default(),
+            }),
+            path,
+        })
+    }
+
+    /// Recorded completions not yet served (for end-of-run coverage checks).
+    pub fn remaining(&self) -> usize {
+        lock(&self.state).records.values().map(|q| q.len()).sum()
+    }
+}
+
+impl LlmBackend for ReplayBackend {
+    fn model_name(&self) -> &str {
+        &self.model
+    }
+
+    fn submit(&self, req: AgentRequest) -> Result<RequestId> {
+        let key = transcript_key(&req.messages);
+        let mut g = lock(&self.state);
+        let result = g
+            .records
+            .get_mut(&key)
+            .and_then(|q| q.pop_front())
+            .ok_or_else(|| {
+                anyhow!(
+                    "no recorded completion for transcript {} in {} — the \
+                     replayed run diverged from the recording",
+                    hash::hex128(key),
+                    self.path.display()
+                )
+            });
+        Ok(g.mail.push(result))
+    }
+
+    fn try_recv(&self, id: RequestId) -> Result<Option<Completion>> {
+        lock(&self.state).mail.take(id, &self.model).map(Some)
+    }
+
+    fn recv(&self, id: RequestId) -> Result<Completion> {
+        lock(&self.state).mail.take(id, &self.model)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agent::backend::Pipelined;
+    use crate::agent::simulated::SimulatedLlm;
+    use crate::agent::prompt::dynamic_prompt;
+    use crate::agent::{TaskContext, TaskKind};
+    use crate::search::spaces;
+    use crate::util::json::Json;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let p = std::env::temp_dir().join(format!(
+            "haqa_transcript_{tag}_{}.jsonl",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_file(&p);
+        p
+    }
+
+    fn prompt_messages(seed_round: usize) -> Vec<Message> {
+        let space = spaces::resnet_qat();
+        let ctx = TaskContext {
+            kind: TaskKind::Finetune,
+            space: &space,
+            history: &[],
+            rounds_left: 3 + seed_round,
+            hardware: None,
+            objective: Json::obj(),
+        };
+        vec![Message::user(dynamic_prompt(&ctx, &[]))]
+    }
+
+    #[test]
+    fn record_then_replay_is_bit_identical() {
+        let path = tmp("roundtrip");
+        let live = RecordingBackend::create(
+            &path,
+            Box::new(Pipelined::new(SimulatedLlm::new(5).with_failure_rate(0.0))),
+        )
+        .unwrap();
+        let m1 = prompt_messages(0);
+        let m2 = prompt_messages(1);
+        let c1 = live.complete(&m1).unwrap();
+        let c2 = live.complete(&m2).unwrap();
+
+        let replay = ReplayBackend::open(&path).unwrap();
+        let r2 = replay.complete(&m2).unwrap();
+        let r1 = replay.complete(&m1).unwrap();
+        assert_eq!(r1.text, c1.text);
+        assert_eq!(r2.text, c2.text, "replay matches by content, not order");
+        assert_eq!(r1.prompt_tokens, c1.prompt_tokens);
+        assert_eq!(
+            r1.api_seconds.to_bits(),
+            c1.api_seconds.to_bits(),
+            "accounting replays bit-exactly"
+        );
+        assert_eq!(replay.remaining(), 0);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn replay_rejects_unrecorded_transcripts() {
+        let path = tmp("miss");
+        let live = RecordingBackend::create(
+            &path,
+            Box::new(Pipelined::new(SimulatedLlm::new(5).with_failure_rate(0.0))),
+        )
+        .unwrap();
+        live.complete(&prompt_messages(0)).unwrap();
+        let replay = ReplayBackend::open(&path).unwrap();
+        let err = replay.complete(&prompt_messages(7)).unwrap_err();
+        assert!(format!("{err:#}").contains("no recorded completion"), "{err:#}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn corrupt_lines_are_skipped_and_torn_tail_healed() {
+        let path = tmp("corrupt");
+        {
+            let live = RecordingBackend::create(
+                &path,
+                Box::new(Pipelined::new(SimulatedLlm::new(5).with_failure_rate(0.0))),
+            )
+            .unwrap();
+            live.complete(&prompt_messages(0)).unwrap();
+        }
+        // A crashed writer's torn, newline-less tail.
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.extend_from_slice(b"{\"key\":\"00ff\",\"completion");
+        std::fs::write(&path, &bytes).unwrap();
+        // Re-opening for recording heals the tail by appending a newline…
+        {
+            let live = RecordingBackend::create(
+                &path,
+                Box::new(Pipelined::new(SimulatedLlm::new(6).with_failure_rate(0.0))),
+            )
+            .unwrap();
+            live.complete(&prompt_messages(1)).unwrap();
+        }
+        // …so both intact records load and the torn one is skipped.
+        let replay = ReplayBackend::open(&path).unwrap();
+        assert_eq!(replay.remaining(), 2);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn empty_journal_is_an_error() {
+        let path = tmp("empty");
+        std::fs::write(&path, "").unwrap();
+        assert!(ReplayBackend::open(&path).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -45,6 +45,7 @@ use anyhow::Result;
 use crate::search::Config;
 use crate::util::hash;
 use crate::util::json::{self, Json};
+use crate::util::{jsonl, lock};
 
 use super::evaluator::{Evaluation, Evaluator};
 
@@ -53,6 +54,19 @@ pub const SHARD_COUNT: usize = 16;
 
 /// Journal file name inside a cache directory.
 pub const JOURNAL_FILE: &str = "eval_cache.jsonl";
+
+/// `haqa cache compact` summary: what the rewrite kept and dropped.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CompactReport {
+    /// Valid records in the journal before the rewrite.
+    pub before_records: usize,
+    /// Live records kept (first valid write per key).
+    pub after_records: usize,
+    /// Corrupt/truncated lines dropped.
+    pub dropped_corrupt: usize,
+    pub before_bytes: u64,
+    pub after_bytes: u64,
+}
 
 /// Aggregate cache counters.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -289,51 +303,70 @@ impl EvalCache {
         }
     }
 
+    /// Rewrite `<dir>/eval_cache.jsonl` keeping only live records: the
+    /// first valid record per key wins (matching the in-memory
+    /// first-write-wins `or_insert` semantics), superseded duplicates and
+    /// corrupt/blank lines are dropped, and record order is preserved.
+    /// The rewrite is atomic (temp file + rename).  This is an **offline**
+    /// maintenance pass (`haqa cache compact`): run it when no process is
+    /// appending to the journal, or a concurrent append between read and
+    /// rename can be lost.
+    pub fn compact(dir: impl AsRef<Path>) -> Result<CompactReport> {
+        let path = dir.as_ref().join(JOURNAL_FILE);
+        let bytes = std::fs::read(&path)?;
+        let mut live: Vec<String> = Vec::new();
+        let mut seen: std::collections::HashSet<u128> = std::collections::HashSet::new();
+        let mut before_records = 0usize;
+        let scan = jsonl::scan(&bytes, |j, raw| match decode_record(j) {
+            Some((key, _)) => {
+                before_records += 1;
+                if seen.insert(key) {
+                    live.push(raw.to_string());
+                }
+                true
+            }
+            None => false,
+        });
+        let dropped_corrupt = scan.skipped;
+        let after_records = live.len();
+        let mut out = live.join("\n");
+        if !out.is_empty() {
+            out.push('\n');
+        }
+        let tmp = path.with_extension(format!("jsonl.compact.{}", std::process::id()));
+        std::fs::write(&tmp, out.as_bytes())?;
+        std::fs::rename(&tmp, &path)?;
+        Ok(CompactReport {
+            before_records,
+            after_records,
+            dropped_corrupt,
+            before_bytes: bytes.len() as u64,
+            after_bytes: std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0),
+        })
+    }
+
     /// Load every valid journal record.  Corrupt lines (and a torn,
     /// newline-less tail) are skipped with a warning — never an error, the
     /// cache just recomputes what was lost.  Returns whether the file ends
     /// mid-record, so the caller can terminate the tail before appending.
     fn load_journal(&self, path: &Path) -> Result<bool> {
         let bytes = std::fs::read(path)?;
-        let mut pos = 0usize;
-        let mut skipped = 0usize;
-        let mut torn_tail = false;
-        while pos < bytes.len() {
-            let Some(off) = bytes[pos..].iter().position(|&b| b == b'\n') else {
-                // No terminating newline: a torn final write (a record is
-                // always appended as one `line\n` write).
-                torn_tail = true;
-                skipped += 1;
-                break;
-            };
-            let end = pos + off;
-            let ok = std::str::from_utf8(&bytes[pos..end])
-                .ok()
-                .and_then(|line| json::parse(line).ok())
-                .and_then(|j| decode_record(&j));
-            match ok {
-                Some((key, e)) => {
-                    self.shard(key).entry(key).or_insert(e);
-                }
-                None if bytes[pos..end].iter().all(|b| b.is_ascii_whitespace()) => {}
-                None => skipped += 1, // corrupt record: skip, keep loading
+        let scan = jsonl::scan(&bytes, |j, _| match decode_record(j) {
+            Some((key, e)) => {
+                self.shard(key).entry(key).or_insert(e);
+                true
             }
-            pos = end + 1;
-        }
-        if skipped > 0 {
+            None => false, // corrupt record: skip, keep loading
+        });
+        if scan.skipped > 0 {
             eprintln!(
-                "eval cache: skipped {skipped} corrupt/truncated record(s) in {}",
+                "eval cache: skipped {} corrupt/truncated record(s) in {}",
+                scan.skipped,
                 path.display()
             );
         }
-        Ok(torn_tail)
+        Ok(scan.torn_tail)
     }
-}
-
-fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
-    // A worker that panicked mid-insert cannot corrupt the map (inserts
-    // are single statements); recover instead of propagating poison.
-    m.lock().unwrap_or_else(|p| p.into_inner())
 }
 
 /// One journal line.  `score`/`extra` carry the authoritative f64 bit
@@ -628,6 +661,50 @@ mod tests {
         let cache = EvalCache::with_dir(&dir).unwrap();
         // The corrupt line is skipped; records on both sides survive.
         assert_eq!(cache.len(), 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn compact_drops_superseded_duplicates_and_corruption() {
+        let dir = temp_cache_dir("compact");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(JOURNAL_FILE);
+        let record = |key: u128, score: f64| {
+            encode_record(
+                key,
+                &Evaluation {
+                    score,
+                    extra: Vec::new(),
+                    feedback: "{}".into(),
+                },
+            )
+        };
+        // Two writers raced on key 42 (first-write-wins ⇒ 1.0 is live),
+        // key 43 is unique, and a crashed writer left a torn tail.
+        let mut blob = record(42, 1.0).into_bytes();
+        blob.extend_from_slice(record(43, 3.0).as_bytes());
+        blob.extend_from_slice(record(42, 2.0).as_bytes());
+        blob.extend_from_slice(b"{\"key\": \"torn");
+        std::fs::write(&path, &blob).unwrap();
+
+        let report = EvalCache::compact(&dir).unwrap();
+        assert_eq!(report.before_records, 3);
+        assert_eq!(report.after_records, 2);
+        assert_eq!(report.dropped_corrupt, 1);
+        assert!(report.after_bytes < report.before_bytes);
+
+        // The compacted journal loads cleanly and kept the live values.
+        let cache = EvalCache::with_dir(&dir).unwrap();
+        assert_eq!(cache.len(), 2);
+        let shard_val = |key: u128| cache.shard(key).get(&key).cloned().unwrap();
+        assert_eq!(shard_val(42).score.to_bits(), 1.0f64.to_bits(), "first write wins");
+        assert_eq!(shard_val(43).score.to_bits(), 3.0f64.to_bits());
+
+        // Compacting a compact journal is a no-op.
+        let again = EvalCache::compact(&dir).unwrap();
+        assert_eq!(again.before_records, 2);
+        assert_eq!(again.after_records, 2);
+        assert_eq!(again.dropped_corrupt, 0);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -80,6 +80,29 @@ pub trait Evaluator {
     }
 }
 
+/// Forwarding impl so a borrowed evaluator can sit wherever an owned one is
+/// expected (e.g. boxed into a [`super::workflow::TrackSession`]).
+impl<T: Evaluator + ?Sized> Evaluator for &T {
+    fn track(&self) -> &'static str {
+        (**self).track()
+    }
+    fn space(&self) -> &Space {
+        (**self).space()
+    }
+    fn scope(&self) -> Json {
+        (**self).scope()
+    }
+    fn evaluate(&self, cfg: &Config) -> Result<Evaluation> {
+        (**self).evaluate(cfg)
+    }
+    fn evaluate_batch(&self, cfgs: &[Config]) -> Result<Vec<Evaluation>> {
+        (**self).evaluate_batch(cfgs)
+    }
+    fn rounds(&self, budget: usize) -> usize {
+        (**self).rounds(budget)
+    }
+}
+
 /// Parse a `kernel[:batch]` spec.  A missing `:batch` falls back to the
 /// documented default of 64; a *malformed* batch is a hard error — the
 /// seed's silent `unwrap_or(64)` turned typos into wrong experiments.

@@ -9,9 +9,11 @@
 //! * [`cache`] — deterministic content-addressed evaluation cache:
 //!   lock-striped in memory, optional persistent journal tier.
 //! * [`fleet`] — scoped-thread scenario fleet, family-sharded work queue,
-//!   bit-identical to serial.
-//! * [`workflow`] — the generic round loop and the joint pipeline.
-//! * [`tasklog`] — per-task JSON logs (§3.3).
+//!   overlapped in-flight agent queries (`HAQA_INFLIGHT`), bit-identical
+//!   to serial.
+//! * [`workflow`] — the generic round loop as a resumable
+//!   [`workflow::TrackSession`] state machine, plus the joint pipeline.
+//! * [`tasklog`] — per-task JSON logs (§3.3) with per-round agent cost.
 
 pub mod cache;
 pub mod evaluator;
@@ -20,8 +22,8 @@ pub mod scenario;
 pub mod tasklog;
 pub mod workflow;
 
-pub use cache::{CacheStats, EvalCache};
+pub use cache::{CacheStats, CompactReport, EvalCache};
 pub use evaluator::{Evaluation, Evaluator};
 pub use fleet::{FleetReport, FleetRunner};
 pub use scenario::Scenario;
-pub use workflow::{TrackOutcome, Workflow};
+pub use workflow::{RoundState, SessionStatus, TrackOutcome, TrackSession, Workflow};

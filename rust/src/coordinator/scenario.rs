@@ -52,6 +52,13 @@ pub struct Scenario {
     /// Full-parameter pretraining steps for the LM base (disk-cached).
     pub pretrain_steps: usize,
     pub memory_limit_gb: f64,
+    /// Agent backend spec for `optimizer: "haqa"` — see
+    /// [`crate::agent::backend_from_spec`]: `simulated` (default),
+    /// `simulated-slow:<ms>`, `record:<path>`, `replay:<path>`, or an
+    /// `http://…` endpoint (`http-agent` feature).  Never part of the
+    /// evaluation cache scope: the backend changes who proposes, not what
+    /// an evaluation returns.
+    pub backend: String,
 }
 
 impl Default for Scenario {
@@ -71,6 +78,7 @@ impl Default for Scenario {
             step_scale: 0.25,
             pretrain_steps: 400,
             memory_limit_gb: 10.0,
+            backend: "simulated".into(),
         }
     }
 }
@@ -120,6 +128,9 @@ impl Scenario {
         if let Some(v) = j.get("memory_limit_gb").and_then(|v| v.as_f64()) {
             s.memory_limit_gb = v;
         }
+        if let Some(v) = j.get("backend").and_then(|v| v.as_str()) {
+            s.backend = v.to_string();
+        }
         Ok(s)
     }
 
@@ -139,7 +150,7 @@ impl Scenario {
         const KNOWN_KEYS: &[&str] = &[
             "name", "task", "model", "precision", "bits", "optimizer", "budget",
             "seed", "device", "kernel", "steps_per_epoch", "step_scale",
-            "pretrain_steps", "memory_limit_gb",
+            "pretrain_steps", "memory_limit_gb", "backend",
         ];
         let text = std::fs::read_to_string(path)?;
         let j = crate::util::json::parse(&text)
@@ -225,13 +236,14 @@ mod tests {
             r#"{"name": "t", "task": "kernel", "model": "cnn_m",
                 "precision": "w2a2", "optimizer": "bayesian", "budget": 6,
                 "seed": 3, "device": "adreno740", "kernel": "softmax:128",
-                "memory_limit_gb": 12}"#,
+                "memory_limit_gb": 12, "backend": "simulated-slow:5"}"#,
         )
         .unwrap();
         let s = Scenario::from_json(&j).unwrap();
         assert_eq!(s.track, Track::Kernel);
         assert_eq!(s.precision, QatPrecision::W2A2);
         assert_eq!(s.budget, 6);
+        assert_eq!(s.backend, "simulated-slow:5");
         assert_eq!(s.device_profile().name, "Adreno 740 (Snapdragon 8 Gen 2)");
     }
 

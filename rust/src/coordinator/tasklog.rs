@@ -27,7 +27,13 @@ impl TaskLog {
         }
     }
 
-    pub fn record_round(&mut self, round: usize, obs: &Observation, thought: Option<&str>) {
+    pub fn record_round(
+        &mut self,
+        round: usize,
+        obs: &Observation,
+        thought: Option<&str>,
+        cost: Option<Json>,
+    ) {
         let mut o = Json::obj();
         o.set("round", Json::Num(round as f64));
         o.set(
@@ -45,6 +51,12 @@ impl TaskLog {
         }
         if let Some(t) = thought {
             o.set("thought", Json::Str(t.to_string()));
+        }
+        // Per-round agent accounting (queries/retries/tokens/latency) —
+        // §3.3's audit trail at request granularity, not just the final
+        // Appendix-C summary line.
+        if let Some(c) = cost {
+            o.set("cost", c);
         }
         self.rounds.push(o);
     }
@@ -82,10 +94,19 @@ mod tests {
         let mut log = TaskLog::new("test task");
         let mut obs = Observation::new(space.default_config(), 0.9);
         obs.feedback = "{\"final_loss\": 0.3}".into();
-        log.record_round(0, &obs, Some("use defaults first"));
+        let mut cost = Json::obj();
+        cost.set("queries", Json::Num(2.0));
+        cost.set("prompt_tokens", Json::Num(900.0));
+        log.record_round(0, &obs, Some("use defaults first"), Some(cost));
         log.set_summary("best_score", Json::Num(0.9));
         let j = log.to_json();
         assert_eq!(j.req_arr("rounds").unwrap().len(), 1);
+        let round0 = &j.req_arr("rounds").unwrap()[0];
+        assert_eq!(
+            round0.get("cost").unwrap().req_f64("prompt_tokens").unwrap(),
+            900.0,
+            "per-round token accounting lands in the log"
+        );
         assert_eq!(
             j.get("summary").unwrap().req_f64("best_score").unwrap(),
             0.9

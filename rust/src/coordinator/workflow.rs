@@ -3,21 +3,28 @@
 //! evaluation substrate, and the feedback path into the next round's
 //! dynamic prompt.
 //!
-//! Every track runs on the same generic [`Workflow::run_track`] loop over a
-//! [`dyn Evaluator`](super::evaluator::Evaluator): `run_finetune` /
-//! `run_kernel` / `run_bitwidth` only pick the evaluator and the agent's
-//! task objective.  The `run_joint` pipeline chains them the way the
-//! paper's Llama2-7b prompt does (fine-tune + deploy in one conversation,
-//! shared cost accounting), and an optional content-addressed
-//! [`EvalCache`] deduplicates repeated evaluations across rounds, methods
-//! and fleet workers.
+//! Every track runs on the same generic round loop over a
+//! [`dyn Evaluator`](super::evaluator::Evaluator), now reified as a
+//! resumable [`TrackSession`] state machine: each round moves
+//! `Idle → AwaitingAgent → ReadyToEval → Idle`, yielding between "prompt
+//! built" and "completion consumed" so the fleet can keep many scenarios'
+//! agent queries in flight while it evaluates others
+//! ([`super::fleet::FleetRunner`] with `HAQA_INFLIGHT` > 1).
+//! [`Workflow::run_track`] is the blocking composition of the same states
+//! — bit-identical to the pipelined drive.  `run_finetune` / `run_kernel`
+//! / `run_bitwidth` only pick the evaluator and the agent's task
+//! objective; the `run_joint` pipeline chains them the way the paper's
+//! Llama2-7b prompt does, and an optional content-addressed [`EvalCache`]
+//! deduplicates repeated evaluations across rounds, methods and fleet
+//! workers.
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::agent::TaskKind;
 use crate::hardware::ModelProfile;
-use crate::optimizers::{best, haqa::HaqaOptimizer, Observation, Optimizer};
+use crate::optimizers::{best, haqa::HaqaOptimizer, Observation, Optimizer, Proposal};
 use crate::runtime::ArtifactSet;
+use crate::search::Config;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
@@ -53,6 +60,218 @@ pub struct TrackOutcome {
     pub cache_hits: usize,
     /// Evaluations actually computed (cache disabled counts all here).
     pub cache_misses: usize,
+}
+
+/// Where a session's current round stands.  The interesting state is
+/// [`RoundState::AwaitingAgent`]: the prompt is built and submitted, the
+/// completion not yet consumed — the session can be parked there while its
+/// driver evaluates other scenarios' configs.
+#[derive(Debug)]
+pub enum RoundState {
+    /// Next round's prompt not yet built.
+    Idle,
+    /// A proposal is in flight on the agent backend.
+    AwaitingAgent,
+    /// A validated configuration is ready to evaluate.
+    ReadyToEval(Config),
+    /// Every round has completed; call [`TrackSession::finish`].
+    Finished,
+}
+
+/// What a [`TrackSession::step`] accomplished — the driver's scheduling
+/// signal.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SessionStatus {
+    /// Progress was made and more non-blocking work may be available.
+    Working,
+    /// Blocked on the agent backend; poll again later (or
+    /// [`TrackSession::wait_agent`] to block).
+    AwaitingAgent,
+    /// The session is complete.
+    Finished,
+}
+
+/// One track's round loop as a resumable state machine: propose → evaluate
+/// (through the cache when attached) → feed back, with the task log, the
+/// best-score summary and the agent's per-round + total cost accounting
+/// threaded uniformly.
+pub struct TrackSession<'s> {
+    opt: Box<dyn Optimizer + 's>,
+    ev: Box<dyn Evaluator + 's>,
+    cache: Option<EvalCache>,
+    write_logs: bool,
+    rng: Rng,
+    log: TaskLog,
+    history: Vec<Observation>,
+    hits: usize,
+    misses: usize,
+    rounds: usize,
+    round: usize,
+    state: RoundState,
+}
+
+impl<'s> TrackSession<'s> {
+    fn new(
+        sc: &Scenario,
+        opt: Box<dyn Optimizer + 's>,
+        ev: Box<dyn Evaluator + 's>,
+        cache: Option<EvalCache>,
+        write_logs: bool,
+        rng_tag: u64,
+    ) -> TrackSession<'s> {
+        let rounds = ev.rounds(sc.budget);
+        let log = TaskLog::new(&format!("{}_{}", sc.name, ev.track()));
+        TrackSession {
+            opt,
+            ev,
+            cache,
+            write_logs,
+            rng: Rng::new(sc.seed).split(rng_tag),
+            log,
+            history: Vec::new(),
+            hits: 0,
+            misses: 0,
+            rounds,
+            round: 0,
+            state: RoundState::Idle,
+        }
+    }
+
+    pub fn state(&self) -> &RoundState {
+        &self.state
+    }
+
+    /// Advance by one transition without blocking.  Call repeatedly until
+    /// it reports [`SessionStatus::AwaitingAgent`] (park the session) or
+    /// [`SessionStatus::Finished`] (collect via [`TrackSession::finish`]).
+    pub fn step(&mut self) -> Result<SessionStatus> {
+        match std::mem::replace(&mut self.state, RoundState::Idle) {
+            RoundState::Finished => {
+                self.state = RoundState::Finished;
+                Ok(SessionStatus::Finished)
+            }
+            RoundState::Idle => {
+                if self.round >= self.rounds {
+                    self.state = RoundState::Finished;
+                    return Ok(SessionStatus::Finished);
+                }
+                match self
+                    .opt
+                    .propose_submit(self.ev.space(), &self.history, &mut self.rng)
+                {
+                    Proposal::Ready(cfg) => {
+                        self.state = RoundState::ReadyToEval(cfg);
+                        Ok(SessionStatus::Working)
+                    }
+                    Proposal::Pending => {
+                        // Submitting IS progress: report `Working` so the
+                        // driver polls once before parking — an instant
+                        // (Pipelined) backend resolves on that first poll
+                        // with no backoff sleep in between.
+                        self.state = RoundState::AwaitingAgent;
+                        Ok(SessionStatus::Working)
+                    }
+                }
+            }
+            RoundState::AwaitingAgent => {
+                match self.opt.propose_poll(self.ev.space(), &self.history)? {
+                    Some(cfg) => {
+                        self.state = RoundState::ReadyToEval(cfg);
+                        Ok(SessionStatus::Working)
+                    }
+                    None => {
+                        self.state = RoundState::AwaitingAgent;
+                        Ok(SessionStatus::AwaitingAgent)
+                    }
+                }
+            }
+            RoundState::ReadyToEval(cfg) => {
+                self.complete_round(cfg)?;
+                Ok(SessionStatus::Working)
+            }
+        }
+    }
+
+    /// Block on the in-flight agent request (valid only in
+    /// [`RoundState::AwaitingAgent`]) — the serial path's alternative to
+    /// polling.
+    pub fn wait_agent(&mut self) -> Result<()> {
+        match self.state {
+            RoundState::AwaitingAgent => {
+                let cfg = self.opt.propose_wait(self.ev.space(), &self.history)?;
+                self.state = RoundState::ReadyToEval(cfg);
+                Ok(())
+            }
+            _ => Err(anyhow!("wait_agent called with no agent request in flight")),
+        }
+    }
+
+    /// Evaluate the round's configuration and thread the feedback (and the
+    /// per-round agent cost) into history and the task log.
+    fn complete_round(&mut self, cfg: Config) -> Result<()> {
+        let (evaluation, from_cache) = match &self.cache {
+            Some(cache) => cache.get_or_evaluate(self.ev.as_ref(), &cfg)?,
+            None => (self.ev.evaluate(&cfg)?, false),
+        };
+        if from_cache {
+            self.hits += 1;
+        } else {
+            self.misses += 1;
+        }
+        let mut obs = Observation::new(cfg, evaluation.score);
+        obs.extra = evaluation.extra;
+        obs.feedback = evaluation.feedback;
+        self.log
+            .record_round(self.round, &obs, None, self.opt.take_round_cost());
+        self.history.push(obs);
+        self.round += 1;
+        self.state = RoundState::Idle;
+        Ok(())
+    }
+
+    /// Drive the session to completion on this thread, blocking on the
+    /// backend between submit and receive.  Bit-identical to a polled
+    /// drive: the same propose/evaluate sequence runs either way.
+    pub fn run_blocking(mut self) -> Result<TrackOutcome> {
+        loop {
+            match self.step()? {
+                SessionStatus::Working => {}
+                SessionStatus::AwaitingAgent => self.wait_agent()?,
+                SessionStatus::Finished => return self.finish(),
+            }
+        }
+    }
+
+    /// Summarize a finished session into its [`TrackOutcome`].
+    pub fn finish(mut self) -> Result<TrackOutcome> {
+        if self.history.is_empty() {
+            bail!("empty history");
+        }
+        let best_score = best(&self.history).map(|o| o.score).unwrap_or(f64::NAN);
+        self.log.set_summary("best_score", Json::Num(best_score));
+        self.log
+            .set_summary("rounds", Json::Num(self.history.len() as f64));
+        if self.hits > 0 {
+            self.log.set_summary("cache_hits", Json::Num(self.hits as f64));
+        }
+        let cost_report = self.opt.cost_report();
+        if let Some(cost) = &cost_report {
+            self.log.set_summary("cost", Json::Str(cost.clone()));
+        }
+        let log_path = if self.write_logs {
+            self.log.save().ok()
+        } else {
+            None
+        };
+        Ok(TrackOutcome {
+            history: self.history,
+            best_score,
+            cost_report,
+            log_path,
+            cache_hits: self.hits,
+            cache_misses: self.misses,
+        })
+    }
 }
 
 impl<'a> Workflow<'a> {
@@ -93,10 +312,18 @@ impl<'a> Workflow<'a> {
         objective: Json,
     ) -> Result<Box<dyn Optimizer>> {
         if sc.optimizer == "haqa" {
-            let mut h = HaqaOptimizer::with_seed(sc.seed ^ 0x4a9a)
+            // The agent backend comes from the scenario spec; the seed
+            // stream matches the pre-pipeline `with_seed` construction so
+            // seeded results regenerate bit-for-bit.
+            let backend = crate::agent::backend_from_spec(&sc.backend, sc.seed ^ 0x4a9a)?;
+            let mut h = HaqaOptimizer::with_backend(backend)
                 .for_task(kind)
                 .with_objective(objective);
             h.budget = sc.budget;
+            // A replayed run that diverges from its recording must fail
+            // loudly, not degrade to default configs (the §3.3 never-stall
+            // fallback is for live backends only).
+            h.strict_errors = sc.backend.trim().starts_with("replay:");
             if kind != TaskKind::Finetune {
                 h = h.with_hardware(sc.device_profile().to_json());
             }
@@ -106,15 +333,48 @@ impl<'a> Workflow<'a> {
         }
     }
 
+    /// Build the resumable session for a single-track scenario — the seam
+    /// the pipelined fleet drives.  `Track::Joint` has no single session;
+    /// use [`Workflow::run_joint`].
+    pub fn session<'s>(&self, sc: &'s Scenario) -> Result<TrackSession<'s>>
+    where
+        'a: 's,
+    {
+        let (ev, objective, kind, tag): (Box<dyn Evaluator + 's>, Json, TaskKind, u64) =
+            match sc.track {
+                Track::FinetuneCnn | Track::FinetuneLm => {
+                    let set = self.set.ok_or_else(artifacts_error)?;
+                    let e = FinetuneEvaluator::new(set, sc)?;
+                    let obj = e.objective();
+                    (Box::new(e), obj, TaskKind::Finetune, RNG_FINETUNE)
+                }
+                Track::Kernel => {
+                    let e = KernelEvaluator::from_scenario(sc)?;
+                    let obj = e.objective();
+                    (Box::new(e), obj, TaskKind::KernelTuning, RNG_KERNEL)
+                }
+                Track::Bitwidth => {
+                    let e = BitwidthEvaluator::from_scenario(sc)?;
+                    let obj = e.objective();
+                    (Box::new(e), obj, TaskKind::Bitwidth, RNG_BITWIDTH)
+                }
+                Track::Joint => bail!("joint scenarios chain three sessions — use run_joint"),
+            };
+        let opt = self.make_optimizer(sc, kind, objective)?;
+        Ok(TrackSession::new(
+            sc,
+            opt,
+            ev,
+            self.cache.clone(),
+            self.write_logs,
+            tag,
+        ))
+    }
+
     /// Fine-tuning track (Table 1/2): optimizer proposes → trainer runs on
     /// PJRT → accuracy + loss feedback threads back into the next round.
     pub fn run_finetune(&self, sc: &Scenario) -> Result<TrackOutcome> {
-        let set = self.set.ok_or_else(|| {
-            anyhow!(
-                "the fine-tuning track needs the AOT artifacts — construct \
-                 the Workflow with an ArtifactSet (run `make artifacts`)"
-            )
-        })?;
+        let set = self.set.ok_or_else(artifacts_error)?;
         let ev = FinetuneEvaluator::new(set, sc)?;
         let mut opt = self.make_optimizer(sc, TaskKind::Finetune, ev.objective())?;
         self.run_track(sc, opt.as_mut(), &ev, RNG_FINETUNE)
@@ -161,10 +421,9 @@ impl<'a> Workflow<'a> {
         }
     }
 
-    /// The one generic HAQA round loop (paper Fig. 3) every track runs on:
-    /// propose → evaluate (through the cache when attached) → feed back —
-    /// with the task log, the best-score summary and the agent's cost
-    /// report threaded uniformly.
+    /// The one generic HAQA round loop (paper Fig. 3) every track runs on,
+    /// driven to completion on this thread.  Equivalent to building the
+    /// [`TrackSession`] and calling [`TrackSession::run_blocking`].
     pub fn run_track(
         &self,
         sc: &Scenario,
@@ -172,51 +431,23 @@ impl<'a> Workflow<'a> {
         ev: &dyn Evaluator,
         rng_tag: u64,
     ) -> Result<TrackOutcome> {
-        let mut rng = Rng::new(sc.seed).split(rng_tag);
-        let space = ev.space();
-        let mut log = TaskLog::new(&format!("{}_{}", sc.name, ev.track()));
-        let mut history: Vec<Observation> = Vec::new();
-        let (mut hits, mut misses) = (0usize, 0usize);
-        for round in 0..ev.rounds(sc.budget) {
-            let cfg = opt.propose(space, &history, &mut rng);
-            let (evaluation, from_cache) = match &self.cache {
-                Some(cache) => cache.get_or_evaluate(ev, &cfg)?,
-                None => (ev.evaluate(&cfg)?, false),
-            };
-            if from_cache {
-                hits += 1;
-            } else {
-                misses += 1;
-            }
-            let mut obs = Observation::new(cfg, evaluation.score);
-            obs.extra = evaluation.extra;
-            obs.feedback = evaluation.feedback;
-            log.record_round(round, &obs, None);
-            history.push(obs);
-        }
-        if history.is_empty() {
-            bail!("empty history");
-        }
-        let best_score = best(&history).map(|o| o.score).unwrap_or(f64::NAN);
-        log.set_summary("best_score", Json::Num(best_score));
-        log.set_summary("rounds", Json::Num(history.len() as f64));
-        if hits > 0 {
-            log.set_summary("cache_hits", Json::Num(hits as f64));
-        }
-        let cost_report = opt.cost_report();
-        if let Some(cost) = &cost_report {
-            log.set_summary("cost", Json::Str(cost.clone()));
-        }
-        let log_path = if self.write_logs { log.save().ok() } else { None };
-        Ok(TrackOutcome {
-            history,
-            best_score,
-            cost_report,
-            log_path,
-            cache_hits: hits,
-            cache_misses: misses,
-        })
+        TrackSession::new(
+            sc,
+            Box::new(opt),
+            Box::new(ev),
+            self.cache.clone(),
+            self.write_logs,
+            rng_tag,
+        )
+        .run_blocking()
     }
+}
+
+fn artifacts_error() -> anyhow::Error {
+    anyhow!(
+        "the fine-tuning track needs the AOT artifacts — construct \
+         the Workflow with an ArtifactSet (run `make artifacts`)"
+    )
 }
 
 pub fn model_by_name(name: &str) -> Result<ModelProfile> {
@@ -282,5 +513,85 @@ mod tests {
         };
         let err = wf.run(&sc).unwrap_err();
         assert!(format!("{err:#}").contains("ArtifactSet"), "{err:#}");
+    }
+
+    #[test]
+    fn polled_session_matches_blocking_run_bit_for_bit() {
+        let sc = Scenario {
+            name: "wf_unit_session".into(),
+            track: Track::Kernel,
+            kernel: "softmax:64".into(),
+            optimizer: "haqa".into(),
+            budget: 4,
+            seed: 11,
+            ..Scenario::default()
+        };
+        let wf = Workflow::simulated().quiet();
+        let blocking = wf.run(&sc).unwrap();
+        // Drive the same scenario through the resumable state machine,
+        // polling instead of blocking.
+        let mut session = wf.session(&sc).unwrap();
+        let outcome = loop {
+            match session.step().unwrap() {
+                SessionStatus::Finished => break session.finish().unwrap(),
+                SessionStatus::Working | SessionStatus::AwaitingAgent => {}
+            }
+        };
+        assert_eq!(outcome.history.len(), blocking.history.len());
+        for (a, b) in outcome.history.iter().zip(&blocking.history) {
+            assert_eq!(a.score.to_bits(), b.score.to_bits());
+        }
+        assert_eq!(outcome.cost_report, blocking.cost_report);
+    }
+
+    #[test]
+    fn session_yields_between_prompt_and_completion() {
+        let sc = Scenario {
+            name: "wf_unit_yield".into(),
+            track: Track::Kernel,
+            kernel: "matmul:64".into(),
+            optimizer: "haqa".into(),
+            budget: 2,
+            seed: 2,
+            // 50 ms of simulated API latency: the first poll after submit
+            // reliably observes the request genuinely in flight, even on a
+            // loaded CI machine.
+            backend: "simulated-slow:50".into(),
+            ..Scenario::default()
+        };
+        let wf = Workflow::simulated().quiet();
+        let mut session = wf.session(&sc).unwrap();
+        assert!(matches!(session.state(), RoundState::Idle));
+        // Submitting is progress (status Working), but the session now sits
+        // between "prompt built" and "completion consumed".
+        assert_eq!(session.step().unwrap(), SessionStatus::Working);
+        assert!(
+            matches!(session.state(), RoundState::AwaitingAgent),
+            "session parks between prompt built and completion consumed"
+        );
+        // With 50 ms of API latency the first poll finds it still in flight.
+        assert_eq!(session.step().unwrap(), SessionStatus::AwaitingAgent);
+        assert!(matches!(session.state(), RoundState::AwaitingAgent));
+        // Blocking on the in-flight request resolves the round.
+        session.wait_agent().unwrap();
+        assert!(matches!(session.state(), RoundState::ReadyToEval(_)));
+        let outcome = loop {
+            match session.step().unwrap() {
+                SessionStatus::Finished => break session.finish().unwrap(),
+                SessionStatus::AwaitingAgent => session.wait_agent().unwrap(),
+                SessionStatus::Working => {}
+            }
+        };
+        assert_eq!(outcome.history.len(), 2);
+    }
+
+    #[test]
+    fn joint_scenarios_have_no_single_session() {
+        let wf = Workflow::simulated();
+        let sc = Scenario {
+            track: Track::Joint,
+            ..Scenario::default()
+        };
+        assert!(wf.session(&sc).is_err());
     }
 }

@@ -9,7 +9,10 @@
 //! haqa generate [--flags]      serve token generation (llama.cpp analogue)
 //! haqa run <scenario.json>     run a scenario file (incl. the joint loop)
 //! haqa fleet <scenarios.json>  run a scenario batch across a worker pool
+//!                              (--inflight N overlaps agent queries)
 //! haqa bench [--quick]         fleet/cache throughput harness → BENCH_2.json
+//!                              + agent-overlap phase → BENCH_3.json
+//! haqa cache compact           rewrite the eval-cache journal, live entries only
 //! ```
 
 use anyhow::Result;
@@ -44,6 +47,7 @@ fn real_main() -> Result<()> {
         "run" => run_scenario(rest),
         "fleet" => fleet(rest),
         "bench" => bench_fleet(rest),
+        "cache" => cache_cmd(rest),
         "perf" => perf(),
         "help" | "--help" => {
             print!("{}", HELP);
@@ -64,7 +68,10 @@ haqa — hardware-aware quantization agent (paper reproduction)
   haqa generate             token-generation engine on PJRT; --help
   haqa run <scenario.json>  run a scenario file (finetune/kernel/bitwidth/joint)
   haqa fleet <batch.json>   run a scenario batch on a worker pool w/ eval cache
-  haqa bench                cold/warm serial/fleet throughput harness; --help
+                            (--inflight N overlaps in-flight agent queries)
+  haqa bench                cold/warm serial/fleet throughput harness plus the
+                            blocking-vs-pipelined agent-overlap phase; --help
+  haqa cache compact        rewrite the eval-cache journal keeping live entries
 
 Benches regenerating every paper table/figure: `cargo bench` (see DESIGN.md).
 ";
@@ -252,6 +259,7 @@ fn run_scenario(rest: Vec<String>) -> Result<()> {
 fn fleet(rest: Vec<String>) -> Result<()> {
     let a = Args::new("haqa fleet", "run a scenario batch across a worker pool")
         .opt("workers", "worker threads (default: env HAQA_WORKERS or 4)")
+        .opt("inflight", "agent queries kept in flight per worker (default: env HAQA_INFLIGHT or 1)")
         .opt("cache-dir", "persist the eval-cache journal here (shared across runs and processes)")
         .flag("no-cache", "disable the content-addressed evaluation cache")
         .flag("check-serial", "re-run serially and verify bit-identical scores")
@@ -259,11 +267,12 @@ fn fleet(rest: Vec<String>) -> Result<()> {
     let path = a
         .positional
         .first()
-        .ok_or_else(|| anyhow::anyhow!("usage: haqa fleet <scenarios.json> [--workers N]"))?;
+        .ok_or_else(|| anyhow::anyhow!("usage: haqa fleet <scenarios.json> [--workers N] [--inflight N]"))?;
     let scenarios = Scenario::load_many(path)?;
     anyhow::ensure!(!scenarios.is_empty(), "no scenarios in {path}");
     let workers = FleetRunner::workers_from_env(a.get_usize("workers")?)?;
-    let mut runner = FleetRunner::new(workers);
+    let inflight = FleetRunner::inflight_from_env(a.get_usize("inflight")?)?;
+    let mut runner = FleetRunner::new(workers).with_inflight(inflight);
     if let Some(dir) = a.get("cache-dir") {
         runner = runner.with_cache(EvalCache::with_dir(dir)?);
     }
@@ -286,10 +295,11 @@ fn fleet(rest: Vec<String>) -> Result<()> {
         }
     }
     println!(
-        "fleet: {} scenarios ({} families) on {} workers in {:.2}s",
+        "fleet: {} scenarios ({} families) on {} workers (inflight {}) in {:.2}s",
         scenarios.len(),
         report.families,
         workers,
+        inflight,
         t0.elapsed().as_secs_f64()
     );
     if let Some(st) = report.cache {
@@ -338,6 +348,9 @@ fn bench_fleet(rest: Vec<String>) -> Result<()> {
         .opt("cache-dir", "journal directory (reset at start; default: a temp dir)")
         .opt_default("out", "BENCH_2.json", "report output path")
         .opt_default("rounds", "8", "tuning rounds per kernel scenario")
+        .opt_default("overlap-out", "BENCH_3.json", "agent-overlap report output path")
+        .opt_default("overlap-latency-ms", "12", "simulated agent API latency for the overlap phase")
+        .flag("skip-overlap", "skip the blocking-vs-pipelined agent-overlap phase")
         .flag("quick", "small scenario set (CI perf smoke)")
         .parse(rest)?;
     let quick = a.get_bool("quick");
@@ -442,7 +455,154 @@ fn bench_fleet(rest: Vec<String>) -> Result<()> {
         warm_hit_rate > 0.0,
         "warm-cache run saw zero hits — the persistent journal tier is broken"
     );
+    if !a.get_bool("skip-overlap") {
+        bench_agent_overlap(
+            quick,
+            a.get_usize("overlap-latency-ms")?.unwrap_or(12).max(1),
+            a.get("overlap-out").unwrap_or("BENCH_3.json"),
+        )?;
+    }
     Ok(())
+}
+
+/// The agent-overlap phase: the same haqa-driven kernel fleet twice behind
+/// a simulated-latency backend — blocking (inflight 1) vs pipelined
+/// (every scenario's agent query in flight at once) — on ONE worker, so
+/// the measured speedup is purely the overlap of in-flight agent queries
+/// with other scenarios' evaluations, not thread parallelism.  Hard-fails
+/// unless the two paths are bit-identical and the pipelined run is
+/// measurably faster; emits `BENCH_3.json` for CI.
+fn bench_agent_overlap(quick: bool, latency_ms: usize, out_path: &str) -> Result<()> {
+    use haqa::util::json::Json;
+
+    let rounds = if quick { 5 } else { 8 };
+    let kernels: &[&str] = if quick {
+        &["matmul:64", "softmax:128", "rmsnorm:64", "silu:64"]
+    } else {
+        &["matmul:64", "matmul:128", "softmax:64", "softmax:128", "silu:64", "rmsnorm:64", "rope:128", "rope:64"]
+    };
+    let scenarios: Vec<Scenario> = kernels
+        .iter()
+        .enumerate()
+        .map(|(i, kernel)| Scenario {
+            name: format!("overlap_{}", kernel.replace(':', "_")),
+            track: Track::Kernel,
+            kernel: (*kernel).into(),
+            optimizer: "haqa".into(),
+            budget: rounds,
+            seed: 11 + i as u64,
+            backend: format!("simulated-slow:{latency_ms}"),
+            ..Scenario::default()
+        })
+        .collect();
+    let inflight = scenarios.len();
+    println!(
+        "agent-overlap: {} haqa scenarios, {rounds} rounds, {latency_ms} ms simulated \
+         agent latency, 1 worker",
+        scenarios.len()
+    );
+
+    let timed = |runner: FleetRunner| -> Result<(f64, Vec<u64>)> {
+        let t0 = std::time::Instant::now();
+        let report = runner.run(&scenarios);
+        let wall = t0.elapsed().as_secs_f64();
+        let mut bits = Vec::with_capacity(scenarios.len());
+        for (sc, out) in scenarios.iter().zip(&report.outcomes) {
+            let o = out.as_ref().map_err(|e| anyhow::anyhow!("{}: {e:#}", sc.name))?;
+            bits.push(o.best_score.to_bits());
+        }
+        Ok((wall, bits))
+    };
+    // No cache in either path: every round pays its evaluation, so the
+    // comparison isolates agent latency handling.
+    let (blocking_wall, blocking_bits) = timed(FleetRunner::new(1).without_cache().quiet())?;
+    println!("  blocking    : {blocking_wall:8.3}s  (inflight 1)");
+    let (pipelined_wall, pipelined_bits) = timed(
+        FleetRunner::new(1)
+            .without_cache()
+            .quiet()
+            .with_inflight(inflight),
+    )?;
+    println!("  pipelined   : {pipelined_wall:8.3}s  (inflight {inflight})");
+    let bit_identical = blocking_bits == pipelined_bits;
+    let speedup = blocking_wall / pipelined_wall.max(1e-9);
+    println!("  speedup     : {speedup:.2}x; bit-identical: {bit_identical}");
+
+    let mut j = Json::obj();
+    j.set("bench", Json::str("haqa bench agent-overlap"));
+    j.set("quick", Json::Bool(quick));
+    j.set("scenarios", Json::Num(scenarios.len() as f64));
+    j.set("rounds_budget", Json::Num(rounds as f64));
+    j.set("agent_latency_ms", Json::Num(latency_ms as f64));
+    j.set("workers", Json::Num(1.0));
+    j.set("inflight", Json::Num(inflight as f64));
+    let mut phases = Json::obj();
+    let phase = |wall: f64| {
+        let mut o = Json::obj();
+        o.set("wall_s", Json::Num(wall));
+        o.set(
+            "rounds_per_sec",
+            Json::Num((scenarios.len() * rounds) as f64 / wall.max(1e-9)),
+        );
+        o
+    };
+    phases.set("blocking", phase(blocking_wall));
+    phases.set("pipelined", phase(pipelined_wall));
+    j.set("phases", phases);
+    j.set("speedup", Json::Num(speedup));
+    j.set("bit_identical", Json::Bool(bit_identical));
+    std::fs::write(out_path, j.to_string_pretty())?;
+    println!("  report      : {out_path}");
+
+    anyhow::ensure!(bit_identical, "blocking and pipelined agent paths diverged");
+    anyhow::ensure!(
+        speedup > 1.15,
+        "pipelined fleet not measurably faster than blocking ({speedup:.2}x) — \
+         in-flight agent overlap is broken"
+    );
+    Ok(())
+}
+
+/// `haqa cache <subcommand>` — offline journal maintenance.
+fn cache_cmd(rest: Vec<String>) -> Result<()> {
+    use haqa::coordinator::CompactReport;
+
+    let (sub, rest) = match rest.split_first() {
+        Some((s, r)) => (s.as_str(), r.to_vec()),
+        None => anyhow::bail!("usage: haqa cache compact [--cache-dir DIR]"),
+    };
+    match sub {
+        "compact" => {
+            let a = Args::new(
+                "haqa cache compact",
+                "rewrite the eval-cache journal keeping only live entries",
+            )
+            .opt("cache-dir", "cache directory holding eval_cache.jsonl")
+            .parse(rest)?;
+            let dir = a
+                .get("cache-dir")
+                .map(|s| s.to_string())
+                .or_else(|| a.positional.first().cloned())
+                .ok_or_else(|| {
+                    anyhow::anyhow!("usage: haqa cache compact <dir> (or --cache-dir DIR)")
+                })?;
+            let r: CompactReport = EvalCache::compact(&dir)?;
+            println!(
+                "compacted {}/eval_cache.jsonl: {} -> {} records \
+                 ({} superseded duplicate(s), {} corrupt line(s) dropped), \
+                 {} -> {} bytes",
+                dir,
+                r.before_records,
+                r.after_records,
+                r.before_records - r.after_records,
+                r.dropped_corrupt,
+                r.before_bytes,
+                r.after_bytes
+            );
+            Ok(())
+        }
+        other => anyhow::bail!("unknown cache subcommand '{other}' (try `compact`)"),
+    }
 }
 
 /// The fixed scenario set `haqa bench` measures: simulator-only tracks
@@ -563,7 +723,7 @@ fn perf() -> Result<()> {
             o
         })
         .collect();
-    let mut agent = Agent::new(Box::new(SimulatedLlm::new(1).with_failure_rate(0.0)));
+    let mut agent = Agent::blocking(SimulatedLlm::new(1).with_failure_rate(0.0));
     let r = bench("agent round (prompt+policy+validate)", cfg, || {
         let ctx = TaskContext {
             kind: TaskKind::Finetune,

@@ -3,12 +3,12 @@
 //! baselines under the identical 10-round budget.
 
 use crate::agent::simulated::SimulatedLlm;
-use crate::agent::{Agent, TaskContext, TaskKind};
+use crate::agent::{Agent, LlmBackend, TaskContext, TaskKind};
 use crate::search::{Config, Space};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
-use super::{Observation, Optimizer};
+use super::{Observation, Optimizer, Proposal};
 
 pub struct HaqaOptimizer {
     pub agent: Agent,
@@ -16,6 +16,16 @@ pub struct HaqaOptimizer {
     pub hardware: Option<Json>,
     pub objective: Json,
     pub budget: usize,
+    /// Propagate backend errors instead of falling back to the default
+    /// configuration.  The §3.3 never-stall fallback is right for live
+    /// backends (a flaky HTTP endpoint must not kill a tuning run), but
+    /// wrong for `replay:` — there a missing transcript means the run
+    /// diverged from the recording and silently continuing with defaults
+    /// would defeat the point of replay.
+    pub strict_errors: bool,
+    /// Index into `agent.cost.per_query` already surfaced by
+    /// [`Optimizer::take_round_cost`].
+    cost_seen: usize,
 }
 
 impl HaqaOptimizer {
@@ -25,13 +35,23 @@ impl HaqaOptimizer {
     }
 
     pub fn with_seed(seed: u64) -> Self {
-        let backend = SimulatedLlm::new(seed);
+        HaqaOptimizer::with_agent(Agent::blocking(SimulatedLlm::new(seed)))
+    }
+
+    /// Drive any pipeline backend (HTTP, record/replay, simulated-slow…).
+    pub fn with_backend(backend: Box<dyn LlmBackend>) -> Self {
+        HaqaOptimizer::with_agent(Agent::new(backend))
+    }
+
+    fn with_agent(agent: Agent) -> Self {
         HaqaOptimizer {
-            agent: Agent::new(Box::new(backend)),
+            agent,
             kind: TaskKind::Finetune,
             hardware: None,
             objective: Json::obj(),
             budget: 10,
+            strict_errors: false,
+            cost_seen: 0,
         }
     }
 
@@ -49,6 +69,17 @@ impl HaqaOptimizer {
         self.objective = obj;
         self
     }
+
+    fn ctx<'a>(&self, space: &'a Space, history: &'a [Observation]) -> TaskContext<'a> {
+        TaskContext {
+            kind: self.kind,
+            space,
+            history,
+            rounds_left: self.budget.saturating_sub(history.len()),
+            hardware: self.hardware.clone(),
+            objective: self.objective.clone(),
+        }
+    }
 }
 
 impl Optimizer for HaqaOptimizer {
@@ -56,22 +87,70 @@ impl Optimizer for HaqaOptimizer {
         "haqa"
     }
 
-    fn propose(&mut self, space: &Space, history: &[Observation], _rng: &mut Rng) -> Config {
-        let ctx = TaskContext {
-            kind: self.kind,
-            space,
-            history,
-            rounds_left: self.budget.saturating_sub(history.len()),
-            hardware: self.hardware.clone(),
-            objective: self.objective.clone(),
-        };
-        match self.agent.propose(&ctx) {
-            Ok((cfg, _)) => cfg,
+    fn propose(&mut self, space: &Space, history: &[Observation], rng: &mut Rng) -> Config {
+        match self.propose_submit(space, history, rng) {
+            Proposal::Ready(cfg) => cfg,
+            Proposal::Pending => self
+                .propose_wait(space, history)
+                .unwrap_or_else(|_| space.default_config()),
+        }
+    }
+
+    fn propose_submit(
+        &mut self,
+        space: &Space,
+        history: &[Observation],
+        _rng: &mut Rng,
+    ) -> Proposal {
+        let ctx = self.ctx(space, history);
+        match self.agent.submit_propose(&ctx) {
+            Ok(()) => Proposal::Pending,
             Err(e) => {
                 // The workflow must not stall (paper §3.3); fall back to the
                 // defaults and surface the error in the task log.
                 eprintln!("haqa agent error: {e:#}");
-                space.default_config()
+                Proposal::Ready(space.default_config())
+            }
+        }
+    }
+
+    fn propose_poll(
+        &mut self,
+        space: &Space,
+        history: &[Observation],
+    ) -> anyhow::Result<Option<Config>> {
+        // Cheap-poll first: while the request is still in flight there is
+        // no need to rebuild the task context (which clones the objective
+        // and hardware JSON) — the fleet spins on this path.
+        match self.agent.completion_ready() {
+            Ok(false) => return Ok(None),
+            Ok(true) => {}
+            Err(e) if self.strict_errors => return Err(e),
+            Err(e) => {
+                eprintln!("haqa agent error: {e:#}");
+                return Ok(Some(space.default_config()));
+            }
+        }
+        let ctx = self.ctx(space, history);
+        match self.agent.poll_propose(&ctx) {
+            Ok(Some((cfg, _))) => Ok(Some(cfg)),
+            Ok(None) => Ok(None),
+            Err(e) if self.strict_errors => Err(e),
+            Err(e) => {
+                eprintln!("haqa agent error: {e:#}");
+                Ok(Some(space.default_config()))
+            }
+        }
+    }
+
+    fn propose_wait(&mut self, space: &Space, history: &[Observation]) -> anyhow::Result<Config> {
+        let ctx = self.ctx(space, history);
+        match self.agent.wait_propose(&ctx) {
+            Ok((cfg, _)) => Ok(cfg),
+            Err(e) if self.strict_errors => Err(e),
+            Err(e) => {
+                eprintln!("haqa agent error: {e:#}");
+                Ok(space.default_config())
             }
         }
     }
@@ -83,6 +162,32 @@ impl Optimizer for HaqaOptimizer {
         } else {
             Some(self.agent.cost.report())
         }
+    }
+
+    /// Aggregate the per-query cost lines accrued since the last call into
+    /// one per-round JSON entry for the task log.
+    fn take_round_cost(&mut self) -> Option<Json> {
+        let qs = &self.agent.cost.per_query[self.cost_seen.min(self.agent.cost.per_query.len())..];
+        if qs.is_empty() {
+            return None;
+        }
+        let mut o = Json::obj();
+        o.set("queries", Json::Num(qs.len() as f64));
+        o.set("retries", Json::Num((qs.len() - 1) as f64));
+        o.set(
+            "prompt_tokens",
+            Json::Num(qs.iter().map(|q| q.prompt_tokens).sum::<usize>() as f64),
+        );
+        o.set(
+            "completion_tokens",
+            Json::Num(qs.iter().map(|q| q.completion_tokens).sum::<usize>() as f64),
+        );
+        o.set(
+            "api_seconds",
+            Json::Num(qs.iter().map(|q| q.api_seconds).sum::<f64>()),
+        );
+        self.cost_seen = self.agent.cost.per_query.len();
+        Some(o)
     }
 }
 

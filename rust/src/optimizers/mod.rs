@@ -17,6 +17,7 @@ pub mod nsga2;
 pub mod random;
 
 use crate::search::{Config, Space};
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 /// One completed evaluation.
@@ -45,19 +46,138 @@ impl Observation {
     }
 }
 
+/// Outcome of [`Optimizer::propose_submit`]: synchronous optimizers answer
+/// immediately; agent-backed ones enqueue a backend request and resolve it
+/// through [`Optimizer::propose_poll`] / [`Optimizer::propose_wait`].
+#[derive(Debug)]
+pub enum Proposal {
+    Ready(Config),
+    Pending,
+}
+
 /// Round-based ask interface; the coordinator evaluates and appends to
 /// `history` between calls.
+///
+/// The split `propose_submit` → `propose_poll`/`propose_wait` form is what
+/// lets the fleet keep many scenarios' agent queries in flight while
+/// workers evaluate other scenarios' configs: a round can yield between
+/// "prompt built" and "completion consumed".  Synchronous optimizers get
+/// the split form for free (submit computes immediately); `propose` stays
+/// the one-call blocking composition and must produce identical results.
 pub trait Optimizer {
     fn name(&self) -> &str;
 
-    /// Propose the configuration for round `history.len()`.
+    /// Propose the configuration for round `history.len()` (blocking).
     fn propose(&mut self, space: &Space, history: &[Observation], rng: &mut Rng) -> Config;
+
+    /// Begin round `history.len()`'s proposal.  Agent-backed optimizers
+    /// submit the prompt and return [`Proposal::Pending`]; the default
+    /// computes synchronously.  `space` and `history` must be passed
+    /// unchanged to the matching poll/wait.
+    fn propose_submit(
+        &mut self,
+        space: &Space,
+        history: &[Observation],
+        rng: &mut Rng,
+    ) -> Proposal {
+        Proposal::Ready(self.propose(space, history, rng))
+    }
+
+    /// Non-blocking poll of a pending proposal (`Ok(None)` = still in
+    /// flight).  Only valid after `propose_submit` returned `Pending`.
+    fn propose_poll(
+        &mut self,
+        _space: &Space,
+        _history: &[Observation],
+    ) -> anyhow::Result<Option<Config>> {
+        anyhow::bail!("optimizer '{}' has no pending proposal to poll", self.name())
+    }
+
+    /// Block until the pending proposal resolves.  Only valid after
+    /// `propose_submit` returned `Pending`.
+    fn propose_wait(&mut self, _space: &Space, _history: &[Observation]) -> anyhow::Result<Config> {
+        anyhow::bail!("optimizer '{}' has no pending proposal to wait on", self.name())
+    }
 
     /// The Appendix-C cost line for agent-backed optimizers; baselines cost
     /// nothing and return `None`.  The coordinator threads this into
     /// `TrackOutcome::cost_report`.
     fn cost_report(&self) -> Option<String> {
         None
+    }
+
+    /// Per-round agent accounting (queries/retries/tokens/latency) accrued
+    /// since the last call — recorded into the task log so cost is
+    /// auditable per request, not just as the final summary string.
+    /// Baselines return `None`.
+    fn take_round_cost(&mut self) -> Option<Json> {
+        None
+    }
+}
+
+impl<T: Optimizer + ?Sized> Optimizer for &mut T {
+    fn name(&self) -> &str {
+        (**self).name()
+    }
+    fn propose(&mut self, space: &Space, history: &[Observation], rng: &mut Rng) -> Config {
+        (**self).propose(space, history, rng)
+    }
+    fn propose_submit(
+        &mut self,
+        space: &Space,
+        history: &[Observation],
+        rng: &mut Rng,
+    ) -> Proposal {
+        (**self).propose_submit(space, history, rng)
+    }
+    fn propose_poll(
+        &mut self,
+        space: &Space,
+        history: &[Observation],
+    ) -> anyhow::Result<Option<Config>> {
+        (**self).propose_poll(space, history)
+    }
+    fn propose_wait(&mut self, space: &Space, history: &[Observation]) -> anyhow::Result<Config> {
+        (**self).propose_wait(space, history)
+    }
+    fn cost_report(&self) -> Option<String> {
+        (**self).cost_report()
+    }
+    fn take_round_cost(&mut self) -> Option<Json> {
+        (**self).take_round_cost()
+    }
+}
+
+impl<T: Optimizer + ?Sized> Optimizer for Box<T> {
+    fn name(&self) -> &str {
+        (**self).name()
+    }
+    fn propose(&mut self, space: &Space, history: &[Observation], rng: &mut Rng) -> Config {
+        (**self).propose(space, history, rng)
+    }
+    fn propose_submit(
+        &mut self,
+        space: &Space,
+        history: &[Observation],
+        rng: &mut Rng,
+    ) -> Proposal {
+        (**self).propose_submit(space, history, rng)
+    }
+    fn propose_poll(
+        &mut self,
+        space: &Space,
+        history: &[Observation],
+    ) -> anyhow::Result<Option<Config>> {
+        (**self).propose_poll(space, history)
+    }
+    fn propose_wait(&mut self, space: &Space, history: &[Observation]) -> anyhow::Result<Config> {
+        (**self).propose_wait(space, history)
+    }
+    fn cost_report(&self) -> Option<String> {
+        (**self).cost_report()
+    }
+    fn take_round_cost(&mut self) -> Option<Json> {
+        (**self).take_round_cost()
     }
 }
 

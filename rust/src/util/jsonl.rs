@@ -1,0 +1,80 @@
+//! Append-only JSONL journal scanning — the one implementation of the
+//! hygiene rules documented in `docs/CACHE.md`, shared by the evaluation
+//! cache (load + compact) and the agent transcript journal:
+//!
+//! * one record per `\n`-terminated line;
+//! * blank/whitespace-only lines are ignored (append-only tail healing
+//!   writes them);
+//! * corrupt lines — bad UTF-8, unparseable JSON, or records the caller's
+//!   visitor rejects — are *skipped and counted*, never fatal;
+//! * a newline-less tail is a torn final write from a crashed writer: it
+//!   is skipped, counted, and reported so the caller can heal it by
+//!   **appending** a newline (never by truncating — a concurrent writer
+//!   may be mid-append).
+
+use super::json::{self, Json};
+
+/// What a scan observed besides the records it delivered.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct JsonlScan {
+    /// Corrupt/truncated records skipped (including a torn tail).
+    pub skipped: usize,
+    /// The bytes end mid-record (no terminating newline).
+    pub torn_tail: bool,
+}
+
+/// Walk every record, calling `visit(&json, raw_line)` for each line that
+/// parses as JSON.  The visitor returns whether the record was valid for
+/// its schema; `false` counts the line as skipped.
+pub fn scan(bytes: &[u8], mut visit: impl FnMut(&Json, &str) -> bool) -> JsonlScan {
+    let mut out = JsonlScan::default();
+    let mut pos = 0usize;
+    while pos < bytes.len() {
+        let Some(off) = bytes[pos..].iter().position(|&b| b == b'\n') else {
+            out.torn_tail = true;
+            out.skipped += 1;
+            break;
+        };
+        let end = pos + off;
+        let line = &bytes[pos..end];
+        if !line.iter().all(|b| b.is_ascii_whitespace()) {
+            let ok = std::str::from_utf8(line)
+                .ok()
+                .and_then(|l| json::parse(l).ok().map(|j| (j, l)))
+                .map(|(j, l)| visit(&j, l))
+                .unwrap_or(false);
+            if !ok {
+                out.skipped += 1;
+            }
+        }
+        pos = end + 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scans_skipping_blank_corrupt_and_torn_lines() {
+        let bytes = b"{\"a\":1}\n\n   \nnot json\n{\"a\":2}\n{\"a\":3";
+        let mut seen = Vec::new();
+        let s = scan(bytes, |j, raw| {
+            seen.push((j.req_f64("a").unwrap(), raw.to_string()));
+            true
+        });
+        assert_eq!(seen.len(), 2, "{seen:?}");
+        assert_eq!(seen[0].1, "{\"a\":1}");
+        assert_eq!(s.skipped, 2, "corrupt line + torn tail");
+        assert!(s.torn_tail);
+    }
+
+    #[test]
+    fn visitor_rejection_counts_as_skipped() {
+        let bytes = b"{\"a\":1}\n{\"b\":1}\n";
+        let s = scan(bytes, |j, _| j.get("a").is_some());
+        assert_eq!(s.skipped, 1);
+        assert!(!s.torn_tail);
+    }
+}

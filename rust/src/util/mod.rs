@@ -11,10 +11,31 @@ pub mod bench;
 pub mod cli;
 pub mod hash;
 pub mod json;
+pub mod jsonl;
 pub mod proptest;
 pub mod rng;
 pub mod stats;
 pub mod table;
+
+/// Poison-tolerant mutex lock, shared by every module that holds state
+/// behind a `Mutex` (agent backends, caches, fleet slots): a worker that
+/// panicked mid-operation cannot corrupt single-statement updates, so the
+/// guard is recovered instead of propagating poison.
+pub fn lock<T>(m: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Render a caught panic payload for error reporting (fleet worker
+/// isolation, backend dispatcher threads).
+pub fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".into()
+    }
+}
 
 /// Format a float with engineering-friendly precision (tables/logs).
 pub fn fmt_sig(x: f64, digits: usize) -> String {

@@ -1,0 +1,239 @@
+//! Integration tests for the async agent pipeline: overlapped in-flight
+//! fleet runs stay bit-identical to serial, recorded transcripts replay
+//! offline, and per-round agent cost lands in the task logs.
+//!
+//! Everything here runs on the simulator tracks (kernel / bit-width), so
+//! no artifacts are needed and the suite stays offline.
+
+use haqa::coordinator::scenario::Track;
+use haqa::coordinator::{FleetRunner, Scenario, Workflow};
+use haqa::util::json;
+
+fn kernel_scenarios(backend: &str, tag: &str) -> Vec<Scenario> {
+    let mut v: Vec<Scenario> = ["matmul:64", "softmax:128", "rmsnorm:64"]
+        .iter()
+        .enumerate()
+        .map(|(i, kernel)| Scenario {
+            name: format!("agent_{tag}_{}", kernel.replace(':', "_")),
+            track: Track::Kernel,
+            kernel: (*kernel).into(),
+            optimizer: if i == 1 { "random".into() } else { "haqa".into() },
+            budget: 4,
+            seed: 5 + i as u64,
+            backend: backend.into(),
+            ..Scenario::default()
+        })
+        .collect();
+    v.push(Scenario {
+        name: format!("agent_{tag}_bw"),
+        track: Track::Bitwidth,
+        model: "llama2-13b".into(),
+        memory_limit_gb: 12.0,
+        backend: backend.into(),
+        ..Scenario::default()
+    });
+    v
+}
+
+fn score_bits(report: &haqa::coordinator::FleetReport) -> Vec<u64> {
+    report
+        .outcomes
+        .iter()
+        .map(|o| o.as_ref().expect("scenario failed").best_score.to_bits())
+        .collect()
+}
+
+/// The tentpole guarantee: a fleet that overlaps many in-flight agent
+/// queries (with real request latency) produces exactly the scores of the
+/// serial blocking path — and of the plain no-latency backend.
+#[test]
+fn pipelined_fleet_is_bit_identical_to_serial() {
+    // 2 ms of simulated API latency: enough that requests are genuinely
+    // in flight when polled, cheap enough for CI.
+    let slow = kernel_scenarios("simulated-slow:2", "bitid");
+    let serial = FleetRunner::new(1).quiet().without_cache().run(&slow);
+    let pipelined = FleetRunner::new(2)
+        .with_inflight(4)
+        .quiet()
+        .without_cache()
+        .run(&slow);
+    assert_eq!(
+        score_bits(&serial),
+        score_bits(&pipelined),
+        "overlapped in-flight agent queries must not change results"
+    );
+    // The latency wrapper itself must be transparent: the same scenarios
+    // on the instant simulated backend give the same scores.
+    let instant = kernel_scenarios("simulated", "bitid");
+    let plain = FleetRunner::new(2).quiet().without_cache().run(&instant);
+    assert_eq!(score_bits(&serial), score_bits(&plain));
+}
+
+/// With one worker, overlapping agent queries across scenarios must beat
+/// the blocking path by construction: the blocking wall is at least the
+/// sum of every request's latency, the pipelined wall only the slowest
+/// chain's.
+#[test]
+fn inflight_overlap_reduces_wall_clock() {
+    let scenarios: Vec<Scenario> = (0..4)
+        .map(|i| Scenario {
+            name: format!("agent_overlap_wall_{i}"),
+            track: Track::Kernel,
+            kernel: "matmul:64".into(),
+            optimizer: "haqa".into(),
+            budget: 3,
+            seed: 40 + i,
+            backend: "simulated-slow:20".into(),
+            ..Scenario::default()
+        })
+        .collect();
+    let timed = |runner: FleetRunner| {
+        let t0 = std::time::Instant::now();
+        let report = runner.run(&scenarios);
+        (t0.elapsed(), score_bits(&report))
+    };
+    let (blocking, blocking_bits) = timed(FleetRunner::new(1).quiet().without_cache());
+    let (pipelined, pipelined_bits) =
+        timed(FleetRunner::new(1).with_inflight(4).quiet().without_cache());
+    assert_eq!(blocking_bits, pipelined_bits);
+    // Blocking: ≥ 4 scenarios × 3 rounds × 20 ms = 240 ms serialized.
+    // Pipelined: ~3 rounds × 20 ms + evaluation time.  Generous margin so
+    // loaded CI runners never flake.
+    assert!(
+        pipelined < blocking.mul_f64(0.8),
+        "overlap produced no speedup: blocking {blocking:?} vs pipelined {pipelined:?}"
+    );
+}
+
+/// A session recorded through `record:<path>` replays bit-identically —
+/// scores AND cost accounting — with no live backend.
+#[test]
+fn recorded_agent_run_replays_bit_identically() {
+    let dir = std::env::temp_dir().join(format!("haqa_agent_replay_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let journal = dir.join("transcripts.jsonl");
+    let sc = |backend: String| Scenario {
+        name: "agent_replay_kernel".into(),
+        track: Track::Kernel,
+        kernel: "silu:64".into(),
+        optimizer: "haqa".into(),
+        budget: 5,
+        seed: 17,
+        backend,
+        ..Scenario::default()
+    };
+    let wf = Workflow::simulated().quiet();
+    let live = wf
+        .run(&sc(format!("record:{}", journal.display())))
+        .expect("recorded run");
+    assert!(journal.exists(), "transcript journal written");
+
+    let replayed = wf
+        .run(&sc(format!("replay:{}", journal.display())))
+        .expect("replayed run");
+    assert_eq!(live.history.len(), replayed.history.len());
+    for (a, b) in live.history.iter().zip(&replayed.history) {
+        assert_eq!(a.score.to_bits(), b.score.to_bits(), "scores replay bit-exactly");
+        assert_eq!(a.feedback, b.feedback);
+    }
+    assert_eq!(
+        live.cost_report, replayed.cost_report,
+        "token/latency accounting replays bit-exactly"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A replayed run that diverges from its recording must fail loudly: the
+/// never-stall default-config fallback is for live backends only —
+/// degrading a replay to defaults would silently report wrong results.
+#[test]
+fn diverged_replay_is_a_hard_error_not_a_silent_default() {
+    let dir = std::env::temp_dir().join(format!("haqa_agent_diverge_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let journal = dir.join("transcripts.jsonl");
+    let sc = |budget: usize, backend: String| Scenario {
+        name: "agent_diverge_kernel".into(),
+        track: Track::Kernel,
+        kernel: "softmax:64".into(),
+        optimizer: "haqa".into(),
+        budget,
+        seed: 31,
+        backend,
+        ..Scenario::default()
+    };
+    let wf = Workflow::simulated().quiet();
+    wf.run(&sc(3, format!("record:{}", journal.display())))
+        .expect("recorded run");
+    // Two extra rounds whose prompts were never recorded: the replay must
+    // surface the divergence as an error, not default configs.
+    let err = wf
+        .run(&sc(5, format!("replay:{}", journal.display())))
+        .expect_err("diverged replay must fail");
+    assert!(
+        format!("{err:#}").contains("no recorded completion"),
+        "{err:#}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The §3.3 audit trail: every haqa round in the task log carries its own
+/// prompt/completion token counts and API latency, not just the final
+/// Appendix-C summary line.
+#[test]
+fn task_log_records_per_round_agent_cost() {
+    let sc = Scenario {
+        name: "agent_roundcost_kernel".into(),
+        track: Track::Kernel,
+        kernel: "rope:64".into(),
+        optimizer: "haqa".into(),
+        budget: 3,
+        seed: 23,
+        ..Scenario::default()
+    };
+    let out = Workflow::simulated().run(&sc).expect("kernel run");
+    let path = out.log_path.expect("task log written");
+    let log = json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    let rounds = log.req_arr("rounds").unwrap();
+    assert_eq!(rounds.len(), 3);
+    for r in rounds {
+        let cost = r.get("cost").expect("per-round cost entry");
+        assert!(cost.req_f64("queries").unwrap() >= 1.0);
+        assert!(cost.req_f64("prompt_tokens").unwrap() > 0.0);
+        assert!(cost.req_f64("completion_tokens").unwrap() > 0.0);
+        assert!(cost.req_f64("api_seconds").unwrap() > 0.0);
+    }
+    // Baselines stay cost-free in their logs.
+    let sc = Scenario {
+        name: "agent_roundcost_baseline".into(),
+        optimizer: "random".into(),
+        track: Track::Kernel,
+        kernel: "rope:64".into(),
+        budget: 2,
+        seed: 23,
+        ..Scenario::default()
+    };
+    let out = Workflow::simulated().run(&sc).expect("baseline run");
+    let log = json::parse(&std::fs::read_to_string(out.log_path.unwrap()).unwrap()).unwrap();
+    for r in log.req_arr("rounds").unwrap() {
+        assert!(r.get("cost").is_none(), "baselines have no agent cost");
+    }
+}
+
+/// A scenario with an unknown backend spec fails loudly (not by silently
+/// falling back to the simulated policy).
+#[test]
+fn unknown_backend_spec_is_a_hard_error() {
+    let sc = Scenario {
+        name: "agent_bad_backend".into(),
+        track: Track::Kernel,
+        kernel: "matmul:64".into(),
+        optimizer: "haqa".into(),
+        budget: 2,
+        backend: "telepathy".into(),
+        ..Scenario::default()
+    };
+    let err = Workflow::simulated().run(&sc).unwrap_err();
+    assert!(format!("{err:#}").contains("telepathy"), "{err:#}");
+}

@@ -94,7 +94,7 @@ fn prop_agent_always_returns_valid_config_despite_failures() {
     check(3, 25, &I64Range(0, 10_000), |seed| {
         let space = spaces::resnet_qat();
         let backend = SimulatedLlm::new(*seed as u64).with_failure_rate(0.8);
-        let mut agent = Agent::new(Box::new(backend));
+        let mut agent = Agent::blocking(backend);
         let mut history = Vec::new();
         for round in 0..4 {
             let ctx = TaskContext {
