@@ -7,7 +7,8 @@
 //!   a deterministic rule-based ReAct policy implementing the tuning
 //!   heuristics visible in the paper's Appendix E transcripts (substitution
 //!   table in DESIGN.md §2).
-//! * [`http`] — the real OpenAI-style HTTP backend (feature `http-agent`).
+//! * `http` — the real OpenAI-style HTTP backend (module and link exist
+//!   only under the `http-agent` feature).
 //! * [`transcript`] — record/replay journaling so live sessions replay
 //!   offline and bit-identically (see `docs/AGENT.md`).
 //! * [`prompt`] — static/dynamic prompt construction (§3.1, Fig. 2/3).

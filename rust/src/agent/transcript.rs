@@ -17,7 +17,7 @@
 //! and a torn tail healed by appending a newline (never by truncating).
 
 use std::collections::{HashMap, VecDeque};
-use std::fs::{File, OpenOptions};
+use std::fs::File;
 use std::io::Write;
 use std::path::{Path, PathBuf};
 use std::sync::Mutex;
@@ -122,14 +122,9 @@ impl RecordingBackend {
                 std::fs::create_dir_all(dir)?;
             }
         }
-        let mut file = OpenOptions::new().create(true).append(true).open(&path)?;
-        // Heal a torn tail by appending (never truncating) — same
-        // concurrent-writer hygiene as the eval-cache journal.
-        if let Ok(bytes) = std::fs::read(&path) {
-            if bytes.last().is_some_and(|&b| b != b'\n') {
-                let _ = file.write_all(b"\n");
-            }
-        }
+        // Torn tails are healed by appending (never truncating) — the
+        // shared journal hygiene implementation.
+        let file = jsonl::open_append_healed(&path)?;
         Ok(RecordingBackend {
             inner,
             rec: Mutex::new(Recorder {

@@ -34,7 +34,7 @@
 
 use std::collections::hash_map::Entry;
 use std::collections::HashMap;
-use std::fs::{File, OpenOptions};
+use std::fs::File;
 use std::io::Write;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -64,15 +64,20 @@ pub struct CompactReport {
     pub after_records: usize,
     /// Corrupt/truncated lines dropped.
     pub dropped_corrupt: usize,
+    /// Journal size before the rewrite, bytes.
     pub before_bytes: u64,
+    /// Journal size after the rewrite, bytes.
     pub after_bytes: u64,
 }
 
 /// Aggregate cache counters.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct CacheStats {
+    /// Lookups served from the cache.
     pub hits: usize,
+    /// Lookups that had to evaluate (first sight of a key).
     pub misses: usize,
+    /// Distinct keys currently held in the memory tier.
     pub entries: usize,
 }
 
@@ -137,20 +142,13 @@ impl EvalCache {
         std::fs::create_dir_all(dir)?;
         let path = dir.join(JOURNAL_FILE);
         let cache = EvalCache::new();
-        let mut terminate_tail = false;
         if path.exists() {
-            terminate_tail = cache.load_journal(&path)?;
+            cache.load_journal(&path)?;
         }
-        let mut file = OpenOptions::new().create(true).append(true).open(&path)?;
-        if terminate_tail {
-            // Heal a torn tail by *appending* a newline, never by
-            // truncating: a concurrent writer sharing this journal may be
-            // mid-append, and cutting the file would destroy its record.
-            // If the torn view was just an in-flight append, the extra
-            // newline lands after it as an empty line, which the loader
-            // ignores.
-            let _ = file.write_all(b"\n");
-        }
+        // Torn tails are healed by *appending* a newline, never truncating
+        // — see `jsonl::open_append_healed` (the one implementation shared
+        // with the transcript journals).
+        let file = jsonl::open_append_healed(&path)?;
         // Rebuild the Arc with the journal attached (no other handles can
         // exist yet — the cache was created three lines up).
         let inner = Arc::try_unwrap(cache.inner)
@@ -249,6 +247,7 @@ impl EvalCache {
             .collect())
     }
 
+    /// Snapshot of the hit/miss counters and the entry count.
     pub fn stats(&self) -> CacheStats {
         CacheStats {
             hits: self.inner.hits.load(Ordering::Relaxed),
@@ -257,10 +256,12 @@ impl EvalCache {
         }
     }
 
+    /// Distinct keys currently held in the memory tier.
     pub fn len(&self) -> usize {
         self.inner.shards.iter().map(|s| lock(s).len()).sum()
     }
 
+    /// Whether the memory tier holds no entries.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -347,9 +348,8 @@ impl EvalCache {
 
     /// Load every valid journal record.  Corrupt lines (and a torn,
     /// newline-less tail) are skipped with a warning — never an error, the
-    /// cache just recomputes what was lost.  Returns whether the file ends
-    /// mid-record, so the caller can terminate the tail before appending.
-    fn load_journal(&self, path: &Path) -> Result<bool> {
+    /// cache just recomputes what was lost.
+    fn load_journal(&self, path: &Path) -> Result<()> {
         let bytes = std::fs::read(path)?;
         let scan = jsonl::scan(&bytes, |j, _| match decode_record(j) {
             Some((key, e)) => {
@@ -365,14 +365,16 @@ impl EvalCache {
                 path.display()
             );
         }
-        Ok(scan.torn_tail)
+        Ok(())
     }
 }
 
 /// One journal line.  `score`/`extra` carry the authoritative f64 bit
 /// patterns in hex (`bits`, `extra`) so cached results stay bit-identical
-/// across processes; the plain `score` number is informational.
-fn encode_record(key: u128, e: &Evaluation) -> String {
+/// across processes; the plain `score` number is informational.  Shared
+/// with the device-transcript journal ([`super::device`]), which records
+/// measurements in exactly this format.
+pub(crate) fn encode_record(key: u128, e: &Evaluation) -> String {
     let mut o = Json::obj();
     o.set("key", Json::str(hash::hex128(key)));
     o.set(
@@ -401,7 +403,9 @@ fn encode_record(key: u128, e: &Evaluation) -> String {
     line
 }
 
-fn decode_record(j: &Json) -> Option<(u128, Evaluation)> {
+/// Parse one journal line back into its key and evaluation (`None` for
+/// records that do not match the schema).
+pub(crate) fn decode_record(j: &Json) -> Option<(u128, Evaluation)> {
     let key = hash::parse_hex128(j.get("key")?.as_str()?)?;
     let bits = u64::from_str_radix(j.get("bits")?.as_str()?, 16).ok()?;
     let extra = match j.get("extra") {

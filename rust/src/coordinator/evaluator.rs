@@ -106,6 +106,16 @@ impl<T: Evaluator + ?Sized> Evaluator for &T {
 /// Parse a `kernel[:batch]` spec.  A missing `:batch` falls back to the
 /// documented default of 64; a *malformed* batch is a hard error — the
 /// seed's silent `unwrap_or(64)` turned typos into wrong experiments.
+///
+/// ```
+/// use haqa::coordinator::evaluator::parse_kernel_spec;
+/// use haqa::hardware::KernelKind;
+///
+/// let (kernel, batch) = parse_kernel_spec("softmax:128").unwrap();
+/// assert_eq!((kernel, batch), (KernelKind::Softmax, 128));
+/// assert_eq!(parse_kernel_spec("matmul").unwrap().1, 64); // documented default
+/// assert!(parse_kernel_spec("matmul:banana").is_err());    // typos are loud
+/// ```
 pub fn parse_kernel_spec(spec: &str) -> Result<(KernelKind, usize)> {
     let (kname, kbatch) = match spec.split_once(':') {
         Some((k, b)) => (k, Some(b)),
@@ -123,6 +133,30 @@ pub fn parse_kernel_spec(spec: &str) -> Result<(KernelKind, usize)> {
     };
     ensure!(batch >= 1, "kernel batch must be >= 1 in spec '{spec}'");
     Ok((kernel, batch))
+}
+
+/// One kernel measurement rendered as an [`Evaluation`] — the single
+/// implementation shared by the in-process [`KernelEvaluator`] and the
+/// device-server stub ([`super::device::DeviceServer`]), so the simulated
+/// and over-the-wire paths are bit-identical by construction (same float
+/// operations, same feedback formatting).
+pub(crate) fn kernel_evaluation(model: &LatencyModel, noise_seed: u64, cfg: &Config) -> Evaluation {
+    let lat = measure_with(model, noise_seed, cfg);
+    Evaluation {
+        score: -lat,
+        extra: Vec::new(),
+        feedback: format!("{{\"latency_us\": {lat:.3}}}"),
+    }
+}
+
+/// The agent's task-objective block for a kernel workload — shared by the
+/// in-process and device-backed evaluators so prompts (and therefore the
+/// agent's proposals) are identical whichever measurement path runs.
+pub(crate) fn kernel_objective(w: &Workload) -> Json {
+    let mut o = Json::obj();
+    o.set("kernel", Json::Str(w.kernel.label().to_lowercase()));
+    o.set("size", Json::Str(w.size_label()));
+    o
 }
 
 // ---- fine-tuning track (Tables 1/2) ----------------------------------------
@@ -253,6 +287,8 @@ pub struct KernelEvaluator {
 }
 
 impl KernelEvaluator {
+    /// Build from a kernel-track scenario: parse the `kernel:batch` spec,
+    /// resolve the device profile, and calibrate the latency model once.
     pub fn from_scenario(sc: &Scenario) -> Result<KernelEvaluator> {
         let (kernel, batch) = parse_kernel_spec(&sc.kernel)?;
         let profile = sc.device_profile();
@@ -265,14 +301,12 @@ impl KernelEvaluator {
         })
     }
 
+    /// The agent's task-objective block (kernel + size).
     pub fn objective(&self) -> Json {
-        let w = self.workload();
-        let mut o = Json::obj();
-        o.set("kernel", Json::Str(w.kernel.label().to_lowercase()));
-        o.set("size", Json::Str(w.size_label()));
-        o
+        kernel_objective(&self.workload())
     }
 
+    /// The workload this evaluator measures.
     pub fn workload(&self) -> Workload {
         self.model.workload()
     }
@@ -298,12 +332,7 @@ impl Evaluator for KernelEvaluator {
     }
 
     fn evaluate(&self, cfg: &Config) -> Result<Evaluation> {
-        let lat = measure_with(&self.model, self.noise_seed, cfg);
-        Ok(Evaluation {
-            score: -lat,
-            extra: Vec::new(),
-            feedback: format!("{{\"latency_us\": {lat:.3}}}"),
-        })
+        Ok(kernel_evaluation(&self.model, self.noise_seed, cfg))
     }
 
     /// Batched measurement: the model is already built, so a slice of
@@ -311,14 +340,7 @@ impl Evaluator for KernelEvaluator {
     fn evaluate_batch(&self, cfgs: &[Config]) -> Result<Vec<Evaluation>> {
         Ok(cfgs
             .iter()
-            .map(|cfg| {
-                let lat = measure_with(&self.model, self.noise_seed, cfg);
-                Evaluation {
-                    score: -lat,
-                    extra: Vec::new(),
-                    feedback: format!("{{\"latency_us\": {lat:.3}}}"),
-                }
-            })
+            .map(|cfg| kernel_evaluation(&self.model, self.noise_seed, cfg))
             .collect())
     }
 }
@@ -334,6 +356,7 @@ pub struct BitwidthEvaluator {
 }
 
 impl BitwidthEvaluator {
+    /// Build from a bit-width-track scenario (model, device, memory cap).
     pub fn from_scenario(sc: &Scenario) -> Result<BitwidthEvaluator> {
         Ok(BitwidthEvaluator {
             model: model_by_name(&sc.model)?,
@@ -343,6 +366,8 @@ impl BitwidthEvaluator {
         })
     }
 
+    /// The agent's task-objective block: model, memory limit, and the
+    /// per-scheme footprint table the paper's prompt embeds.
     pub fn objective(&self) -> Json {
         let mut o = Json::obj();
         o.set("model", Json::Str(self.model.name.clone()));

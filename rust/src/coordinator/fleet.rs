@@ -54,13 +54,17 @@ use super::cache::{CacheStats, EvalCache};
 use super::scenario::{Scenario, Track};
 use super::workflow::{SessionStatus, TrackOutcome, TrackSession, Workflow};
 
+/// Worker-thread count when neither the CLI nor `HAQA_WORKERS` says.
 pub const DEFAULT_WORKERS: usize = 4;
 
 /// Upper bound on per-worker overlapped sessions: beyond this the polling
 /// loop and per-request dispatcher threads cost more than the overlap wins.
 pub const MAX_INFLIGHT: usize = 64;
 
+/// The parallel scenario-fleet runner (see the module docs for the
+/// guarantees: bit-identical to serial, family-sharded, cache-shared).
 pub struct FleetRunner {
+    /// Worker threads the batch runs across.
     pub workers: usize,
     /// Scenarios each worker keeps in flight concurrently (1 = blocking).
     pub inflight: usize,
@@ -73,6 +77,7 @@ pub struct FleetRunner {
 
 /// Results of a fleet run; `outcomes[i]` corresponds to `scenarios[i]`.
 pub struct FleetReport {
+    /// Per-scenario outcomes, in input order.
     pub outcomes: Vec<Result<TrackOutcome>>,
     /// Fleet-wide cache counters (None when caching was disabled).
     pub cache: Option<CacheStats>,
@@ -89,6 +94,8 @@ enum Started<'s> {
 }
 
 impl FleetRunner {
+    /// A runner over `workers` threads (≥ 1) with a fresh in-memory cache,
+    /// blocking agent calls (inflight 1), and task logging on.
     pub fn new(workers: usize) -> FleetRunner {
         FleetRunner {
             workers: workers.max(1),

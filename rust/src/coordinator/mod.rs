@@ -6,6 +6,9 @@
 //! * [`scenario`] — launcher input: track, model, device, budget, seeds.
 //! * [`evaluator`] — the `Evaluator` trait + the three track backends
 //!   (fine-tune / kernel / bit-width), with batched evaluation.
+//! * [`device`] — device-backend evaluators: out-of-process measurement
+//!   over a JSONL/TCP protocol, the in-process `DeviceServer` stub, and
+//!   record/replay measurement transcripts.
 //! * [`cache`] — deterministic content-addressed evaluation cache:
 //!   lock-striped in memory, optional persistent journal tier.
 //! * [`fleet`] — scoped-thread scenario fleet, family-sharded work queue,
@@ -14,8 +17,17 @@
 //! * [`workflow`] — the generic round loop as a resumable
 //!   [`workflow::TrackSession`] state machine, plus the joint pipeline.
 //! * [`tasklog`] — per-task JSON logs (§3.3) with per-round agent cost.
+//!
+//! `docs/ARCHITECTURE.md` walks one request through these modules end to
+//! end; `docs/EVALUATORS.md` specifies the evaluator contract and the
+//! device wire protocol.
+
+// Every public item in the coordinator tree is part of the teachable
+// surface — an undocumented export fails `cargo doc` in CI.
+#![warn(missing_docs)]
 
 pub mod cache;
+pub mod device;
 pub mod evaluator;
 pub mod fleet;
 pub mod scenario;
@@ -23,6 +35,7 @@ pub mod tasklog;
 pub mod workflow;
 
 pub use cache::{CacheStats, CompactReport, EvalCache};
+pub use device::{DeviceEvaluator, DeviceServer, EvaluatorSpec};
 pub use evaluator::{Evaluation, Evaluator};
 pub use fleet::{FleetReport, FleetRunner};
 pub use scenario::Scenario;

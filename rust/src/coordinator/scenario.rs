@@ -9,16 +9,23 @@ use anyhow::{bail, Result};
 use crate::quant::QatPrecision;
 use crate::util::json::Json;
 
+/// Which evaluation track a scenario runs (paper §4's experiment axes).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Track {
+    /// QAT hyperparameter tuning on the CNN models (Table 1).
     FinetuneCnn,
+    /// QLoRA hyperparameter tuning on the LM base (Table 2).
     FinetuneLm,
+    /// Kernel execution-config tuning on the hardware model (Table 3).
     Kernel,
+    /// Deployment bit-width selection under constraints (Table 5 / §4.4).
     Bitwidth,
+    /// The chained fine-tune → kernel → bit-width pipeline (Fig. 1b).
     Joint,
 }
 
 impl Track {
+    /// Parse a scenario-file `task` value; unknown names are a hard error.
     pub fn parse(s: &str) -> Result<Track> {
         Ok(match s {
             "finetune_cnn" | "cnn" => Track::FinetuneCnn,
@@ -31,9 +38,12 @@ impl Track {
     }
 }
 
+/// One launcher input: everything a workflow run is parameterized by.
 #[derive(Debug, Clone)]
 pub struct Scenario {
+    /// Human-readable label (task-log prefix; never part of cache keys).
     pub name: String,
+    /// Which evaluation track to run.
     pub track: Track,
     /// `cnn_s|cnn_m|cnn_l` for CNN; base-seed tag for the LM.
     pub model: String,
@@ -41,16 +51,25 @@ pub struct Scenario {
     pub precision: QatPrecision,
     /// Deployment bit-width for the LM base (4/8/16).
     pub bits: f32,
+    /// Proposal source: `haqa` (the agent) or a baseline optimizer name
+    /// (see [`crate::optimizers::by_name`]).
     pub optimizer: String,
+    /// Tuning-round budget (single-decision tracks clamp it to 1).
     pub budget: usize,
+    /// Seed for every per-scenario RNG stream.
     pub seed: u64,
+    /// Hardware platform name, resolved through the
+    /// [`crate::hardware::preset`] registry (kernel/bit-width tracks).
     pub device: String,
     /// Kernel-tuning target, e.g. "matmul:64".
     pub kernel: String,
+    /// CNN-track training steps per search-space epoch.
     pub steps_per_epoch: usize,
+    /// LM-track fraction of the paper's `max_steps`.
     pub step_scale: f64,
     /// Full-parameter pretraining steps for the LM base (disk-cached).
     pub pretrain_steps: usize,
+    /// Deployment memory budget for bit-width selection (GB).
     pub memory_limit_gb: f64,
     /// Agent backend spec for `optimizer: "haqa"` — see
     /// [`crate::agent::backend_from_spec`]: `simulated` (default),
@@ -59,6 +78,17 @@ pub struct Scenario {
     /// evaluation cache scope: the backend changes who proposes, not what
     /// an evaluation returns.
     pub backend: String,
+    /// Evaluator backend spec — see
+    /// [`EvaluatorSpec`](super::device::EvaluatorSpec): `simulated`
+    /// (default, the in-process evaluators), `device:<profile-name>` (the
+    /// in-process device-measurement server on a named
+    /// [`crate::hardware::preset`] platform), `remote://host:port` (an
+    /// external measurement server), or `record:`/`replay:` transcript
+    /// wrappers.  Unlike [`Scenario::backend`], a non-simulated evaluator
+    /// **is** folded into the evaluation-cache scope: it changes where a
+    /// measurement comes from, so results from different devices must
+    /// never collide under one key.
+    pub evaluator: String,
 }
 
 impl Default for Scenario {
@@ -79,11 +109,15 @@ impl Default for Scenario {
             pretrain_steps: 400,
             memory_limit_gb: 10.0,
             backend: "simulated".into(),
+            evaluator: "simulated".into(),
         }
     }
 }
 
 impl Scenario {
+    /// Build a scenario from a parsed JSON object.  Unknown keys are
+    /// ignored (see [`Scenario::load_many`] for the wrapper-shape checks);
+    /// known keys with malformed values are hard errors.
     pub fn from_json(j: &Json) -> Result<Scenario> {
         let mut s = Scenario::default();
         if let Some(v) = j.get("name").and_then(|v| v.as_str()) {
@@ -131,9 +165,13 @@ impl Scenario {
         if let Some(v) = j.get("backend").and_then(|v| v.as_str()) {
             s.backend = v.to_string();
         }
+        if let Some(v) = j.get("evaluator").and_then(|v| v.as_str()) {
+            s.evaluator = v.to_string();
+        }
         Ok(s)
     }
 
+    /// Load a single scenario from a JSON file.
     pub fn load(path: &str) -> Result<Scenario> {
         let text = std::fs::read_to_string(path)?;
         let j = crate::util::json::parse(&text)
@@ -150,7 +188,7 @@ impl Scenario {
         const KNOWN_KEYS: &[&str] = &[
             "name", "task", "model", "precision", "bits", "optimizer", "budget",
             "seed", "device", "kernel", "steps_per_epoch", "step_scale",
-            "pretrain_steps", "memory_limit_gb", "backend",
+            "pretrain_steps", "memory_limit_gb", "backend", "evaluator",
         ];
         let text = std::fs::read_to_string(path)?;
         let j = crate::util::json::parse(&text)
@@ -207,15 +245,33 @@ impl Scenario {
         }
     }
 
+    /// Resolve the `device` field through the [`crate::hardware::preset`]
+    /// registry.  Unknown names keep the historical fall-back to the A6000
+    /// (the `device:` *evaluator* spec is the hard-error path — see
+    /// [`Scenario::platform_profile`]).
     pub fn device_profile(&self) -> crate::hardware::DeviceProfile {
-        match self.device.as_str() {
-            "adreno740" | "mobile" => crate::hardware::DeviceProfile::adreno740(),
-            "cpu" => crate::hardware::DeviceProfile::host_cpu(),
-            _ => crate::hardware::DeviceProfile::a6000(),
+        crate::hardware::preset(&self.device)
+            .unwrap_or_else(crate::hardware::DeviceProfile::a6000)
+    }
+
+    /// The hardware platform this scenario measures on *and* prompts the
+    /// agent with: the `device:<profile-name>` preset when the evaluator
+    /// spec names one (so a `device:` scenario is self-contained — the
+    /// measured platform and the Fig. 2a prompt block can never diverge),
+    /// else [`Scenario::device_profile`].  Malformed evaluator specs and
+    /// unknown preset names are hard errors.
+    pub fn platform_profile(&self) -> Result<crate::hardware::DeviceProfile> {
+        let spec = super::device::EvaluatorSpec::parse(&self.evaluator)?;
+        match spec.platform_preset() {
+            Some(name) => crate::hardware::preset(name).ok_or_else(|| {
+                anyhow::anyhow!("unknown device profile '{name}' in evaluator spec")
+            }),
+            None => Ok(self.device_profile()),
         }
     }
 }
 
+/// Parse a `precision` scenario value (`w8a8 | w4a4 | w2a2`).
 pub fn parse_precision(s: &str) -> Result<QatPrecision> {
     Ok(match s.to_ascii_lowercase().as_str() {
         "w8a8" => QatPrecision::W8A8,
@@ -278,6 +334,35 @@ mod tests {
         };
         assert_ne!(cnn.family(), lm.family(), "artifact sets split");
         assert_ne!(cnn.family(), kernel_a.family());
+    }
+
+    #[test]
+    fn evaluator_spec_parses_and_defaults() {
+        let j = json::parse(
+            r#"{"task": "kernel", "device": "mobile-soc",
+                "evaluator": "device:server-gpu"}"#,
+        )
+        .unwrap();
+        let s = Scenario::from_json(&j).unwrap();
+        assert_eq!(s.evaluator, "device:server-gpu");
+        // The evaluator's platform wins over the `device` field…
+        assert_eq!(s.platform_profile().unwrap().name, "NVIDIA A6000");
+        // …while a simulated evaluator falls back to `device`.
+        let s = Scenario {
+            device: "mobile-soc".into(),
+            ..Scenario::default()
+        };
+        assert_eq!(s.evaluator, "simulated");
+        assert_eq!(
+            s.platform_profile().unwrap().name,
+            "Adreno 740 (Snapdragon 8 Gen 2)"
+        );
+        // Malformed specs are hard errors, not silent simulator runs.
+        let s = Scenario {
+            evaluator: "device:".into(),
+            ..Scenario::default()
+        };
+        assert!(s.platform_profile().is_err());
     }
 
     #[test]

@@ -11,14 +11,19 @@ use anyhow::Result;
 use crate::optimizers::Observation;
 use crate::util::json::Json;
 
+/// One task's accumulating log: per-round records plus a summary block.
 #[derive(Debug)]
 pub struct TaskLog {
+    /// Task label — becomes the log's file name (sanitized).
     pub name: String,
+    /// One JSON object per completed round.
     pub rounds: Vec<Json>,
+    /// Task-level summary (best score, rounds, cost, cache hits).
     pub summary: Json,
 }
 
 impl TaskLog {
+    /// An empty log for the named task.
     pub fn new(name: &str) -> TaskLog {
         TaskLog {
             name: name.to_string(),
@@ -27,6 +32,8 @@ impl TaskLog {
         }
     }
 
+    /// Append one round's configuration, score, feedback, optional agent
+    /// Thought text, and optional per-round cost accounting.
     pub fn record_round(
         &mut self,
         round: usize,
@@ -61,10 +68,12 @@ impl TaskLog {
         self.rounds.push(o);
     }
 
+    /// Set (or overwrite) one summary field.
     pub fn set_summary(&mut self, key: &str, value: Json) {
         self.summary.set(key, value);
     }
 
+    /// The full log as one JSON document (§3.3's record shape).
     pub fn to_json(&self) -> Json {
         let mut o = Json::obj();
         o.set("task", Json::Str(self.name.clone()));

@@ -29,7 +29,10 @@ use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 use super::cache::EvalCache;
-use super::evaluator::{BitwidthEvaluator, Evaluator, FinetuneEvaluator, KernelEvaluator};
+use super::evaluator::{
+    kernel_objective, parse_kernel_spec, BitwidthEvaluator, Evaluator, FinetuneEvaluator,
+    KernelEvaluator,
+};
 use super::scenario::{Scenario, Track};
 use super::tasklog::TaskLog;
 
@@ -39,6 +42,9 @@ const RNG_FINETUNE: u64 = 0xf1;
 const RNG_KERNEL: u64 = 0xde;
 const RNG_BITWIDTH: u64 = 0xb1;
 
+/// The launcher-facing composition root: owns the optional artifact
+/// registry and cache handle, builds (evaluator, optimizer) pairs per
+/// scenario, and drives the round loop.
 pub struct Workflow<'a> {
     /// AOT artifact registry — only the fine-tuning track needs one; the
     /// kernel and bit-width tracks run on the analytic simulator.
@@ -49,12 +55,16 @@ pub struct Workflow<'a> {
     write_logs: bool,
 }
 
+/// What one finished track produced (per-round history plus summaries).
 #[derive(Debug)]
 pub struct TrackOutcome {
+    /// Every round's configuration, score and feedback, in round order.
     pub history: Vec<Observation>,
+    /// The best (maximized) score observed across the rounds.
     pub best_score: f64,
     /// The agent's Appendix-C cost line (None for baseline optimizers).
     pub cost_report: Option<String>,
+    /// Where the task log was written (None when logging is disabled).
     pub log_path: Option<std::path::PathBuf>,
     /// Evaluations served from the content-addressed cache in this track.
     pub cache_hits: usize,
@@ -137,6 +147,7 @@ impl<'s> TrackSession<'s> {
         }
     }
 
+    /// Where the session's current round stands.
     pub fn state(&self) -> &RoundState {
         &self.state
     }
@@ -275,6 +286,7 @@ impl<'s> TrackSession<'s> {
 }
 
 impl<'a> Workflow<'a> {
+    /// Full workflow: every track runs, PJRT training included.
     pub fn new(set: &'a ArtifactSet) -> Workflow<'a> {
         Workflow {
             set: Some(set),
@@ -325,7 +337,11 @@ impl<'a> Workflow<'a> {
             // fallback is for live backends only).
             h.strict_errors = sc.backend.trim().starts_with("replay:");
             if kind != TaskKind::Finetune {
-                h = h.with_hardware(sc.device_profile().to_json());
+                // The prompt's Fig. 2a hardware block describes the
+                // platform the scenario actually measures on — for
+                // `device:` evaluator specs that is the spec's preset, so
+                // the prompt and the measurement can never disagree.
+                h = h.with_hardware(sc.platform_profile()?.to_json());
             }
             Ok(Box::new(h))
         } else {
@@ -343,17 +359,18 @@ impl<'a> Workflow<'a> {
         let (ev, objective, kind, tag): (Box<dyn Evaluator + 's>, Json, TaskKind, u64) =
             match sc.track {
                 Track::FinetuneCnn | Track::FinetuneLm => {
+                    super::device::require_simulated(sc)?;
                     let set = self.set.ok_or_else(artifacts_error)?;
                     let e = FinetuneEvaluator::new(set, sc)?;
                     let obj = e.objective();
                     (Box::new(e), obj, TaskKind::Finetune, RNG_FINETUNE)
                 }
                 Track::Kernel => {
-                    let e = KernelEvaluator::from_scenario(sc)?;
-                    let obj = e.objective();
-                    (Box::new(e), obj, TaskKind::KernelTuning, RNG_KERNEL)
+                    let (ev, obj) = kernel_evaluator_for(sc)?;
+                    (ev, obj, TaskKind::KernelTuning, RNG_KERNEL)
                 }
                 Track::Bitwidth => {
+                    super::device::require_simulated(sc)?;
                     let e = BitwidthEvaluator::from_scenario(sc)?;
                     let obj = e.objective();
                     (Box::new(e), obj, TaskKind::Bitwidth, RNG_BITWIDTH)
@@ -374,22 +391,27 @@ impl<'a> Workflow<'a> {
     /// Fine-tuning track (Table 1/2): optimizer proposes → trainer runs on
     /// PJRT → accuracy + loss feedback threads back into the next round.
     pub fn run_finetune(&self, sc: &Scenario) -> Result<TrackOutcome> {
+        super::device::require_simulated(sc)?;
         let set = self.set.ok_or_else(artifacts_error)?;
         let ev = FinetuneEvaluator::new(set, sc)?;
         let mut opt = self.make_optimizer(sc, TaskKind::Finetune, ev.objective())?;
         self.run_track(sc, opt.as_mut(), &ev, RNG_FINETUNE)
     }
 
-    /// Kernel-tuning track (Table 3): simulated hardware latency feedback.
+    /// Kernel-tuning track (Table 3): hardware latency feedback — from the
+    /// in-process simulator, or from a device server when the scenario's
+    /// `evaluator` spec selects one (the round loop cannot tell the
+    /// difference; that is the seam's point).
     pub fn run_kernel(&self, sc: &Scenario) -> Result<TrackOutcome> {
-        let ev = KernelEvaluator::from_scenario(sc)?;
-        let mut opt = self.make_optimizer(sc, TaskKind::KernelTuning, ev.objective())?;
-        self.run_track(sc, opt.as_mut(), &ev, RNG_KERNEL)
+        let (ev, obj) = kernel_evaluator_for(sc)?;
+        let mut opt = self.make_optimizer(sc, TaskKind::KernelTuning, obj)?;
+        self.run_track(sc, opt.as_mut(), ev.as_ref(), RNG_KERNEL)
     }
 
     /// Bit-width selection track (Table 5 / §4.4): one agent decision,
     /// cross-checked against the analytic selector.
     pub fn run_bitwidth(&self, sc: &Scenario) -> Result<TrackOutcome> {
+        super::device::require_simulated(sc)?;
         let ev = BitwidthEvaluator::from_scenario(sc)?;
         let mut opt = self.make_optimizer(sc, TaskKind::Bitwidth, ev.objective())?;
         self.run_track(sc, opt.as_mut(), &ev, RNG_BITWIDTH)
@@ -443,6 +465,26 @@ impl<'a> Workflow<'a> {
     }
 }
 
+/// Pick the kernel track's evaluator: the scenario's `evaluator` spec
+/// (device-backed / transcript-wrapped, see [`super::device`]) when one is
+/// set, else the in-process simulator — plus the agent's objective block,
+/// which is identical on every path so prompts (and therefore proposals)
+/// never depend on where measurements run.
+fn kernel_evaluator_for(sc: &Scenario) -> Result<(Box<dyn Evaluator>, Json)> {
+    match super::device::evaluator_from_scenario(sc)? {
+        Some(ev) => {
+            let (kernel, batch) = parse_kernel_spec(&sc.kernel)?;
+            let obj = kernel_objective(&crate::hardware::Workload::new(kernel, batch));
+            Ok((ev, obj))
+        }
+        None => {
+            let e = KernelEvaluator::from_scenario(sc)?;
+            let obj = e.objective();
+            Ok((Box::new(e), obj))
+        }
+    }
+}
+
 fn artifacts_error() -> anyhow::Error {
     anyhow!(
         "the fine-tuning track needs the AOT artifacts — construct \
@@ -450,6 +492,7 @@ fn artifacts_error() -> anyhow::Error {
     )
 }
 
+/// Resolve a deployment-model name to its analytic profile (Tables 4/5).
 pub fn model_by_name(name: &str) -> Result<ModelProfile> {
     Ok(match name.to_ascii_lowercase().as_str() {
         "llama2-7b" | "llama2_7b" => ModelProfile::llama2_7b(),
@@ -583,6 +626,59 @@ mod tests {
             }
         };
         assert_eq!(outcome.history.len(), 2);
+    }
+
+    #[test]
+    fn device_evaluated_track_is_bit_identical_to_simulated() {
+        // The acceptance bar for the device seam: run_track (and the
+        // session state machine) contain zero device-specific logic, so a
+        // kernel scenario measured through the in-process device server
+        // must reproduce the direct-simulator run bit for bit.
+        let wf = Workflow::simulated().quiet();
+        let direct = wf
+            .run(&Scenario {
+                name: "wf_unit_direct".into(),
+                track: Track::Kernel,
+                kernel: "softmax:128".into(),
+                optimizer: "haqa".into(),
+                budget: 5,
+                seed: 9,
+                device: "mobile-soc".into(),
+                ..Scenario::default()
+            })
+            .unwrap();
+        let device = wf
+            .run(&Scenario {
+                name: "wf_unit_device".into(),
+                track: Track::Kernel,
+                kernel: "softmax:128".into(),
+                optimizer: "haqa".into(),
+                budget: 5,
+                seed: 9,
+                evaluator: "device:mobile-soc".into(),
+                ..Scenario::default()
+            })
+            .unwrap();
+        assert_eq!(direct.history.len(), device.history.len());
+        for (a, b) in direct.history.iter().zip(&device.history) {
+            assert_eq!(a.score.to_bits(), b.score.to_bits());
+            assert_eq!(a.feedback, b.feedback);
+            assert_eq!(a.config, b.config, "same prompts ⇒ same proposals");
+        }
+        assert_eq!(direct.cost_report, device.cost_report);
+    }
+
+    #[test]
+    fn non_kernel_tracks_reject_device_evaluator_specs() {
+        let wf = Workflow::simulated();
+        let sc = Scenario {
+            track: Track::Bitwidth,
+            model: "llama2-13b".into(),
+            evaluator: "device:server-gpu".into(),
+            ..Scenario::default()
+        };
+        let err = format!("{:#}", wf.run(&sc).unwrap_err());
+        assert!(err.contains("only supported on the kernel track"), "{err}");
     }
 
     #[test]

@@ -30,5 +30,5 @@ pub mod workload;
 pub use exec::ExecConfig;
 pub use latency::{kernel_latency_us, LatencyModel};
 pub use models::ModelProfile;
-pub use profile::DeviceProfile;
+pub use profile::{preset, DeviceProfile, PRESET_NAMES};
 pub use workload::{KernelKind, Workload};

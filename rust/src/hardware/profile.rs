@@ -1,5 +1,10 @@
 //! Device profiles.  Field values mirror the hardware spec blocks the
 //! paper's prompts embed (Fig. 2a and Appendix F).
+//!
+//! Profiles are reachable two ways: directly via the constructors
+//! ([`DeviceProfile::a6000`] & friends) or by name through the [`preset`]
+//! registry, which is what scenario `device` fields and
+//! `device:<profile-name>` evaluator specs resolve against.
 
 use crate::util::json::Json;
 
@@ -112,6 +117,59 @@ impl DeviceProfile {
         }
     }
 
+    /// NVIDIA A100 SXM (Ampere datacenter): the server-class preset for
+    /// `device:` scenarios.  Everything the A6000 has, scaled up — more
+    /// SMs, HBM2e bandwidth, native INT8/INT4 MMA — so tuned kernels land
+    /// measurably faster (`kernel_scale` < 1) while the same occupancy /
+    /// tiling / coalescing mechanisms steer the search.
+    pub fn a100() -> DeviceProfile {
+        DeviceProfile {
+            name: "NVIDIA A100 SXM".into(),
+            kind: DeviceKind::DesktopGpu,
+            sm_count: 108,
+            cuda_cores: 6912,
+            tensor_cores: true,
+            int8_native: true,
+            int4_native: true,
+            fp16_tflops: 312.0,
+            mem_bw_gbps: 2039.0,
+            shared_mem_kb: 164,
+            registers_per_sm: 65536,
+            dram_gb: 80.0,
+            launch_overhead_ms: 0.015,
+            ov_ps_fp16: 0.4,
+            ov_ps_int8: 0.6,
+            ov_ps_int4: 0.9,
+            kernel_scale: 0.55,
+        }
+    }
+
+    /// NVIDIA Jetson Orin (embedded SoC): the edge preset for `device:`
+    /// scenarios.  Ampere-generation cores behind a LPDDR5 bus — native
+    /// INT8, *no* native INT4 (the §4.4 asymmetry, like the Adreno), and a
+    /// kernel-latency scale between the mobile GPU and the host CPU.
+    pub fn orin() -> DeviceProfile {
+        DeviceProfile {
+            name: "NVIDIA Jetson Orin".into(),
+            kind: DeviceKind::MobileGpu,
+            sm_count: 16,
+            cuda_cores: 2048,
+            tensor_cores: true,
+            int8_native: true,
+            int4_native: false,
+            fp16_tflops: 21.0,
+            mem_bw_gbps: 204.0,
+            shared_mem_kb: 48,
+            registers_per_sm: 65536,
+            dram_gb: 32.0,
+            launch_overhead_ms: 0.3,
+            ov_ps_fp16: 0.9,
+            ov_ps_int8: 9.0,
+            ov_ps_int4: 28.0,
+            kernel_scale: 4.5,
+        }
+    }
+
     /// Per-parameter decode-time overhead for a scheme (ps).
     pub fn ov_ps(&self, scheme: crate::quant::Scheme) -> f64 {
         match scheme {
@@ -150,6 +208,41 @@ impl DeviceProfile {
     }
 }
 
+/// Canonical preset names, one per distinct profile (aliases excluded) —
+/// used for error messages and the device-server `hello` reply.
+pub const PRESET_NAMES: &[&str] = &["a6000", "adreno740", "cpu", "a100", "orin"];
+
+/// Resolve a named hardware-profile preset.
+///
+/// This is the registry `device:<profile-name>` evaluator specs and the
+/// scenario `device` field resolve against.  Each profile answers to its
+/// canonical name (see [`PRESET_NAMES`]) plus platform-class aliases, so a
+/// scenario file can say what it means (`server-gpu` vs `mobile-soc`)
+/// without hard-coding part numbers:
+///
+/// | canonical | aliases | profile |
+/// |---|---|---|
+/// | `a6000` | `server`, `server-gpu`, `desktop` | [`DeviceProfile::a6000`] |
+/// | `adreno740` | `mobile`, `mobile-soc` | [`DeviceProfile::adreno740`] |
+/// | `cpu` | `host-cpu`, `edge-cpu` | [`DeviceProfile::host_cpu`] |
+/// | `a100` | `datacenter-gpu` | [`DeviceProfile::a100`] |
+/// | `orin` | `jetson-orin`, `embedded` | [`DeviceProfile::orin`] |
+///
+/// Returns `None` for unknown names; callers that must not guess (the
+/// `device:` evaluator spec parser) turn that into a hard error, while
+/// [`Scenario::device_profile`](crate::coordinator::scenario::Scenario::device_profile)
+/// keeps its historical fall-back to the A6000.
+pub fn preset(name: &str) -> Option<DeviceProfile> {
+    match name.trim().to_ascii_lowercase().as_str() {
+        "a6000" | "server" | "server-gpu" | "desktop" => Some(DeviceProfile::a6000()),
+        "adreno740" | "mobile" | "mobile-soc" => Some(DeviceProfile::adreno740()),
+        "cpu" | "host-cpu" | "edge-cpu" => Some(DeviceProfile::host_cpu()),
+        "a100" | "datacenter-gpu" => Some(DeviceProfile::a100()),
+        "orin" | "jetson-orin" | "embedded" => Some(DeviceProfile::orin()),
+        _ => None,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -169,5 +262,31 @@ mod tests {
         let j = DeviceProfile::a6000().to_json();
         assert_eq!(j.get("tensor_cores").unwrap().as_bool(), Some(true));
         assert!(j.req_f64("mem_bw_gbps").unwrap() > 0.0);
+    }
+
+    #[test]
+    fn preset_registry_resolves_canonical_names_and_aliases() {
+        for name in PRESET_NAMES {
+            assert!(preset(name).is_some(), "canonical preset '{name}' missing");
+        }
+        assert_eq!(preset("server-gpu").unwrap().name, DeviceProfile::a6000().name);
+        assert_eq!(preset("mobile-soc").unwrap().name, DeviceProfile::adreno740().name);
+        assert_eq!(preset("datacenter-gpu").unwrap().name, DeviceProfile::a100().name);
+        assert_eq!(preset("  Jetson-Orin ").unwrap().name, DeviceProfile::orin().name);
+        assert!(preset("tpu-v5").is_none());
+    }
+
+    #[test]
+    fn new_presets_keep_the_platform_ordering() {
+        // The datacenter part outruns the desktop part; the embedded SoC
+        // sits between the mobile GPU and the host CPU.
+        let a6000 = DeviceProfile::a6000();
+        let a100 = DeviceProfile::a100();
+        let orin = DeviceProfile::orin();
+        let adreno = DeviceProfile::adreno740();
+        assert!(a100.kernel_scale < a6000.kernel_scale);
+        assert!(orin.kernel_scale > a6000.kernel_scale);
+        assert!(orin.kernel_scale < adreno.kernel_scale);
+        assert!(a100.int4_native && !orin.int4_native, "§4.4 asymmetry on the edge");
     }
 }

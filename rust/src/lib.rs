@@ -28,6 +28,7 @@
 //! | [`deploy`] | kernel tuner, token-generation engine, e2e throughput |
 //! | [`coordinator`] | the HAQA iteration loop (paper Fig. 3) behind one seam: |
 //! | [`coordinator::evaluator`] | the `Evaluator` trait + fine-tune / kernel / bit-width backends |
+//! | [`coordinator::device`] | device-backend evaluators: JSONL/TCP measurement protocol + stub server |
 //! | [`coordinator::cache`] | content-addressed evaluation cache (canonical-JSON keys) |
 //! | [`coordinator::fleet`] | parallel scenario-fleet runner, bit-identical to serial |
 //! | [`report`] | table/figure emitters for every paper table & figure |

@@ -13,6 +13,8 @@
 //! haqa bench [--quick]         fleet/cache throughput harness → BENCH_2.json
 //!                              + agent-overlap phase → BENCH_3.json
 //! haqa cache compact           rewrite the eval-cache journal, live entries only
+//! haqa device serve            serve the JSONL device-measurement protocol
+//! haqa device ping             hello round-trip against a device server
 //! ```
 
 use anyhow::Result;
@@ -48,6 +50,7 @@ fn real_main() -> Result<()> {
         "fleet" => fleet(rest),
         "bench" => bench_fleet(rest),
         "cache" => cache_cmd(rest),
+        "device" => device_cmd(rest),
         "perf" => perf(),
         "help" | "--help" => {
             print!("{}", HELP);
@@ -72,6 +75,9 @@ haqa — hardware-aware quantization agent (paper reproduction)
   haqa bench                cold/warm serial/fleet throughput harness plus the
                             blocking-vs-pipelined agent-overlap phase; --help
   haqa cache compact        rewrite the eval-cache journal keeping live entries
+  haqa device serve         serve the device-measurement protocol (simulator-
+                            backed stub; target of remote:// evaluator specs)
+  haqa device ping          hello round-trip against a device server
 
 Benches regenerating every paper table/figure: `cargo bench` (see DESIGN.md).
 ";
@@ -134,10 +140,15 @@ fn tune(rest: Vec<String>) -> Result<()> {
 fn kernel(rest: Vec<String>) -> Result<()> {
     let a = Args::new("haqa kernel", "kernel execution-config tuning")
         .opt_default("kernel", "matmul:64", "kernel:batch, e.g. softmax:128")
-        .opt_default("device", "a6000", "a6000 | adreno740 | cpu")
+        .opt_default("device", "a6000", "hardware profile preset (a6000|adreno740|cpu|a100|orin)")
         .opt_default("optimizer", "haqa", "optimizer name")
         .opt_default("budget", "10", "tuning rounds")
         .opt_default("seed", "0", "rng seed")
+        .opt_default(
+            "evaluator",
+            "simulated",
+            "simulated | device:<profile> | remote://host:port (see docs/EVALUATORS.md)",
+        )
         .parse(rest)?;
     let sc = Scenario {
         name: format!("kernel_{}", a.get("kernel").unwrap().replace(':', "_")),
@@ -147,9 +158,11 @@ fn kernel(rest: Vec<String>) -> Result<()> {
         optimizer: a.get("optimizer").unwrap().to_string(),
         budget: a.get_usize("budget")?.unwrap_or(10),
         seed: a.get_f64("seed")?.unwrap_or(0.0) as u64,
+        evaluator: a.get("evaluator").unwrap().to_string(),
         ..Scenario::default()
     };
-    // Kernel tuning runs on the analytic simulator — no artifacts needed.
+    // Kernel tuning needs no artifacts: it runs on the analytic simulator,
+    // in-process or behind the device-measurement protocol.
     let wf = Workflow::simulated();
     let out = wf.run_kernel(&sc)?;
     for (i, o) in out.history.iter().enumerate() {
@@ -350,13 +363,19 @@ fn bench_fleet(rest: Vec<String>) -> Result<()> {
         .opt_default("rounds", "8", "tuning rounds per kernel scenario")
         .opt_default("overlap-out", "BENCH_3.json", "agent-overlap report output path")
         .opt_default("overlap-latency-ms", "12", "simulated agent API latency for the overlap phase")
+        .opt_default(
+            "evaluator",
+            "simulated",
+            "kernel-scenario evaluator: simulated | device (per-scenario device:<profile>) | \
+             any evaluator spec verbatim",
+        )
         .flag("skip-overlap", "skip the blocking-vs-pipelined agent-overlap phase")
         .flag("quick", "small scenario set (CI perf smoke)")
         .parse(rest)?;
     let quick = a.get_bool("quick");
     let rounds = a.get_usize("rounds")?.unwrap_or(8).max(1);
     let workers = FleetRunner::workers_from_env(a.get_usize("workers")?)?;
-    let scenarios = bench_scenarios(quick, rounds);
+    let scenarios = bench_scenarios(quick, rounds, a.get("evaluator").unwrap());
 
     let dir = match a.get("cache-dir") {
         Some(d) => std::path::PathBuf::from(d),
@@ -605,11 +624,74 @@ fn cache_cmd(rest: Vec<String>) -> Result<()> {
     }
 }
 
+/// `haqa device <serve|ping>` — run or probe a device-measurement server
+/// speaking the JSONL protocol documented in `docs/EVALUATORS.md`.
+fn device_cmd(rest: Vec<String>) -> Result<()> {
+    use haqa::coordinator::DeviceServer;
+    use std::io::{BufRead, BufReader, Write};
+
+    let (sub, rest) = match rest.split_first() {
+        Some((s, r)) => (s.as_str(), r.to_vec()),
+        None => anyhow::bail!("usage: haqa device <serve|ping> [--addr HOST:PORT]"),
+    };
+    match sub {
+        "serve" => {
+            let a = Args::new(
+                "haqa device serve",
+                "serve the JSONL device-measurement protocol (simulator-backed stub)",
+            )
+            .opt_default("addr", "127.0.0.1:7434", "bind address (port 0 = ephemeral)")
+            .parse(rest)?;
+            let server = DeviceServer::spawn(a.get("addr").unwrap())?;
+            println!(
+                "device server listening on {} (profiles: {})",
+                server.addr(),
+                haqa::hardware::PRESET_NAMES.join(", ")
+            );
+            println!(
+                "point scenarios at it with \"evaluator\": \"remote://{}\"",
+                server.addr()
+            );
+            // Foreground service: the accept loop runs on its background
+            // thread until the process is killed.
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(3600));
+            }
+        }
+        "ping" => {
+            let a = Args::new("haqa device ping", "hello round-trip against a device server")
+                .opt_default("addr", "127.0.0.1:7434", "server address")
+                .parse(rest)?;
+            let addr = a.get("addr").unwrap();
+            let timeout = std::time::Duration::from_secs(5);
+            let sock_addr = std::net::ToSocketAddrs::to_socket_addrs(addr)?
+                .next()
+                .ok_or_else(|| anyhow::anyhow!("cannot resolve {addr}"))?;
+            let mut stream = std::net::TcpStream::connect_timeout(&sock_addr, timeout)?;
+            stream.set_read_timeout(Some(timeout))?;
+            stream.set_write_timeout(Some(timeout))?;
+            stream.write_all(b"{\"op\":\"hello\",\"v\":1}\n")?;
+            let mut line = String::new();
+            BufReader::new(stream).read_line(&mut line)?;
+            anyhow::ensure!(!line.trim().is_empty(), "no reply from {addr}");
+            println!("{}", line.trim());
+            Ok(())
+        }
+        other => anyhow::bail!("unknown device subcommand '{other}' (try `serve` or `ping`)"),
+    }
+}
+
 /// The fixed scenario set `haqa bench` measures: simulator-only tracks
 /// (kernel + bit-width) so the harness runs offline, spanning several
 /// artifact families (two simulated devices + the bit-width track) and
 /// every optimizer class the fleet serves.
-fn bench_scenarios(quick: bool, rounds: usize) -> Vec<Scenario> {
+///
+/// `evaluator` applies to the *kernel* scenarios only (bit-width always
+/// evaluates in-process): `simulated` is the default, the special value
+/// `device` maps each scenario to `device:<its device>` (stub-server wire
+/// path, platform diversity preserved), and anything else is used
+/// verbatim.
+fn bench_scenarios(quick: bool, rounds: usize, evaluator: &str) -> Vec<Scenario> {
     let kernels: &[&str] = if quick {
         &["matmul:64", "softmax:128"]
     } else {
@@ -629,6 +711,10 @@ fn bench_scenarios(quick: bool, rounds: usize) -> Vec<Scenario> {
                     optimizer: (*optimizer).into(),
                     budget: rounds,
                     seed: 7,
+                    evaluator: match evaluator {
+                        "device" => format!("device:{device}"),
+                        other => other.to_string(),
+                    },
                     ..Scenario::default()
                 });
             }

@@ -4,7 +4,8 @@
 //!
 //! * [`tensor`] — host-side f32 tensor type ⇄ `xla::Literal`.
 //! * [`literal`] — pure-Rust literal fallback (no-`pjrt` builds).
-//! * [`client`] — process-wide PJRT CPU client singleton (`pjrt` feature).
+//! * `client` — process-wide PJRT CPU client singleton (module exists
+//!   only under the `pjrt` feature).
 //! * [`artifact`] — manifest-driven artifact registry + executable cache +
 //!   the generic state-threading executor every trainer/engine uses.
 //!

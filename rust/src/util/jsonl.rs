@@ -12,7 +12,42 @@
 //!   **appending** a newline (never by truncating — a concurrent writer
 //!   may be mid-append).
 
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::Path;
+
 use super::json::{self, Json};
+
+/// Open `path` for appending, healing a torn tail first: if the file
+/// exists, is non-empty, and does not end in a newline (a crashed writer's
+/// torn final record), a single `\n` is **appended** before returning —
+/// never a truncation, because a concurrent writer sharing the journal may
+/// be mid-append; if the torn view was just an in-flight append, the extra
+/// newline lands as a blank line, which [`scan`] ignores.  This is the one
+/// implementation of the append-open half of the hygiene rules, shared by
+/// the eval-cache journal, the agent transcript journal and the device
+/// measurement transcripts.
+pub fn open_append_healed(path: &Path) -> std::io::Result<File> {
+    let torn_tail = match OpenOptions::new().read(true).open(path) {
+        Ok(mut f) => {
+            let len = f.seek(SeekFrom::End(0))?;
+            if len == 0 {
+                false
+            } else {
+                f.seek(SeekFrom::End(-1))?;
+                let mut last = [0u8; 1];
+                f.read_exact(&mut last)?;
+                last[0] != b'\n'
+            }
+        }
+        Err(_) => false, // no file yet: nothing to heal
+    };
+    let mut file = OpenOptions::new().create(true).append(true).open(path)?;
+    if torn_tail {
+        file.write_all(b"\n")?;
+    }
+    Ok(file)
+}
 
 /// What a scan observed besides the records it delivered.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -76,5 +111,25 @@ mod tests {
         let s = scan(bytes, |j, _| j.get("a").is_some());
         assert_eq!(s.skipped, 1);
         assert!(!s.torn_tail);
+    }
+
+    #[test]
+    fn open_append_healed_terminates_torn_tails_only() {
+        let dir = std::env::temp_dir().join(format!("haqa_jsonl_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("j.jsonl");
+        // Missing file: created empty, nothing appended.
+        drop(open_append_healed(&path).unwrap());
+        assert_eq!(std::fs::read(&path).unwrap(), b"");
+        // Clean tail: untouched.
+        std::fs::write(&path, b"{\"a\":1}\n").unwrap();
+        drop(open_append_healed(&path).unwrap());
+        assert_eq!(std::fs::read(&path).unwrap(), b"{\"a\":1}\n");
+        // Torn tail: newline appended, never truncated.
+        std::fs::write(&path, b"{\"a\":1}\n{\"torn").unwrap();
+        drop(open_append_healed(&path).unwrap());
+        assert_eq!(std::fs::read(&path).unwrap(), b"{\"a\":1}\n{\"torn\n");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

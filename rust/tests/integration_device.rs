@@ -1,0 +1,87 @@
+//! Device-backend fleet integration: the committed `device_fleet.json`
+//! batch runs against the in-process `DeviceServer` stub through the
+//! unmodified `FleetRunner`, and `device:` scenarios reproduce the
+//! direct-simulator runs bit for bit.
+
+use haqa::coordinator::{FleetRunner, Scenario, TrackOutcome};
+
+fn device_fleet() -> Vec<Scenario> {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../scenarios/device_fleet.json");
+    Scenario::load_many(path).expect("committed device fleet batch parses")
+}
+
+#[test]
+fn committed_device_fleet_runs_and_matches_direct_simulator() {
+    let scenarios = device_fleet();
+    assert!(
+        scenarios.iter().any(|s| s.evaluator.starts_with("device:")),
+        "batch must exercise device evaluators"
+    );
+    assert!(
+        scenarios.iter().any(|s| s.evaluator == "simulated"),
+        "batch must keep direct-simulator controls"
+    );
+    let report = FleetRunner::new(2).quiet().run(&scenarios);
+    let outcome = |name: &str| -> &TrackOutcome {
+        let i = scenarios
+            .iter()
+            .position(|s| s.name == name)
+            .unwrap_or_else(|| panic!("scenario '{name}' in device_fleet.json"));
+        report.outcomes[i]
+            .as_ref()
+            .unwrap_or_else(|e| panic!("scenario '{name}' failed: {e:#}"))
+    };
+    for (sc, out) in scenarios.iter().zip(&report.outcomes) {
+        assert!(out.is_ok(), "{}: {:#}", sc.name, out.as_ref().unwrap_err());
+    }
+    // The committed batch pairs each `device:` scenario with its
+    // direct-simulator control (same kernel, seed, platform): the wire
+    // path must be invisible in the results.
+    for (sim, dev) in [
+        ("fleet_sim_matmul64_server", "fleet_dev_matmul64_server"),
+        ("fleet_sim_softmax128_mobile", "fleet_dev_softmax128_mobile"),
+    ] {
+        let (a, b) = (outcome(sim), outcome(dev));
+        assert_eq!(
+            a.best_score.to_bits(),
+            b.best_score.to_bits(),
+            "{sim} vs {dev}: best scores must be bit-identical"
+        );
+        assert_eq!(a.history.len(), b.history.len());
+        for (x, y) in a.history.iter().zip(&b.history) {
+            assert_eq!(x.score.to_bits(), y.score.to_bits(), "{sim} vs {dev}");
+            assert_eq!(x.feedback, y.feedback);
+        }
+    }
+    // Distinct platforms measured over one wire must stay distinct: the
+    // shared cache holds separate entries per device scope (no collisions
+    // collapsed the batch).
+    let cache = report.cache.expect("fleet cache enabled by default");
+    assert!(cache.entries > 0);
+}
+
+#[test]
+fn device_fleet_is_bit_identical_across_workers_and_overlap() {
+    // FleetRunner has no device-specific logic, so worker count and
+    // in-flight overlap must not change device-measured results — the same
+    // guarantee the simulator path has always had.
+    let scenarios = device_fleet();
+    let serial = FleetRunner::new(1).quiet().without_cache().run(&scenarios);
+    let fleet = FleetRunner::new(4)
+        .quiet()
+        .without_cache()
+        .with_inflight(4)
+        .run(&scenarios);
+    for ((sc, a), b) in scenarios.iter().zip(&serial.outcomes).zip(&fleet.outcomes) {
+        let (a, b) = (
+            a.as_ref().unwrap_or_else(|e| panic!("{}: {e:#}", sc.name)),
+            b.as_ref().unwrap_or_else(|e| panic!("{}: {e:#}", sc.name)),
+        );
+        assert_eq!(
+            a.best_score.to_bits(),
+            b.best_score.to_bits(),
+            "{}: serial vs overlapped fleet diverged",
+            sc.name
+        );
+    }
+}
