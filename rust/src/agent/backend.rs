@@ -370,6 +370,38 @@ impl<B: BlockingLlm + 'static> SlowLlm<B> {
     }
 }
 
+impl<B: BlockingLlm + 'static> super::batch::BatchLlm for SlowLlm<B> {
+    fn model_name(&self) -> &str {
+        &self.model
+    }
+
+    /// One amortized round-trip for the whole batch: every item completes
+    /// against the inner backend in request order (so deterministic
+    /// backends stay deterministic), then the single simulated API latency
+    /// is paid once — which is exactly the economics provider-side
+    /// batching buys over per-request calls.
+    fn complete_batch(&mut self, reqs: &[AgentRequest]) -> Vec<Result<Completion>> {
+        let t0 = std::time::Instant::now();
+        let texts: Vec<Result<String>> = {
+            let mut g = lock(&self.inner);
+            reqs.iter().map(|r| g.complete(&r.messages)).collect()
+        };
+        std::thread::sleep(self.latency);
+        let wall = t0.elapsed().as_secs_f64();
+        reqs.iter()
+            .zip(texts)
+            .map(|(r, text)| {
+                text.map(|text| Completion {
+                    prompt_tokens: estimate_prompt_tokens(&r.messages),
+                    completion_tokens: estimate_tokens(&text),
+                    api_seconds: wall,
+                    text,
+                })
+            })
+            .collect()
+    }
+}
+
 impl<B: BlockingLlm + 'static> LlmBackend for SlowLlm<B> {
     fn model_name(&self) -> &str {
         &self.model

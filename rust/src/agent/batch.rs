@@ -1,0 +1,517 @@
+//! Provider-side request batching: many in-flight proposals coalesce into
+//! one provider round-trip (OpenAI batch-API style).
+//!
+//! PR 3 made the agent stack a request pipeline and let the fleet keep
+//! many scenarios' queries in flight; this module closes the last
+//! unexploited layer of that pipeline.  [`BatchLlm`] is the provider-side
+//! contract — complete *many* transcripts in **one** request —
+//! and [`BatchingBackend`] is the [`LlmBackend`] adapter over it:
+//! `submit` buffers requests up to a size cap, a cap-fill or an explicit
+//! [`BatchingBackend::flush`] executes the whole buffer as a single
+//! provider call, and completions fan back out by [`RequestId`].
+//!
+//! ```text
+//!   session A ── submit ──┐
+//!   session B ── submit ──┤   BatchingBackend        provider
+//!   session C ── submit ──┼──▶ [A B C …] buffer ──▶ complete_batch(…)
+//!   session D ── submit ──┘        │ flush()            │ 1 round-trip
+//!   try_recv(id) ◀── fan-out by RequestId ◀─────────────┘
+//! ```
+//!
+//! [`AgentPool`] is the fleet-level registry that makes cross-scenario
+//! coalescing possible: one shared `BatchingBackend` per backend *spec*
+//! (`simulated`, `replay:…`, `http://…`, …), handed to every scenario as a
+//! [`SharedBackend`] handle.  A shared provider must answer a given
+//! transcript identically for every scenario, so pooled simulated policies
+//! are **content-seeded** ([`super::simulated::SimulatedLlm::stateless`]):
+//! the completion is a pure function of the transcript, exactly like a
+//! temperature-0 endpoint — which is also what makes batched runs
+//! bit-identical to unbatched ones and lets `record:`/`replay:` journals
+//! match by content.
+//!
+//! Flush semantics: a batch executes when (a) the buffer reaches the size
+//! cap (inside the `submit` that filled it), (b) a blocking
+//! [`LlmBackend::recv`] lands on a still-buffered request (the serial
+//! path's implicit flush point), or (c) the driver calls `flush`
+//! explicitly — the fleet does so at the end of each submit sweep, once
+//! every live session is parked on an in-flight request, so batches
+//! actually fill instead of degenerating to size 1.  Execution is
+//! synchronous on the flushing thread and the inner provider is locked for
+//! the whole batch, so with one worker the batch composition — and
+//! therefore a recorded journal's batch boundaries — is deterministic.
+
+use std::collections::{HashMap, HashSet};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::util::{lock, panic_message};
+
+use super::backend::{AgentRequest, Completion, LlmBackend, RequestId};
+
+/// A provider that completes many transcripts in one round-trip.
+///
+/// The contract: `complete_batch` must return exactly `reqs.len()`
+/// results, **in request order**; a per-item failure is an `Err` in that
+/// item's slot and must not poison the other items (partial failure).  A
+/// whole-batch transport failure is every slot `Err`.
+pub trait BatchLlm: Send {
+    /// Human-readable provider identifier (logged in task logs).
+    fn model_name(&self) -> &str;
+
+    /// Complete `reqs` in one provider request.
+    fn complete_batch(&mut self, reqs: &[AgentRequest]) -> Vec<Result<Completion>>;
+}
+
+impl BatchLlm for Box<dyn BatchLlm> {
+    fn model_name(&self) -> &str {
+        (**self).model_name()
+    }
+
+    fn complete_batch(&mut self, reqs: &[AgentRequest]) -> Vec<Result<Completion>> {
+        (**self).complete_batch(reqs)
+    }
+}
+
+/// Lifetime counters of one [`BatchingBackend`] (or an [`AgentPool`]
+/// aggregate): how many requests were submitted, how many provider
+/// round-trips served them, and the largest single batch.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct BatchStats {
+    /// Requests submitted (each occupies one slot in some batch).
+    pub submitted: usize,
+    /// Provider round-trips (`complete_batch` calls) that served them.
+    pub provider_requests: usize,
+    /// Largest batch executed.
+    pub max_batch: usize,
+}
+
+struct BatchState {
+    next_id: u64,
+    /// Submitted but not yet executed, in submission order.
+    queue: Vec<(u64, AgentRequest)>,
+    done: HashMap<u64, Result<Completion>>,
+    delivered: HashSet<u64>,
+    stats: BatchStats,
+}
+
+/// The batching [`LlmBackend`] adapter over any [`BatchLlm`] provider —
+/// see the module docs for buffer/flush semantics and the determinism
+/// argument.
+pub struct BatchingBackend<B> {
+    model: String,
+    cap: usize,
+    inner: Mutex<B>,
+    state: Mutex<BatchState>,
+}
+
+impl<B: BatchLlm> BatchingBackend<B> {
+    /// Buffer up to `cap` requests per provider call (`cap` is clamped to
+    /// ≥ 1; a cap of 1 executes every request at submit — the *unbatched*
+    /// control the bench compares against).
+    pub fn new(inner: B, cap: usize) -> BatchingBackend<B> {
+        let cap = cap.max(1);
+        BatchingBackend {
+            model: format!("batch{}:{}", cap, inner.model_name()),
+            cap,
+            inner: Mutex::new(inner),
+            state: Mutex::new(BatchState {
+                next_id: 0,
+                queue: Vec::new(),
+                done: HashMap::new(),
+                delivered: HashSet::new(),
+                stats: BatchStats::default(),
+            }),
+        }
+    }
+
+    /// The buffer's size cap.
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// Lifetime request/round-trip counters.
+    pub fn stats(&self) -> BatchStats {
+        lock(&self.state).stats
+    }
+
+    /// Execute everything buffered — in provider requests of at most
+    /// `cap` items each — and fan the completions out to their
+    /// [`RequestId`]s.  Returns how many requests were flushed (0 when
+    /// the buffer was empty).
+    pub fn flush(&self) -> usize {
+        let mut flushed = 0;
+        loop {
+            // Drain up to one cap's worth, then release the state lock
+            // before touching the provider: other threads keep submitting
+            // (and polling ids that are mid-flush simply see "still in
+            // flight") while this chunk runs.  Draining by chunk — rather
+            // than taking the whole queue — keeps every provider call
+            // within the advertised cap even when a racing submit slips
+            // an item in between the cap-fill check and this drain.
+            let batch: Vec<(u64, AgentRequest)> = {
+                let mut g = lock(&self.state);
+                if g.queue.is_empty() {
+                    break;
+                }
+                let take = g.queue.len().min(self.cap);
+                g.queue.drain(..take).collect()
+            };
+            let (ids, reqs): (Vec<u64>, Vec<AgentRequest>) = batch.into_iter().unzip();
+            // A panicking provider must still complete every id it was
+            // handed: otherwise the other sessions batched into this
+            // flush poll `try_recv` forever (and a panic at the fleet's
+            // flush point would escape the per-scenario isolation and
+            // abort the whole batch).  Same containment discipline as the
+            // Dispatcher's work threads.
+            let results =
+                catch_unwind(AssertUnwindSafe(|| lock(&self.inner).complete_batch(&reqs)))
+                    .unwrap_or_else(|p| {
+                        let msg = panic_message(&p);
+                        reqs.iter()
+                            .map(|_| Err(anyhow!("batch provider panicked: {msg}")))
+                            .collect()
+                    });
+            let n = ids.len();
+            flushed += n;
+            let mut g = lock(&self.state);
+            g.stats.provider_requests += 1;
+            g.stats.max_batch = g.stats.max_batch.max(n);
+            let mut it = results.into_iter();
+            for id in ids {
+                // The BatchLlm contract is one result per request; a
+                // short reply becomes per-item errors, never a hung
+                // receiver.
+                let r = it.next().unwrap_or_else(|| {
+                    Err(anyhow!("batch provider returned too few completions"))
+                });
+                g.done.insert(id, r);
+            }
+        }
+        flushed
+    }
+}
+
+impl<B: BatchLlm> LlmBackend for BatchingBackend<B> {
+    fn model_name(&self) -> &str {
+        &self.model
+    }
+
+    fn submit(&self, req: AgentRequest) -> Result<RequestId> {
+        let (id, full) = {
+            let mut g = lock(&self.state);
+            let id = g.next_id;
+            g.next_id += 1;
+            g.stats.submitted += 1;
+            g.queue.push((id, req));
+            (id, g.queue.len() >= self.cap)
+        };
+        if full {
+            self.flush();
+        }
+        Ok(RequestId(id))
+    }
+
+    fn try_recv(&self, id: RequestId) -> Result<Option<Completion>> {
+        let mut g = lock(&self.state);
+        if id.0 >= g.next_id {
+            return Err(anyhow!("request {} was never submitted", id.0));
+        }
+        if g.delivered.contains(&id.0) {
+            return Err(anyhow!("request {} was already received", id.0));
+        }
+        match g.done.remove(&id.0) {
+            Some(r) => {
+                g.delivered.insert(id.0);
+                r.map(Some)
+            }
+            // Still buffered, or mid-flush on another thread.
+            None => Ok(None),
+        }
+    }
+
+    fn recv(&self, id: RequestId) -> Result<Completion> {
+        loop {
+            if let Some(c) = self.try_recv(id)? {
+                return Ok(c);
+            }
+            // Not done: if the request still sits in the buffer this is the
+            // blocking path's flush point (a size-1-or-more batch executes
+            // now); if not, another thread's flush is mid-execution — back
+            // off briefly and re-poll.
+            let queued = lock(&self.state).queue.iter().any(|(q, _)| *q == id.0);
+            if queued {
+                self.flush();
+            } else {
+                std::thread::sleep(Duration::from_micros(200));
+            }
+        }
+    }
+}
+
+/// The seed every pooled provider is built from.  Scenario seeds are
+/// deliberately *not* used: a shared provider must answer a given
+/// transcript identically for every scenario, so the pooled simulated
+/// policy derives its randomness from this fleet-level constant plus the
+/// transcript content (see [`super::simulated::SimulatedLlm::stateless`]).
+pub const POOL_SEED: u64 = 0x4a9a;
+
+type PoolSlot = Arc<BatchingBackend<Box<dyn BatchLlm>>>;
+
+/// Fleet-level registry of shared batching backends: one
+/// [`BatchingBackend`] per backend spec, so in-flight proposals from many
+/// scenarios coalesce into the same provider batches.  Built by the fleet
+/// when `--batch`/`HAQA_BATCH` is set and handed to every scenario's agent
+/// as a [`SharedBackend`] handle.
+pub struct AgentPool {
+    batch: usize,
+    backends: Mutex<HashMap<String, PoolSlot>>,
+}
+
+impl AgentPool {
+    /// A pool whose backends buffer up to `batch` requests per provider
+    /// call (clamped to ≥ 1).
+    pub fn new(batch: usize) -> AgentPool {
+        AgentPool {
+            batch: batch.max(1),
+            backends: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// The per-provider-call size cap.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Get-or-create the shared backend for `spec` (see
+    /// [`super::batch_llm_from_spec`] for the accepted specs).
+    pub fn backend(&self, spec: &str) -> Result<SharedBackend> {
+        // Normalized key: `""` and `"simulated"` are the same provider, so
+        // scenarios spelling the default differently must still coalesce
+        // into one shared backend.
+        let trimmed = spec.trim();
+        let key = if trimmed.is_empty() {
+            "simulated".to_string()
+        } else {
+            trimmed.to_string()
+        };
+        let mut g = lock(&self.backends);
+        if let Some(b) = g.get(&key) {
+            return Ok(SharedBackend(Arc::clone(b)));
+        }
+        let inner = super::batch_llm_from_spec(&key, POOL_SEED)?;
+        let slot: PoolSlot = Arc::new(BatchingBackend::new(inner, self.batch));
+        g.insert(key, Arc::clone(&slot));
+        Ok(SharedBackend(slot))
+    }
+
+    /// Flush every backend's buffer (the fleet's end-of-sweep flush
+    /// point); returns the total number of requests flushed.
+    pub fn flush(&self) -> usize {
+        let slots: Vec<PoolSlot> = lock(&self.backends).values().cloned().collect();
+        slots.iter().map(|b| b.flush()).sum()
+    }
+
+    /// Aggregate counters across every backend in the pool.
+    pub fn stats(&self) -> BatchStats {
+        let mut out = BatchStats::default();
+        for b in lock(&self.backends).values() {
+            let s = b.stats();
+            out.submitted += s.submitted;
+            out.provider_requests += s.provider_requests;
+            out.max_batch = out.max_batch.max(s.max_batch);
+        }
+        out
+    }
+}
+
+/// A cloneable handle to one of an [`AgentPool`]'s shared backends; this
+/// is what a pooled scenario's `Agent` owns in place of a private backend.
+pub struct SharedBackend(PoolSlot);
+
+impl LlmBackend for SharedBackend {
+    fn model_name(&self) -> &str {
+        self.0.model_name()
+    }
+
+    fn submit(&self, req: AgentRequest) -> Result<RequestId> {
+        self.0.submit(req)
+    }
+
+    fn try_recv(&self, id: RequestId) -> Result<Option<Completion>> {
+        self.0.try_recv(id)
+    }
+
+    fn recv(&self, id: RequestId) -> Result<Completion> {
+        self.0.recv(id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agent::backend::Message;
+
+    /// Scripted provider: echoes each item tagged with the round-trip
+    /// index, and fails items whose last user message contains "poison".
+    struct Scripted {
+        calls: usize,
+    }
+
+    impl Scripted {
+        fn new() -> Scripted {
+            Scripted { calls: 0 }
+        }
+    }
+
+    impl BatchLlm for Scripted {
+        fn model_name(&self) -> &str {
+            "scripted"
+        }
+
+        fn complete_batch(&mut self, reqs: &[AgentRequest]) -> Vec<Result<Completion>> {
+            self.calls += 1;
+            reqs.iter()
+                .map(|r| {
+                    let text = r.messages.last().map(|m| m.content.clone()).unwrap_or_default();
+                    if text.contains("poison") {
+                        Err(anyhow!("provider rejected item: {text}"))
+                    } else {
+                        Ok(Completion {
+                            text: format!("call{}:{}", self.calls, text),
+                            prompt_tokens: 3,
+                            completion_tokens: 2,
+                            api_seconds: 0.1,
+                        })
+                    }
+                })
+                .collect()
+        }
+    }
+
+    fn req(text: &str) -> AgentRequest {
+        AgentRequest::new(vec![Message::user(text)])
+    }
+
+    #[test]
+    fn cap_fill_executes_one_provider_request_and_fans_out() {
+        let b = BatchingBackend::new(Scripted::new(), 2);
+        let a = b.submit(req("a")).unwrap();
+        assert!(b.try_recv(a).unwrap().is_none(), "buffered, not in flight");
+        let c = b.submit(req("b")).unwrap();
+        let ca = b.try_recv(a).unwrap().expect("flushed at cap fill");
+        let cb = b.try_recv(c).unwrap().expect("same batch");
+        assert_eq!(ca.text, "call1:a");
+        assert_eq!(cb.text, "call1:b");
+        let st = b.stats();
+        assert_eq!(st.provider_requests, 1, "two requests, one round-trip");
+        assert_eq!(st.submitted, 2);
+        assert_eq!(st.max_batch, 2);
+        assert!(b.try_recv(a).is_err(), "a completion is handed out once");
+    }
+
+    #[test]
+    fn explicit_flush_drains_a_partial_fill() {
+        let b = BatchingBackend::new(Scripted::new(), 8);
+        let a = b.submit(req("x")).unwrap();
+        let c = b.submit(req("y")).unwrap();
+        assert!(b.try_recv(a).unwrap().is_none());
+        assert_eq!(b.flush(), 2, "partial buffer flushes on demand");
+        assert_eq!(b.flush(), 0, "empty buffer is a no-op");
+        assert_eq!(b.try_recv(a).unwrap().unwrap().text, "call1:x");
+        assert_eq!(b.try_recv(c).unwrap().unwrap().text, "call1:y");
+        assert_eq!(b.stats().provider_requests, 1);
+    }
+
+    #[test]
+    fn batch_of_one_completes_at_submit() {
+        let b = BatchingBackend::new(Scripted::new(), 1);
+        let a = b.submit(req("solo")).unwrap();
+        let c = b.try_recv(a).unwrap().expect("cap 1 flushes inside submit");
+        assert_eq!(c.text, "call1:solo");
+        assert_eq!(b.stats().provider_requests, 1);
+        assert_eq!(b.stats().max_batch, 1);
+    }
+
+    #[test]
+    fn one_poisoned_item_fails_alone_and_the_rest_complete() {
+        let b = BatchingBackend::new(Scripted::new(), 3);
+        let a = b.submit(req("ok1")).unwrap();
+        let p = b.submit(req("poison pill")).unwrap();
+        let c = b.submit(req("ok2")).unwrap();
+        assert_eq!(b.try_recv(a).unwrap().unwrap().text, "call1:ok1");
+        let err = b.try_recv(p).unwrap_err();
+        assert!(format!("{err:#}").contains("poison"), "{err:#}");
+        assert_eq!(b.try_recv(c).unwrap().unwrap().text, "call1:ok2");
+        assert_eq!(b.stats().provider_requests, 1, "partial failure, one trip");
+    }
+
+    #[test]
+    fn recv_flushes_a_buffered_request_instead_of_hanging() {
+        let b = BatchingBackend::new(Scripted::new(), 16);
+        let a = b.submit(req("blocked")).unwrap();
+        let c = b.recv(a).unwrap();
+        assert_eq!(c.text, "call1:blocked");
+        assert_eq!(b.stats().max_batch, 1, "blocking receive is a flush point");
+        let err = b.recv(a).unwrap_err();
+        assert!(format!("{err:#}").contains("already received"), "{err:#}");
+    }
+
+    struct Panicky;
+
+    impl BatchLlm for Panicky {
+        fn model_name(&self) -> &str {
+            "panicky"
+        }
+
+        fn complete_batch(&mut self, _reqs: &[AgentRequest]) -> Vec<Result<Completion>> {
+            panic!("provider exploded mid-batch")
+        }
+    }
+
+    #[test]
+    fn provider_panic_completes_every_batched_id_with_an_error() {
+        let b = BatchingBackend::new(Panicky, 2);
+        let a = b.submit(req("a")).unwrap();
+        // The cap-fill flush panics inside the provider; both ids must
+        // still resolve (to errors), never hang their sessions.
+        let c = b.submit(req("b")).unwrap();
+        let ea = b.try_recv(a).unwrap_err();
+        assert!(format!("{ea:#}").contains("panicked"), "{ea:#}");
+        assert!(b.try_recv(c).is_err());
+        assert_eq!(b.stats().provider_requests, 1);
+    }
+
+    #[test]
+    fn unknown_ids_are_rejected() {
+        let b = BatchingBackend::new(Scripted::new(), 2);
+        assert!(b.try_recv(RequestId(9)).is_err());
+        assert!(b.recv(RequestId(9)).is_err());
+    }
+
+    #[test]
+    fn pool_shares_one_backend_per_spec_and_aggregates_stats() {
+        let pool = AgentPool::new(4);
+        let h1 = pool.backend("simulated").unwrap();
+        let h2 = pool.backend(" simulated ").unwrap();
+        let h3 = pool.backend("").unwrap();
+        // Three handles (default spec spelled three ways), one buffer: all
+        // submissions land in the same batch.  (Real prompts carry a
+        // CONTEXT_JSON block; these don't, so the simulated policy fails
+        // them — the sharing is what's under test.)
+        let a = h1.submit(req("from h1")).unwrap();
+        let c = h2.submit(req("from h2")).unwrap();
+        let d = h3.submit(req("from h3")).unwrap();
+        assert_eq!(pool.flush(), 3, "one shared buffer behind every handle");
+        assert!(h1.try_recv(a).is_err(), "no CONTEXT_JSON: per-item error");
+        assert!(h2.try_recv(c).is_err());
+        assert!(h3.try_recv(d).is_err());
+        let st = pool.stats();
+        assert_eq!(st.submitted, 3);
+        assert_eq!(st.provider_requests, 1);
+        assert_eq!(st.max_batch, 3);
+        assert!(pool.backend("telepathy").is_err(), "bad specs still fail");
+    }
+}

@@ -29,6 +29,7 @@ use anyhow::{anyhow, bail, Result};
 use crate::util::json::{self, Json};
 
 use super::backend::{AgentRequest, Completion, Dispatcher, LlmBackend, Message, RequestId};
+use super::batch::BatchLlm;
 use super::tokens::{estimate_prompt_tokens, estimate_tokens};
 
 #[derive(Debug, Clone)]
@@ -142,23 +143,29 @@ impl LlmBackend for HttpLlmBackend {
     }
 }
 
+impl BatchLlm for HttpLlmBackend {
+    fn model_name(&self) -> &str {
+        &self.label
+    }
+
+    /// Pack every transcript into **one** chat-JSON request —
+    /// `{"model": …, "batch": [{"messages": […]}, …]}` — answered by a
+    /// `{"results": […]}` array, one entry per item in request order: a
+    /// standard completion object (its `usage` block feeds that item's
+    /// cost accounting) or an `{"error": …}` object, which becomes that
+    /// item's error while the rest of the batch still completes.  The
+    /// single-request retry policy is preserved whole-batch: bounded
+    /// exponential backoff on connect errors, timeouts, 429 and 5xx;
+    /// other 4xx (and malformed reply bodies) are fatal.
+    fn complete_batch(&mut self, reqs: &[AgentRequest]) -> Vec<Result<Completion>> {
+        batch_request_with_retry(&self.cfg, reqs)
+    }
+}
+
 fn request_body(model: &str, messages: &[Message]) -> String {
     let mut body = Json::obj();
     body.set("model", Json::str(model));
-    body.set(
-        "messages",
-        Json::Arr(
-            messages
-                .iter()
-                .map(|m| {
-                    let mut o = Json::obj();
-                    o.set("role", Json::str(m.role.as_str()));
-                    o.set("content", Json::str(m.content.clone()));
-                    o
-                })
-                .collect(),
-        ),
-    );
+    body.set("messages", messages_json(messages));
     body.to_string()
 }
 
@@ -171,8 +178,15 @@ fn retryable(status: Option<u16>) -> bool {
     }
 }
 
-fn request_with_retry(cfg: &HttpConfig, messages: &[Message]) -> Result<Completion> {
-    let body = request_body(&cfg.model, messages);
+/// The one retry skeleton both the single-request and batch paths share:
+/// bounded exponential backoff on connect errors, timeouts, 429 and 5xx;
+/// other 4xx are fatal; a 2xx whose body `parse` rejects is a broken
+/// server, not a transient, so it never burns retries.
+fn send_with_retry<T>(
+    cfg: &HttpConfig,
+    body: &str,
+    parse: impl Fn(&str, f64) -> Result<T>,
+) -> Result<T> {
     let mut last_err = None;
     for attempt in 0..=cfg.max_retries {
         if attempt > 0 {
@@ -180,18 +194,28 @@ fn request_with_retry(cfg: &HttpConfig, messages: &[Message]) -> Result<Completi
             std::thread::sleep(exp.min(BACKOFF_CAP));
         }
         let t0 = std::time::Instant::now();
-        match request_once(cfg, &body) {
+        match request_once(cfg, body) {
             Ok((status, resp_body)) if (200..300).contains(&status) => {
-                return parse_completion_json(&resp_body, messages, t0.elapsed().as_secs_f64());
+                match parse(&resp_body, t0.elapsed().as_secs_f64()) {
+                    Ok(v) => return Ok(v),
+                    Err(e) => {
+                        last_err = Some(e);
+                        break;
+                    }
+                }
             }
             Ok((status, resp_body)) => {
                 let snip: String = resp_body.chars().take(200).collect();
-                let err =
-                    anyhow!("HTTP {status} from {}:{}{}: {snip}", cfg.host, cfg.port, cfg.path);
-                if !retryable(Some(status)) {
-                    return Err(err);
+                let fatal = !retryable(Some(status));
+                last_err = Some(anyhow!(
+                    "HTTP {status} from {}:{}{}: {snip}",
+                    cfg.host,
+                    cfg.port,
+                    cfg.path
+                ));
+                if fatal {
+                    break;
                 }
-                last_err = Some(err);
             }
             Err(e) => last_err = Some(e),
         }
@@ -199,6 +223,96 @@ fn request_with_retry(cfg: &HttpConfig, messages: &[Message]) -> Result<Completi
     Err(last_err
         .unwrap_or_else(|| anyhow!("unreachable: no attempt ran"))
         .context(format!("after {} attempt(s)", cfg.max_retries + 1)))
+}
+
+fn request_with_retry(cfg: &HttpConfig, messages: &[Message]) -> Result<Completion> {
+    let body = request_body(&cfg.model, messages);
+    send_with_retry(cfg, &body, |resp, wall| {
+        parse_completion_json(resp, messages, wall)
+    })
+}
+
+fn messages_json(messages: &[Message]) -> Json {
+    Json::Arr(
+        messages
+            .iter()
+            .map(|m| {
+                let mut o = Json::obj();
+                o.set("role", Json::str(m.role.as_str()));
+                o.set("content", Json::str(m.content.clone()));
+                o
+            })
+            .collect(),
+    )
+}
+
+fn batch_request_body(model: &str, reqs: &[AgentRequest]) -> String {
+    let mut body = Json::obj();
+    body.set("model", Json::str(model));
+    body.set(
+        "batch",
+        Json::Arr(
+            reqs.iter()
+                .map(|r| {
+                    let mut o = Json::obj();
+                    o.set("messages", messages_json(&r.messages));
+                    o
+                })
+                .collect(),
+        ),
+    );
+    body.to_string()
+}
+
+/// Split a `{"results": […]}` reply back out into per-item completions.
+/// The results array must be exactly `reqs.len()` long; a short or
+/// malformed reply is a whole-batch error (the caller fails every slot).
+fn parse_batch_results(
+    body: &str,
+    reqs: &[AgentRequest],
+    wall_s: f64,
+) -> Result<Vec<Result<Completion>>> {
+    let j = json::parse(body).map_err(|e| anyhow!("bad batch-completion JSON: {e}"))?;
+    let results = j
+        .get("results")
+        .and_then(|r| r.as_arr())
+        .ok_or_else(|| anyhow!("no results array in batch completion"))?;
+    if results.len() != reqs.len() {
+        bail!(
+            "batch completion has {} result(s) for {} request(s)",
+            results.len(),
+            reqs.len()
+        );
+    }
+    Ok(results
+        .iter()
+        .zip(reqs)
+        .map(|(item, req)| {
+            if let Some(err) = item.get("error") {
+                let msg = err
+                    .get("message")
+                    .and_then(|m| m.as_str())
+                    .unwrap_or("unspecified provider error");
+                return Err(anyhow!("provider rejected batch item: {msg}"));
+            }
+            completion_from_json(item, &req.messages, wall_s)
+        })
+        .collect())
+}
+
+fn batch_request_with_retry(cfg: &HttpConfig, reqs: &[AgentRequest]) -> Vec<Result<Completion>> {
+    let body = batch_request_body(&cfg.model, reqs);
+    match send_with_retry(cfg, &body, |resp, wall| parse_batch_results(resp, reqs, wall)) {
+        Ok(per_item) => per_item,
+        // Whole-batch failure: every item gets the transport error, so
+        // partial batches never half-complete silently.
+        Err(e) => {
+            let msg = format!("{e:#}");
+            reqs.iter()
+                .map(|_| Err(anyhow!("batched request failed: {msg}")))
+                .collect()
+        }
+    }
 }
 
 /// One HTTP/1.1 POST round-trip.  Returns (status, body).
@@ -301,6 +415,12 @@ fn decode_chunked(mut rest: &[u8]) -> Result<Vec<u8>> {
 
 fn parse_completion_json(body: &str, messages: &[Message], wall_s: f64) -> Result<Completion> {
     let j = json::parse(body).map_err(|e| anyhow!("bad completion JSON: {e}"))?;
+    completion_from_json(&j, messages, wall_s)
+}
+
+/// Extract one completion object (`choices[0].message.content` + `usage`)
+/// — shared by the single-request and batch reply paths.
+fn completion_from_json(j: &Json, messages: &[Message], wall_s: f64) -> Result<Completion> {
     let text = j
         .get("choices")
         .and_then(|c| c.as_arr())
@@ -472,6 +592,146 @@ mod tests {
         assert_eq!(b.cfg.path, "/v1/chat/completions");
         assert!(HttpLlmBackend::from_url("https://example.com").is_err());
         assert!(HttpLlmBackend::from_url("ftp://example.com").is_err());
+    }
+
+    /// Batch-protocol stub: each accepted connection parses the batch
+    /// request body and answers per `script[i]`: `Ok(items)` → 200 with a
+    /// results array (each item `Ok(text)` → a completion object with a
+    /// per-item usage block, `Err(msg)` → an error object); `Err(status)`
+    /// → that HTTP status for the whole request.  A request whose batch
+    /// length does not match the scripted items gets a 400.
+    type BatchScript = Vec<Result<Vec<Result<&'static str, &'static str>>, i32>>;
+
+    fn batch_stub(script: BatchScript) -> (u16, Arc<AtomicUsize>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let port = listener.local_addr().unwrap().port();
+        let hits = Arc::new(AtomicUsize::new(0));
+        let seen = Arc::clone(&hits);
+        std::thread::spawn(move || {
+            for action in script {
+                let Ok((mut sock, _)) = listener.accept() else {
+                    return;
+                };
+                seen.fetch_add(1, Ordering::SeqCst);
+                let mut reader = std::io::BufReader::new(sock.try_clone().unwrap());
+                let mut content_length = 0usize;
+                loop {
+                    let mut line = String::new();
+                    if reader.read_line(&mut line).is_err() || line == "\r\n" || line.is_empty() {
+                        break;
+                    }
+                    if let Some((k, v)) = line.split_once(':') {
+                        if k.eq_ignore_ascii_case("content-length") {
+                            content_length = v.trim().parse().unwrap_or(0);
+                        }
+                    }
+                }
+                let mut body = vec![0u8; content_length];
+                let _ = std::io::Read::read_exact(&mut reader, &mut body);
+                let respond = |sock: &mut std::net::TcpStream, status: u16, body: &str| {
+                    let _ = sock.write_all(
+                        format!(
+                            "HTTP/1.1 {status} X\r\nContent-Length: {}\r\n\
+                             Connection: close\r\n\r\n{body}",
+                            body.len()
+                        )
+                        .as_bytes(),
+                    );
+                };
+                match action {
+                    Ok(items) => {
+                        let n = std::str::from_utf8(&body)
+                            .ok()
+                            .and_then(|s| json::parse(s).ok())
+                            .and_then(|j| j.get("batch").and_then(|b| b.as_arr()).map(|a| a.len()))
+                            .unwrap_or(0);
+                        if n != items.len() {
+                            respond(&mut sock, 400, "batch length mismatch");
+                            continue;
+                        }
+                        let mut results = Vec::new();
+                        for (i, item) in items.into_iter().enumerate() {
+                            match item {
+                                Ok(text) => {
+                                    let mut msg = Json::obj();
+                                    msg.set("content", Json::str(text));
+                                    let mut choice = Json::obj();
+                                    choice.set("message", msg);
+                                    let mut usage = Json::obj();
+                                    usage.set("prompt_tokens", Json::Num(11.0 + i as f64));
+                                    usage.set("completion_tokens", Json::Num(7.0 + i as f64));
+                                    let mut r = Json::obj();
+                                    r.set("choices", Json::Arr(vec![choice]));
+                                    r.set("usage", usage);
+                                    results.push(r);
+                                }
+                                Err(m) => {
+                                    let mut e = Json::obj();
+                                    e.set("message", Json::str(m));
+                                    let mut r = Json::obj();
+                                    r.set("error", e);
+                                    results.push(r);
+                                }
+                            }
+                        }
+                        let mut resp = Json::obj();
+                        resp.set("results", Json::Arr(results));
+                        respond(&mut sock, 200, &resp.to_string());
+                    }
+                    Err(status) => respond(&mut sock, status as u16, "oops!"),
+                }
+            }
+        });
+        (port, hits)
+    }
+
+    fn batch_reqs(n: usize) -> Vec<AgentRequest> {
+        (0..n)
+            .map(|i| AgentRequest::new(vec![Message::user(format!("prompt {i}"))]))
+            .collect()
+    }
+
+    #[test]
+    fn batch_round_trip_splits_usage_per_item() {
+        let (port, hits) = batch_stub(vec![Ok(vec![Ok("alpha"), Ok("beta")])]);
+        let mut b = client(port, 0);
+        let out = b.complete_batch(&batch_reqs(2));
+        assert_eq!(out.len(), 2);
+        let (a, c) = (out[0].as_ref().unwrap(), out[1].as_ref().unwrap());
+        assert_eq!(a.text, "alpha");
+        assert_eq!(c.text, "beta");
+        assert_eq!(a.prompt_tokens, 11, "per-item usage split back out");
+        assert_eq!(c.prompt_tokens, 12);
+        assert_eq!(c.completion_tokens, 8);
+        assert_eq!(hits.load(Ordering::SeqCst), 1, "one provider round-trip");
+    }
+
+    #[test]
+    fn one_rejected_batch_item_fails_alone() {
+        let (port, hits) = batch_stub(vec![Ok(vec![Ok("good"), Err("content filter")])]);
+        let out = client(port, 0).complete_batch(&batch_reqs(2));
+        assert_eq!(out[0].as_ref().unwrap().text, "good");
+        let err = out[1].as_ref().unwrap_err();
+        assert!(format!("{err:#}").contains("content filter"), "{err:#}");
+        assert_eq!(hits.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn batch_5xx_retries_the_whole_batch_then_succeeds() {
+        let (port, hits) = batch_stub(vec![Err(503), Ok(vec![Ok("recovered")])]);
+        let out = client(port, 2).complete_batch(&batch_reqs(1));
+        assert_eq!(out[0].as_ref().unwrap().text, "recovered");
+        assert_eq!(hits.load(Ordering::SeqCst), 2, "one failure then success");
+    }
+
+    #[test]
+    fn batch_4xx_fails_every_slot_without_retry() {
+        let (port, hits) = batch_stub(vec![Err(401), Ok(vec![Ok("never served")])]);
+        let out = client(port, 3).complete_batch(&batch_reqs(2));
+        assert!(out.iter().all(|r| r.is_err()));
+        let err = out[0].as_ref().unwrap_err();
+        assert!(format!("{err:#}").contains("401"), "{err:#}");
+        assert_eq!(hits.load(Ordering::SeqCst), 1, "4xx must not retry");
     }
 
     #[test]

@@ -7,6 +7,11 @@
 //!   a deterministic rule-based ReAct policy implementing the tuning
 //!   heuristics visible in the paper's Appendix E transcripts (substitution
 //!   table in DESIGN.md §2).
+//! * [`batch`] — provider-side request batching: the [`batch::BatchLlm`]
+//!   trait, the [`batch::BatchingBackend`] buffering adapter, and the
+//!   fleet-level [`batch::AgentPool`] that coalesces many scenarios'
+//!   in-flight proposals into one provider request (`--batch` /
+//!   `HAQA_BATCH`).
 //! * `http` — the real OpenAI-style HTTP backend (module and link exist
 //!   only under the `http-agent` feature).
 //! * [`transcript`] — record/replay journaling so live sessions replay
@@ -19,6 +24,7 @@
 //! * [`tokens`] — token & cost accounting (Appendix C).
 
 pub mod backend;
+pub mod batch;
 pub mod driver;
 pub mod history;
 #[cfg(feature = "http-agent")]
@@ -39,9 +45,10 @@ use crate::util::json::Json;
 pub use backend::{
     AgentRequest, BlockingLlm, Completion, LlmBackend, Message, Pipelined, RequestId, Role, SlowLlm,
 };
+pub use batch::{AgentPool, BatchLlm, BatchStats, BatchingBackend, SharedBackend};
 pub use driver::Agent;
 pub use react::AgentReply;
-pub use transcript::{RecordingBackend, ReplayBackend};
+pub use transcript::{BatchRecorder, BatchReplay, RecordingBackend, ReplayBackend};
 
 /// Build a backend from a scenario's `backend` spec string:
 ///
@@ -85,6 +92,65 @@ pub fn backend_from_spec(spec: &str, seed: u64) -> Result<Box<dyn LlmBackend>> {
     }
     if let Some(path) = spec.strip_prefix("replay:") {
         return Ok(Box::new(ReplayBackend::open(path)?));
+    }
+    if spec.starts_with("http://") || spec.starts_with("https://") {
+        #[cfg(feature = "http-agent")]
+        {
+            return Ok(Box::new(http::HttpLlmBackend::from_url(spec)?));
+        }
+        #[cfg(not(feature = "http-agent"))]
+        anyhow::bail!(
+            "backend '{spec}' needs the `http-agent` feature \
+             (build with --features http-agent)"
+        );
+    }
+    anyhow::bail!(
+        "unknown backend spec '{spec}' (expected simulated | simulated-slow:<ms> | \
+         record:<path> | replay:<path> | http://…)"
+    )
+}
+
+/// Build the *batch-capable* provider tree for a backend spec — the
+/// `--batch` / `HAQA_BATCH` fleet mode's counterpart of
+/// [`backend_from_spec`].  Same spec grammar, but every layer implements
+/// [`BatchLlm`] so a [`batch::BatchingBackend`] on top can coalesce many
+/// scenarios' requests into one provider call:
+///
+/// * `"simulated"` (or empty) — the **content-seeded** policy
+///   ([`simulated::SimulatedLlm::stateless`]): a shared provider must
+///   answer a given transcript identically for every scenario;
+/// * `"simulated-slow:<ms>"` — the same policy behind `<ms>` of simulated
+///   latency, paid **once per batch** rather than once per request;
+/// * `"record:<path>[=<inner-spec>]"` — journal items *and batch
+///   boundaries* through [`transcript::BatchRecorder`];
+/// * `"replay:<path>"` — serve a recorded journal, enforcing the recorded
+///   batch composition ([`transcript::BatchReplay`]);
+/// * `"http://…"` — one chat-JSON request per batch (`http-agent`
+///   feature).
+pub fn batch_llm_from_spec(spec: &str, seed: u64) -> Result<Box<dyn BatchLlm>> {
+    let spec = spec.trim();
+    if spec.is_empty() || spec == "simulated" {
+        return Ok(Box::new(simulated::SimulatedLlm::stateless(seed)));
+    }
+    if let Some(ms) = spec.strip_prefix("simulated-slow:") {
+        let ms: u64 = ms.trim().parse().map_err(|_| {
+            anyhow::anyhow!("bad latency '{ms}' in backend spec '{spec}' (expected milliseconds)")
+        })?;
+        return Ok(Box::new(SlowLlm::new(
+            simulated::SimulatedLlm::stateless(seed),
+            std::time::Duration::from_millis(ms),
+        )));
+    }
+    if let Some(rest) = spec.strip_prefix("record:") {
+        let (path, inner_spec) = match rest.split_once('=') {
+            Some((p, i)) => (p, i),
+            None => (rest, "simulated"),
+        };
+        let inner = batch_llm_from_spec(inner_spec, seed)?;
+        return Ok(Box::new(BatchRecorder::create(path, inner)?));
+    }
+    if let Some(path) = spec.strip_prefix("replay:") {
+        return Ok(Box::new(BatchReplay::open(path)?));
     }
     if spec.starts_with("http://") || spec.starts_with("https://") {
         #[cfg(feature = "http-agent")]

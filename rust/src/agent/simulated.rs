@@ -31,11 +31,22 @@ use crate::search::{Config, Space};
 use crate::util::json::{self, Json};
 use crate::util::rng::Rng;
 
-use super::backend::{BlockingLlm, Message, Role};
+use super::backend::{AgentRequest, BlockingLlm, Message, Role};
+use super::batch::BatchLlm;
 use super::react::render_reply;
+use super::tokens::{estimate_prompt_tokens, estimate_tokens, SIMULATED_ROUNDTRIP_S};
+use super::transcript::transcript_key;
+use super::Completion;
 
 pub struct SimulatedLlm {
     rng: Rng,
+    seed: u64,
+    /// Content-seeded mode: each completion draws from an RNG derived from
+    /// `(seed, transcript content)` instead of the instance's running
+    /// stream, making the reply a pure function of the transcript — like a
+    /// temperature-0 endpoint.  This is what lets one instance be shared
+    /// (and batch-served) across scenarios without call order mattering.
+    stateless: bool,
     /// Probability of emitting a §3.2 failure-mode reply (retries always
     /// produce a valid one, as GPT-4 does after correction).
     pub failure_rate: f64,
@@ -45,8 +56,20 @@ impl SimulatedLlm {
     pub fn new(seed: u64) -> Self {
         SimulatedLlm {
             rng: Rng::new(seed),
+            seed,
+            stateless: false,
             failure_rate: 0.05,
         }
+    }
+
+    /// The content-seeded policy (see the `stateless` field): same
+    /// transcript ⇒ same completion, regardless of call order or sharing.
+    /// This is the variant [`crate::agent::batch::AgentPool`] builds for
+    /// the batched fleet.
+    pub fn stateless(seed: u64) -> Self {
+        let mut s = SimulatedLlm::new(seed);
+        s.stateless = true;
+        s
     }
 
     pub fn with_failure_rate(mut self, p: f64) -> Self {
@@ -61,68 +84,166 @@ impl BlockingLlm for SimulatedLlm {
     }
 
     fn complete(&mut self, messages: &[Message]) -> Result<String> {
-        let ctx = extract_context(messages)
-            .ok_or_else(|| anyhow!("no CONTEXT_JSON block in transcript"))?;
-        let is_retry = messages
-            .last()
-            .map(|m| m.role == Role::User && m.content.contains("previous response was invalid"))
-            .unwrap_or(false);
-
-        let space = Space::from_json("ctx", ctx.req("space")?)?;
-        let history = parse_history(&ctx, &space);
-        let task = ctx.req_str("task")?.to_string();
-
-        let (thought, cfg) = match task.as_str() {
-            "kernel_tuning" => kernel_policy(&ctx, &space, &history, &mut self.rng),
-            "bitwidth" => bitwidth_policy(&ctx, &space),
-            _ => finetune_policy(&ctx, &space, &history, &mut self.rng),
-        };
-        let cfg = space.repair(&cfg);
-
-        // §3.2 failure injection (never on a retry).
-        if !is_retry && self.rng.bool(self.failure_rate) {
-            return Ok(self.faulty_reply(&space, &cfg, &thought));
+        if self.stateless {
+            let key = transcript_key(messages);
+            let mut rng = Rng::new(self.seed ^ (key as u64) ^ ((key >> 64) as u64));
+            complete_impl(messages, &mut rng, self.failure_rate)
+        } else {
+            complete_impl(messages, &mut self.rng, self.failure_rate)
         }
-        Ok(render_reply(&thought, &space.config_to_json(&cfg)))
     }
 }
 
-impl SimulatedLlm {
-    /// Emit one of the paper's three observed failure modes.
-    fn faulty_reply(&mut self, space: &Space, cfg: &Config, thought: &str) -> String {
-        match self.rng.usize(3) {
-            0 => {
-                // Mode 1: response without the required JSON format.
-                format!(
-                    "Thought: {thought}\nI believe the next configuration \
-                     should decrease the learning rate slightly and increase \
-                     regularization, as discussed above."
-                )
+impl BatchLlm for SimulatedLlm {
+    fn model_name(&self) -> &str {
+        "simulated-react-policy"
+    }
+
+    /// The native batch path: items complete in request order against the
+    /// same policy the unbatched pipeline runs, so the offline default
+    /// exercises exactly the code a provider-side batch would.
+    fn complete_batch(&mut self, reqs: &[AgentRequest]) -> Vec<Result<Completion>> {
+        reqs.iter()
+            .map(|r| {
+                BlockingLlm::complete(self, &r.messages).map(|text| Completion {
+                    prompt_tokens: estimate_prompt_tokens(&r.messages),
+                    completion_tokens: estimate_tokens(&text),
+                    api_seconds: SIMULATED_ROUNDTRIP_S,
+                    text,
+                })
+            })
+            .collect()
+    }
+}
+
+/// One policy step: parse the transcript's `CONTEXT_JSON` block, run the
+/// task's rule-based policy, maybe inject a §3.2 failure mode.  Takes the
+/// RNG explicitly so the stateful (instance stream) and stateless
+/// (content-derived) modes share every other line of code.
+fn complete_impl(messages: &[Message], rng: &mut Rng, failure_rate: f64) -> Result<String> {
+    let ctx = extract_context(messages)
+        .ok_or_else(|| anyhow!("no CONTEXT_JSON block in transcript"))?;
+    let is_retry = messages
+        .last()
+        .map(|m| m.role == Role::User && m.content.contains("previous response was invalid"))
+        .unwrap_or(false);
+
+    let space = Space::from_json("ctx", ctx.req("space")?)?;
+    let history = parse_history(&ctx, &space);
+    let task = ctx.req_str("task")?.to_string();
+
+    let (thought, cfg) = match task.as_str() {
+        "kernel_tuning" => kernel_policy(&ctx, &space, &history, rng),
+        "bitwidth" => bitwidth_policy(&ctx, &space),
+        _ => finetune_policy(&ctx, &space, &history, rng),
+    };
+    let cfg = space.repair(&cfg);
+
+    // §3.2 failure injection (never on a retry).
+    if !is_retry && rng.bool(failure_rate) {
+        return Ok(faulty_reply(rng, &space, &cfg, &thought));
+    }
+    Ok(render_reply(&thought, &space.config_to_json(&cfg)))
+}
+
+/// Emit one of the paper's three observed failure modes.
+fn faulty_reply(rng: &mut Rng, space: &Space, cfg: &Config, thought: &str) -> String {
+    match rng.usize(3) {
+        0 => {
+            // Mode 1: response without the required JSON format.
+            format!(
+                "Thought: {thought}\nI believe the next configuration \
+                 should decrease the learning rate slightly and increase \
+                 regularization, as discussed above."
+            )
+        }
+        1 => {
+            // Mode 2: a constraint violation (first numeric param 10x
+            // over its upper bound).
+            let mut bad = cfg.clone();
+            if let Some(p) = space.params.iter().find(|p| {
+                matches!(p.kind, ParamKind::Float { .. } | ParamKind::Int { .. })
+            }) {
+                let v = match &p.kind {
+                    ParamKind::Float { hi, .. } => Value::Float(hi * 10.0),
+                    ParamKind::Int { hi, .. } => Value::Int(hi * 10),
+                    _ => unreachable!(),
+                };
+                bad.insert(p.name.clone(), v);
             }
-            1 => {
-                // Mode 2: a constraint violation (first numeric param 10x
-                // over its upper bound).
-                let mut bad = cfg.clone();
-                if let Some(p) = space.params.iter().find(|p| {
-                    matches!(p.kind, ParamKind::Float { .. } | ParamKind::Int { .. })
-                }) {
-                    let v = match &p.kind {
-                        ParamKind::Float { hi, .. } => Value::Float(hi * 10.0),
-                        ParamKind::Int { hi, .. } => Value::Int(hi * 10),
-                        _ => unreachable!(),
-                    };
-                    bad.insert(p.name.clone(), v);
-                }
-                render_reply(thought, &space.config_to_json(&bad))
-            }
-            _ => {
-                // Mode 3: irrelevant content around a broken JSON object.
-                format!(
-                    "Thought: {thought}\nAs an aside, transformers were \
-                     introduced in 2017 and attention scales quadratically. \
-                     {{\"learning_rate\": oops}}"
-                )
-            }
+            render_reply(thought, &space.config_to_json(&bad))
+        }
+        _ => {
+            // Mode 3: irrelevant content around a broken JSON object.
+            format!(
+                "Thought: {thought}\nAs an aside, transformers were \
+                 introduced in 2017 and attention scales quadratically. \
+                 {{\"learning_rate\": oops}}"
+            )
+        }
+    }
+}
+
+#[cfg(test)]
+mod stateless_tests {
+    use super::*;
+    use crate::agent::prompt::dynamic_prompt;
+    use crate::agent::{TaskContext, TaskKind};
+    use crate::search::spaces;
+    use crate::util::json::Json;
+
+    fn kernel_prompt(batch: usize) -> Vec<Message> {
+        let space = spaces::kernel_exec();
+        let mut obj = Json::obj();
+        obj.set("kernel", Json::str(format!("matmul:{batch}")));
+        let ctx = TaskContext {
+            kind: TaskKind::KernelTuning,
+            space: &space,
+            history: &[],
+            rounds_left: 5,
+            hardware: None,
+            objective: obj,
+        };
+        vec![Message::user(dynamic_prompt(&ctx, &[]))]
+    }
+
+    /// The shared-provider contract: a content-seeded policy answers a
+    /// given transcript identically whatever the call order, and two
+    /// instances with the same seed agree — so pooled scenarios can share
+    /// one instance and batches can execute in any composition.
+    #[test]
+    fn stateless_completions_are_order_invariant() {
+        let (a, b) = (kernel_prompt(64), kernel_prompt(128));
+        let mut fwd = SimulatedLlm::stateless(9);
+        let fa = fwd.complete(&a).unwrap();
+        let fb = fwd.complete(&b).unwrap();
+        let mut rev = SimulatedLlm::stateless(9);
+        let rb = rev.complete(&b).unwrap();
+        let ra = rev.complete(&a).unwrap();
+        assert_eq!(fa, ra, "call order must not change a completion");
+        assert_eq!(fb, rb);
+        // The stateful policy keeps its running stream (unchanged default).
+        let mut stateful = SimulatedLlm::new(9);
+        let sa1 = stateful.complete(&a).unwrap();
+        let mut stateful2 = SimulatedLlm::new(9);
+        assert_eq!(sa1, stateful2.complete(&a).unwrap());
+    }
+
+    /// The native batch path returns one completion per request, in
+    /// order, matching the one-at-a-time path bit for bit.
+    #[test]
+    fn native_batch_matches_sequential_completion() {
+        let reqs = vec![
+            AgentRequest::new(kernel_prompt(64)),
+            AgentRequest::new(kernel_prompt(128)),
+        ];
+        let batched = SimulatedLlm::stateless(4).complete_batch(&reqs);
+        assert_eq!(batched.len(), 2);
+        let mut seq = SimulatedLlm::stateless(4);
+        for (r, b) in reqs.iter().zip(&batched) {
+            let b = b.as_ref().expect("valid prompt completes");
+            assert_eq!(b.text, seq.complete(&r.messages).unwrap());
+            assert!(b.prompt_tokens > 0 && b.completion_tokens > 0);
         }
     }
 }

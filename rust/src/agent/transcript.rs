@@ -29,6 +29,7 @@ use crate::util::json::{self, Json};
 use crate::util::{jsonl, lock};
 
 use super::backend::{AgentRequest, Completion, LlmBackend, Message, RequestId, SyncMailbox};
+use super::batch::BatchLlm;
 
 /// Journal file name when a directory is given instead of a file path.
 pub const TRANSCRIPT_FILE: &str = "transcripts.jsonl";
@@ -68,6 +69,21 @@ fn encode_record(key: u128, model: &str, c: &Completion) -> String {
     // bit-identical; the plain number is informational.
     o.set("api_seconds", Json::Num(c.api_seconds));
     o.set("api_s_bits", Json::str(format!("{:016x}", c.api_seconds.to_bits())));
+    let mut line = o.to_string();
+    line.push('\n');
+    line
+}
+
+/// A batch boundary record: which transcript keys one provider round-trip
+/// served, in request order.  Written by [`BatchRecorder`] after the
+/// batch's item records; enforced by [`BatchReplay`]; ignored (not even
+/// counted as corrupt) by the unbatched [`ReplayBackend`].
+fn encode_batch_record(keys: &[u128]) -> String {
+    let mut o = Json::obj();
+    o.set(
+        "batch",
+        Json::Arr(keys.iter().map(|k| Json::str(hash::hex128(*k))).collect()),
+    );
     let mut line = o.to_string();
     line.push('\n');
     line
@@ -197,41 +213,70 @@ pub struct ReplayBackend {
     path: PathBuf,
 }
 
+/// Everything one pass over a transcript journal yields: the per-key FIFO
+/// of completions, the batch boundaries (if the session was recorded
+/// through [`BatchRecorder`]), and the recorded model label.
+struct JournalData {
+    model: String,
+    records: HashMap<u128, VecDeque<Completion>>,
+    batches: VecDeque<Vec<u128>>,
+    loaded: usize,
+}
+
+fn load_journal(path: &Path) -> Result<JournalData> {
+    let bytes =
+        std::fs::read(path).with_context(|| format!("transcript journal {}", path.display()))?;
+    let mut data = JournalData {
+        model: String::from("replay"),
+        records: HashMap::new(),
+        batches: VecDeque::new(),
+        loaded: 0,
+    };
+    let scan = jsonl::scan(&bytes, |j, _| {
+        if let Some(arr) = j.get("batch").and_then(|v| v.as_arr()) {
+            let mut keys = Vec::with_capacity(arr.len());
+            for k in arr {
+                match k.as_str().and_then(hash::parse_hex128) {
+                    Some(h) => keys.push(h),
+                    None => return false,
+                }
+            }
+            data.batches.push_back(keys);
+            return true;
+        }
+        if let Some(m) = j.get("model").and_then(|v| v.as_str()) {
+            data.model = format!("replay:{m}");
+        }
+        match decode_record(j) {
+            Some((key, c)) => {
+                data.records.entry(key).or_default().push_back(c);
+                data.loaded += 1;
+                true
+            }
+            None => false,
+        }
+    });
+    if scan.skipped > 0 {
+        eprintln!(
+            "transcript replay: skipped {} corrupt/truncated record(s) in {}",
+            scan.skipped,
+            path.display()
+        );
+    }
+    Ok(data)
+}
+
 impl ReplayBackend {
     pub fn open(path: impl AsRef<Path>) -> Result<ReplayBackend> {
         let path = journal_path(path.as_ref());
-        let bytes = std::fs::read(&path)
-            .with_context(|| format!("transcript journal {}", path.display()))?;
-        let mut records: HashMap<u128, VecDeque<Completion>> = HashMap::new();
-        let mut model = String::from("replay");
-        let mut loaded = 0usize;
-        let scan = jsonl::scan(&bytes, |j, _| {
-            if let Some(m) = j.get("model").and_then(|v| v.as_str()) {
-                model = format!("replay:{m}");
-            }
-            match decode_record(j) {
-                Some((key, c)) => {
-                    records.entry(key).or_default().push_back(c);
-                    loaded += 1;
-                    true
-                }
-                None => false,
-            }
-        });
-        if scan.skipped > 0 {
-            eprintln!(
-                "transcript replay: skipped {} corrupt/truncated record(s) in {}",
-                scan.skipped,
-                path.display()
-            );
-        }
-        if loaded == 0 {
+        let data = load_journal(&path)?;
+        if data.loaded == 0 {
             return Err(anyhow!("no transcript records in {}", path.display()));
         }
         Ok(ReplayBackend {
-            model,
+            model: data.model,
             state: Mutex::new(ReplayState {
-                records,
+                records: data.records,
                 mail: SyncMailbox::default(),
             }),
             path,
@@ -273,6 +318,156 @@ impl LlmBackend for ReplayBackend {
 
     fn recv(&self, id: RequestId) -> Result<Completion> {
         lock(&self.state).mail.take(id, &self.model)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// BatchRecorder / BatchReplay: the batched pipeline's journal adapters
+// ---------------------------------------------------------------------------
+
+/// Journals every completed request of a wrapped [`BatchLlm`] provider —
+/// the batch-mode counterpart of [`RecordingBackend`] — plus one *batch
+/// boundary* record per provider round-trip (`{"batch": [key, …]}`), so a
+/// replay reproduces not just each completion but the batching itself.
+/// Item records use the exact [`RecordingBackend`] format, so a journal
+/// recorded batched also replays through the unbatched [`ReplayBackend`]
+/// (which skips the boundary lines).
+pub struct BatchRecorder {
+    inner: Box<dyn BatchLlm>,
+    file: File,
+    path: PathBuf,
+}
+
+impl BatchRecorder {
+    /// Wrap `inner`, appending records to `path` (a `.jsonl` file, or a
+    /// directory that gets a `transcripts.jsonl`).
+    pub fn create(path: impl AsRef<Path>, inner: Box<dyn BatchLlm>) -> Result<BatchRecorder> {
+        let path = journal_path(path.as_ref());
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let file = jsonl::open_append_healed(&path)?;
+        Ok(BatchRecorder { inner, file, path })
+    }
+
+    /// Where the journal is being written.
+    pub fn journal_path(&self) -> &Path {
+        &self.path
+    }
+}
+
+impl BatchLlm for BatchRecorder {
+    fn model_name(&self) -> &str {
+        self.inner.model_name()
+    }
+
+    fn complete_batch(&mut self, reqs: &[AgentRequest]) -> Vec<Result<Completion>> {
+        let keys: Vec<u128> = reqs.iter().map(|r| transcript_key(&r.messages)).collect();
+        let out = self.inner.complete_batch(reqs);
+        let mut buf = String::new();
+        for (key, r) in keys.iter().zip(&out) {
+            if let Ok(c) = r {
+                buf.push_str(&encode_record(*key, self.inner.model_name(), c));
+            }
+        }
+        // The boundary carries every key — failed items included — because
+        // it records the batch *composition* the provider was asked for.
+        buf.push_str(&encode_batch_record(&keys));
+        // One write for the whole batch (items + boundary); a failed
+        // append only loses journal lines, never the live completions.
+        let _ = self
+            .file
+            .write_all(buf.as_bytes())
+            .and_then(|()| self.file.flush());
+        out
+    }
+}
+
+/// Serves a recorded journal as a [`BatchLlm`]: items match by transcript
+/// content (FIFO per key, like [`ReplayBackend`]) and, when the journal
+/// carries batch boundary records, every `complete_batch` call must
+/// reproduce the recorded batch composition exactly — a divergence fails
+/// the whole batch loudly instead of silently re-batching.  Journals
+/// recorded *unbatched* (no boundary records) replay without composition
+/// enforcement.
+pub struct BatchReplay {
+    model: String,
+    records: HashMap<u128, VecDeque<Completion>>,
+    batches: VecDeque<Vec<u128>>,
+    enforce: bool,
+    path: PathBuf,
+}
+
+impl BatchReplay {
+    /// Load `path` (same journal format as [`ReplayBackend::open`]).
+    pub fn open(path: impl AsRef<Path>) -> Result<BatchReplay> {
+        let path = journal_path(path.as_ref());
+        let data = load_journal(&path)?;
+        if data.loaded == 0 {
+            return Err(anyhow!("no transcript records in {}", path.display()));
+        }
+        Ok(BatchReplay {
+            model: data.model,
+            records: data.records,
+            enforce: !data.batches.is_empty(),
+            batches: data.batches,
+            path,
+        })
+    }
+
+    /// Recorded completions not yet served.
+    pub fn remaining(&self) -> usize {
+        self.records.values().map(|q| q.len()).sum()
+    }
+}
+
+impl BatchLlm for BatchReplay {
+    fn model_name(&self) -> &str {
+        &self.model
+    }
+
+    fn complete_batch(&mut self, reqs: &[AgentRequest]) -> Vec<Result<Completion>> {
+        let keys: Vec<u128> = reqs.iter().map(|r| transcript_key(&r.messages)).collect();
+        if self.enforce {
+            let expected = self.batches.pop_front();
+            if expected.as_deref() != Some(&keys[..]) {
+                let what = match expected {
+                    Some(e) => format!(
+                        "the recording's next batch has {} request(s) with \
+                         different content",
+                        e.len()
+                    ),
+                    None => "the recording has no further provider batches".to_string(),
+                };
+                return keys
+                    .iter()
+                    .map(|_| {
+                        Err(anyhow!(
+                            "provider batch composition diverged from the \
+                             recording in {}: {what}",
+                            self.path.display()
+                        ))
+                    })
+                    .collect();
+            }
+        }
+        keys.iter()
+            .map(|k| {
+                self.records
+                    .get_mut(k)
+                    .and_then(|q| q.pop_front())
+                    .ok_or_else(|| {
+                        anyhow!(
+                            "no recorded completion for transcript {} in {} — \
+                             the replayed run diverged from the recording",
+                            hash::hex128(*k),
+                            self.path.display()
+                        )
+                    })
+            })
+            .collect()
     }
 }
 
@@ -386,6 +581,79 @@ mod tests {
         let path = tmp("empty");
         std::fs::write(&path, "").unwrap();
         assert!(ReplayBackend::open(&path).is_err());
+        assert!(BatchReplay::open(&path).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn batched_record_then_batch_replay_is_bit_identical() {
+        let path = tmp("batch_roundtrip");
+        let reqs = vec![
+            AgentRequest::new(prompt_messages(0)),
+            AgentRequest::new(prompt_messages(1)),
+        ];
+        let live = {
+            let mut rec =
+                BatchRecorder::create(&path, Box::new(SimulatedLlm::stateless(5))).unwrap();
+            rec.complete_batch(&reqs)
+        };
+        let mut replay = BatchReplay::open(&path).unwrap();
+        let again = replay.complete_batch(&reqs);
+        assert_eq!(again.len(), live.len());
+        for (a, b) in live.iter().zip(&again) {
+            let (a, b) = (a.as_ref().unwrap(), b.as_ref().unwrap());
+            assert_eq!(a.text, b.text);
+            assert_eq!(a.prompt_tokens, b.prompt_tokens);
+            assert_eq!(
+                a.api_seconds.to_bits(),
+                b.api_seconds.to_bits(),
+                "accounting replays bit-exactly"
+            );
+        }
+        assert_eq!(replay.remaining(), 0);
+        // The recording holds exactly one provider batch: asking for a
+        // second diverges, failing every item loudly.
+        let exhausted = replay.complete_batch(&reqs);
+        assert!(exhausted.iter().all(|r| r.is_err()));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn batch_composition_divergence_fails_the_whole_batch() {
+        let path = tmp("batch_diverge");
+        let reqs = vec![
+            AgentRequest::new(prompt_messages(0)),
+            AgentRequest::new(prompt_messages(1)),
+        ];
+        {
+            let mut rec =
+                BatchRecorder::create(&path, Box::new(SimulatedLlm::stateless(5))).unwrap();
+            rec.complete_batch(&reqs);
+        }
+        // Same contents, different composition (the batch split in two):
+        // replay must fail rather than silently re-batch.
+        let mut replay = BatchReplay::open(&path).unwrap();
+        let out = replay.complete_batch(&reqs[..1]);
+        assert_eq!(out.len(), 1);
+        let err = out[0].as_ref().unwrap_err();
+        assert!(format!("{err:#}").contains("diverged"), "{err:#}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn unbatched_replay_serves_a_batched_recording_and_skips_boundaries() {
+        let path = tmp("batch_compat");
+        let m1 = prompt_messages(0);
+        {
+            let mut rec =
+                BatchRecorder::create(&path, Box::new(SimulatedLlm::stateless(5))).unwrap();
+            let live = rec.complete_batch(&[AgentRequest::new(m1.clone())]);
+            assert!(live[0].is_ok());
+        }
+        let replay = ReplayBackend::open(&path).unwrap();
+        assert_eq!(replay.remaining(), 1, "the boundary line is not an item");
+        let c = replay.complete(&m1).unwrap();
+        assert!(!c.text.is_empty());
         let _ = std::fs::remove_file(&path);
     }
 }

@@ -16,6 +16,16 @@
 //!   comes from the CLI (`haqa fleet --inflight`) or `HAQA_INFLIGHT`
 //!   (unparseable values are a hard error, like `HAQA_WORKERS`); the
 //!   default of 1 is the plain blocking path.
+//! * **Provider-side batching.** With [`FleetRunner::batch`] set (CLI
+//!   `--batch`, env `HAQA_BATCH` — hard-error parsing), every haqa
+//!   scenario draws its backend from one shared
+//!   [`AgentPool`] per backend spec instead of a
+//!   private instance, and the worker flushes the pool at the end of each
+//!   submit sweep — so the proposals of every parked session coalesce into
+//!   one provider request (OpenAI batch style) instead of N.  Pooled
+//!   simulated policies are content-seeded, so results are bit-identical
+//!   whatever the batch size; `FleetReport::agent` carries the
+//!   request/round-trip counters the `haqa bench` batching phase gates on.
 //! * **Shared deduplication.** All workers share one content-addressed
 //!   [`EvalCache`] (unless disabled) — optionally a persistent one
 //!   ([`EvalCache::with_dir`]) so evaluations survive across processes.
@@ -43,10 +53,11 @@
 use std::cell::OnceCell;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Result};
 
+use crate::agent::{AgentPool, BatchStats};
 use crate::runtime::ArtifactSet;
 use crate::util::{lock, panic_message};
 
@@ -61,6 +72,10 @@ pub const DEFAULT_WORKERS: usize = 4;
 /// loop and per-request dispatcher threads cost more than the overlap wins.
 pub const MAX_INFLIGHT: usize = 64;
 
+/// Upper bound on the provider batch size (`--batch` / `HAQA_BATCH`):
+/// past this a single provider request body stops being a win.
+pub const MAX_BATCH: usize = 128;
+
 /// The parallel scenario-fleet runner (see the module docs for the
 /// guarantees: bit-identical to serial, family-sharded, cache-shared).
 pub struct FleetRunner {
@@ -68,6 +83,14 @@ pub struct FleetRunner {
     pub workers: usize,
     /// Scenarios each worker keeps in flight concurrently (1 = blocking).
     pub inflight: usize,
+    /// Provider-side request batching (`--batch` / `HAQA_BATCH`): `None`
+    /// keeps the per-scenario agent pipeline; `Some(n)` routes every haqa
+    /// scenario through one shared, content-seeded
+    /// [`AgentPool`] per backend spec, coalescing up to
+    /// `n` in-flight proposals into each provider request.  `Some(1)` is
+    /// the *unbatched control*: same shared pipeline, one request per
+    /// provider call — which is what `haqa bench` compares against.
+    pub batch: Option<usize>,
     /// Shared across all workers; `None` disables caching.
     pub cache: Option<EvalCache>,
     /// Write per-scenario task logs (disable for perf harnesses where the
@@ -84,6 +107,10 @@ pub struct FleetReport {
     /// Distinct [`Scenario::family`] groups the work queue was sharded
     /// into.
     pub families: usize,
+    /// Aggregate provider-batching counters (None unless the fleet ran
+    /// with [`FleetRunner::batch`] set): requests submitted, provider
+    /// round-trips that served them, largest batch.
+    pub agent: Option<BatchStats>,
 }
 
 /// What starting a scenario produced: a parkable session, or (for joint
@@ -100,6 +127,7 @@ impl FleetRunner {
         FleetRunner {
             workers: workers.max(1),
             inflight: 1,
+            batch: None,
             cache: Some(EvalCache::new()),
             write_logs: true,
         }
@@ -127,6 +155,13 @@ impl FleetRunner {
     /// Overlap up to `n` scenarios' agent queries per worker.
     pub fn with_inflight(mut self, n: usize) -> FleetRunner {
         self.inflight = n.clamp(1, MAX_INFLIGHT);
+        self
+    }
+
+    /// Coalesce up to `n` in-flight proposals into one provider request
+    /// (see [`FleetRunner::batch`]; `n` is clamped to `1..=`[`MAX_BATCH`]).
+    pub fn with_batch(mut self, n: usize) -> FleetRunner {
+        self.batch = Some(n.clamp(1, MAX_BATCH));
         self
     }
 
@@ -168,6 +203,32 @@ impl FleetRunner {
         Ok(n.clamp(1, MAX_INFLIGHT))
     }
 
+    /// Resolve the provider batch size: explicit CLI value, else
+    /// `HAQA_BATCH`, else `None` (the per-scenario pipeline).  Hard-error
+    /// parsing like [`FleetRunner::inflight_from_env`], and a batch of 0 —
+    /// from either source — is itself a hard error rather than a silent
+    /// "off": a zero-sized batch can never make progress, so it is always
+    /// a typo.  Values above [`MAX_BATCH`] clamp.
+    pub fn batch_from_env(cli: Option<usize>) -> Result<Option<usize>> {
+        let n = match cli {
+            Some(n) => Some(n),
+            None => match std::env::var("HAQA_BATCH") {
+                Ok(v) => Some(v.trim().parse::<usize>().map_err(|_| {
+                    anyhow!("HAQA_BATCH must be a positive integer, got '{v}'")
+                })?),
+                Err(_) => None,
+            },
+        };
+        match n {
+            Some(0) => Err(anyhow!(
+                "the provider batch size must be >= 1 (omit --batch/HAQA_BATCH \
+                 to keep the per-scenario agent pipeline)"
+            )),
+            Some(n) => Ok(Some(n.min(MAX_BATCH))),
+            None => Ok(None),
+        }
+    }
+
     /// Execute the batch; blocks until every scenario finished.
     pub fn run(&self, scenarios: &[Scenario]) -> FleetReport {
         let n = scenarios.len();
@@ -197,9 +258,13 @@ impl FleetRunner {
             Mutex::new((0..n).map(|_| None).collect());
         let next = AtomicUsize::new(0);
         let workers = self.workers.min(n.max(1));
+        // The shared provider pool (one batching backend per backend spec)
+        // exists only in batch mode; without it every scenario keeps its
+        // own seeded backend, exactly as before.
+        let pool: Option<Arc<AgentPool>> = self.batch.map(|b| Arc::new(AgentPool::new(b)));
         std::thread::scope(|s| {
             for _ in 0..workers {
-                s.spawn(|| self.worker(scenarios, &order, &next, &slots));
+                s.spawn(|| self.worker(scenarios, &order, &next, &slots, pool.as_ref()));
             }
         });
         let outcomes = slots
@@ -213,6 +278,13 @@ impl FleetRunner {
             outcomes,
             cache: self.cache.as_ref().map(|c| c.stats()),
             families: family_order.len(),
+            // Defensive final drain: workers can only exit with every
+            // session finished, but a leftover buffered request must never
+            // be silently dropped from the counters.
+            agent: pool.as_ref().map(|p| {
+                p.flush();
+                p.stats()
+            }),
         }
     }
 
@@ -225,6 +297,7 @@ impl FleetRunner {
         order: &[usize],
         next: &AtomicUsize,
         slots: &Mutex<Vec<Option<Result<TrackOutcome>>>>,
+        pool: Option<&Arc<AgentPool>>,
     ) {
         let n = scenarios.len();
         let inflight = self.inflight.max(1);
@@ -248,14 +321,15 @@ impl FleetRunner {
                 let i = order[qi];
                 // Isolate per-scenario panics: one poisoned cell must not
                 // abort the rest of the batch.
-                let started = catch_unwind(AssertUnwindSafe(|| self.start(&scenarios[i], &art)))
-                    .unwrap_or_else(|p| {
-                        Started::Done(Err(anyhow!(
-                            "scenario '{}' panicked: {}",
-                            scenarios[i].name,
-                            panic_message(&p)
-                        )))
-                    });
+                let started =
+                    catch_unwind(AssertUnwindSafe(|| self.start(&scenarios[i], &art, pool)))
+                        .unwrap_or_else(|p| {
+                            Started::Done(Err(anyhow!(
+                                "scenario '{}' panicked: {}",
+                                scenarios[i].name,
+                                panic_message(&p)
+                            )))
+                        });
                 match started {
                     Started::Session(sess) => active.push((i, sess)),
                     Started::Done(out) => put(i, out),
@@ -311,9 +385,18 @@ impl FleetRunner {
                 }
             }
             // Everything is parked on an in-flight agent request (and the
-            // queue can't refill us): back off briefly instead of spinning.
+            // queue can't refill us).  This is the batch pipeline's flush
+            // point: the submit sweep is over, every live session has its
+            // proposal buffered, so the provider batch is as full as this
+            // sweep can make it — execute it now instead of letting it
+            // time out at size 1.  Only when there is nothing to flush
+            // either (requests mid-flight on another worker's flush) does
+            // the worker back off instead of spinning.
             if !progressed && (drained || active.len() >= inflight) {
-                std::thread::sleep(std::time::Duration::from_micros(200));
+                let flushed = pool.map_or(0, |p| p.flush());
+                if flushed == 0 {
+                    std::thread::sleep(std::time::Duration::from_micros(200));
+                }
             }
         }
     }
@@ -321,7 +404,12 @@ impl FleetRunner {
     /// Begin one scenario on this worker: single-track scenarios become
     /// parkable sessions; joint scenarios (three chained stages) run
     /// blocking, and construction failures resolve immediately.
-    fn start<'s>(&self, sc: &'s Scenario, art: &'s OnceCell<ArtifactSet>) -> Started<'s> {
+    fn start<'s>(
+        &self,
+        sc: &'s Scenario,
+        art: &'s OnceCell<ArtifactSet>,
+        pool: Option<&Arc<AgentPool>>,
+    ) -> Started<'s> {
         if sc.needs_artifacts() && art.get().is_none() {
             match ArtifactSet::load_default() {
                 Ok(set) => {
@@ -336,6 +424,9 @@ impl FleetRunner {
         };
         if let Some(c) = self.cache.clone() {
             wf = wf.with_cache(c);
+        }
+        if let Some(p) = pool {
+            wf = wf.with_agents(Arc::clone(p));
         }
         if !self.write_logs {
             wf = wf.quiet();
@@ -407,10 +498,46 @@ mod tests {
     }
 
     #[test]
+    fn batch_env_parsing_hard_errors_on_zero_and_garbage() {
+        assert_eq!(FleetRunner::batch_from_env(None).unwrap(), None, "off by default");
+        assert_eq!(FleetRunner::batch_from_env(Some(6)).unwrap(), Some(6));
+        assert_eq!(
+            FleetRunner::batch_from_env(Some(100_000)).unwrap(),
+            Some(MAX_BATCH)
+        );
+        assert!(
+            FleetRunner::batch_from_env(Some(0)).is_err(),
+            "a zero-sized batch can never make progress"
+        );
+        // Env fallback with hard-error parsing (serialized in one test,
+        // like the HAQA_WORKERS / HAQA_INFLIGHT tests).
+        std::env::set_var("HAQA_BATCH", "many");
+        let err = FleetRunner::batch_from_env(None);
+        std::env::remove_var("HAQA_BATCH");
+        let msg = format!("{:#}", err.expect_err("garbage must not be swallowed"));
+        assert!(msg.contains("HAQA_BATCH") && msg.contains("many"), "{msg}");
+
+        std::env::set_var("HAQA_BATCH", "0");
+        let err = FleetRunner::batch_from_env(None);
+        std::env::remove_var("HAQA_BATCH");
+        assert!(err.is_err(), "HAQA_BATCH=0 is a typo, not 'off'");
+
+        std::env::set_var("HAQA_BATCH", "4");
+        let ok = FleetRunner::batch_from_env(None);
+        std::env::remove_var("HAQA_BATCH");
+        assert_eq!(ok.unwrap(), Some(4));
+
+        assert_eq!(FleetRunner::new(2).batch, None, "per-scenario by default");
+        assert_eq!(FleetRunner::new(2).with_batch(0).batch, Some(1));
+        assert_eq!(FleetRunner::new(2).with_batch(9).batch, Some(9));
+    }
+
+    #[test]
     fn empty_batch_is_fine() {
         let report = FleetRunner::new(4).run(&[]);
         assert!(report.outcomes.is_empty());
         assert_eq!(report.families, 0);
         assert_eq!(report.cache.unwrap(), CacheStats::default());
+        assert!(report.agent.is_none(), "no pool unless batch mode is on");
     }
 }

@@ -18,9 +18,11 @@
 //! deduplicates repeated evaluations across rounds, methods and fleet
 //! workers.
 
+use std::sync::Arc;
+
 use anyhow::{anyhow, bail, Result};
 
-use crate::agent::TaskKind;
+use crate::agent::{AgentPool, TaskKind};
 use crate::hardware::ModelProfile;
 use crate::optimizers::{best, haqa::HaqaOptimizer, Observation, Optimizer, Proposal};
 use crate::runtime::ArtifactSet;
@@ -50,6 +52,11 @@ pub struct Workflow<'a> {
     /// kernel and bit-width tracks run on the analytic simulator.
     set: Option<&'a ArtifactSet>,
     cache: Option<EvalCache>,
+    /// Shared provider pool for the batched agent pipeline: when set,
+    /// haqa scenarios draw a [`crate::agent::SharedBackend`] handle from
+    /// it (one content-seeded backend per spec) instead of constructing a
+    /// private, scenario-seeded backend.
+    agents: Option<Arc<AgentPool>>,
     /// Write task logs to disk (`false` for perf harnesses, where the
     /// per-scenario log I/O would pollute wall-clock measurements).
     write_logs: bool,
@@ -291,6 +298,7 @@ impl<'a> Workflow<'a> {
         Workflow {
             set: Some(set),
             cache: None,
+            agents: None,
             write_logs: true,
         }
     }
@@ -301,6 +309,7 @@ impl<'a> Workflow<'a> {
         Workflow {
             set: None,
             cache: None,
+            agents: None,
             write_logs: true,
         }
     }
@@ -308,6 +317,14 @@ impl<'a> Workflow<'a> {
     /// Attach a (shareable) content-addressed evaluation cache.
     pub fn with_cache(mut self, cache: EvalCache) -> Self {
         self.cache = Some(cache);
+        self
+    }
+
+    /// Route haqa scenarios through a shared provider pool — the batched
+    /// agent pipeline (see [`crate::coordinator::fleet::FleetRunner`]'s
+    /// `batch` knob and `docs/AGENT.md`).
+    pub fn with_agents(mut self, pool: Arc<AgentPool>) -> Self {
+        self.agents = Some(pool);
         self
     }
 
@@ -324,10 +341,17 @@ impl<'a> Workflow<'a> {
         objective: Json,
     ) -> Result<Box<dyn Optimizer>> {
         if sc.optimizer == "haqa" {
-            // The agent backend comes from the scenario spec; the seed
-            // stream matches the pre-pipeline `with_seed` construction so
-            // seeded results regenerate bit-for-bit.
-            let backend = crate::agent::backend_from_spec(&sc.backend, sc.seed ^ 0x4a9a)?;
+            // The agent backend comes from the scenario spec.  Pooled
+            // (batched) fleets share one content-seeded backend per spec —
+            // the scenario seed deliberately does not participate, since a
+            // shared provider must answer a transcript identically for
+            // every scenario.  Otherwise the seed stream matches the
+            // pre-pipeline `with_seed` construction so seeded results
+            // regenerate bit-for-bit.
+            let backend: Box<dyn crate::agent::LlmBackend> = match &self.agents {
+                Some(pool) => Box::new(pool.backend(&sc.backend)?),
+                None => crate::agent::backend_from_spec(&sc.backend, sc.seed ^ 0x4a9a)?,
+            };
             let mut h = HaqaOptimizer::with_backend(backend)
                 .for_task(kind)
                 .with_objective(objective);

@@ -9,9 +9,13 @@
 //! haqa generate [--flags]      serve token generation (llama.cpp analogue)
 //! haqa run <scenario.json>     run a scenario file (incl. the joint loop)
 //! haqa fleet <scenarios.json>  run a scenario batch across a worker pool
-//!                              (--inflight N overlaps agent queries)
+//!                              (--inflight N overlaps agent queries,
+//!                               --batch N coalesces them into provider
+//!                               batches, --backend SPEC overrides the
+//!                               scenarios' agent backend)
 //! haqa bench [--quick]         fleet/cache throughput harness → BENCH_2.json
 //!                              + agent-overlap phase → BENCH_3.json
+//!                              + provider-batching phase → BENCH_5.json
 //! haqa cache compact           rewrite the eval-cache journal, live entries only
 //! haqa device serve            serve the JSONL device-measurement protocol
 //! haqa device ping             hello round-trip against a device server
@@ -71,9 +75,10 @@ haqa — hardware-aware quantization agent (paper reproduction)
   haqa generate             token-generation engine on PJRT; --help
   haqa run <scenario.json>  run a scenario file (finetune/kernel/bitwidth/joint)
   haqa fleet <batch.json>   run a scenario batch on a worker pool w/ eval cache
-                            (--inflight N overlaps in-flight agent queries)
+                            (--inflight N overlaps in-flight agent queries,
+                            --batch N coalesces them into provider batches)
   haqa bench                cold/warm serial/fleet throughput harness plus the
-                            blocking-vs-pipelined agent-overlap phase; --help
+                            agent-overlap and provider-batching phases; --help
   haqa cache compact        rewrite the eval-cache journal keeping live entries
   haqa device serve         serve the device-measurement protocol (simulator-
                             backed stub; target of remote:// evaluator specs)
@@ -273,6 +278,8 @@ fn fleet(rest: Vec<String>) -> Result<()> {
     let a = Args::new("haqa fleet", "run a scenario batch across a worker pool")
         .opt("workers", "worker threads (default: env HAQA_WORKERS or 4)")
         .opt("inflight", "agent queries kept in flight per worker (default: env HAQA_INFLIGHT or 1)")
+        .opt("batch", "coalesce up to N in-flight proposals into one provider request (default: env HAQA_BATCH or off)")
+        .opt("backend", "override every scenario's agent backend spec (e.g. replay:<journal> for the CI drift gate)")
         .opt("cache-dir", "persist the eval-cache journal here (shared across runs and processes)")
         .flag("no-cache", "disable the content-addressed evaluation cache")
         .flag("check-serial", "re-run serially and verify bit-identical scores")
@@ -281,11 +288,22 @@ fn fleet(rest: Vec<String>) -> Result<()> {
         .positional
         .first()
         .ok_or_else(|| anyhow::anyhow!("usage: haqa fleet <scenarios.json> [--workers N] [--inflight N]"))?;
-    let scenarios = Scenario::load_many(path)?;
+    let mut scenarios = Scenario::load_many(path)?;
     anyhow::ensure!(!scenarios.is_empty(), "no scenarios in {path}");
+    if let Some(spec) = a.get("backend") {
+        // The nightly replay-drift job records/replays a whole committed
+        // batch without editing the scenario file.
+        for sc in &mut scenarios {
+            sc.backend = spec.to_string();
+        }
+    }
     let workers = FleetRunner::workers_from_env(a.get_usize("workers")?)?;
     let inflight = FleetRunner::inflight_from_env(a.get_usize("inflight")?)?;
+    let batch = FleetRunner::batch_from_env(a.get_usize("batch")?)?;
     let mut runner = FleetRunner::new(workers).with_inflight(inflight);
+    if let Some(b) = batch {
+        runner = runner.with_batch(b);
+    }
     if let Some(dir) = a.get("cache-dir") {
         runner = runner.with_cache(EvalCache::with_dir(dir)?);
     }
@@ -321,8 +339,24 @@ fn fleet(rest: Vec<String>) -> Result<()> {
             st.hits, st.misses, st.entries
         );
     }
+    if let Some(st) = report.agent {
+        println!(
+            "agent batching: {} request(s) in {} provider call(s) (max batch {})",
+            st.submitted, st.provider_requests, st.max_batch
+        );
+    }
     if a.get_bool("check-serial") {
-        let serial = FleetRunner::new(1).run(&scenarios);
+        // The serial control must run the same agent pipeline: a batched
+        // run uses the shared content-seeded pool, whose results are
+        // bit-identical across batch sizes but deliberately different
+        // from the per-scenario pipeline — so mirror pool mode (at the
+        // one-call-per-request control size) whenever the main run
+        // batched.
+        let mut serial_runner = FleetRunner::new(1);
+        if batch.is_some() {
+            serial_runner = serial_runner.with_batch(1);
+        }
+        let serial = serial_runner.run(&scenarios);
         let identical = serial
             .outcomes
             .iter()
@@ -349,8 +383,11 @@ fn fleet(rest: Vec<String>) -> Result<()> {
 ///   3. warm fleet  — N workers, a *new* cache instance that loads the
 ///      journal phase 2 wrote (the cross-process path, in-process).
 /// Plus a batched-measurement microbench (per-call latency-model setup vs
-/// one setup per slice).  Hard-fails if the phases diverge or the warm
-/// run sees zero cache hits, so CI can gate on the exit code.
+/// one setup per slice), the agent-overlap phase (`BENCH_3.json`) and the
+/// provider-batching phase (`BENCH_5.json`).  Hard-fails if any phase
+/// pair diverges, the warm run sees zero cache hits, overlap yields no
+/// speedup, or batching does not reduce provider requests — so CI can
+/// gate on the exit code.
 fn bench_fleet(rest: Vec<String>) -> Result<()> {
     use haqa::coordinator::cache::JOURNAL_FILE;
     use haqa::coordinator::{CacheStats, FleetReport};
@@ -369,7 +406,10 @@ fn bench_fleet(rest: Vec<String>) -> Result<()> {
             "kernel-scenario evaluator: simulated | device (per-scenario device:<profile>) | \
              any evaluator spec verbatim",
         )
+        .opt_default("batching-out", "BENCH_5.json", "provider-batching report output path")
+        .opt("batch", "provider batch size for the batching phase (default: its scenario count)")
         .flag("skip-overlap", "skip the blocking-vs-pipelined agent-overlap phase")
+        .flag("skip-batching", "skip the unbatched-vs-batched provider-request phase")
         .flag("quick", "small scenario set (CI perf smoke)")
         .parse(rest)?;
     let quick = a.get_bool("quick");
@@ -481,6 +521,14 @@ fn bench_fleet(rest: Vec<String>) -> Result<()> {
             a.get("overlap-out").unwrap_or("BENCH_3.json"),
         )?;
     }
+    if !a.get_bool("skip-batching") {
+        bench_batching(
+            quick,
+            a.get_usize("overlap-latency-ms")?.unwrap_or(12).max(1),
+            a.get_usize("batch")?,
+            a.get("batching-out").unwrap_or("BENCH_5.json"),
+        )?;
+    }
     Ok(())
 }
 
@@ -578,6 +626,148 @@ fn bench_agent_overlap(quick: bool, latency_ms: usize, out_path: &str) -> Result
         speedup > 1.15,
         "pipelined fleet not measurably faster than blocking ({speedup:.2}x) — \
          in-flight agent overlap is broken"
+    );
+    Ok(())
+}
+
+/// The provider-batching phase: the same haqa-driven kernel fleet twice
+/// through the shared agent pool behind `simulated-slow:<ms>` — unbatched
+/// (`--batch 1`: one provider call per request) vs batched (every parked
+/// proposal coalesced per sweep) — on ONE worker, so the only variable is
+/// how many provider round-trips serve the same requests.  Hard-fails
+/// unless the two paths are bit-identical AND the batched run made
+/// strictly fewer provider requests; emits `BENCH_5.json` for CI.
+fn bench_batching(
+    quick: bool,
+    latency_ms: usize,
+    batch: Option<usize>,
+    out_path: &str,
+) -> Result<()> {
+    use haqa::agent::BatchStats;
+    use haqa::util::json::Json;
+
+    let rounds = if quick { 4 } else { 6 };
+    let kernels: &[&str] = if quick {
+        &["matmul:64", "softmax:128", "rmsnorm:64", "silu:64"]
+    } else {
+        &["matmul:64", "matmul:128", "softmax:64", "softmax:128", "silu:64", "rmsnorm:64", "rope:128", "rope:64"]
+    };
+    let scenarios: Vec<Scenario> = kernels
+        .iter()
+        .enumerate()
+        .map(|(i, kernel)| Scenario {
+            name: format!("batching_{}", kernel.replace(':', "_")),
+            track: Track::Kernel,
+            kernel: (*kernel).into(),
+            optimizer: "haqa".into(),
+            budget: rounds,
+            seed: 31 + i as u64,
+            backend: format!("simulated-slow:{latency_ms}"),
+            ..Scenario::default()
+        })
+        .collect();
+    let inflight = scenarios.len();
+    // A batched phase at size 1 would compare a run against itself, so the
+    // floor is 2 — the gate needs a real coalescing path to measure.
+    let batch_size = batch
+        .unwrap_or(inflight)
+        .clamp(2, haqa::coordinator::fleet::MAX_BATCH);
+    println!(
+        "provider batching: {} haqa scenarios, {rounds} rounds, {latency_ms} ms simulated \
+         agent latency, 1 worker, batch {batch_size}",
+        scenarios.len()
+    );
+
+    let timed = |runner: FleetRunner| -> Result<(f64, Vec<u64>, BatchStats)> {
+        let t0 = std::time::Instant::now();
+        let report = runner.run(&scenarios);
+        let wall = t0.elapsed().as_secs_f64();
+        let mut bits = Vec::with_capacity(scenarios.len());
+        for (sc, out) in scenarios.iter().zip(&report.outcomes) {
+            let o = out.as_ref().map_err(|e| anyhow::anyhow!("{}: {e:#}", sc.name))?;
+            bits.push(o.best_score.to_bits());
+        }
+        let agent = report
+            .agent
+            .ok_or_else(|| anyhow::anyhow!("batch mode reported no agent stats"))?;
+        Ok((wall, bits, agent))
+    };
+    // No cache in either path, both through the shared pool: the only
+    // difference between the runs is the provider batch size.
+    let (un_wall, un_bits, un_stats) = timed(
+        FleetRunner::new(1)
+            .without_cache()
+            .quiet()
+            .with_inflight(inflight)
+            .with_batch(1),
+    )?;
+    println!(
+        "  unbatched   : {un_wall:8.3}s  ({} requests in {} provider calls)",
+        un_stats.submitted, un_stats.provider_requests
+    );
+    let (b_wall, b_bits, b_stats) = timed(
+        FleetRunner::new(1)
+            .without_cache()
+            .quiet()
+            .with_inflight(inflight)
+            .with_batch(batch_size),
+    )?;
+    println!(
+        "  batched     : {b_wall:8.3}s  ({} requests in {} provider calls, max batch {})",
+        b_stats.submitted, b_stats.provider_requests, b_stats.max_batch
+    );
+    let bit_identical = un_bits == b_bits;
+    let speedup = un_wall / b_wall.max(1e-9);
+    println!(
+        "  speedup     : {speedup:.2}x; provider requests {} -> {}; bit-identical: {bit_identical}",
+        un_stats.provider_requests, b_stats.provider_requests
+    );
+
+    let mut j = Json::obj();
+    j.set("bench", Json::str("haqa bench batching"));
+    j.set("quick", Json::Bool(quick));
+    j.set("scenarios", Json::Num(scenarios.len() as f64));
+    j.set("rounds_budget", Json::Num(rounds as f64));
+    j.set("agent_latency_ms", Json::Num(latency_ms as f64));
+    j.set("workers", Json::Num(1.0));
+    j.set("inflight", Json::Num(inflight as f64));
+    j.set("batch", Json::Num(batch_size as f64));
+    let mut phases = Json::obj();
+    let phase = |wall: f64, st: BatchStats| {
+        let mut o = Json::obj();
+        o.set("wall_s", Json::Num(wall));
+        o.set("agent_requests", Json::Num(st.submitted as f64));
+        o.set("provider_requests", Json::Num(st.provider_requests as f64));
+        o.set("max_batch", Json::Num(st.max_batch as f64));
+        o
+    };
+    phases.set("unbatched", phase(un_wall, un_stats));
+    phases.set("batched", phase(b_wall, b_stats));
+    j.set("phases", phases);
+    j.set("provider_requests_unbatched", Json::Num(un_stats.provider_requests as f64));
+    j.set("provider_requests_batched", Json::Num(b_stats.provider_requests as f64));
+    j.set(
+        "request_reduction",
+        Json::Num(un_stats.provider_requests as f64 / (b_stats.provider_requests as f64).max(1.0)),
+    );
+    j.set("speedup", Json::Num(speedup));
+    j.set("bit_identical", Json::Bool(bit_identical));
+    std::fs::write(out_path, j.to_string_pretty())?;
+    println!("  report      : {out_path}");
+
+    anyhow::ensure!(bit_identical, "batched and unbatched agent paths diverged");
+    anyhow::ensure!(
+        un_stats.submitted == b_stats.submitted,
+        "the two paths issued different request streams ({} vs {})",
+        un_stats.submitted,
+        b_stats.submitted
+    );
+    anyhow::ensure!(
+        b_stats.provider_requests < un_stats.provider_requests,
+        "batching did not reduce provider requests ({} -> {}) — the \
+         aggregation layer is broken",
+        un_stats.provider_requests,
+        b_stats.provider_requests
     );
     Ok(())
 }

@@ -221,6 +221,93 @@ fn task_log_records_per_round_agent_cost() {
     }
 }
 
+/// The batching tentpole's guarantee: coalescing many scenarios' in-flight
+/// proposals into shared provider batches changes the number of provider
+/// round-trips and nothing else — scores are bit-identical to the
+/// unbatched (batch 1) run over the same shared pipeline.
+#[test]
+fn batched_fleet_is_bit_identical_with_fewer_provider_requests() {
+    let scenarios = kernel_scenarios("simulated", "batch");
+    let run = |batch: usize| {
+        FleetRunner::new(1)
+            .with_inflight(scenarios.len())
+            .with_batch(batch)
+            .quiet()
+            .without_cache()
+            .run(&scenarios)
+    };
+    let unbatched = run(1);
+    let batched = run(4);
+    assert_eq!(
+        score_bits(&unbatched),
+        score_bits(&batched),
+        "provider batching must not change results"
+    );
+    let u = unbatched.agent.expect("batch mode reports agent stats");
+    let b = batched.agent.expect("batch mode reports agent stats");
+    assert_eq!(u.submitted, b.submitted, "same request stream either way");
+    assert_eq!(
+        u.provider_requests, u.submitted,
+        "batch 1 is the one-call-per-request control"
+    );
+    assert!(
+        b.provider_requests < u.provider_requests,
+        "batching must amortize round-trips: {} -> {}",
+        u.provider_requests,
+        b.provider_requests
+    );
+    assert!(b.max_batch > 1, "batches actually filled past size 1");
+}
+
+/// A batched run recorded through the shared pool replays bit-identically
+/// offline — completions, cost accounting AND batch boundaries (the
+/// journal's `{"batch": …}` records are enforced on replay).
+#[test]
+fn recorded_batched_run_replays_bit_identically() {
+    let dir = std::env::temp_dir().join(format!("haqa_agent_batchrec_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let journal = dir.join("transcripts.jsonl");
+    let scenarios = |backend: String| -> Vec<Scenario> {
+        ["matmul:64", "softmax:128", "rmsnorm:64"]
+            .iter()
+            .enumerate()
+            .map(|(i, kernel)| Scenario {
+                name: format!("batchrec_{}", kernel.replace(':', "_")),
+                track: Track::Kernel,
+                kernel: (*kernel).into(),
+                optimizer: "haqa".into(),
+                budget: 4,
+                seed: 50 + i as u64,
+                backend: backend.clone(),
+                ..Scenario::default()
+            })
+            .collect()
+    };
+    // One worker: the sweep order — and therefore the recorded batch
+    // composition — is deterministic, so the replay reproduces it exactly.
+    let run = |scs: &[Scenario]| {
+        FleetRunner::new(1)
+            .with_inflight(4)
+            .with_batch(4)
+            .quiet()
+            .without_cache()
+            .run(scs)
+    };
+    let live = run(&scenarios(format!("record:{}", journal.display())));
+    assert!(journal.exists(), "batched transcript journal written");
+    let replayed = run(&scenarios(format!("replay:{}", journal.display())));
+    assert_eq!(score_bits(&live), score_bits(&replayed));
+    for (a, b) in live.outcomes.iter().zip(&replayed.outcomes) {
+        let (a, b) = (a.as_ref().unwrap(), b.as_ref().unwrap());
+        assert_eq!(
+            a.cost_report, b.cost_report,
+            "token/latency accounting replays bit-exactly"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 /// A scenario with an unknown backend spec fails loudly (not by silently
 /// falling back to the simulated policy).
 #[test]
