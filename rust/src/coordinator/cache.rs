@@ -16,31 +16,47 @@
 //!   shards, each behind its own `Mutex`, selected by key bits.  Fleet
 //!   workers hitting different keys no longer serialize on one global lock
 //!   (the PR-1 `Arc<Mutex<HashMap>>` was a single convoy point at high
-//!   worker counts); hit/miss counters are lock-free atomics.
+//!   worker counts); hit/miss counters are lock-free atomics.  The tier is
+//!   unbounded by default; [`EvalCache::bounded`] /
+//!   [`EvalCache::with_dir_capped`] put a global LRU cap on resident
+//!   entries (split across the shards, each shard evicting its own
+//!   least-recently-touched entry at capacity), which is what lets a
+//!   10k-scenario fleet run in bounded memory.  **Eviction can never
+//!   change a score**: evaluators are deterministic and the disk tier is
+//!   authoritative, so an evicted entry's next lookup recomputes (or
+//!   reloads) the bit-identical value — a cap only changes hit rates and
+//!   peak residency, both surfaced in [`CacheStats`].
 //! * **Append-only journal tier** ([`EvalCache::with_dir`]).  Every
 //!   first-time evaluation is appended as one JSON line to
-//!   `<dir>/eval_cache.jsonl` and the whole journal is loaded on startup,
-//!   so bench tables, CI runs and fleet processes share evaluations.
-//!   Scores round-trip **bit-exactly** (the authoritative fields are f64
-//!   bit patterns in hex).  Corrupt or truncated records — a crashed
-//!   writer's torn tail, a bad byte — are skipped with a warning, and
+//!   `<dir>/eval_cache.jsonl` and the journal is streamed back on startup
+//!   (one line in memory at a time — never the whole file), so bench
+//!   tables, CI runs and fleet processes share evaluations.  Appends are
+//!   **group-committed**: records accumulate in an in-process buffer and
+//!   reach the file in one `write`+flush per group — at the
+//!   [`FLUSH_RECORDS`]/[`FLUSH_BYTES`] watermark, at fleet sweep
+//!   boundaries ([`EvalCache::flush_journal`]), and when the last cache
+//!   handle drops — instead of one syscall pair per record.  Each flush
+//!   writes only whole `\n`-terminated lines, so the append-only hygiene
+//!   is unchanged: concurrent processes sharing a `--cache-dir` can never
+//!   interleave mid-line, corrupt or torn records are skipped on load, and
 //!   healing is append-only (a missing final newline is terminated before
-//!   the next record), so concurrent processes sharing a `--cache-dir`
-//!   can never destroy each other's records.  See `docs/CACHE.md`.
+//!   the next record).  A crash loses at most the unflushed group, which
+//!   determinism recomputes.  Scores round-trip **bit-exactly** (the
+//!   authoritative fields are f64 bit patterns in hex).  See
+//!   `docs/CACHE.md`.
 //!
 //! The cache is a cheap cloneable handle shared by every worker of a
 //! fleet; counters are surfaced both globally ([`EvalCache::stats`]) and
 //! per-track via [`TrackOutcome`](super::workflow::TrackOutcome).
 
-use std::collections::hash_map::Entry;
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap, HashSet};
 use std::fs::File;
 use std::io::Write;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard};
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::search::Config;
 use crate::util::hash;
@@ -54,6 +70,13 @@ pub const SHARD_COUNT: usize = 16;
 
 /// Journal file name inside a cache directory.
 pub const JOURNAL_FILE: &str = "eval_cache.jsonl";
+
+/// Group-commit record watermark: a buffered journal group is flushed once
+/// it holds this many records (or [`FLUSH_BYTES`], whichever trips first).
+pub const FLUSH_RECORDS: usize = 256;
+
+/// Group-commit byte watermark (see [`FLUSH_RECORDS`]).
+pub const FLUSH_BYTES: usize = 64 * 1024;
 
 /// `haqa cache compact` summary: what the rewrite kept and dropped.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -79,6 +102,20 @@ pub struct CacheStats {
     pub misses: usize,
     /// Distinct keys currently held in the memory tier.
     pub entries: usize,
+    /// Entries dropped from the memory tier by the LRU cap (0 when
+    /// unbounded).  Evictions never change scores — the disk tier and
+    /// evaluator determinism are authoritative — only hit rates.
+    pub evictions: usize,
+    /// High-water mark of resident memory-tier entries.
+    pub peak_entries: usize,
+    /// The configured global LRU cap (`None` = unbounded).
+    pub capacity: Option<usize>,
+    /// Records appended to the journal by this process (0 without a disk
+    /// tier).
+    pub journal_records: usize,
+    /// `write` syscalls that carried those records — group commit makes
+    /// this strictly smaller than `journal_records` under load.
+    pub journal_writes: usize,
 }
 
 impl CacheStats {
@@ -94,17 +131,169 @@ impl CacheStats {
     }
 }
 
+/// Buffered journal writer: records accumulate in `buf` and reach the file
+/// as one `write_all` + `flush` per group.  Every flush writes only whole
+/// newline-terminated lines, preserving the one-record-per-line append
+/// hygiene `docs/CACHE.md` guarantees to concurrent processes.
 struct Journal {
     file: File,
+    buf: String,
+    /// Records currently buffered (not yet on disk).
+    buffered: usize,
+    /// Total records appended by this process (buffered or flushed).
+    records: usize,
+    /// `write_all` calls issued (the group-commit win is `writes` ≪
+    /// `records`).
+    writes: usize,
+}
+
+impl Journal {
+    fn new(file: File) -> Journal {
+        Journal {
+            file,
+            buf: String::new(),
+            buffered: 0,
+            records: 0,
+            writes: 0,
+        }
+    }
+
+    /// Buffer one `\n`-terminated record, flushing at the group watermark.
+    fn append(&mut self, line: &str) {
+        self.buf.push_str(line);
+        self.buffered += 1;
+        self.records += 1;
+        if self.buffered >= FLUSH_RECORDS || self.buf.len() >= FLUSH_BYTES {
+            self.flush();
+        }
+    }
+
+    /// Write the buffered group (one syscall pair).  A failed append only
+    /// loses the disk tier, never the in-memory results.
+    fn flush(&mut self) {
+        if self.buf.is_empty() {
+            return;
+        }
+        let _ = self
+            .file
+            .write_all(self.buf.as_bytes())
+            .and_then(|()| self.file.flush());
+        self.writes += 1;
+        self.buf.clear();
+        self.buffered = 0;
+    }
+}
+
+/// One lock stripe: the entry map plus the LRU book-keeping for this
+/// shard's slice of the global cap.
+#[derive(Default)]
+struct Shard {
+    /// Key → (evaluation, recency stamp of the last touch).
+    map: HashMap<u128, (Evaluation, u64)>,
+    /// Recency index: stamp → key, oldest first (stamps are unique within
+    /// a shard, so `BTreeMap` gives O(log n) touch and evict-oldest).
+    recency: BTreeMap<u64, u128>,
+    /// Monotonic per-shard touch counter.
+    stamp: u64,
+    /// Keys already carried by the journal (loaded or appended), so an
+    /// evicted-then-recomputed key is never appended twice.  Populated
+    /// only when a disk tier is attached.
+    journaled: HashSet<u128>,
+    /// This shard's slice of the global cap (`None` = unbounded).
+    cap: Option<usize>,
+}
+
+/// What a shard-level store did (drives the global counters).
+struct StoreEffect {
+    /// The entry is now resident (false for duplicates and cap-0 shards).
+    stored: bool,
+    /// First time the journal should carry this key.
+    newly_journaled: bool,
+    /// Entries removed from the map to make room (0 or 1).
+    dropped: usize,
+    /// A cap-0 shard suppressed the store entirely (counts as an
+    /// eviction: the entry was admitted and immediately displaced).
+    suppressed: bool,
+}
+
+impl Shard {
+    /// Look up and touch: a hit moves the entry to most-recently-used.
+    fn touch(&mut self, key: u128) -> Option<Evaluation> {
+        let (e, stamp) = self.map.get_mut(&key)?;
+        let found = e.clone();
+        let old = *stamp;
+        self.stamp += 1;
+        *stamp = self.stamp;
+        let new = self.stamp;
+        self.recency.remove(&old);
+        self.recency.insert(new, key);
+        Some(found)
+    }
+
+    /// First-write-wins store under this shard's cap slice, evicting the
+    /// least-recently-touched entry first when at capacity (so residency
+    /// never exceeds the cap, even transiently).
+    fn store(&mut self, key: u128, e: &Evaluation, track_journal: bool) -> StoreEffect {
+        let newly_journaled = track_journal && self.journaled.insert(key);
+        let mut eff = StoreEffect {
+            stored: false,
+            newly_journaled,
+            dropped: 0,
+            suppressed: false,
+        };
+        if self.map.contains_key(&key) {
+            return eff;
+        }
+        match self.cap {
+            Some(0) => {
+                // A zero-cap shard holds nothing; determinism (and the
+                // disk tier) make the next lookup recompute identically.
+                eff.suppressed = true;
+                return eff;
+            }
+            Some(c) => {
+                while self.map.len() >= c {
+                    let (&stamp, &victim) = self.recency.iter().next().expect("len >= 1");
+                    self.recency.remove(&stamp);
+                    self.map.remove(&victim);
+                    eff.dropped += 1;
+                }
+            }
+            None => {}
+        }
+        self.stamp += 1;
+        self.map.insert(key, (e.clone(), self.stamp));
+        self.recency.insert(self.stamp, key);
+        eff.stored = true;
+        eff
+    }
 }
 
 struct Inner {
-    shards: Vec<Mutex<HashMap<u128, Evaluation>>>,
+    shards: Vec<Mutex<Shard>>,
     hits: AtomicUsize,
     misses: AtomicUsize,
+    evictions: AtomicUsize,
+    /// Resident-entry counter driving `peak`: updated with at most one
+    /// atomic op per store (net delta 0 or +1), so it never overstates the
+    /// true residency — which keeps `peak_entries <= capacity` exact.
+    resident: AtomicUsize,
+    peak: AtomicUsize,
+    /// Global LRU cap (`None` = unbounded); split across shards.
+    capacity: Option<usize>,
     /// Disk tier; `None` for a purely in-memory cache.
     journal: Option<Mutex<Journal>>,
     journal_path: Option<PathBuf>,
+}
+
+impl Drop for Inner {
+    fn drop(&mut self) {
+        // The last handle is gone: commit the tail group so a process that
+        // exits cleanly never loses buffered records.
+        if let Some(j) = &self.journal {
+            lock(j).flush();
+        }
+    }
 }
 
 /// Thread-safe content-addressed cache handle (clone to share).
@@ -119,52 +308,122 @@ impl Default for EvalCache {
     }
 }
 
+/// Split a global cap across the shards so the slices sum exactly to the
+/// cap: shard `i` gets `cap/16`, plus one of the `cap % 16` remainder
+/// slots.
+fn shard_cap(cap: usize, i: usize) -> usize {
+    cap / SHARD_COUNT + usize::from(i < cap % SHARD_COUNT)
+}
+
 impl EvalCache {
-    /// In-memory cache (no disk tier).
+    /// In-memory cache (no disk tier, no cap).
     pub fn new() -> EvalCache {
+        Self::build(None, None, None)
+    }
+
+    /// In-memory cache whose memory tier holds at most `cap` entries
+    /// (clamped to ≥ 1), evicting least-recently-used.  Without a disk
+    /// tier an evicted entry is simply recomputed on its next miss — the
+    /// bit-identical value, per the [`Evaluator`] determinism contract.
+    pub fn bounded(cap: usize) -> EvalCache {
+        Self::build(Some(cap.max(1)), None, None)
+    }
+
+    fn build(cap: Option<usize>, journal: Option<Journal>, path: Option<PathBuf>) -> EvalCache {
         EvalCache {
             inner: Arc::new(Inner {
-                shards: (0..SHARD_COUNT).map(|_| Mutex::new(HashMap::new())).collect(),
+                shards: (0..SHARD_COUNT)
+                    .map(|i| {
+                        Mutex::new(Shard {
+                            cap: cap.map(|c| shard_cap(c, i)),
+                            ..Shard::default()
+                        })
+                    })
+                    .collect(),
                 hits: AtomicUsize::new(0),
                 misses: AtomicUsize::new(0),
-                journal: None,
-                journal_path: None,
+                evictions: AtomicUsize::new(0),
+                resident: AtomicUsize::new(0),
+                peak: AtomicUsize::new(0),
+                capacity: cap,
+                journal: journal.map(Mutex::new),
+                journal_path: path,
             }),
         }
     }
 
-    /// Persistent cache rooted at `dir`: loads `<dir>/eval_cache.jsonl`
-    /// (skipping truncated/corrupt records) and appends every fresh
-    /// evaluation to it.  Entries loaded from disk count as neither hits
-    /// nor misses until they are looked up.
+    /// Persistent cache rooted at `dir`: streams `<dir>/eval_cache.jsonl`
+    /// back into the memory tier (skipping truncated/corrupt records) and
+    /// group-commits every fresh evaluation to it.  Entries loaded from
+    /// disk count as neither hits nor misses until they are looked up.
     pub fn with_dir(dir: impl AsRef<Path>) -> Result<EvalCache> {
+        Self::with_dir_capped(dir, None)
+    }
+
+    /// [`EvalCache::with_dir`] with an optional global LRU cap on the
+    /// *memory* tier (clamped to ≥ 1).  The journal is still loaded in
+    /// full — entries past the cap evict on the way in — and stays
+    /// authoritative, so a capped cache returns exactly the scores an
+    /// unbounded one does; only hit rates and peak residency differ.
+    pub fn with_dir_capped(dir: impl AsRef<Path>, cap: Option<usize>) -> Result<EvalCache> {
         let dir = dir.as_ref();
         std::fs::create_dir_all(dir)?;
         let path = dir.join(JOURNAL_FILE);
-        let cache = EvalCache::new();
-        if path.exists() {
-            cache.load_journal(&path)?;
-        }
-        // Torn tails are healed by *appending* a newline, never truncating
-        // — see `jsonl::open_append_healed` (the one implementation shared
-        // with the transcript journals).
+        // Heal-then-open *before* loading: a torn tail is terminated by an
+        // appended newline (never truncation — a concurrent writer may be
+        // mid-append), so the load below sees only whole lines.
         let file = jsonl::open_append_healed(&path)?;
-        // Rebuild the Arc with the journal attached (no other handles can
-        // exist yet — the cache was created three lines up).
-        let inner = Arc::try_unwrap(cache.inner)
-            .unwrap_or_else(|_| unreachable!("fresh cache has one handle"));
-        Ok(EvalCache {
-            inner: Arc::new(Inner {
-                journal: Some(Mutex::new(Journal { file })),
-                journal_path: Some(path),
-                ..inner
-            }),
-        })
+        let cache = Self::build(
+            cap.map(|c| c.max(1)),
+            Some(Journal::new(file)),
+            Some(path.clone()),
+        );
+        cache.load_journal(&path)?;
+        Ok(cache)
+    }
+
+    /// Resolve the memory-tier cap: explicit CLI value, else
+    /// `HAQA_CACHE_CAP`, else `None` (unbounded).  Hard-error parsing like
+    /// [`FleetRunner::batch_from_env`](super::FleetRunner::batch_from_env),
+    /// and a cap of 0 — from either source — is itself a hard error rather
+    /// than a silent "off": a zero-entry cache is always a typo.
+    pub fn cap_from_env(cli: Option<usize>) -> Result<Option<usize>> {
+        let n = match cli {
+            Some(n) => Some(n),
+            None => match std::env::var("HAQA_CACHE_CAP") {
+                Ok(v) => Some(v.trim().parse::<usize>().map_err(|_| {
+                    anyhow!("HAQA_CACHE_CAP must be a positive integer, got '{v}'")
+                })?),
+                Err(_) => None,
+            },
+        };
+        match n {
+            Some(0) => Err(anyhow!(
+                "the cache capacity must be >= 1 (omit --cache-cap/HAQA_CACHE_CAP \
+                 for an unbounded memory tier)"
+            )),
+            other => Ok(other),
+        }
     }
 
     /// The journal file backing the disk tier, if one is attached.
     pub fn journal_path(&self) -> Option<&Path> {
         self.inner.journal_path.as_deref()
+    }
+
+    /// The configured global LRU cap (`None` = unbounded).
+    pub fn capacity(&self) -> Option<usize> {
+        self.inner.capacity
+    }
+
+    /// Commit the buffered journal group now (no-op when empty or without
+    /// a disk tier).  The fleet runner calls this at sweep boundaries —
+    /// and [`Drop`] calls it for the last handle — so the on-disk journal
+    /// is complete whenever a run hands it to the next process.
+    pub fn flush_journal(&self) {
+        if let Some(j) = &self.inner.journal {
+            lock(j).flush();
+        }
     }
 
     /// The deterministic cache key: a content hash of
@@ -213,13 +472,14 @@ impl EvalCache {
         let mut out: Vec<Option<(Evaluation, bool)>> =
             keys.iter().map(|&k| self.lookup(k).map(|e| (e, true))).collect();
         // First occurrence of each missing key gets evaluated; later
-        // duplicates are served from the cache after insertion.
+        // duplicates are served from the batch's own results.
         let mut pending: Vec<(u128, usize)> = Vec::new();
         for (i, &k) in keys.iter().enumerate() {
             if out[i].is_none() && !pending.iter().any(|&(pk, _)| pk == k) {
                 pending.push((k, i));
             }
         }
+        let mut fresh_by_key: HashMap<u128, Evaluation> = HashMap::new();
         if !pending.is_empty() {
             let miss_cfgs: Vec<Config> = pending.iter().map(|&(_, i)| cfgs[i].clone()).collect();
             let fresh = ev.evaluate_batch(&miss_cfgs)?;
@@ -232,6 +492,7 @@ impl EvalCache {
             );
             for (&(key, i), e) in pending.iter().zip(&fresh) {
                 self.insert(key, e);
+                fresh_by_key.insert(key, e.clone());
                 out[i] = Some((e.clone(), false));
             }
         }
@@ -240,25 +501,43 @@ impl EvalCache {
             .zip(&keys)
             .map(|(slot, &k)| {
                 slot.unwrap_or_else(|| {
-                    // An in-batch duplicate of a just-evaluated key.
-                    (self.lookup(k).expect("inserted above"), true)
+                    // An in-batch duplicate of a just-evaluated key: served
+                    // from the memory tier, or — if the LRU cap already
+                    // evicted it — from the batch's own results.
+                    let e = self.lookup(k).unwrap_or_else(|| {
+                        self.inner.hits.fetch_add(1, Ordering::Relaxed);
+                        fresh_by_key[&k].clone()
+                    });
+                    (e, true)
                 })
             })
             .collect())
     }
 
-    /// Snapshot of the hit/miss counters and the entry count.
+    /// Snapshot of the counters and the entry count.
     pub fn stats(&self) -> CacheStats {
+        let (journal_records, journal_writes) = match &self.inner.journal {
+            Some(j) => {
+                let g = lock(j);
+                (g.records, g.writes)
+            }
+            None => (0, 0),
+        };
         CacheStats {
             hits: self.inner.hits.load(Ordering::Relaxed),
             misses: self.inner.misses.load(Ordering::Relaxed),
             entries: self.len(),
+            evictions: self.inner.evictions.load(Ordering::Relaxed),
+            peak_entries: self.inner.peak.load(Ordering::Relaxed),
+            capacity: self.inner.capacity,
+            journal_records,
+            journal_writes,
         }
     }
 
     /// Distinct keys currently held in the memory tier.
     pub fn len(&self) -> usize {
-        self.inner.shards.iter().map(|s| lock(s).len()).sum()
+        self.inner.shards.iter().map(|s| lock(s).map.len()).sum()
     }
 
     /// Whether the memory tier holds no entries.
@@ -266,7 +545,7 @@ impl EvalCache {
         self.len() == 0
     }
 
-    fn shard(&self, key: u128) -> MutexGuard<'_, HashMap<u128, Evaluation>> {
+    fn shard(&self, key: u128) -> MutexGuard<'_, Shard> {
         // Fold both hash lanes into the stripe index so either lane's
         // entropy suffices.
         let idx = ((key ^ (key >> 64)) as usize) & (SHARD_COUNT - 1);
@@ -274,39 +553,48 @@ impl EvalCache {
     }
 
     fn lookup(&self, key: u128) -> Option<Evaluation> {
-        let found = self.shard(key).get(&key).cloned();
+        let found = self.shard(key).touch(key);
         if found.is_some() {
             self.inner.hits.fetch_add(1, Ordering::Relaxed);
         }
         found
     }
 
-    /// Memoize a freshly computed evaluation (counted as a miss) and, if it
-    /// is the first write for this key, append it to the journal.
+    /// Store under the shard's cap slice and keep the global residency /
+    /// peak / eviction counters in step.  The update applies at most one
+    /// atomic increment per store (evict-then-insert is net 0), so the
+    /// counter never overstates true residency and the peak can never
+    /// exceed the cap.
+    fn store(&self, key: u128, e: &Evaluation) -> StoreEffect {
+        let track_journal = self.inner.journal.is_some();
+        let eff = self.shard(key).store(key, e, track_journal);
+        if eff.stored && eff.dropped == 0 {
+            let now = self.inner.resident.fetch_add(1, Ordering::Relaxed) + 1;
+            self.inner.peak.fetch_max(now, Ordering::Relaxed);
+        }
+        let evictions = eff.dropped + usize::from(eff.suppressed);
+        if evictions > 0 {
+            self.inner.evictions.fetch_add(evictions, Ordering::Relaxed);
+        }
+        eff
+    }
+
+    /// Memoize a freshly computed evaluation (counted as a miss) and, the
+    /// first time the journal sees this key, buffer it for group commit.
     fn insert(&self, key: u128, fresh: &Evaluation) {
         self.inner.misses.fetch_add(1, Ordering::Relaxed);
-        let first_write = match self.shard(key).entry(key) {
-            Entry::Vacant(v) => {
-                v.insert(fresh.clone());
-                true
-            }
-            Entry::Occupied(_) => false,
-        };
-        if first_write {
+        let eff = self.store(key, fresh);
+        if eff.newly_journaled {
             if let Some(j) = &self.inner.journal {
-                // One write_all per record keeps concurrent appends from
-                // interleaving mid-line; a failed append only loses the
-                // disk tier, never the in-memory result.
                 let line = encode_record(key, fresh);
-                let mut g = lock(j);
-                let _ = g.file.write_all(line.as_bytes()).and_then(|()| g.file.flush());
+                lock(j).append(&line);
             }
         }
     }
 
     /// Rewrite `<dir>/eval_cache.jsonl` keeping only live records: the
     /// first valid record per key wins (matching the in-memory
-    /// first-write-wins `or_insert` semantics), superseded duplicates and
+    /// first-write-wins semantics), superseded duplicates and
     /// corrupt/blank lines are dropped, and record order is preserved.
     /// The rewrite is atomic (temp file + rename).  This is an **offline**
     /// maintenance pass (`haqa cache compact`): run it when no process is
@@ -316,7 +604,7 @@ impl EvalCache {
         let path = dir.as_ref().join(JOURNAL_FILE);
         let bytes = std::fs::read(&path)?;
         let mut live: Vec<String> = Vec::new();
-        let mut seen: std::collections::HashSet<u128> = std::collections::HashSet::new();
+        let mut seen: HashSet<u128> = HashSet::new();
         let mut before_records = 0usize;
         let scan = jsonl::scan(&bytes, |j, raw| match decode_record(j) {
             Some((key, _)) => {
@@ -346,18 +634,19 @@ impl EvalCache {
         })
     }
 
-    /// Load every valid journal record.  Corrupt lines (and a torn,
-    /// newline-less tail) are skipped with a warning — never an error, the
-    /// cache just recomputes what was lost.
+    /// Stream every valid journal record into the memory tier (under the
+    /// cap, if one is set) without materializing the file.  Corrupt lines
+    /// are skipped with a warning — never an error, the cache just
+    /// recomputes what was lost.  Loaded keys are marked journaled so they
+    /// are never re-appended, even after eviction.
     fn load_journal(&self, path: &Path) -> Result<()> {
-        let bytes = std::fs::read(path)?;
-        let scan = jsonl::scan(&bytes, |j, _| match decode_record(j) {
+        let scan = jsonl::scan_file(path, |j, _| match decode_record(j) {
             Some((key, e)) => {
-                self.shard(key).entry(key).or_insert(e);
+                self.store(key, &e);
                 true
             }
             None => false, // corrupt record: skip, keep loading
-        });
+        })?;
         if scan.skipped > 0 {
             eprintln!(
                 "eval cache: skipped {} corrupt/truncated record(s) in {}",
@@ -499,7 +788,9 @@ mod tests {
             CacheStats {
                 hits: 1,
                 misses: 1,
-                entries: 1
+                entries: 1,
+                peak_entries: 1,
+                ..CacheStats::default()
             }
         );
         assert_eq!(cache.stats().hit_rate(), 0.5);
@@ -563,6 +854,8 @@ mod tests {
         }
         assert_eq!(ev.calls.get(), computed, "second pass is all hits");
         assert_eq!(cache.stats().misses, computed);
+        assert_eq!(cache.stats().peak_entries, computed, "unbounded: peak = all");
+        assert_eq!(cache.stats().evictions, 0);
     }
 
     #[test]
@@ -590,6 +883,92 @@ mod tests {
     }
 
     #[test]
+    fn lru_cap_bounds_residency_and_never_changes_scores() {
+        // The same config stream through an unbounded and a tightly capped
+        // cache: identical score bits everywhere (evaluator determinism
+        // makes evicted entries recompute exactly), bounded peak, counted
+        // evictions.
+        let unbounded = EvalCache::new();
+        let capped = EvalCache::bounded(4);
+        assert_eq!(capped.capacity(), Some(4));
+        let ev_u = CountingEval::new(6.0);
+        let ev_c = CountingEval::new(6.0);
+        let mut rng = crate::util::rng::Rng::new(17);
+        let cfgs: Vec<Config> = (0..48).map(|_| ev_u.space.sample(&mut rng)).collect();
+        // Two passes so the capped cache revisits evicted keys.
+        for cfg in cfgs.iter().chain(cfgs.iter()) {
+            let (a, _) = unbounded.get_or_evaluate(&ev_u, cfg).unwrap();
+            let (b, _) = capped.get_or_evaluate(&ev_c, cfg).unwrap();
+            assert_eq!(a.score.to_bits(), b.score.to_bits(), "eviction changed a score");
+        }
+        let st = capped.stats();
+        assert!(st.entries <= 4, "resident entries exceed the cap: {st:?}");
+        assert!(st.peak_entries <= 4, "peak exceeds the cap: {st:?}");
+        assert!(st.evictions > 0, "a 4-entry cap over 48 keys must evict");
+        assert!(
+            ev_c.calls.get() > ev_u.calls.get(),
+            "the capped cache recomputes evicted entries"
+        );
+        assert_eq!(unbounded.stats().evictions, 0);
+        assert_eq!(unbounded.stats().peak_entries, unbounded.len());
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_touched() {
+        // Keys 0, 16, 32 share stripe 0 (stripe = key & 15 for small
+        // keys); a cap of 32 gives every shard a 2-entry slice.  Touching
+        // key 0 before storing key 32 must make key 16 the victim.
+        let cache = EvalCache::bounded(32);
+        let e = Evaluation {
+            score: 1.0,
+            extra: Vec::new(),
+            feedback: String::new(),
+        };
+        cache.store(0u128, &e);
+        cache.store(16u128, &e);
+        assert!(cache.shard(0).touch(0).is_some(), "touch moves 0 to MRU");
+        cache.store(32u128, &e);
+        let shard = cache.shard(0);
+        assert!(shard.map.contains_key(&0), "recently touched survives");
+        assert!(!shard.map.contains_key(&16), "LRU entry evicted");
+        assert!(shard.map.contains_key(&32));
+        drop(shard);
+        assert_eq!(cache.stats().evictions, 1);
+    }
+
+    #[test]
+    fn cap_env_parsing_hard_errors_on_zero_and_garbage() {
+        assert_eq!(EvalCache::cap_from_env(None).unwrap(), None, "off by default");
+        assert_eq!(EvalCache::cap_from_env(Some(500)).unwrap(), Some(500));
+        assert!(
+            EvalCache::cap_from_env(Some(0)).is_err(),
+            "--cache-cap 0 is a typo, not 'off'"
+        );
+        // Env fallback with hard-error parsing (serialized in one test,
+        // like the HAQA_WORKERS / HAQA_BATCH tests).
+        std::env::set_var("HAQA_CACHE_CAP", "plenty");
+        let err = EvalCache::cap_from_env(None);
+        std::env::remove_var("HAQA_CACHE_CAP");
+        let msg = format!("{:#}", err.expect_err("garbage must not be swallowed"));
+        assert!(msg.contains("HAQA_CACHE_CAP") && msg.contains("plenty"), "{msg}");
+
+        std::env::set_var("HAQA_CACHE_CAP", "0");
+        let err = EvalCache::cap_from_env(None);
+        std::env::remove_var("HAQA_CACHE_CAP");
+        assert!(err.is_err(), "HAQA_CACHE_CAP=0 is a hard error");
+
+        std::env::set_var("HAQA_CACHE_CAP", "2048");
+        let ok = EvalCache::cap_from_env(None);
+        std::env::remove_var("HAQA_CACHE_CAP");
+        assert_eq!(ok.unwrap(), Some(2048));
+
+        std::env::set_var("HAQA_CACHE_CAP", "99");
+        let ok = EvalCache::cap_from_env(Some(7));
+        std::env::remove_var("HAQA_CACHE_CAP");
+        assert_eq!(ok.unwrap(), Some(7), "explicit CLI value wins over env");
+    }
+
+    #[test]
     fn journal_round_trips_across_instances() {
         let dir = temp_cache_dir("roundtrip");
         let ev = CountingEval::new(1.5);
@@ -599,6 +978,7 @@ mod tests {
             let (e, hit) = cache.get_or_evaluate(&ev, &cfg).unwrap();
             assert!(!hit);
             e
+            // Dropping the last handle group-commits the buffered record.
         };
         // A brand-new instance (≈ a new process) must serve the evaluation
         // from the journal without calling the evaluator again.
@@ -616,6 +996,129 @@ mod tests {
     }
 
     #[test]
+    fn group_commit_buffers_flushes_and_drops() {
+        let dir = temp_cache_dir("groupcommit");
+        let ev = CountingEval::new(2.5);
+        let mut rng = crate::util::rng::Rng::new(5);
+        let cfgs: Vec<Config> = (0..6).map(|_| ev.space.sample(&mut rng)).collect();
+        let path = dir.join(JOURNAL_FILE);
+        {
+            let cache = EvalCache::with_dir(&dir).unwrap();
+            for cfg in &cfgs[..4] {
+                cache.get_or_evaluate(&ev, cfg).unwrap();
+            }
+            // Below both watermarks: everything is still buffered.
+            let st = cache.stats();
+            assert_eq!(st.journal_records, 4);
+            assert_eq!(st.journal_writes, 0, "no write before the watermark");
+            assert_eq!(std::fs::read(&path).unwrap(), b"", "file untouched");
+            // An explicit sweep-boundary flush commits the group in ONE
+            // write call.
+            cache.flush_journal();
+            let st = cache.stats();
+            assert_eq!(st.journal_writes, 1, "one syscall for the whole group");
+            let cache_check = EvalCache::with_dir(&dir).unwrap();
+            assert_eq!(cache_check.len(), 4, "flushed group is on disk");
+            drop(cache_check);
+            // Two more records stay buffered until the handle drops.
+            for cfg in &cfgs[4..] {
+                cache.get_or_evaluate(&ev, cfg).unwrap();
+            }
+            assert_eq!(cache.stats().journal_records, 6);
+            assert_eq!(cache.stats().journal_writes, 1);
+        }
+        // Drop committed the tail group.
+        let cache2 = EvalCache::with_dir(&dir).unwrap();
+        assert_eq!(cache2.len(), 6, "drop flushed the tail group");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn group_commit_watermark_flushes_by_itself() {
+        let dir = temp_cache_dir("watermark");
+        std::fs::create_dir_all(&dir).unwrap();
+        let cache = EvalCache::with_dir(&dir).unwrap();
+        let e = Evaluation {
+            score: 0.5,
+            extra: Vec::new(),
+            feedback: "{}".into(),
+        };
+        for key in 0..(FLUSH_RECORDS as u128 + 10) {
+            cache.insert(key, &e);
+        }
+        let st = cache.stats();
+        assert_eq!(st.journal_records, FLUSH_RECORDS + 10);
+        assert!(st.journal_writes >= 1, "the record watermark must trip");
+        assert!(
+            st.journal_writes < st.journal_records,
+            "group commit coalesces: {} writes for {} records",
+            st.journal_writes,
+            st.journal_records
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn capped_disk_tier_stays_authoritative() {
+        // A tiny cap (1 ⇒ one shard slice of 1, fifteen of 0) must not
+        // lose journal records: the disk tier carries everything, and an
+        // unbounded instance on the same dir sees every record.
+        let dir = temp_cache_dir("cappeddisk");
+        let ev = CountingEval::new(3.5);
+        let mut rng = crate::util::rng::Rng::new(9);
+        let cfgs: Vec<Config> = (0..8).map(|_| ev.space.sample(&mut rng)).collect();
+        {
+            let capped = EvalCache::with_dir_capped(&dir, Some(1)).unwrap();
+            for cfg in &cfgs {
+                capped.get_or_evaluate(&ev, cfg).unwrap();
+            }
+            assert!(capped.len() <= 1, "cap 1 holds at most one entry");
+        }
+        let full = EvalCache::with_dir(&dir).unwrap();
+        assert_eq!(full.len(), 8, "every record reached the journal once");
+        let ev2 = CountingEval::new(3.5);
+        for cfg in &cfgs {
+            let (_, hit) = full.get_or_evaluate(&ev2, cfg).unwrap();
+            assert!(hit, "served from the authoritative disk tier");
+        }
+        assert_eq!(ev2.calls.get(), 0);
+        // …and a capped *reload* still loads the full journal through the
+        // cap (evicting on the way in) without duplicating records.
+        let capped2 = EvalCache::with_dir_capped(&dir, Some(4)).unwrap();
+        assert!(capped2.len() <= 4);
+        assert!(capped2.stats().evictions > 0, "load-time eviction is counted");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn eviction_never_duplicates_journal_records() {
+        // An evicted key that gets recomputed must not be appended again:
+        // the journaled set, not residency, gates appends.
+        let dir = temp_cache_dir("nodup");
+        let ev = CountingEval::new(4.5);
+        let mut rng = crate::util::rng::Rng::new(13);
+        let cfgs: Vec<Config> = (0..12).map(|_| ev.space.sample(&mut rng)).collect();
+        {
+            let capped = EvalCache::with_dir_capped(&dir, Some(2)).unwrap();
+            for cfg in cfgs.iter().chain(cfgs.iter()) {
+                capped.get_or_evaluate(&ev, cfg).unwrap();
+            }
+            assert!(
+                ev.calls.get() > 12,
+                "the second pass recomputed at least one evicted key"
+            );
+            assert_eq!(
+                capped.stats().journal_records,
+                12,
+                "exactly one journal record per distinct key"
+            );
+        }
+        let full = EvalCache::with_dir(&dir).unwrap();
+        assert_eq!(full.len(), 12);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
     fn torn_journal_tail_is_skipped_and_healed() {
         let dir = temp_cache_dir("corrupt");
         let ev1 = CountingEval::new(1.0);
@@ -627,7 +1130,8 @@ mod tests {
             cache.get_or_evaluate(&ev2, &cfg).unwrap();
         }
         let path = dir.join(JOURNAL_FILE);
-        // Simulate a crashed writer: a torn, newline-less tail record.
+        // Simulate a crashed writer: a torn, newline-less tail record —
+        // exactly what an interrupted group commit leaves behind.
         let mut bytes = std::fs::read(&path).unwrap();
         bytes.extend_from_slice(b"{\"key\":\"00ff\",\"bits\":\"zzz");
         std::fs::write(&path, &bytes).unwrap();
@@ -638,6 +1142,7 @@ mod tests {
         // records appended after recovery load cleanly.
         let ev3 = CountingEval::new(3.0);
         cache2.get_or_evaluate(&ev3, &cfg).unwrap();
+        drop(cache2);
         let cache3 = EvalCache::with_dir(&dir).unwrap();
         assert_eq!(cache3.len(), 3, "post-recovery appends load cleanly");
         let _ = std::fs::remove_dir_all(&dir);
@@ -700,7 +1205,7 @@ mod tests {
         // The compacted journal loads cleanly and kept the live values.
         let cache = EvalCache::with_dir(&dir).unwrap();
         assert_eq!(cache.len(), 2);
-        let shard_val = |key: u128| cache.shard(key).get(&key).cloned().unwrap();
+        let shard_val = |key: u128| cache.shard(key).map.get(&key).cloned().unwrap().0;
         assert_eq!(shard_val(42).score.to_bits(), 1.0f64.to_bits(), "first write wins");
         assert_eq!(shard_val(43).score.to_bits(), 3.0f64.to_bits());
 

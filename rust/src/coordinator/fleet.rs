@@ -113,6 +113,63 @@ pub struct FleetReport {
     pub agent: Option<BatchStats>,
 }
 
+impl FleetReport {
+    /// Per-platform Pareto fronts over the fleet's outcomes — the paper's
+    /// "counterintuitive wins" claim at scale: the front of each platform
+    /// is computed independently, so a scheme that loses globally can
+    /// still be the per-platform winner.  Grouping is `device/track`;
+    /// objective vectors are all-maximized:
+    ///
+    /// * **bit-width scenarios**: `[tokens/s, -memory footprint (GB)]` —
+    ///   throughput of the best-scoring round's scheme against the
+    ///   analytic footprint of deploying it, via the same
+    ///   [`crate::hardware::adaptive`]/[`crate::hardware::memory`] models
+    ///   the evaluator used.
+    /// * **kernel scenarios**: `[best score]` (negated latency), so the
+    ///   front is each platform's best execution config per kernel.
+    ///
+    /// Failed scenarios, non-deployment tracks (CNN/LM/joint), and
+    /// bit-width outcomes whose best round picked no valid scheme are
+    /// skipped.  `scenarios` must be the slice the report was produced
+    /// from (outcome `i` pairs with scenario `i`).
+    pub fn pareto(&self, scenarios: &[Scenario]) -> Vec<crate::report::GroupFront> {
+        let items: Vec<crate::report::ParetoItem> = self
+            .outcomes
+            .iter()
+            .zip(scenarios)
+            .filter_map(|(out, sc)| {
+                let out = out.as_ref().ok()?;
+                let objectives = match sc.track {
+                    Track::Kernel => vec![out.best_score],
+                    Track::Bitwidth => {
+                        let best = crate::optimizers::best(&out.history)?;
+                        let scheme = best
+                            .config
+                            .get("quant")
+                            .and_then(|v| v.as_str())
+                            .and_then(crate::quant::Scheme::parse)?;
+                        let model = super::workflow::model_by_name(&sc.model).ok()?;
+                        vec![
+                            out.best_score,
+                            -crate::hardware::memory::footprint_gb(&model, scheme),
+                        ]
+                    }
+                    _ => return None,
+                };
+                Some(crate::report::ParetoItem {
+                    group: format!("{}/{}", sc.device, match sc.track {
+                        Track::Kernel => "kernel",
+                        _ => "bitwidth",
+                    }),
+                    name: sc.name.clone(),
+                    objectives,
+                })
+            })
+            .collect();
+        crate::report::group_fronts(&items)
+    }
+}
+
 /// What starting a scenario produced: a parkable session, or (for joint
 /// scenarios and construction errors) an immediately final outcome.
 enum Started<'s> {
@@ -274,6 +331,12 @@ impl FleetRunner {
             .enumerate()
             .map(|(i, o)| o.unwrap_or_else(|| Err(anyhow!("scenario #{i}: worker died"))))
             .collect();
+        // Sweep boundary: group-commit the buffered journal tail so the
+        // on-disk cache is complete (and the stats below final) before the
+        // report — not only when the last handle drops.
+        if let Some(c) = &self.cache {
+            c.flush_journal();
+        }
         FleetReport {
             outcomes,
             cache: self.cache.as_ref().map(|c| c.stats()),

@@ -1,0 +1,495 @@
+//! Deterministic scenario-matrix generator — `haqa scenarios gen`.
+//!
+//! The paper's pitch is adaptive quantization across *diverse* hardware
+//! platforms; hand-writing scenario files tops out at a few dozen.  A
+//! [`MatrixSpec`] is the compact description of a sweep — models ×
+//! [`crate::hardware::preset`] platforms × quant/tuning constraints — that
+//! [`MatrixSpec::expand`] turns into thousands of concrete [`Scenario`]s:
+//!
+//! * **Deterministic**: expansion is a pure function of the spec.  The
+//!   per-scenario seeds derive from the spec seed via
+//!   [`crate::util::rng::Rng::split`], and rendering ([`render_batch`])
+//!   is byte-stable, so `haqa scenarios gen` twice with one spec produces
+//!   identical files — CI diffs them.
+//! * **Family-clustered**: scenarios come out grouped the way
+//!   [`Scenario::family`] shards the fleet queue (kernel scenarios
+//!   per-device, bit-width scenarios together), so at 10k scale the
+//!   family-ordered [`FleetRunner`](super::FleetRunner) queue actually
+//!   clusters per-device state instead of thrashing it.
+//! * **Validated up front**: every device, kernel spec, optimizer and
+//!   model name in the spec is resolved against the same registries the
+//!   workflow uses ([`crate::hardware::preset`],
+//!   [`super::evaluator::parse_kernel_spec`],
+//!   [`crate::optimizers::by_name`],
+//!   [`super::workflow::model_by_name`]) at parse time — a typo fails the
+//!   generator, not scenario 8314 of a fleet run.
+//!
+//! A spec reaches the fleet two ways: `haqa scenarios gen --spec … --out …`
+//! materializes the batch as a plain `{"scenarios": […]}` file, and
+//! [`Scenario::load_many`] accepts a `{"matrix": {…}}` wrapper directly,
+//! expanding in memory without the intermediate file.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+use super::scenario::{Scenario, Track};
+
+/// Derived per-scenario seeds keep only the low 53 bits so they survive a
+/// JSON `f64` round-trip bit-exactly (the scenario file format carries
+/// numbers, not strings).
+const SEED_MASK: u64 = (1 << 53) - 1;
+
+/// One full pass of the matrix: every device × kernel × optimizer kernel
+/// scenario, then every device × model × memory-limit bit-width scenario.
+/// `count` scenarios are drawn by cycling passes; each pass re-derives the
+/// seeds, so repeated passes are distinct replicas, not duplicates.
+#[derive(Debug, Clone)]
+pub struct MatrixSpec {
+    /// Root seed; every scenario's seed is split deterministically off it.
+    pub seed: u64,
+    /// Exactly how many scenarios to generate.
+    pub count: usize,
+    /// Platform names, resolved through [`crate::hardware::preset`].
+    pub devices: Vec<String>,
+    /// Tuning-round budget for the kernel scenarios.
+    pub budget: usize,
+    /// Agent backend spec stamped on every scenario (see
+    /// [`Scenario::backend`]).
+    pub backend: String,
+    /// Kernel specs (`kernel[:batch]`) for the kernel track.
+    pub kernels: Vec<String>,
+    /// Optimizer roster for the kernel track (see
+    /// [`crate::optimizers::by_name`]).
+    pub optimizers: Vec<String>,
+    /// Deployment models for the bit-width track (see
+    /// [`super::workflow::model_by_name`]).
+    pub models: Vec<String>,
+    /// Memory budgets (GB) for the bit-width track.
+    pub memory_limits_gb: Vec<f64>,
+}
+
+impl Default for MatrixSpec {
+    fn default() -> Self {
+        MatrixSpec {
+            seed: 0,
+            count: 1000,
+            devices: crate::hardware::PRESET_NAMES
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
+            budget: 6,
+            backend: "simulated".into(),
+            kernels: ["matmul:64", "matmul:256", "softmax:128", "rmsnorm:64", "silu:64"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
+            optimizers: ["haqa", "random", "bayesian", "local"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
+            models: [
+                "llama2-7b",
+                "llama2-13b",
+                "llama3-8b",
+                "llama3.2-3b",
+                "openllama-3b",
+                "tinyllama-1.1b",
+                "gpt2-large",
+            ]
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
+            memory_limits_gb: vec![4.0, 8.0, 12.0, 24.0],
+        }
+    }
+}
+
+fn string_list(j: &Json, key: &str) -> Result<Option<Vec<String>>> {
+    match j.get(key) {
+        None => Ok(None),
+        Some(v) => {
+            let arr = v
+                .as_arr()
+                .ok_or_else(|| anyhow!("matrix: \"{key}\" must be an array of strings"))?;
+            let out = arr
+                .iter()
+                .map(|x| {
+                    x.as_str()
+                        .map(str::to_string)
+                        .ok_or_else(|| anyhow!("matrix: \"{key}\" must be an array of strings"))
+                })
+                .collect::<Result<Vec<String>>>()?;
+            if out.is_empty() {
+                bail!("matrix: \"{key}\" must not be empty");
+            }
+            Ok(Some(out))
+        }
+    }
+}
+
+impl MatrixSpec {
+    /// The default sweep at a given size — what the bench scale phase runs.
+    pub fn scale_default(count: usize, seed: u64) -> MatrixSpec {
+        MatrixSpec {
+            count,
+            seed,
+            ..MatrixSpec::default()
+        }
+    }
+
+    /// Parse the `{"matrix": {…}}` body.  Every field is optional except
+    /// `count`; unknown keys and registry-unknown names (devices, kernels,
+    /// optimizers, models) are hard errors, so a typo'd sweep never
+    /// silently generates the wrong ten thousand scenarios.
+    pub fn from_json(j: &Json) -> Result<MatrixSpec> {
+        const KNOWN: &[&str] = &[
+            "seed", "count", "devices", "budget", "backend", "kernels",
+            "optimizers", "models", "memory_limits_gb",
+        ];
+        let obj = j
+            .as_obj()
+            .ok_or_else(|| anyhow!("matrix: expected an object"))?;
+        for (k, _) in obj {
+            if !KNOWN.contains(&k.as_str()) {
+                bail!("matrix: unknown key \"{k}\" (known: {})", KNOWN.join(", "));
+            }
+        }
+        let mut spec = MatrixSpec::default();
+        if let Some(v) = j.get("seed") {
+            let n = v.as_f64().ok_or_else(|| anyhow!("matrix: \"seed\" must be a number"))?;
+            spec.seed = n as u64;
+        }
+        let count = j
+            .get("count")
+            .ok_or_else(|| anyhow!("matrix: missing required \"count\""))?
+            .as_f64()
+            .ok_or_else(|| anyhow!("matrix: \"count\" must be a number"))?;
+        if count < 1.0 {
+            bail!("matrix: \"count\" must be >= 1");
+        }
+        spec.count = count as usize;
+        if let Some(v) = j.get("budget") {
+            let n = v.as_f64().ok_or_else(|| anyhow!("matrix: \"budget\" must be a number"))?;
+            if n < 1.0 {
+                bail!("matrix: \"budget\" must be >= 1");
+            }
+            spec.budget = n as usize;
+        }
+        if let Some(v) = j.get("backend") {
+            spec.backend = v
+                .as_str()
+                .ok_or_else(|| anyhow!("matrix: \"backend\" must be a string"))?
+                .to_string();
+        }
+        if let Some(v) = string_list(j, "devices")? {
+            spec.devices = v;
+        }
+        if let Some(v) = string_list(j, "kernels")? {
+            spec.kernels = v;
+        }
+        if let Some(v) = string_list(j, "optimizers")? {
+            spec.optimizers = v;
+        }
+        if let Some(v) = string_list(j, "models")? {
+            spec.models = v;
+        }
+        if let Some(v) = j.get("memory_limits_gb") {
+            let arr = v
+                .as_arr()
+                .ok_or_else(|| anyhow!("matrix: \"memory_limits_gb\" must be an array"))?;
+            let lims = arr
+                .iter()
+                .map(|x| {
+                    x.as_f64()
+                        .filter(|g| *g > 0.0)
+                        .ok_or_else(|| {
+                            anyhow!("matrix: \"memory_limits_gb\" must hold positive numbers")
+                        })
+                })
+                .collect::<Result<Vec<f64>>>()?;
+            if lims.is_empty() {
+                bail!("matrix: \"memory_limits_gb\" must not be empty");
+            }
+            spec.memory_limits_gb = lims;
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Resolve every name against the registries the workflow will use.
+    fn validate(&self) -> Result<()> {
+        for d in &self.devices {
+            if crate::hardware::preset(d).is_none() {
+                bail!(
+                    "matrix: unknown device '{d}' (presets: {})",
+                    crate::hardware::PRESET_NAMES.join(", ")
+                );
+            }
+        }
+        for k in &self.kernels {
+            super::evaluator::parse_kernel_spec(k)
+                .map_err(|e| anyhow!("matrix: bad kernel spec '{k}': {e}"))?;
+        }
+        for o in &self.optimizers {
+            crate::optimizers::by_name(o).map_err(|e| anyhow!("matrix: {e}"))?;
+        }
+        for m in &self.models {
+            super::workflow::model_by_name(m).map_err(|e| anyhow!("matrix: {e}"))?;
+        }
+        Ok(())
+    }
+
+    /// Scenarios in one pass of the full cross product.
+    pub fn pass_len(&self) -> usize {
+        self.devices.len() * self.kernels.len() * self.optimizers.len()
+            + self.devices.len() * self.models.len() * self.memory_limits_gb.len()
+    }
+
+    /// Expand into exactly `count` scenarios.  Deterministic: scenario `i`
+    /// depends only on the spec (its seed is `split(i)` off the root seed,
+    /// masked to 53 bits so the JSON number round-trips bit-exactly).
+    pub fn expand(&self) -> Vec<Scenario> {
+        let root = Rng::new(self.seed);
+        let mut out = Vec::with_capacity(self.count);
+        let mut pass = 0usize;
+        'fill: loop {
+            // Kernel sweep first, device-outer: each device's scenarios
+            // are contiguous, matching the per-device `sim/kernel/…`
+            // family shards.
+            for device in &self.devices {
+                for kernel in &self.kernels {
+                    for optimizer in &self.optimizers {
+                        if out.len() >= self.count {
+                            break 'fill;
+                        }
+                        let i = out.len();
+                        let seed = root.split(i as u64).next_u64() & SEED_MASK;
+                        out.push(Scenario {
+                            name: format!(
+                                "gen/k/{device}/{}/{optimizer}/p{pass}",
+                                kernel.replace(':', "x")
+                            ),
+                            track: Track::Kernel,
+                            optimizer: optimizer.clone(),
+                            budget: self.budget,
+                            seed,
+                            device: device.clone(),
+                            kernel: kernel.clone(),
+                            backend: self.backend.clone(),
+                            ..Scenario::default()
+                        });
+                    }
+                }
+            }
+            // Bit-width sweep second: one shared `sim/bitwidth` family.
+            for device in &self.devices {
+                for model in &self.models {
+                    for &limit in &self.memory_limits_gb {
+                        if out.len() >= self.count {
+                            break 'fill;
+                        }
+                        let i = out.len();
+                        let seed = root.split(i as u64).next_u64() & SEED_MASK;
+                        out.push(Scenario {
+                            name: format!("gen/bw/{device}/{model}/m{limit}/p{pass}"),
+                            track: Track::Bitwidth,
+                            model: model.clone(),
+                            seed,
+                            device: device.clone(),
+                            memory_limit_gb: limit,
+                            backend: self.backend.clone(),
+                            ..Scenario::default()
+                        });
+                    }
+                }
+            }
+            pass += 1;
+        }
+        out
+    }
+}
+
+/// Render one scenario back to the JSON shape [`Scenario::from_json`]
+/// reads, emitting only the fields the generator sets (everything else is
+/// the documented default).
+fn scenario_to_json(s: &Scenario) -> Json {
+    let mut o = Json::obj();
+    o.set("name", Json::str(&s.name));
+    o.set(
+        "task",
+        Json::str(match s.track {
+            Track::Kernel => "kernel",
+            Track::Bitwidth => "bitwidth",
+            Track::FinetuneCnn => "finetune_cnn",
+            Track::FinetuneLm => "finetune_lm",
+            Track::Joint => "joint",
+        }),
+    );
+    match s.track {
+        Track::Bitwidth => {
+            o.set("model", Json::str(&s.model));
+            o.set("memory_limit_gb", Json::Num(s.memory_limit_gb));
+        }
+        _ => {
+            o.set("kernel", Json::str(&s.kernel));
+            o.set("optimizer", Json::str(&s.optimizer));
+            o.set("budget", Json::Num(s.budget as f64));
+        }
+    }
+    o.set("seed", Json::Num(s.seed as f64));
+    o.set("device", Json::str(&s.device));
+    o.set("backend", Json::str(&s.backend));
+    o
+}
+
+/// Render an expanded batch as the `{"scenarios": […]}` wrapper
+/// [`Scenario::load_many`] reads.  Byte-deterministic for a fixed spec:
+/// object keys keep insertion order and numbers render canonically, so CI
+/// can diff two generator runs.
+pub fn render_batch(scenarios: &[Scenario]) -> String {
+    let mut o = Json::obj();
+    o.set(
+        "scenarios",
+        Json::Arr(scenarios.iter().map(scenario_to_json).collect()),
+    );
+    let mut text = o.to_string_pretty();
+    text.push('\n');
+    text
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn small_spec() -> MatrixSpec {
+        MatrixSpec {
+            count: 30,
+            seed: 42,
+            devices: vec!["a6000".into(), "adreno740".into()],
+            kernels: vec!["matmul:64".into(), "softmax:128".into()],
+            optimizers: vec!["random".into(), "local".into()],
+            models: vec!["tinyllama-1.1b".into(), "openllama-3b".into()],
+            memory_limits_gb: vec![8.0, 12.0],
+            ..MatrixSpec::default()
+        }
+    }
+
+    #[test]
+    fn expansion_is_deterministic_and_exact_count() {
+        let spec = small_spec();
+        let a = spec.expand();
+        let b = spec.expand();
+        assert_eq!(a.len(), 30);
+        assert_eq!(render_batch(&a), render_batch(&b), "byte-determinism");
+        // A different seed changes per-scenario seeds but nothing else.
+        let c = MatrixSpec {
+            seed: 43,
+            ..small_spec()
+        }
+        .expand();
+        assert_eq!(a.len(), c.len());
+        assert_eq!(a[0].name, c[0].name);
+        assert_ne!(a[0].seed, c[0].seed, "seed must flow into the scenarios");
+        assert!(a.iter().all(|s| s.seed <= SEED_MASK), "f64-exact seeds");
+    }
+
+    #[test]
+    fn expansion_cycles_passes_and_keeps_both_tracks() {
+        let spec = small_spec();
+        // One pass = 2*2*2 kernel + 2*2*2 bitwidth = 16 < 30: the second
+        // pass must start, with distinct names and seeds.
+        assert_eq!(spec.pass_len(), 16);
+        let v = spec.expand();
+        assert!(v.iter().any(|s| s.track == Track::Kernel));
+        assert!(v.iter().any(|s| s.track == Track::Bitwidth));
+        assert!(v.iter().any(|s| s.name.ends_with("/p1")), "second pass");
+        let mut names: Vec<&str> = v.iter().map(|s| s.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), v.len(), "names are unique across passes");
+        let p0 = v.iter().find(|s| s.name.ends_with("/p0")).unwrap();
+        let p1 = v
+            .iter()
+            .find(|s| s.name == p0.name.replace("/p0", "/p1"))
+            .unwrap();
+        assert_ne!(p0.seed, p1.seed, "replica passes get distinct seeds");
+    }
+
+    #[test]
+    fn generated_batch_round_trips_through_load_many() {
+        let spec = small_spec();
+        let rendered = render_batch(&spec.expand());
+        let path = std::env::temp_dir().join(format!("haqa_matrix_rt_{}.json", std::process::id()));
+        std::fs::write(&path, &rendered).unwrap();
+        let loaded = Scenario::load_many(path.to_str().unwrap()).unwrap();
+        let direct = spec.expand();
+        assert_eq!(loaded.len(), direct.len());
+        for (l, d) in loaded.iter().zip(&direct) {
+            assert_eq!(l.name, d.name);
+            assert_eq!(l.track, d.track);
+            assert_eq!(l.seed, d.seed, "seeds survive the JSON round-trip");
+            assert_eq!(l.device, d.device);
+            assert_eq!(l.kernel, d.kernel);
+            assert_eq!(l.model, d.model);
+            assert_eq!(l.budget, d.budget);
+            assert_eq!(l.memory_limit_gb, d.memory_limit_gb);
+            assert_eq!(l.family(), d.family());
+        }
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn spec_parsing_validates_against_registries() {
+        let ok = json::parse(r#"{"count": 10, "seed": 7, "devices": ["cpu"]}"#).unwrap();
+        let spec = MatrixSpec::from_json(&ok).unwrap();
+        assert_eq!(spec.count, 10);
+        assert_eq!(spec.seed, 7);
+        assert_eq!(spec.devices, vec!["cpu".to_string()]);
+
+        for bad in [
+            r#"{"seed": 7}"#,                                   // missing count
+            r#"{"count": 0}"#,                                  // count < 1
+            r#"{"count": 5, "devices": ["warp-drive"]}"#,       // unknown device
+            r#"{"count": 5, "kernels": ["matmul:banana"]}"#,    // bad kernel spec
+            r#"{"count": 5, "optimizers": ["sgd"]}"#,           // unknown optimizer
+            r#"{"count": 5, "models": ["llama9-1t"]}"#,         // unknown model
+            r#"{"count": 5, "memory_limits_gb": [-1]}"#,        // bad limit
+            r#"{"count": 5, "devcies": ["cpu"]}"#,              // typo'd key
+            r#"{"count": 5, "devices": []}"#,                   // empty list
+        ] {
+            let j = json::parse(bad).unwrap();
+            assert!(
+                MatrixSpec::from_json(&j).is_err(),
+                "spec must be rejected: {bad}"
+            );
+        }
+    }
+
+    #[test]
+    fn load_many_expands_matrix_wrapper_in_memory() {
+        let path = std::env::temp_dir().join(format!("haqa_matrix_wrap_{}.json", std::process::id()));
+        std::fs::write(
+            &path,
+            r#"{"matrix": {"count": 12, "seed": 3, "devices": ["orin"],
+                           "kernels": ["rmsnorm:64"], "optimizers": ["random"],
+                           "models": ["gpt2-large"], "memory_limits_gb": [8]}}"#,
+        )
+        .unwrap();
+        let v = Scenario::load_many(path.to_str().unwrap()).unwrap();
+        assert_eq!(v.len(), 12);
+        assert!(v.iter().all(|s| s.device == "orin"));
+        // Matches the explicit spec expanded directly.
+        let j = json::parse(
+            r#"{"count": 12, "seed": 3, "devices": ["orin"],
+                "kernels": ["rmsnorm:64"], "optimizers": ["random"],
+                "models": ["gpt2-large"], "memory_limits_gb": [8]}"#,
+        )
+        .unwrap();
+        let direct = MatrixSpec::from_json(&j).unwrap().expand();
+        assert_eq!(render_batch(&v), render_batch(&direct));
+        let _ = std::fs::remove_file(path);
+    }
+}

@@ -13,7 +13,9 @@
 //!   lock-striped in memory, optional persistent journal tier.
 //! * [`fleet`] — scoped-thread scenario fleet, family-sharded work queue,
 //!   overlapped in-flight agent queries (`HAQA_INFLIGHT`), bit-identical
-//!   to serial.
+//!   to serial, with per-platform Pareto fronts in the report.
+//! * [`matrix`] — deterministic scenario-matrix generator (`haqa
+//!   scenarios gen`): a compact spec expands into thousands of scenarios.
 //! * [`workflow`] — the generic round loop as a resumable
 //!   [`workflow::TrackSession`] state machine, plus the joint pipeline.
 //! * [`tasklog`] — per-task JSON logs (§3.3) with per-round agent cost.
@@ -30,6 +32,7 @@ pub mod cache;
 pub mod device;
 pub mod evaluator;
 pub mod fleet;
+pub mod matrix;
 pub mod scenario;
 pub mod tasklog;
 pub mod workflow;
@@ -38,5 +41,6 @@ pub use cache::{CacheStats, CompactReport, EvalCache};
 pub use device::{DeviceEvaluator, DeviceServer, EvaluatorSpec};
 pub use evaluator::{Evaluation, Evaluator};
 pub use fleet::{FleetReport, FleetRunner};
+pub use matrix::MatrixSpec;
 pub use scenario::Scenario;
 pub use workflow::{RoundState, SessionStatus, TrackOutcome, TrackSession, Workflow};

@@ -180,7 +180,9 @@ impl Scenario {
     }
 
     /// Load a scenario batch for the fleet runner: a top-level array, an
-    /// object with a `"scenarios"` array, or a single scenario object.
+    /// object with a `"scenarios"` array, a `{"matrix": {…}}` generator
+    /// spec (expanded in memory — see [`super::matrix::MatrixSpec`]), or a
+    /// single scenario object.
     /// An object that looks like neither (e.g. a typo'd wrapper key) is a
     /// hard error — `from_json` ignores unknown keys, so falling through to
     /// a single default scenario would silently run the wrong batch.
@@ -193,6 +195,13 @@ impl Scenario {
         let text = std::fs::read_to_string(path)?;
         let j = crate::util::json::parse(&text)
             .map_err(|e| anyhow::anyhow!("scenarios {path}: {e}"))?;
+        if let Some(m) = j.get("matrix") {
+            // A compact matrix spec expands in memory — no intermediate
+            // generated file needed.  See [`super::matrix::MatrixSpec`].
+            let spec = super::matrix::MatrixSpec::from_json(m)
+                .map_err(|e| anyhow::anyhow!("scenarios {path}: {e}"))?;
+            return Ok(spec.expand());
+        }
         let items: Vec<&Json> = if let Some(arr) = j.as_arr() {
             arr.iter().collect()
         } else if let Some(scenarios) = j.get("scenarios") {

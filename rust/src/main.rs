@@ -12,10 +12,14 @@
 //!                              (--inflight N overlaps agent queries,
 //!                               --batch N coalesces them into provider
 //!                               batches, --backend SPEC overrides the
-//!                               scenarios' agent backend)
+//!                               scenarios' agent backend, --cache-cap N
+//!                               bounds the memory cache tier)
+//! haqa scenarios gen           expand a matrix spec into a scenario batch
+//!                              (deterministic; feeds `haqa fleet`)
 //! haqa bench [--quick]         fleet/cache throughput harness → BENCH_2.json
 //!                              + agent-overlap phase → BENCH_3.json
 //!                              + provider-batching phase → BENCH_5.json
+//!                              + 10k-scenario scale phase → BENCH_6.json
 //! haqa cache compact           rewrite the eval-cache journal, live entries only
 //! haqa device serve            serve the JSONL device-measurement protocol
 //! haqa device ping             hello round-trip against a device server
@@ -52,6 +56,7 @@ fn real_main() -> Result<()> {
         "generate" => generate(rest),
         "run" => run_scenario(rest),
         "fleet" => fleet(rest),
+        "scenarios" => scenarios_cmd(rest),
         "bench" => bench_fleet(rest),
         "cache" => cache_cmd(rest),
         "device" => device_cmd(rest),
@@ -76,9 +81,14 @@ haqa — hardware-aware quantization agent (paper reproduction)
   haqa run <scenario.json>  run a scenario file (finetune/kernel/bitwidth/joint)
   haqa fleet <batch.json>   run a scenario batch on a worker pool w/ eval cache
                             (--inflight N overlaps in-flight agent queries,
-                            --batch N coalesces them into provider batches)
+                            --batch N coalesces them into provider batches,
+                            --cache-cap N bounds the memory cache tier; accepts
+                            a {\"matrix\": …} generator spec directly)
+  haqa scenarios gen        expand a scenario-matrix spec deterministically
+                            (--spec/--count/--seed/--out); feeds `haqa fleet`
   haqa bench                cold/warm serial/fleet throughput harness plus the
-                            agent-overlap and provider-batching phases; --help
+                            agent-overlap, provider-batching and 10k-scenario
+                            scale phases; --help
   haqa cache compact        rewrite the eval-cache journal keeping live entries
   haqa device serve         serve the device-measurement protocol (simulator-
                             backed stub; target of remote:// evaluator specs)
@@ -281,7 +291,9 @@ fn fleet(rest: Vec<String>) -> Result<()> {
         .opt("batch", "coalesce up to N in-flight proposals into one provider request (default: env HAQA_BATCH or off)")
         .opt("backend", "override every scenario's agent backend spec (e.g. replay:<journal> for the CI drift gate)")
         .opt("cache-dir", "persist the eval-cache journal here (shared across runs and processes)")
+        .opt("cache-cap", "bound the in-memory cache tier to N entries, LRU-evicted (default: env HAQA_CACHE_CAP or unbounded; never changes scores)")
         .flag("no-cache", "disable the content-addressed evaluation cache")
+        .flag("quiet", "skip per-scenario task-log writes (10k-scale runs)")
         .flag("check-serial", "re-run serially and verify bit-identical scores")
         .parse(rest)?;
     let path = a
@@ -304,17 +316,25 @@ fn fleet(rest: Vec<String>) -> Result<()> {
     if let Some(b) = batch {
         runner = runner.with_batch(b);
     }
-    if let Some(dir) = a.get("cache-dir") {
-        runner = runner.with_cache(EvalCache::with_dir(dir)?);
+    let cap = EvalCache::cap_from_env(a.get_usize("cache-cap")?)?;
+    match (a.get("cache-dir"), cap) {
+        (Some(dir), cap) => runner = runner.with_cache(EvalCache::with_dir_capped(dir, cap)?),
+        (None, Some(c)) => runner = runner.with_cache(EvalCache::bounded(c)),
+        (None, None) => {}
     }
     if a.get_bool("no-cache") {
         runner = runner.without_cache();
+    }
+    if a.get_bool("quiet") {
+        runner = runner.quiet();
     }
     let t0 = std::time::Instant::now();
     let report = runner.run(&scenarios);
     for (sc, out) in scenarios.iter().zip(&report.outcomes) {
         match out {
-            Ok(o) => println!(
+            // --quiet keeps the output readable at 10k scale: errors and
+            // the aggregate lines below still print.
+            Ok(o) if !a.get_bool("quiet") => println!(
                 "{:<24} {:?}: best {:.4}  ({} rounds, {} cache hits)",
                 sc.name,
                 sc.track,
@@ -322,6 +342,7 @@ fn fleet(rest: Vec<String>) -> Result<()> {
                 o.history.len(),
                 o.cache_hits
             ),
+            Ok(_) => {}
             Err(e) => println!("{:<24} {:?}: error: {e:#}", sc.name, sc.track),
         }
     }
@@ -334,9 +355,34 @@ fn fleet(rest: Vec<String>) -> Result<()> {
         t0.elapsed().as_secs_f64()
     );
     if let Some(st) = report.cache {
+        let cap_cell = st
+            .capacity
+            .map(|c| format!("cap {c}"))
+            .unwrap_or_else(|| "unbounded".into());
         println!(
-            "evaluation cache: {} hits / {} misses ({} entries)",
-            st.hits, st.misses, st.entries
+            "evaluation cache: {} hits / {} misses ({} entries, peak {}, {} evicted, {})",
+            st.hits, st.misses, st.entries, st.peak_entries, st.evictions, cap_cell
+        );
+        if st.journal_records > 0 {
+            println!(
+                "journal: {} record(s) in {} group-committed write(s)",
+                st.journal_records, st.journal_writes
+            );
+        }
+    }
+    // Per-platform Pareto fronts — the paper's "counterintuitive wins":
+    // a scheme that loses globally can still be the per-platform winner.
+    for f in report.pareto(&scenarios) {
+        let mut names: Vec<&str> = f.members.iter().map(|(n, _)| n.as_str()).take(6).collect();
+        if f.members.len() > names.len() {
+            names.push("…");
+        }
+        println!(
+            "pareto {:<20} {:>4} of {:>4} on the front: {}",
+            f.group,
+            f.members.len(),
+            f.total,
+            names.join(", ")
         );
     }
     if let Some(st) = report.agent {
@@ -370,6 +416,73 @@ fn fleet(rest: Vec<String>) -> Result<()> {
         println!("serial check: bit-identical best scores");
     }
     Ok(())
+}
+
+/// `haqa scenarios <subcommand>` — scenario-batch tooling.  `gen` expands
+/// a compact matrix spec into a concrete `{"scenarios": […]}` batch;
+/// expansion is deterministic and the rendering byte-stable, so running it
+/// twice with one spec produces identical files (CI diffs them).
+fn scenarios_cmd(rest: Vec<String>) -> Result<()> {
+    use haqa::coordinator::matrix::{render_batch, MatrixSpec};
+    use haqa::util::json;
+
+    let (sub, rest) = match rest.split_first() {
+        Some((s, r)) => (s.as_str(), r.to_vec()),
+        None => anyhow::bail!(
+            "usage: haqa scenarios gen [--spec FILE] [--count N] [--seed N] [--out FILE]"
+        ),
+    };
+    match sub {
+        "gen" => {
+            let a = Args::new(
+                "haqa scenarios gen",
+                "expand a scenario-matrix spec into a concrete batch (deterministic)",
+            )
+            .opt(
+                "spec",
+                "matrix spec file ({\"matrix\": {…}} or the bare object); \
+                 default: the built-in full-preset sweep",
+            )
+            .opt("count", "override the spec's scenario count")
+            .opt("seed", "override the spec's root seed")
+            .opt("out", "write the batch here (default: stdout)")
+            .parse(rest)?;
+            let mut spec = match a.get("spec") {
+                Some(path) => {
+                    let text = std::fs::read_to_string(path)?;
+                    let j = json::parse(&text)
+                        .map_err(|e| anyhow::anyhow!("matrix spec {path}: {e}"))?;
+                    MatrixSpec::from_json(j.get("matrix").unwrap_or(&j))
+                        .map_err(|e| anyhow::anyhow!("matrix spec {path}: {e}"))?
+                }
+                None => MatrixSpec::default(),
+            };
+            if let Some(n) = a.get_usize("count")? {
+                anyhow::ensure!(n >= 1, "--count must be >= 1");
+                spec.count = n;
+            }
+            if let Some(s) = a.get_f64("seed")? {
+                spec.seed = s as u64;
+            }
+            let scenarios = spec.expand();
+            let rendered = render_batch(&scenarios);
+            match a.get("out") {
+                Some(path) => {
+                    std::fs::write(path, rendered.as_bytes())?;
+                    println!(
+                        "generated {} scenarios ({} per matrix pass, seed {}) -> {path}",
+                        scenarios.len(),
+                        spec.pass_len(),
+                        spec.seed
+                    );
+                }
+                // Stdout stays pure batch JSON so it can be piped/diffed.
+                None => print!("{rendered}"),
+            }
+            Ok(())
+        }
+        other => anyhow::bail!("unknown scenarios subcommand '{other}' (try `gen`)"),
+    }
 }
 
 /// The perf trajectory harness (`haqa bench`): run a fixed scenario fleet
@@ -408,8 +521,12 @@ fn bench_fleet(rest: Vec<String>) -> Result<()> {
         )
         .opt_default("batching-out", "BENCH_5.json", "provider-batching report output path")
         .opt("batch", "provider batch size for the batching phase (default: its scenario count)")
+        .opt_default("scale-out", "BENCH_6.json", "scale-phase report output path")
+        .opt("scale-count", "generated scenario count for the scale phase (default: 10000, or 600 with --quick)")
+        .opt("cache-cap", "memory-tier LRU cap for the scale phase's capped runs (default: count/8, min 64)")
         .flag("skip-overlap", "skip the blocking-vs-pipelined agent-overlap phase")
         .flag("skip-batching", "skip the unbatched-vs-batched provider-request phase")
+        .flag("skip-scale", "skip the generated-matrix capped-vs-unbounded scale phase")
         .flag("quick", "small scenario set (CI perf smoke)")
         .parse(rest)?;
     let quick = a.get_bool("quick");
@@ -527,6 +644,15 @@ fn bench_fleet(rest: Vec<String>) -> Result<()> {
             a.get_usize("overlap-latency-ms")?.unwrap_or(12).max(1),
             a.get_usize("batch")?,
             a.get("batching-out").unwrap_or("BENCH_5.json"),
+        )?;
+    }
+    if !a.get_bool("skip-scale") {
+        bench_scale(
+            quick,
+            a.get_usize("scale-count")?,
+            a.get_usize("cache-cap")?,
+            workers,
+            a.get("scale-out").unwrap_or("BENCH_6.json"),
         )?;
     }
     Ok(())
@@ -768,6 +894,166 @@ fn bench_batching(
          aggregation layer is broken",
         un_stats.provider_requests,
         b_stats.provider_requests
+    );
+    Ok(())
+}
+
+/// The scale phase: a generated matrix (10k scenarios by default) through
+/// the fleet three ways — cold with an unbounded cache, cold with a
+/// tightly capped LRU tier, and warm on the capped journal (a new cache
+/// instance streaming the previous run's journal back through the cap).
+/// Emits `BENCH_6.json` and hard-fails unless (1) every phase is
+/// bit-identical — eviction can change hit rates, never scores; (2) peak
+/// resident memory-tier entries stayed within the cap; (3) the cold capped
+/// run's journal write calls were strictly fewer than its records — the
+/// group-commit win; (4) the warm run was served at least partly from the
+/// journal.  Also reports the per-platform Pareto fronts over the
+/// generated matrix (the paper's "counterintuitive wins" at scale).
+fn bench_scale(
+    quick: bool,
+    count: Option<usize>,
+    cap: Option<usize>,
+    workers: usize,
+    out_path: &str,
+) -> Result<()> {
+    use haqa::coordinator::cache::JOURNAL_FILE;
+    use haqa::coordinator::{CacheStats, FleetReport, MatrixSpec};
+    use haqa::util::json::Json;
+
+    let count = count.unwrap_or(if quick { 600 } else { 10_000 });
+    let cap = cap.unwrap_or((count / 8).max(64));
+    let spec = MatrixSpec::scale_default(count, 42);
+    let scenarios = spec.expand();
+    println!(
+        "scale: {} generated scenarios ({} per matrix pass), cache cap {cap}, {workers} workers",
+        scenarios.len(),
+        spec.pass_len()
+    );
+
+    let fresh_dir = |tag: &str| -> Result<std::path::PathBuf> {
+        let dir = std::env::temp_dir().join(format!(
+            "haqa_bench_scale_{tag}_{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir)?;
+        let _ = std::fs::remove_file(dir.join(JOURNAL_FILE));
+        Ok(dir)
+    };
+    let dir_unbounded = fresh_dir("unbounded")?;
+    let dir_capped = fresh_dir("capped")?;
+
+    let timed = |runner: FleetRunner| -> Result<(f64, Vec<u64>, FleetReport)> {
+        let t0 = std::time::Instant::now();
+        let report = runner.run(&scenarios);
+        let wall = t0.elapsed().as_secs_f64();
+        let mut bits = Vec::with_capacity(scenarios.len());
+        for (sc, out) in scenarios.iter().zip(&report.outcomes) {
+            let o = out.as_ref().map_err(|e| anyhow::anyhow!("{}: {e:#}", sc.name))?;
+            bits.push(o.best_score.to_bits());
+        }
+        Ok((wall, bits, report))
+    };
+    let stats_line = |tag: &str, wall: f64, st: &CacheStats| {
+        println!(
+            "  {tag}: {wall:8.3}s  ({} hits / {} computed, peak {} entries, \
+             {} evicted, {} journal records in {} writes)",
+            st.hits, st.misses, st.peak_entries, st.evictions, st.journal_records,
+            st.journal_writes
+        );
+    };
+
+    let (un_wall, un_bits, un_report) = timed(
+        FleetRunner::new(workers)
+            .quiet()
+            .with_cache(EvalCache::with_dir(&dir_unbounded)?),
+    )?;
+    let un_stats = un_report.cache.unwrap_or_default();
+    stats_line("cold unbounded", un_wall, &un_stats);
+    let (c_wall, c_bits, c_report) = timed(
+        FleetRunner::new(workers)
+            .quiet()
+            .with_cache(EvalCache::with_dir_capped(&dir_capped, Some(cap))?),
+    )?;
+    let c_stats = c_report.cache.unwrap_or_default();
+    stats_line("cold capped   ", c_wall, &c_stats);
+    // A fresh capped instance on the same journal: the process-boundary
+    // path, streaming the whole journal back through the cap.
+    let (w_wall, w_bits, w_report) = timed(
+        FleetRunner::new(workers)
+            .quiet()
+            .with_cache(EvalCache::with_dir_capped(&dir_capped, Some(cap))?),
+    )?;
+    let w_stats = w_report.cache.unwrap_or_default();
+    stats_line("warm capped   ", w_wall, &w_stats);
+
+    let bit_identical = un_bits == c_bits && un_bits == w_bits;
+    let peak_within_cap = c_stats.peak_entries <= cap && w_stats.peak_entries <= cap;
+    let journal_coalesced =
+        c_stats.journal_records > 0 && c_stats.journal_writes < c_stats.journal_records;
+    let fronts = un_report.pareto(&scenarios);
+    let front_members: usize = fronts.iter().map(|f| f.members.len()).sum();
+    println!(
+        "  pareto        : {} platform/track fronts, {} scenarios on them",
+        fronts.len(),
+        front_members
+    );
+
+    let phase = |wall: f64, st: &CacheStats| -> Json {
+        let mut o = Json::obj();
+        o.set("wall_s", Json::Num(wall));
+        o.set("computed", Json::Num(st.misses as f64));
+        o.set("cache_hits", Json::Num(st.hits as f64));
+        o.set("entries", Json::Num(st.entries as f64));
+        o.set("peak_entries", Json::Num(st.peak_entries as f64));
+        o.set("evictions", Json::Num(st.evictions as f64));
+        o.set("journal_records", Json::Num(st.journal_records as f64));
+        o.set("journal_writes", Json::Num(st.journal_writes as f64));
+        o
+    };
+    let mut phases = Json::obj();
+    phases.set("cold_unbounded", phase(un_wall, &un_stats));
+    phases.set("cold_capped", phase(c_wall, &c_stats));
+    phases.set("warm_capped", phase(w_wall, &w_stats));
+    let mut pareto = Json::obj();
+    pareto.set("groups", Json::Num(fronts.len() as f64));
+    pareto.set("front_members", Json::Num(front_members as f64));
+    let mut j = Json::obj();
+    j.set("bench", Json::str("haqa bench scale"));
+    j.set("quick", Json::Bool(quick));
+    j.set("scenarios", Json::Num(scenarios.len() as f64));
+    j.set("matrix_pass_len", Json::Num(spec.pass_len() as f64));
+    j.set("matrix_seed", Json::Num(spec.seed as f64));
+    j.set("families", Json::Num(un_report.families as f64));
+    j.set("workers", Json::Num(workers as f64));
+    j.set("cache_cap", Json::Num(cap as f64));
+    j.set("phases", phases);
+    j.set("pareto", pareto);
+    j.set("bit_identical", Json::Bool(bit_identical));
+    j.set("peak_within_cap", Json::Bool(peak_within_cap));
+    j.set("journal_writes_coalesced", Json::Bool(journal_coalesced));
+    j.set("warm_hits", Json::Num(w_stats.hits as f64));
+    std::fs::write(out_path, j.to_string_pretty())?;
+    println!("  report        : {out_path}");
+
+    anyhow::ensure!(
+        bit_identical,
+        "capped/warm fleet runs diverged from unbounded — eviction changed a score"
+    );
+    anyhow::ensure!(
+        peak_within_cap,
+        "peak resident entries exceeded the cap (cold {}, warm {} > {cap})",
+        c_stats.peak_entries,
+        w_stats.peak_entries
+    );
+    anyhow::ensure!(
+        journal_coalesced,
+        "journal writes not coalesced ({} writes for {} records) — group commit is broken",
+        c_stats.journal_writes,
+        c_stats.journal_records
+    );
+    anyhow::ensure!(
+        w_stats.hits > 0,
+        "warm capped run saw zero hits — the journal tier is broken under the cap"
     );
     Ok(())
 }

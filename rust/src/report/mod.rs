@@ -1,5 +1,7 @@
 //! Paper table/figure emitters (stdout markdown + `results/*.csv`).
 
 pub mod format;
+pub mod pareto;
 
 pub use format::{acc_pm, check_cell, speedup, us};
+pub use pareto::{group_fronts, GroupFront, ParetoItem};

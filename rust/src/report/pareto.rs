@@ -1,0 +1,120 @@
+//! Fleet-level Pareto fronts — the "counterintuitive wins" report.
+//!
+//! The paper's core claim is that hardware-aware quantization picks
+//! *per-platform* winners a global heuristic misses (the W4A16-on-mobile
+//! style upsets).  At fleet scale that claim is a per-platform
+//! non-dominated front: group every scenario outcome by platform, build an
+//! all-maximized objective vector per outcome, and keep front 0 of the
+//! in-tree NSGA-II non-dominated sort
+//! ([`crate::optimizers::nsga2::non_dominated_fronts`]).  This module is
+//! the generic half — plain (group, name, objectives) in, sorted fronts
+//! out; [`FleetReport::pareto`](crate::coordinator::FleetReport::pareto)
+//! supplies the fleet-specific objective vectors.
+
+use crate::optimizers::nsga2;
+
+/// One candidate for front computation: a named point in some group's
+/// objective space.  Objectives are **all maximized** (negate costs like
+/// memory footprints before building the vector).
+#[derive(Debug, Clone)]
+pub struct ParetoItem {
+    /// Grouping key — fronts are computed independently per group
+    /// (platform × track for the fleet).
+    pub group: String,
+    /// Display name of the candidate (scenario name for the fleet).
+    pub name: String,
+    /// All-maximized objective vector; every item in a group must use the
+    /// same objective arity.
+    pub objectives: Vec<f64>,
+}
+
+/// The non-dominated front of one group.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GroupFront {
+    /// The group key the front was computed within.
+    pub group: String,
+    /// `(name, objectives)` of every front-0 member, in input order.
+    pub members: Vec<(String, Vec<f64>)>,
+    /// Candidates considered in this group (front + dominated).
+    pub total: usize,
+}
+
+/// Compute the per-group non-dominated fronts.  Groups come back sorted by
+/// key and members keep input order, so the report is deterministic for a
+/// deterministic fleet run.  Items whose objective vector contains a NaN
+/// are dropped (NaN is incomparable under Pareto dominance and would
+/// poison the sort).
+pub fn group_fronts(items: &[ParetoItem]) -> Vec<GroupFront> {
+    let mut groups: Vec<&str> = items.iter().map(|i| i.group.as_str()).collect();
+    groups.sort_unstable();
+    groups.dedup();
+    groups
+        .iter()
+        .map(|g| {
+            let members: Vec<&ParetoItem> = items
+                .iter()
+                .filter(|i| i.group == *g && i.objectives.iter().all(|v| !v.is_nan()))
+                .collect();
+            let objs: Vec<Vec<f64>> = members.iter().map(|i| i.objectives.clone()).collect();
+            let fronts = nsga2::non_dominated_fronts(&objs);
+            GroupFront {
+                group: g.to_string(),
+                members: members
+                    .iter()
+                    .zip(&fronts)
+                    .filter(|&(_, f)| *f == 0)
+                    .map(|(i, _)| (i.name.clone(), i.objectives.clone()))
+                    .collect(),
+                total: members.len(),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn item(group: &str, name: &str, objectives: &[f64]) -> ParetoItem {
+        ParetoItem {
+            group: group.into(),
+            name: name.into(),
+            objectives: objectives.to_vec(),
+        }
+    }
+
+    #[test]
+    fn fronts_are_per_group_and_sorted() {
+        let items = vec![
+            // Group b: `slow_small` trades throughput for memory — on the
+            // front alongside `fast_big`; `worst` is dominated by both.
+            item("b", "fast_big", &[10.0, -8.0]),
+            item("b", "slow_small", &[6.0, -2.0]),
+            item("b", "worst", &[5.0, -9.0]),
+            // Group a: single objective — only the max survives.
+            item("a", "lo", &[1.0]),
+            item("a", "hi", &[3.0]),
+        ];
+        let fronts = group_fronts(&items);
+        assert_eq!(fronts.len(), 2);
+        assert_eq!(fronts[0].group, "a", "groups sorted");
+        assert_eq!(fronts[0].total, 2);
+        assert_eq!(fronts[0].members, vec![("hi".to_string(), vec![3.0])]);
+        let names: Vec<&str> = fronts[1].members.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, ["fast_big", "slow_small"], "trade-offs both survive");
+        assert_eq!(fronts[1].total, 3);
+    }
+
+    #[test]
+    fn ties_survive_and_nans_are_dropped() {
+        let items = vec![
+            item("g", "tie1", &[2.0, -1.0]),
+            item("g", "tie2", &[2.0, -1.0]),
+            item("g", "poisoned", &[f64::NAN, -1.0]),
+        ];
+        let fronts = group_fronts(&items);
+        assert_eq!(fronts.len(), 1);
+        assert_eq!(fronts[0].total, 2, "NaN item dropped before sorting");
+        assert_eq!(fronts[0].members.len(), 2, "equal points dominate nobody");
+    }
+}

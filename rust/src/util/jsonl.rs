@@ -13,7 +13,7 @@
 //!   may be mid-append).
 
 use std::fs::{File, OpenOptions};
-use std::io::{Read, Seek, SeekFrom, Write};
+use std::io::{BufRead, BufReader, Read, Seek, SeekFrom, Write};
 use std::path::Path;
 
 use super::json::{self, Json};
@@ -87,6 +87,44 @@ pub fn scan(bytes: &[u8], mut visit: impl FnMut(&Json, &str) -> bool) -> JsonlSc
     out
 }
 
+/// Stream [`scan`] over a file without materializing it: records are read
+/// one `read_until(b'\n')` line at a time through a `BufReader`, so loading
+/// a multi-gigabyte journal costs one line of memory, not the whole file.
+/// Skip/torn-tail semantics are identical to [`scan`] on the same bytes —
+/// in particular a bad-UTF-8 line is *skipped*, never an I/O error, which
+/// is why this reads raw bytes instead of `read_line` into a `String`.
+pub fn scan_file(
+    path: &Path,
+    mut visit: impl FnMut(&Json, &str) -> bool,
+) -> std::io::Result<JsonlScan> {
+    let mut reader = BufReader::new(File::open(path)?);
+    let mut out = JsonlScan::default();
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        buf.clear();
+        if reader.read_until(b'\n', &mut buf)? == 0 {
+            break;
+        }
+        let Some((&b'\n', line)) = buf.split_last() else {
+            out.torn_tail = true;
+            out.skipped += 1;
+            break;
+        };
+        if line.iter().all(|b| b.is_ascii_whitespace()) {
+            continue;
+        }
+        let ok = std::str::from_utf8(line)
+            .ok()
+            .and_then(|l| json::parse(l).ok().map(|j| (j, l)))
+            .map(|(j, l)| visit(&j, l))
+            .unwrap_or(false);
+        if !ok {
+            out.skipped += 1;
+        }
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -111,6 +149,38 @@ mod tests {
         let s = scan(bytes, |j, _| j.get("a").is_some());
         assert_eq!(s.skipped, 1);
         assert!(!s.torn_tail);
+    }
+
+    #[test]
+    fn scan_file_matches_in_memory_scan() {
+        // Blank lines, corruption, bad UTF-8 and a torn tail: the
+        // streaming scanner must agree with `scan` on all of them.
+        let mut bytes = b"{\"a\":1}\n\n   \nnot json\n".to_vec();
+        bytes.extend_from_slice(&[0xFF, 0xFE, b'\n']); // invalid UTF-8 line
+        bytes.extend_from_slice(b"{\"a\":2}\n{\"a\":3");
+        let dir = std::env::temp_dir().join(format!("haqa_scanfile_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("j.jsonl");
+        std::fs::write(&path, &bytes).unwrap();
+
+        let mut mem = Vec::new();
+        let s_mem = scan(&bytes, |j, _| {
+            mem.push(j.req_f64("a").unwrap());
+            true
+        });
+        let mut streamed = Vec::new();
+        let s_file = scan_file(&path, |j, raw| {
+            assert!(json::parse(raw).is_ok(), "raw line is handed through");
+            streamed.push(j.req_f64("a").unwrap());
+            true
+        })
+        .unwrap();
+        assert_eq!(mem, streamed);
+        assert_eq!(s_mem, s_file);
+        assert!(s_file.torn_tail);
+        assert_eq!(s_file.skipped, 3, "corrupt + bad-utf8 + torn tail");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -1,0 +1,174 @@
+//! Integration: the fleet at generated-matrix scale — bounded LRU cache
+//! tier, group-committed journal, and the scenario-matrix generator wired
+//! end to end.  Everything runs on the analytic simulator (kernel +
+//! bit-width tracks only), so tier-1 `cargo test` exercises the whole
+//! 10k-scenario machinery offline at a CI-sized count.
+
+use haqa::coordinator::matrix::{render_batch, MatrixSpec};
+use haqa::coordinator::{EvalCache, FleetRunner, Scenario};
+use haqa::util::json;
+
+/// A small but eviction-heavy matrix: two devices, both tracks, cheap
+/// baseline optimizers, enough distinct evaluation keys to overflow a
+/// tight cap many times over.
+fn small_matrix(count: usize) -> MatrixSpec {
+    let j = json::parse(&format!(
+        r#"{{"count": {count}, "seed": 9,
+             "devices": ["a6000", "adreno740"],
+             "kernels": ["matmul:64", "softmax:128"],
+             "optimizers": ["random", "local"],
+             "models": ["tinyllama-1.1b", "openllama-3b"],
+             "memory_limits_gb": [8, 12],
+             "budget": 3}}"#
+    ))
+    .unwrap();
+    MatrixSpec::from_json(&j).unwrap()
+}
+
+fn best_bits(report: &haqa::coordinator::FleetReport) -> Vec<u64> {
+    report
+        .outcomes
+        .iter()
+        .map(|o| o.as_ref().expect("scenario failed").best_score.to_bits())
+        .collect()
+}
+
+#[test]
+fn capped_fleet_is_bit_identical_to_unbounded_and_stays_within_cap() {
+    let scenarios = small_matrix(40).expand();
+    let unbounded = FleetRunner::new(4).quiet().run(&scenarios);
+    let cap = 8;
+    let capped = FleetRunner::new(4)
+        .quiet()
+        .with_cache(EvalCache::bounded(cap))
+        .run(&scenarios);
+    assert_eq!(
+        best_bits(&unbounded),
+        best_bits(&capped),
+        "LRU eviction must never change a score, only hit rates"
+    );
+    let st = capped.cache.unwrap();
+    assert!(st.evictions > 0, "a cap of {cap} over this matrix must evict");
+    assert!(
+        st.peak_entries <= cap,
+        "peak {} exceeded the cap {cap} under concurrent workers",
+        st.peak_entries
+    );
+    assert!(st.entries <= cap, "resident {} exceeded the cap {cap}", st.entries);
+    // The unbounded control never evicts and peaks at its full size.
+    let un = unbounded.cache.unwrap();
+    assert_eq!(un.evictions, 0);
+    assert_eq!(un.capacity, None);
+    assert!(un.peak_entries >= un.entries);
+}
+
+#[test]
+fn capped_journal_coalesces_writes_and_warms_across_instances() {
+    let dir = std::env::temp_dir().join(format!("haqa_it_scale_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let scenarios = small_matrix(30).expand();
+    // 64 splits to 4 per stripe: every shard keeps its MRU keys resident,
+    // so the warm rerun is guaranteed at least one journal-served hit.
+    let cap = 64;
+
+    let cold = FleetRunner::new(3)
+        .quiet()
+        .with_cache(EvalCache::with_dir_capped(&dir, Some(cap)).unwrap())
+        .run(&scenarios);
+    let cold_st = cold.cache.unwrap();
+    assert!(cold_st.journal_records > 0);
+    assert!(
+        cold_st.journal_writes < cold_st.journal_records,
+        "group commit must use fewer write calls ({}) than records ({})",
+        cold_st.journal_writes,
+        cold_st.journal_records
+    );
+    assert!(cold_st.peak_entries <= cap);
+
+    // A fresh instance (the process boundary) streams the journal back in
+    // through the cap: still bit-identical, and at least partly served
+    // from disk — even though most loaded entries evicted on the way in.
+    let warm = FleetRunner::new(3)
+        .quiet()
+        .with_cache(EvalCache::with_dir_capped(&dir, Some(cap)).unwrap())
+        .run(&scenarios);
+    let warm_st = warm.cache.unwrap();
+    assert_eq!(best_bits(&cold), best_bits(&warm));
+    assert!(warm_st.hits > 0, "warm capped run saw zero journal hits");
+    assert!(warm_st.peak_entries <= cap);
+    assert_eq!(
+        warm_st.journal_records, 0,
+        "re-running the same matrix must append nothing new"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn generated_file_runs_through_the_fleet_like_the_in_memory_matrix() {
+    // `haqa scenarios gen` writes render_batch() output; `haqa fleet` can
+    // also expand the {"matrix": …} wrapper itself.  Both paths must
+    // produce the same fleet results.
+    let spec = small_matrix(16);
+    let dir = std::env::temp_dir();
+    let gen_path = dir.join(format!("haqa_it_gen_{}.json", std::process::id()));
+    std::fs::write(&gen_path, render_batch(&spec.expand())).unwrap();
+    let from_file = Scenario::load_many(gen_path.to_str().unwrap()).unwrap();
+
+    let wrapper_path = dir.join(format!("haqa_it_wrap_{}.json", std::process::id()));
+    std::fs::write(
+        &wrapper_path,
+        r#"{"matrix": {"count": 16, "seed": 9,
+                       "devices": ["a6000", "adreno740"],
+                       "kernels": ["matmul:64", "softmax:128"],
+                       "optimizers": ["random", "local"],
+                       "models": ["tinyllama-1.1b", "openllama-3b"],
+                       "memory_limits_gb": [8, 12],
+                       "budget": 3}}"#,
+    )
+    .unwrap();
+    let from_wrapper = Scenario::load_many(wrapper_path.to_str().unwrap()).unwrap();
+
+    let a = FleetRunner::new(2).quiet().run(&from_file);
+    let b = FleetRunner::new(2).quiet().run(&from_wrapper);
+    assert_eq!(best_bits(&a), best_bits(&b));
+    let _ = std::fs::remove_file(gen_path);
+    let _ = std::fs::remove_file(wrapper_path);
+}
+
+#[test]
+fn fleet_report_emits_per_platform_pareto_fronts() {
+    let spec = small_matrix(32);
+    let scenarios = spec.expand();
+    let report = FleetRunner::new(4).quiet().run(&scenarios);
+    let fronts = report.pareto(&scenarios);
+    assert!(!fronts.is_empty());
+    // Grouping is device/track; this matrix covers both tracks on both
+    // devices, so all four groups must appear (sorted by key).
+    let groups: Vec<&str> = fronts.iter().map(|f| f.group.as_str()).collect();
+    assert!(groups.contains(&"a6000/kernel"), "{groups:?}");
+    assert!(groups.contains(&"a6000/bitwidth"), "{groups:?}");
+    assert!(groups.contains(&"adreno740/kernel"), "{groups:?}");
+    assert!(groups.contains(&"adreno740/bitwidth"), "{groups:?}");
+    for f in &fronts {
+        assert!(!f.members.is_empty(), "empty front for {}", f.group);
+        assert!(f.members.len() <= f.total);
+        // Bit-width fronts carry [tokens/s, -footprint]; kernel fronts a
+        // single maximized score.
+        let arity = if f.group.ends_with("/bitwidth") { 2 } else { 1 };
+        for (name, objs) in &f.members {
+            assert_eq!(objs.len(), arity, "{name} in {}", f.group);
+            assert!(objs.iter().all(|v| v.is_finite()));
+        }
+    }
+    // The fronts must be deterministic for a deterministic fleet.
+    let report2 = FleetRunner::new(2).quiet().run(&scenarios);
+    let fronts2 = report2.pareto(&scenarios);
+    assert_eq!(fronts.len(), fronts2.len());
+    for (x, y) in fronts.iter().zip(&fronts2) {
+        assert_eq!(x.group, y.group);
+        assert_eq!(
+            x.members.iter().map(|(n, _)| n).collect::<Vec<_>>(),
+            y.members.iter().map(|(n, _)| n).collect::<Vec<_>>()
+        );
+    }
+}
