@@ -27,6 +27,7 @@ use std::time::Duration;
 use anyhow::{anyhow, bail, Result};
 
 use crate::util::json::{self, Json};
+use crate::util::retry::{Attempt, Backoff};
 
 use super::backend::{AgentRequest, Completion, Dispatcher, LlmBackend, Message, RequestId};
 use super::batch::BatchLlm;
@@ -178,7 +179,8 @@ fn retryable(status: Option<u16>) -> bool {
     }
 }
 
-/// The one retry skeleton both the single-request and batch paths share:
+/// The one retry skeleton both the single-request and batch paths share
+/// ([`crate::util::retry::Backoff`] with this transport's base/cap):
 /// bounded exponential backoff on connect errors, timeouts, 429 and 5xx;
 /// other 4xx are fatal; a 2xx whose body `parse` rejects is a broken
 /// server, not a transient, so it never burns retries.
@@ -187,42 +189,32 @@ fn send_with_retry<T>(
     body: &str,
     parse: impl Fn(&str, f64) -> Result<T>,
 ) -> Result<T> {
-    let mut last_err = None;
-    for attempt in 0..=cfg.max_retries {
-        if attempt > 0 {
-            let exp = cfg.backoff_base.saturating_mul(1u32 << (attempt - 1).min(16));
-            std::thread::sleep(exp.min(BACKOFF_CAP));
-        }
+    Backoff::new(cfg.max_retries, cfg.backoff_base, BACKOFF_CAP).run(|_| {
         let t0 = std::time::Instant::now();
         match request_once(cfg, body) {
             Ok((status, resp_body)) if (200..300).contains(&status) => {
                 match parse(&resp_body, t0.elapsed().as_secs_f64()) {
-                    Ok(v) => return Ok(v),
-                    Err(e) => {
-                        last_err = Some(e);
-                        break;
-                    }
+                    Ok(v) => Attempt::Done(v),
+                    Err(e) => Attempt::Fatal(e),
                 }
             }
             Ok((status, resp_body)) => {
                 let snip: String = resp_body.chars().take(200).collect();
-                let fatal = !retryable(Some(status));
-                last_err = Some(anyhow!(
+                let err = anyhow!(
                     "HTTP {status} from {}:{}{}: {snip}",
                     cfg.host,
                     cfg.port,
                     cfg.path
-                ));
-                if fatal {
-                    break;
+                );
+                if retryable(Some(status)) {
+                    Attempt::Retry(err)
+                } else {
+                    Attempt::Fatal(err)
                 }
             }
-            Err(e) => last_err = Some(e),
+            Err(e) => Attempt::Retry(e),
         }
-    }
-    Err(last_err
-        .unwrap_or_else(|| anyhow!("unreachable: no attempt ran"))
-        .context(format!("after {} attempt(s)", cfg.max_retries + 1)))
+    })
 }
 
 fn request_with_retry(cfg: &HttpConfig, messages: &[Message]) -> Result<Completion> {

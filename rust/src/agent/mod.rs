@@ -60,6 +60,9 @@ pub use transcript::{BatchRecorder, BatchReplay, RecordingBackend, ReplayBackend
 ///   `record:run.jsonl=http://10.0.0.5:8000` records a live endpoint for
 ///   later replay);
 /// * `"replay:<path>"` — serve a recorded transcript journal, offline;
+/// * `"chaos:<plan>=<inner-spec>"` — deterministic fault injection
+///   ([`crate::coordinator::chaos`]) ahead of the inner backend's calls
+///   (outermost wrapper only);
 /// * `"http://host[:port][/path]"` — the real HTTP backend (needs the
 ///   `http-agent` feature).
 ///
@@ -69,6 +72,18 @@ pub fn backend_from_spec(spec: &str, seed: u64) -> Result<Box<dyn LlmBackend>> {
     let spec = spec.trim();
     if spec.is_empty() || spec == "simulated" {
         return Ok(Box::new(Pipelined::new(simulated::SimulatedLlm::new(seed))));
+    }
+    if let Some(rest) = spec.strip_prefix("chaos:") {
+        let (plan, inner_spec) = crate::coordinator::chaos::split_chaos_spec(rest)
+            .map_err(|e| anyhow::anyhow!("in backend spec '{spec}': {e:#}"))?;
+        anyhow::ensure!(
+            !inner_spec.starts_with("chaos:"),
+            "backend spec '{spec}' nests chaos wrappers — chaos takes a plain inner spec"
+        );
+        let inner = backend_from_spec(inner_spec, seed)?;
+        return Ok(Box::new(crate::coordinator::chaos::ChaosBackend::new(
+            plan, inner,
+        )?));
     }
     if let Some(ms) = spec.strip_prefix("simulated-slow:") {
         let ms: u64 = ms.trim().parse().map_err(|_| {
@@ -106,8 +121,21 @@ pub fn backend_from_spec(spec: &str, seed: u64) -> Result<Box<dyn LlmBackend>> {
     }
     anyhow::bail!(
         "unknown backend spec '{spec}' (expected simulated | simulated-slow:<ms> | \
-         record:<path> | replay:<path> | http://…)"
+         record:<path> | replay:<path> | chaos:<plan>=<spec> | http://…)"
     )
+}
+
+/// True when `spec` is a `replay:` backend, looking through an outer
+/// `chaos:<plan>=` wrapper — replayed runs enforce strict agent errors
+/// (a divergence from the recording must fail loudly) whether or not
+/// faults are being injected around them.
+pub fn is_replay_spec(spec: &str) -> bool {
+    let s = spec.trim();
+    let s = match s.strip_prefix("chaos:").and_then(|r| r.split_once('=')) {
+        Some((_, inner)) => inner.trim(),
+        None => s,
+    };
+    s.starts_with("replay:")
 }
 
 /// Build the *batch-capable* provider tree for a backend spec — the
@@ -125,12 +153,26 @@ pub fn backend_from_spec(spec: &str, seed: u64) -> Result<Box<dyn LlmBackend>> {
 ///   boundaries* through [`transcript::BatchRecorder`];
 /// * `"replay:<path>"` — serve a recorded journal, enforcing the recorded
 ///   batch composition ([`transcript::BatchReplay`]);
+/// * `"chaos:<plan>=<inner-spec>"` — deterministic fault injection per
+///   provider batch ([`crate::coordinator::chaos`]), outermost only;
 /// * `"http://…"` — one chat-JSON request per batch (`http-agent`
 ///   feature).
 pub fn batch_llm_from_spec(spec: &str, seed: u64) -> Result<Box<dyn BatchLlm>> {
     let spec = spec.trim();
     if spec.is_empty() || spec == "simulated" {
         return Ok(Box::new(simulated::SimulatedLlm::stateless(seed)));
+    }
+    if let Some(rest) = spec.strip_prefix("chaos:") {
+        let (plan, inner_spec) = crate::coordinator::chaos::split_chaos_spec(rest)
+            .map_err(|e| anyhow::anyhow!("in backend spec '{spec}': {e:#}"))?;
+        anyhow::ensure!(
+            !inner_spec.starts_with("chaos:"),
+            "backend spec '{spec}' nests chaos wrappers — chaos takes a plain inner spec"
+        );
+        let inner = batch_llm_from_spec(inner_spec, seed)?;
+        return Ok(Box::new(crate::coordinator::chaos::ChaosBatchLlm::new(
+            plan, inner,
+        )?));
     }
     if let Some(ms) = spec.strip_prefix("simulated-slow:") {
         let ms: u64 = ms.trim().parse().map_err(|_| {
@@ -165,7 +207,7 @@ pub fn batch_llm_from_spec(spec: &str, seed: u64) -> Result<Box<dyn BatchLlm>> {
     }
     anyhow::bail!(
         "unknown backend spec '{spec}' (expected simulated | simulated-slow:<ms> | \
-         record:<path> | replay:<path> | http://…)"
+         record:<path> | replay:<path> | chaos:<plan>=<spec> | http://…)"
     )
 }
 

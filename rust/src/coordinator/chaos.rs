@@ -1,0 +1,611 @@
+//! Deterministic fault injection — every recovery path testable offline.
+//!
+//! The fleet's resilience story (scenario retries, crash-safe resume,
+//! graceful drain — see `docs/RESILIENCE.md`) is only trustworthy if the
+//! failure paths actually run in CI.  Real device disconnects and provider
+//! 5xx storms cannot be scheduled; this module injects them on a **seeded,
+//! deterministic schedule** instead, as a wrapper layer over the two
+//! external seams:
+//!
+//! * `chaos:<plan>=<inner>` as an **evaluator** spec
+//!   ([`super::device::EvaluatorSpec`]) wraps the inner evaluator in a
+//!   [`ChaosEvaluator`];
+//! * `chaos:<plan>=<inner>` as a **backend** spec ([`crate::agent`]) wraps
+//!   the inner LLM backend in a [`ChaosBackend`] / [`ChaosBatchLlm`].
+//!
+//! A plan schedules faults at 1-based *call indices* of the wrapped seam.
+//! Faults are injected **before** the inner call runs, so a faulted call
+//! performs no work — and because the schedule lives in a process-wide
+//! [`PlanState`] (shared by every wrapper built from the same plan
+//! string), a retried call sees the call counter already advanced past the
+//! fault and succeeds.  That is the whole invariant: a faulted run makes
+//! exactly the same inner calls, in the same per-scenario order, as a
+//! fault-free run — so its scores are **bit-identical**, differing only in
+//! the retry/fault counters of the
+//! [`FleetReport`](super::fleet::FleetReport).
+//!
+//! ## Plan grammar
+//!
+//! ```text
+//! <plan>  := none | <token>[,<token>]*
+//! <token> := <kind>@<call>          one fault at 1-based call index <call>
+//!          | seed:<seed>:<count>    <count> faults on a seeded schedule
+//! <kind>  := refuse | disconnect | timeout | transient | torn | panic
+//! ```
+//!
+//! `torn@<n>` is special: it schedules a **short journal write** at the
+//! n-th group-committed flush of the fleet-state journal
+//! ([`super::fleet_state`]) rather than a call-stream fault — the offline
+//! stand-in for a crash mid-`write(2)`.
+//!
+//! The `seed:<seed>:<count>` generator cycles through the four transient
+//! kinds with gaps of 2–6 calls between faults, so a retried call is never
+//! immediately re-faulted and any bounded retry policy can make progress.
+
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::agent::{AgentRequest, BatchLlm, Completion, LlmBackend, RequestId};
+use crate::search::{Config, Space};
+use crate::util::json::Json;
+use crate::util::lock;
+use crate::util::rng::Rng;
+
+use super::evaluator::{Evaluation, Evaluator};
+
+/// One injectable fault kind (the `<kind>` of a plan token).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fault {
+    /// Connection refused before any byte is exchanged (`refuse`).
+    ConnectRefused,
+    /// Peer closes the connection mid-exchange (`disconnect`).
+    Disconnect,
+    /// The operation times out (`timeout`).
+    Timeout,
+    /// A generic transient "temporarily unavailable" error (`transient`).
+    Transient,
+    /// A short (torn) journal write at a flush boundary (`torn`) — lives on
+    /// the flush stream, never the call stream.
+    TornWrite,
+    /// The wrapped call panics (`panic`) — exercises worker isolation.
+    Panic,
+}
+
+impl Fault {
+    fn parse(kind: &str) -> Result<Fault> {
+        Ok(match kind {
+            "refuse" => Fault::ConnectRefused,
+            "disconnect" => Fault::Disconnect,
+            "timeout" => Fault::Timeout,
+            "transient" => Fault::Transient,
+            "torn" => Fault::TornWrite,
+            "panic" => Fault::Panic,
+            _ => bail!(
+                "unknown fault kind '{kind}' (expected refuse | disconnect | \
+                 timeout | transient | torn | panic)"
+            ),
+        })
+    }
+
+    /// The injected error for this fault at call `n`.  Every message
+    /// carries a signature [`classify`] recognizes, mirroring what the
+    /// real transport failure would have produced.
+    fn error(self, n: u64) -> anyhow::Error {
+        match self {
+            Fault::ConnectRefused => anyhow!("chaos: injected connection refused (call #{n})"),
+            Fault::Disconnect => {
+                anyhow!("chaos: injected disconnect — peer closed the connection mid-batch (call #{n})")
+            }
+            Fault::Timeout => anyhow!("chaos: injected timeout — operation timed out (call #{n})"),
+            Fault::Transient => {
+                anyhow!("chaos: injected transient error — temporarily unavailable (call #{n})")
+            }
+            // Torn writes are routed to the flush stream at parse time;
+            // surface defensively as a transient if one ever lands here.
+            Fault::TornWrite => {
+                anyhow!("chaos: injected torn write — temporarily unavailable (call #{n})")
+            }
+            Fault::Panic => panic!("chaos: injected panic (call #{n})"),
+        }
+    }
+}
+
+/// The transient kinds the `seed:` generator cycles through.
+const SEEDED_KINDS: [Fault; 4] = [
+    Fault::Transient,
+    Fault::Timeout,
+    Fault::Disconnect,
+    Fault::ConnectRefused,
+];
+
+/// A parsed, fully expanded fault plan: which call/flush indices fault,
+/// and how.  See the module docs for the grammar.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// The normalized (trimmed) plan string — the registry key.
+    pub spec: String,
+    /// 1-based call index → fault, for the call stream.
+    pub calls: BTreeMap<u64, Fault>,
+    /// 1-based flush indices whose journal write is torn short.
+    pub flushes: BTreeSet<u64>,
+}
+
+impl FaultPlan {
+    /// Parse a plan string.  Duplicate indices and malformed tokens are
+    /// hard errors — a typo'd plan must never silently run fault-free.
+    ///
+    /// ```
+    /// use haqa::coordinator::chaos::FaultPlan;
+    ///
+    /// let plan = FaultPlan::parse("timeout@3,panic@7,torn@1").unwrap();
+    /// assert_eq!(plan.calls.len(), 2);
+    /// assert!(plan.flushes.contains(&1));
+    /// assert!(FaultPlan::parse("timeout@3,refuse@3").is_err()); // dup index
+    /// assert!(FaultPlan::parse("gremlin@1").is_err());          // bad kind
+    /// ```
+    pub fn parse(plan: &str) -> Result<FaultPlan> {
+        let spec = plan.trim().to_string();
+        let mut calls = BTreeMap::new();
+        let mut flushes = BTreeSet::new();
+        if spec.is_empty() || spec == "none" {
+            return Ok(FaultPlan {
+                spec: "none".into(),
+                calls,
+                flushes,
+            });
+        }
+        let mut put = |at: u64, fault: Fault, calls: &mut BTreeMap<u64, Fault>| -> Result<()> {
+            ensure!(
+                calls.insert(at, fault).is_none(),
+                "fault plan '{spec}' schedules two faults at call #{at}"
+            );
+            Ok(())
+        };
+        for token in spec.split(',') {
+            let token = token.trim();
+            if let Some(rest) = token.strip_prefix("seed:") {
+                let (seed, count) = rest.split_once(':').ok_or_else(|| {
+                    anyhow!("bad token '{token}' in fault plan (expected seed:<seed>:<count>)")
+                })?;
+                let seed: u64 = seed
+                    .trim()
+                    .parse()
+                    .map_err(|_| anyhow!("bad seed '{seed}' in fault-plan token '{token}'"))?;
+                let count: u64 = count
+                    .trim()
+                    .parse()
+                    .map_err(|_| anyhow!("bad count '{count}' in fault-plan token '{token}'"))?;
+                let mut rng = Rng::new(seed);
+                // Start at call 2 and keep gaps >= 2 so the very first call
+                // and every retried call can succeed.
+                let mut at = 2u64;
+                for i in 0..count {
+                    put(at, SEEDED_KINDS[(i % 4) as usize], &mut calls)?;
+                    at += 2 + rng.next_u64() % 5;
+                }
+                continue;
+            }
+            let (kind, at) = token.split_once('@').ok_or_else(|| {
+                anyhow!(
+                    "bad token '{token}' in fault plan '{spec}' \
+                     (expected <kind>@<call> or seed:<seed>:<count>)"
+                )
+            })?;
+            let fault = Fault::parse(kind.trim())?;
+            let at: u64 = at
+                .trim()
+                .parse()
+                .map_err(|_| anyhow!("bad call index '{at}' in fault-plan token '{token}'"))?;
+            ensure!(at >= 1, "fault-plan call indices are 1-based, got 0 in '{token}'");
+            if fault == Fault::TornWrite {
+                ensure!(
+                    flushes.insert(at),
+                    "fault plan '{spec}' schedules two torn writes at flush #{at}"
+                );
+            } else {
+                put(at, fault, &mut calls)?;
+            }
+        }
+        Ok(FaultPlan {
+            spec,
+            calls,
+            flushes,
+        })
+    }
+}
+
+/// Live state of one plan: the parsed schedule plus process-wide call and
+/// flush counters.  Shared (via [`shared_plan`]) by every wrapper built
+/// from the same plan string, so a scenario retry resumes the counter
+/// instead of re-faulting at the same indices.
+#[derive(Debug)]
+pub struct PlanState {
+    plan: FaultPlan,
+    calls: AtomicU64,
+    flushes: AtomicU64,
+    injected_calls: AtomicU64,
+    injected_flushes: AtomicU64,
+}
+
+impl PlanState {
+    fn new(plan: FaultPlan) -> PlanState {
+        PlanState {
+            plan,
+            calls: AtomicU64::new(0),
+            flushes: AtomicU64::new(0),
+            injected_calls: AtomicU64::new(0),
+            injected_flushes: AtomicU64::new(0),
+        }
+    }
+
+    /// The normalized plan string this state was built from.
+    pub fn spec(&self) -> &str {
+        &self.plan.spec
+    }
+
+    /// Advance the call counter and trip the scheduled fault, if any:
+    /// `Err` for error faults, a panic for [`Fault::Panic`], `Ok(())` when
+    /// this call is clean.
+    pub fn trip(&self) -> Result<()> {
+        let n = self.calls.fetch_add(1, Ordering::Relaxed) + 1;
+        match self.plan.calls.get(&n) {
+            Some(fault) => {
+                self.injected_calls.fetch_add(1, Ordering::Relaxed);
+                Err(fault.error(n))
+            }
+            None => Ok(()),
+        }
+    }
+
+    /// Advance the flush counter; `true` means this journal flush must be
+    /// written short (torn) per the plan's `torn@<n>` tokens.
+    pub fn on_flush(&self) -> bool {
+        let n = self.flushes.fetch_add(1, Ordering::Relaxed) + 1;
+        let torn = self.plan.flushes.contains(&n);
+        if torn {
+            self.injected_flushes.fetch_add(1, Ordering::Relaxed);
+        }
+        torn
+    }
+
+    /// `(call faults injected, torn flushes injected)` so far.
+    pub fn injected(&self) -> (u64, u64) {
+        (
+            self.injected_calls.load(Ordering::Relaxed),
+            self.injected_flushes.load(Ordering::Relaxed),
+        )
+    }
+}
+
+static REGISTRY: OnceLock<Mutex<HashMap<String, Arc<PlanState>>>> = OnceLock::new();
+
+/// Parse `plan` and return its process-wide shared state, creating it on
+/// first use.  Keyed by the normalized plan string: every `chaos:` wrapper
+/// naming the same plan — across scenarios, retries, and both the
+/// evaluator and backend seams it may be applied to — advances one shared
+/// call counter.  (A test that needs a fresh schedule uses a fresh plan
+/// string, e.g. a distinct seed.)
+pub fn shared_plan(plan: &str) -> Result<Arc<PlanState>> {
+    let parsed = FaultPlan::parse(plan)?;
+    let reg = REGISTRY.get_or_init(|| Mutex::new(HashMap::new()));
+    let mut g = lock(reg);
+    Ok(Arc::clone(
+        g.entry(parsed.spec.clone())
+            .or_insert_with(|| Arc::new(PlanState::new(parsed))),
+    ))
+}
+
+/// Split a `chaos:<plan>=<inner>` spec body (after the `chaos:` prefix)
+/// into `(plan, inner)`, validating the plan eagerly so typos fail at
+/// parse time.  Shared by the evaluator- and backend-spec parsers.
+pub fn split_chaos_spec(rest: &str) -> Result<(&str, &str)> {
+    // Plan tokens never contain '=', so the first '=' ends the plan.
+    let (plan, inner) = rest
+        .split_once('=')
+        .ok_or_else(|| anyhow!("chaos spec needs `chaos:<plan>=<inner-spec>`"))?;
+    ensure!(!plan.trim().is_empty(), "empty fault plan in chaos spec");
+    ensure!(
+        !inner.trim().is_empty(),
+        "empty inner spec in `chaos:{plan}=`"
+    );
+    FaultPlan::parse(plan)?;
+    Ok((plan.trim(), inner.trim()))
+}
+
+// ---- the three seam wrappers ------------------------------------------------
+
+/// An [`Evaluator`] wrapper injecting the plan's faults ahead of every
+/// `evaluate`/`evaluate_batch` call.  Everything else — crucially
+/// [`Evaluator::scope`], the cache-key payload — passes through unchanged,
+/// so a chaos-wrapped evaluator shares cache entries (and scores) with its
+/// unwrapped twin.
+pub struct ChaosEvaluator<'a> {
+    inner: Box<dyn Evaluator + 'a>,
+    state: Arc<PlanState>,
+}
+
+impl<'a> ChaosEvaluator<'a> {
+    /// Wrap `inner` under the shared state of `plan`.
+    pub fn new(plan: &str, inner: Box<dyn Evaluator + 'a>) -> Result<ChaosEvaluator<'a>> {
+        Ok(ChaosEvaluator {
+            inner,
+            state: shared_plan(plan)?,
+        })
+    }
+}
+
+impl Evaluator for ChaosEvaluator<'_> {
+    fn track(&self) -> &'static str {
+        self.inner.track()
+    }
+    fn space(&self) -> &Space {
+        self.inner.space()
+    }
+    fn scope(&self) -> Json {
+        self.inner.scope()
+    }
+    fn evaluate(&self, cfg: &Config) -> Result<Evaluation> {
+        self.state.trip()?;
+        self.inner.evaluate(cfg)
+    }
+    fn evaluate_batch(&self, cfgs: &[Config]) -> Result<Vec<Evaluation>> {
+        // One wire call per batch, so one fault window per batch.
+        self.state.trip()?;
+        self.inner.evaluate_batch(cfgs)
+    }
+    fn rounds(&self, budget: usize) -> usize {
+        self.inner.rounds(budget)
+    }
+}
+
+/// An [`LlmBackend`] wrapper injecting the plan's faults at `submit` —
+/// the seam where a real connect refusal or timeout would surface.
+pub struct ChaosBackend {
+    inner: Box<dyn LlmBackend>,
+    state: Arc<PlanState>,
+}
+
+impl ChaosBackend {
+    /// Wrap `inner` under the shared state of `plan`.
+    pub fn new(plan: &str, inner: Box<dyn LlmBackend>) -> Result<ChaosBackend> {
+        Ok(ChaosBackend {
+            inner,
+            state: shared_plan(plan)?,
+        })
+    }
+}
+
+impl LlmBackend for ChaosBackend {
+    fn model_name(&self) -> &str {
+        self.inner.model_name()
+    }
+    fn submit(&self, req: AgentRequest) -> Result<RequestId> {
+        self.state.trip()?;
+        self.inner.submit(req)
+    }
+    fn try_recv(&self, id: RequestId) -> Result<Option<Completion>> {
+        self.inner.try_recv(id)
+    }
+    fn recv(&self, id: RequestId) -> Result<Completion> {
+        self.inner.recv(id)
+    }
+}
+
+/// A [`BatchLlm`] wrapper injecting the plan's faults per provider batch:
+/// a faulted batch fails **every** item (a dropped connection loses the
+/// whole provider round-trip, not one request).
+pub struct ChaosBatchLlm {
+    inner: Box<dyn BatchLlm>,
+    state: Arc<PlanState>,
+}
+
+impl ChaosBatchLlm {
+    /// Wrap `inner` under the shared state of `plan`.
+    pub fn new(plan: &str, inner: Box<dyn BatchLlm>) -> Result<ChaosBatchLlm> {
+        Ok(ChaosBatchLlm {
+            inner,
+            state: shared_plan(plan)?,
+        })
+    }
+}
+
+impl BatchLlm for ChaosBatchLlm {
+    fn model_name(&self) -> &str {
+        self.inner.model_name()
+    }
+    fn complete_batch(&mut self, reqs: &[AgentRequest]) -> Vec<Result<Completion>> {
+        if let Err(e) = self.state.trip() {
+            let msg = format!("{e:#}");
+            return reqs.iter().map(|_| Err(anyhow!("{msg}"))).collect();
+        }
+        self.inner.complete_batch(reqs)
+    }
+}
+
+// ---- failure taxonomy -------------------------------------------------------
+
+/// Why a scenario failed — drives the fleet's bounded retry policy
+/// (`--retries` / `HAQA_RETRIES`): `Transient` and `Panicked` failures are
+/// retried from a fresh session; `Fatal` failures surface immediately.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FailureKind {
+    /// Infrastructure hiccup (connect refusal, disconnect, timeout,
+    /// throttling) — the same scenario is expected to succeed on retry.
+    Transient,
+    /// A deterministic error (bad spec, malformed reply, missing artifact)
+    /// — retrying would reproduce it.
+    Fatal,
+    /// The worker caught a panic from the session; retried like a
+    /// transient, since panics can stem from transient state.
+    Panicked,
+}
+
+impl FailureKind {
+    /// Stable lower-case label for reports and logs.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FailureKind::Transient => "transient",
+            FailureKind::Fatal => "fatal",
+            FailureKind::Panicked => "panicked",
+        }
+    }
+
+    /// Whether the retry policy restarts a scenario that failed this way:
+    /// transients and panics do, deterministic failures never do.
+    pub fn retryable(&self) -> bool {
+        !matches!(self, FailureKind::Fatal)
+    }
+}
+
+/// Error-chain signatures that mark a failure as [`FailureKind::Transient`]
+/// — covering both injected chaos faults and the real transport errors
+/// they mimic (`std::io` connect/timeout text, torn-reply messages, HTTP
+/// throttling).
+const TRANSIENT_SIGNATURES: &[&str] = &[
+    "connection refused",
+    "connection reset",
+    "broken pipe",
+    "timed out",
+    "timeout",
+    "temporarily unavailable",
+    "closed the connection",
+    "disconnect",
+    "http 429",
+    "http 5",
+];
+
+/// Classify a scenario error as [`FailureKind::Transient`] or
+/// [`FailureKind::Fatal`] from its rendered error chain.  (Panics never
+/// reach this — the worker's `catch_unwind` assigns
+/// [`FailureKind::Panicked`] directly.)
+pub fn classify(err: &anyhow::Error) -> FailureKind {
+    let msg = format!("{err:#}").to_lowercase();
+    if TRANSIENT_SIGNATURES.iter().any(|s| msg.contains(s)) {
+        FailureKind::Transient
+    } else {
+        FailureKind::Fatal
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_and_none_plans_are_fault_free() {
+        for spec in ["", "none", "  none  "] {
+            let p = FaultPlan::parse(spec).unwrap();
+            assert!(p.calls.is_empty() && p.flushes.is_empty(), "{spec:?}");
+            assert_eq!(p.spec, "none");
+        }
+    }
+
+    #[test]
+    fn explicit_tokens_parse_and_route() {
+        let p = FaultPlan::parse("refuse@1, timeout@4, torn@2, panic@9").unwrap();
+        assert_eq!(p.calls.get(&1), Some(&Fault::ConnectRefused));
+        assert_eq!(p.calls.get(&4), Some(&Fault::Timeout));
+        assert_eq!(p.calls.get(&9), Some(&Fault::Panic));
+        assert!(p.flushes.contains(&2), "torn@ lands on the flush stream");
+        assert_eq!(p.calls.len(), 3);
+    }
+
+    #[test]
+    fn malformed_plans_are_hard_errors() {
+        for bad in [
+            "gremlin@1",     // unknown kind
+            "timeout",       // missing @index
+            "timeout@zero",  // unparseable index
+            "timeout@0",     // indices are 1-based
+            "seed:7",        // missing count
+            "seed:x:3",      // unparseable seed
+            "timeout@3,refuse@3", // duplicate call index
+            "torn@2,torn@2", // duplicate flush index
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn seeded_schedule_is_deterministic_with_retryable_gaps() {
+        let a = FaultPlan::parse("seed:11:8").unwrap();
+        let b = FaultPlan::parse("seed:11:8").unwrap();
+        assert_eq!(a, b, "same seed, same schedule");
+        assert_ne!(a, FaultPlan::parse("seed:12:8").unwrap());
+        assert_eq!(a.calls.len(), 8);
+        let idx: Vec<u64> = a.calls.keys().copied().collect();
+        assert!(idx[0] >= 2, "call #1 is never faulted");
+        for w in idx.windows(2) {
+            let gap = w[1] - w[0];
+            assert!((2..=6).contains(&gap), "gap {gap} outside 2..=6");
+        }
+    }
+
+    #[test]
+    fn plan_state_trips_on_schedule_and_counts() {
+        let state = PlanState::new(FaultPlan::parse("transient@2,torn@1").unwrap());
+        assert!(state.trip().is_ok(), "call 1 clean");
+        let err = state.trip().unwrap_err();
+        assert!(format!("{err:#}").contains("call #2"), "{err:#}");
+        assert_eq!(classify(&err), FailureKind::Transient);
+        assert!(state.trip().is_ok(), "call 3 clean — fault fired once");
+        assert!(state.on_flush(), "flush 1 torn");
+        assert!(!state.on_flush(), "flush 2 clean");
+        assert_eq!(state.injected(), (1, 1));
+    }
+
+    #[test]
+    fn registry_shares_state_across_lookups() {
+        // A plan string unique to this test: registry entries are
+        // process-wide and never reset.
+        let plan = "transient@1,transient@2";
+        let a = shared_plan(plan).unwrap();
+        a.trip().unwrap_err(); // consumes fault #1
+        let b = shared_plan(plan).unwrap();
+        b.trip().unwrap_err(); // the *shared* counter is at 2 → fault #2
+        assert!(a.trip().is_ok(), "call 3 clean on either handle");
+        assert_eq!(a.injected().0, 2);
+    }
+
+    #[test]
+    fn chaos_spec_split_validates_eagerly() {
+        let (plan, inner) = split_chaos_spec("timeout@3=simulated").unwrap();
+        assert_eq!((plan, inner), ("timeout@3", "simulated"));
+        // The first '=' ends the plan; the inner spec may contain more.
+        let (_, inner) = split_chaos_spec("none=record:t.jsonl=simulated").unwrap();
+        assert_eq!(inner, "record:t.jsonl=simulated");
+        assert!(split_chaos_spec("timeout@3").is_err(), "missing inner");
+        assert!(split_chaos_spec("gremlin@3=simulated").is_err(), "bad plan");
+        assert!(split_chaos_spec("none=").is_err(), "empty inner");
+    }
+
+    #[test]
+    fn classify_covers_real_and_injected_signatures() {
+        for msg in [
+            "connecting to 127.0.0.1:9: Connection refused (os error 111)",
+            "device server closed the connection before replying",
+            "chaos: injected timeout — operation timed out (call #4)",
+            "HTTP 503 from x:80/v1: busy",
+            "HTTP 429 from x:80/v1: slow down",
+        ] {
+            assert_eq!(classify(&anyhow!("{msg}")), FailureKind::Transient, "{msg}");
+        }
+        for msg in [
+            "unknown kernel 'banana'",
+            "HTTP 401 from x:80/v1: bad key",
+            "transcript exhausted",
+        ] {
+            assert_eq!(classify(&anyhow!("{msg}")), FailureKind::Fatal, "{msg}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "chaos: injected panic")]
+    fn panic_fault_panics() {
+        let state = PlanState::new(FaultPlan::parse("panic@1").unwrap());
+        let _ = state.trip();
+    }
+}

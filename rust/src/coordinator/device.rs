@@ -68,6 +68,7 @@ use anyhow::{anyhow, bail, ensure, Context, Result};
 use crate::hardware::{preset, DeviceProfile, KernelKind, LatencyModel, Workload, PRESET_NAMES};
 use crate::search::{spaces, Config, Space};
 use crate::util::json::{self, Json};
+use crate::util::retry::{Attempt, Backoff};
 use crate::util::{jsonl, lock};
 
 use super::cache::{decode_record, encode_record, EvalCache};
@@ -130,6 +131,14 @@ pub enum EvaluatorSpec {
         /// its (track, scope) without ever contacting it.
         inner: Box<EvaluatorSpec>,
     },
+    /// Inject deterministic faults ([`super::chaos`]) ahead of the inner
+    /// evaluator's calls.  Must be the outermost wrapper.
+    Chaos {
+        /// The fault plan (see [`super::chaos::FaultPlan::parse`]).
+        plan: String,
+        /// The evaluator whose calls are faulted.
+        inner: Box<EvaluatorSpec>,
+    },
 }
 
 impl EvaluatorSpec {
@@ -140,11 +149,27 @@ impl EvaluatorSpec {
     ///   preset (unknown names are a hard error);
     /// * `remote://host:port` — an external device server;
     /// * `record:<path>=<inner-spec>` / `replay:<path>=<inner-spec>` —
-    ///   transcript wrappers around any of the above.
+    ///   transcript wrappers around any of the above;
+    /// * `chaos:<plan>=<inner-spec>` — deterministic fault injection
+    ///   ([`super::chaos`]) around any of the above (outermost only).
     pub fn parse(spec: &str) -> Result<EvaluatorSpec> {
         let spec = spec.trim();
         if spec.is_empty() || spec == "simulated" {
             return Ok(EvaluatorSpec::Simulated);
+        }
+        if let Some(rest) = spec.strip_prefix("chaos:") {
+            let (plan, inner_spec) = super::chaos::split_chaos_spec(rest)
+                .with_context(|| format!("in evaluator spec '{spec}'"))?;
+            let inner = EvaluatorSpec::parse(inner_spec)?;
+            ensure!(
+                !matches!(inner, EvaluatorSpec::Chaos { .. }),
+                "evaluator spec '{spec}' nests chaos wrappers — \
+                 chaos takes a plain inner spec"
+            );
+            return Ok(EvaluatorSpec::Chaos {
+                plan: plan.to_string(),
+                inner: Box::new(inner),
+            });
         }
         if let Some(name) = spec.strip_prefix("device:") {
             let name = name.trim();
@@ -193,6 +218,11 @@ impl EvaluatorSpec {
                     "evaluator spec '{spec}' nests transcript wrappers — record/replay \
                      take a plain inner spec"
                 );
+                ensure!(
+                    !matches!(inner, EvaluatorSpec::Chaos { .. }),
+                    "evaluator spec '{spec}' puts chaos inside a transcript wrapper — \
+                     chaos must be the outermost wrapper (chaos:<plan>={prefix}…)"
+                );
                 return Ok(if is_record {
                     EvaluatorSpec::Record {
                         path: path.trim().to_string(),
@@ -208,7 +238,8 @@ impl EvaluatorSpec {
         }
         bail!(
             "unknown evaluator spec '{spec}' (expected simulated | device:<profile-name> | \
-             remote://host:port | record:<path>=<spec> | replay:<path>=<spec>)"
+             remote://host:port | record:<path>=<spec> | replay:<path>=<spec> | \
+             chaos:<plan>=<spec>)"
         )
     }
 
@@ -218,9 +249,9 @@ impl EvaluatorSpec {
     pub fn platform_preset(&self) -> Option<&str> {
         match self {
             EvaluatorSpec::Device(name) => Some(name),
-            EvaluatorSpec::Record { inner, .. } | EvaluatorSpec::Replay { inner, .. } => {
-                inner.platform_preset()
-            }
+            EvaluatorSpec::Record { inner, .. }
+            | EvaluatorSpec::Replay { inner, .. }
+            | EvaluatorSpec::Chaos { inner, .. } => inner.platform_preset(),
             _ => None,
         }
     }
@@ -243,11 +274,34 @@ pub fn evaluator_from_scenario(sc: &Scenario) -> Result<Option<Box<dyn Evaluator
 
 /// Hard-error when a scenario that must evaluate in-process carries a
 /// non-simulated evaluator spec (also surfaces malformed specs early).
+/// `chaos:<plan>=simulated` counts as simulated: fault injection wraps the
+/// in-process evaluator ([`wrap_chaos`]) on every track.
 pub(crate) fn require_simulated(sc: &Scenario) -> Result<()> {
-    if EvaluatorSpec::parse(&sc.evaluator)? != EvaluatorSpec::Simulated {
+    let spec = EvaluatorSpec::parse(&sc.evaluator)?;
+    let innermost = match &spec {
+        EvaluatorSpec::Chaos { inner, .. } => inner.as_ref(),
+        s => s,
+    };
+    if *innermost != EvaluatorSpec::Simulated {
         return Err(non_kernel_track_error(sc));
     }
     Ok(())
+}
+
+/// Wrap an in-process evaluator in the scenario's chaos plan when its
+/// `evaluator` spec is `chaos:<plan>=simulated`; pass it through untouched
+/// otherwise.  This is how the fine-tune and bit-width tracks (which never
+/// go through [`build_evaluator`]) get fault injection.
+pub(crate) fn wrap_chaos<'s>(
+    sc: &Scenario,
+    ev: Box<dyn Evaluator + 's>,
+) -> Result<Box<dyn Evaluator + 's>> {
+    match EvaluatorSpec::parse(&sc.evaluator)? {
+        EvaluatorSpec::Chaos { plan, inner } if *inner == EvaluatorSpec::Simulated => {
+            Ok(Box::new(super::chaos::ChaosEvaluator::new(&plan, ev)?))
+        }
+        _ => Ok(ev),
+    }
 }
 
 /// The one copy of the track-gate message (tests match on its text).
@@ -271,6 +325,10 @@ fn build_evaluator(spec: &EvaluatorSpec, sc: &Scenario) -> Result<Box<dyn Evalua
         EvaluatorSpec::Replay { path, inner } => {
             Box::new(ReplayEvaluator::open(path, build_evaluator(inner, sc)?)?)
         }
+        EvaluatorSpec::Chaos { plan, inner } => Box::new(super::chaos::ChaosEvaluator::new(
+            plan,
+            build_evaluator(inner, sc)?,
+        )?),
     })
 }
 
@@ -431,30 +489,24 @@ impl DeviceEvaluator {
         o.to_string()
     }
 
-    /// One protocol round-trip: connect (with bounded retry/backoff), send
-    /// the request line, read exactly one reply line.
+    /// One protocol round-trip: connect (with bounded retry/backoff via
+    /// [`crate::util::retry::Backoff`]), send the request line, read exactly
+    /// one reply line.
     fn round_trip(&self, request: &str) -> Result<String> {
         let addr = self.addr()?;
-        let mut last_err: Option<anyhow::Error> = None;
-        for attempt in 0..=self.max_retries {
-            if attempt > 0 {
-                let exp = self
-                    .backoff_base
-                    .saturating_mul(1u32 << (attempt - 1).min(16));
-                std::thread::sleep(exp.min(BACKOFF_CAP));
-            }
+        Backoff::new(self.max_retries, self.backoff_base, BACKOFF_CAP).run(|_| {
             match TcpStream::connect_timeout(&addr, self.timeout) {
                 // Past this point nothing is retried: the request may have
                 // reached the server, and a torn reply must fail loudly.
-                Ok(stream) => return exchange(stream, request, self.timeout),
+                Ok(stream) => match exchange(stream, request, self.timeout) {
+                    Ok(reply) => Attempt::Done(reply),
+                    Err(e) => Attempt::Fatal(e),
+                },
                 Err(e) => {
-                    last_err = Some(anyhow::Error::from(e).context(format!("connecting to {addr}")))
+                    Attempt::Retry(anyhow::Error::from(e).context(format!("connecting to {addr}")))
                 }
             }
-        }
-        Err(last_err
-            .unwrap_or_else(|| anyhow!("unreachable: no attempt ran"))
-            .context(format!("after {} attempt(s)", self.max_retries + 1)))
+        })
     }
 }
 

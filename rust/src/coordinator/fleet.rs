@@ -42,6 +42,31 @@
 //!   (at most once, into a per-worker `OnceCell`) the first time it picks
 //!   up a scenario that trains on PJRT; simulator-only scenarios never
 //!   touch the artifact registry at all.
+//! * **Bounded retries.** With [`FleetRunner::retries`] set (CLI
+//!   `--retries`, env `HAQA_RETRIES`), a failed scenario is classified
+//!   through the [failure taxonomy](super::chaos::FailureKind):
+//!   transient transport failures and caught panics restart the scenario
+//!   **from scratch** — fresh session, fresh seeded RNG streams, so a
+//!   retried success is bit-identical to a first-try success — while
+//!   deterministic (fatal) errors surface immediately.  Retries are
+//!   immediate by design: the transport layers underneath
+//!   ([`super::device`], the HTTP agent) already run their own
+//!   [`crate::util::retry::Backoff`] schedules, and sleeping in a worker
+//!   would stall every other in-flight session it is multiplexing.
+//!   [`FleetReport::faults`] counts what happened.
+//! * **Crash-safe resume.** With [`FleetRunner::with_state_dir`] set (CLI
+//!   `--resume <dir>`), every completed scenario's outcome is appended to
+//!   a group-committed [`fleet_state`](super::fleet_state) journal, and
+//!   scenarios whose [`fleet_state::scenario_key`] already has a record
+//!   are restored without re-running — bit-identical scores across
+//!   interrupt/resume cycles.
+//! * **Graceful drain.** With [`FleetRunner::with_sigint_drain`] (the
+//!   `haqa fleet` CLI enables it), the first Ctrl-C stops workers from
+//!   *starting* scenarios while in-flight ones (and their retries) run to
+//!   completion and the journals flush; unstarted scenarios report a
+//!   "drained" error and [`FleetReport::drained`] is set, so the caller
+//!   can exit nonzero with a resume hint.  A second Ctrl-C force-kills
+//!   (the handler restores the default disposition after the first).
 //!
 //! Worker count comes from the caller (CLI `--workers`) or the
 //! `HAQA_WORKERS` environment variable, defaulting to 4 and clamped to the
@@ -51,7 +76,9 @@
 //! [`TrackSession`]: super::workflow::TrackSession
 
 use std::cell::OnceCell;
+use std::collections::HashMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::Path;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -62,11 +89,17 @@ use crate::runtime::ArtifactSet;
 use crate::util::{lock, panic_message};
 
 use super::cache::{CacheStats, EvalCache};
+use super::chaos::{classify, FailureKind, PlanState};
+use super::fleet_state::{self, FleetJournal};
 use super::scenario::{Scenario, Track};
 use super::workflow::{SessionStatus, TrackOutcome, TrackSession, Workflow};
 
 /// Worker-thread count when neither the CLI nor `HAQA_WORKERS` says.
 pub const DEFAULT_WORKERS: usize = 4;
+
+/// Upper bound on per-scenario retries (`--retries` / `HAQA_RETRIES`):
+/// past a handful of restarts a "transient" failure is not transient.
+pub const MAX_RETRIES: usize = 8;
 
 /// Upper bound on per-worker overlapped sessions: beyond this the polling
 /// loop and per-request dispatcher threads cost more than the overlap wins.
@@ -96,6 +129,73 @@ pub struct FleetRunner {
     /// Write per-scenario task logs (disable for perf harnesses where the
     /// log I/O would pollute wall-clock numbers).
     pub write_logs: bool,
+    /// Extra attempts a retryable scenario failure gets (`--retries` /
+    /// `HAQA_RETRIES`; see the module docs).  0 = fail fast.
+    pub retries: usize,
+    /// First Ctrl-C drains instead of killing (`haqa fleet` sets this;
+    /// library callers and tests keep the default `false` so the process
+    /// signal disposition is never touched behind their back).
+    pub drain_on_sigint: bool,
+    /// Crash-safe journal + resume state ([`FleetRunner::with_state_dir`]).
+    state: Option<FleetState>,
+}
+
+/// Resume state: outcomes recovered from a prior run's journal, and the
+/// journal this run appends to.
+struct FleetState {
+    prior: Mutex<HashMap<u128, TrackOutcome>>,
+    journal: Mutex<FleetJournal>,
+}
+
+/// What went wrong (and how often) across a fleet run — the observable
+/// side of the retry policy.  A faulted run with enough retries reports
+/// the same scores as a clean run; these counters are the only difference.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultCounters {
+    /// Scenario restarts performed (each consumed one retry budget slot).
+    pub retries: usize,
+    /// Failed attempts classified [`FailureKind::Transient`].
+    pub transient: usize,
+    /// Failed attempts classified [`FailureKind::Fatal`].
+    pub fatal: usize,
+    /// Attempts that panicked ([`FailureKind::Panicked`]).
+    pub panicked: usize,
+}
+
+impl FaultCounters {
+    /// Any failed attempt at all?
+    pub fn any(&self) -> bool {
+        self.transient + self.fatal + self.panicked > 0
+    }
+}
+
+/// Lock-free accumulator behind [`FaultCounters`].
+#[derive(Default)]
+struct FaultTally {
+    retries: AtomicUsize,
+    transient: AtomicUsize,
+    fatal: AtomicUsize,
+    panicked: AtomicUsize,
+}
+
+impl FaultTally {
+    fn count(&self, kind: FailureKind) {
+        match kind {
+            FailureKind::Transient => &self.transient,
+            FailureKind::Fatal => &self.fatal,
+            FailureKind::Panicked => &self.panicked,
+        }
+        .fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn snapshot(&self) -> FaultCounters {
+        FaultCounters {
+            retries: self.retries.load(Ordering::Relaxed),
+            transient: self.transient.load(Ordering::Relaxed),
+            fatal: self.fatal.load(Ordering::Relaxed),
+            panicked: self.panicked.load(Ordering::Relaxed),
+        }
+    }
 }
 
 /// Results of a fleet run; `outcomes[i]` corresponds to `scenarios[i]`.
@@ -111,6 +211,18 @@ pub struct FleetReport {
     /// with [`FleetRunner::batch`] set): requests submitted, provider
     /// round-trips that served them, largest batch.
     pub agent: Option<BatchStats>,
+    /// Failed attempts by kind, plus restarts performed (see
+    /// [`FleetRunner::retries`]); all-zero on a clean run.
+    pub faults: FaultCounters,
+    /// Scenarios restored from the resume journal without re-running.
+    pub resumed: usize,
+    /// `(records appended, group-committed writes)` of this run's
+    /// [`fleet_state`] journal; `None` without a state dir.
+    pub journal: Option<(usize, usize)>,
+    /// A SIGINT drain interrupted the run: in-flight scenarios finished
+    /// and were journaled, unstarted ones carry a "drained" error — rerun
+    /// with `--resume` to pick up exactly where this run stopped.
+    pub drained: bool,
 }
 
 impl FleetReport {
@@ -177,6 +289,72 @@ enum Started<'s> {
     Done(Result<TrackOutcome>),
 }
 
+/// Everything the worker threads share for one [`FleetRunner::run`].
+struct RunCtx<'s> {
+    scenarios: &'s [Scenario],
+    /// Family-sorted queue of scenario indices still to run (resumed ones
+    /// already removed).
+    order: Vec<usize>,
+    next: AtomicUsize,
+    slots: Mutex<Vec<Option<Result<TrackOutcome>>>>,
+    /// Failed attempts per scenario — the retry budget's denominator.
+    attempts: Vec<AtomicUsize>,
+    faults: FaultTally,
+}
+
+/// The chaos plan driving the fleet journal's torn-flush schedule: the
+/// first `chaos:` wrapper found on any scenario's evaluator or backend
+/// spec.  Plans are process-shared by spec ([`super::chaos::shared_plan`]),
+/// so this is the same counter state the wrapped calls advance.
+fn journal_chaos(scenarios: &[Scenario]) -> Option<Arc<PlanState>> {
+    scenarios
+        .iter()
+        .flat_map(|sc| [sc.evaluator.as_str(), sc.backend.as_str()])
+        .find_map(|s| s.trim().strip_prefix("chaos:"))
+        .and_then(|rest| super::chaos::split_chaos_spec(rest).ok())
+        .and_then(|(plan, _)| super::chaos::shared_plan(plan).ok())
+}
+
+/// SIGINT drain flag.  Raw `signal(2)` FFI (libc is linked anyway; no new
+/// dependency): the first Ctrl-C sets the flag and restores the default
+/// disposition, so a second Ctrl-C kills the process the ordinary way.
+#[cfg(unix)]
+mod sigint {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static DRAIN: AtomicBool = AtomicBool::new(false);
+    const SIGINT: i32 = 2;
+    const SIG_DFL: usize = 0;
+
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+
+    extern "C" fn on_sigint(_sig: i32) {
+        // Only async-signal-safe operations here: an atomic store and
+        // re-arming the disposition.
+        DRAIN.store(true, Ordering::SeqCst);
+        unsafe { signal(SIGINT, SIG_DFL) };
+    }
+
+    pub fn install() {
+        unsafe { signal(SIGINT, on_sigint as extern "C" fn(i32) as usize) };
+    }
+
+    pub fn requested() -> bool {
+        DRAIN.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(not(unix))]
+mod sigint {
+    pub fn install() {}
+
+    pub fn requested() -> bool {
+        false
+    }
+}
+
 impl FleetRunner {
     /// A runner over `workers` threads (≥ 1) with a fresh in-memory cache,
     /// blocking agent calls (inflight 1), and task logging on.
@@ -187,6 +365,9 @@ impl FleetRunner {
             batch: None,
             cache: Some(EvalCache::new()),
             write_logs: true,
+            retries: 0,
+            drain_on_sigint: false,
+            state: None,
         }
     }
 
@@ -220,6 +401,60 @@ impl FleetRunner {
     pub fn with_batch(mut self, n: usize) -> FleetRunner {
         self.batch = Some(n.clamp(1, MAX_BATCH));
         self
+    }
+
+    /// Give every retryable scenario failure up to `n` restarts (clamped
+    /// to [`MAX_RETRIES`]; see [`FleetRunner::retries`]).
+    pub fn with_retries(mut self, n: usize) -> FleetRunner {
+        self.retries = n.min(MAX_RETRIES);
+        self
+    }
+
+    /// Drain gracefully on the first SIGINT instead of dying mid-write
+    /// (see [`FleetRunner::drain_on_sigint`]).
+    pub fn with_sigint_drain(mut self) -> FleetRunner {
+        self.drain_on_sigint = true;
+        self
+    }
+
+    /// Journal completed scenarios to `dir/`[`fleet_state::STATE_FILE`]
+    /// and restore any outcome already recorded there (`haqa fleet
+    /// --resume <dir>`).  A fresh directory is simply an empty state, so
+    /// the first run and every resume use the same flag.  Fails on an
+    /// unreadable journal or an uncreatable directory — crash safety must
+    /// not degrade silently.
+    pub fn with_state_dir(mut self, dir: &Path) -> Result<FleetRunner> {
+        let (prior, scan) = fleet_state::load(dir)?;
+        if scan.skipped > 0 {
+            eprintln!(
+                "fleet state: skipped {} torn/corrupt record(s) in {} — those scenarios re-run",
+                scan.skipped,
+                dir.join(fleet_state::STATE_FILE).display()
+            );
+        }
+        let journal = FleetJournal::open(dir)?;
+        self.state = Some(FleetState {
+            prior: Mutex::new(prior),
+            journal: Mutex::new(journal),
+        });
+        Ok(self)
+    }
+
+    /// Resolve the retry budget: explicit CLI value, else `HAQA_RETRIES`,
+    /// else 0 (fail fast).  Hard-error parsing like
+    /// [`FleetRunner::workers_from_env`] — `0` is a valid "off", garbage
+    /// is not; values clamp to [`MAX_RETRIES`].
+    pub fn retries_from_env(cli: Option<usize>) -> Result<usize> {
+        let n = match cli {
+            Some(n) => n,
+            None => match std::env::var("HAQA_RETRIES") {
+                Ok(v) => v.trim().parse::<usize>().map_err(|_| {
+                    anyhow!("HAQA_RETRIES must be a non-negative integer, got '{v}'")
+                })?,
+                Err(_) => 0,
+            },
+        };
+        Ok(n.min(MAX_RETRIES))
     }
 
     /// Resolve the worker count: explicit CLI value, else `HAQA_WORKERS`,
@@ -286,7 +521,8 @@ impl FleetRunner {
         }
     }
 
-    /// Execute the batch; blocks until every scenario finished.
+    /// Execute the batch; blocks until every scenario finished (or, under
+    /// a SIGINT drain, until the in-flight ones have).
     pub fn run(&self, scenarios: &[Scenario]) -> FleetReport {
         let n = scenarios.len();
         // Family-sharded work queue: scenario indices grouped by family
@@ -311,32 +547,80 @@ impl FleetRunner {
         let mut order: Vec<usize> = (0..n).collect();
         order.sort_by_key(|&i| ranks[i]);
 
-        let slots: Mutex<Vec<Option<Result<TrackOutcome>>>> =
-            Mutex::new((0..n).map(|_| None).collect());
-        let next = AtomicUsize::new(0);
-        let workers = self.workers.min(n.max(1));
+        // Resume: restore journaled outcomes and drop those scenarios
+        // from the queue before any worker starts.  A duplicate scenario
+        // (same key twice in the input) resumes once and re-runs once.
+        let mut slots_init: Vec<Option<Result<TrackOutcome>>> = (0..n).map(|_| None).collect();
+        let mut resumed = 0usize;
+        if let Some(st) = &self.state {
+            let mut prior = lock(&st.prior);
+            for (i, sc) in scenarios.iter().enumerate() {
+                if let Some(out) = prior.remove(&fleet_state::scenario_key(sc)) {
+                    slots_init[i] = Some(Ok(out));
+                    resumed += 1;
+                }
+            }
+            // A `torn@<n>` fault plan on any scenario's chaos wrapper also
+            // drives this journal's flush schedule.
+            if let Some(chaos) = journal_chaos(scenarios) {
+                lock(&st.journal).set_chaos(chaos);
+            }
+        }
+        order.retain(|&i| slots_init[i].is_none());
+
+        if self.drain_on_sigint {
+            sigint::install();
+        }
+        let ctx = RunCtx {
+            scenarios,
+            order,
+            next: AtomicUsize::new(0),
+            slots: Mutex::new(slots_init),
+            attempts: (0..n).map(|_| AtomicUsize::new(0)).collect(),
+            faults: FaultTally::default(),
+        };
+        let workers = self.workers.min(ctx.order.len().max(1));
         // The shared provider pool (one batching backend per backend spec)
         // exists only in batch mode; without it every scenario keeps its
         // own seeded backend, exactly as before.
         let pool: Option<Arc<AgentPool>> = self.batch.map(|b| Arc::new(AgentPool::new(b)));
         std::thread::scope(|s| {
             for _ in 0..workers {
-                s.spawn(|| self.worker(scenarios, &order, &next, &slots, pool.as_ref()));
+                s.spawn(|| self.worker(&ctx, pool.as_ref()));
             }
         });
-        let outcomes = slots
+        let drained = self.drain_on_sigint && sigint::requested();
+        let outcomes = ctx
+            .slots
             .into_inner()
             .unwrap_or_else(|p| p.into_inner())
             .into_iter()
             .enumerate()
-            .map(|(i, o)| o.unwrap_or_else(|| Err(anyhow!("scenario #{i}: worker died"))))
+            .map(|(i, o)| {
+                o.unwrap_or_else(|| {
+                    if drained {
+                        Err(anyhow!(
+                            "scenario '{}' drained before start — rerun with \
+                             --resume to finish the fleet",
+                            scenarios[i].name
+                        ))
+                    } else {
+                        Err(anyhow!("scenario #{i}: worker died"))
+                    }
+                })
+            })
             .collect();
-        // Sweep boundary: group-commit the buffered journal tail so the
-        // on-disk cache is complete (and the stats below final) before the
-        // report — not only when the last handle drops.
+        // Sweep boundary: group-commit both journal tails so the on-disk
+        // state is complete (and the stats below final) before the report
+        // — not only when the last handle drops.
         if let Some(c) = &self.cache {
             c.flush_journal();
         }
+        let journal = self.state.as_ref().map(|st| {
+            let mut j = lock(&st.journal);
+            j.flush();
+            j.stats()
+        });
         FleetReport {
             outcomes,
             cache: self.cache.as_ref().map(|c| c.stats()),
@@ -348,57 +632,107 @@ impl FleetRunner {
                 p.flush();
                 p.stats()
             }),
+            faults: ctx.faults.snapshot(),
+            resumed,
+            journal,
+            drained,
         }
+    }
+
+    /// Resolve one scenario to a final success: journal it (when a state
+    /// dir is set), then fill its slot.
+    fn settle_ok(&self, ctx: &RunCtx, i: usize, out: TrackOutcome) {
+        if let Some(st) = &self.state {
+            lock(&st.journal).append(&ctx.scenarios[i], &out);
+        }
+        lock(&ctx.slots)[i] = Some(Ok(out));
+    }
+
+    /// Record one failed attempt.  Returns `true` when the caller should
+    /// restart the scenario from scratch (retryable kind, budget left);
+    /// otherwise the error lands in the slot, annotated with the attempt
+    /// count when retries were actually burned.
+    fn settle_err(&self, ctx: &RunCtx, i: usize, e: anyhow::Error, kind: FailureKind) -> bool {
+        let made = ctx.attempts[i].fetch_add(1, Ordering::Relaxed) + 1;
+        ctx.faults.count(kind);
+        if kind.retryable() && made <= self.retries {
+            ctx.faults.retries.fetch_add(1, Ordering::Relaxed);
+            return true;
+        }
+        let e = if made > 1 {
+            e.context(format!(
+                "gave up after {made} attempt(s); last failure {}",
+                kind.as_str()
+            ))
+        } else {
+            e
+        };
+        lock(&ctx.slots)[i] = Some(Err(e));
+        false
     }
 
     /// One worker: keep up to `inflight` sessions live, stepping each as
     /// far as it will go without blocking; sessions parked on an in-flight
-    /// agent request cost nothing while the others evaluate.
-    fn worker(
-        &self,
-        scenarios: &[Scenario],
-        order: &[usize],
-        next: &AtomicUsize,
-        slots: &Mutex<Vec<Option<Result<TrackOutcome>>>>,
-        pool: Option<&Arc<AgentPool>>,
-    ) {
-        let n = scenarios.len();
+    /// agent request cost nothing while the others evaluate.  Retryable
+    /// failures requeue locally (`retry`) and restart from scratch through
+    /// [`FleetRunner::start`]; a SIGINT drain stops intake from the shared
+    /// cursor but lets active sessions — and their retries — finish.
+    fn worker(&self, ctx: &RunCtx, pool: Option<&Arc<AgentPool>>) {
         let inflight = self.inflight.max(1);
-        let put = |i: usize, out: Result<TrackOutcome>| {
-            lock(slots)[i] = Some(out);
-        };
         // Lazily-loaded per-thread artifact registry (PJRT clients and
         // executable caches are thread-local); a OnceCell so overlapped
         // sessions can share the borrow while late-starting scenarios
         // still trigger the one-time load.
         let art: OnceCell<ArtifactSet> = OnceCell::new();
         let mut active: Vec<(usize, TrackSession)> = Vec::new();
+        let mut retry: Vec<usize> = Vec::new();
         let mut drained = false;
         loop {
-            while !drained && active.len() < inflight {
-                let qi = next.fetch_add(1, Ordering::Relaxed);
-                if qi >= n {
-                    drained = true;
-                    break;
-                }
-                let i = order[qi];
+            while active.len() < inflight {
+                // Retries first: they belong to this worker and count as
+                // in-flight work even during a drain.
+                let i = match retry.pop() {
+                    Some(i) => i,
+                    None if drained => break,
+                    None => {
+                        if self.drain_on_sigint && sigint::requested() {
+                            drained = true;
+                            break;
+                        }
+                        let qi = ctx.next.fetch_add(1, Ordering::Relaxed);
+                        if qi >= ctx.order.len() {
+                            drained = true;
+                            break;
+                        }
+                        ctx.order[qi]
+                    }
+                };
+                let sc = &ctx.scenarios[i];
                 // Isolate per-scenario panics: one poisoned cell must not
                 // abort the rest of the batch.
-                let started =
-                    catch_unwind(AssertUnwindSafe(|| self.start(&scenarios[i], &art, pool)))
-                        .unwrap_or_else(|p| {
-                            Started::Done(Err(anyhow!(
-                                "scenario '{}' panicked: {}",
-                                scenarios[i].name,
-                                panic_message(&p)
-                            )))
-                        });
+                let started = catch_unwind(AssertUnwindSafe(|| self.start(sc, &art, pool)))
+                    .map_err(|p| panic_message(&p));
                 match started {
-                    Started::Session(sess) => active.push((i, sess)),
-                    Started::Done(out) => put(i, out),
+                    Ok(Started::Session(sess)) => active.push((i, sess)),
+                    Ok(Started::Done(Ok(out))) => self.settle_ok(ctx, i, out),
+                    Ok(Started::Done(Err(e))) => {
+                        let kind = classify(&e);
+                        if self.settle_err(ctx, i, e, kind) {
+                            retry.push(i);
+                        }
+                    }
+                    Err(msg) => {
+                        let e = anyhow!("scenario '{}' panicked: {msg}", sc.name);
+                        if self.settle_err(ctx, i, e, FailureKind::Panicked) {
+                            retry.push(i);
+                        }
+                    }
                 }
             }
             if active.is_empty() {
+                if !retry.is_empty() {
+                    continue; // restart them on the next refill pass
+                }
                 if drained {
                     break;
                 }
@@ -409,7 +743,7 @@ impl FleetRunner {
             let mut k = 0;
             while k < active.len() {
                 let (_, sess) = &mut active[k];
-                let stepped: Result<(SessionStatus, bool)> =
+                let stepped: std::result::Result<Result<(SessionStatus, bool)>, String> =
                     catch_unwind(AssertUnwindSafe(|| {
                         let mut worked = false;
                         loop {
@@ -419,30 +753,51 @@ impl FleetRunner {
                             }
                         }
                     }))
-                    .unwrap_or_else(|p| Err(anyhow!("panicked: {}", panic_message(&p))));
+                    .map_err(|p| panic_message(&p));
                 match stepped {
-                    Ok((SessionStatus::Finished, _)) => {
+                    Ok(Ok((SessionStatus::Finished, _))) => {
                         let (i, sess) = active.swap_remove(k);
-                        let out = catch_unwind(AssertUnwindSafe(|| sess.finish()))
-                            .unwrap_or_else(|p| {
-                                Err(anyhow!("panicked: {}", panic_message(&p)))
-                            })
-                            .map_err(|e| {
-                                anyhow!("scenario '{}': {e:#}", scenarios[i].name)
-                            });
-                        put(i, out);
+                        let name = &ctx.scenarios[i].name;
+                        let finished = catch_unwind(AssertUnwindSafe(|| sess.finish()))
+                            .map_err(|p| panic_message(&p));
+                        match finished {
+                            Ok(Ok(out)) => self.settle_ok(ctx, i, out),
+                            Ok(Err(e)) => {
+                                let kind = classify(&e);
+                                let e = anyhow!("scenario '{name}': {e:#}");
+                                if self.settle_err(ctx, i, e, kind) {
+                                    retry.push(i);
+                                }
+                            }
+                            Err(msg) => {
+                                let e = anyhow!("scenario '{name}' panicked: {msg}");
+                                if self.settle_err(ctx, i, e, FailureKind::Panicked) {
+                                    retry.push(i);
+                                }
+                            }
+                        }
                         progressed = true;
                     }
-                    Ok((_, worked)) => {
+                    Ok(Ok((_, worked))) => {
                         progressed |= worked;
                         k += 1;
                     }
-                    Err(e) => {
+                    Ok(Err(e)) => {
                         let (i, _) = active.swap_remove(k);
-                        put(
-                            i,
-                            Err(anyhow!("scenario '{}': {e:#}", scenarios[i].name)),
-                        );
+                        let kind = classify(&e);
+                        let e = anyhow!("scenario '{}': {e:#}", ctx.scenarios[i].name);
+                        if self.settle_err(ctx, i, e, kind) {
+                            retry.push(i);
+                        }
+                        progressed = true;
+                    }
+                    Err(msg) => {
+                        let (i, _) = active.swap_remove(k);
+                        let e =
+                            anyhow!("scenario '{}' panicked: {msg}", ctx.scenarios[i].name);
+                        if self.settle_err(ctx, i, e, FailureKind::Panicked) {
+                            retry.push(i);
+                        }
                         progressed = true;
                     }
                 }
@@ -596,11 +951,62 @@ mod tests {
     }
 
     #[test]
+    fn retries_env_parsing_clamps_and_hard_errors() {
+        // Explicit CLI wins; 0 is a valid "fail fast".
+        assert_eq!(FleetRunner::retries_from_env(Some(0)).unwrap(), 0);
+        assert_eq!(FleetRunner::retries_from_env(Some(3)).unwrap(), 3);
+        assert_eq!(
+            FleetRunner::retries_from_env(Some(10_000)).unwrap(),
+            MAX_RETRIES
+        );
+        // Env fallback with hard-error parsing (serialized in one test,
+        // like the HAQA_WORKERS / HAQA_INFLIGHT / HAQA_BATCH tests).
+        std::env::set_var("HAQA_RETRIES", "forever");
+        let err = FleetRunner::retries_from_env(None);
+        std::env::remove_var("HAQA_RETRIES");
+        let msg = format!("{:#}", err.expect_err("typo must not be swallowed"));
+        assert!(msg.contains("HAQA_RETRIES") && msg.contains("forever"), "{msg}");
+
+        std::env::set_var("HAQA_RETRIES", "2");
+        let ok = FleetRunner::retries_from_env(None);
+        std::env::remove_var("HAQA_RETRIES");
+        assert_eq!(ok.unwrap(), 2);
+        assert_eq!(FleetRunner::retries_from_env(None).unwrap(), 0, "default");
+
+        assert_eq!(FleetRunner::new(2).retries, 0, "fail fast by default");
+        assert_eq!(FleetRunner::new(2).with_retries(100).retries, MAX_RETRIES);
+        assert!(!FleetRunner::new(2).drain_on_sigint, "drain is opt-in");
+        assert!(FleetRunner::new(2).with_sigint_drain().drain_on_sigint);
+    }
+
+    #[test]
     fn empty_batch_is_fine() {
         let report = FleetRunner::new(4).run(&[]);
         assert!(report.outcomes.is_empty());
         assert_eq!(report.families, 0);
         assert_eq!(report.cache.unwrap(), CacheStats::default());
         assert!(report.agent.is_none(), "no pool unless batch mode is on");
+        assert_eq!(report.faults, FaultCounters::default());
+        assert!(!report.faults.any());
+        assert_eq!(report.resumed, 0);
+        assert!(report.journal.is_none(), "no journal without a state dir");
+        assert!(!report.drained);
+    }
+
+    #[test]
+    fn state_dir_journals_and_reports_stats() {
+        let dir = std::env::temp_dir().join(format!("haqa_fleet_resume_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let report = FleetRunner::new(1)
+            .with_state_dir(&dir)
+            .unwrap()
+            .run(&[]);
+        assert_eq!(report.journal, Some((0, 0)), "nothing ran, nothing written");
+        assert_eq!(report.resumed, 0);
+        assert!(
+            dir.join(super::fleet_state::STATE_FILE).exists(),
+            "journal file created eagerly"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

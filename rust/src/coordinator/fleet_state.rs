@@ -1,0 +1,524 @@
+//! The crash-safe fleet run journal behind `haqa fleet --resume <dir>`.
+//!
+//! A fleet run appends one record per **completed** scenario to
+//! `fleet_state.jsonl` in the state directory.  On `--resume`, scenarios
+//! whose key already has a record are skipped and their persisted
+//! [`TrackOutcome`]s merged into the report — so an interrupted-then-
+//! resumed run's report is **bit-identical** to an uninterrupted one.
+//!
+//! The file follows the same discipline as the eval-cache journal
+//! (`docs/CACHE.md`):
+//!
+//! * **append-only JSONL**, healed by appending a newline (never by
+//!   truncating) when the previous process died mid-write;
+//! * **group-committed** writes of whole `\n`-terminated lines at the
+//!   [`FLUSH_RECORDS`]/[`FLUSH_BYTES`](super::cache::FLUSH_BYTES)
+//!   watermarks, at sweep boundaries and on drop;
+//! * **bit-exact** f64 payloads: every score is persisted as the hex of
+//!   its bit pattern (JSON decimal rendering does not round-trip f64);
+//!   configuration values are persisted *typed* (`{"i": n}` / `{"f":
+//!   "<bits-hex>"}` / `{"c": "s"}`) for the same reason;
+//! * corrupt or torn lines are **skipped on load** ([`load`] counts
+//!   them), so a crash loses at most the unflushed group — which resume
+//!   simply re-runs.
+//!
+//! Failed scenarios are deliberately **not** journaled: an error is not a
+//! result, and re-running it on resume is the behavior a retry policy
+//! wants.  Records are keyed by [`scenario_key`] — a content hash of every
+//! scenario field — so editing a scenario invalidates its checkpoint.
+//!
+//! The chaos harness can tear the Nth flush short (`torn@N` in a fault
+//! plan, see [`super::chaos`]), exercising the crash window end to end in
+//! CI without killing the process.
+
+use std::collections::HashMap;
+use std::fs::File;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::search::{Config, Value};
+use crate::util::json::Json;
+use crate::util::{hash, jsonl};
+
+use super::cache::{FLUSH_BYTES, FLUSH_RECORDS};
+use super::chaos::PlanState;
+use super::scenario::Scenario;
+use super::workflow::TrackOutcome;
+use crate::optimizers::Observation;
+
+/// Journal file name inside a fleet state directory.
+pub const STATE_FILE: &str = "fleet_state.jsonl";
+
+/// Content hash of **every** scenario field — the record key.  Floats
+/// hash by bit pattern, so the key is exact; any edit to the scenario
+/// (including its backend/evaluator specs) yields a different key and
+/// therefore a fresh run.
+pub fn scenario_key(sc: &Scenario) -> u128 {
+    let payload = format!(
+        "name={}\ntrack={:?}\nmodel={}\nprecision={}\nbits={:08x}\noptimizer={}\n\
+         budget={}\nseed={}\ndevice={}\nkernel={}\nsteps_per_epoch={}\n\
+         step_scale={:016x}\npretrain_steps={}\nmemory_limit_gb={:016x}\n\
+         backend={}\nevaluator={}",
+        sc.name,
+        sc.track,
+        sc.model,
+        sc.precision.label(),
+        sc.bits.to_bits(),
+        sc.optimizer,
+        sc.budget,
+        sc.seed,
+        sc.device,
+        sc.kernel,
+        sc.steps_per_epoch,
+        sc.step_scale.to_bits(),
+        sc.pretrain_steps,
+        sc.memory_limit_gb.to_bits(),
+        sc.backend,
+        sc.evaluator,
+    );
+    hash::content_hash_128(payload.as_bytes())
+}
+
+fn bits_hex(x: f64) -> Json {
+    Json::str(format!("{:016x}", x.to_bits()))
+}
+
+fn hex_bits(s: &str) -> Option<f64> {
+    if s.len() != 16 {
+        return None;
+    }
+    u64::from_str_radix(s, 16).ok().map(f64::from_bits)
+}
+
+fn obs_to_json(ob: &Observation) -> Json {
+    let mut cfg = Json::obj();
+    for (k, v) in ob.config.iter() {
+        let tagged = match v {
+            Value::Int(i) => ("i", Json::Num(*i as f64)),
+            Value::Float(x) => ("f", bits_hex(*x)),
+            Value::Cat(s) => ("c", Json::str(s.clone())),
+        };
+        cfg.set(k, Json::from_pairs(vec![(tagged.0.to_string(), tagged.1)]));
+    }
+    let mut j = Json::obj();
+    j.set("config", cfg);
+    j.set("score", bits_hex(ob.score));
+    if !ob.extra.is_empty() {
+        j.set(
+            "extra",
+            Json::Arr(ob.extra.iter().map(|x| bits_hex(*x)).collect()),
+        );
+    }
+    j.set("feedback", Json::Str(ob.feedback.clone()));
+    j
+}
+
+fn obs_from_json(j: &Json) -> Option<Observation> {
+    let mut config = Config::new();
+    for (k, v) in j.get("config")?.as_obj()? {
+        let value = if let Some(i) = v.get("i") {
+            Value::Int(i.as_i64()?)
+        } else if let Some(f) = v.get("f") {
+            Value::Float(hex_bits(f.as_str()?)?)
+        } else if let Some(c) = v.get("c") {
+            Value::Cat(c.as_str()?.to_string())
+        } else {
+            return None;
+        };
+        config.insert(k.clone(), value);
+    }
+    let score = hex_bits(j.get("score")?.as_str()?)?;
+    let extra = match j.get("extra") {
+        Some(a) => a
+            .as_arr()?
+            .iter()
+            .map(|x| x.as_str().and_then(hex_bits))
+            .collect::<Option<Vec<f64>>>()?,
+        None => Vec::new(),
+    };
+    Some(Observation {
+        config,
+        score,
+        extra,
+        feedback: j.get("feedback")?.as_str()?.to_string(),
+    })
+}
+
+/// Render one scenario-outcome record as a `\n`-terminated JSONL line.
+/// All floats travel as bit-pattern hex; [`decode_outcome`] restores the
+/// outcome bit-for-bit.
+pub fn encode_outcome(key: u128, o: &TrackOutcome) -> String {
+    let mut j = Json::obj();
+    j.set("sc", Json::str(hash::hex128(key)));
+    j.set("best", bits_hex(o.best_score));
+    j.set(
+        "cost",
+        match &o.cost_report {
+            Some(c) => Json::str(c.clone()),
+            None => Json::Null,
+        },
+    );
+    j.set(
+        "log",
+        match &o.log_path {
+            Some(p) => Json::str(p.display().to_string()),
+            None => Json::Null,
+        },
+    );
+    j.set("hits", Json::Num(o.cache_hits as f64));
+    j.set("misses", Json::Num(o.cache_misses as f64));
+    j.set("history", Json::Arr(o.history.iter().map(obs_to_json).collect()));
+    let mut line = j.to_string();
+    line.push('\n');
+    line
+}
+
+/// Decode one journal record; `None` (skip the line) on any structural
+/// mismatch — the torn-tail / corrupt-line policy is the caller's
+/// ([`load`] counts skips via [`jsonl::scan_file`]).
+pub fn decode_outcome(j: &Json) -> Option<(u128, TrackOutcome)> {
+    let key = hash::parse_hex128(j.get("sc")?.as_str()?)?;
+    let best_score = hex_bits(j.get("best")?.as_str()?)?;
+    let cost_report = match j.get("cost")? {
+        Json::Null => None,
+        v => Some(v.as_str()?.to_string()),
+    };
+    let log_path = match j.get("log")? {
+        Json::Null => None,
+        v => Some(PathBuf::from(v.as_str()?)),
+    };
+    let cache_hits = j.get("hits")?.as_i64()? as usize;
+    let cache_misses = j.get("misses")?.as_i64()? as usize;
+    let history = j
+        .get("history")?
+        .as_arr()?
+        .iter()
+        .map(obs_from_json)
+        .collect::<Option<Vec<Observation>>>()?;
+    Some((
+        key,
+        TrackOutcome {
+            history,
+            best_score,
+            cost_report,
+            log_path,
+            cache_hits,
+            cache_misses,
+        },
+    ))
+}
+
+/// Load every valid record from `dir/fleet_state.jsonl` (first write wins
+/// per key, matching the eval-cache journal).  A missing file is an empty
+/// state — `--resume` on a fresh directory just runs everything.
+pub fn load(dir: &Path) -> Result<(HashMap<u128, TrackOutcome>, jsonl::JsonlScan)> {
+    let path = dir.join(STATE_FILE);
+    let mut map = HashMap::new();
+    if !path.exists() {
+        return Ok((map, jsonl::JsonlScan::default()));
+    }
+    let scan = jsonl::scan_file(&path, |j, _| match decode_outcome(j) {
+        Some((k, o)) => {
+            map.entry(k).or_insert(o);
+            true
+        }
+        None => false,
+    })
+    .with_context(|| format!("loading fleet state {}", path.display()))?;
+    Ok((map, scan))
+}
+
+/// The group-committed appender — the eval-cache `Journal` shape with one
+/// addition: an optional chaos hook that tears scheduled flushes short
+/// (the offline stand-in for a crash mid-`write(2)`).
+pub struct FleetJournal {
+    file: File,
+    path: PathBuf,
+    buf: String,
+    buffered: usize,
+    records: usize,
+    writes: usize,
+    chaos: Option<Arc<PlanState>>,
+    /// A torn flush left the file without a trailing newline; the next
+    /// flush heals it append-only, exactly as a reopen would.
+    heal_pending: bool,
+}
+
+impl FleetJournal {
+    /// Open (append-healed) the journal under `dir`, creating the
+    /// directory as needed.
+    pub fn open(dir: &Path) -> Result<FleetJournal> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating fleet state dir {}", dir.display()))?;
+        let path = dir.join(STATE_FILE);
+        let file = jsonl::open_append_healed(&path)
+            .with_context(|| format!("opening fleet state {}", path.display()))?;
+        Ok(FleetJournal {
+            file,
+            path,
+            buf: String::new(),
+            buffered: 0,
+            records: 0,
+            writes: 0,
+            chaos: None,
+            heal_pending: false,
+        })
+    }
+
+    /// Attach a chaos plan whose `torn@<n>` tokens tear this journal's
+    /// n-th flush short.
+    pub fn with_chaos(mut self, state: Arc<PlanState>) -> FleetJournal {
+        self.chaos = Some(state);
+        self
+    }
+
+    /// [`FleetJournal::with_chaos`] for an already-opened journal (the
+    /// fleet runner learns the plan from the scenario list at run time).
+    pub fn set_chaos(&mut self, state: Arc<PlanState>) {
+        self.chaos = Some(state);
+    }
+
+    /// The journal file path.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// `(records appended, write_all calls)` — group commit means
+    /// `writes ≪ records`.
+    pub fn stats(&self) -> (usize, usize) {
+        (self.records, self.writes)
+    }
+
+    /// Buffer one completed scenario's outcome, flushing at the group
+    /// watermark.
+    pub fn append(&mut self, sc: &Scenario, outcome: &TrackOutcome) {
+        self.buf.push_str(&encode_outcome(scenario_key(sc), outcome));
+        self.buffered += 1;
+        self.records += 1;
+        if self.buffered >= FLUSH_RECORDS || self.buf.len() >= FLUSH_BYTES {
+            self.flush();
+        }
+    }
+
+    /// Write the buffered group (one syscall pair).  A failed write only
+    /// loses the checkpoint, never the in-memory report.  When the chaos
+    /// plan schedules a torn write for this flush, the final buffered
+    /// record's tail bytes (and its newline) are withheld — the next
+    /// flush heals with a leading newline, and [`load`] skips the torn
+    /// line, so on resume that scenario deterministically re-runs.
+    pub fn flush(&mut self) {
+        if self.buf.is_empty() {
+            return;
+        }
+        let torn = self.chaos.as_ref().map(|c| c.on_flush()).unwrap_or(false);
+        let bytes = self.buf.as_bytes();
+        let cut = if torn {
+            let last_start = bytes[..bytes.len() - 1]
+                .iter()
+                .rposition(|&b| b == b'\n')
+                .map(|i| i + 1)
+                .unwrap_or(0);
+            let last_len = bytes.len() - last_start;
+            bytes.len() - (last_len / 2).max(1)
+        } else {
+            bytes.len()
+        };
+        let heal: &[u8] = if self.heal_pending { b"\n" } else { b"" };
+        let _ = self
+            .file
+            .write_all(heal)
+            .and_then(|()| self.file.write_all(&bytes[..cut]))
+            .and_then(|()| self.file.flush());
+        self.writes += 1;
+        self.heal_pending = torn;
+        self.buf.clear();
+        self.buffered = 0;
+    }
+}
+
+impl Drop for FleetJournal {
+    fn drop(&mut self) {
+        self.flush();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "haqa_fleet_state_{tag}_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn outcome(seed: u64) -> TrackOutcome {
+        let mut config = Config::new();
+        config.insert("lr".into(), Value::Float(0.1 + seed as f64 * 1e-9 + 1e-17));
+        config.insert("rank".into(), Value::Int(seed as i64 + 3));
+        config.insert("layout".into(), Value::Cat("row".into()));
+        TrackOutcome {
+            history: vec![
+                Observation {
+                    config: config.clone(),
+                    score: -0.123456789123456789 * (seed as f64 + 1.0),
+                    extra: vec![std::f64::consts::PI, 2.5e-300],
+                    feedback: "{\"loss\": 0.5}".into(),
+                },
+                Observation {
+                    config,
+                    score: f64::NEG_INFINITY,
+                    extra: Vec::new(),
+                    feedback: String::new(),
+                },
+            ],
+            best_score: 0.1 + 0.2, // famously not representable cleanly
+            cost_report: if seed % 2 == 0 {
+                Some("$0.42".into())
+            } else {
+                None
+            },
+            log_path: None,
+            cache_hits: 7,
+            cache_misses: 3,
+        }
+    }
+
+    fn assert_outcome_bits_eq(a: &TrackOutcome, b: &TrackOutcome) {
+        assert_eq!(a.best_score.to_bits(), b.best_score.to_bits());
+        assert_eq!(a.cost_report, b.cost_report);
+        assert_eq!(a.log_path, b.log_path);
+        assert_eq!(a.cache_hits, b.cache_hits);
+        assert_eq!(a.cache_misses, b.cache_misses);
+        assert_eq!(a.history.len(), b.history.len());
+        for (x, y) in a.history.iter().zip(&b.history) {
+            assert_eq!(x.score.to_bits(), y.score.to_bits());
+            assert_eq!(x.feedback, y.feedback);
+            assert_eq!(x.extra.len(), y.extra.len());
+            for (ex, ey) in x.extra.iter().zip(&y.extra) {
+                assert_eq!(ex.to_bits(), ey.to_bits());
+            }
+            assert_eq!(x.config.len(), y.config.len());
+            for ((ka, va), (kb, vb)) in x.config.iter().zip(y.config.iter()) {
+                assert_eq!(ka, kb);
+                match (va, vb) {
+                    (Value::Float(fa), Value::Float(fb)) => {
+                        assert_eq!(fa.to_bits(), fb.to_bits())
+                    }
+                    _ => assert_eq!(va, vb),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn records_round_trip_bit_exactly() {
+        // Non-finite scores, subnormal-ish extras, and a float config
+        // value none of which survive decimal JSON — the bits-hex encoding
+        // must carry them all exactly.
+        for seed in 0..4 {
+            let o = outcome(seed);
+            let line = encode_outcome(42 + seed as u128, &o);
+            assert!(line.ends_with('\n'));
+            let j = crate::util::json::parse(line.trim_end()).unwrap();
+            let (key, back) = decode_outcome(&j).expect("decodes");
+            assert_eq!(key, 42 + seed as u128);
+            assert_outcome_bits_eq(&o, &back);
+        }
+    }
+
+    #[test]
+    fn scenario_key_separates_every_field() {
+        let base = Scenario::default();
+        let k0 = scenario_key(&base);
+        assert_eq!(k0, scenario_key(&base.clone()), "deterministic");
+        let mut edits: Vec<Scenario> = Vec::new();
+        let mut s = base.clone();
+        s.name = "other".into();
+        edits.push(s);
+        let mut s = base.clone();
+        s.seed = 1;
+        edits.push(s);
+        let mut s = base.clone();
+        s.memory_limit_gb = 10.0 + 1e-12;
+        edits.push(s);
+        let mut s = base.clone();
+        s.evaluator = "chaos:none=simulated".into();
+        edits.push(s);
+        for e in &edits {
+            assert_ne!(scenario_key(e), k0, "{e:?} must rekey");
+        }
+    }
+
+    #[test]
+    fn journal_appends_load_first_write_wins() {
+        let dir = temp_dir("basic");
+        let (sc_a, sc_b) = (Scenario::default(), {
+            let mut s = Scenario::default();
+            s.name = "b".into();
+            s
+        });
+        {
+            let mut j = FleetJournal::open(&dir).unwrap();
+            j.append(&sc_a, &outcome(0));
+            j.append(&sc_b, &outcome(1));
+            // A duplicate append (e.g. an overlapping resumed run): load
+            // must keep the first.
+            j.append(&sc_a, &outcome(2));
+            assert_eq!(j.stats().0, 3);
+        } // drop flushes
+        let (map, scan) = load(&dir).unwrap();
+        assert_eq!(scan.skipped, 0);
+        assert!(!scan.torn_tail);
+        assert_eq!(map.len(), 2);
+        assert_outcome_bits_eq(&map[&scenario_key(&sc_a)], &outcome(0));
+        assert_outcome_bits_eq(&map[&scenario_key(&sc_b)], &outcome(1));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_file_is_empty_state() {
+        let dir = temp_dir("missing");
+        let (map, scan) = load(&dir).unwrap();
+        assert!(map.is_empty());
+        assert_eq!(scan.skipped, 0);
+    }
+
+    #[test]
+    fn chaos_torn_flush_loses_only_the_torn_record() {
+        let dir = temp_dir("torn");
+        let plan = "torn@1";
+        let state = crate::coordinator::chaos::shared_plan(plan).unwrap();
+        let mut scs = Vec::new();
+        for i in 0..3 {
+            let mut s = Scenario::default();
+            s.name = format!("sc{i}");
+            scs.push(s);
+        }
+        {
+            let mut j = FleetJournal::open(&dir).unwrap().with_chaos(state);
+            j.append(&scs[0], &outcome(0));
+            j.append(&scs[1], &outcome(1));
+            j.flush(); // flush #1 — torn: sc1's record is cut short
+            j.append(&scs[2], &outcome(2));
+            j.flush(); // flush #2 — heals with a leading newline first
+        }
+        let (map, scan) = load(&dir).unwrap();
+        assert_eq!(scan.skipped, 1, "exactly the torn line is lost");
+        assert!(!scan.torn_tail, "the next flush healed the tail");
+        assert_eq!(map.len(), 2);
+        assert!(map.contains_key(&scenario_key(&scs[0])));
+        assert!(
+            !map.contains_key(&scenario_key(&scs[1])),
+            "the torn record is gone — resume re-runs that scenario"
+        );
+        assert!(map.contains_key(&scenario_key(&scs[2])));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -13,7 +13,14 @@
 //!   lock-striped in memory, optional persistent journal tier.
 //! * [`fleet`] — scoped-thread scenario fleet, family-sharded work queue,
 //!   overlapped in-flight agent queries (`HAQA_INFLIGHT`), bit-identical
-//!   to serial, with per-platform Pareto fronts in the report.
+//!   to serial, with per-platform Pareto fronts in the report, bounded
+//!   scenario retries (`--retries`), crash-safe resume (`--resume`) and
+//!   graceful SIGINT drain.
+//! * [`chaos`] — deterministic fault injection (`chaos:<plan>=<inner>`
+//!   evaluator/backend wrappers) plus the scenario failure taxonomy the
+//!   retry policy runs on.
+//! * [`fleet_state`] — the group-committed `fleet_state.jsonl` outcome
+//!   journal behind `haqa fleet --resume`.
 //! * [`matrix`] — deterministic scenario-matrix generator (`haqa
 //!   scenarios gen`): a compact spec expands into thousands of scenarios.
 //! * [`workflow`] — the generic round loop as a resumable
@@ -29,15 +36,18 @@
 #![warn(missing_docs)]
 
 pub mod cache;
+pub mod chaos;
 pub mod device;
 pub mod evaluator;
 pub mod fleet;
+pub mod fleet_state;
 pub mod matrix;
 pub mod scenario;
 pub mod tasklog;
 pub mod workflow;
 
 pub use cache::{CacheStats, CompactReport, EvalCache};
+pub use chaos::{FailureKind, FaultPlan};
 pub use device::{DeviceEvaluator, DeviceServer, EvaluatorSpec};
 pub use evaluator::{Evaluation, Evaluator};
 pub use fleet::{FleetReport, FleetRunner};

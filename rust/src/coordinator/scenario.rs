@@ -73,7 +73,9 @@ pub struct Scenario {
     pub memory_limit_gb: f64,
     /// Agent backend spec for `optimizer: "haqa"` — see
     /// [`crate::agent::backend_from_spec`]: `simulated` (default),
-    /// `simulated-slow:<ms>`, `record:<path>`, `replay:<path>`, or an
+    /// `simulated-slow:<ms>`, `record:<path>`, `replay:<path>`,
+    /// `chaos:<plan>=<inner>` (deterministic fault injection over any of
+    /// the others — see [`super::chaos`] and `docs/RESILIENCE.md`), or an
     /// `http://…` endpoint (`http-agent` feature).  Never part of the
     /// evaluation cache scope: the backend changes who proposes, not what
     /// an evaluation returns.
@@ -83,8 +85,11 @@ pub struct Scenario {
     /// (default, the in-process evaluators), `device:<profile-name>` (the
     /// in-process device-measurement server on a named
     /// [`crate::hardware::preset`] platform), `remote://host:port` (an
-    /// external measurement server), or `record:`/`replay:` transcript
-    /// wrappers.  Unlike [`Scenario::backend`], a non-simulated evaluator
+    /// external measurement server), `record:`/`replay:` transcript
+    /// wrappers, or `chaos:<plan>=<inner>` (deterministic fault injection
+    /// over any of the others — see [`super::chaos`] and
+    /// `docs/RESILIENCE.md`).  Unlike [`Scenario::backend`], a
+    /// non-simulated evaluator
     /// **is** folded into the evaluation-cache scope: it changes where a
     /// measurement comes from, so results from different devices must
     /// never collide under one key.

@@ -359,7 +359,7 @@ impl<'a> Workflow<'a> {
             // A replayed run that diverges from its recording must fail
             // loudly, not degrade to default configs (the §3.3 never-stall
             // fallback is for live backends only).
-            h.strict_errors = sc.backend.trim().starts_with("replay:");
+            h.strict_errors = crate::agent::is_replay_spec(&sc.backend);
             if kind != TaskKind::Finetune {
                 // The prompt's Fig. 2a hardware block describes the
                 // platform the scenario actually measures on — for
@@ -387,7 +387,8 @@ impl<'a> Workflow<'a> {
                     let set = self.set.ok_or_else(artifacts_error)?;
                     let e = FinetuneEvaluator::new(set, sc)?;
                     let obj = e.objective();
-                    (Box::new(e), obj, TaskKind::Finetune, RNG_FINETUNE)
+                    let ev = super::device::wrap_chaos(sc, Box::new(e))?;
+                    (ev, obj, TaskKind::Finetune, RNG_FINETUNE)
                 }
                 Track::Kernel => {
                     let (ev, obj) = kernel_evaluator_for(sc)?;
@@ -397,7 +398,8 @@ impl<'a> Workflow<'a> {
                     super::device::require_simulated(sc)?;
                     let e = BitwidthEvaluator::from_scenario(sc)?;
                     let obj = e.objective();
-                    (Box::new(e), obj, TaskKind::Bitwidth, RNG_BITWIDTH)
+                    let ev = super::device::wrap_chaos(sc, Box::new(e))?;
+                    (ev, obj, TaskKind::Bitwidth, RNG_BITWIDTH)
                 }
                 Track::Joint => bail!("joint scenarios chain three sessions — use run_joint"),
             };
@@ -417,9 +419,11 @@ impl<'a> Workflow<'a> {
     pub fn run_finetune(&self, sc: &Scenario) -> Result<TrackOutcome> {
         super::device::require_simulated(sc)?;
         let set = self.set.ok_or_else(artifacts_error)?;
-        let ev = FinetuneEvaluator::new(set, sc)?;
-        let mut opt = self.make_optimizer(sc, TaskKind::Finetune, ev.objective())?;
-        self.run_track(sc, opt.as_mut(), &ev, RNG_FINETUNE)
+        let e = FinetuneEvaluator::new(set, sc)?;
+        let obj = e.objective();
+        let ev = super::device::wrap_chaos(sc, Box::new(e))?;
+        let mut opt = self.make_optimizer(sc, TaskKind::Finetune, obj)?;
+        self.run_track(sc, opt.as_mut(), ev.as_ref(), RNG_FINETUNE)
     }
 
     /// Kernel-tuning track (Table 3): hardware latency feedback — from the
@@ -436,9 +440,11 @@ impl<'a> Workflow<'a> {
     /// cross-checked against the analytic selector.
     pub fn run_bitwidth(&self, sc: &Scenario) -> Result<TrackOutcome> {
         super::device::require_simulated(sc)?;
-        let ev = BitwidthEvaluator::from_scenario(sc)?;
-        let mut opt = self.make_optimizer(sc, TaskKind::Bitwidth, ev.objective())?;
-        self.run_track(sc, opt.as_mut(), &ev, RNG_BITWIDTH)
+        let e = BitwidthEvaluator::from_scenario(sc)?;
+        let obj = e.objective();
+        let ev = super::device::wrap_chaos(sc, Box::new(e))?;
+        let mut opt = self.make_optimizer(sc, TaskKind::Bitwidth, obj)?;
+        self.run_track(sc, opt.as_mut(), ev.as_ref(), RNG_BITWIDTH)
     }
 
     /// The joint pipeline (paper Fig. 1b / Fig. 3): fine-tune, then tune the

@@ -11,15 +11,20 @@
 //! haqa fleet <scenarios.json>  run a scenario batch across a worker pool
 //!                              (--inflight N overlaps agent queries,
 //!                               --batch N coalesces them into provider
-//!                               batches, --backend SPEC overrides the
-//!                               scenarios' agent backend, --cache-cap N
-//!                               bounds the memory cache tier)
+//!                               batches, --backend/--evaluator SPEC
+//!                               override the scenarios' specs — incl.
+//!                               chaos:<plan>=… fault injection —
+//!                               --retries N restarts transient failures,
+//!                               --resume DIR journals + resumes runs,
+//!                               --cache-cap N bounds the memory cache
+//!                               tier; first SIGINT drains gracefully)
 //! haqa scenarios gen           expand a matrix spec into a scenario batch
 //!                              (deterministic; feeds `haqa fleet`)
 //! haqa bench [--quick]         fleet/cache throughput harness → BENCH_2.json
 //!                              + agent-overlap phase → BENCH_3.json
 //!                              + provider-batching phase → BENCH_5.json
 //!                              + 10k-scenario scale phase → BENCH_6.json
+//!                              + chaos fault-overhead phase → BENCH_7.json
 //! haqa cache compact           rewrite the eval-cache journal, live entries only
 //! haqa device serve            serve the JSONL device-measurement protocol
 //! haqa device ping             hello round-trip against a device server
@@ -82,13 +87,18 @@ haqa — hardware-aware quantization agent (paper reproduction)
   haqa fleet <batch.json>   run a scenario batch on a worker pool w/ eval cache
                             (--inflight N overlaps in-flight agent queries,
                             --batch N coalesces them into provider batches,
+                            --retries N restarts transient/panicked failures,
+                            --resume DIR journals outcomes + skips completed,
+                            --backend/--evaluator SPEC override scenario specs
+                            incl. chaos:<plan>=… deterministic fault injection,
                             --cache-cap N bounds the memory cache tier; accepts
-                            a {\"matrix\": …} generator spec directly)
+                            a {\"matrix\": …} generator spec directly; the first
+                            SIGINT drains in-flight work, a second force-kills)
   haqa scenarios gen        expand a scenario-matrix spec deterministically
                             (--spec/--count/--seed/--out); feeds `haqa fleet`
   haqa bench                cold/warm serial/fleet throughput harness plus the
-                            agent-overlap, provider-batching and 10k-scenario
-                            scale phases; --help
+                            agent-overlap, provider-batching, 10k-scenario
+                            scale and chaos fault-overhead phases; --help
   haqa cache compact        rewrite the eval-cache journal keeping live entries
   haqa device serve         serve the device-measurement protocol (simulator-
                             backed stub; target of remote:// evaluator specs)
@@ -289,7 +299,10 @@ fn fleet(rest: Vec<String>) -> Result<()> {
         .opt("workers", "worker threads (default: env HAQA_WORKERS or 4)")
         .opt("inflight", "agent queries kept in flight per worker (default: env HAQA_INFLIGHT or 1)")
         .opt("batch", "coalesce up to N in-flight proposals into one provider request (default: env HAQA_BATCH or off)")
-        .opt("backend", "override every scenario's agent backend spec (e.g. replay:<journal> for the CI drift gate)")
+        .opt("backend", "override every scenario's agent backend spec (e.g. replay:<journal> for the CI drift gate, chaos:<plan>=simulated for fault injection)")
+        .opt("evaluator", "override every scenario's evaluator spec (e.g. chaos:<plan>=simulated for the CI chaos gate)")
+        .opt("retries", "restarts granted to transient/panicked scenario failures (default: env HAQA_RETRIES or 0)")
+        .opt("resume", "journal completed scenarios to DIR/fleet_state.jsonl and skip the ones already recorded there (crash-safe; same flag for the first run and every resume)")
         .opt("cache-dir", "persist the eval-cache journal here (shared across runs and processes)")
         .opt("cache-cap", "bound the in-memory cache tier to N entries, LRU-evicted (default: env HAQA_CACHE_CAP or unbounded; never changes scores)")
         .flag("no-cache", "disable the content-addressed evaluation cache")
@@ -309,12 +322,26 @@ fn fleet(rest: Vec<String>) -> Result<()> {
             sc.backend = spec.to_string();
         }
     }
+    if let Some(spec) = a.get("evaluator") {
+        // Same idea on the evaluation seam: the CI chaos gate wraps a whole
+        // committed batch in `chaos:<plan>=simulated` without editing it.
+        for sc in &mut scenarios {
+            sc.evaluator = spec.to_string();
+        }
+    }
     let workers = FleetRunner::workers_from_env(a.get_usize("workers")?)?;
     let inflight = FleetRunner::inflight_from_env(a.get_usize("inflight")?)?;
     let batch = FleetRunner::batch_from_env(a.get_usize("batch")?)?;
-    let mut runner = FleetRunner::new(workers).with_inflight(inflight);
+    let retries = FleetRunner::retries_from_env(a.get_usize("retries")?)?;
+    let mut runner = FleetRunner::new(workers)
+        .with_inflight(inflight)
+        .with_retries(retries)
+        .with_sigint_drain();
     if let Some(b) = batch {
         runner = runner.with_batch(b);
+    }
+    if let Some(dir) = a.get("resume") {
+        runner = runner.with_state_dir(std::path::Path::new(dir))?;
     }
     let cap = EvalCache::cap_from_env(a.get_usize("cache-cap")?)?;
     match (a.get("cache-dir"), cap) {
@@ -370,6 +397,30 @@ fn fleet(rest: Vec<String>) -> Result<()> {
             );
         }
     }
+    if report.resumed > 0 {
+        println!(
+            "resumed: {} scenario(s) from the fleet-state journal",
+            report.resumed
+        );
+    }
+    if let Some((records, writes)) = report.journal {
+        if records > 0 {
+            println!(
+                "fleet state: {records} record(s) in {writes} group-committed write(s)"
+            );
+        }
+    }
+    if report.faults.any() || report.faults.retries > 0 {
+        // The CI chaos gate greps this line: scores must stay bit-identical
+        // while these counters absorb the injected faults.
+        println!(
+            "resilience: {} restart(s) ({} transient, {} panicked, {} fatal)",
+            report.faults.retries,
+            report.faults.transient,
+            report.faults.panicked,
+            report.faults.fatal
+        );
+    }
     // Per-platform Pareto fronts — the paper's "counterintuitive wins":
     // a scheme that loses globally can still be the per-platform winner.
     for f in report.pareto(&scenarios) {
@@ -389,6 +440,17 @@ fn fleet(rest: Vec<String>) -> Result<()> {
         println!(
             "agent batching: {} request(s) in {} provider call(s) (max batch {})",
             st.submitted, st.provider_requests, st.max_batch
+        );
+    }
+    if report.drained {
+        // In-flight scenarios finished and were journaled; exit nonzero so
+        // harnesses notice, with the resume invocation spelled out.
+        let hint = a
+            .get("resume")
+            .map(|d| format!(" --resume {d}"))
+            .unwrap_or_default();
+        anyhow::bail!(
+            "fleet drained after SIGINT — rerun `haqa fleet {path}{hint}` to finish"
         );
     }
     if a.get_bool("check-serial") {
@@ -496,8 +558,10 @@ fn scenarios_cmd(rest: Vec<String>) -> Result<()> {
 ///   3. warm fleet  — N workers, a *new* cache instance that loads the
 ///      journal phase 2 wrote (the cross-process path, in-process).
 /// Plus a batched-measurement microbench (per-call latency-model setup vs
-/// one setup per slice), the agent-overlap phase (`BENCH_3.json`) and the
-/// provider-batching phase (`BENCH_5.json`).  Hard-fails if any phase
+/// one setup per slice), the agent-overlap phase (`BENCH_3.json`), the
+/// provider-batching phase (`BENCH_5.json`), the 10k-scenario scale phase
+/// (`BENCH_6.json`) and the chaos fault-overhead phase (`BENCH_7.json`).
+/// Hard-fails if any phase
 /// pair diverges, the warm run sees zero cache hits, overlap yields no
 /// speedup, or batching does not reduce provider requests — so CI can
 /// gate on the exit code.
@@ -524,9 +588,11 @@ fn bench_fleet(rest: Vec<String>) -> Result<()> {
         .opt_default("scale-out", "BENCH_6.json", "scale-phase report output path")
         .opt("scale-count", "generated scenario count for the scale phase (default: 10000, or 600 with --quick)")
         .opt("cache-cap", "memory-tier LRU cap for the scale phase's capped runs (default: count/8, min 64)")
+        .opt_default("chaos-out", "BENCH_7.json", "chaos fault-overhead report output path")
         .flag("skip-overlap", "skip the blocking-vs-pipelined agent-overlap phase")
         .flag("skip-batching", "skip the unbatched-vs-batched provider-request phase")
         .flag("skip-scale", "skip the generated-matrix capped-vs-unbounded scale phase")
+        .flag("skip-chaos", "skip the fault-injection overhead/bit-identity phase")
         .flag("quick", "small scenario set (CI perf smoke)")
         .parse(rest)?;
     let quick = a.get_bool("quick");
@@ -653,6 +719,14 @@ fn bench_fleet(rest: Vec<String>) -> Result<()> {
             a.get_usize("cache-cap")?,
             workers,
             a.get("scale-out").unwrap_or("BENCH_6.json"),
+        )?;
+    }
+    if !a.get_bool("skip-chaos") {
+        bench_chaos(
+            quick,
+            rounds,
+            workers,
+            a.get("chaos-out").unwrap_or("BENCH_7.json"),
         )?;
     }
     Ok(())
@@ -1054,6 +1128,121 @@ fn bench_scale(
     anyhow::ensure!(
         w_stats.hits > 0,
         "warm capped run saw zero hits — the journal tier is broken under the cap"
+    );
+    Ok(())
+}
+
+/// The chaos phase: the bench kernel/bit-width fleet three ways —
+/// fault-free, wrapped in a no-op `chaos:none=simulated` evaluator (pure
+/// wrapper overhead), and under a seeded fault plan with retries.  Emits
+/// `BENCH_7.json` and hard-fails unless (1) the no-op wrapper and the
+/// faulted run are both **bit-identical** to the fault-free baseline —
+/// injected faults and the restarts that absorb them must never change a
+/// score; (2) the faulted run actually burned restarts (the plan fired);
+/// (3) the wrapper overhead stayed within a generous noise-tolerant bound.
+fn bench_chaos(quick: bool, rounds: usize, workers: usize, out_path: &str) -> Result<()> {
+    use haqa::coordinator::FleetReport;
+    use haqa::util::json::Json;
+
+    let base = bench_scenarios(quick, rounds, "simulated");
+    let with_eval = |spec: &str| -> Vec<Scenario> {
+        base.iter()
+            .cloned()
+            .map(|mut sc| {
+                sc.evaluator = spec.to_string();
+                sc
+            })
+            .collect()
+    };
+    // Few enough injected faults that the seeded schedule (first fault at
+    // call >= 2, gaps 2..=6) always lands inside the fleet's call stream.
+    let faults = if quick { 4 } else { 8 };
+    let plan = format!("seed:7:{faults}");
+    println!(
+        "chaos: {} scenarios, plan {plan}, {workers} workers",
+        base.len()
+    );
+
+    let timed = |scenarios: &[Scenario], retries: usize| -> Result<(f64, Vec<u64>, FleetReport)> {
+        let t0 = std::time::Instant::now();
+        let report = FleetRunner::new(workers)
+            .quiet()
+            .with_retries(retries)
+            .run(scenarios);
+        let wall = t0.elapsed().as_secs_f64();
+        let mut bits = Vec::with_capacity(scenarios.len());
+        for (sc, out) in scenarios.iter().zip(&report.outcomes) {
+            let o = out.as_ref().map_err(|e| anyhow::anyhow!("{}: {e:#}", sc.name))?;
+            bits.push(o.best_score.to_bits());
+        }
+        Ok((wall, bits, report))
+    };
+
+    let (base_wall, base_bits, _) = timed(&base, 0)?;
+    println!("  fault-free   : {base_wall:8.3}s");
+    let (wrap_wall, wrap_bits, _) = timed(&with_eval("chaos:none=simulated"), 0)?;
+    println!("  chaos:none   : {wrap_wall:8.3}s");
+    let (fault_wall, fault_bits, fault_report) =
+        timed(&with_eval(&format!("chaos:{plan}=simulated")), 4)?;
+    println!(
+        "  seeded faults: {fault_wall:8.3}s  ({} restarts: {} transient, {} panicked, {} fatal)",
+        fault_report.faults.retries,
+        fault_report.faults.transient,
+        fault_report.faults.panicked,
+        fault_report.faults.fatal
+    );
+
+    let wrapper_identical = base_bits == wrap_bits;
+    let faulted_identical = base_bits == fault_bits;
+    let overhead = wrap_wall / base_wall.max(1e-9);
+    // Wall clocks in --quick mode are tens of milliseconds, so the gate
+    // tolerates scheduler noise: 3x relative OR 50ms absolute slack.
+    let overhead_ok = wrap_wall <= base_wall * 3.0 + 0.05;
+
+    let phase = |wall: f64| -> Json {
+        let mut o = Json::obj();
+        o.set("wall_s", Json::Num(wall));
+        o
+    };
+    let mut phases = Json::obj();
+    phases.set("fault_free", phase(base_wall));
+    phases.set("chaos_none", phase(wrap_wall));
+    let mut faulted = phase(fault_wall);
+    faulted.set("restarts", Json::Num(fault_report.faults.retries as f64));
+    faulted.set(
+        "transient_failures",
+        Json::Num(fault_report.faults.transient as f64),
+    );
+    phases.set("faulted", faulted);
+    let mut j = Json::obj();
+    j.set("bench", Json::str("haqa bench chaos"));
+    j.set("quick", Json::Bool(quick));
+    j.set("scenarios", Json::Num(base.len() as f64));
+    j.set("workers", Json::Num(workers as f64));
+    j.set("plan", Json::str(plan.clone()));
+    j.set("phases", phases);
+    j.set("wrapper_overhead", Json::Num(overhead));
+    j.set("wrapper_bit_identical", Json::Bool(wrapper_identical));
+    j.set("faulted_bit_identical", Json::Bool(faulted_identical));
+    std::fs::write(out_path, j.to_string_pretty())?;
+    println!("  report       : {out_path}");
+
+    anyhow::ensure!(
+        wrapper_identical,
+        "the no-op chaos wrapper changed a score — the wrapper is not transparent"
+    );
+    anyhow::ensure!(
+        faulted_identical,
+        "the faulted run diverged from the fault-free baseline — retries must \
+         restore bit-identical scores"
+    );
+    anyhow::ensure!(
+        fault_report.faults.retries > 0,
+        "the fault plan '{plan}' never fired — the chaos phase gated nothing"
+    );
+    anyhow::ensure!(
+        overhead_ok,
+        "chaos:none wrapper overhead {overhead:.2}x exceeds the noise bound"
     );
     Ok(())
 }

@@ -13,6 +13,7 @@ pub mod hash;
 pub mod json;
 pub mod jsonl;
 pub mod proptest;
+pub mod retry;
 pub mod rng;
 pub mod stats;
 pub mod table;

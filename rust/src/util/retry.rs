@@ -1,0 +1,191 @@
+//! Bounded exponential-backoff retry — the one skeleton behind every
+//! transport retry loop in the tree.
+//!
+//! Before this module the device-measurement client
+//! (`coordinator::device`) and the HTTP agent backend (`agent::http`)
+//! each hand-rolled the same loop: attempt, sleep `base * 2^(n-1)` capped
+//! at a transport-specific ceiling, try again up to a bounded retry
+//! count, and surface the last error with an `after N attempt(s)`
+//! context.  Each call site keeps its own constants (the device client
+//! retries connects with 100 ms base / 2 s cap; the HTTP client retries
+//! connects, timeouts, 429 and 5xx with 250 ms base / 4 s cap) — only the
+//! skeleton is shared, so the two policies can never drift apart
+//! structurally while staying independently tuned.
+//!
+//! The scenario-level retry policy (`haqa fleet --retries`, see
+//! [`crate::coordinator::fleet`]) reuses the same [`Backoff::delay_before`]
+//! schedule for its between-attempt sleeps.
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+/// What one attempt of a retried operation produced.
+pub enum Attempt<T> {
+    /// The operation succeeded; stop retrying.
+    Done(T),
+    /// A transient failure — retry (with backoff) if the budget allows.
+    Retry(anyhow::Error),
+    /// A permanent failure — stop immediately, never burn retries on it.
+    Fatal(anyhow::Error),
+}
+
+/// A bounded exponential-backoff policy: `retries` retries after the
+/// first attempt, sleeping `base * 2^(n-1)` before retry `n`, capped at
+/// `cap`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Backoff {
+    /// Retries after the first attempt (0 = single attempt, no retry).
+    pub retries: usize,
+    /// First backoff delay; doubles per retry.
+    pub base: Duration,
+    /// Ceiling no backoff delay exceeds.
+    pub cap: Duration,
+}
+
+impl Backoff {
+    /// Build a policy (`const` so call sites can keep theirs in a const).
+    pub const fn new(retries: usize, base: Duration, cap: Duration) -> Backoff {
+        Backoff { retries, base, cap }
+    }
+
+    /// Total attempts this policy allows (`retries + 1`).
+    pub fn attempts(&self) -> usize {
+        self.retries + 1
+    }
+
+    /// The sleep before attempt `attempt` (0-based): `None` before the
+    /// first attempt, else `base * 2^(attempt-1)` capped at `cap`.  The
+    /// shift is saturated so absurd attempt counts cannot overflow.
+    pub fn delay_before(&self, attempt: usize) -> Option<Duration> {
+        if attempt == 0 {
+            return None;
+        }
+        let exp = self.base.saturating_mul(1u32 << (attempt - 1).min(16));
+        Some(exp.min(self.cap))
+    }
+
+    /// Drive `op` under this policy: sleep per [`Backoff::delay_before`],
+    /// call `op(attempt)`, and keep going while it answers
+    /// [`Attempt::Retry`] and the budget lasts.  [`Attempt::Fatal`] stops
+    /// immediately.  Every error exit carries an `after N attempt(s)`
+    /// context where `N` counts the attempts actually made — so a fatal
+    /// first-attempt failure reads `after 1 attempt(s)`, and an exhausted
+    /// retry budget reads `after retries+1 attempt(s)` exactly as the two
+    /// pre-existing hand-rolled loops reported it.
+    pub fn run<T>(&self, mut op: impl FnMut(usize) -> Attempt<T>) -> Result<T> {
+        let mut last_err: Option<anyhow::Error> = None;
+        let mut made = 0usize;
+        for attempt in 0..=self.retries {
+            if let Some(d) = self.delay_before(attempt) {
+                std::thread::sleep(d);
+            }
+            made = attempt + 1;
+            match op(attempt) {
+                Attempt::Done(v) => return Ok(v),
+                Attempt::Retry(e) => last_err = Some(e),
+                Attempt::Fatal(e) => {
+                    last_err = Some(e);
+                    break;
+                }
+            }
+        }
+        Err(last_err
+            .unwrap_or_else(|| anyhow::anyhow!("unreachable: no attempt ran"))
+            .context(format!("after {made} attempt(s)")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const FAST: Backoff = Backoff::new(3, Duration::from_millis(1), Duration::from_millis(4));
+
+    #[test]
+    fn delay_schedule_doubles_and_caps() {
+        let b = Backoff::new(5, Duration::from_millis(100), Duration::from_secs(2));
+        assert_eq!(b.delay_before(0), None, "no sleep before the first try");
+        assert_eq!(b.delay_before(1), Some(Duration::from_millis(100)));
+        assert_eq!(b.delay_before(2), Some(Duration::from_millis(200)));
+        assert_eq!(b.delay_before(3), Some(Duration::from_millis(400)));
+        // … doubling forever would overflow; the cap bounds it.
+        assert_eq!(b.delay_before(5), Some(Duration::from_millis(1600)));
+        assert_eq!(b.delay_before(6), Some(Duration::from_secs(2)));
+        assert_eq!(b.delay_before(500), Some(Duration::from_secs(2)), "shift saturates");
+        assert_eq!(b.attempts(), 6);
+    }
+
+    #[test]
+    fn schedule_matches_the_historical_device_and_http_loops() {
+        // The two call sites this module deduplicates kept these exact
+        // constants; their per-retry sleeps must be reproduced bit-for-bit.
+        let device = Backoff::new(2, Duration::from_millis(100), Duration::from_secs(2));
+        assert_eq!(device.delay_before(1), Some(Duration::from_millis(100)));
+        assert_eq!(device.delay_before(2), Some(Duration::from_millis(200)));
+        let http = Backoff::new(3, Duration::from_millis(250), Duration::from_secs(4));
+        assert_eq!(http.delay_before(1), Some(Duration::from_millis(250)));
+        assert_eq!(http.delay_before(2), Some(Duration::from_millis(500)));
+        assert_eq!(http.delay_before(3), Some(Duration::from_millis(1000)));
+    }
+
+    #[test]
+    fn succeeds_after_transient_failures() {
+        let mut calls = 0;
+        let v = FAST
+            .run(|attempt| {
+                calls += 1;
+                if attempt < 2 {
+                    Attempt::Retry(anyhow::anyhow!("transient #{attempt}"))
+                } else {
+                    Attempt::Done(attempt)
+                }
+            })
+            .unwrap();
+        assert_eq!(v, 2);
+        assert_eq!(calls, 3);
+    }
+
+    #[test]
+    fn exhaustion_reports_total_attempts() {
+        let mut calls = 0;
+        let err = FAST
+            .run::<()>(|_| {
+                calls += 1;
+                Attempt::Retry(anyhow::anyhow!("still down"))
+            })
+            .unwrap_err();
+        assert_eq!(calls, 4, "retries + 1 attempts");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("after 4 attempt(s)"), "{msg}");
+        assert!(msg.contains("still down"), "{msg}");
+    }
+
+    #[test]
+    fn fatal_stops_immediately_and_counts_honestly() {
+        let mut calls = 0;
+        let err = FAST
+            .run::<()>(|_| {
+                calls += 1;
+                Attempt::Fatal(anyhow::anyhow!("bad request"))
+            })
+            .unwrap_err();
+        assert_eq!(calls, 1, "fatal errors never burn retries");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("after 1 attempt(s)"), "{msg}");
+    }
+
+    #[test]
+    fn zero_retry_policy_is_a_single_attempt() {
+        let b = Backoff::new(0, Duration::from_millis(1), Duration::from_millis(1));
+        let mut calls = 0;
+        let err = b
+            .run::<()>(|_| {
+                calls += 1;
+                Attempt::Retry(anyhow::anyhow!("down"))
+            })
+            .unwrap_err();
+        assert_eq!(calls, 1);
+        assert!(format!("{err:#}").contains("after 1 attempt(s)"));
+    }
+}

@@ -1,0 +1,254 @@
+//! Integration: deterministic fault injection (`chaos:` wrappers), the
+//! bounded retry policy, and crash-safe `--resume` over the fleet-state
+//! journal.
+//!
+//! The load-bearing invariant throughout: a faulted or interrupted run
+//! produces **bit-identical** scores to a clean one, differing only in the
+//! retry/fault counters of the report.  Comparisons are therefore on
+//! `best_score.to_bits()` — never on cache-hit counts, which legitimately
+//! shift when a retry replays a scenario against a warmer cache.
+//!
+//! Chaos plans are registered process-wide by plan string, so every test
+//! here uses a plan string unique to itself (distinct seeds or indices).
+
+use haqa::coordinator::scenario::Track;
+use haqa::coordinator::{FleetReport, FleetRunner, Scenario};
+
+/// Four kernel scenarios on distinct kernels (distinct evaluator scopes,
+/// so the shared cache never dedups across them and the chaos call stream
+/// stays long enough for every scheduled fault to fire).
+fn kernel_scenarios(tag: &str) -> Vec<Scenario> {
+    ["matmul:64", "softmax:128", "silu:64", "rmsnorm:1"]
+        .iter()
+        .enumerate()
+        .map(|(i, kernel)| Scenario {
+            name: format!("{tag}_{i}"),
+            track: Track::Kernel,
+            kernel: (*kernel).into(),
+            optimizer: "haqa".into(),
+            budget: 5,
+            seed: i as u64,
+            ..Scenario::default()
+        })
+        .collect()
+}
+
+fn score_bits(report: &FleetReport) -> Vec<u64> {
+    report
+        .outcomes
+        .iter()
+        .map(|o| o.as_ref().expect("scenario failed").best_score.to_bits())
+        .collect()
+}
+
+/// Acceptance (tentpole invariant): an evaluator-seam fault plan plus a
+/// retry budget yields the exact scores of a fault-free fleet; only the
+/// fault counters differ.
+#[test]
+fn faulted_evaluator_fleet_is_bit_identical_under_retries() {
+    let clean = FleetRunner::new(2).run(&kernel_scenarios("chaos_ev"));
+    assert!(!clean.faults.any(), "clean run must report no faults");
+
+    let mut faulted_scs = kernel_scenarios("chaos_ev");
+    for sc in &mut faulted_scs {
+        sc.evaluator = "chaos:seed:101:3=simulated".into();
+    }
+    let faulted = FleetRunner::new(2).with_retries(4).run(&faulted_scs);
+
+    assert_eq!(score_bits(&clean), score_bits(&faulted), "scores drifted");
+    assert!(faulted.faults.retries > 0, "no fault fired: {:?}", faulted.faults);
+    assert!(faulted.faults.transient > 0, "{:?}", faulted.faults);
+    assert_eq!(faulted.faults.fatal, 0, "{:?}", faulted.faults);
+}
+
+/// The same invariant on the **backend** seam: agent-query faults
+/// (refused connects, timeouts) restart the scenario, never change it.
+#[test]
+fn faulted_backend_fleet_is_bit_identical_under_retries() {
+    let clean = FleetRunner::new(2).run(&kernel_scenarios("chaos_be"));
+
+    let mut faulted_scs = kernel_scenarios("chaos_be");
+    for sc in &mut faulted_scs {
+        sc.backend = "chaos:seed:202:2=simulated".into();
+    }
+    let faulted = FleetRunner::new(2).with_retries(4).run(&faulted_scs);
+
+    assert_eq!(score_bits(&clean), score_bits(&faulted), "scores drifted");
+    assert!(faulted.faults.retries > 0, "no fault fired: {:?}", faulted.faults);
+    assert_eq!(faulted.faults.fatal, 0, "{:?}", faulted.faults);
+}
+
+/// A panic inside a session is caught by the worker, classified
+/// `Panicked`, and retried like a transient — the fleet survives and the
+/// score matches the clean run.
+#[test]
+fn panic_fault_is_caught_and_retried() {
+    let sc = Scenario {
+        name: "chaos_panic".into(),
+        track: Track::Kernel,
+        kernel: "matmul:64".into(),
+        budget: 3,
+        ..Scenario::default()
+    };
+    let clean = FleetRunner::new(1).run(std::slice::from_ref(&sc));
+
+    let mut faulted_sc = sc.clone();
+    faulted_sc.evaluator = "chaos:panic@2=simulated".into();
+    let faulted = FleetRunner::new(1)
+        .with_retries(2)
+        .run(std::slice::from_ref(&faulted_sc));
+
+    assert_eq!(score_bits(&clean), score_bits(&faulted));
+    assert_eq!(faulted.faults.panicked, 1, "{:?}", faulted.faults);
+    assert_eq!(faulted.faults.retries, 1, "{:?}", faulted.faults);
+}
+
+/// Failure surfacing: with `--retries 0` a transient fault is reported
+/// (fail fast is the default), and a fatal failure never consumes the
+/// retry budget no matter how large it is.
+#[test]
+fn zero_retries_and_fatal_failures_surface_immediately() {
+    // Transient fault, no retry budget: the error surfaces.
+    let mut sc = Scenario {
+        name: "chaos_surface".into(),
+        track: Track::Kernel,
+        kernel: "matmul:64".into(),
+        budget: 2,
+        ..Scenario::default()
+    };
+    sc.evaluator = "chaos:transient@1=simulated".into();
+    let report = FleetRunner::new(1).run(std::slice::from_ref(&sc));
+    let err = report.outcomes[0].as_ref().expect_err("must fail with retries=0");
+    assert!(format!("{err:#}").contains("chaos"), "{err:#}");
+    assert_eq!(report.faults.transient, 1, "{:?}", report.faults);
+    assert_eq!(report.faults.retries, 0, "{:?}", report.faults);
+
+    // Deterministic failure (bogus inner spec): retrying would reproduce
+    // it, so even a generous budget is not spent.
+    let mut fatal_sc = sc.clone();
+    fatal_sc.name = "chaos_fatal".into();
+    fatal_sc.evaluator = "chaos:none=bogus".into();
+    let report = FleetRunner::new(1)
+        .with_retries(8)
+        .run(std::slice::from_ref(&fatal_sc));
+    assert!(report.outcomes[0].is_err(), "bogus spec must fail");
+    assert_eq!(report.faults.fatal, 1, "{:?}", report.faults);
+    assert_eq!(report.faults.retries, 0, "fatal failures never retry");
+}
+
+/// A retryable failure that exhausts the budget surfaces the last error,
+/// annotated with the attempt count.
+#[test]
+fn exhausted_retry_budget_reports_the_attempt_count() {
+    let mut sc = Scenario {
+        name: "chaos_exhaust".into(),
+        track: Track::Kernel,
+        kernel: "matmul:64".into(),
+        budget: 2,
+        ..Scenario::default()
+    };
+    // Faults at calls 1 and 2: the first attempt and its single retry both
+    // fault, and the budget is spent.
+    sc.evaluator = "chaos:refuse@1,refuse@2=simulated".into();
+    let report = FleetRunner::new(1)
+        .with_retries(1)
+        .run(std::slice::from_ref(&sc));
+    let err = report.outcomes[0].as_ref().expect_err("budget exhausted");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("gave up after 2 attempt(s)"), "{msg}");
+    assert_eq!(report.faults.retries, 1, "{:?}", report.faults);
+    assert_eq!(report.faults.transient, 2, "{:?}", report.faults);
+}
+
+fn temp_state_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("haqa_it_chaos_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Full resume: a second run over a completed state directory replays
+/// every outcome from the journal — zero fresh work, bit-identical
+/// report.
+#[test]
+fn resume_replays_completed_runs_bit_identically() {
+    let dir = temp_state_dir("full");
+    let scenarios = kernel_scenarios("resume_full");
+
+    let first = FleetRunner::new(2)
+        .with_state_dir(&dir)
+        .unwrap()
+        .run(&scenarios);
+    assert_eq!(first.resumed, 0);
+    assert_eq!(first.journal, Some((4, 1)), "4 records, one group commit");
+
+    let second = FleetRunner::new(2)
+        .with_state_dir(&dir)
+        .unwrap()
+        .run(&scenarios);
+    assert_eq!(second.resumed, 4, "every scenario replayed from the journal");
+    assert_eq!(second.journal, Some((0, 0)), "nothing re-journaled");
+    assert_eq!(score_bits(&first), score_bits(&second));
+    for (a, b) in first.outcomes.iter().zip(&second.outcomes) {
+        let (a, b) = (a.as_ref().unwrap(), b.as_ref().unwrap());
+        assert_eq!(a.history.len(), b.history.len());
+        for (x, y) in a.history.iter().zip(&b.history) {
+            assert_eq!(x.score.to_bits(), y.score.to_bits(), "history drifted");
+        }
+        assert_eq!(a.cost_report, b.cost_report);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Partial resume — the interrupted-run shape: a prefix of the fleet is
+/// journaled, then the full list runs with `--resume`.  Journaled
+/// scenarios are skipped, the rest run fresh, and the merged report is
+/// bit-identical to an uninterrupted fleet.
+#[test]
+fn partial_resume_runs_only_the_missing_scenarios() {
+    let dir = temp_state_dir("partial");
+    let scenarios = kernel_scenarios("resume_part");
+    let uninterrupted = FleetRunner::new(2).run(&scenarios);
+
+    // "Crash" after the first two scenarios: journal exactly that prefix.
+    let partial = FleetRunner::new(2)
+        .with_state_dir(&dir)
+        .unwrap()
+        .run(&scenarios[..2]);
+    assert_eq!(partial.journal, Some((2, 1)));
+
+    let resumed = FleetRunner::new(2)
+        .with_state_dir(&dir)
+        .unwrap()
+        .run(&scenarios);
+    assert_eq!(resumed.resumed, 2, "the journaled prefix is skipped");
+    assert_eq!(
+        resumed.journal.map(|(records, _)| records),
+        Some(2),
+        "only the missing half is journaled"
+    );
+    assert_eq!(score_bits(&uninterrupted), score_bits(&resumed));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Editing a scenario invalidates its checkpoint: the key hashes every
+/// field, so a resumed run with a changed knob re-runs that scenario.
+#[test]
+fn resume_rekeys_on_any_scenario_edit() {
+    let dir = temp_state_dir("rekey");
+    let scenarios = kernel_scenarios("resume_rekey");
+    let first = FleetRunner::new(2)
+        .with_state_dir(&dir)
+        .unwrap()
+        .run(&scenarios);
+    assert_eq!(first.resumed, 0);
+
+    let mut edited = kernel_scenarios("resume_rekey");
+    edited[0].budget += 1; // any field edit rekeys
+    let second = FleetRunner::new(2)
+        .with_state_dir(&dir)
+        .unwrap()
+        .run(&edited);
+    assert_eq!(second.resumed, 3, "the edited scenario must re-run");
+    assert!(second.outcomes[0].is_ok());
+    let _ = std::fs::remove_dir_all(&dir);
+}

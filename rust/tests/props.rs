@@ -1,13 +1,20 @@
 //! Cross-module property tests (mini-proptest; coordinator / simulator /
-//! agent invariants).
+//! agent invariants), plus exhaustive every-byte-offset crash-truncation
+//! sweeps over both group-committed journals (`eval_cache.jsonl` and
+//! `fleet_state.jsonl`).
 
 use haqa::agent::simulated::SimulatedLlm;
 use haqa::agent::{Agent, TaskContext, TaskKind};
+use haqa::coordinator::fleet_state::{self, FleetJournal};
+use haqa::coordinator::scenario::Track;
+use haqa::coordinator::workflow::TrackOutcome;
+use haqa::coordinator::{EvalCache, FleetRunner, Scenario};
 use haqa::hardware::{kernel_latency_us, DeviceProfile, ExecConfig, KernelKind, Workload};
 use haqa::hardware::{memory, ModelProfile};
 use haqa::optimizers::Observation;
 use haqa::quant::Scheme;
 use haqa::search::spaces;
+use haqa::search::Value;
 use haqa::util::json::Json;
 use haqa::util::proptest::{check, Gen, I64Range, PairGen};
 use haqa::util::rng::Rng;
@@ -163,6 +170,189 @@ fn prop_exec_roundtrip_through_space() {
         }
         Ok(())
     });
+}
+
+/// A distinct scenario per index: name and seed both vary, so every
+/// journal record carries a different [`fleet_state::scenario_key`].
+fn trunc_scenario(i: usize) -> Scenario {
+    Scenario {
+        name: format!("trunc_{i}"),
+        seed: i as u64,
+        ..Scenario::default()
+    }
+}
+
+/// A float-heavy outcome whose payload would not survive decimal JSON —
+/// the truncation sweep doubles as a bit-exactness check on the survivors.
+fn trunc_outcome(i: usize) -> TrackOutcome {
+    let mut config = haqa::search::Config::new();
+    config.insert("lr".into(), Value::Float(0.3 + i as f64 * 1e-13));
+    config.insert("rank".into(), Value::Int(i as i64));
+    TrackOutcome {
+        history: vec![Observation {
+            config,
+            score: (i as f64 + 0.1) / 3.0,
+            extra: vec![1.0 / (i as f64 + 3.0)],
+            feedback: format!("r{i}"),
+        }],
+        best_score: (i as f64 + 0.1) / 3.0,
+        cost_report: None,
+        log_path: None,
+        cache_hits: i,
+        cache_misses: 1,
+    }
+}
+
+/// Crash-truncate `fleet_state.jsonl` at **every** byte offset inside a
+/// group-committed flush: recovery must deliver exactly the records whose
+/// terminating newline survived (plus a newline-less-but-complete tail,
+/// which append-healing legitimately recovers), count exactly one skipped
+/// line for a mid-record tear, and — after the healed reopen appends a new
+/// record — never duplicate, merge or lose anything else.
+#[test]
+fn prop_fleet_state_survives_truncation_at_every_byte() {
+    let base = std::env::temp_dir().join(format!("haqa_props_state_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&base);
+
+    let n = 6usize;
+    let full_dir = base.join("full");
+    {
+        let mut j = FleetJournal::open(&full_dir).unwrap();
+        for i in 0..n {
+            j.append(&trunc_scenario(i), &trunc_outcome(i));
+        }
+    } // drop group-commits the whole batch
+    let bytes = std::fs::read(full_dir.join(fleet_state::STATE_FILE)).unwrap();
+    // Offset just past each record's '\n': record i is complete in a
+    // prefix of length `cut` iff ends[i] <= cut.
+    let ends: Vec<usize> = bytes
+        .iter()
+        .enumerate()
+        .filter(|(_, &b)| b == b'\n')
+        .map(|(i, _)| i + 1)
+        .collect();
+    assert_eq!(ends.len(), n, "one line per record");
+
+    let (extra_sc, extra_out) = (trunc_scenario(99), trunc_outcome(99));
+    let dir = base.join("cut");
+    std::fs::create_dir_all(&dir).unwrap();
+    for cut in 0..=bytes.len() {
+        std::fs::write(dir.join(fleet_state::STATE_FILE), &bytes[..cut]).unwrap();
+        let complete = ends.iter().filter(|&&e| e <= cut).count();
+        let torn = cut > 0 && ends.binary_search(&cut).is_err();
+        // The tail is a whole record missing only its newline: healing
+        // (appending '\n') legitimately recovers it on the next load.
+        let recoverable = ends.binary_search(&(cut + 1)).is_ok();
+
+        let (map, scan) = fleet_state::load(&dir).unwrap();
+        assert_eq!(map.len(), complete, "cut={cut}");
+        assert_eq!(scan.torn_tail, torn, "cut={cut}");
+        assert_eq!(scan.skipped, usize::from(torn), "cut={cut}");
+        for i in 0..complete {
+            assert!(
+                map.contains_key(&fleet_state::scenario_key(&trunc_scenario(i))),
+                "cut={cut}: record {i} must survive"
+            );
+        }
+
+        // Reopen append-healed and journal one more outcome — the crashed
+        // run's successor. The torn line stays lost (skipped), the healed
+        // tail stays recovered, nothing duplicates.
+        {
+            let mut j = FleetJournal::open(&dir).unwrap();
+            j.append(&extra_sc, &extra_out);
+        }
+        let (map, scan) = fleet_state::load(&dir).unwrap();
+        assert!(!scan.torn_tail, "cut={cut}: reopen healed the tail");
+        assert_eq!(scan.skipped, usize::from(torn && !recoverable), "cut={cut}");
+        assert_eq!(
+            map.len(),
+            complete + usize::from(recoverable) + 1,
+            "cut={cut}: survivors + healed tail + new append"
+        );
+        assert!(map.contains_key(&fleet_state::scenario_key(&extra_sc)));
+    }
+    let _ = std::fs::remove_dir_all(&base);
+}
+
+/// The same every-byte-offset crash sweep over the eval-cache journal:
+/// `EvalCache::with_dir` must load exactly the surviving records at any
+/// truncation point, heal idempotently, and — when the fleet re-runs over
+/// the truncated tier — recompute only what was lost, bit-identically,
+/// converging the journal back to one record per key.
+#[test]
+fn prop_eval_cache_journal_survives_truncation_at_every_byte() {
+    let base = std::env::temp_dir().join(format!("haqa_props_cache_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&base);
+
+    let scenarios: Vec<Scenario> = (0..2)
+        .map(|i| Scenario {
+            name: format!("cache_trunc_{i}"),
+            track: Track::Kernel,
+            kernel: "matmul:64".into(),
+            optimizer: if i == 0 { "haqa" } else { "random" }.into(),
+            budget: 3,
+            seed: i as u64,
+            ..Scenario::default()
+        })
+        .collect();
+    let full_dir = base.join("full");
+    let full_scores: Vec<u64> = {
+        let report = FleetRunner::new(2)
+            .with_cache(EvalCache::with_dir(&full_dir).unwrap())
+            .run(&scenarios);
+        report
+            .outcomes
+            .iter()
+            .map(|o| o.as_ref().unwrap().best_score.to_bits())
+            .collect()
+    };
+    let bytes = std::fs::read(full_dir.join(haqa::coordinator::cache::JOURNAL_FILE)).unwrap();
+    let ends: Vec<usize> = bytes
+        .iter()
+        .enumerate()
+        .filter(|(_, &b)| b == b'\n')
+        .map(|(i, _)| i + 1)
+        .collect();
+    let records = ends.len();
+    assert!(records >= 4, "expected a non-trivial journal, got {records} records");
+
+    let dir = base.join("cut");
+    std::fs::create_dir_all(&dir).unwrap();
+    let journal = dir.join(haqa::coordinator::cache::JOURNAL_FILE);
+    for cut in 0..=bytes.len() {
+        std::fs::write(&journal, &bytes[..cut]).unwrap();
+        let complete = ends.iter().filter(|&&e| e <= cut).count();
+        let recoverable = ends.binary_search(&(cut + 1)).is_ok();
+        let expect = complete + usize::from(recoverable);
+        let cache = EvalCache::with_dir(&dir).unwrap();
+        assert_eq!(cache.len(), expect, "cut={cut}");
+        drop(cache);
+        // Heal-then-open is idempotent: a second open sees the same tier.
+        let again = EvalCache::with_dir(&dir).unwrap();
+        assert_eq!(again.len(), expect, "cut={cut}: reload after healing");
+    }
+
+    // At a few representative tears (clean, mid-file, mid-final-record,
+    // intact), re-run the fleet over the truncated tier: scores stay
+    // bit-identical and the journal converges back to one record per key
+    // — loaded keys are never re-appended, lost keys are re-journaled.
+    for cut in [0, bytes.len() / 3, bytes.len() - 2, bytes.len()] {
+        std::fs::write(&journal, &bytes[..cut]).unwrap();
+        let report = FleetRunner::new(2)
+            .with_cache(EvalCache::with_dir(&dir).unwrap())
+            .run(&scenarios);
+        for (o, &bits) in report.outcomes.iter().zip(&full_scores) {
+            assert_eq!(
+                o.as_ref().unwrap().best_score.to_bits(),
+                bits,
+                "cut={cut}: truncation changed a score"
+            );
+        }
+        let reloaded = EvalCache::with_dir(&dir).unwrap();
+        assert_eq!(reloaded.len(), records, "cut={cut}: no duplicates, no losses");
+    }
+    let _ = std::fs::remove_dir_all(&base);
 }
 
 #[test]
