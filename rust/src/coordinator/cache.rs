@@ -44,6 +44,12 @@
 //!   determinism recomputes.  Scores round-trip **bit-exactly** (the
 //!   authoritative fields are f64 bit patterns in hex).  See
 //!   `docs/CACHE.md`.
+//! * **Remote tier** ([`EvalCache::with_remote`], `--cache-addr` /
+//!   `HAQA_CACHE_ADDR`).  Instead of a local journal, local misses ask a
+//!   shared cache server ([`super::cache_server`]) in one batched round
+//!   trip per sweep and publish fresh evaluations back, so fleets on
+//!   *different machines* share one warm cache.  Mutually exclusive with
+//!   the disk tier — the journal lives on the server.
 //!
 //! The cache is a cheap cloneable handle shared by every worker of a
 //! fleet; counters are surfaced both globally ([`EvalCache::stats`]) and
@@ -63,6 +69,7 @@ use crate::util::hash;
 use crate::util::json::{self, Json};
 use crate::util::{jsonl, lock};
 
+use super::cache_server::RemoteCacheTier;
 use super::evaluator::{Evaluation, Evaluator};
 
 /// Memory-tier stripe count (power of two; key bits select the stripe).
@@ -116,6 +123,17 @@ pub struct CacheStats {
     /// `write` syscalls that carried those records — group commit makes
     /// this strictly smaller than `journal_records` under load.
     pub journal_writes: usize,
+    /// Local misses served by the remote cache tier (0 without
+    /// `--cache-addr`).  A remote hit also counts in [`CacheStats::hits`]:
+    /// it was served from the cache, just not from this process.
+    pub remote_hits: usize,
+    /// Keys the remote tier was asked for and did not have — each one
+    /// became a real evaluation (and was published back to the server).
+    pub remote_misses: usize,
+    /// Protocol round trips to the remote tier.  Batching keeps this far
+    /// below `remote_hits + remote_misses`: one `batch_get` per sweep plus
+    /// one pipelined `put` flight per sweep with fresh results.
+    pub remote_round_trips: usize,
 }
 
 impl CacheStats {
@@ -284,6 +302,9 @@ struct Inner {
     /// Disk tier; `None` for a purely in-memory cache.
     journal: Option<Mutex<Journal>>,
     journal_path: Option<PathBuf>,
+    /// Remote tier (`--cache-addr`); mutually exclusive with the disk
+    /// tier — the journal lives on the server.
+    remote: Option<RemoteCacheTier>,
 }
 
 impl Drop for Inner {
@@ -318,7 +339,7 @@ fn shard_cap(cap: usize, i: usize) -> usize {
 impl EvalCache {
     /// In-memory cache (no disk tier, no cap).
     pub fn new() -> EvalCache {
-        Self::build(None, None, None)
+        Self::build(None, None, None, None)
     }
 
     /// In-memory cache whose memory tier holds at most `cap` entries
@@ -326,10 +347,27 @@ impl EvalCache {
     /// tier an evicted entry is simply recomputed on its next miss — the
     /// bit-identical value, per the [`Evaluator`] determinism contract.
     pub fn bounded(cap: usize) -> EvalCache {
-        Self::build(Some(cap.max(1)), None, None)
+        Self::build(Some(cap.max(1)), None, None, None)
     }
 
-    fn build(cap: Option<usize>, journal: Option<Journal>, path: Option<PathBuf>) -> EvalCache {
+    /// Memory tier (optionally `cap`ped) in front of a **remote** cache
+    /// tier (`--cache-addr` / `HAQA_CACHE_ADDR`): local misses ask the
+    /// cache server in one batched round trip per sweep, fresh
+    /// evaluations are published back, and hot keys never re-cross the
+    /// wire.  No local journal — the authoritative disk tier lives on the
+    /// server.  Scores are bit-identical with or without the remote tier
+    /// (the wire carries f64 bit patterns and evaluators are
+    /// deterministic); only hit rates and evaluation counts change.
+    pub fn with_remote(tier: RemoteCacheTier, cap: Option<usize>) -> EvalCache {
+        Self::build(cap.map(|c| c.max(1)), None, None, Some(tier))
+    }
+
+    fn build(
+        cap: Option<usize>,
+        journal: Option<Journal>,
+        path: Option<PathBuf>,
+        remote: Option<RemoteCacheTier>,
+    ) -> EvalCache {
         EvalCache {
             inner: Arc::new(Inner {
                 shards: (0..SHARD_COUNT)
@@ -348,6 +386,7 @@ impl EvalCache {
                 capacity: cap,
                 journal: journal.map(Mutex::new),
                 journal_path: path,
+                remote,
             }),
         }
     }
@@ -377,6 +416,7 @@ impl EvalCache {
             cap.map(|c| c.max(1)),
             Some(Journal::new(file)),
             Some(path.clone()),
+            None,
         );
         cache.load_journal(&path)?;
         Ok(cache)
@@ -444,15 +484,46 @@ impl EvalCache {
     pub fn get_or_evaluate(&self, ev: &dyn Evaluator, cfg: &Config) -> Result<(Evaluation, bool)> {
         let cfg_json = ev.space().config_to_json(cfg);
         let key = Self::key(ev.track(), &ev.scope(), &cfg_json);
-        if let Some(hit) = self.lookup(key) {
+        if let Some(hit) = self.fetch(key)? {
             return Ok((hit, true));
         }
         // Evaluate outside any lock: evaluations can be expensive (training
         // runs), and determinism means a racing duplicate computes the
         // identical value, so first-write-wins is safe.
         let fresh = ev.evaluate(cfg)?;
-        self.insert(key, &fresh);
+        self.publish(key, &fresh)?;
         Ok((fresh, false))
+    }
+
+    /// Tiered lookup: the local memory tier first, then — on a local miss,
+    /// when a remote tier is attached — one `get` round trip to the cache
+    /// server.  A remote hit is admitted into the memory tier (hot keys
+    /// never re-cross the wire) and counted as a hit.
+    pub(crate) fn fetch(&self, key: u128) -> Result<Option<Evaluation>> {
+        if let Some(hit) = self.lookup(key) {
+            return Ok(Some(hit));
+        }
+        if let Some(remote) = &self.inner.remote {
+            if let Some(e) = remote.get(key)? {
+                self.store(key, &e);
+                self.inner.hits.fetch_add(1, Ordering::Relaxed);
+                return Ok(Some(e));
+            }
+        }
+        Ok(None)
+    }
+
+    /// Memoize a fresh evaluation ([`insert`](Self::insert): counted as a
+    /// miss, journaled once) and — when a remote tier is attached —
+    /// publish it to the cache server.  Losing the server-side
+    /// first-write race is fine (the racing value is bit-identical);
+    /// a *transport* failure is a hard error, like any evaluator failure.
+    pub(crate) fn publish(&self, key: u128, fresh: &Evaluation) -> Result<()> {
+        self.insert(key, fresh);
+        if let Some(remote) = &self.inner.remote {
+            remote.put_many(&[(key, fresh)])?;
+        }
+        Ok(())
     }
 
     /// Batched lookup/evaluation: misses are deduplicated within the batch
@@ -480,6 +551,28 @@ impl EvalCache {
             }
         }
         let mut fresh_by_key: HashMap<u128, Evaluation> = HashMap::new();
+        // The remote tier sees the whole sweep's misses as ONE `batch_get`
+        // round trip; keys it serves skip evaluation entirely and are
+        // admitted into the memory tier so repeats stay local.
+        if !pending.is_empty() {
+            if let Some(remote) = &self.inner.remote {
+                let miss_keys: Vec<u128> = pending.iter().map(|&(k, _)| k).collect();
+                let served = remote.batch_get(&miss_keys)?;
+                let mut still: Vec<(u128, usize)> = Vec::new();
+                for (&(key, i), slot) in pending.iter().zip(served) {
+                    match slot {
+                        Some(e) => {
+                            self.store(key, &e);
+                            self.inner.hits.fetch_add(1, Ordering::Relaxed);
+                            fresh_by_key.insert(key, e.clone());
+                            out[i] = Some((e, true));
+                        }
+                        None => still.push((key, i)),
+                    }
+                }
+                pending = still;
+            }
+        }
         if !pending.is_empty() {
             let miss_cfgs: Vec<Config> = pending.iter().map(|&(_, i)| cfgs[i].clone()).collect();
             let fresh = ev.evaluate_batch(&miss_cfgs)?;
@@ -494,6 +587,13 @@ impl EvalCache {
                 self.insert(key, e);
                 fresh_by_key.insert(key, e.clone());
                 out[i] = Some((e.clone(), false));
+            }
+            // Publish the sweep's fresh evaluations back in one pipelined
+            // flight so the next fleet (or machine) is served remotely.
+            if let Some(remote) = &self.inner.remote {
+                let records: Vec<(u128, &Evaluation)> =
+                    pending.iter().map(|&(k, _)| k).zip(&fresh).collect();
+                remote.put_many(&records)?;
             }
         }
         Ok(out
@@ -523,6 +623,10 @@ impl EvalCache {
             }
             None => (0, 0),
         };
+        let (remote_hits, remote_misses, remote_round_trips) = match &self.inner.remote {
+            Some(r) => r.counters(),
+            None => (0, 0, 0),
+        };
         CacheStats {
             hits: self.inner.hits.load(Ordering::Relaxed),
             misses: self.inner.misses.load(Ordering::Relaxed),
@@ -532,7 +636,16 @@ impl EvalCache {
             capacity: self.inner.capacity,
             journal_records,
             journal_writes,
+            remote_hits,
+            remote_misses,
+            remote_round_trips,
         }
+    }
+
+    /// The remote tier's `host:port`, if one is attached (the fleet's
+    /// stats line).
+    pub fn remote_addr(&self) -> Option<&str> {
+        self.inner.remote.as_ref().map(|r| r.addr())
     }
 
     /// Distinct keys currently held in the memory tier.
@@ -592,6 +705,33 @@ impl EvalCache {
         }
     }
 
+    /// Server-side lookup (the cache-server `get`/`batch_get` path):
+    /// touches LRU recency like any lookup but counts neither a hit nor a
+    /// miss — the server keeps its own protocol counters, and this
+    /// cache's hit/miss pair must keep meaning "served locally" /
+    /// "really evaluated".
+    pub(crate) fn peek(&self, key: u128) -> Option<Evaluation> {
+        self.shard(key).touch(key)
+    }
+
+    /// Server-side first-write-wins admit (the cache-server `put` path):
+    /// store under the cap, journal the first sight of the key, count
+    /// neither a hit nor a miss.  Returns whether this write won.  With a
+    /// disk tier the journaled set is the authority (an evicted key's
+    /// repeat put still loses); in-memory servers fall back to residency,
+    /// so after an eviction a repeat put can "win" again — harmless, the
+    /// value is bit-identical by determinism.
+    pub(crate) fn admit(&self, key: u128, e: &Evaluation) -> bool {
+        let eff = self.store(key, e);
+        if eff.newly_journaled {
+            if let Some(j) = &self.inner.journal {
+                lock(j).append(&encode_record(key, e));
+            }
+            return true;
+        }
+        self.inner.journal.is_none() && (eff.stored || eff.suppressed)
+    }
+
     /// Rewrite `<dir>/eval_cache.jsonl` keeping only live records: the
     /// first valid record per key wins (matching the in-memory
     /// first-write-wins semantics), superseded duplicates and
@@ -599,39 +739,36 @@ impl EvalCache {
     /// The rewrite is atomic (temp file + rename).  This is an **offline**
     /// maintenance pass (`haqa cache compact`): run it when no process is
     /// appending to the journal, or a concurrent append between read and
-    /// rename can be lost.
+    /// rename can be lost.  A cache *server* runs the same rewrite
+    /// **online** via [`EvalCache::rotate_journal`] (the `rotate` op),
+    /// which holds the journal lock across the swap.
     pub fn compact(dir: impl AsRef<Path>) -> Result<CompactReport> {
-        let path = dir.as_ref().join(JOURNAL_FILE);
-        let bytes = std::fs::read(&path)?;
-        let mut live: Vec<String> = Vec::new();
-        let mut seen: HashSet<u128> = HashSet::new();
-        let mut before_records = 0usize;
-        let scan = jsonl::scan(&bytes, |j, raw| match decode_record(j) {
-            Some((key, _)) => {
-                before_records += 1;
-                if seen.insert(key) {
-                    live.push(raw.to_string());
-                }
-                true
-            }
-            None => false,
-        });
-        let dropped_corrupt = scan.skipped;
-        let after_records = live.len();
-        let mut out = live.join("\n");
-        if !out.is_empty() {
-            out.push('\n');
-        }
-        let tmp = path.with_extension(format!("jsonl.compact.{}", std::process::id()));
-        std::fs::write(&tmp, out.as_bytes())?;
-        std::fs::rename(&tmp, &path)?;
-        Ok(CompactReport {
-            before_records,
-            after_records,
-            dropped_corrupt,
-            before_bytes: bytes.len() as u64,
-            after_bytes: std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0),
-        })
+        rewrite_live(&dir.as_ref().join(JOURNAL_FILE))
+    }
+
+    /// Rotate the journal generation in place — the server-side form of
+    /// [`EvalCache::compact`], safe while this process keeps appending:
+    /// under the journal lock, commit the buffered group, run the
+    /// first-write-wins rewrite (atomic temp file + rename), and reopen
+    /// the append handle onto the new file.  Concurrent `put`s block on
+    /// the lock for the duration of the rewrite; lookups are unaffected
+    /// (the memory tier never goes away).  Errors without a disk tier.
+    pub fn rotate_journal(&self) -> Result<CompactReport> {
+        let path = self.inner.journal_path.as_deref().ok_or_else(|| {
+            anyhow!("journal rotation requires a disk tier (serve with --cache-dir)")
+        })?;
+        let j = self
+            .inner
+            .journal
+            .as_ref()
+            .expect("a journal path implies a journal");
+        let mut g = lock(j);
+        g.flush();
+        let report = rewrite_live(path)?;
+        // The old handle points at the renamed-over inode; reopen onto
+        // the new generation so later appends land in the live file.
+        g.file = jsonl::open_append_healed(path)?;
+        Ok(report)
     }
 
     /// Stream every valid journal record into the memory tier (under the
@@ -656,6 +793,43 @@ impl EvalCache {
         }
         Ok(())
     }
+}
+
+/// The first-write-wins journal rewrite shared by [`EvalCache::compact`]
+/// (offline CLI pass) and [`EvalCache::rotate_journal`] (online, under
+/// the journal lock): keep the first valid record per key in order, drop
+/// superseded duplicates and corrupt lines, swap atomically.
+fn rewrite_live(path: &Path) -> Result<CompactReport> {
+    let bytes = std::fs::read(path)?;
+    let mut live: Vec<String> = Vec::new();
+    let mut seen: HashSet<u128> = HashSet::new();
+    let mut before_records = 0usize;
+    let scan = jsonl::scan(&bytes, |j, raw| match decode_record(j) {
+        Some((key, _)) => {
+            before_records += 1;
+            if seen.insert(key) {
+                live.push(raw.to_string());
+            }
+            true
+        }
+        None => false,
+    });
+    let dropped_corrupt = scan.skipped;
+    let after_records = live.len();
+    let mut out = live.join("\n");
+    if !out.is_empty() {
+        out.push('\n');
+    }
+    let tmp = path.with_extension(format!("jsonl.compact.{}", std::process::id()));
+    std::fs::write(&tmp, out.as_bytes())?;
+    std::fs::rename(&tmp, path)?;
+    Ok(CompactReport {
+        before_records,
+        after_records,
+        dropped_corrupt,
+        before_bytes: bytes.len() as u64,
+        after_bytes: std::fs::metadata(path).map(|m| m.len()).unwrap_or(0),
+    })
 }
 
 /// One journal line.  `score`/`extra` carry the authoritative f64 bit

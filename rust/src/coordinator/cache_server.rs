@@ -1,0 +1,864 @@
+//! The remote eval-cache tier: a shared warm-cache server for
+//! multi-machine fleets.
+//!
+//! PR 2's persistent journal made evaluations shareable across *runs*;
+//! sharing them across *machines* (or CI jobs) was still file-copy only,
+//! so the warm-fleet speedup never amortized across hosts.  This module
+//! closes that gap with the same JSONL/TCP idiom the device protocol
+//! ([`super::device`]) proved out:
+//!
+//! * [`CacheServer`] — `haqa cache serve`: a daemon that fronts one
+//!   authoritative journal-backed, LRU-capped [`EvalCache`] and answers
+//!   `get` / `put` / `batch_get` / `stats` / `rotate` requests, one JSON
+//!   object per `\n`-terminated line in each direction.  Scores cross the
+//!   wire as authoritative f64 bit patterns (the `docs/CACHE.md`
+//!   encoding), never as decimal text.  Concurrent `put`s on one key are
+//!   **first-write-wins** — the shard mutex serializes racing writers and
+//!   exactly one of them is told `"stored": true` — which is safe because
+//!   evaluators are deterministic: a racing duplicate carries the
+//!   bit-identical value.  A torn or malformed request is a hard error
+//!   for *that connection only* (error reply, then the server hangs up on
+//!   the confused client); every connection runs on its own handler
+//!   thread, so one client's garbage can never poison another's session.
+//! * [`RemoteCacheTier`] — the client half, layered *inside*
+//!   [`EvalCache`] (see [`EvalCache::with_remote`]) so `FleetRunner`,
+//!   `run_track` and every evaluator seam stay untouched.  The local
+//!   lock-striped memory tier sits in front: hot keys never re-cross the
+//!   wire, and one sweep of
+//!   [`EvalCache::get_or_evaluate_batch`](EvalCache::get_or_evaluate_batch)
+//!   costs at most one `batch_get` round-trip (for the batch's misses)
+//!   plus one pipelined `put` round-trip (for its fresh evaluations).
+//!   Connects are retried with bounded exponential backoff
+//!   ([`crate::util::retry::Backoff`]); once a request is on the wire, a
+//!   torn, truncated or malformed reply is a hard error — a cache
+//!   transport must fail loudly, never silently recompute around a
+//!   half-read answer.
+//! * **Generation rotation** — compaction moves server-side: the `rotate`
+//!   op runs the `haqa cache compact` first-write-wins rewrite as an
+//!   atomic temp-file + rename *while clients stay connected* (the
+//!   journal mutex briefly blocks concurrent `put`s, nothing else), then
+//!   reopens the append handle onto the new generation.  See
+//!   [`EvalCache::rotate_journal`].
+//!
+//! Because the disk tier lives on the server, a fleet must pick one:
+//! `--cache-addr` (remote tier) or `--cache-dir` (local journal) — both
+//! at once is a hard error, not a silent preference.
+//!
+//! ## Wire format
+//!
+//! Requests (one per line; `v` is [`PROTOCOL_VERSION`]):
+//!
+//! ```json
+//! {"op":"get","v":1,"key":"00f3…"}
+//! {"op":"batch_get","v":1,"keys":["00f3…","a81c…"]}
+//! {"op":"put","v":1,"key":"00f3…","result":{"score":-36.86,"bits":"c042…","feedback":"…"}}
+//! {"op":"stats","v":1}
+//! {"op":"rotate","v":1}
+//! ```
+//!
+//! Replies: `{"ok":true,"found":true,"result":{…}}` /
+//! `{"ok":true,"found":false}` for `get`;
+//! `{"ok":true,"results":[{…},null,…]}` for `batch_get` (`results[i]`
+//! corresponds to `keys[i]`, `null` = not cached);
+//! `{"ok":true,"stored":bool}` for `put` (`false` = a first write already
+//! won); server counters plus the current `generation` for `stats`; the
+//! [`CompactReport`] numbers plus the new `generation` for `rotate`.
+//! Every failure is an `{"ok":false,"error":"…"}` reply followed by the
+//! server closing that connection.
+//!
+//! ## Crash windows
+//!
+//! `put`s are group-committed to the server's journal exactly like local
+//! appends (`docs/CACHE.md`): a server crash loses at most the unflushed
+//! group, which determinism recomputes.  The memory tier answers `get`s
+//! for buffered records in the meantime, so clients never observe the
+//! window.  An entry evicted by the server's LRU cap answers
+//! `found:false` — the client recomputes the bit-identical value and
+//! `put`s it back, so a cap (server- or client-side) only ever changes
+//! hit rates, never scores.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::sync::Mutex;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::util::hash;
+use crate::util::json::{self, Json};
+use crate::util::lock;
+use crate::util::retry::{Attempt, Backoff};
+
+use super::cache::EvalCache;
+use super::device::{decode_result, encode_result, snip, BACKOFF_CAP};
+use super::evaluator::Evaluation;
+
+/// Wire-protocol version sent in every request and `stats` reply.
+pub const PROTOCOL_VERSION: f64 = 1.0;
+
+/// Default `haqa cache serve` bind address (the device server owns 7434).
+pub const DEFAULT_CACHE_ADDR: &str = "127.0.0.1:7435";
+
+// ---- the address knob -------------------------------------------------------
+
+/// Resolve the remote cache endpoint: explicit CLI value, else
+/// `HAQA_CACHE_ADDR`, else `None` (no remote tier).  House knob rules: the
+/// CLI wins over the environment, and a malformed `host:port` from either
+/// source is a hard error naming the offending value — never a silent
+/// "run without the shared cache".
+pub fn addr_from_env(cli: Option<&str>) -> Result<Option<String>> {
+    match cli {
+        Some(v) => Ok(Some(
+            validate_addr(v).with_context(|| format!("--cache-addr '{}'", v.trim()))?,
+        )),
+        None => match std::env::var("HAQA_CACHE_ADDR") {
+            Ok(v) => Ok(Some(validate_addr(&v).with_context(|| {
+                format!("HAQA_CACHE_ADDR '{}'", v.trim())
+            })?)),
+            Err(_) => Ok(None),
+        },
+    }
+}
+
+/// Validate a `host:port` endpoint spec and return it trimmed.
+fn validate_addr(spec: &str) -> Result<String> {
+    let spec = spec.trim();
+    let (host, port) = spec
+        .rsplit_once(':')
+        .ok_or_else(|| anyhow!("expected host:port"))?;
+    ensure!(!host.is_empty(), "empty host (expected host:port)");
+    port.parse::<u16>()
+        .map_err(|_| anyhow!("bad port '{port}' (expected host:port)"))?;
+    Ok(spec.to_string())
+}
+
+// ---- the client -------------------------------------------------------------
+
+/// One persistent client connection: requests and pipelined replies share
+/// the stream, so a sweep's `put`s cost one flush + one read loop.
+struct Conn {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Conn {
+    fn new(stream: TcpStream, timeout: Duration) -> Result<Conn> {
+        stream.set_read_timeout(Some(timeout))?;
+        stream.set_write_timeout(Some(timeout))?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Conn {
+            reader,
+            writer: stream,
+        })
+    }
+
+    /// Write every request line, flush once, then read exactly one reply
+    /// line per request.  Any failure past the write is a hard error —
+    /// the requests may have reached the server.
+    fn exchange(&mut self, requests: &[String]) -> Result<Vec<String>> {
+        let mut out = String::new();
+        for r in requests {
+            out.push_str(r);
+            out.push('\n');
+        }
+        self.writer.write_all(out.as_bytes())?;
+        self.writer.flush()?;
+        let mut replies = Vec::with_capacity(requests.len());
+        for _ in requests {
+            let mut line = String::new();
+            let n = self
+                .reader
+                .read_line(&mut line)
+                .context("reading cache-server reply")?;
+            ensure!(n > 0, "cache server closed the connection before replying");
+            ensure!(
+                line.ends_with('\n'),
+                "torn cache-server reply (connection closed mid-line): {}",
+                snip(&line)
+            );
+            replies.push(line);
+        }
+        Ok(replies)
+    }
+}
+
+/// The client half of the remote cache tier (see the module docs).
+///
+/// Construction never touches the network; the first request dials with
+/// bounded exponential backoff and the connection is then kept for the
+/// process lifetime (re-dialed only after a transport error surfaced).
+/// Use [`EvalCache::with_remote`] to layer it under the local memory
+/// tier — the tier is not meant to be queried directly by fleet code.
+pub struct RemoteCacheTier {
+    /// Verbatim `host:port` (error contexts and the fleet's stats line).
+    label: String,
+    host: String,
+    port: u16,
+    timeout: Duration,
+    max_retries: usize,
+    backoff_base: Duration,
+    conn: Mutex<Option<Conn>>,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+    round_trips: AtomicUsize,
+}
+
+impl RemoteCacheTier {
+    /// Build a tier pointing at `host:port` (as validated by
+    /// [`addr_from_env`]).  Offline: nothing connects until the first
+    /// lookup.
+    pub fn new(spec: &str) -> Result<RemoteCacheTier> {
+        let spec = validate_addr(spec)?;
+        let (host, port) = spec.rsplit_once(':').expect("validated above");
+        Ok(RemoteCacheTier {
+            label: spec.clone(),
+            host: host.to_string(),
+            port: port.parse().expect("validated above"),
+            timeout: Duration::from_secs(10),
+            max_retries: 2,
+            backoff_base: Duration::from_millis(100),
+            conn: Mutex::new(None),
+            hits: AtomicUsize::new(0),
+            misses: AtomicUsize::new(0),
+            round_trips: AtomicUsize::new(0),
+        })
+    }
+
+    /// The `host:port` this tier talks to.
+    pub fn addr(&self) -> &str {
+        &self.label
+    }
+
+    /// (remote hits, remote misses, round trips) — folded into
+    /// [`super::cache::CacheStats`] by [`EvalCache::stats`].
+    pub(crate) fn counters(&self) -> (usize, usize, usize) {
+        (
+            self.hits.load(Ordering::Relaxed),
+            self.misses.load(Ordering::Relaxed),
+            self.round_trips.load(Ordering::Relaxed),
+        )
+    }
+
+    fn dial(&self) -> Result<Conn> {
+        let addr: SocketAddr = (self.host.as_str(), self.port)
+            .to_socket_addrs()
+            .with_context(|| format!("resolving {}", self.label))?
+            .next()
+            .ok_or_else(|| anyhow!("cannot resolve {}", self.label))?;
+        Backoff::new(self.max_retries, self.backoff_base, BACKOFF_CAP).run(|_| {
+            match TcpStream::connect_timeout(&addr, self.timeout) {
+                Ok(stream) => match Conn::new(stream, self.timeout) {
+                    Ok(conn) => Attempt::Done(conn),
+                    Err(e) => Attempt::Fatal(e),
+                },
+                Err(e) => {
+                    Attempt::Retry(anyhow::Error::from(e).context(format!("connecting to {addr}")))
+                }
+            }
+        })
+    }
+
+    /// One round trip on the persistent connection (dialing it first if
+    /// needed).  A transport error drops the connection — the *next* call
+    /// re-dials — and surfaces as a hard error to this one: once the
+    /// requests are on the wire nothing is retried.
+    fn round_trip(&self, requests: &[String]) -> Result<Vec<String>> {
+        let mut g = lock(&self.conn);
+        if g.is_none() {
+            *g = Some(
+                self.dial()
+                    .with_context(|| format!("cache server {}", self.label))?,
+            );
+        }
+        self.round_trips.fetch_add(1, Ordering::Relaxed);
+        let conn = g.as_mut().expect("dialed above");
+        match conn.exchange(requests) {
+            Ok(replies) => Ok(replies),
+            Err(e) => {
+                *g = None;
+                Err(e.context(format!("cache server {}", self.label)))
+            }
+        }
+    }
+
+    /// Look one key up (`get`).  `Ok(None)` = not cached server-side.
+    pub(crate) fn get(&self, key: u128) -> Result<Option<Evaluation>> {
+        let mut o = Json::obj();
+        o.set("op", Json::str("get"));
+        o.set("v", Json::Num(PROTOCOL_VERSION));
+        o.set("key", Json::str(hash::hex128(key)));
+        let reply = self.round_trip(&[o.to_string()])?.pop().expect("one reply");
+        let j = parse_ok_reply(&reply)?;
+        let found = match j.get("found").and_then(|v| v.as_bool()) {
+            Some(f) => f,
+            None => bail!(
+                "malformed cache-server reply (no \"found\"): {}",
+                snip(&reply)
+            ),
+        };
+        let slot = if found {
+            let r = j.get("result").ok_or_else(|| {
+                anyhow!("malformed cache-server reply (no \"result\"): {}", snip(&reply))
+            })?;
+            Some(decode_result(r).ok_or_else(|| {
+                anyhow!("malformed cache record in cache-server reply: {}", snip(&reply))
+            })?)
+        } else {
+            None
+        };
+        self.count(&[slot.is_some()]);
+        Ok(slot)
+    }
+
+    /// Look many keys up in **one** round trip (`batch_get`); `result[i]`
+    /// corresponds to `keys[i]`, `None` = not cached server-side.
+    pub(crate) fn batch_get(&self, keys: &[u128]) -> Result<Vec<Option<Evaluation>>> {
+        if keys.is_empty() {
+            return Ok(Vec::new());
+        }
+        let mut o = Json::obj();
+        o.set("op", Json::str("batch_get"));
+        o.set("v", Json::Num(PROTOCOL_VERSION));
+        o.set(
+            "keys",
+            Json::Arr(keys.iter().map(|&k| Json::str(hash::hex128(k))).collect()),
+        );
+        let reply = self.round_trip(&[o.to_string()])?.pop().expect("one reply");
+        let j = parse_ok_reply(&reply)?;
+        let results = j.get("results").and_then(|v| v.as_arr()).ok_or_else(|| {
+            anyhow!("malformed cache-server reply (no \"results\"): {}", snip(&reply))
+        })?;
+        ensure!(
+            results.len() == keys.len(),
+            "cache server returned {} result(s) for a batch of {}",
+            results.len(),
+            keys.len()
+        );
+        let out: Vec<Option<Evaluation>> = results
+            .iter()
+            .map(|r| match r {
+                Json::Null => Ok(None),
+                other => decode_result(other).map(Some).ok_or_else(|| {
+                    anyhow!("malformed cache record in cache-server reply: {}", snip(&reply))
+                }),
+            })
+            .collect::<Result<_>>()?;
+        let found: Vec<bool> = out.iter().map(|s| s.is_some()).collect();
+        self.count(&found);
+        Ok(out)
+    }
+
+    /// Publish fresh evaluations in **one** pipelined round trip (`put`
+    /// per record, replies read back in order).  Returns how many of them
+    /// won the first write — losing a race is not an error, the racing
+    /// value is bit-identical by evaluator determinism.
+    pub(crate) fn put_many(&self, records: &[(u128, &Evaluation)]) -> Result<usize> {
+        if records.is_empty() {
+            return Ok(0);
+        }
+        let requests: Vec<String> = records
+            .iter()
+            .map(|&(key, e)| {
+                let mut o = Json::obj();
+                o.set("op", Json::str("put"));
+                o.set("v", Json::Num(PROTOCOL_VERSION));
+                o.set("key", Json::str(hash::hex128(key)));
+                o.set("result", encode_result(e));
+                o.to_string()
+            })
+            .collect();
+        let replies = self.round_trip(&requests)?;
+        let mut stored = 0usize;
+        for reply in &replies {
+            let j = parse_ok_reply(reply)?;
+            match j.get("stored").and_then(|v| v.as_bool()) {
+                Some(true) => stored += 1,
+                Some(false) => {}
+                None => bail!(
+                    "malformed cache-server reply (no \"stored\"): {}",
+                    snip(reply)
+                ),
+            }
+        }
+        Ok(stored)
+    }
+
+    fn count(&self, found: &[bool]) {
+        let hits = found.iter().filter(|&&f| f).count();
+        self.hits.fetch_add(hits, Ordering::Relaxed);
+        self.misses.fetch_add(found.len() - hits, Ordering::Relaxed);
+    }
+}
+
+/// Parse one reply line and unwrap the `{"ok":…}` envelope: a server-side
+/// error becomes a hard client error carrying the server's message.
+fn parse_ok_reply(line: &str) -> Result<Json> {
+    let j = json::parse(line.trim_end())
+        .map_err(|e| anyhow!("malformed cache-server reply ({e}): {}", snip(line)))?;
+    match j.get("ok").and_then(|v| v.as_bool()) {
+        Some(true) => Ok(j),
+        Some(false) => {
+            let msg = j
+                .get("error")
+                .and_then(|v| v.as_str())
+                .unwrap_or("unspecified error");
+            bail!("cache server error: {msg}")
+        }
+        None => bail!("malformed cache-server reply (no \"ok\"): {}", snip(line)),
+    }
+}
+
+// ---- the server -------------------------------------------------------------
+
+/// Server-side counters + the cache they describe (shared by every
+/// connection handler thread).
+struct ServerState {
+    cache: EvalCache,
+    /// Journal generation: bumped by every successful `rotate`.
+    generation: AtomicUsize,
+    /// Keys asked for across `get`/`batch_get`.
+    gets: AtomicUsize,
+    /// Keys answered from the cache.
+    hits: AtomicUsize,
+    /// Records offered by `put`.
+    puts: AtomicUsize,
+    /// `put`s that won the first write.
+    stored: AtomicUsize,
+}
+
+/// The shared warm-cache server behind `haqa cache serve` (see the module
+/// docs for the wire format and semantics).
+///
+/// Binds a `TcpListener`, answers the protocol on a background accept
+/// thread — one handler thread per connection, many requests per
+/// connection — and fronts the [`EvalCache`] it was spawned with.  The
+/// bench distributed phase spawns one in-process on an ephemeral port;
+/// `haqa cache serve` runs the same server in the foreground.
+pub struct CacheServer {
+    addr: SocketAddr,
+    state: Arc<ServerState>,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl CacheServer {
+    /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral port) and serve
+    /// `cache` on a background thread.
+    pub fn spawn(bind: &str, cache: EvalCache) -> Result<CacheServer> {
+        let listener = TcpListener::bind(bind).with_context(|| format!("binding {bind}"))?;
+        let addr = listener.local_addr()?;
+        let state = Arc::new(ServerState {
+            cache,
+            generation: AtomicUsize::new(0),
+            gets: AtomicUsize::new(0),
+            hits: AtomicUsize::new(0),
+            puts: AtomicUsize::new(0),
+            stored: AtomicUsize::new(0),
+        });
+        let stop = Arc::new(AtomicBool::new(false));
+        let (state2, stop2) = (Arc::clone(&state), Arc::clone(&stop));
+        let handle = std::thread::spawn(move || accept_loop(listener, state2, stop2));
+        Ok(CacheServer {
+            addr,
+            state,
+            stop,
+            handle: Some(handle),
+        })
+    }
+
+    /// The bound address (queried for ephemeral-port binds).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Rotate the journal generation in place (the `rotate` op, callable
+    /// directly when the server is in-process): flush, first-write-wins
+    /// rewrite, atomic rename, reopen.  Errors when the fronted cache has
+    /// no disk tier.
+    pub fn rotate(&self) -> Result<super::cache::CompactReport> {
+        let report = self.state.cache.rotate_journal()?;
+        self.state.generation.fetch_add(1, Ordering::Relaxed);
+        Ok(report)
+    }
+
+    /// Commit the fronted cache's buffered journal group now (`haqa cache
+    /// serve` does this on shutdown via [`EvalCache`]'s drop; tests and
+    /// the bench call it at phase boundaries).
+    pub fn flush(&self) {
+        self.state.cache.flush_journal();
+    }
+}
+
+impl Drop for CacheServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Unblock the accept loop with a throwaway connection.
+        let _ = TcpStream::connect_timeout(&self.addr, Duration::from_millis(200));
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+        // Handler threads may still hold cache handles; commit what this
+        // handle can see so a clean shutdown never loses a full group.
+        self.state.cache.flush_journal();
+    }
+}
+
+fn accept_loop(listener: TcpListener, state: Arc<ServerState>, stop: Arc<AtomicBool>) {
+    for conn in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        if let Ok(stream) = conn {
+            let state = Arc::clone(&state);
+            std::thread::spawn(move || handle_conn(stream, &state));
+        }
+    }
+}
+
+/// Serve one client until it hangs up — or until it sends garbage: any
+/// erroring request gets an `{"ok":false,…}` reply and then the
+/// connection is closed (a per-connection hard error).  A half-written
+/// final line (client died mid-request) is simply dropped.
+fn handle_conn(stream: TcpStream, state: &ServerState) {
+    // An idle client is dropped rather than pinning the handler thread.
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
+    let Ok(read_half) = stream.try_clone() else {
+        return;
+    };
+    let mut reader = BufReader::new(read_half);
+    let mut write_half = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => break,
+            Ok(_) => {
+                let trimmed = line.trim();
+                if trimmed.is_empty() {
+                    continue;
+                }
+                let (mut resp, hard_error) = match handle_request(state, trimmed) {
+                    Ok(j) => (j.to_string(), false),
+                    Err(e) => {
+                        let mut o = Json::obj();
+                        o.set("ok", Json::Bool(false));
+                        o.set("error", Json::str(format!("{e:#}")));
+                        (o.to_string(), true)
+                    }
+                };
+                resp.push('\n');
+                if write_half
+                    .write_all(resp.as_bytes())
+                    .and_then(|()| write_half.flush())
+                    .is_err()
+                    || hard_error
+                {
+                    break;
+                }
+            }
+            Err(_) => break,
+        }
+    }
+}
+
+/// Dispatch one request line to one reply body (the caller wraps errors
+/// into `{"ok":false,…}` and closes the connection).
+fn handle_request(state: &ServerState, line: &str) -> Result<Json> {
+    let j = json::parse(line).map_err(|e| anyhow!("malformed request JSON: {e}"))?;
+    match j.get("op").and_then(|v| v.as_str()) {
+        Some("get") => handle_get(state, &j),
+        Some("batch_get") => handle_batch_get(state, &j),
+        Some("put") => handle_put(state, &j),
+        Some("stats") => Ok(stats_reply(state)),
+        Some("rotate") => handle_rotate(state),
+        Some(other) => Err(anyhow!("unknown op '{other}'")),
+        None => Err(anyhow!("request has no \"op\"")),
+    }
+}
+
+fn parse_key(j: &Json, field: &str) -> Result<u128> {
+    let s = j
+        .get(field)
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| anyhow!("request has no \"{field}\" string"))?;
+    hash::parse_hex128(s).ok_or_else(|| anyhow!("bad cache key '{s}' (expected 128-bit hex)"))
+}
+
+fn serve_key(state: &ServerState, key: u128) -> Option<Evaluation> {
+    state.gets.fetch_add(1, Ordering::Relaxed);
+    let found = state.cache.peek(key);
+    if found.is_some() {
+        state.hits.fetch_add(1, Ordering::Relaxed);
+    }
+    found
+}
+
+fn handle_get(state: &ServerState, j: &Json) -> Result<Json> {
+    let key = parse_key(j, "key")?;
+    let mut o = Json::obj();
+    o.set("ok", Json::Bool(true));
+    match serve_key(state, key) {
+        Some(e) => {
+            o.set("found", Json::Bool(true));
+            o.set("result", encode_result(&e));
+        }
+        None => o.set("found", Json::Bool(false)),
+    }
+    Ok(o)
+}
+
+fn handle_batch_get(state: &ServerState, j: &Json) -> Result<Json> {
+    let keys = j
+        .get("keys")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| anyhow!("request has no \"keys\" array"))?;
+    let mut results = Vec::with_capacity(keys.len());
+    for (i, kj) in keys.iter().enumerate() {
+        let s = kj
+            .as_str()
+            .ok_or_else(|| anyhow!("key #{i} is not a string"))?;
+        let key = hash::parse_hex128(s)
+            .ok_or_else(|| anyhow!("bad cache key #{i} '{s}' (expected 128-bit hex)"))?;
+        results.push(match serve_key(state, key) {
+            Some(e) => encode_result(&e),
+            None => Json::Null,
+        });
+    }
+    let mut o = Json::obj();
+    o.set("ok", Json::Bool(true));
+    o.set("results", Json::Arr(results));
+    Ok(o)
+}
+
+fn handle_put(state: &ServerState, j: &Json) -> Result<Json> {
+    let key = parse_key(j, "key")?;
+    let r = j
+        .get("result")
+        .ok_or_else(|| anyhow!("request has no \"result\""))?;
+    let e = decode_result(r).ok_or_else(|| anyhow!("malformed \"result\" record"))?;
+    state.puts.fetch_add(1, Ordering::Relaxed);
+    let won = state.cache.admit(key, &e);
+    if won {
+        state.stored.fetch_add(1, Ordering::Relaxed);
+    }
+    let mut o = Json::obj();
+    o.set("ok", Json::Bool(true));
+    o.set("stored", Json::Bool(won));
+    Ok(o)
+}
+
+fn stats_reply(state: &ServerState) -> Json {
+    let mut o = Json::obj();
+    o.set("ok", Json::Bool(true));
+    o.set("server", Json::str("haqa-cache-server"));
+    o.set("v", Json::Num(PROTOCOL_VERSION));
+    o.set(
+        "generation",
+        Json::Num(state.generation.load(Ordering::Relaxed) as f64),
+    );
+    o.set("entries", Json::Num(state.cache.len() as f64));
+    o.set("gets", Json::Num(state.gets.load(Ordering::Relaxed) as f64));
+    o.set("hits", Json::Num(state.hits.load(Ordering::Relaxed) as f64));
+    o.set("puts", Json::Num(state.puts.load(Ordering::Relaxed) as f64));
+    o.set(
+        "stored",
+        Json::Num(state.stored.load(Ordering::Relaxed) as f64),
+    );
+    o
+}
+
+fn handle_rotate(state: &ServerState) -> Result<Json> {
+    let report = state.cache.rotate_journal()?;
+    let generation = state.generation.fetch_add(1, Ordering::Relaxed) + 1;
+    let mut o = Json::obj();
+    o.set("ok", Json::Bool(true));
+    o.set("generation", Json::Num(generation as f64));
+    o.set("before_records", Json::Num(report.before_records as f64));
+    o.set("after_records", Json::Num(report.after_records as f64));
+    o.set("dropped_corrupt", Json::Num(report.dropped_corrupt as f64));
+    o.set("before_bytes", Json::Num(report.before_bytes as f64));
+    o.set("after_bytes", Json::Num(report.after_bytes as f64));
+    Ok(o)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::cache::JOURNAL_FILE;
+
+    fn temp_dir(tag: &str) -> std::path::PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("haqa_cache_srv_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn eval(score: f64) -> Evaluation {
+        Evaluation {
+            score,
+            extra: vec![score * 2.0],
+            feedback: "{\"note\": \"wire\"}".into(),
+        }
+    }
+
+    fn tier(addr: SocketAddr) -> RemoteCacheTier {
+        let mut t = RemoteCacheTier::new(&addr.to_string()).unwrap();
+        t.max_retries = 0;
+        t.timeout = Duration::from_secs(2);
+        t
+    }
+
+    /// A raw line-oriented client for speaking the protocol directly.
+    fn raw_request(addr: SocketAddr, line: &str) -> Json {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream.write_all(line.as_bytes()).unwrap();
+        stream.write_all(b"\n").unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut reply = String::new();
+        reader.read_line(&mut reply).unwrap();
+        json::parse(reply.trim()).unwrap()
+    }
+
+    #[test]
+    fn addr_knob_follows_house_rules() {
+        assert_eq!(addr_from_env(None).unwrap(), None, "off by default");
+        assert_eq!(
+            addr_from_env(Some("farm.local:7435")).unwrap(),
+            Some("farm.local:7435".to_string())
+        );
+        for bad in ["", "hostonly", ":7435", "host:", "host:notaport", "host:99999"] {
+            assert!(addr_from_env(Some(bad)).is_err(), "'{bad}' must be a hard error");
+        }
+        // Env fallback with hard-error parsing (serialized in one test,
+        // like the HAQA_CACHE_CAP tests).
+        std::env::set_var("HAQA_CACHE_ADDR", "10.0.0.9:7435");
+        let ok = addr_from_env(None);
+        std::env::remove_var("HAQA_CACHE_ADDR");
+        assert_eq!(ok.unwrap(), Some("10.0.0.9:7435".to_string()));
+
+        std::env::set_var("HAQA_CACHE_ADDR", "not-an-endpoint");
+        let err = addr_from_env(None);
+        std::env::remove_var("HAQA_CACHE_ADDR");
+        let msg = format!("{:#}", err.expect_err("garbage must not be swallowed"));
+        assert!(msg.contains("HAQA_CACHE_ADDR") && msg.contains("not-an-endpoint"), "{msg}");
+
+        std::env::set_var("HAQA_CACHE_ADDR", "ignored:1");
+        let ok = addr_from_env(Some("cli:2"));
+        std::env::remove_var("HAQA_CACHE_ADDR");
+        assert_eq!(ok.unwrap(), Some("cli:2".to_string()), "CLI wins over env");
+    }
+
+    #[test]
+    fn wire_round_trip_get_put_batch_get_stats() {
+        let server = CacheServer::spawn("127.0.0.1:0", EvalCache::new()).unwrap();
+        let t = tier(server.addr());
+        assert_eq!(t.get(42).unwrap(), None, "empty server misses");
+        assert_eq!(t.put_many(&[(42, &eval(-1.5))]).unwrap(), 1, "first write wins");
+        assert_eq!(t.put_many(&[(42, &eval(-1.5))]).unwrap(), 0, "second write loses");
+        let got = t.get(42).unwrap().expect("served");
+        assert_eq!(got.score.to_bits(), (-1.5f64).to_bits(), "bit-exact over the wire");
+        assert_eq!(got.extra[0].to_bits(), (-3.0f64).to_bits());
+        assert_eq!(got.feedback, "{\"note\": \"wire\"}");
+        // Batch: results[i] corresponds to keys[i], null = miss.
+        let out = t.batch_get(&[7, 42, 7]).unwrap();
+        assert_eq!(out[0], None);
+        assert_eq!(out[1].as_ref().unwrap().score.to_bits(), (-1.5f64).to_bits());
+        assert_eq!(out[2], None);
+        let (hits, misses, trips) = t.counters();
+        assert_eq!((hits, misses), (2, 3));
+        assert_eq!(trips, 5, "each call here was one round trip");
+        // Server-side counters over the wire.
+        let st = raw_request(server.addr(), "{\"op\":\"stats\",\"v\":1}");
+        assert_eq!(st.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(st.req_str("server").unwrap(), "haqa-cache-server");
+        assert_eq!(st.req_f64("entries").unwrap(), 1.0);
+        assert_eq!(st.req_f64("gets").unwrap(), 5.0);
+        assert_eq!(st.req_f64("hits").unwrap(), 2.0);
+        assert_eq!(st.req_f64("puts").unwrap(), 2.0);
+        assert_eq!(st.req_f64("stored").unwrap(), 1.0);
+        assert_eq!(st.req_f64("generation").unwrap(), 0.0);
+    }
+
+    #[test]
+    fn malformed_request_is_a_per_connection_hard_error() {
+        let server = CacheServer::spawn("127.0.0.1:0", EvalCache::new()).unwrap();
+        let mut stream = TcpStream::connect(server.addr()).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        stream.write_all(b"this is not json\n").unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut reply = String::new();
+        reader.read_line(&mut reply).unwrap();
+        let j = json::parse(reply.trim()).unwrap();
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(false));
+        assert!(j.req_str("error").unwrap().contains("malformed request JSON"));
+        // …and the server hung up on this connection afterwards.
+        let mut eof = String::new();
+        assert_eq!(reader.read_line(&mut eof).unwrap(), 0, "connection closed");
+        // Other clients are unaffected: the server still serves.
+        let t = tier(server.addr());
+        t.put_many(&[(9, &eval(2.0))]).unwrap();
+        assert!(t.get(9).unwrap().is_some());
+        // Unknown ops and bad keys are per-connection hard errors too.
+        let j = raw_request(server.addr(), "{\"op\":\"evict\",\"v\":1}");
+        assert!(j.req_str("error").unwrap().contains("unknown op"));
+        let j = raw_request(server.addr(), "{\"op\":\"get\",\"v\":1,\"key\":\"xyz\"}");
+        assert!(j.req_str("error").unwrap().contains("bad cache key"));
+    }
+
+    #[test]
+    fn rotate_rewrites_the_journal_in_place() {
+        let dir = temp_dir("rotate");
+        let server =
+            CacheServer::spawn("127.0.0.1:0", EvalCache::with_dir(&dir).unwrap()).unwrap();
+        let t = tier(server.addr());
+        t.put_many(&[(1, &eval(1.0)), (2, &eval(2.0))]).unwrap();
+        // A duplicate put loses in memory but the journal never saw it
+        // (the journaled set gates appends), so rotation keeps 2 records.
+        t.put_many(&[(1, &eval(1.0))]).unwrap();
+        let r = raw_request(server.addr(), "{\"op\":\"rotate\",\"v\":1}");
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(r.req_f64("generation").unwrap(), 1.0);
+        assert_eq!(r.req_f64("before_records").unwrap(), 2.0);
+        assert_eq!(r.req_f64("after_records").unwrap(), 2.0);
+        // Appends after the rotation land in the *new* generation file.
+        t.put_many(&[(3, &eval(3.0))]).unwrap();
+        server.flush();
+        let reloaded = EvalCache::with_dir(&dir).unwrap();
+        assert_eq!(reloaded.len(), 3, "pre- and post-rotation records both live");
+        drop(reloaded);
+        // Rotating through the in-process handle works too.
+        let report = server.rotate().unwrap();
+        assert_eq!(report.after_records, 3);
+        let st = raw_request(server.addr(), "{\"op\":\"stats\",\"v\":1}");
+        assert_eq!(st.req_f64("generation").unwrap(), 2.0);
+        drop(server);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn rotate_without_a_disk_tier_is_an_error_reply() {
+        let server = CacheServer::spawn("127.0.0.1:0", EvalCache::new()).unwrap();
+        let j = raw_request(server.addr(), "{\"op\":\"rotate\",\"v\":1}");
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(false));
+        assert!(j.req_str("error").unwrap().contains("disk tier"), "{j:?}");
+    }
+
+    #[test]
+    fn remote_tier_layers_under_the_memory_tier() {
+        let server = CacheServer::spawn("127.0.0.1:0", EvalCache::new()).unwrap();
+        let addr = server.addr().to_string();
+        // Seed the server through one client cache…
+        let a = EvalCache::with_remote(RemoteCacheTier::new(&addr).unwrap(), None);
+        a.publish(77, &eval(-9.0)).unwrap();
+        // …and a *fresh* client cache (cold memory tier) is served
+        // remotely, exactly once: the local tier absorbs the repeat.
+        let b = EvalCache::with_remote(RemoteCacheTier::new(&addr).unwrap(), None);
+        let first = b.fetch(77).unwrap().expect("served remotely");
+        assert_eq!(first.score.to_bits(), (-9.0f64).to_bits());
+        let st = b.stats();
+        assert_eq!((st.remote_hits, st.remote_misses), (1, 0));
+        assert!(st.remote_round_trips >= 1);
+    }
+}

@@ -609,14 +609,18 @@ fn parse_measure_reply(line: &str, expected: usize) -> Result<Vec<Evaluation>> {
         .collect()
 }
 
-fn snip(s: &str) -> String {
+/// Debug-quoted 120-char prefix of a wire line for error messages (shared
+/// with the cache-server protocol, [`super::cache_server`]).
+pub(crate) fn snip(s: &str) -> String {
     let t: String = s.trim_end().chars().take(120).collect();
     format!("{t:?}")
 }
 
 /// One measurement on the wire: `bits`/`extra` carry the authoritative f64
 /// bit patterns (the `docs/CACHE.md` record encoding, minus the key).
-fn encode_result(e: &Evaluation) -> Json {
+/// Shared with the cache-server protocol, which ships the same record
+/// shape for `get`/`put` results.
+pub(crate) fn encode_result(e: &Evaluation) -> Json {
     let mut o = Json::obj();
     o.set(
         "score",
@@ -642,7 +646,8 @@ fn encode_result(e: &Evaluation) -> Json {
     o
 }
 
-fn decode_result(j: &Json) -> Option<Evaluation> {
+/// Inverse of [`encode_result`] (`None` for records off the schema).
+pub(crate) fn decode_result(j: &Json) -> Option<Evaluation> {
     let bits = u64::from_str_radix(j.get("bits")?.as_str()?, 16).ok()?;
     let extra = match j.get("extra") {
         None => Vec::new(),

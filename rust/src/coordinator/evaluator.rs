@@ -33,7 +33,7 @@ use super::scenario::{Scenario, Track};
 use super::workflow::model_by_name;
 
 /// One completed evaluation of a configuration.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Evaluation {
     /// Primary objective, **maximized** (accuracy; negative latency for
     /// deployment tuning; simulated tokens/s for bit-width selection).

@@ -10,7 +10,11 @@
 //!   over a JSONL/TCP protocol, the in-process `DeviceServer` stub, and
 //!   record/replay measurement transcripts.
 //! * [`cache`] — deterministic content-addressed evaluation cache:
-//!   lock-striped in memory, optional persistent journal tier.
+//!   lock-striped in memory, optional persistent journal tier, optional
+//!   remote tier.
+//! * [`cache_server`] — the shared warm-cache server (`haqa cache
+//!   serve`) and the `RemoteCacheTier` client (`--cache-addr`), speaking
+//!   the JSONL/TCP idiom with server-side generation rotation.
 //! * [`fleet`] — scoped-thread scenario fleet, family-sharded work queue,
 //!   overlapped in-flight agent queries (`HAQA_INFLIGHT`), bit-identical
 //!   to serial, with per-platform Pareto fronts in the report, bounded
@@ -36,6 +40,7 @@
 #![warn(missing_docs)]
 
 pub mod cache;
+pub mod cache_server;
 pub mod chaos;
 pub mod device;
 pub mod evaluator;
@@ -47,6 +52,7 @@ pub mod tasklog;
 pub mod workflow;
 
 pub use cache::{CacheStats, CompactReport, EvalCache};
+pub use cache_server::{CacheServer, RemoteCacheTier};
 pub use chaos::{FailureKind, FaultPlan};
 pub use device::{DeviceEvaluator, DeviceServer, EvaluatorSpec};
 pub use evaluator::{Evaluation, Evaluator};

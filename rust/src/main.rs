@@ -17,7 +17,9 @@
 //!                               --retries N restarts transient failures,
 //!                               --resume DIR journals + resumes runs,
 //!                               --cache-cap N bounds the memory cache
-//!                               tier; first SIGINT drains gracefully)
+//!                               tier, --cache-addr HOST:PORT shares a
+//!                               `haqa cache serve` endpoint; first
+//!                               SIGINT drains gracefully)
 //! haqa scenarios gen           expand a matrix spec into a scenario batch
 //!                              (deterministic; feeds `haqa fleet`)
 //! haqa bench [--quick]         fleet/cache throughput harness → BENCH_2.json
@@ -25,13 +27,16 @@
 //!                              + provider-batching phase → BENCH_5.json
 //!                              + 10k-scenario scale phase → BENCH_6.json
 //!                              + chaos fault-overhead phase → BENCH_7.json
+//!                              + distributed remote-cache phase → BENCH_8.json
+//! haqa cache serve             serve a shared warm-cache tier over JSONL/TCP
 //! haqa cache compact           rewrite the eval-cache journal, live entries only
 //! haqa device serve            serve the JSONL device-measurement protocol
 //! haqa device ping             hello round-trip against a device server
 //! ```
 
 use anyhow::Result;
-use haqa::coordinator::{EvalCache, FleetRunner, Scenario, Workflow};
+use haqa::coordinator::cache_server;
+use haqa::coordinator::{CacheServer, EvalCache, FleetRunner, RemoteCacheTier, Scenario, Workflow};
 use haqa::coordinator::scenario::{parse_precision, Track};
 use haqa::optimizers::best;
 use haqa::runtime::{ArtifactSet, InputRole, Tensor};
@@ -91,14 +96,18 @@ haqa — hardware-aware quantization agent (paper reproduction)
                             --resume DIR journals outcomes + skips completed,
                             --backend/--evaluator SPEC override scenario specs
                             incl. chaos:<plan>=… deterministic fault injection,
-                            --cache-cap N bounds the memory cache tier; accepts
+                            --cache-cap N bounds the memory cache tier,
+                            --cache-addr HOST:PORT shares a cache server; accepts
                             a {\"matrix\": …} generator spec directly; the first
                             SIGINT drains in-flight work, a second force-kills)
   haqa scenarios gen        expand a scenario-matrix spec deterministically
                             (--spec/--count/--seed/--out); feeds `haqa fleet`
   haqa bench                cold/warm serial/fleet throughput harness plus the
                             agent-overlap, provider-batching, 10k-scenario
-                            scale and chaos fault-overhead phases; --help
+                            scale, chaos fault-overhead and distributed
+                            remote-cache phases; --help
+  haqa cache serve          serve a shared warm-cache tier over JSONL/TCP
+                            (target of `haqa fleet --cache-addr HOST:PORT`)
   haqa cache compact        rewrite the eval-cache journal keeping live entries
   haqa device serve         serve the device-measurement protocol (simulator-
                             backed stub; target of remote:// evaluator specs)
@@ -304,6 +313,7 @@ fn fleet(rest: Vec<String>) -> Result<()> {
         .opt("retries", "restarts granted to transient/panicked scenario failures (default: env HAQA_RETRIES or 0)")
         .opt("resume", "journal completed scenarios to DIR/fleet_state.jsonl and skip the ones already recorded there (crash-safe; same flag for the first run and every resume)")
         .opt("cache-dir", "persist the eval-cache journal here (shared across runs and processes)")
+        .opt("cache-addr", "share evaluations through a `haqa cache serve` endpoint at HOST:PORT (default: env HAQA_CACHE_ADDR or off; mutually exclusive with --cache-dir)")
         .opt("cache-cap", "bound the in-memory cache tier to N entries, LRU-evicted (default: env HAQA_CACHE_CAP or unbounded; never changes scores)")
         .flag("no-cache", "disable the content-addressed evaluation cache")
         .flag("quiet", "skip per-scenario task-log writes (10k-scale runs)")
@@ -344,10 +354,18 @@ fn fleet(rest: Vec<String>) -> Result<()> {
         runner = runner.with_state_dir(std::path::Path::new(dir))?;
     }
     let cap = EvalCache::cap_from_env(a.get_usize("cache-cap")?)?;
-    match (a.get("cache-dir"), cap) {
-        (Some(dir), cap) => runner = runner.with_cache(EvalCache::with_dir_capped(dir, cap)?),
-        (None, Some(c)) => runner = runner.with_cache(EvalCache::bounded(c)),
-        (None, None) => {}
+    let cache_addr = cache_server::addr_from_env(a.get("cache-addr"))?;
+    match (a.get("cache-dir"), cache_addr, cap) {
+        (Some(_), Some(_), _) => anyhow::bail!(
+            "--cache-dir and --cache-addr/HAQA_CACHE_ADDR are mutually exclusive: \
+             the journal lives on the server (start it with `haqa cache serve --cache-dir …`)"
+        ),
+        (Some(dir), None, cap) => runner = runner.with_cache(EvalCache::with_dir_capped(dir, cap)?),
+        (None, Some(addr), cap) => {
+            runner = runner.with_cache(EvalCache::with_remote(RemoteCacheTier::new(&addr)?, cap))
+        }
+        (None, None, Some(c)) => runner = runner.with_cache(EvalCache::bounded(c)),
+        (None, None, None) => {}
     }
     if a.get_bool("no-cache") {
         runner = runner.without_cache();
@@ -394,6 +412,14 @@ fn fleet(rest: Vec<String>) -> Result<()> {
             println!(
                 "journal: {} record(s) in {} group-committed write(s)",
                 st.journal_records, st.journal_writes
+            );
+        }
+        if st.remote_hits + st.remote_misses > 0 {
+            // The CI remote-cache gate greps this line: the second fleet
+            // against a warm server must report remote hits > 0.
+            println!(
+                "remote cache: {} hits / {} misses in {} round-trip(s)",
+                st.remote_hits, st.remote_misses, st.remote_round_trips
             );
         }
     }
@@ -560,7 +586,8 @@ fn scenarios_cmd(rest: Vec<String>) -> Result<()> {
 /// Plus a batched-measurement microbench (per-call latency-model setup vs
 /// one setup per slice), the agent-overlap phase (`BENCH_3.json`), the
 /// provider-batching phase (`BENCH_5.json`), the 10k-scenario scale phase
-/// (`BENCH_6.json`) and the chaos fault-overhead phase (`BENCH_7.json`).
+/// (`BENCH_6.json`), the chaos fault-overhead phase (`BENCH_7.json`) and
+/// the distributed remote-cache phase (`BENCH_8.json`).
 /// Hard-fails if any phase
 /// pair diverges, the warm run sees zero cache hits, overlap yields no
 /// speedup, or batching does not reduce provider requests — so CI can
@@ -589,10 +616,16 @@ fn bench_fleet(rest: Vec<String>) -> Result<()> {
         .opt("scale-count", "generated scenario count for the scale phase (default: 10000, or 600 with --quick)")
         .opt("cache-cap", "memory-tier LRU cap for the scale phase's capped runs (default: count/8, min 64)")
         .opt_default("chaos-out", "BENCH_7.json", "chaos fault-overhead report output path")
+        .opt_default(
+            "distributed-out",
+            "BENCH_8.json",
+            "distributed remote-cache report output path",
+        )
         .flag("skip-overlap", "skip the blocking-vs-pipelined agent-overlap phase")
         .flag("skip-batching", "skip the unbatched-vs-batched provider-request phase")
         .flag("skip-scale", "skip the generated-matrix capped-vs-unbounded scale phase")
         .flag("skip-chaos", "skip the fault-injection overhead/bit-identity phase")
+        .flag("skip-distributed", "skip the two-fleets-one-cache-server distributed phase")
         .flag("quick", "small scenario set (CI perf smoke)")
         .parse(rest)?;
     let quick = a.get_bool("quick");
@@ -727,6 +760,14 @@ fn bench_fleet(rest: Vec<String>) -> Result<()> {
             rounds,
             workers,
             a.get("chaos-out").unwrap_or("BENCH_7.json"),
+        )?;
+    }
+    if !a.get_bool("skip-distributed") {
+        bench_distributed(
+            quick,
+            rounds,
+            workers,
+            a.get("distributed-out").unwrap_or("BENCH_8.json"),
         )?;
     }
     Ok(())
@@ -1247,13 +1288,126 @@ fn bench_chaos(quick: bool, rounds: usize, workers: usize, out_path: &str) -> Re
     Ok(())
 }
 
-/// `haqa cache <subcommand>` — offline journal maintenance.
+/// The distributed remote-cache phase (`BENCH_8.json`): two sequential
+/// *cold* fleets (fresh in-memory caches, nothing shared locally) pointed
+/// at one in-process `haqa cache serve` endpoint, with an isolated
+/// baseline fleet for reference.  The server's journal is rotated between
+/// the two fleets to exercise generation rotation under live clients.
+/// Hard-gates that (1) both remote-tier fleets score bit-identically to
+/// the isolated baseline, (2) the second fleet's remote hit rate exceeds
+/// 50% on the shared workload, and (3) the second fleet performs strictly
+/// fewer real evaluations than the first.
+fn bench_distributed(quick: bool, rounds: usize, workers: usize, out_path: &str) -> Result<()> {
+    use haqa::coordinator::{CacheStats, FleetReport};
+    use haqa::util::json::Json;
+
+    let scenarios = bench_scenarios(quick, rounds, "simulated");
+    let dir = std::env::temp_dir().join(format!("haqa_bench_remote_{}", std::process::id()));
+    std::fs::create_dir_all(&dir)?;
+    let _ = std::fs::remove_file(dir.join(haqa::coordinator::cache::JOURNAL_FILE));
+    let server = CacheServer::spawn("127.0.0.1:0", EvalCache::with_dir(&dir)?)?;
+    let addr = server.addr().to_string();
+    println!(
+        "distributed: {} scenarios, {workers} workers, cache server on {addr}",
+        scenarios.len()
+    );
+
+    let timed = |cache: EvalCache| -> Result<(f64, Vec<u64>, CacheStats)> {
+        let t0 = std::time::Instant::now();
+        let report: FleetReport = FleetRunner::new(workers).quiet().with_cache(cache).run(&scenarios);
+        let wall = t0.elapsed().as_secs_f64();
+        let mut bits = Vec::with_capacity(scenarios.len());
+        for (sc, out) in scenarios.iter().zip(&report.outcomes) {
+            let o = out.as_ref().map_err(|e| anyhow::anyhow!("{}: {e:#}", sc.name))?;
+            bits.push(o.best_score.to_bits());
+        }
+        Ok((wall, bits, report.cache.unwrap_or_default()))
+    };
+
+    let (base_wall, base_bits, base_stats) = timed(EvalCache::new())?;
+    println!("  isolated    : {base_wall:8.3}s  ({} computed)", base_stats.misses);
+    let (a_wall, a_bits, a_stats) =
+        timed(EvalCache::with_remote(RemoteCacheTier::new(&addr)?, None))?;
+    println!(
+        "  fleet A     : {a_wall:8.3}s  ({} computed, {} remote hits in {} round-trip(s))",
+        a_stats.misses, a_stats.remote_hits, a_stats.remote_round_trips
+    );
+    // Rotate the server-side journal while the protocol stays live — the
+    // second fleet must see every entry through the new generation.
+    let rotated = server.rotate()?;
+    println!(
+        "  rotate      : {} -> {} records",
+        rotated.before_records, rotated.after_records
+    );
+    let (b_wall, b_bits, b_stats) =
+        timed(EvalCache::with_remote(RemoteCacheTier::new(&addr)?, None))?;
+    println!(
+        "  fleet B     : {b_wall:8.3}s  ({} computed, {} remote hits in {} round-trip(s))",
+        b_stats.misses, b_stats.remote_hits, b_stats.remote_round_trips
+    );
+
+    let bit_identical = base_bits == a_bits && base_bits == b_bits;
+    let remote_total = (b_stats.remote_hits + b_stats.remote_misses) as f64;
+    let remote_hit_rate = b_stats.remote_hits as f64 / remote_total.max(1.0);
+    let fewer_evaluations = b_stats.misses < a_stats.misses;
+
+    let phase = |wall: f64, st: &CacheStats| -> Json {
+        let mut o = Json::obj();
+        o.set("wall_s", Json::Num(wall));
+        o.set("computed", Json::Num(st.misses as f64));
+        o.set("remote_hits", Json::Num(st.remote_hits as f64));
+        o.set("remote_misses", Json::Num(st.remote_misses as f64));
+        o.set("remote_round_trips", Json::Num(st.remote_round_trips as f64));
+        o
+    };
+    let mut phases = Json::obj();
+    phases.set("isolated", phase(base_wall, &base_stats));
+    phases.set("fleet_a", phase(a_wall, &a_stats));
+    phases.set("fleet_b", phase(b_wall, &b_stats));
+    let mut j = Json::obj();
+    j.set("bench", Json::str("haqa bench distributed"));
+    j.set("quick", Json::Bool(quick));
+    j.set("scenarios", Json::Num(scenarios.len() as f64));
+    j.set("workers", Json::Num(workers as f64));
+    j.set("phases", phases);
+    j.set("rotated_records", Json::Num(rotated.after_records as f64));
+    j.set("remote_hit_rate", Json::Num(remote_hit_rate));
+    j.set("bit_identical", Json::Bool(bit_identical));
+    j.set("fewer_evaluations", Json::Bool(fewer_evaluations));
+    std::fs::write(out_path, j.to_string_pretty())?;
+    println!(
+        "  remote hit rate {:.0}%; report {out_path}",
+        remote_hit_rate * 100.0
+    );
+
+    anyhow::ensure!(
+        bit_identical,
+        "a fleet sharing the remote cache diverged from the isolated baseline — \
+         the remote tier must be score-invariant"
+    );
+    anyhow::ensure!(
+        remote_hit_rate > 0.5,
+        "second-fleet remote hit rate {remote_hit_rate:.2} <= 0.5 — the shared \
+         warm tier is not amortizing across fleets"
+    );
+    anyhow::ensure!(
+        fewer_evaluations,
+        "the second fleet computed {} evaluations vs {} in the first — sharing \
+         the cache server must strictly reduce real evaluations",
+        b_stats.misses,
+        a_stats.misses
+    );
+    Ok(())
+}
+
+/// `haqa cache <subcommand>` — journal maintenance (`compact`) and the
+/// shared warm-cache server (`serve`).
 fn cache_cmd(rest: Vec<String>) -> Result<()> {
     use haqa::coordinator::CompactReport;
 
     let (sub, rest) = match rest.split_first() {
         Some((s, r)) => (s.as_str(), r.to_vec()),
-        None => anyhow::bail!("usage: haqa cache compact [--cache-dir DIR]"),
+        None => anyhow::bail!("usage: haqa cache <compact|serve> [--cache-dir DIR]"),
     };
     match sub {
         "compact" => {
@@ -1285,7 +1439,40 @@ fn cache_cmd(rest: Vec<String>) -> Result<()> {
             );
             Ok(())
         }
-        other => anyhow::bail!("unknown cache subcommand '{other}' (try `compact`)"),
+        "serve" => {
+            let a = Args::new(
+                "haqa cache serve",
+                "serve a shared eval-cache endpoint over the JSONL/TCP protocol",
+            )
+            .opt_default(
+                "addr",
+                cache_server::DEFAULT_CACHE_ADDR,
+                "bind address (port 0 = ephemeral)",
+            )
+            .opt("cap", "memory-tier LRU cap in entries (default: unbounded)")
+            .opt("cache-dir", "back the server with a persistent journal in DIR")
+            .parse(rest)?;
+            let cap = a.get_usize("cap")?;
+            let cache = match (a.get("cache-dir"), cap) {
+                (Some(dir), cap) => EvalCache::with_dir_capped(dir, cap)?,
+                (None, Some(c)) => EvalCache::bounded(c),
+                (None, None) => EvalCache::new(),
+            };
+            let server = CacheServer::spawn(a.get("addr").unwrap(), cache)?;
+            println!("cache server listening on {}", server.addr());
+            println!(
+                "point fleets at it with `haqa fleet --cache-addr {}` \
+                 (or HAQA_CACHE_ADDR={})",
+                server.addr(),
+                server.addr()
+            );
+            // Foreground service: the accept loop runs on its background
+            // thread until the process is killed.
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(3600));
+            }
+        }
+        other => anyhow::bail!("unknown cache subcommand '{other}' (try `compact` or `serve`)"),
     }
 }
 

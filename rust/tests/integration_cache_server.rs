@@ -1,0 +1,285 @@
+//! Integration: the remote eval-cache tier end to end — wire failure
+//! edges (torn replies, clients dying mid-request), first-write-wins
+//! under concurrent writers, journal rotation under load, and
+//! remote-tier-vs-local bit-identity through the public cache API.
+
+use std::cell::Cell;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
+
+use anyhow::Result;
+use haqa::coordinator::{CacheServer, EvalCache, Evaluation, Evaluator, RemoteCacheTier};
+use haqa::search::{spaces, Config, Space};
+use haqa::util::json::{self, Json};
+use haqa::util::rng::Rng;
+
+/// A deterministic toy evaluator that counts real evaluations, so tests
+/// can tell "served by the remote tier" from "silently recomputed".
+struct ToyEval {
+    space: Space,
+    calls: Cell<usize>,
+}
+
+impl ToyEval {
+    fn new() -> ToyEval {
+        ToyEval {
+            space: spaces::kernel_exec(),
+            calls: Cell::new(0),
+        }
+    }
+}
+
+impl Evaluator for ToyEval {
+    fn track(&self) -> &'static str {
+        "it_remote"
+    }
+    fn space(&self) -> &Space {
+        &self.space
+    }
+    fn scope(&self) -> Json {
+        json::parse(r#"{"suite": "cache_server"}"#).unwrap()
+    }
+    fn evaluate(&self, cfg: &Config) -> Result<Evaluation> {
+        self.calls.set(self.calls.get() + 1);
+        let score: f64 = self
+            .space
+            .encode(cfg)
+            .iter()
+            .enumerate()
+            .map(|(i, v)| v * (i as f64 + 1.0))
+            .sum();
+        Ok(Evaluation {
+            score,
+            extra: vec![score * 0.5],
+            feedback: "{\"note\": \"toy\"}".into(),
+        })
+    }
+}
+
+/// One raw request line → one parsed reply (a fresh connection each call,
+/// speaking the wire protocol directly).
+fn raw_request(addr: SocketAddr, line: &str) -> Json {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    stream.write_all(line.as_bytes()).unwrap();
+    stream.write_all(b"\n").unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut reply = String::new();
+    reader.read_line(&mut reply).unwrap();
+    json::parse(reply.trim()).unwrap()
+}
+
+/// A `put` request line for `key` carrying a bit-exact `score`.
+fn put_line(key: u128, score: f64) -> String {
+    format!(
+        "{{\"op\":\"put\",\"v\":1,\"key\":\"{key:032x}\",\
+         \"result\":{{\"score\":{score},\"bits\":\"{:016x}\",\"feedback\":\"it\"}}}}",
+        score.to_bits()
+    )
+}
+
+fn temp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("haqa_it_srv_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+#[test]
+fn torn_reply_mid_batch_get_is_a_hard_error() {
+    // A fake server that answers the sweep's batch_get with half a reply
+    // line and hangs up — the worst-timed crash a client can observe.
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let fake = std::thread::spawn(move || {
+        let (mut stream, _) = listener.accept().unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("\"batch_get\""), "expected a batch_get, got: {line}");
+        stream.write_all(b"{\"ok\":true,\"results\":[").unwrap();
+        stream.flush().unwrap();
+        // Dropping the stream tears the line.
+    });
+
+    let cache = EvalCache::with_remote(RemoteCacheTier::new(&addr.to_string()).unwrap(), None);
+    let ev = ToyEval::new();
+    let cfgs: Vec<Config> = (0..3).map(|i| ev.space.sample(&mut Rng::new(i))).collect();
+    let err = cache
+        .get_or_evaluate_batch(&ev, &cfgs)
+        .expect_err("a torn reply must be a hard error");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("torn"), "error must name the torn reply: {msg}");
+    assert_eq!(
+        ev.calls.get(),
+        0,
+        "the cache must never silently recompute around a torn reply"
+    );
+    fake.join().unwrap();
+}
+
+#[test]
+fn client_disconnect_mid_request_leaves_the_server_serving() {
+    let server = CacheServer::spawn("127.0.0.1:0", EvalCache::new()).unwrap();
+    {
+        // A client that dies halfway through writing its request line.
+        let mut stream = TcpStream::connect(server.addr()).unwrap();
+        stream.write_all(b"{\"op\":\"get\",\"v\":1,\"key\":\"00").unwrap();
+        stream.flush().unwrap();
+    }
+    // The half-written line concerns that connection only: fresh clients
+    // get full service.
+    let j = raw_request(server.addr(), &put_line(5, 1.5));
+    assert_eq!(j.get("ok").unwrap().as_bool(), Some(true));
+    assert_eq!(j.get("stored").unwrap().as_bool(), Some(true));
+    let j = raw_request(
+        server.addr(),
+        &format!("{{\"op\":\"get\",\"v\":1,\"key\":\"{:032x}\"}}", 5u128),
+    );
+    assert_eq!(j.get("ok").unwrap().as_bool(), Some(true));
+    assert_eq!(j.get("found").unwrap().as_bool(), Some(true));
+}
+
+#[test]
+fn concurrent_puts_are_first_write_wins() {
+    let server = CacheServer::spawn("127.0.0.1:0", EvalCache::new()).unwrap();
+    let addr = server.addr();
+    const KEYS: u128 = 48;
+    // Both writers race the identical pipelined put batch; the shard
+    // mutex must hand exactly one `stored: true` per key across them.
+    let barrier = Arc::new(Barrier::new(2));
+    let mut handles = Vec::new();
+    for _ in 0..2 {
+        let barrier = Arc::clone(&barrier);
+        handles.push(std::thread::spawn(move || -> usize {
+            let stream = TcpStream::connect(addr).unwrap();
+            stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut writer = stream;
+            let mut lines = String::new();
+            for k in 1..=KEYS {
+                lines.push_str(&put_line(k, 4.25));
+                lines.push('\n');
+            }
+            barrier.wait();
+            writer.write_all(lines.as_bytes()).unwrap();
+            writer.flush().unwrap();
+            let mut stored = 0usize;
+            for _ in 0..KEYS {
+                let mut reply = String::new();
+                reader.read_line(&mut reply).unwrap();
+                let j = json::parse(reply.trim()).unwrap();
+                assert_eq!(j.get("ok").unwrap().as_bool(), Some(true), "{reply}");
+                if j.get("stored").unwrap().as_bool() == Some(true) {
+                    stored += 1;
+                }
+            }
+            stored
+        }));
+    }
+    let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    assert_eq!(
+        total as u128, KEYS,
+        "exactly one racing writer may win the first write for each key"
+    );
+}
+
+#[test]
+fn rotate_under_load_never_loses_records() {
+    let dir = temp_dir("rotate_load");
+    let server = CacheServer::spawn("127.0.0.1:0", EvalCache::with_dir(&dir).unwrap()).unwrap();
+    let addr = server.addr();
+    const WRITERS: u128 = 3;
+    const PER: u128 = 40;
+    let mut handles = Vec::new();
+    for w in 0..WRITERS {
+        handles.push(std::thread::spawn(move || {
+            let stream = TcpStream::connect(addr).unwrap();
+            stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut writer = stream;
+            for i in 0..PER {
+                let key = w * 1000 + i + 1;
+                writer.write_all(put_line(key, key as f64).as_bytes()).unwrap();
+                writer.write_all(b"\n").unwrap();
+                writer.flush().unwrap();
+                let mut reply = String::new();
+                reader.read_line(&mut reply).unwrap();
+                let j = json::parse(reply.trim()).unwrap();
+                assert_eq!(j.get("ok").unwrap().as_bool(), Some(true), "{reply}");
+                assert_eq!(j.get("stored").unwrap().as_bool(), Some(true), "{reply}");
+            }
+        }));
+    }
+    // Generation rotations race the writers on live connections.
+    for _ in 0..4 {
+        let j = raw_request(addr, "{\"op\":\"rotate\",\"v\":1}");
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(true), "{j:?}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let j = raw_request(addr, "{\"op\":\"rotate\",\"v\":1}");
+    assert_eq!(j.get("ok").unwrap().as_bool(), Some(true));
+    assert_eq!(j.get("generation").and_then(|v| v.as_f64()), Some(5.0));
+    server.flush();
+    drop(server);
+    // The journal that survived five mid-load rotations must still hold
+    // every record any writer was told `stored: true` for.
+    let reloaded = EvalCache::with_dir(&dir).unwrap();
+    assert_eq!(
+        reloaded.len(),
+        (WRITERS * PER) as usize,
+        "rotation under load lost journal records"
+    );
+    drop(reloaded);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn remote_tier_is_bit_identical_and_skips_evaluation_when_warm() {
+    let ev = ToyEval::new();
+    let cfgs: Vec<Config> = (0..8).map(|i| ev.space.sample(&mut Rng::new(100 + i))).collect();
+    let local = EvalCache::new();
+    let baseline: Vec<u64> = local
+        .get_or_evaluate_batch(&ev, &cfgs)
+        .unwrap()
+        .iter()
+        .map(|(e, _)| e.score.to_bits())
+        .collect();
+
+    let server = CacheServer::spawn("127.0.0.1:0", EvalCache::new()).unwrap();
+    let addr = server.addr().to_string();
+
+    // A cold client evaluates everything itself and publishes it.
+    let ev_a = ToyEval::new();
+    let a = EvalCache::with_remote(RemoteCacheTier::new(&addr).unwrap(), None);
+    let got_a: Vec<u64> = a
+        .get_or_evaluate_batch(&ev_a, &cfgs)
+        .unwrap()
+        .iter()
+        .map(|(e, _)| e.score.to_bits())
+        .collect();
+    assert_eq!(baseline, got_a, "the remote tier must be score-invariant");
+    assert!(ev_a.calls.get() > 0, "a cold shared cache cannot serve anything");
+
+    // A second cold client — fresh memory tier, fresh evaluator — is
+    // served entirely by the shared server: zero real evaluations.
+    let ev_b = ToyEval::new();
+    let b = EvalCache::with_remote(RemoteCacheTier::new(&addr).unwrap(), None);
+    let got_b: Vec<u64> = b
+        .get_or_evaluate_batch(&ev_b, &cfgs)
+        .unwrap()
+        .iter()
+        .map(|(e, _)| e.score.to_bits())
+        .collect();
+    assert_eq!(baseline, got_b, "remote-served scores must be bit-identical");
+    assert_eq!(ev_b.calls.get(), 0, "a warm server must eliminate evaluation");
+    let st = b.stats();
+    assert!(st.remote_hits > 0, "{st:?}");
+    assert_eq!(st.remote_misses, 0, "{st:?}");
+    assert_eq!(st.misses, 0, "remote hits must not count as real evaluations");
+    assert_eq!(b.remote_addr(), Some(addr.as_str()));
+}
