@@ -147,6 +147,30 @@ impl CacheStats {
             self.hits as f64 / total as f64
         }
     }
+
+    /// Counters accrued since the `before` snapshot: monotonic counters
+    /// subtract (saturating, so a rotated/rebuilt cache can't underflow),
+    /// gauges (`entries`, `peak_entries`, `capacity`) carry the current
+    /// value.  `haqa serve` reports a per-submission cache line this way —
+    /// the daemon's cache is warm and shared, so absolute counters span
+    /// every job it ever ran.
+    pub fn delta_from(&self, before: &CacheStats) -> CacheStats {
+        CacheStats {
+            hits: self.hits.saturating_sub(before.hits),
+            misses: self.misses.saturating_sub(before.misses),
+            entries: self.entries,
+            evictions: self.evictions.saturating_sub(before.evictions),
+            peak_entries: self.peak_entries,
+            capacity: self.capacity,
+            journal_records: self.journal_records.saturating_sub(before.journal_records),
+            journal_writes: self.journal_writes.saturating_sub(before.journal_writes),
+            remote_hits: self.remote_hits.saturating_sub(before.remote_hits),
+            remote_misses: self.remote_misses.saturating_sub(before.remote_misses),
+            remote_round_trips: self
+                .remote_round_trips
+                .saturating_sub(before.remote_round_trips),
+        }
+    }
 }
 
 /// Buffered journal writer: records accumulate in `buf` and reach the file
@@ -968,6 +992,24 @@ mod tests {
             }
         );
         assert_eq!(cache.stats().hit_rate(), 0.5);
+    }
+
+    #[test]
+    fn delta_from_isolates_one_submissions_counters() {
+        let cache = EvalCache::new();
+        let ev = CountingEval::new(1.0);
+        let cfg = ev.space.default_config();
+        cache.get_or_evaluate(&ev, &cfg).unwrap(); // miss
+        let before = cache.stats();
+        cache.get_or_evaluate(&ev, &cfg).unwrap(); // hit
+        cache.get_or_evaluate(&ev, &cfg).unwrap(); // hit
+        let d = cache.stats().delta_from(&before);
+        assert_eq!((d.hits, d.misses), (2, 0), "warm window: all hits");
+        assert_eq!(d.entries, 1, "entries is a gauge, not a delta");
+        assert_eq!(d.hit_rate(), 1.0);
+        // A stale (larger) snapshot saturates instead of underflowing.
+        let zero = CacheStats::default().delta_from(&cache.stats());
+        assert_eq!((zero.hits, zero.misses), (0, 0));
     }
 
     #[test]

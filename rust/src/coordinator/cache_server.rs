@@ -122,8 +122,10 @@ pub fn addr_from_env(cli: Option<&str>) -> Result<Option<String>> {
     }
 }
 
-/// Validate a `host:port` endpoint spec and return it trimmed.
-fn validate_addr(spec: &str) -> Result<String> {
+/// Validate a `host:port` endpoint spec and return it trimmed.  Shared
+/// crate-wide: `coordinator::serve` applies the same rule to its bind
+/// address knob.
+pub(crate) fn validate_addr(spec: &str) -> Result<String> {
     let spec = spec.trim();
     let (host, port) = spec
         .rsplit_once(':')
@@ -138,13 +140,15 @@ fn validate_addr(spec: &str) -> Result<String> {
 
 /// One persistent client connection: requests and pipelined replies share
 /// the stream, so a sweep's `put`s cost one flush + one read loop.
-struct Conn {
+/// Shared crate-wide — `coordinator::serve`'s submit client speaks the
+/// same one-line-per-reply JSONL discipline over it.
+pub(crate) struct Conn {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
 }
 
 impl Conn {
-    fn new(stream: TcpStream, timeout: Duration) -> Result<Conn> {
+    pub(crate) fn new(stream: TcpStream, timeout: Duration) -> Result<Conn> {
         stream.set_read_timeout(Some(timeout))?;
         stream.set_write_timeout(Some(timeout))?;
         let reader = BufReader::new(stream.try_clone()?);
@@ -157,7 +161,7 @@ impl Conn {
     /// Write every request line, flush once, then read exactly one reply
     /// line per request.  Any failure past the write is a hard error —
     /// the requests may have reached the server.
-    fn exchange(&mut self, requests: &[String]) -> Result<Vec<String>> {
+    pub(crate) fn exchange(&mut self, requests: &[String]) -> Result<Vec<String>> {
         let mut out = String::new();
         for r in requests {
             out.push_str(r);

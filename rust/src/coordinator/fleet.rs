@@ -79,7 +79,7 @@ use std::cell::OnceCell;
 use std::collections::HashMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::Path;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Result};
@@ -108,6 +108,15 @@ pub const MAX_INFLIGHT: usize = 64;
 /// Upper bound on the provider batch size (`--batch` / `HAQA_BATCH`):
 /// past this a single provider request body stops being a win.
 pub const MAX_BATCH: usize = 128;
+
+/// Callback fired once per scenario as it reaches a **final** settled
+/// outcome: a success, a non-retryable failure, or a resume restore.
+/// Retried attempts do not fire — only the settle that fills the slot.
+/// The first argument is the scenario's input-order index.  Runs on a
+/// worker thread (or the calling thread, for resume restores); keep it
+/// cheap and non-blocking.  This is the seam `haqa serve` streams
+/// per-scenario progress through.
+pub type ProgressHook = Arc<dyn Fn(usize, &Result<TrackOutcome>) + Send + Sync>;
 
 /// The parallel scenario-fleet runner (see the module docs for the
 /// guarantees: bit-identical to serial, family-sharded, cache-shared).
@@ -138,6 +147,17 @@ pub struct FleetRunner {
     pub drain_on_sigint: bool,
     /// Crash-safe journal + resume state ([`FleetRunner::with_state_dir`]).
     state: Option<FleetState>,
+    /// Cooperative drain flag ([`FleetRunner::with_stop`]): flipping it
+    /// true drains exactly like the first SIGINT, without touching
+    /// process signal state.
+    stop: Option<Arc<AtomicBool>>,
+    /// Per-scenario settle callback ([`FleetRunner::with_progress`]).
+    progress: Option<ProgressHook>,
+    /// Warm shared pool override ([`FleetRunner::with_agent_pool`]).
+    pool: Option<Arc<AgentPool>>,
+    /// Flush the fleet-state journal after every settle instead of at the
+    /// group watermark ([`FleetRunner::with_eager_journal`]).
+    eager_journal: bool,
 }
 
 /// Resume state: outcomes recovered from a prior run's journal, and the
@@ -355,6 +375,22 @@ mod sigint {
     }
 }
 
+/// Install the process-wide first-SIGINT-drains handler without running a
+/// fleet.  `haqa serve` installs it once at startup and polls
+/// [`sigint_drain_requested`] from its foreground loop; runners with
+/// [`FleetRunner::with_sigint_drain`] install it themselves.  A second
+/// SIGINT after the first restores the default disposition and kills.
+pub fn install_sigint_drain() {
+    sigint::install();
+}
+
+/// Whether this process has seen its first SIGINT since
+/// [`install_sigint_drain`] (the flag is process-global and never resets —
+/// a drain, once requested, stays requested).
+pub fn sigint_drain_requested() -> bool {
+    sigint::requested()
+}
+
 impl FleetRunner {
     /// A runner over `workers` threads (≥ 1) with a fresh in-memory cache,
     /// blocking agent calls (inflight 1), and task logging on.
@@ -368,6 +404,10 @@ impl FleetRunner {
             retries: 0,
             drain_on_sigint: false,
             state: None,
+            stop: None,
+            progress: None,
+            pool: None,
+            eager_journal: false,
         }
     }
 
@@ -417,13 +457,66 @@ impl FleetRunner {
         self
     }
 
+    /// Drain when `flag` flips true: workers stop *starting* scenarios
+    /// while in-flight ones (and their retries) finish, exactly like the
+    /// SIGINT path — but caller-owned, so a library embedder (`haqa
+    /// serve` cancelling or draining a job) never touches process signal
+    /// state.  The flag is only read, never reset, by the runner.
+    pub fn with_stop(mut self, flag: Arc<AtomicBool>) -> FleetRunner {
+        self.stop = Some(flag);
+        self
+    }
+
+    /// Stream every final per-scenario settle to `hook` (see
+    /// [`ProgressHook`]): the daemon's submit clients watch scenarios
+    /// finish through this instead of waiting for the whole report.
+    pub fn with_progress(mut self, hook: ProgressHook) -> FleetRunner {
+        self.progress = Some(hook);
+        self
+    }
+
+    /// Draw pooled backends from an existing shared [`AgentPool`] instead
+    /// of building a fresh one per run — the daemon keeps one pool warm
+    /// across submissions.  Pooled simulated policies are content-seeded
+    /// and stateless, so reuse never changes scores; the pool's
+    /// cumulative [`BatchStats`] then span every run it served.  Implies
+    /// batch mode at the pool's configured size.
+    pub fn with_agent_pool(mut self, pool: Arc<AgentPool>) -> FleetRunner {
+        self.batch = Some(pool.batch());
+        self.pool = Some(pool);
+        self
+    }
+
+    /// Flush the fleet-state journal after **every** settled scenario
+    /// instead of at the group watermark.  A batch CLI run amortizes
+    /// writes because it settles thousands of scenarios in seconds; a
+    /// resident daemon settles them seconds apart and must survive
+    /// SIGKILL without losing completed work, so it trades the batching
+    /// for per-settle durability.  No-op without a state dir.
+    pub fn with_eager_journal(mut self) -> FleetRunner {
+        self.eager_journal = true;
+        self
+    }
+
     /// Journal completed scenarios to `dir/`[`fleet_state::STATE_FILE`]
     /// and restore any outcome already recorded there (`haqa fleet
     /// --resume <dir>`).  A fresh directory is simply an empty state, so
     /// the first run and every resume use the same flag.  Fails on an
     /// unreadable journal or an uncreatable directory — crash safety must
     /// not degrade silently.
-    pub fn with_state_dir(mut self, dir: &Path) -> Result<FleetRunner> {
+    pub fn with_state_dir(self, dir: &Path) -> Result<FleetRunner> {
+        self.with_state_dir_inner(dir, None)
+    }
+
+    /// [`FleetRunner::with_state_dir`] with every appended record tagged
+    /// `"client": scope` — the daemon's per-client journal attribution
+    /// ([`super::serve`]).  Loaders ignore the tag, so scoping changes
+    /// who a record is attributed to, never what resumes.
+    pub fn with_state_dir_scoped(self, dir: &Path, scope: &str) -> Result<FleetRunner> {
+        self.with_state_dir_inner(dir, Some(scope))
+    }
+
+    fn with_state_dir_inner(mut self, dir: &Path, scope: Option<&str>) -> Result<FleetRunner> {
         let (prior, scan) = fleet_state::load(dir)?;
         if scan.skipped > 0 {
             eprintln!(
@@ -432,12 +525,23 @@ impl FleetRunner {
                 dir.join(fleet_state::STATE_FILE).display()
             );
         }
-        let journal = FleetJournal::open(dir)?;
+        let mut journal = FleetJournal::open(dir)?;
+        if let Some(scope) = scope {
+            journal = journal.with_scope(scope);
+        }
         self.state = Some(FleetState {
             prior: Mutex::new(prior),
             journal: Mutex::new(journal),
         });
         Ok(self)
+    }
+
+    /// A drain is in effect: the first SIGINT arrived (when
+    /// [`FleetRunner::drain_on_sigint`] is set) or the external stop flag
+    /// ([`FleetRunner::with_stop`]) flipped.
+    fn drain_requested(&self) -> bool {
+        (self.drain_on_sigint && sigint::requested())
+            || self.stop.as_ref().is_some_and(|f| f.load(Ordering::SeqCst))
     }
 
     /// Resolve the retry budget: explicit CLI value, else `HAQA_RETRIES`,
@@ -567,6 +671,15 @@ impl FleetRunner {
             }
         }
         order.retain(|&i| slots_init[i].is_none());
+        // Resume restores are settles too: stream them before any worker
+        // starts, so a watching client sees them first, in input order.
+        if let Some(hook) = &self.progress {
+            for (i, slot) in slots_init.iter().enumerate() {
+                if let Some(out) = slot {
+                    hook(i, out);
+                }
+            }
+        }
 
         if self.drain_on_sigint {
             sigint::install();
@@ -583,13 +696,18 @@ impl FleetRunner {
         // The shared provider pool (one batching backend per backend spec)
         // exists only in batch mode; without it every scenario keeps its
         // own seeded backend, exactly as before.
-        let pool: Option<Arc<AgentPool>> = self.batch.map(|b| Arc::new(AgentPool::new(b)));
+        let pool: Option<Arc<AgentPool>> = match &self.pool {
+            // The warm daemon pool outlives this run; per-run pools keep
+            // the old lifetime.
+            Some(p) => Some(Arc::clone(p)),
+            None => self.batch.map(|b| Arc::new(AgentPool::new(b))),
+        };
         std::thread::scope(|s| {
             for _ in 0..workers {
                 s.spawn(|| self.worker(&ctx, pool.as_ref()));
             }
         });
-        let drained = self.drain_on_sigint && sigint::requested();
+        let drained = self.drain_requested();
         let outcomes = ctx
             .slots
             .into_inner()
@@ -643,9 +761,20 @@ impl FleetRunner {
     /// dir is set), then fill its slot.
     fn settle_ok(&self, ctx: &RunCtx, i: usize, out: TrackOutcome) {
         if let Some(st) = &self.state {
-            lock(&st.journal).append(&ctx.scenarios[i], &out);
+            let mut j = lock(&st.journal);
+            j.append(&ctx.scenarios[i], &out);
+            // Eager mode: durable before any progress hook makes the
+            // settle observable — a SIGKILL after a client saw "done"
+            // must never lose that record.
+            if self.eager_journal {
+                j.flush();
+            }
         }
-        lock(&ctx.slots)[i] = Some(Ok(out));
+        let out = Ok(out);
+        if let Some(hook) = &self.progress {
+            hook(i, &out);
+        }
+        lock(&ctx.slots)[i] = Some(out);
     }
 
     /// Record one failed attempt.  Returns `true` when the caller should
@@ -667,7 +796,11 @@ impl FleetRunner {
         } else {
             e
         };
-        lock(&ctx.slots)[i] = Some(Err(e));
+        let out = Err(e);
+        if let Some(hook) = &self.progress {
+            hook(i, &out);
+        }
+        lock(&ctx.slots)[i] = Some(out);
         false
     }
 
@@ -695,7 +828,7 @@ impl FleetRunner {
                     Some(i) => i,
                     None if drained => break,
                     None => {
-                        if self.drain_on_sigint && sigint::requested() {
+                        if self.drain_requested() {
                             drained = true;
                             break;
                         }
@@ -991,6 +1124,62 @@ mod tests {
         assert_eq!(report.resumed, 0);
         assert!(report.journal.is_none(), "no journal without a state dir");
         assert!(!report.drained);
+    }
+
+    #[test]
+    fn preset_stop_flag_drains_before_anything_starts() {
+        // The flag is already set when run() is called: intake never
+        // opens, every scenario reports the drained error, and the
+        // report is marked drained — the daemon's cancel path.
+        let flag = Arc::new(AtomicBool::new(true));
+        let report = FleetRunner::new(2)
+            .with_stop(Arc::clone(&flag))
+            .run(&[Scenario::default(), Scenario::default()]);
+        assert!(report.drained);
+        for out in &report.outcomes {
+            let msg = format!("{:#}", out.as_ref().expect_err("drained"));
+            assert!(msg.contains("drained before start"), "{msg}");
+        }
+        assert!(flag.load(Ordering::SeqCst), "the runner never resets it");
+    }
+
+    #[test]
+    fn progress_hook_fires_once_per_scenario_in_final_settle() {
+        let sc = |name: &str, seed: u64| Scenario {
+            name: name.into(),
+            track: Track::Kernel,
+            optimizer: "random".into(),
+            budget: 2,
+            seed,
+            ..Scenario::default()
+        };
+        let scenarios = [sc("p0", 0), sc("p1", 1)];
+        let seen: Arc<Mutex<Vec<(usize, u64)>>> = Arc::new(Mutex::new(Vec::new()));
+        let sink = Arc::clone(&seen);
+        let report = FleetRunner::new(2)
+            .quiet()
+            .with_progress(Arc::new(move |i, out| {
+                let bits = out.as_ref().map(|o| o.best_score.to_bits()).unwrap_or(0);
+                lock(&sink).push((i, bits));
+            }))
+            .run(&scenarios);
+        let mut seen = lock(&seen).clone();
+        seen.sort();
+        assert_eq!(seen.len(), 2, "one settle per scenario");
+        for (i, bits) in &seen {
+            let out = report.outcomes[*i].as_ref().expect("clean run");
+            assert_eq!(*bits, out.best_score.to_bits(), "hook saw the slot value");
+        }
+    }
+
+    #[test]
+    fn warm_agent_pool_is_shared_and_implies_batch_mode() {
+        let pool = Arc::new(AgentPool::new(6));
+        let runner = FleetRunner::new(2).with_agent_pool(Arc::clone(&pool));
+        assert_eq!(runner.batch, Some(6), "pool size governs");
+        let report = runner.run(&[]);
+        assert!(report.agent.is_some(), "pool stats reported even when idle");
+        assert_eq!(Arc::strong_count(&pool), 2, "run() borrowed, not rebuilt");
     }
 
     #[test]

@@ -151,8 +151,20 @@ fn obs_from_json(j: &Json) -> Option<Observation> {
 /// All floats travel as bit-pattern hex; [`decode_outcome`] restores the
 /// outcome bit-for-bit.
 pub fn encode_outcome(key: u128, o: &TrackOutcome) -> String {
+    encode_outcome_scoped(key, o, None)
+}
+
+/// [`encode_outcome`] with an optional per-client `"client"` tag — the
+/// scope `haqa serve` stamps on every record it journals on behalf of a
+/// submitting client.  The tag is provenance only: [`decode_outcome`]
+/// ignores unknown fields, so scoped and unscoped records interleave in
+/// one journal and resume treats them identically.
+pub fn encode_outcome_scoped(key: u128, o: &TrackOutcome, scope: Option<&str>) -> String {
     let mut j = Json::obj();
     j.set("sc", Json::str(hash::hex128(key)));
+    if let Some(scope) = scope {
+        j.set("client", Json::str(scope.to_string()));
+    }
     j.set("best", bits_hex(o.best_score));
     j.set(
         "cost",
@@ -245,6 +257,8 @@ pub struct FleetJournal {
     /// A torn flush left the file without a trailing newline; the next
     /// flush heals it append-only, exactly as a reopen would.
     heal_pending: bool,
+    /// Per-client scope stamped on every appended record (`haqa serve`).
+    scope: Option<String>,
 }
 
 impl FleetJournal {
@@ -265,7 +279,16 @@ impl FleetJournal {
             writes: 0,
             chaos: None,
             heal_pending: false,
+            scope: None,
         })
+    }
+
+    /// Stamp every record this journal appends with a `"client"` scope
+    /// tag (see [`encode_outcome_scoped`]).  Purely additive provenance:
+    /// records load back identically with or without it.
+    pub fn with_scope(mut self, scope: impl Into<String>) -> FleetJournal {
+        self.scope = Some(scope.into());
+        self
     }
 
     /// Attach a chaos plan whose `torn@<n>` tokens tear this journal's
@@ -295,7 +318,11 @@ impl FleetJournal {
     /// Buffer one completed scenario's outcome, flushing at the group
     /// watermark.
     pub fn append(&mut self, sc: &Scenario, outcome: &TrackOutcome) {
-        self.buf.push_str(&encode_outcome(scenario_key(sc), outcome));
+        self.buf.push_str(&encode_outcome_scoped(
+            scenario_key(sc),
+            outcome,
+            self.scope.as_deref(),
+        ));
         self.buffered += 1;
         self.records += 1;
         if self.buffered >= FLUSH_RECORDS || self.buf.len() >= FLUSH_BYTES {
@@ -431,6 +458,30 @@ mod tests {
             assert_eq!(key, 42 + seed as u128);
             assert_outcome_bits_eq(&o, &back);
         }
+    }
+
+    #[test]
+    fn scoped_records_carry_the_tag_and_decode_identically() {
+        let o = outcome(0);
+        let line = encode_outcome_scoped(7, &o, Some("ci-client"));
+        let j = crate::util::json::parse(line.trim_end()).unwrap();
+        assert_eq!(j.get("client").and_then(|v| v.as_str()), Some("ci-client"));
+        let (key, back) = decode_outcome(&j).expect("scope is ignored on decode");
+        assert_eq!(key, 7);
+        assert_outcome_bits_eq(&o, &back);
+        // And through the journal: a scoped append loads like any other.
+        let dir = temp_dir("scoped");
+        let sc = Scenario::default();
+        {
+            let mut jr = FleetJournal::open(&dir).unwrap().with_scope("ci-client");
+            jr.append(&sc, &o);
+        }
+        let text = std::fs::read_to_string(dir.join(STATE_FILE)).unwrap();
+        assert!(text.contains("\"client\":\"ci-client\""), "{text}");
+        let (map, scan) = load(&dir).unwrap();
+        assert_eq!(scan.skipped, 0);
+        assert_outcome_bits_eq(&map[&scenario_key(&sc)], &o);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -25,6 +25,10 @@
 //!   retry policy runs on.
 //! * [`fleet_state`] — the group-committed `fleet_state.jsonl` outcome
 //!   journal behind `haqa fleet --resume`.
+//! * [`serve`] — the resident fleet daemon (`haqa serve`) and its
+//!   `haqa submit` client: submissions over the JSONL/TCP idiom, warm
+//!   cache/pool reuse across jobs, bounded admission queue, per-client
+//!   scoped journals, graceful drain.
 //! * [`matrix`] — deterministic scenario-matrix generator (`haqa
 //!   scenarios gen`): a compact spec expands into thousands of scenarios.
 //! * [`workflow`] — the generic round loop as a resumable
@@ -48,6 +52,7 @@ pub mod fleet;
 pub mod fleet_state;
 pub mod matrix;
 pub mod scenario;
+pub mod serve;
 pub mod tasklog;
 pub mod workflow;
 
@@ -59,4 +64,5 @@ pub use evaluator::{Evaluation, Evaluator};
 pub use fleet::{FleetReport, FleetRunner};
 pub use matrix::MatrixSpec;
 pub use scenario::Scenario;
+pub use serve::{FleetDaemon, ServeConfig, SubmitClient};
 pub use workflow::{RoundState, SessionStatus, TrackOutcome, TrackSession, Workflow};

@@ -1,0 +1,1362 @@
+//! The resident fleet daemon behind `haqa serve` / `haqa submit`.
+//!
+//! Every `haqa fleet` invocation cold-starts artifacts, caches, and agent
+//! pools.  This module keeps them **warm**: [`FleetDaemon`] wraps one
+//! [`EvalCache`] handle, one optional [`AgentPool`], and one fleet-state
+//! root directory in a long-lived process, and runs submitted scenario
+//! batches through the same [`FleetRunner`] the CLI uses — so scores are
+//! **bit-identical** to `haqa fleet` on the same batch, and a second
+//! identical submission is served almost entirely from the warm cache.
+//!
+//! ## Wire protocol
+//!
+//! The daemon speaks the repo's JSONL/TCP idiom (`coordinator::device`,
+//! `coordinator::cache_server`): one JSON object per `\n`-terminated line
+//! each way, every f64 as the hex of its bit pattern, per-connection hard
+//! errors (`{"ok":false,"error":…}` then close).  Verbs:
+//!
+//! | request | reply |
+//! |---|---|
+//! | `{"op":"submit","v":1,"client":C,"scenarios":[…]}` | `{"ok":true,"job":"jN","total":n,"position":p}` — or `{"ok":false,"busy":true,…}` when the queue is full or a drain began (the connection stays open; a busy reply is flow control, not an error) |
+//! | `{"op":"status"}` | daemon-wide gauges: queued/running/jobs, drain flag, knobs, warm-cache counters |
+//! | `{"op":"status","job":"jN"}` | that job's state/progress counters |
+//! | `{"op":"results","job":"jN","after":k}` | settled results from input index `k` on (contiguous prefix order — a client replaying them prints exactly what `haqa fleet` would), a `next` cursor, and a `summary` once the job is terminal |
+//! | `{"op":"cancel","job":"jN"}` | dequeue a queued job; ask a running one to drain (in-flight scenarios finish and are journaled) |
+//! | `{"op":"drain"}` | stop admitting, finish in-flight work, flush journals; names the state root to resume from |
+//!
+//! Scenarios travel through a dedicated bit-exact codec
+//! ([`scenario_to_wire`]/[`scenario_from_wire`]) covering every
+//! [`scenario_key`](super::fleet_state::scenario_key) field — floats as
+//! bits-hex, seeds as decimal strings — so the key the server journals
+//! under equals the key the client would compute locally.
+//!
+//! ## Semantics
+//!
+//! * **Admission control**: at most `queue_cap` jobs wait; excess
+//!   submissions get a typed `busy` reply immediately, never a hang.
+//! * **Scoped state**: each job journals to
+//!   `<state_root>/<client>/<batch-hash>/fleet_state.jsonl`
+//!   ([`job_state_dir`]), records stamped with the client scope, flushed
+//!   **eagerly** (durable before the client can observe the settle) — a
+//!   SIGKILL'd daemon resumes with no lost or duplicated outcomes.
+//! * **Checkpoints, not result caches**: a job that completes cleanly
+//!   deletes its journal, so resubmitting the same batch re-runs it
+//!   through the warm eval cache (that is the warm-hit-rate contract CI
+//!   gates); a drained or killed job keeps its journal and resumes.
+//! * **Drain**: SIGINT on the daemon or the `drain` verb finishes
+//!   in-flight scenarios, journals them, marks queued jobs drained, and
+//!   the process exits 0 once idle.
+
+use std::collections::{HashMap, VecDeque};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::agent::AgentPool;
+use crate::util::json::{self, Json};
+use crate::util::{hash, lock};
+
+use super::cache::EvalCache;
+use super::cache_server::{validate_addr, Conn};
+use super::fleet::FleetRunner;
+use super::fleet_state::{self, scenario_key};
+use super::scenario::{parse_precision, Scenario, Track};
+use super::workflow::TrackOutcome;
+
+/// Default daemon endpoint — one above the cache server's 7435.
+pub const DEFAULT_SERVE_ADDR: &str = "127.0.0.1:7436";
+
+/// Queued jobs admitted before `submit` answers `busy`.
+pub const DEFAULT_QUEUE_CAP: usize = 16;
+
+/// Hard ceiling on scenarios per submission (a malformed client must not
+/// be able to queue unbounded memory).
+pub const MAX_SUBMIT_SCENARIOS: usize = 100_000;
+
+/// Wire protocol version stamped by clients (`"v"`); the daemon accepts
+/// any request whose version is absent or equal.
+pub const PROTOCOL_VERSION: f64 = 1.0;
+
+// ---- knobs ------------------------------------------------------------------
+
+/// Resolve the daemon bind address: CLI value, else `HAQA_SERVE_ADDR`,
+/// else [`DEFAULT_SERVE_ADDR`].  House knob rules: CLI wins, garbage from
+/// either source is a hard error naming the offending value.
+pub fn serve_addr_from_env(cli: Option<&str>) -> Result<String> {
+    match cli {
+        Some(v) => validate_addr(v).with_context(|| format!("--addr '{}'", v.trim())),
+        None => match std::env::var("HAQA_SERVE_ADDR") {
+            Ok(v) => validate_addr(&v)
+                .with_context(|| format!("HAQA_SERVE_ADDR '{}'", v.trim())),
+            Err(_) => Ok(DEFAULT_SERVE_ADDR.to_string()),
+        },
+    }
+}
+
+/// Resolve the admission queue bound: CLI value, else `HAQA_QUEUE_CAP`,
+/// else [`DEFAULT_QUEUE_CAP`].  Zero is a hard error — a daemon that can
+/// admit nothing is a misconfiguration, not a policy.
+pub fn queue_cap_from_env(cli: Option<usize>) -> Result<usize> {
+    let resolved = match cli {
+        Some(n) => Some(n),
+        None => match std::env::var("HAQA_QUEUE_CAP") {
+            Ok(v) => Some(v.trim().parse::<usize>().map_err(|_| {
+                anyhow!("HAQA_QUEUE_CAP '{}' is not a queue bound (expected a positive integer)", v.trim())
+            })?),
+            Err(_) => None,
+        },
+    };
+    match resolved {
+        Some(0) => Err(anyhow!(
+            "the queue cap must be >= 1 (omit --queue-cap/HAQA_QUEUE_CAP for the default of {DEFAULT_QUEUE_CAP})"
+        )),
+        Some(n) => Ok(n),
+        None => Ok(DEFAULT_QUEUE_CAP),
+    }
+}
+
+// ---- the bit-exact scenario codec ------------------------------------------
+
+fn f64_hex(x: f64) -> Json {
+    Json::str(format!("{:016x}", x.to_bits()))
+}
+
+fn hex_f64(s: &str) -> Option<f64> {
+    (s.len() == 16)
+        .then(|| u64::from_str_radix(s, 16).ok().map(f64::from_bits))
+        .flatten()
+}
+
+/// Canonical scenario-file `task` value for a track (the exact strings
+/// [`Track::parse`] accepts).
+fn track_task(t: Track) -> &'static str {
+    match t {
+        Track::FinetuneCnn => "finetune_cnn",
+        Track::FinetuneLm => "finetune_lm",
+        Track::Kernel => "kernel",
+        Track::Bitwidth => "bitwidth",
+        Track::Joint => "joint",
+    }
+}
+
+/// Encode one scenario for the wire, covering **every**
+/// [`scenario_key`] field bit-exactly: floats as bits-hex (decimal JSON
+/// does not round-trip f64/f32), the seed as a decimal string (u64 does
+/// not fit a JSON double).  `coordinator::matrix`'s batch-file renderer is
+/// deliberately not reused here — it is lossy by design (compact files),
+/// and the daemon must journal under the same key the client computes.
+pub fn scenario_to_wire(sc: &Scenario) -> Json {
+    let mut j = Json::obj();
+    j.set("name", Json::str(&sc.name));
+    j.set("task", Json::str(track_task(sc.track)));
+    j.set("model", Json::str(&sc.model));
+    j.set("precision", Json::str(sc.precision.label()));
+    j.set("bits", Json::str(format!("{:08x}", sc.bits.to_bits())));
+    j.set("optimizer", Json::str(&sc.optimizer));
+    j.set("budget", Json::Num(sc.budget as f64));
+    j.set("seed", Json::str(sc.seed.to_string()));
+    j.set("device", Json::str(&sc.device));
+    j.set("kernel", Json::str(&sc.kernel));
+    j.set("steps_per_epoch", Json::Num(sc.steps_per_epoch as f64));
+    j.set("step_scale", f64_hex(sc.step_scale));
+    j.set("pretrain_steps", Json::Num(sc.pretrain_steps as f64));
+    j.set("memory_limit_gb", f64_hex(sc.memory_limit_gb));
+    j.set("backend", Json::str(&sc.backend));
+    j.set("evaluator", Json::str(&sc.evaluator));
+    j
+}
+
+/// Decode one wire scenario (see [`scenario_to_wire`]).  Every field is
+/// required — a partial scenario would silently run with defaults under a
+/// key the client never computed.
+pub fn scenario_from_wire(j: &Json) -> Result<Scenario> {
+    fn req<'a>(j: &'a Json, k: &str) -> Result<&'a Json> {
+        j.get(k).ok_or_else(|| anyhow!("wire scenario missing \"{k}\""))
+    }
+    fn req_str<'a>(j: &'a Json, k: &str) -> Result<&'a str> {
+        req(j, k)?
+            .as_str()
+            .ok_or_else(|| anyhow!("wire scenario field \"{k}\" is not a string"))
+    }
+    fn req_usize(j: &Json, k: &str) -> Result<usize> {
+        req(j, k)?
+            .as_i64()
+            .and_then(|v| usize::try_from(v).ok())
+            .ok_or_else(|| anyhow!("wire scenario field \"{k}\" is not a count"))
+    }
+    fn req_f64_hex(j: &Json, k: &str) -> Result<f64> {
+        hex_f64(req_str(j, k)?)
+            .ok_or_else(|| anyhow!("wire scenario field \"{k}\" is not 64-bit hex"))
+    }
+    let bits_s = req_str(j, "bits")?;
+    let bits = (bits_s.len() == 8)
+        .then(|| u32::from_str_radix(bits_s, 16).ok().map(f32::from_bits))
+        .flatten()
+        .ok_or_else(|| anyhow!("wire scenario field \"bits\" is not 32-bit hex"))?;
+    Ok(Scenario {
+        name: req_str(j, "name")?.to_string(),
+        track: Track::parse(req_str(j, "task")?)?,
+        model: req_str(j, "model")?.to_string(),
+        precision: parse_precision(req_str(j, "precision")?)?,
+        bits,
+        optimizer: req_str(j, "optimizer")?.to_string(),
+        budget: req_usize(j, "budget")?,
+        seed: req_str(j, "seed")?
+            .parse::<u64>()
+            .map_err(|_| anyhow!("wire scenario field \"seed\" is not a u64"))?,
+        device: req_str(j, "device")?.to_string(),
+        kernel: req_str(j, "kernel")?.to_string(),
+        steps_per_epoch: req_usize(j, "steps_per_epoch")?,
+        step_scale: req_f64_hex(j, "step_scale")?,
+        pretrain_steps: req_usize(j, "pretrain_steps")?,
+        memory_limit_gb: req_f64_hex(j, "memory_limit_gb")?,
+        backend: req_str(j, "backend")?.to_string(),
+        evaluator: req_str(j, "evaluator")?.to_string(),
+    })
+}
+
+// ---- per-client state scoping ----------------------------------------------
+
+/// Filesystem-safe slug of a client name: lowercase alphanumerics kept,
+/// everything else `-`, trimmed, never empty, at most 64 chars.
+fn client_slug(client: &str) -> String {
+    let mut s: String = client
+        .chars()
+        .map(|c| {
+            if c.is_ascii_alphanumeric() {
+                c.to_ascii_lowercase()
+            } else {
+                '-'
+            }
+        })
+        .take(64)
+        .collect();
+    s = s.trim_matches('-').to_string();
+    if s.is_empty() {
+        "anon".to_string()
+    } else {
+        s
+    }
+}
+
+/// Content hash of a whole batch — the concatenated per-scenario keys, so
+/// any edit to any scenario moves the job to a fresh state directory.
+fn batch_key(scenarios: &[Scenario]) -> u128 {
+    let mut payload = String::new();
+    for sc in scenarios {
+        payload.push_str(&hash::hex128(scenario_key(sc)));
+        payload.push('\n');
+    }
+    hash::content_hash_128(payload.as_bytes())
+}
+
+/// The fleet-state directory a daemon rooted at `root` journals a given
+/// client's batch under: `root/<client-slug>/<batch-hash>`.  Deterministic
+/// — tests (and operators pre-seeding a resume) can compute it without
+/// asking the daemon.
+pub fn job_state_dir(root: &Path, client: &str, scenarios: &[Scenario]) -> PathBuf {
+    root.join(client_slug(client))
+        .join(hash::hex128(batch_key(scenarios)))
+}
+
+// ---- daemon-side job bookkeeping -------------------------------------------
+
+/// Lifecycle of one submitted batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum JobState {
+    /// Admitted, waiting for the runner thread.
+    Queued,
+    /// The runner thread is executing it.
+    Running,
+    /// Every scenario settled (success or error) without a drain.
+    Done,
+    /// A `cancel` stopped it (dequeued, or drained mid-run).
+    Cancelled,
+    /// A drain stopped it before completion; its journal names the resume.
+    Drained,
+}
+
+impl JobState {
+    fn as_str(self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done => "done",
+            JobState::Cancelled => "cancelled",
+            JobState::Drained => "drained",
+        }
+    }
+
+    fn terminal(self) -> bool {
+        matches!(self, JobState::Done | JobState::Cancelled | JobState::Drained)
+    }
+}
+
+/// One settled scenario, as the `results` verb streams it.
+struct WireResult {
+    ok: bool,
+    /// `best_score` bits (success only).
+    best: u64,
+    rounds: usize,
+    hits: usize,
+    /// Rendered error chain (failure only).
+    error: String,
+}
+
+impl WireResult {
+    fn from_outcome(out: &Result<TrackOutcome>) -> WireResult {
+        match out {
+            Ok(o) => WireResult {
+                ok: true,
+                best: o.best_score.to_bits(),
+                rounds: o.history.len(),
+                hits: o.cache_hits,
+                error: String::new(),
+            },
+            Err(e) => WireResult {
+                ok: false,
+                best: 0,
+                rounds: 0,
+                hits: 0,
+                error: format!("{e:#}"),
+            },
+        }
+    }
+
+    fn to_json(&self, i: usize) -> Json {
+        let mut j = Json::obj();
+        j.set("i", Json::Num(i as f64));
+        j.set("ok", Json::Bool(self.ok));
+        if self.ok {
+            j.set("best", Json::str(format!("{:016x}", self.best)));
+            j.set("rounds", Json::Num(self.rounds as f64));
+            j.set("hits", Json::Num(self.hits as f64));
+        } else {
+            j.set("error", Json::str(self.error.clone()));
+        }
+        j
+    }
+}
+
+struct Job {
+    client: String,
+    scenarios: Arc<Vec<Scenario>>,
+    state: JobState,
+    /// Input-order settle slots; `results` streams the contiguous
+    /// `Some` prefix past the caller's cursor.
+    results: Vec<Option<WireResult>>,
+    done: usize,
+    errors: usize,
+    resumed: usize,
+    /// Set by `cancel` (and drain) — [`FleetRunner::with_stop`] watches it.
+    cancel: Arc<AtomicBool>,
+    /// `cancel` (not a daemon drain) stopped it: label it cancelled.
+    cancelled: bool,
+    state_dir: PathBuf,
+    /// The `haqa fleet`-equivalent aggregate lines, present once terminal.
+    summary: Option<Json>,
+}
+
+/// Everything the daemon's threads share.
+struct DaemonState {
+    cfg: ServeConfig,
+    cache: EvalCache,
+    /// The warm provider pool (batch mode only) — shared by every job, so
+    /// a resubmission reuses warmed backends.  Pooled backends are
+    /// content-seeded and stateless across calls, so sharing never
+    /// changes scores.
+    pool: Option<Arc<AgentPool>>,
+    state_root: PathBuf,
+    jobs: Mutex<HashMap<u64, Job>>,
+    queue: Mutex<VecDeque<u64>>,
+    next_id: Mutex<u64>,
+    draining: AtomicBool,
+}
+
+/// Daemon-side knobs, resolved by the caller (CLI/env) before spawn.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Fleet worker threads per job.
+    pub workers: usize,
+    /// Overlapped agent queries per worker.
+    pub inflight: usize,
+    /// Restarts granted to transient/panicked scenario failures.
+    pub retries: usize,
+    /// Provider-batching width (None = per-scenario agent pipelines).
+    pub batch: Option<usize>,
+    /// Queued jobs admitted before `submit` answers `busy`.
+    pub queue_cap: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            workers: super::fleet::DEFAULT_WORKERS,
+            inflight: 1,
+            retries: 0,
+            batch: None,
+            queue_cap: DEFAULT_QUEUE_CAP,
+        }
+    }
+}
+
+/// The resident fleet daemon (see the module docs).  Binds a listener,
+/// answers the protocol on an accept thread (one handler thread per
+/// connection), and runs admitted jobs FIFO on a dedicated runner thread —
+/// one job at a time, so a job's scores are bit-identical to `haqa fleet`
+/// on the same batch with the same knobs.
+pub struct FleetDaemon {
+    addr: SocketAddr,
+    state: Arc<DaemonState>,
+    stop: Arc<AtomicBool>,
+    accept: Option<std::thread::JoinHandle<()>>,
+    runner: Option<std::thread::JoinHandle<()>>,
+}
+
+impl FleetDaemon {
+    /// Bind `bind` (e.g. `127.0.0.1:0` for an ephemeral port) and serve
+    /// `cache` under the given knobs, journaling fleet state below
+    /// `state_root`.
+    pub fn spawn(
+        bind: &str,
+        cache: EvalCache,
+        cfg: ServeConfig,
+        state_root: &Path,
+    ) -> Result<FleetDaemon> {
+        let listener = TcpListener::bind(bind).with_context(|| format!("binding {bind}"))?;
+        let addr = listener.local_addr()?;
+        let pool = cfg.batch.map(|b| Arc::new(AgentPool::new(b)));
+        let state = Arc::new(DaemonState {
+            cfg,
+            cache,
+            pool,
+            state_root: state_root.to_path_buf(),
+            jobs: Mutex::new(HashMap::new()),
+            queue: Mutex::new(VecDeque::new()),
+            next_id: Mutex::new(1),
+            draining: AtomicBool::new(false),
+        });
+        let stop = Arc::new(AtomicBool::new(false));
+        let accept = {
+            let (state, stop) = (Arc::clone(&state), Arc::clone(&stop));
+            std::thread::spawn(move || accept_loop(listener, state, stop))
+        };
+        let runner = {
+            let (state, stop) = (Arc::clone(&state), Arc::clone(&stop));
+            std::thread::spawn(move || runner_loop(state, stop))
+        };
+        Ok(FleetDaemon {
+            addr,
+            state,
+            stop,
+            accept: Some(accept),
+            runner: Some(runner),
+        })
+    }
+
+    /// The bound address (queried for ephemeral-port binds).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The fleet-state root interrupted jobs resume from.
+    pub fn state_root(&self) -> &Path {
+        &self.state.state_root
+    }
+
+    /// Begin a graceful drain (idempotent): stop admitting, mark queued
+    /// jobs drained, ask the running job to finish its in-flight
+    /// scenarios.  `haqa serve` calls this on SIGINT; the `drain` verb is
+    /// the remote equivalent.
+    pub fn drain(&self) {
+        begin_drain(&self.state);
+    }
+
+    /// Has a drain completed — nothing queued, nothing running?  The
+    /// daemon still answers `status`/`results` (clients fetch final
+    /// results after a drain); the serve loop uses this to decide when
+    /// exiting loses nothing.
+    pub fn drained(&self) -> bool {
+        self.state.draining.load(Ordering::SeqCst)
+            && lock(&self.state.queue).is_empty()
+            && !lock(&self.state.jobs)
+                .values()
+                .any(|job| !job.state.terminal())
+    }
+}
+
+impl Drop for FleetDaemon {
+    fn drop(&mut self) {
+        begin_drain(&self.state);
+        self.stop.store(true, Ordering::SeqCst);
+        // Unblock the accept loop with a throwaway connection.
+        let _ = TcpStream::connect_timeout(&self.addr, Duration::from_millis(200));
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.runner.take() {
+            let _ = h.join();
+        }
+        // In-flight work was journaled eagerly; commit the cache tail so a
+        // clean shutdown never loses a full group.
+        self.state.cache.flush_journal();
+    }
+}
+
+fn begin_drain(state: &DaemonState) {
+    state.draining.store(true, Ordering::SeqCst);
+    let queued: Vec<u64> = lock(&state.queue).drain(..).collect();
+    let mut jobs = lock(&state.jobs);
+    for id in queued {
+        if let Some(job) = jobs.get_mut(&id) {
+            // Never ran, so there is no journal: "resuming" a queued job
+            // is simply resubmitting it.
+            job.state = JobState::Drained;
+            job.summary = Some(drained_before_start_summary(job));
+        }
+    }
+    for job in jobs.values_mut() {
+        if job.state == JobState::Running {
+            job.cancel.store(true, Ordering::SeqCst);
+        }
+    }
+}
+
+fn drained_before_start_summary(job: &Job) -> Json {
+    let mut s = Json::obj();
+    s.set("state", Json::str(job.state.as_str()));
+    s.set("total", Json::Num(job.scenarios.len() as f64));
+    s.set("drained", Json::Bool(true));
+    s.set("cancelled", Json::Bool(job.cancelled));
+    s.set("state_dir", Json::str(job.state_dir.display().to_string()));
+    s
+}
+
+// ---- the runner thread ------------------------------------------------------
+
+fn runner_loop(state: Arc<DaemonState>, stop: Arc<AtomicBool>) {
+    loop {
+        let next = lock(&state.queue).pop_front();
+        match next {
+            Some(id) => run_one(&state, id),
+            None => {
+                if stop.load(Ordering::SeqCst) || state.draining.load(Ordering::SeqCst) {
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        }
+    }
+}
+
+/// Execute one admitted job through the shared warm substrate.  Exactly
+/// the `haqa fleet` pipeline — same runner, same knobs — plus the serve
+/// extras: the shared cache handle, the shared agent pool, a per-client
+/// scoped state dir with eager journal flushes, a stop flag, and a
+/// progress hook that makes settles visible to polling clients.
+fn run_one(state: &Arc<DaemonState>, id: u64) {
+    let (scenarios, client, cancel, dir) = {
+        let mut jobs = lock(&state.jobs);
+        let Some(job) = jobs.get_mut(&id) else { return };
+        if job.state != JobState::Queued {
+            return; // cancelled while queued
+        }
+        job.state = JobState::Running;
+        (
+            Arc::clone(&job.scenarios),
+            job.client.clone(),
+            Arc::clone(&job.cancel),
+            job.state_dir.clone(),
+        )
+    };
+    let before = state.cache.stats();
+    let t0 = Instant::now();
+    let hook_state = Arc::clone(state);
+    let runner = FleetRunner::new(state.cfg.workers)
+        .with_inflight(state.cfg.inflight)
+        .with_retries(state.cfg.retries)
+        .with_cache(state.cache.clone())
+        .with_stop(Arc::clone(&cancel))
+        .with_eager_journal()
+        .quiet()
+        .with_progress(Arc::new(move |i, out| {
+            let mut jobs = lock(&hook_state.jobs);
+            if let Some(job) = jobs.get_mut(&id) {
+                if job.results[i].is_none() {
+                    let r = WireResult::from_outcome(out);
+                    job.done += 1;
+                    if !r.ok {
+                        job.errors += 1;
+                    }
+                    job.results[i] = Some(r);
+                }
+            }
+        }));
+    let runner = match &state.pool {
+        Some(p) => runner.with_agent_pool(Arc::clone(p)),
+        None => runner,
+    };
+    let runner = match runner.with_state_dir_scoped(&dir, &client) {
+        Ok(r) => r,
+        Err(e) => {
+            let mut jobs = lock(&state.jobs);
+            if let Some(job) = jobs.get_mut(&id) {
+                job.state = JobState::Cancelled;
+                let msg = format!("opening job state dir: {e:#}");
+                for slot in job.results.iter_mut().filter(|s| s.is_none()) {
+                    *slot = Some(WireResult {
+                        ok: false,
+                        best: 0,
+                        rounds: 0,
+                        hits: 0,
+                        error: msg.clone(),
+                    });
+                    job.done += 1;
+                    job.errors += 1;
+                }
+                job.summary = Some(drained_before_start_summary(job));
+            }
+            return;
+        }
+    };
+    let report = runner.run(&scenarios);
+    let delta = state.cache.stats().delta_from(&before);
+    if !report.drained {
+        // The journal is a crash checkpoint, not a result cache: with the
+        // job complete it has served its purpose, and deleting it is what
+        // lets an identical resubmission demonstrate the warm eval cache
+        // (all hits, zero re-evaluations) instead of short-circuiting.
+        let _ = std::fs::remove_file(dir.join(fleet_state::STATE_FILE));
+    }
+    let mut jobs = lock(&state.jobs);
+    let Some(job) = jobs.get_mut(&id) else { return };
+    job.resumed = report.resumed;
+    job.state = if report.drained {
+        if job.cancelled {
+            JobState::Cancelled
+        } else {
+            JobState::Drained
+        }
+    } else {
+        JobState::Done
+    };
+    // Drained-before-start scenarios never settle through the hook; the
+    // report carries their placeholder errors, but the slots stay empty so
+    // `results` keeps streaming a contiguous *settled* prefix and a resume
+    // picks up exactly there.
+    if !report.drained {
+        for (i, out) in report.outcomes.iter().enumerate() {
+            if job.results[i].is_none() {
+                let r = WireResult::from_outcome(out);
+                job.done += 1;
+                if !r.ok {
+                    job.errors += 1;
+                }
+                job.results[i] = Some(r);
+            }
+        }
+    }
+    let mut s = Json::obj();
+    s.set("state", Json::str(job.state.as_str()));
+    s.set("total", Json::Num(scenarios.len() as f64));
+    s.set("families", Json::Num(report.families as f64));
+    s.set("workers", Json::Num(state.cfg.workers as f64));
+    s.set("inflight", Json::Num(state.cfg.inflight as f64));
+    s.set("elapsed", f64_hex(t0.elapsed().as_secs_f64()));
+    let mut c = Json::obj();
+    c.set("hits", Json::Num(delta.hits as f64));
+    c.set("misses", Json::Num(delta.misses as f64));
+    c.set("entries", Json::Num(delta.entries as f64));
+    c.set("peak", Json::Num(delta.peak_entries as f64));
+    c.set("evicted", Json::Num(delta.evictions as f64));
+    c.set(
+        "cap",
+        match delta.capacity {
+            Some(n) => Json::Num(n as f64),
+            None => Json::Null,
+        },
+    );
+    c.set("journal_records", Json::Num(delta.journal_records as f64));
+    c.set("journal_writes", Json::Num(delta.journal_writes as f64));
+    c.set("remote_hits", Json::Num(delta.remote_hits as f64));
+    c.set("remote_misses", Json::Num(delta.remote_misses as f64));
+    c.set("remote_round_trips", Json::Num(delta.remote_round_trips as f64));
+    s.set("cache", c);
+    s.set("resumed", Json::Num(report.resumed as f64));
+    if let Some((records, writes)) = report.journal {
+        let mut jj = Json::obj();
+        jj.set("records", Json::Num(records as f64));
+        jj.set("writes", Json::Num(writes as f64));
+        s.set("journal", jj);
+    }
+    let mut f = Json::obj();
+    f.set("retries", Json::Num(report.faults.retries as f64));
+    f.set("transient", Json::Num(report.faults.transient as f64));
+    f.set("panicked", Json::Num(report.faults.panicked as f64));
+    f.set("fatal", Json::Num(report.faults.fatal as f64));
+    s.set("faults", f);
+    if let Some(st) = report.agent {
+        let mut a = Json::obj();
+        a.set("submitted", Json::Num(st.submitted as f64));
+        a.set("provider_requests", Json::Num(st.provider_requests as f64));
+        a.set("max_batch", Json::Num(st.max_batch as f64));
+        s.set("agent", a);
+    }
+    s.set("drained", Json::Bool(report.drained));
+    s.set("cancelled", Json::Bool(job.cancelled));
+    s.set("state_dir", Json::str(dir.display().to_string()));
+    job.summary = Some(s);
+}
+
+// ---- the accept loop / protocol --------------------------------------------
+
+fn accept_loop(listener: TcpListener, state: Arc<DaemonState>, stop: Arc<AtomicBool>) {
+    for conn in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        if let Ok(stream) = conn {
+            let state = Arc::clone(&state);
+            std::thread::spawn(move || handle_conn(stream, &state));
+        }
+    }
+}
+
+/// Serve one client until it hangs up — or sends garbage: an erroring
+/// request gets `{"ok":false,"error":…}` and the connection closes (the
+/// per-connection hard-error idiom).  A `busy` reply is **not** an error:
+/// the connection stays open so the client can back off and retry.
+fn handle_conn(stream: TcpStream, state: &Arc<DaemonState>) {
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
+    let Ok(read_half) = stream.try_clone() else {
+        return;
+    };
+    let mut reader = BufReader::new(read_half);
+    let mut write_half = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => break,
+            Ok(_) => {
+                let trimmed = line.trim();
+                if trimmed.is_empty() {
+                    continue;
+                }
+                let (mut resp, hard_error) = match handle_request(state, trimmed) {
+                    Ok(j) => (j.to_string(), false),
+                    Err(e) => {
+                        let mut o = Json::obj();
+                        o.set("ok", Json::Bool(false));
+                        o.set("error", Json::str(format!("{e:#}")));
+                        (o.to_string(), true)
+                    }
+                };
+                resp.push('\n');
+                if write_half
+                    .write_all(resp.as_bytes())
+                    .and_then(|()| write_half.flush())
+                    .is_err()
+                    || hard_error
+                {
+                    break;
+                }
+            }
+            Err(_) => break,
+        }
+    }
+}
+
+fn handle_request(state: &Arc<DaemonState>, line: &str) -> Result<Json> {
+    let j = json::parse(line).map_err(|e| anyhow!("malformed request JSON: {e}"))?;
+    if let Some(v) = j.get("v").and_then(|v| v.as_f64()) {
+        ensure!(
+            v == PROTOCOL_VERSION,
+            "protocol version {v} unsupported (this daemon speaks {PROTOCOL_VERSION})"
+        );
+    }
+    match j.get("op").and_then(|v| v.as_str()) {
+        Some("submit") => handle_submit(state, &j),
+        Some("status") => handle_status(state, &j),
+        Some("results") => handle_results(state, &j),
+        Some("cancel") => handle_cancel(state, &j),
+        Some("drain") => {
+            begin_drain(state);
+            let mut o = Json::obj();
+            o.set("ok", Json::Bool(true));
+            o.set("draining", Json::Bool(true));
+            o.set("resume", Json::str(state.state_root.display().to_string()));
+            Ok(o)
+        }
+        Some(other) => Err(anyhow!("unknown op '{other}'")),
+        None => Err(anyhow!("request has no \"op\"")),
+    }
+}
+
+fn busy_reply(reason: &str) -> Json {
+    let mut o = Json::obj();
+    o.set("ok", Json::Bool(false));
+    o.set("busy", Json::Bool(true));
+    o.set("error", Json::str(format!("busy: {reason}")));
+    o
+}
+
+fn handle_submit(state: &Arc<DaemonState>, j: &Json) -> Result<Json> {
+    if state.draining.load(Ordering::SeqCst) {
+        return Ok(busy_reply("the daemon is draining and admits no new work"));
+    }
+    let wire = j
+        .get("scenarios")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| anyhow!("submit has no \"scenarios\" array"))?;
+    ensure!(!wire.is_empty(), "submit with an empty \"scenarios\" array");
+    ensure!(
+        wire.len() <= MAX_SUBMIT_SCENARIOS,
+        "submit of {} scenarios exceeds the {MAX_SUBMIT_SCENARIOS}-scenario ceiling",
+        wire.len()
+    );
+    let scenarios = wire
+        .iter()
+        .map(scenario_from_wire)
+        .collect::<Result<Vec<Scenario>>>()?;
+    let client = j
+        .get("client")
+        .and_then(|v| v.as_str())
+        .unwrap_or("anon")
+        .to_string();
+    // Admission control under one lock pair: the position check and the
+    // enqueue are atomic with respect to other submitters.
+    let mut queue = lock(&state.queue);
+    if queue.len() >= state.cfg.queue_cap {
+        return Ok(busy_reply(&format!(
+            "{} job(s) queued (queue cap {}) — retry after a drain of the backlog",
+            queue.len(),
+            state.cfg.queue_cap
+        )));
+    }
+    let id = {
+        let mut next = lock(&state.next_id);
+        let id = *next;
+        *next += 1;
+        id
+    };
+    let state_dir = job_state_dir(&state.state_root, &client, &scenarios);
+    let n = scenarios.len();
+    let job = Job {
+        client,
+        scenarios: Arc::new(scenarios),
+        state: JobState::Queued,
+        results: (0..n).map(|_| None).collect(),
+        done: 0,
+        errors: 0,
+        resumed: 0,
+        cancel: Arc::new(AtomicBool::new(false)),
+        cancelled: false,
+        state_dir,
+        summary: None,
+    };
+    lock(&state.jobs).insert(id, job);
+    queue.push_back(id);
+    let position = queue.len();
+    let mut o = Json::obj();
+    o.set("ok", Json::Bool(true));
+    o.set("job", Json::str(format!("j{id}")));
+    o.set("total", Json::Num(n as f64));
+    o.set("position", Json::Num(position as f64));
+    Ok(o)
+}
+
+fn parse_job_id(j: &Json) -> Result<u64> {
+    let s = j
+        .get("job")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| anyhow!("request has no \"job\" string"))?;
+    s.strip_prefix('j')
+        .and_then(|n| n.parse::<u64>().ok())
+        .ok_or_else(|| anyhow!("bad job id '{s}' (expected jN)"))
+}
+
+fn handle_status(state: &Arc<DaemonState>, j: &Json) -> Result<Json> {
+    let mut o = Json::obj();
+    o.set("ok", Json::Bool(true));
+    if j.get("job").is_some() {
+        let id = parse_job_id(j)?;
+        let jobs = lock(&state.jobs);
+        let job = jobs.get(&id).ok_or_else(|| anyhow!("no such job j{id}"))?;
+        o.set("job", Json::str(format!("j{id}")));
+        o.set("state", Json::str(job.state.as_str()));
+        o.set("client", Json::str(job.client.clone()));
+        o.set("total", Json::Num(job.scenarios.len() as f64));
+        o.set("done", Json::Num(job.done as f64));
+        o.set("errors", Json::Num(job.errors as f64));
+        o.set("resumed", Json::Num(job.resumed as f64));
+        return Ok(o);
+    }
+    // Lock order is queue → jobs everywhere (submit holds the queue while
+    // inserting the job); taking them in the same order here avoids ABBA.
+    let queued = lock(&state.queue).len();
+    let jobs = lock(&state.jobs);
+    let running = jobs.values().filter(|job| job.state == JobState::Running).count();
+    o.set("service", Json::str("haqa-serve"));
+    o.set("v", Json::Num(PROTOCOL_VERSION));
+    o.set("queued", Json::Num(queued as f64));
+    o.set("running", Json::Num(running as f64));
+    o.set("jobs", Json::Num(jobs.len() as f64));
+    o.set("draining", Json::Bool(state.draining.load(Ordering::SeqCst)));
+    o.set("queue_cap", Json::Num(state.cfg.queue_cap as f64));
+    o.set("workers", Json::Num(state.cfg.workers as f64));
+    let st = state.cache.stats();
+    let mut c = Json::obj();
+    c.set("hits", Json::Num(st.hits as f64));
+    c.set("misses", Json::Num(st.misses as f64));
+    c.set("entries", Json::Num(st.entries as f64));
+    o.set("cache", c);
+    Ok(o)
+}
+
+fn handle_results(state: &Arc<DaemonState>, j: &Json) -> Result<Json> {
+    let id = parse_job_id(j)?;
+    let after = match j.get("after") {
+        Some(v) => v
+            .as_i64()
+            .and_then(|n| usize::try_from(n).ok())
+            .ok_or_else(|| anyhow!("bad \"after\" cursor (expected a non-negative integer)"))?,
+        None => 0,
+    };
+    let jobs = lock(&state.jobs);
+    let job = jobs.get(&id).ok_or_else(|| anyhow!("no such job j{id}"))?;
+    // Contiguous settled prefix from the cursor: stopping at the first
+    // unsettled slot keeps the stream in input order, so a client that
+    // prints rows as they arrive prints exactly what `haqa fleet` would.
+    let mut rows = Vec::new();
+    let mut next = after.min(job.results.len());
+    while let Some(Some(r)) = job.results.get(next) {
+        rows.push(r.to_json(next));
+        next += 1;
+    }
+    let mut o = Json::obj();
+    o.set("ok", Json::Bool(true));
+    o.set("job", Json::str(format!("j{id}")));
+    o.set("state", Json::str(job.state.as_str()));
+    o.set("results", Json::Arr(rows));
+    o.set("next", Json::Num(next as f64));
+    if job.state.terminal() {
+        if let Some(s) = &job.summary {
+            o.set("summary", s.clone());
+        }
+    }
+    Ok(o)
+}
+
+fn handle_cancel(state: &Arc<DaemonState>, j: &Json) -> Result<Json> {
+    let id = parse_job_id(j)?;
+    // Same queue → jobs lock order as submit/status.
+    let mut queue = lock(&state.queue);
+    let mut jobs = lock(&state.jobs);
+    let job = jobs.get_mut(&id).ok_or_else(|| anyhow!("no such job j{id}"))?;
+    match job.state {
+        JobState::Queued => {
+            queue.retain(|&q| q != id);
+            job.state = JobState::Cancelled;
+            job.cancelled = true;
+            job.summary = Some(drained_before_start_summary(job));
+        }
+        JobState::Running => {
+            // The fleet drains: in-flight scenarios finish and are
+            // journaled, the rest never start.  The runner thread labels
+            // the job cancelled when it returns.
+            job.cancelled = true;
+            job.cancel.store(true, Ordering::SeqCst);
+        }
+        _ => {} // already terminal: idempotent
+    }
+    let mut o = Json::obj();
+    o.set("ok", Json::Bool(true));
+    o.set("job", Json::str(format!("j{id}")));
+    o.set("state", Json::str(job.state.as_str()));
+    Ok(o)
+}
+
+// ---- the client -------------------------------------------------------------
+
+/// The client half of the protocol (`haqa submit` and the tests).  One
+/// persistent connection; every method is one request line and one reply
+/// line.  An `{"ok":false}` reply surfaces as an error whose message
+/// starts with `busy:` when it was admission control.
+pub struct SubmitClient {
+    conn: Conn,
+}
+
+impl SubmitClient {
+    /// Dial the daemon.  No retries: a daemon that is not there is a hard
+    /// error naming the endpoint.
+    pub fn connect(addr: &str) -> Result<SubmitClient> {
+        let addr = validate_addr(addr)?;
+        let sock = addr
+            .to_socket_addrs()
+            .with_context(|| format!("resolving {addr}"))?
+            .next()
+            .ok_or_else(|| anyhow!("{addr} resolves to no address"))?;
+        let stream = TcpStream::connect_timeout(&sock, Duration::from_secs(5))
+            .with_context(|| format!("connecting to the fleet daemon at {addr}"))?;
+        Ok(SubmitClient {
+            conn: Conn::new(stream, Duration::from_secs(30))?,
+        })
+    }
+
+    fn call(&mut self, req: Json) -> Result<Json> {
+        let replies = self.conn.exchange(&[req.to_string()])?;
+        let j = json::parse(replies[0].trim())
+            .map_err(|e| anyhow!("malformed daemon reply: {e}"))?;
+        if j.get("ok").and_then(|v| v.as_bool()) == Some(false) {
+            let msg = j
+                .get("error")
+                .and_then(|v| v.as_str())
+                .unwrap_or("daemon refused the request")
+                .to_string();
+            bail!("{msg}");
+        }
+        Ok(j)
+    }
+
+    /// Submit a batch under a client scope; returns the reply (`job`,
+    /// `total`, `position`).  A full queue is an error whose message
+    /// starts with `busy:`.
+    pub fn submit(&mut self, client: &str, scenarios: &[Scenario]) -> Result<Json> {
+        let mut req = Json::obj();
+        req.set("op", Json::str("submit"));
+        req.set("v", Json::Num(PROTOCOL_VERSION));
+        req.set("client", Json::str(client));
+        req.set(
+            "scenarios",
+            Json::Arr(scenarios.iter().map(scenario_to_wire).collect()),
+        );
+        self.call(req)
+    }
+
+    /// Daemon-wide status (`job` = None) or one job's progress counters.
+    pub fn status(&mut self, job: Option<&str>) -> Result<Json> {
+        let mut req = Json::obj();
+        req.set("op", Json::str("status"));
+        if let Some(job) = job {
+            req.set("job", Json::str(job));
+        }
+        self.call(req)
+    }
+
+    /// Settled results from input index `after` on, plus the `next`
+    /// cursor and (once terminal) the job summary.
+    pub fn results(&mut self, job: &str, after: usize) -> Result<Json> {
+        let mut req = Json::obj();
+        req.set("op", Json::str("results"));
+        req.set("job", Json::str(job));
+        req.set("after", Json::Num(after as f64));
+        self.call(req)
+    }
+
+    /// Cancel a job (dequeue if queued, drain if running).
+    pub fn cancel(&mut self, job: &str) -> Result<Json> {
+        let mut req = Json::obj();
+        req.set("op", Json::str("cancel"));
+        req.set("job", Json::str(job));
+        self.call(req)
+    }
+
+    /// Ask the daemon to drain; the reply names the resume state root.
+    pub fn drain(&mut self) -> Result<Json> {
+        let mut req = Json::obj();
+        req.set("op", Json::str("drain"));
+        self.call(req)
+    }
+}
+
+/// Decode a `results` row's `best` field back to the f64 the daemon
+/// settled with (bit-exact).
+pub fn wire_best(row: &Json) -> Option<f64> {
+    row.get("best").and_then(|v| v.as_str()).and_then(hex_f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_root(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("haqa_serve_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn kernel_scenario(name: &str, seed: u64) -> Scenario {
+        Scenario {
+            name: name.into(),
+            track: Track::Kernel,
+            optimizer: "random".into(),
+            budget: 2,
+            seed,
+            ..Scenario::default()
+        }
+    }
+
+    fn batch(n: usize) -> Vec<Scenario> {
+        (0..n)
+            .map(|i| kernel_scenario(&format!("serve/k{i}"), i as u64))
+            .collect()
+    }
+
+    fn summary_of(client: &mut SubmitClient, job: &str) -> Json {
+        for _ in 0..600 {
+            let r = client.results(job, 0).unwrap();
+            if r.get("summary").is_some() {
+                return r;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        panic!("job {job} never reached a terminal state");
+    }
+
+    #[test]
+    fn knobs_follow_house_rules() {
+        assert!(serve_addr_from_env(Some("no-port")).is_err());
+        let msg = format!("{:#}", serve_addr_from_env(Some(" x:99999 ")).unwrap_err());
+        assert!(msg.contains("--addr") && msg.contains("99999"), "{msg}");
+        assert_eq!(serve_addr_from_env(Some("0.0.0.0:7436")).unwrap(), "0.0.0.0:7436");
+        // Env fallback, serialized in one test like the other knob suites.
+        std::env::set_var("HAQA_SERVE_ADDR", "garbage");
+        let err = serve_addr_from_env(None);
+        std::env::remove_var("HAQA_SERVE_ADDR");
+        let msg = format!("{:#}", err.expect_err("garbage env must be a hard error"));
+        assert!(msg.contains("HAQA_SERVE_ADDR") && msg.contains("garbage"), "{msg}");
+        assert_eq!(serve_addr_from_env(None).unwrap(), DEFAULT_SERVE_ADDR);
+
+        assert_eq!(queue_cap_from_env(None).unwrap(), DEFAULT_QUEUE_CAP);
+        assert!(queue_cap_from_env(Some(0)).is_err(), "zero cap is meaningless");
+        std::env::set_var("HAQA_QUEUE_CAP", "several");
+        let err = queue_cap_from_env(None);
+        std::env::remove_var("HAQA_QUEUE_CAP");
+        let msg = format!("{:#}", err.expect_err("garbage env must be a hard error"));
+        assert!(msg.contains("HAQA_QUEUE_CAP") && msg.contains("several"), "{msg}");
+        std::env::set_var("HAQA_QUEUE_CAP", "3");
+        let got = queue_cap_from_env(None);
+        std::env::remove_var("HAQA_QUEUE_CAP");
+        assert_eq!(got.unwrap(), 3);
+        assert_eq!(queue_cap_from_env(Some(9)).unwrap(), 9, "CLI wins");
+    }
+
+    #[test]
+    fn wire_codec_round_trips_the_scenario_key() {
+        let mut sc = Scenario::default();
+        sc.name = "wire/μ".into();
+        sc.track = Track::Bitwidth;
+        sc.bits = 3.3; // not exactly representable
+        sc.seed = u64::MAX - 17; // does not fit a JSON double
+        sc.step_scale = 0.1 + 0.2;
+        sc.memory_limit_gb = 7.0 + 1e-12;
+        sc.backend = "chaos:transient@1=simulated".into();
+        sc.evaluator = "chaos:timeout@2=simulated".into();
+        let line = scenario_to_wire(&sc).to_string();
+        let back = scenario_from_wire(&json::parse(&line).unwrap()).unwrap();
+        assert_eq!(scenario_key(&back), scenario_key(&sc), "key survives the wire");
+        assert_eq!(back.seed, sc.seed);
+        assert_eq!(back.bits.to_bits(), sc.bits.to_bits());
+
+        // Partial scenarios are hard errors, not silent defaults.
+        let err = scenario_from_wire(&json::parse(r#"{"name":"x"}"#).unwrap());
+        let msg = format!("{:#}", err.unwrap_err());
+        assert!(msg.contains("missing"), "{msg}");
+    }
+
+    #[test]
+    fn slug_and_state_dir_are_deterministic() {
+        assert_eq!(client_slug("CI Fleet #1"), "ci-fleet--1");
+        assert_eq!(client_slug("///"), "anon");
+        assert_eq!(client_slug(""), "anon");
+        let scs = batch(2);
+        let a = job_state_dir(Path::new("/r"), "ci", &scs);
+        assert_eq!(a, job_state_dir(Path::new("/r"), "ci", &scs));
+        assert_ne!(a, job_state_dir(Path::new("/r"), "other", &scs));
+        assert_ne!(a, job_state_dir(Path::new("/r"), "ci", &scs[..1].to_vec()));
+    }
+
+    #[test]
+    fn served_scores_are_bit_identical_and_second_submission_is_warm() {
+        let root = temp_root("warm");
+        let scs = batch(3);
+        let daemon = FleetDaemon::spawn(
+            "127.0.0.1:0",
+            EvalCache::new(),
+            ServeConfig { workers: 2, ..ServeConfig::default() },
+            &root,
+        )
+        .unwrap();
+        let addr = daemon.addr().to_string();
+        let mut client = SubmitClient::connect(&addr).unwrap();
+        let reply = client.submit("ci", &scs).unwrap();
+        let job = reply.get("job").unwrap().as_str().unwrap().to_string();
+        let r = summary_of(&mut client, &job);
+        let rows = r.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 3);
+
+        let control = FleetRunner::new(2).quiet().run(&scs);
+        for row in rows {
+            let i = row.get("i").unwrap().as_i64().unwrap() as usize;
+            assert_eq!(row.get("ok").unwrap().as_bool(), Some(true));
+            let best = wire_best(row).unwrap();
+            let want = control.outcomes[i].as_ref().unwrap().best_score;
+            assert_eq!(best.to_bits(), want.to_bits(), "scenario {i} diverged");
+        }
+        let s = r.get("summary").unwrap();
+        assert_eq!(s.get("state").unwrap().as_str(), Some("done"));
+        let misses1 = s.get("cache").unwrap().get("misses").unwrap().as_i64().unwrap();
+        assert!(misses1 > 0, "cold first submission evaluates");
+
+        // Second identical submission: same scores, zero re-evaluations.
+        let reply = client.submit("ci", &scs).unwrap();
+        let job2 = reply.get("job").unwrap().as_str().unwrap().to_string();
+        assert_ne!(job2, job);
+        let r2 = summary_of(&mut client, &job2);
+        let s2 = r2.get("summary").unwrap();
+        assert_eq!(
+            s2.get("resumed").unwrap().as_i64(),
+            Some(0),
+            "a clean completion deleted its checkpoint — warm serving is the cache's job"
+        );
+        let c2 = s2.get("cache").unwrap();
+        assert_eq!(c2.get("misses").unwrap().as_i64(), Some(0), "all warm");
+        assert!(c2.get("hits").unwrap().as_i64().unwrap() > 0);
+        for (row, row2) in rows.iter().zip(r2.get("results").unwrap().as_arr().unwrap()) {
+            assert_eq!(
+                wire_best(row).unwrap().to_bits(),
+                wire_best(row2).unwrap().to_bits(),
+                "warm and cold submissions must agree bit-for-bit"
+            );
+        }
+        drop(daemon);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn full_queue_answers_busy_and_keeps_the_connection() {
+        let root = temp_root("busy");
+        let mut slow = batch(1);
+        // The agent backend sleeps per call, keeping job 1 running while
+        // jobs 2 and 3 arrive.
+        slow[0].backend = "simulated-slow:200".into();
+        let daemon = FleetDaemon::spawn(
+            "127.0.0.1:0",
+            EvalCache::new(),
+            ServeConfig { workers: 1, queue_cap: 1, ..ServeConfig::default() },
+            &root,
+        )
+        .unwrap();
+        let mut client = SubmitClient::connect(&daemon.addr().to_string()).unwrap();
+        let mut admitted = Vec::new();
+        let mut busy = 0;
+        for i in 0..3 {
+            let mut scs = slow.clone();
+            scs[0].name = format!("busy/{i}"); // distinct jobs
+            match client.submit("ci", &scs) {
+                Ok(r) => admitted.push(r.get("job").unwrap().as_str().unwrap().to_string()),
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    assert!(msg.starts_with("busy:"), "typed busy, got: {msg}");
+                    busy += 1;
+                }
+            }
+        }
+        assert!(busy >= 1, "the third submission must hit the cap");
+        assert!(!admitted.is_empty());
+        // The connection survived the busy replies: status still answers.
+        let st = client.status(None).unwrap();
+        assert_eq!(st.get("service").unwrap().as_str(), Some("haqa-serve"));
+        for job in &admitted {
+            summary_of(&mut client, job);
+        }
+        drop(daemon);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn cancel_dequeues_and_drain_refuses_new_work() {
+        let root = temp_root("cancel");
+        let mut slow = batch(1);
+        slow[0].backend = "simulated-slow:150".into();
+        let daemon = FleetDaemon::spawn(
+            "127.0.0.1:0",
+            EvalCache::new(),
+            ServeConfig { workers: 1, queue_cap: 4, ..ServeConfig::default() },
+            &root,
+        )
+        .unwrap();
+        let mut client = SubmitClient::connect(&daemon.addr().to_string()).unwrap();
+        let first = client.submit("ci", &slow).unwrap();
+        let j1 = first.get("job").unwrap().as_str().unwrap().to_string();
+        let mut queued = slow.clone();
+        queued[0].name = "cancel/queued".into();
+        let second = client.submit("ci", &queued).unwrap();
+        let j2 = second.get("job").unwrap().as_str().unwrap().to_string();
+        let c = client.cancel(&j2).unwrap();
+        // Either still queued (cancel dequeued it) or the runner had
+        // already claimed it (cancel drains it) — both end terminal.
+        assert!(c.get("state").unwrap().as_str().is_some());
+        let r2 = summary_of(&mut client, &j2);
+        let state2 = r2.get("state").unwrap().as_str().unwrap();
+        assert!(state2 == "cancelled" || state2 == "done", "got {state2}");
+
+        let d = client.drain().unwrap();
+        assert_eq!(d.get("draining").unwrap().as_bool(), Some(true));
+        assert_eq!(
+            d.get("resume").unwrap().as_str(),
+            Some(root.display().to_string().as_str())
+        );
+        let err = client.submit("ci", &slow).expect_err("draining refuses work");
+        assert!(format!("{err:#}").starts_with("busy:"));
+        summary_of(&mut client, &j1);
+        // With the backlog settled the daemon reports drained; it still
+        // answers status (clients fetch results after a drain).
+        for _ in 0..200 {
+            if daemon.drained() {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert!(daemon.drained());
+        assert!(client.status(Some(&j1)).is_ok());
+        drop(daemon);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn client_disconnect_mid_job_leaves_the_daemon_serving() {
+        let root = temp_root("disco");
+        let mut scs = batch(1);
+        scs[0].backend = "simulated-slow:150".into();
+        let daemon = FleetDaemon::spawn(
+            "127.0.0.1:0",
+            EvalCache::new(),
+            ServeConfig { workers: 1, ..ServeConfig::default() },
+            &root,
+        )
+        .unwrap();
+        let addr = daemon.addr().to_string();
+        let job = {
+            let mut doomed = SubmitClient::connect(&addr).unwrap();
+            let r = doomed.submit("ci", &scs).unwrap();
+            r.get("job").unwrap().as_str().unwrap().to_string()
+            // dropped here: the client hangs up with the job in flight
+        };
+        let mut client = SubmitClient::connect(&addr).unwrap();
+        let r = summary_of(&mut client, &job);
+        assert_eq!(
+            r.get("summary").unwrap().get("state").unwrap().as_str(),
+            Some("done"),
+            "the job outlives the submitting connection"
+        );
+        drop(daemon);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+}

@@ -28,6 +28,11 @@
 //!                              + 10k-scenario scale phase → BENCH_6.json
 //!                              + chaos fault-overhead phase → BENCH_7.json
 //!                              + distributed remote-cache phase → BENCH_8.json
+//! haqa serve [--addr]          resident fleet daemon: warm cache/agent pool
+//!                              across submissions, bounded admission queue,
+//!                              per-client scoped journals, graceful drain
+//! haqa submit <batch.json>     submit a batch to `haqa serve`, stream the
+//!                              per-scenario results, exit with its status
 //! haqa cache serve             serve a shared warm-cache tier over JSONL/TCP
 //! haqa cache compact           rewrite the eval-cache journal, live entries only
 //! haqa device serve            serve the JSONL device-measurement protocol
@@ -66,6 +71,8 @@ fn real_main() -> Result<()> {
         "generate" => generate(rest),
         "run" => run_scenario(rest),
         "fleet" => fleet(rest),
+        "serve" => serve_cmd(rest),
+        "submit" => submit_cmd(rest),
         "scenarios" => scenarios_cmd(rest),
         "bench" => bench_fleet(rest),
         "cache" => cache_cmd(rest),
@@ -106,6 +113,14 @@ haqa — hardware-aware quantization agent (paper reproduction)
                             agent-overlap, provider-batching, 10k-scenario
                             scale, chaos fault-overhead and distributed
                             remote-cache phases; --help
+  haqa serve                resident fleet daemon on HOST:PORT (default
+                            127.0.0.1:7436): submit/status/results/cancel/drain
+                            over JSONL/TCP, warm eval cache + agent pool across
+                            submissions, --queue-cap bounds admission, SIGINT
+                            or the drain verb finishes in-flight work
+  haqa submit <batch.json>  submit a batch to a running `haqa serve`, stream
+                            per-scenario results (bit-identical to `haqa
+                            fleet`), exit with the fleet's status
   haqa cache serve          serve a shared warm-cache tier over JSONL/TCP
                             (target of `haqa fleet --cache-addr HOST:PORT`)
   haqa cache compact        rewrite the eval-cache journal keeping live entries
@@ -504,6 +519,262 @@ fn fleet(rest: Vec<String>) -> Result<()> {
         println!("serial check: bit-identical best scores");
     }
     Ok(())
+}
+
+/// Run the resident fleet daemon (`haqa serve`): a socket in front of the
+/// warm `FleetRunner` substrate.  The eval cache, the optional agent
+/// pool, and the fleet-state root stay resident across submissions, so a
+/// second identical submission is served almost entirely from the warm
+/// cache.  SIGINT (or a remote `drain` request) finishes in-flight
+/// scenarios, flushes journals, and exits 0.
+fn serve_cmd(rest: Vec<String>) -> Result<()> {
+    use haqa::coordinator::fleet::{install_sigint_drain, sigint_drain_requested};
+    use haqa::coordinator::serve::{self, FleetDaemon, ServeConfig};
+
+    let a = Args::new(
+        "haqa serve",
+        "resident fleet daemon: warm caches and agent pools across submissions",
+    )
+    .opt("addr", "bind address (default: env HAQA_SERVE_ADDR or 127.0.0.1:7436; port 0 = ephemeral)")
+    .opt("workers", "worker threads per job (default: env HAQA_WORKERS or 4)")
+    .opt("inflight", "agent queries kept in flight per worker (default: env HAQA_INFLIGHT or 1)")
+    .opt("batch", "coalesce up to N in-flight proposals into one provider request; the warm pool is shared across submissions (default: env HAQA_BATCH or off)")
+    .opt("retries", "restarts granted to transient/panicked scenario failures (default: env HAQA_RETRIES or 0)")
+    .opt("queue-cap", "queued jobs admitted before submit answers busy (default: env HAQA_QUEUE_CAP or 16)")
+    .opt("state-dir", "fleet-state root for the per-client crash-safe journals (default: <temp>/haqa-serve)")
+    .opt("cache-dir", "persist the eval-cache journal here (shared across restarts)")
+    .opt("cache-addr", "layer a `haqa cache serve` endpoint under the daemon's cache (default: env HAQA_CACHE_ADDR or off; mutually exclusive with --cache-dir)")
+    .opt("cache-cap", "bound the in-memory cache tier to N entries, LRU-evicted (default: env HAQA_CACHE_CAP or unbounded)")
+    .parse(rest)?;
+    let addr = serve::serve_addr_from_env(a.get("addr"))?;
+    let cfg = ServeConfig {
+        workers: FleetRunner::workers_from_env(a.get_usize("workers")?)?,
+        inflight: FleetRunner::inflight_from_env(a.get_usize("inflight")?)?,
+        retries: FleetRunner::retries_from_env(a.get_usize("retries")?)?,
+        batch: FleetRunner::batch_from_env(a.get_usize("batch")?)?,
+        queue_cap: serve::queue_cap_from_env(a.get_usize("queue-cap")?)?,
+    };
+    let cap = EvalCache::cap_from_env(a.get_usize("cache-cap")?)?;
+    let cache_addr = cache_server::addr_from_env(a.get("cache-addr"))?;
+    let cache = match (a.get("cache-dir"), cache_addr, cap) {
+        (Some(_), Some(_), _) => anyhow::bail!(
+            "--cache-dir and --cache-addr/HAQA_CACHE_ADDR are mutually exclusive: \
+             the journal lives on the server (start it with `haqa cache serve --cache-dir …`)"
+        ),
+        (Some(dir), None, cap) => EvalCache::with_dir_capped(dir, cap)?,
+        (None, Some(remote), cap) => EvalCache::with_remote(RemoteCacheTier::new(&remote)?, cap),
+        (None, None, Some(c)) => EvalCache::bounded(c),
+        (None, None, None) => EvalCache::new(),
+    };
+    let state_root = match a.get("state-dir") {
+        Some(d) => std::path::PathBuf::from(d),
+        None => std::env::temp_dir().join("haqa-serve"),
+    };
+    let daemon = FleetDaemon::spawn(&addr, cache, cfg, &state_root)?;
+    println!("fleet daemon listening on {}", daemon.addr());
+    println!(
+        "submit batches with `haqa submit <batch.json> --addr {}`",
+        daemon.addr()
+    );
+    // Foreground service.  The first SIGINT begins a graceful drain —
+    // in-flight scenarios finish and are journaled — and the loop exits 0
+    // once the backlog is settled; a remote `drain` request does the same.
+    install_sigint_drain();
+    let mut drain_started = false;
+    loop {
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        if !drain_started && sigint_drain_requested() {
+            eprintln!("drain requested — finishing in-flight scenarios");
+            daemon.drain();
+            drain_started = true;
+        }
+        if daemon.drained() {
+            break;
+        }
+    }
+    // A beat for drain-initiating clients to fetch their final results.
+    std::thread::sleep(std::time::Duration::from_millis(200));
+    println!(
+        "fleet daemon drained — interrupted jobs resume from {} on the next \
+         identical submission",
+        state_root.display()
+    );
+    Ok(())
+}
+
+/// Submit a batch to a running daemon and stream its results (`haqa
+/// submit`).  Output is line-for-line the `haqa fleet` format for the
+/// same batch — CI diffs the score lines — except the Pareto table
+/// (outcome histories stay server-side) and the cache line, which reports
+/// this submission's slice of the daemon's warm cache.
+fn submit_cmd(rest: Vec<String>) -> Result<()> {
+    use haqa::coordinator::serve::{self, SubmitClient};
+    use haqa::util::json::Json;
+
+    let a = Args::new(
+        "haqa submit",
+        "submit a scenario batch to a running `haqa serve` daemon",
+    )
+    .opt("addr", "daemon address (default: env HAQA_SERVE_ADDR or 127.0.0.1:7436)")
+    .opt_default("client", "cli", "client scope tag stamped on the daemon's journals")
+    .flag("quiet", "skip per-scenario score lines")
+    .parse(rest)?;
+    let path = a.positional.first().ok_or_else(|| {
+        anyhow::anyhow!("usage: haqa submit <scenarios.json> [--addr HOST:PORT] [--client NAME]")
+    })?;
+    let scenarios = Scenario::load_many(path)?;
+    anyhow::ensure!(!scenarios.is_empty(), "no scenarios in {path}");
+    let addr = serve::serve_addr_from_env(a.get("addr"))?;
+    let client_tag = a.get("client").unwrap().to_string();
+    let mut client = SubmitClient::connect(&addr)?;
+    let t0 = std::time::Instant::now();
+    let reply = client.submit(&client_tag, &scenarios)?;
+    let job = reply
+        .get("job")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| anyhow::anyhow!("daemon reply named no job"))?
+        .to_string();
+    let mut cursor = 0usize;
+    let mut errors = 0usize;
+    // Stream the contiguous settled prefix; the daemon serves it in input
+    // order, so these lines match `haqa fleet` on the same file.
+    let summary = loop {
+        let r = client.results(&job, cursor)?;
+        if let Some(rows) = r.get("results").and_then(|v| v.as_arr()) {
+            for row in rows {
+                let Some(sc) = row
+                    .get("i")
+                    .and_then(|v| v.as_i64())
+                    .and_then(|i| usize::try_from(i).ok())
+                    .and_then(|i| scenarios.get(i))
+                else {
+                    continue;
+                };
+                if row.get("ok").and_then(|v| v.as_bool()) == Some(true) {
+                    if !a.get_bool("quiet") {
+                        println!(
+                            "{:<24} {:?}: best {:.4}  ({} rounds, {} cache hits)",
+                            sc.name,
+                            sc.track,
+                            serve::wire_best(row).unwrap_or(f64::NAN),
+                            row.get("rounds").and_then(|v| v.as_i64()).unwrap_or(0),
+                            row.get("hits").and_then(|v| v.as_i64()).unwrap_or(0)
+                        );
+                    }
+                } else {
+                    errors += 1;
+                    println!(
+                        "{:<24} {:?}: error: {}",
+                        sc.name,
+                        sc.track,
+                        row.get("error").and_then(|v| v.as_str()).unwrap_or("unknown failure")
+                    );
+                }
+            }
+        }
+        if let Some(next) = r.get("next").and_then(|v| v.as_i64()) {
+            cursor = next as usize;
+        }
+        if let Some(s) = r.get("summary") {
+            break s.clone();
+        }
+        std::thread::sleep(std::time::Duration::from_millis(60));
+    };
+    let num = |k: &str| summary.get(k).and_then(|v| v.as_i64()).unwrap_or(0);
+    println!(
+        "fleet: {} scenarios ({} families) on {} workers (inflight {}) in {:.2}s",
+        scenarios.len(),
+        num("families"),
+        num("workers"),
+        num("inflight"),
+        t0.elapsed().as_secs_f64()
+    );
+    if let Some(c) = summary.get("cache") {
+        let g = |k: &str| c.get(k).and_then(|v| v.as_i64()).unwrap_or(0);
+        let cap_cell = match c.get("cap") {
+            Some(Json::Num(n)) => format!("cap {}", *n as usize),
+            _ => "unbounded".into(),
+        };
+        println!(
+            "evaluation cache: {} hits / {} misses ({} entries, peak {}, {} evicted, {})",
+            g("hits"),
+            g("misses"),
+            g("entries"),
+            g("peak"),
+            g("evicted"),
+            cap_cell
+        );
+        if g("journal_records") > 0 {
+            println!(
+                "journal: {} record(s) in {} group-committed write(s)",
+                g("journal_records"),
+                g("journal_writes")
+            );
+        }
+        if g("remote_hits") + g("remote_misses") > 0 {
+            println!(
+                "remote cache: {} hits / {} misses in {} round-trip(s)",
+                g("remote_hits"),
+                g("remote_misses"),
+                g("remote_round_trips")
+            );
+        }
+    }
+    if num("resumed") > 0 {
+        println!(
+            "resumed: {} scenario(s) from the fleet-state journal",
+            num("resumed")
+        );
+    }
+    if let Some(jj) = summary.get("journal") {
+        let records = jj.get("records").and_then(|v| v.as_i64()).unwrap_or(0);
+        let writes = jj.get("writes").and_then(|v| v.as_i64()).unwrap_or(0);
+        if records > 0 {
+            println!("fleet state: {records} record(s) in {writes} group-committed write(s)");
+        }
+    }
+    if let Some(f) = summary.get("faults") {
+        let g = |k: &str| f.get(k).and_then(|v| v.as_i64()).unwrap_or(0);
+        if g("retries") + g("transient") + g("panicked") + g("fatal") > 0 {
+            println!(
+                "resilience: {} restart(s) ({} transient, {} panicked, {} fatal)",
+                g("retries"),
+                g("transient"),
+                g("panicked"),
+                g("fatal")
+            );
+        }
+    }
+    if let Some(st) = summary.get("agent") {
+        let g = |k: &str| st.get(k).and_then(|v| v.as_i64()).unwrap_or(0);
+        println!(
+            "agent batching: {} request(s) in {} provider call(s) (max batch {})",
+            g("submitted"),
+            g("provider_requests"),
+            g("max_batch")
+        );
+    }
+    let state = summary
+        .get("state")
+        .and_then(|v| v.as_str())
+        .unwrap_or("unknown")
+        .to_string();
+    match state.as_str() {
+        "done" if errors == 0 => Ok(()),
+        "done" => anyhow::bail!("{errors} scenario(s) failed"),
+        "cancelled" => anyhow::bail!("job {job} was cancelled"),
+        "drained" => {
+            let dir = summary
+                .get("state_dir")
+                .and_then(|v| v.as_str())
+                .unwrap_or("the daemon's state root");
+            anyhow::bail!(
+                "fleet daemon drained mid-job — journaled progress is at {dir}; \
+                 resubmit the same batch to resume"
+            )
+        }
+        other => anyhow::bail!("job {job} ended in state '{other}'"),
+    }
 }
 
 /// `haqa scenarios <subcommand>` — scenario-batch tooling.  `gen` expands

@@ -1,0 +1,448 @@
+//! CLI lifecycle smoke suite: drive the built `haqa` binary end to end
+//! through every long-lived surface — fleet, scenario generation, the
+//! cache server, the device server, and the resident fleet daemon — in
+//! isolated temp dirs, asserting exit codes and the stable output tokens
+//! CI greps (never timings or full lines).
+//!
+//! Everything here is std-only subprocess plumbing: `CARGO_BIN_EXE_haqa`
+//! locates the binary Cargo built for this test run, each invocation
+//! scrubs inherited `HAQA_*` knobs so an operator's environment cannot
+//! leak into an assertion, and servers bind port 0 with their actual
+//! address parsed from the announced "listening on" line.
+
+use std::collections::HashSet;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Output, Stdio};
+use std::time::{Duration, Instant};
+
+fn bin() -> &'static str {
+    env!("CARGO_BIN_EXE_haqa")
+}
+
+/// A temp dir removed on drop, unique per (test, pid).
+struct TempDir(PathBuf);
+
+impl TempDir {
+    fn new(tag: &str) -> TempDir {
+        let dir = std::env::temp_dir().join(format!("haqa_cli_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        TempDir(dir)
+    }
+
+    fn path(&self) -> &Path {
+        &self.0
+    }
+
+    fn file(&self, name: &str, contents: &str) -> String {
+        let p = self.0.join(name);
+        std::fs::write(&p, contents).unwrap();
+        p.to_string_lossy().into_owned()
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+/// Build a `haqa` invocation with every inherited `HAQA_*` knob scrubbed —
+/// the suite's assertions must not depend on the operator's environment.
+fn cmd(args: &[&str]) -> Command {
+    let mut c = Command::new(bin());
+    for (k, _) in std::env::vars() {
+        if k.starts_with("HAQA_") {
+            c.env_remove(k);
+        }
+    }
+    c.args(args);
+    c
+}
+
+fn run(args: &[&str]) -> Output {
+    cmd(args).output().unwrap()
+}
+
+fn run_env(args: &[&str], env: &[(&str, &str)]) -> Output {
+    let mut c = cmd(args);
+    for (k, v) in env {
+        c.env(k, v);
+    }
+    c.output().unwrap()
+}
+
+fn stdout(o: &Output) -> String {
+    String::from_utf8_lossy(&o.stdout).into_owned()
+}
+
+fn stderr(o: &Output) -> String {
+    String::from_utf8_lossy(&o.stderr).into_owned()
+}
+
+/// A long-lived `haqa` server child, killed (SIGKILL) on drop.  `addr` is
+/// parsed from the "… listening on HOST:PORT" line it announces, so every
+/// test binds port 0 and runs in parallel without port collisions.
+struct Server {
+    child: Child,
+    addr: String,
+}
+
+impl Server {
+    fn spawn(args: &[&str]) -> Server {
+        let mut child = cmd(args)
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .unwrap();
+        let out = child.stdout.take().unwrap();
+        let mut lines = BufReader::new(out).lines();
+        let deadline = Instant::now() + Duration::from_secs(30);
+        let addr = loop {
+            assert!(Instant::now() < deadline, "server never announced an address: {args:?}");
+            let line = lines.next().expect("server stdout closed before announcing").unwrap();
+            if let Some(rest) = line.split("listening on ").nth(1) {
+                // The device server appends "(profiles: …)" — keep the
+                // first whitespace-delimited token only.
+                break rest.split_whitespace().next().unwrap().to_string();
+            }
+        };
+        Server { child, addr }
+    }
+
+    /// Wait (bounded) for the child to exit on its own — used after a
+    /// graceful drain, where exit code 0 is part of the contract.
+    fn wait_exit(&mut self, within: Duration) -> std::process::ExitStatus {
+        let deadline = Instant::now() + within;
+        loop {
+            if let Some(status) = self.child.try_wait().unwrap() {
+                return status;
+            }
+            assert!(Instant::now() < deadline, "server did not exit within {within:?}");
+            std::thread::sleep(Duration::from_millis(50));
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+/// One JSONL round-trip on a fresh connection — the raw-wire client the
+/// docs promise `nc` users works.
+fn wire(addr: &str, request: &str) -> String {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    stream.write_all(request.as_bytes()).unwrap();
+    stream.write_all(b"\n").unwrap();
+    stream.flush().unwrap();
+    let mut reply = String::new();
+    BufReader::new(stream).read_line(&mut reply).unwrap();
+    reply.trim().to_string()
+}
+
+/// A tiny all-simulated kernel batch: fast, deterministic, cache-friendly.
+fn small_batch(prefix: &str) -> String {
+    format!(
+        r#"{{"scenarios": [
+  {{"name": "{prefix}_matmul", "task": "kernel", "kernel": "matmul:64", "optimizer": "random", "budget": 3, "seed": 11}},
+  {{"name": "{prefix}_softmax", "task": "kernel", "kernel": "softmax:128", "optimizer": "random", "budget": 3, "seed": 12}}
+]}}"#
+    )
+}
+
+/// The per-scenario score lines of a fleet/submit transcript — the rows CI
+/// diffs between `haqa fleet` and `haqa submit` for bit-identity (rendered
+/// through the same `{:.4}` format, so equal text means equal scores).
+fn score_lines(text: &str) -> Vec<String> {
+    text.lines()
+        .filter(|l| l.contains(": best "))
+        .map(|l| l.to_string())
+        .collect()
+}
+
+/// Find any `fleet_state.jsonl` under a serve state root (the daemon
+/// nests them by client slug and batch hash).
+fn find_journal(root: &Path) -> Option<PathBuf> {
+    let entries = std::fs::read_dir(root).ok()?;
+    for entry in entries.flatten() {
+        let p = entry.path();
+        if p.is_dir() {
+            if let Some(found) = find_journal(&p) {
+                return Some(found);
+            }
+        } else if p.file_name() == Some(std::ffi::OsStr::new("fleet_state.jsonl")) {
+            return Some(p);
+        }
+    }
+    None
+}
+
+// ---------------------------------------------------------------- help --
+
+#[test]
+fn help_and_unknown_subcommand_exit_codes() {
+    let help = run(&["help"]);
+    assert!(help.status.success());
+    assert!(stdout(&help).contains("haqa serve"), "help must list the daemon");
+    assert!(stdout(&help).contains("haqa submit"));
+
+    let bare = run(&[]);
+    assert!(bare.status.success(), "bare `haqa` prints help and exits 0");
+
+    let unknown = run(&["frobnicate"]);
+    assert_eq!(unknown.status.code(), Some(1));
+    assert!(
+        stderr(&unknown).contains("unknown subcommand 'frobnicate'"),
+        "{}",
+        stderr(&unknown)
+    );
+}
+
+// --------------------------------------------------------------- fleet --
+
+#[test]
+fn fleet_runs_a_batch_and_prints_the_aggregate_lines() {
+    let dir = TempDir::new("fleet");
+    let batch = dir.file("batch.json", &small_batch("smoke"));
+    let out = run(&["fleet", &batch, "--workers", "2"]);
+    assert!(out.status.success(), "stderr: {}", stderr(&out));
+    let text = stdout(&out);
+    assert_eq!(score_lines(&text).len(), 2, "one score line per scenario:\n{text}");
+    assert!(text.contains("fleet: 2 scenarios"), "{text}");
+    assert!(text.contains("evaluation cache:"), "{text}");
+}
+
+#[test]
+fn fleet_hard_errors_name_the_cause() {
+    let dir = TempDir::new("fleet_err");
+    let batch = dir.file("batch.json", &small_batch("err"));
+
+    // Garbage env knob: hard error naming the variable, not a silent default.
+    let out = run_env(&["fleet", &batch], &[("HAQA_WORKERS", "three")]);
+    assert_eq!(out.status.code(), Some(1));
+    assert!(stderr(&out).contains("HAQA_WORKERS"), "{}", stderr(&out));
+
+    // Malformed batch file: named in the error.
+    let bad = dir.file("bad.json", "{ this is not json");
+    let out = run(&["fleet", &bad]);
+    assert_eq!(out.status.code(), Some(1));
+    assert!(stderr(&out).contains("bad.json"), "{}", stderr(&out));
+
+    // Missing positional: usage string.
+    let out = run(&["fleet"]);
+    assert_eq!(out.status.code(), Some(1));
+    assert!(stderr(&out).contains("usage: haqa fleet"), "{}", stderr(&out));
+}
+
+// ----------------------------------------------------------- scenarios --
+
+#[test]
+fn scenarios_gen_is_byte_deterministic_and_feeds_fleet() {
+    let dir = TempDir::new("gen");
+    let a = dir.path().join("a.json").to_string_lossy().into_owned();
+    let b = dir.path().join("b.json").to_string_lossy().into_owned();
+    for out_path in [&a, &b] {
+        let out = run(&["scenarios", "gen", "--count", "4", "--seed", "9", "--out", out_path]);
+        assert!(out.status.success(), "stderr: {}", stderr(&out));
+    }
+    let bytes_a = std::fs::read(&a).unwrap();
+    assert!(!bytes_a.is_empty());
+    assert_eq!(bytes_a, std::fs::read(&b).unwrap(), "generation must be byte-stable");
+
+    let out = run(&["fleet", &a, "--workers", "2", "--quiet"]);
+    assert!(out.status.success(), "generated batch must run: {}", stderr(&out));
+    assert!(stdout(&out).contains("fleet: 4 scenarios"), "{}", stdout(&out));
+}
+
+// --------------------------------------------------------------- cache --
+
+#[test]
+fn cache_journal_compacts_and_serves_a_remote_tier() {
+    let dir = TempDir::new("cache");
+    let batch = dir.file("batch.json", &small_batch("cache"));
+    let cache_dir = dir.path().join("cache").to_string_lossy().into_owned();
+
+    // Two journal-backed fleets: the second both hits the warm entries and
+    // gives compact duplicate generations to drop.
+    for _ in 0..2 {
+        let out = run(&["fleet", &batch, "--cache-dir", &cache_dir, "--quiet"]);
+        assert!(out.status.success(), "stderr: {}", stderr(&out));
+    }
+    let out = run(&["cache", "compact", "--cache-dir", &cache_dir]);
+    assert!(out.status.success(), "stderr: {}", stderr(&out));
+    assert!(stdout(&out).contains("compacted"), "{}", stdout(&out));
+
+    // A shared cache server over the compacted journal: the fleet's remote
+    // tier line must show traffic.
+    let server = Server::spawn(&["cache", "serve", "--addr", "127.0.0.1:0", "--cache-dir", &cache_dir]);
+    let out = run(&["fleet", &batch, "--cache-addr", &server.addr, "--quiet"]);
+    assert!(out.status.success(), "stderr: {}", stderr(&out));
+    assert!(stdout(&out).contains("remote cache:"), "{}", stdout(&out));
+}
+
+// -------------------------------------------------------------- device --
+
+#[test]
+fn device_server_answers_ping_and_closed_ports_fail_fast() {
+    let server = Server::spawn(&["device", "serve", "--addr", "127.0.0.1:0"]);
+    let out = run(&["device", "ping", "--addr", &server.addr]);
+    assert!(out.status.success(), "stderr: {}", stderr(&out));
+    assert!(stdout(&out).contains("\"ok\""), "{}", stdout(&out));
+
+    // Port 1 is never listening: a connection error, not a hang.
+    let out = run(&["device", "ping", "--addr", "127.0.0.1:1"]);
+    assert_eq!(out.status.code(), Some(1));
+}
+
+// --------------------------------------------------------------- serve --
+
+#[test]
+fn serve_submit_lifecycle_is_bit_identical_and_warm_on_resubmission() {
+    let dir = TempDir::new("serve");
+    let batch = dir.file("batch.json", &small_batch("serve"));
+    let state_dir = dir.path().join("state").to_string_lossy().into_owned();
+
+    // Ground truth: the same batch through `haqa fleet`.
+    let fleet = run(&["fleet", &batch, "--workers", "2"]);
+    assert!(fleet.status.success(), "stderr: {}", stderr(&fleet));
+    let fleet_scores: HashSet<String> = score_lines(&stdout(&fleet)).into_iter().collect();
+    assert_eq!(fleet_scores.len(), 2);
+
+    let mut server = Server::spawn(&["serve", "--addr", "127.0.0.1:0", "--workers", "2", "--state-dir", &state_dir]);
+
+    // Cold submission: same score lines as the fleet, misses > 0.
+    let cold = run(&["submit", &batch, "--addr", &server.addr, "--client", "smoke"]);
+    assert!(cold.status.success(), "stderr: {}", stderr(&cold));
+    let cold_scores: HashSet<String> = score_lines(&stdout(&cold)).into_iter().collect();
+    assert_eq!(cold_scores, fleet_scores, "served scores must match `haqa fleet`:\n{}", stdout(&cold));
+
+    // Warm resubmission: the daemon's resident cache serves every
+    // evaluation — the per-submission cache line reports zero misses.
+    let warm = run(&["submit", &batch, "--addr", &server.addr, "--client", "smoke"]);
+    assert!(warm.status.success(), "stderr: {}", stderr(&warm));
+    let warm_text = stdout(&warm);
+    let warm_scores: HashSet<String> = score_lines(&warm_text).into_iter().collect();
+    assert_eq!(warm_scores, fleet_scores, "warm scores drifted:\n{warm_text}");
+    let cache_line = warm_text
+        .lines()
+        .find(|l| l.starts_with("evaluation cache:"))
+        .unwrap_or_else(|| panic!("no cache line:\n{warm_text}"));
+    assert!(cache_line.contains("/ 0 misses"), "resubmission re-evaluated: {cache_line}");
+
+    // Raw-wire lifecycle on the same daemon: status, a cancel of an
+    // unknown job (typed error, connection-level success), then drain.
+    let status = wire(&server.addr, "{\"op\":\"status\"}");
+    assert!(status.contains("\"service\":\"haqa-serve\""), "{status}");
+    let cancel = wire(&server.addr, "{\"op\":\"cancel\",\"job\":\"j999\"}");
+    assert!(cancel.contains("\"ok\":false"), "{cancel}");
+    let drain = wire(&server.addr, "{\"op\":\"drain\"}");
+    assert!(drain.contains("\"draining\":true"), "{drain}");
+
+    // The drained daemon exits 0 on its own and refuses nothing silently:
+    // a post-drain submission fails with a typed busy error.
+    let refused = run(&["submit", &batch, "--addr", &server.addr, "--client", "late"]);
+    assert_eq!(refused.status.code(), Some(1));
+    let status = server.wait_exit(Duration::from_secs(30));
+    assert!(status.success(), "drained daemon must exit 0, got {status:?}");
+}
+
+#[test]
+fn killed_daemon_resumes_from_its_scoped_journal() {
+    let dir = TempDir::new("serve_kill");
+    // A slow backend stretches the job so the kill lands mid-flight; the
+    // journal record for the first settled scenario is already durable
+    // (eager per-settle flushes).
+    let batch = dir.file(
+        "batch.json",
+        r#"{"scenarios": [
+  {"name": "kill_a", "task": "kernel", "kernel": "matmul:64", "optimizer": "random", "budget": 2, "seed": 3, "backend": "simulated-slow:150"},
+  {"name": "kill_b", "task": "kernel", "kernel": "softmax:128", "optimizer": "random", "budget": 2, "seed": 4, "backend": "simulated-slow:150"},
+  {"name": "kill_c", "task": "kernel", "kernel": "silu:64", "optimizer": "random", "budget": 2, "seed": 5, "backend": "simulated-slow:150"}
+]}"#,
+    );
+    let state_dir = dir.path().join("state").to_string_lossy().into_owned();
+
+    let server = Server::spawn(&["serve", "--addr", "127.0.0.1:0", "--workers", "1", "--state-dir", &state_dir]);
+    // Submit from a background child (it will die with the daemon — its
+    // nonzero exit is expected and unchecked).
+    let mut submitter = cmd(&["submit", &batch, "--addr", &server.addr, "--client", "crash"])
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .spawn()
+        .unwrap();
+
+    // Wait for at least one durably journaled outcome, then SIGKILL the
+    // daemon — no Drop, no drain, exactly the crash the journal exists for.
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let journal = loop {
+        assert!(Instant::now() < deadline, "no journal record appeared before the kill");
+        if let Some(p) = find_journal(Path::new(&state_dir)) {
+            let len = std::fs::metadata(&p).map(|m| m.len()).unwrap_or(0);
+            if len > 0 {
+                break p;
+            }
+        }
+        std::thread::sleep(Duration::from_millis(25));
+    };
+    drop(server); // Drop = SIGKILL + reap
+    let _ = submitter.wait();
+    assert!(journal.exists(), "the journal must survive the kill");
+
+    // A successor daemon on the same state root resumes the journaled
+    // outcomes instead of re-running them.
+    let server = Server::spawn(&["serve", "--addr", "127.0.0.1:0", "--workers", "1", "--state-dir", &state_dir]);
+    let out = run(&["submit", &batch, "--addr", &server.addr, "--client", "crash"]);
+    assert!(out.status.success(), "stderr: {}", stderr(&out));
+    let text = stdout(&out);
+    assert!(text.contains("resumed: "), "no resume line:\n{text}");
+    assert_eq!(score_lines(&text).len(), 3, "every scenario settles exactly once:\n{text}");
+
+    // And the resumed union matches a from-scratch fleet bit for bit.
+    let fleet = run(&["fleet", &batch, "--workers", "1"]);
+    assert!(fleet.status.success());
+    let fleet_scores: HashSet<String> = score_lines(&stdout(&fleet)).into_iter().collect();
+    let served_scores: HashSet<String> = score_lines(&text).into_iter().collect();
+    assert_eq!(served_scores, fleet_scores, "resumed scores drifted");
+}
+
+#[test]
+fn serve_and_submit_hard_errors_name_the_cause() {
+    let dir = TempDir::new("serve_err");
+    let batch = dir.file("batch.json", &small_batch("serve_err"));
+
+    // Malformed bind address: named flag, exit 1, nothing bound.
+    let out = run(&["serve", "--addr", "nonsense"]);
+    assert_eq!(out.status.code(), Some(1));
+    assert!(stderr(&out).contains("--addr"), "{}", stderr(&out));
+
+    // Zero queue cap from the environment: hard error naming the knob.
+    let out = run_env(&["serve", "--addr", "127.0.0.1:0"], &[("HAQA_QUEUE_CAP", "0")]);
+    assert_eq!(out.status.code(), Some(1));
+    assert!(stderr(&out).contains("HAQA_QUEUE_CAP"), "{}", stderr(&out));
+
+    // Garbage serve address from the environment, on the client side.
+    let out = run_env(&["submit", &batch], &[("HAQA_SERVE_ADDR", "not-an-addr")]);
+    assert_eq!(out.status.code(), Some(1));
+    assert!(stderr(&out).contains("HAQA_SERVE_ADDR"), "{}", stderr(&out));
+
+    // No daemon at the far end: a connection error, not a hang.
+    let out = run(&["submit", &batch, "--addr", "127.0.0.1:1"]);
+    assert_eq!(out.status.code(), Some(1));
+
+    // A malformed batch fails before any socket is touched.
+    let bad = dir.file("bad.json", "[{ nope");
+    let out = run(&["submit", &bad, "--addr", "127.0.0.1:1"]);
+    assert_eq!(out.status.code(), Some(1));
+    assert!(stderr(&out).contains("bad.json"), "{}", stderr(&out));
+
+    // Missing positional: usage string.
+    let out = run(&["submit"]);
+    assert_eq!(out.status.code(), Some(1));
+    assert!(stderr(&out).contains("usage: haqa submit"), "{}", stderr(&out));
+}

@@ -1,0 +1,225 @@
+//! Integration: the resident fleet daemon's failure edges.
+//!
+//! * a `chaos:`-wrapped evaluator served through the daemon stays
+//!   bit-identical to a clean in-process fleet (only fault counters move);
+//! * a daemon whose predecessor was killed mid-job resumes from the scoped
+//!   `fleet_state.jsonl` with no lost or duplicated outcomes;
+//! * admission control answers a typed `busy` at the raw wire level.
+//!
+//! Chaos plans are registered process-wide by plan string, so every test
+//! here uses a plan string unique to itself.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::time::Duration;
+
+use haqa::coordinator::scenario::Track;
+use haqa::coordinator::serve::{self, FleetDaemon, ServeConfig, SubmitClient};
+use haqa::coordinator::{EvalCache, FleetRunner, Scenario};
+use haqa::util::json;
+
+fn kernel_scenarios(tag: &str) -> Vec<Scenario> {
+    ["matmul:64", "softmax:128", "silu:64", "rmsnorm:1"]
+        .iter()
+        .enumerate()
+        .map(|(i, kernel)| Scenario {
+            name: format!("{tag}_{i}"),
+            track: Track::Kernel,
+            kernel: (*kernel).into(),
+            optimizer: "haqa".into(),
+            budget: 5,
+            seed: i as u64,
+            ..Scenario::default()
+        })
+        .collect()
+}
+
+fn temp_root(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("haqa_iserve_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Poll `results` until the job is terminal; returns the final reply.
+fn settled(client: &mut SubmitClient, job: &str) -> haqa::util::json::Json {
+    for _ in 0..1200 {
+        let r = client.results(job, 0).unwrap();
+        if r.get("summary").is_some() {
+            return r;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    panic!("job {job} never settled");
+}
+
+fn row_bits(reply: &haqa::util::json::Json) -> Vec<u64> {
+    reply
+        .get("results")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|row| {
+            assert_eq!(row.get("ok").unwrap().as_bool(), Some(true), "{row:?}");
+            serve::wire_best(row).unwrap().to_bits()
+        })
+        .collect()
+}
+
+/// Tentpole invariant, daemon edition: a fault plan on the evaluator seam
+/// plus a retry budget, served over the socket, yields the exact scores of
+/// a clean in-process fleet on the same batch.
+#[test]
+fn chaos_through_the_daemon_is_bit_identical() {
+    let clean = FleetRunner::new(2).quiet().run(&kernel_scenarios("serve_chaos"));
+    let clean_bits: Vec<u64> = clean
+        .outcomes
+        .iter()
+        .map(|o| o.as_ref().expect("clean run failed").best_score.to_bits())
+        .collect();
+
+    let mut faulted = kernel_scenarios("serve_chaos");
+    for sc in &mut faulted {
+        sc.evaluator = "chaos:seed:404:3=simulated".into();
+    }
+    let root = temp_root("chaos");
+    let daemon = FleetDaemon::spawn(
+        "127.0.0.1:0",
+        EvalCache::new(),
+        ServeConfig { workers: 2, retries: 4, ..ServeConfig::default() },
+        &root,
+    )
+    .unwrap();
+    let mut client = SubmitClient::connect(&daemon.addr().to_string()).unwrap();
+    let reply = client.submit("chaos-ci", &faulted).unwrap();
+    let job = reply.get("job").unwrap().as_str().unwrap().to_string();
+    let r = settled(&mut client, &job);
+    assert_eq!(row_bits(&r), clean_bits, "served chaos scores drifted");
+    let s = r.get("summary").unwrap();
+    assert_eq!(s.get("state").unwrap().as_str(), Some("done"));
+    let retries = s
+        .get("faults")
+        .unwrap()
+        .get("retries")
+        .unwrap()
+        .as_i64()
+        .unwrap();
+    assert!(retries > 0, "no injected fault fired through the daemon");
+    drop(daemon);
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// A predecessor daemon died (SIGKILL — no Drop, no flush beyond the eager
+/// per-settle commits) partway through a job.  Emulated by journaling a
+/// subset of the batch into the exact scoped state dir the daemon will
+/// compute; the successor must restore those outcomes (no re-run), finish
+/// the rest, and report the union bit-identically with nothing duplicated.
+#[test]
+fn successor_daemon_resumes_the_scoped_journal() {
+    let scenarios = kernel_scenarios("serve_resume");
+    let clean = FleetRunner::new(2).quiet().run(&scenarios);
+
+    let root = temp_root("resume");
+    let dir = serve::job_state_dir(&root, "crash-ci", &scenarios);
+    // The dead daemon settled the first two scenarios.  Journaling them
+    // through a scoped runner writes byte-for-byte what `run_one` would
+    // have (same encoder, same scope tag).
+    let partial = FleetRunner::new(1)
+        .quiet()
+        .with_state_dir_scoped(&dir, "crash-ci")
+        .unwrap()
+        .run(&scenarios[..2]);
+    assert_eq!(partial.outcomes.len(), 2);
+
+    let daemon = FleetDaemon::spawn(
+        "127.0.0.1:0",
+        EvalCache::new(),
+        ServeConfig { workers: 2, ..ServeConfig::default() },
+        &root,
+    )
+    .unwrap();
+    let mut client = SubmitClient::connect(&daemon.addr().to_string()).unwrap();
+    let reply = client.submit("crash-ci", &scenarios).unwrap();
+    let job = reply.get("job").unwrap().as_str().unwrap().to_string();
+    let r = settled(&mut client, &job);
+    let clean_bits: Vec<u64> = clean
+        .outcomes
+        .iter()
+        .map(|o| o.as_ref().unwrap().best_score.to_bits())
+        .collect();
+    assert_eq!(row_bits(&r), clean_bits, "resumed union drifted");
+    assert_eq!(
+        r.get("results").unwrap().as_arr().unwrap().len(),
+        scenarios.len(),
+        "exactly one result per scenario — nothing lost, nothing duplicated"
+    );
+    let s = r.get("summary").unwrap();
+    assert_eq!(s.get("resumed").unwrap().as_i64(), Some(2), "both journaled outcomes restored");
+    assert_eq!(s.get("state").unwrap().as_str(), Some("done"));
+    drop(daemon);
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// Admission control at the raw wire level: a full queue answers one line
+/// of typed `busy` JSON — `ok:false`, `busy:true`, an error naming the
+/// cap — and keeps the connection open for the retry.
+#[test]
+fn queue_full_busy_reply_on_the_raw_wire() {
+    let root = temp_root("wire_busy");
+    let daemon = FleetDaemon::spawn(
+        "127.0.0.1:0",
+        EvalCache::new(),
+        ServeConfig { workers: 1, queue_cap: 1, ..ServeConfig::default() },
+        &root,
+    )
+    .unwrap();
+    let stream = TcpStream::connect(daemon.addr()).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+
+    let mut submit = |name: &str| -> haqa::util::json::Json {
+        let sc = Scenario {
+            name: name.into(),
+            track: Track::Kernel,
+            optimizer: "random".into(),
+            budget: 2,
+            backend: "simulated-slow:200".into(),
+            ..Scenario::default()
+        };
+        let line = format!(
+            "{{\"op\":\"submit\",\"v\":1,\"client\":\"wire\",\"scenarios\":[{}]}}\n",
+            serve::scenario_to_wire(&sc).to_string()
+        );
+        writer.write_all(line.as_bytes()).unwrap();
+        writer.flush().unwrap();
+        let mut reply = String::new();
+        reader.read_line(&mut reply).unwrap();
+        json::parse(reply.trim()).unwrap()
+    };
+
+    let mut busy_seen = false;
+    for i in 0..3 {
+        let reply = submit(&format!("wire/{i}"));
+        if reply.get("ok").unwrap().as_bool() == Some(false) {
+            busy_seen = true;
+            assert_eq!(reply.get("busy").and_then(|v| v.as_bool()), Some(true));
+            let msg = reply.get("error").unwrap().as_str().unwrap();
+            assert!(msg.starts_with("busy:") && msg.contains("queue cap 1"), "{msg}");
+        } else {
+            assert!(reply.get("job").unwrap().as_str().unwrap().starts_with('j'));
+        }
+    }
+    assert!(busy_seen, "three rapid submissions must overflow a cap of 1");
+
+    // The same connection still serves status — busy is flow control, not
+    // a connection-fatal error.
+    writer.write_all(b"{\"op\":\"status\"}\n").unwrap();
+    writer.flush().unwrap();
+    let mut reply = String::new();
+    reader.read_line(&mut reply).unwrap();
+    let st = json::parse(reply.trim()).unwrap();
+    assert_eq!(st.get("service").unwrap().as_str(), Some("haqa-serve"));
+    drop(daemon);
+    let _ = std::fs::remove_dir_all(&root);
+}

@@ -211,18 +211,46 @@ fn trunc_outcome(i: usize) -> TrackOutcome {
 /// record — never duplicate, merge or lose anything else.
 #[test]
 fn prop_fleet_state_survives_truncation_at_every_byte() {
-    let base = std::env::temp_dir().join(format!("haqa_props_state_{}", std::process::id()));
+    fleet_state_truncation_sweep(None, "state");
+}
+
+/// The identical sweep over a **scoped** journal — the per-client records
+/// `haqa serve` writes.  The `"client"` tag lengthens every line (moving
+/// each torn-byte window) but must change nothing about recovery.
+#[test]
+fn prop_scoped_serve_journal_survives_truncation_at_every_byte() {
+    fleet_state_truncation_sweep(Some("ci-client"), "scoped");
+}
+
+fn fleet_state_truncation_sweep(scope: Option<&str>, tag: &str) {
+    let open = |dir: &std::path::Path| {
+        let j = FleetJournal::open(dir).unwrap();
+        match scope {
+            Some(s) => j.with_scope(s),
+            None => j,
+        }
+    };
+    let base =
+        std::env::temp_dir().join(format!("haqa_props_{tag}_{}", std::process::id()));
     let _ = std::fs::remove_dir_all(&base);
 
     let n = 6usize;
     let full_dir = base.join("full");
     {
-        let mut j = FleetJournal::open(&full_dir).unwrap();
+        let mut j = open(&full_dir);
         for i in 0..n {
             j.append(&trunc_scenario(i), &trunc_outcome(i));
         }
     } // drop group-commits the whole batch
     let bytes = std::fs::read(full_dir.join(fleet_state::STATE_FILE)).unwrap();
+    if let Some(s) = scope {
+        let text = String::from_utf8_lossy(&bytes);
+        let tagged = format!("\"client\":\"{s}\"");
+        assert!(
+            text.lines().all(|l| l.contains(&tagged)),
+            "every scoped record carries the client tag"
+        );
+    }
     // Offset just past each record's '\n': record i is complete in a
     // prefix of length `cut` iff ends[i] <= cut.
     let ends: Vec<usize> = bytes
@@ -259,7 +287,7 @@ fn prop_fleet_state_survives_truncation_at_every_byte() {
         // run's successor. The torn line stays lost (skipped), the healed
         // tail stays recovered, nothing duplicates.
         {
-            let mut j = FleetJournal::open(&dir).unwrap();
+            let mut j = open(&dir);
             j.append(&extra_sc, &extra_out);
         }
         let (map, scan) = fleet_state::load(&dir).unwrap();
