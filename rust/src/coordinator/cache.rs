@@ -67,6 +67,7 @@ use anyhow::{anyhow, Result};
 use crate::search::Config;
 use crate::util::hash;
 use crate::util::json::{self, Json};
+use crate::util::knob::Knob;
 use crate::util::{jsonl, lock};
 
 use super::cache_server::RemoteCacheTier;
@@ -447,27 +448,15 @@ impl EvalCache {
     }
 
     /// Resolve the memory-tier cap: explicit CLI value, else
-    /// `HAQA_CACHE_CAP`, else `None` (unbounded).  Hard-error parsing like
-    /// [`FleetRunner::batch_from_env`](super::FleetRunner::batch_from_env),
+    /// `HAQA_CACHE_CAP`, else `None` (unbounded).  House [`Knob`] rules,
     /// and a cap of 0 — from either source — is itself a hard error rather
     /// than a silent "off": a zero-entry cache is always a typo.
     pub fn cap_from_env(cli: Option<usize>) -> Result<Option<usize>> {
-        let n = match cli {
-            Some(n) => Some(n),
-            None => match std::env::var("HAQA_CACHE_CAP") {
-                Ok(v) => Some(v.trim().parse::<usize>().map_err(|_| {
-                    anyhow!("HAQA_CACHE_CAP must be a positive integer, got '{v}'")
-                })?),
-                Err(_) => None,
-            },
-        };
-        match n {
-            Some(0) => Err(anyhow!(
-                "the cache capacity must be >= 1 (omit --cache-cap/HAQA_CACHE_CAP \
-                 for an unbounded memory tier)"
-            )),
-            other => Ok(other),
-        }
+        Knob::counter("HAQA_CACHE_CAP", "a positive integer").require_nonzero(
+            cli,
+            "the cache capacity must be >= 1 (omit --cache-cap/HAQA_CACHE_CAP \
+             for an unbounded memory tier)",
+        )
     }
 
     /// The journal file backing the disk tier, if one is attached.

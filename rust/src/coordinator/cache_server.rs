@@ -77,7 +77,6 @@
 //! `put`s it back, so a cap (server- or client-side) only ever changes
 //! hit rates, never scores.
 
-use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
@@ -92,8 +91,10 @@ use crate::util::lock;
 use crate::util::retry::{Attempt, Backoff};
 
 use super::cache::EvalCache;
-use super::device::{decode_result, encode_result, snip, BACKOFF_CAP};
 use super::evaluator::Evaluation;
+use super::wire::{
+    self, decode_result, encode_result, snip, validate_addr, Conn, ErrorPolicy, BACKOFF_CAP,
+};
 
 /// Wire-protocol version sent in every request and `stats` reply.
 pub const PROTOCOL_VERSION: f64 = 1.0;
@@ -122,71 +123,7 @@ pub fn addr_from_env(cli: Option<&str>) -> Result<Option<String>> {
     }
 }
 
-/// Validate a `host:port` endpoint spec and return it trimmed.  Shared
-/// crate-wide: `coordinator::serve` applies the same rule to its bind
-/// address knob.
-pub(crate) fn validate_addr(spec: &str) -> Result<String> {
-    let spec = spec.trim();
-    let (host, port) = spec
-        .rsplit_once(':')
-        .ok_or_else(|| anyhow!("expected host:port"))?;
-    ensure!(!host.is_empty(), "empty host (expected host:port)");
-    port.parse::<u16>()
-        .map_err(|_| anyhow!("bad port '{port}' (expected host:port)"))?;
-    Ok(spec.to_string())
-}
-
 // ---- the client -------------------------------------------------------------
-
-/// One persistent client connection: requests and pipelined replies share
-/// the stream, so a sweep's `put`s cost one flush + one read loop.
-/// Shared crate-wide — `coordinator::serve`'s submit client speaks the
-/// same one-line-per-reply JSONL discipline over it.
-pub(crate) struct Conn {
-    reader: BufReader<TcpStream>,
-    writer: TcpStream,
-}
-
-impl Conn {
-    pub(crate) fn new(stream: TcpStream, timeout: Duration) -> Result<Conn> {
-        stream.set_read_timeout(Some(timeout))?;
-        stream.set_write_timeout(Some(timeout))?;
-        let reader = BufReader::new(stream.try_clone()?);
-        Ok(Conn {
-            reader,
-            writer: stream,
-        })
-    }
-
-    /// Write every request line, flush once, then read exactly one reply
-    /// line per request.  Any failure past the write is a hard error —
-    /// the requests may have reached the server.
-    pub(crate) fn exchange(&mut self, requests: &[String]) -> Result<Vec<String>> {
-        let mut out = String::new();
-        for r in requests {
-            out.push_str(r);
-            out.push('\n');
-        }
-        self.writer.write_all(out.as_bytes())?;
-        self.writer.flush()?;
-        let mut replies = Vec::with_capacity(requests.len());
-        for _ in requests {
-            let mut line = String::new();
-            let n = self
-                .reader
-                .read_line(&mut line)
-                .context("reading cache-server reply")?;
-            ensure!(n > 0, "cache server closed the connection before replying");
-            ensure!(
-                line.ends_with('\n'),
-                "torn cache-server reply (connection closed mid-line): {}",
-                snip(&line)
-            );
-            replies.push(line);
-        }
-        Ok(replies)
-    }
-}
 
 /// The client half of the remote cache tier (see the module docs).
 ///
@@ -253,7 +190,7 @@ impl RemoteCacheTier {
             .ok_or_else(|| anyhow!("cannot resolve {}", self.label))?;
         Backoff::new(self.max_retries, self.backoff_base, BACKOFF_CAP).run(|_| {
             match TcpStream::connect_timeout(&addr, self.timeout) {
-                Ok(stream) => match Conn::new(stream, self.timeout) {
+                Ok(stream) => match Conn::new(stream, self.timeout, "cache-server") {
                     Ok(conn) => Attempt::Done(conn),
                     Err(e) => Attempt::Fatal(e),
                 },
@@ -509,62 +446,15 @@ impl Drop for CacheServer {
     }
 }
 
-fn accept_loop(listener: TcpListener, state: Arc<ServerState>, stop: Arc<AtomicBool>) {
-    for conn in listener.incoming() {
-        if stop.load(Ordering::SeqCst) {
-            break;
-        }
-        if let Ok(stream) = conn {
-            let state = Arc::clone(&state);
-            std::thread::spawn(move || handle_conn(stream, &state));
-        }
-    }
-}
-
-/// Serve one client until it hangs up — or until it sends garbage: any
+/// Serve each client until it hangs up — or until it sends garbage: any
 /// erroring request gets an `{"ok":false,…}` reply and then the
-/// connection is closed (a per-connection hard error).  A half-written
-/// final line (client died mid-request) is simply dropped.
-fn handle_conn(stream: TcpStream, state: &ServerState) {
-    // An idle client is dropped rather than pinning the handler thread.
-    let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
-    let Ok(read_half) = stream.try_clone() else {
-        return;
-    };
-    let mut reader = BufReader::new(read_half);
-    let mut write_half = stream;
-    let mut line = String::new();
-    loop {
-        line.clear();
-        match reader.read_line(&mut line) {
-            Ok(0) => break,
-            Ok(_) => {
-                let trimmed = line.trim();
-                if trimmed.is_empty() {
-                    continue;
-                }
-                let (mut resp, hard_error) = match handle_request(state, trimmed) {
-                    Ok(j) => (j.to_string(), false),
-                    Err(e) => {
-                        let mut o = Json::obj();
-                        o.set("ok", Json::Bool(false));
-                        o.set("error", Json::str(format!("{e:#}")));
-                        (o.to_string(), true)
-                    }
-                };
-                resp.push('\n');
-                if write_half
-                    .write_all(resp.as_bytes())
-                    .and_then(|()| write_half.flush())
-                    .is_err()
-                    || hard_error
-                {
-                    break;
-                }
-            }
-            Err(_) => break,
-        }
-    }
+/// connection is closed (the shared per-connection hard-error policy).
+fn accept_loop(listener: TcpListener, state: Arc<ServerState>, stop: Arc<AtomicBool>) {
+    wire::accept_loop(listener, stop, move |stream| {
+        wire::serve_conn(stream, ErrorPolicy::ReplyThenHangup, |line| {
+            handle_request(&state, line)
+        })
+    });
 }
 
 /// Dispatch one request line to one reply body (the caller wraps errors
@@ -691,6 +581,7 @@ fn handle_rotate(state: &ServerState) -> Result<Json> {
 mod tests {
     use super::*;
     use crate::coordinator::cache::JOURNAL_FILE;
+    use std::io::{BufRead, BufReader, Write};
 
     fn temp_dir(tag: &str) -> std::path::PathBuf {
         let dir =

@@ -56,7 +56,7 @@
 //! version and known profile names (`haqa device ping`).
 
 use std::collections::HashMap;
-use std::io::{BufRead, BufReader, Write};
+use std::io::Write;
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -76,12 +76,14 @@ use super::evaluator::{
     kernel_evaluation, parse_kernel_spec, Evaluation, Evaluator, KernelEvaluator,
 };
 use super::scenario::{Scenario, Track};
+use super::wire::{self, decode_result, encode_result, snip, Conn, ErrorPolicy};
 
 /// Wire-protocol version sent in every request and `hello` reply.
 pub const PROTOCOL_VERSION: f64 = 1.0;
 
-/// Bounded exponential connect backoff: base × 2ⁿ, never beyond this.
-pub const BACKOFF_CAP: Duration = Duration::from_secs(2);
+/// Re-exported from [`super::wire`], which now owns the one copy every
+/// connect-retrying client shares.
+pub use super::wire::BACKOFF_CAP;
 
 // ---- the evaluator spec -----------------------------------------------------
 
@@ -494,14 +496,20 @@ impl DeviceEvaluator {
     /// one reply line.
     fn round_trip(&self, request: &str) -> Result<String> {
         let addr = self.addr()?;
+        let requests = [request.to_string()];
         Backoff::new(self.max_retries, self.backoff_base, BACKOFF_CAP).run(|_| {
             match TcpStream::connect_timeout(&addr, self.timeout) {
                 // Past this point nothing is retried: the request may have
                 // reached the server, and a torn reply must fail loudly.
-                Ok(stream) => match exchange(stream, request, self.timeout) {
-                    Ok(reply) => Attempt::Done(reply),
-                    Err(e) => Attempt::Fatal(e),
-                },
+                Ok(stream) => {
+                    let reply = Conn::new(stream, self.timeout, "device-server")
+                        .and_then(|mut conn| conn.exchange(&requests))
+                        .map(|mut replies| replies.pop().expect("one reply per request"));
+                    match reply {
+                        Ok(reply) => Attempt::Done(reply),
+                        Err(e) => Attempt::Fatal(e),
+                    }
+                }
                 Err(e) => {
                     Attempt::Retry(anyhow::Error::from(e).context(format!("connecting to {addr}")))
                 }
@@ -556,26 +564,6 @@ impl Evaluator for DeviceEvaluator {
     }
 }
 
-fn exchange(mut stream: TcpStream, request: &str, timeout: Duration) -> Result<String> {
-    stream.set_read_timeout(Some(timeout))?;
-    stream.set_write_timeout(Some(timeout))?;
-    stream.write_all(request.as_bytes())?;
-    stream.write_all(b"\n")?;
-    stream.flush()?;
-    let mut reader = BufReader::new(stream);
-    let mut line = String::new();
-    let n = reader
-        .read_line(&mut line)
-        .context("reading device-server reply")?;
-    ensure!(n > 0, "device server closed the connection before replying");
-    ensure!(
-        line.ends_with('\n'),
-        "torn device-server reply (connection closed mid-line): {}",
-        snip(&line)
-    );
-    Ok(line)
-}
-
 fn parse_measure_reply(line: &str, expected: usize) -> Result<Vec<Evaluation>> {
     let j = json::parse(line.trim_end())
         .map_err(|e| anyhow!("malformed device-server reply ({e}): {}", snip(line)))?;
@@ -607,66 +595,6 @@ fn parse_measure_reply(line: &str, expected: usize) -> Result<Vec<Evaluation>> {
             })
         })
         .collect()
-}
-
-/// Debug-quoted 120-char prefix of a wire line for error messages (shared
-/// with the cache-server protocol, [`super::cache_server`]).
-pub(crate) fn snip(s: &str) -> String {
-    let t: String = s.trim_end().chars().take(120).collect();
-    format!("{t:?}")
-}
-
-/// One measurement on the wire: `bits`/`extra` carry the authoritative f64
-/// bit patterns (the `docs/CACHE.md` record encoding, minus the key).
-/// Shared with the cache-server protocol, which ships the same record
-/// shape for `get`/`put` results.
-pub(crate) fn encode_result(e: &Evaluation) -> Json {
-    let mut o = Json::obj();
-    o.set(
-        "score",
-        if e.score.is_finite() {
-            Json::Num(e.score)
-        } else {
-            Json::Null
-        },
-    );
-    o.set("bits", Json::str(format!("{:016x}", e.score.to_bits())));
-    if !e.extra.is_empty() {
-        o.set(
-            "extra",
-            Json::Arr(
-                e.extra
-                    .iter()
-                    .map(|x| Json::str(format!("{:016x}", x.to_bits())))
-                    .collect(),
-            ),
-        );
-    }
-    o.set("feedback", Json::Str(e.feedback.clone()));
-    o
-}
-
-/// Inverse of [`encode_result`] (`None` for records off the schema).
-pub(crate) fn decode_result(j: &Json) -> Option<Evaluation> {
-    let bits = u64::from_str_radix(j.get("bits")?.as_str()?, 16).ok()?;
-    let extra = match j.get("extra") {
-        None => Vec::new(),
-        Some(arr) => arr
-            .as_arr()?
-            .iter()
-            .map(|v| {
-                v.as_str()
-                    .and_then(|s| u64::from_str_radix(s, 16).ok())
-                    .map(f64::from_bits)
-            })
-            .collect::<Option<Vec<f64>>>()?,
-    };
-    let feedback = j.get("feedback")?.as_str()?.to_string();
-    Some(Evaluation {
-        score: f64::from_bits(bits),
-        extra,
-        feedback,
-    })
 }
 
 // ---- the server -------------------------------------------------------------
@@ -729,70 +657,23 @@ fn shared_stub() -> Result<&'static DeviceServer> {
 }
 
 fn accept_loop(listener: TcpListener, stop: Arc<AtomicBool>) {
-    for conn in listener.incoming() {
-        if stop.load(Ordering::SeqCst) {
-            break;
-        }
-        if let Ok(stream) = conn {
-            std::thread::spawn(move || handle_conn(stream));
-        }
-    }
+    // Every failure becomes an `{"ok":false,"error":…}` reply and the
+    // connection stays open — this server never closes a connection in
+    // lieu of an answer.
+    wire::accept_loop(listener, stop, |stream| {
+        wire::serve_conn(stream, ErrorPolicy::ReplyAndContinue, handle_request)
+    });
 }
 
-fn handle_conn(stream: TcpStream) {
-    // An idle client is dropped rather than pinning the handler thread.
-    let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
-    let Ok(read_half) = stream.try_clone() else {
-        return;
-    };
-    let mut reader = BufReader::new(read_half);
-    let mut write_half = stream;
-    let mut line = String::new();
-    loop {
-        line.clear();
-        match reader.read_line(&mut line) {
-            Ok(0) => break,
-            Ok(_) => {
-                let trimmed = line.trim();
-                if trimmed.is_empty() {
-                    continue;
-                }
-                let mut resp = handle_request(trimmed);
-                resp.push('\n');
-                if write_half
-                    .write_all(resp.as_bytes())
-                    .and_then(|()| write_half.flush())
-                    .is_err()
-                {
-                    break;
-                }
-            }
-            Err(_) => break,
-        }
-    }
-}
-
-/// Dispatch one request line to one reply line.  Every failure becomes an
-/// `{"ok":false,"error":…}` reply — the server never closes a connection
-/// in lieu of an answer.
-fn handle_request(line: &str) -> String {
-    let reply = match json::parse(line) {
-        Err(e) => Err(anyhow!("malformed request JSON: {e}")),
-        Ok(j) => match j.get("op").and_then(|v| v.as_str()) {
-            Some("hello") => Ok(hello_reply()),
-            Some("measure") => handle_measure(&j),
-            Some(other) => Err(anyhow!("unknown op '{other}'")),
-            None => Err(anyhow!("request has no \"op\"")),
-        },
-    };
-    match reply {
-        Ok(j) => j.to_string(),
-        Err(e) => {
-            let mut o = Json::obj();
-            o.set("ok", Json::Bool(false));
-            o.set("error", Json::str(format!("{e:#}")));
-            o.to_string()
-        }
+/// Dispatch one request line to one reply body (the shared connection
+/// loop wraps errors into `{"ok":false,…}` replies).
+fn handle_request(line: &str) -> Result<Json> {
+    let j = json::parse(line).map_err(|e| anyhow!("malformed request JSON: {e}"))?;
+    match j.get("op").and_then(|v| v.as_str()) {
+        Some("hello") => Ok(hello_reply()),
+        Some("measure") => handle_measure(&j),
+        Some(other) => Err(anyhow!("unknown op '{other}'")),
+        None => Err(anyhow!("request has no \"op\"")),
     }
 }
 
@@ -1025,6 +906,7 @@ impl Evaluator for ReplayEvaluator {
 mod tests {
     use super::*;
     use crate::util::rng::Rng;
+    use std::io::{BufRead, BufReader};
 
     fn kernel_scenario(evaluator: &str) -> Scenario {
         Scenario {

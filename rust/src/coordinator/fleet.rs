@@ -86,6 +86,7 @@ use anyhow::{anyhow, Result};
 
 use crate::agent::{AgentPool, BatchStats};
 use crate::runtime::ArtifactSet;
+use crate::util::knob::Knob;
 use crate::util::{lock, panic_message};
 
 use super::cache::{CacheStats, EvalCache};
@@ -259,6 +260,11 @@ impl FleetReport {
     ///   the evaluator used.
     /// * **kernel scenarios**: `[best score]` (negated latency), so the
     ///   front is each platform's best execution config per kernel.
+    /// * **traffic-scored scenarios** (bit-width track with a non-empty
+    ///   `traffic:` profile): `[-p99 latency (ms), tokens/s]` from the
+    ///   [`super::traffic::ServingEvaluator`]'s best round — tail latency
+    ///   against sustained throughput, grouped as `device/serving` so
+    ///   serving fronts never mix with lone-request bit-width fronts.
     ///
     /// Failed scenarios, non-deployment tracks (CNN/LM/joint), and
     /// bit-width outcomes whose best round picked no valid scheme are
@@ -271,6 +277,17 @@ impl FleetReport {
             .zip(scenarios)
             .filter_map(|(out, sc)| {
                 let out = out.as_ref().ok()?;
+                if sc.track == Track::Bitwidth && !sc.traffic.is_empty() {
+                    // Serving scenarios: score is -p99, extra[1] carries
+                    // the simulator's tokens/s (see ServingEvaluator).
+                    let best = crate::optimizers::best(&out.history)?;
+                    let tps = best.extra.get(1).copied()?;
+                    return Some(crate::report::ParetoItem {
+                        group: format!("{}/serving", sc.device),
+                        name: sc.name.clone(),
+                        objectives: vec![out.best_score, tps],
+                    });
+                }
                 let objectives = match sc.track {
                     Track::Kernel => vec![out.best_score],
                     Track::Bitwidth => {
@@ -545,37 +562,24 @@ impl FleetRunner {
     }
 
     /// Resolve the retry budget: explicit CLI value, else `HAQA_RETRIES`,
-    /// else 0 (fail fast).  Hard-error parsing like
-    /// [`FleetRunner::workers_from_env`] — `0` is a valid "off", garbage
-    /// is not; values clamp to [`MAX_RETRIES`].
+    /// else 0 (fail fast).  House [`Knob`] rules — `0` is a valid "off",
+    /// garbage is not; values clamp to [`MAX_RETRIES`].
     pub fn retries_from_env(cli: Option<usize>) -> Result<usize> {
-        let n = match cli {
-            Some(n) => n,
-            None => match std::env::var("HAQA_RETRIES") {
-                Ok(v) => v.trim().parse::<usize>().map_err(|_| {
-                    anyhow!("HAQA_RETRIES must be a non-negative integer, got '{v}'")
-                })?,
-                Err(_) => 0,
-            },
-        };
+        let n = Knob::counter("HAQA_RETRIES", "a non-negative integer")
+            .get(cli)?
+            .unwrap_or(0);
         Ok(n.min(MAX_RETRIES))
     }
 
     /// Resolve the worker count: explicit CLI value, else `HAQA_WORKERS`,
     /// else [`DEFAULT_WORKERS`] — clamped to the machine's available
-    /// parallelism.  An unparseable `HAQA_WORKERS` is a hard error (the
-    /// seed silently fell back to the default, turning typos into
-    /// mis-sized fleets).
+    /// parallelism.  An unparseable `HAQA_WORKERS` is a hard error under
+    /// the house [`Knob`] rules (the seed silently fell back to the
+    /// default, turning typos into mis-sized fleets).
     pub fn workers_from_env(cli: Option<usize>) -> Result<usize> {
-        let n = match cli {
-            Some(n) => n,
-            None => match std::env::var("HAQA_WORKERS") {
-                Ok(v) => v.trim().parse::<usize>().map_err(|_| {
-                    anyhow!("HAQA_WORKERS must be a positive integer, got '{v}'")
-                })?,
-                Err(_) => DEFAULT_WORKERS,
-            },
-        };
+        let n = Knob::counter("HAQA_WORKERS", "a positive integer")
+            .get(cli)?
+            .unwrap_or(DEFAULT_WORKERS);
         let max = std::thread::available_parallelism()
             .map(|p| p.get())
             .unwrap_or(DEFAULT_WORKERS);
@@ -583,46 +587,28 @@ impl FleetRunner {
     }
 
     /// Resolve the per-worker in-flight cap: explicit CLI value, else
-    /// `HAQA_INFLIGHT`, else 1 (blocking).  Same hard-error parsing
-    /// discipline as [`FleetRunner::workers_from_env`]; clamped to
-    /// [`MAX_INFLIGHT`].
+    /// `HAQA_INFLIGHT`, else 1 (blocking).  House [`Knob`] rules; clamped
+    /// to [`MAX_INFLIGHT`].
     pub fn inflight_from_env(cli: Option<usize>) -> Result<usize> {
-        let n = match cli {
-            Some(n) => n,
-            None => match std::env::var("HAQA_INFLIGHT") {
-                Ok(v) => v.trim().parse::<usize>().map_err(|_| {
-                    anyhow!("HAQA_INFLIGHT must be a positive integer, got '{v}'")
-                })?,
-                Err(_) => 1,
-            },
-        };
+        let n = Knob::counter("HAQA_INFLIGHT", "a positive integer")
+            .get(cli)?
+            .unwrap_or(1);
         Ok(n.clamp(1, MAX_INFLIGHT))
     }
 
     /// Resolve the provider batch size: explicit CLI value, else
-    /// `HAQA_BATCH`, else `None` (the per-scenario pipeline).  Hard-error
-    /// parsing like [`FleetRunner::inflight_from_env`], and a batch of 0 —
-    /// from either source — is itself a hard error rather than a silent
-    /// "off": a zero-sized batch can never make progress, so it is always
-    /// a typo.  Values above [`MAX_BATCH`] clamp.
+    /// `HAQA_BATCH`, else `None` (the per-scenario pipeline).  House
+    /// [`Knob`] rules, and a batch of 0 — from either source — is itself a
+    /// hard error rather than a silent "off": a zero-sized batch can never
+    /// make progress, so it is always a typo.  Values above [`MAX_BATCH`]
+    /// clamp.
     pub fn batch_from_env(cli: Option<usize>) -> Result<Option<usize>> {
-        let n = match cli {
-            Some(n) => Some(n),
-            None => match std::env::var("HAQA_BATCH") {
-                Ok(v) => Some(v.trim().parse::<usize>().map_err(|_| {
-                    anyhow!("HAQA_BATCH must be a positive integer, got '{v}'")
-                })?),
-                Err(_) => None,
-            },
-        };
-        match n {
-            Some(0) => Err(anyhow!(
-                "the provider batch size must be >= 1 (omit --batch/HAQA_BATCH \
-                 to keep the per-scenario agent pipeline)"
-            )),
-            Some(n) => Ok(Some(n.min(MAX_BATCH))),
-            None => Ok(None),
-        }
+        let n = Knob::counter("HAQA_BATCH", "a positive integer").require_nonzero(
+            cli,
+            "the provider batch size must be >= 1 (omit --batch/HAQA_BATCH \
+             to keep the per-scenario agent pipeline)",
+        )?;
+        Ok(n.map(|n| n.min(MAX_BATCH)))
     }
 
     /// Execute the batch; blocks until every scenario finished (or, under

@@ -61,7 +61,7 @@ pub fn scenario_key(sc: &Scenario) -> u128 {
         "name={}\ntrack={:?}\nmodel={}\nprecision={}\nbits={:08x}\noptimizer={}\n\
          budget={}\nseed={}\ndevice={}\nkernel={}\nsteps_per_epoch={}\n\
          step_scale={:016x}\npretrain_steps={}\nmemory_limit_gb={:016x}\n\
-         backend={}\nevaluator={}",
+         backend={}\nevaluator={}\ntraffic={}",
         sc.name,
         sc.track,
         sc.model,
@@ -78,6 +78,7 @@ pub fn scenario_key(sc: &Scenario) -> u128 {
         sc.memory_limit_gb.to_bits(),
         sc.backend,
         sc.evaluator,
+        sc.traffic,
     );
     hash::content_hash_128(payload.as_bytes())
 }
@@ -501,6 +502,11 @@ mod tests {
         edits.push(s);
         let mut s = base.clone();
         s.evaluator = "chaos:none=simulated".into();
+        edits.push(s);
+        // A traffic-scored scenario must never collide with its
+        // kernel-only twin in the journal or the eval cache.
+        let mut s = base.clone();
+        s.traffic = "chat-burst".into();
         edits.push(s);
         for e in &edits {
             assert_ne!(scenario_key(e), k0, "{e:?} must rekey");

@@ -68,6 +68,10 @@ pub struct MatrixSpec {
     pub models: Vec<String>,
     /// Memory budgets (GB) for the bit-width track.
     pub memory_limits_gb: Vec<f64>,
+    /// Traffic profiles for the serving sweep (see
+    /// [`super::traffic::PROFILE_NAMES`]).  Empty (the default) generates
+    /// no serving scenarios — the classic kernel + bit-width matrix.
+    pub traffic: Vec<String>,
 }
 
 impl Default for MatrixSpec {
@@ -102,6 +106,7 @@ impl Default for MatrixSpec {
             .map(|s| s.to_string())
             .collect(),
             memory_limits_gb: vec![4.0, 8.0, 12.0, 24.0],
+            traffic: Vec::new(),
         }
     }
 }
@@ -146,7 +151,7 @@ impl MatrixSpec {
     pub fn from_json(j: &Json) -> Result<MatrixSpec> {
         const KNOWN: &[&str] = &[
             "seed", "count", "devices", "budget", "backend", "kernels",
-            "optimizers", "models", "memory_limits_gb",
+            "optimizers", "models", "memory_limits_gb", "traffic",
         ];
         let obj = j
             .as_obj()
@@ -214,6 +219,9 @@ impl MatrixSpec {
             }
             spec.memory_limits_gb = lims;
         }
+        if let Some(v) = string_list(j, "traffic")? {
+            spec.traffic = v;
+        }
         spec.validate()?;
         Ok(spec)
     }
@@ -238,6 +246,9 @@ impl MatrixSpec {
         for m in &self.models {
             super::workflow::model_by_name(m).map_err(|e| anyhow!("matrix: {e}"))?;
         }
+        for t in &self.traffic {
+            super::traffic::TrafficProfile::parse(t).map_err(|e| anyhow!("matrix: {e}"))?;
+        }
         Ok(())
     }
 
@@ -245,6 +256,7 @@ impl MatrixSpec {
     pub fn pass_len(&self) -> usize {
         self.devices.len() * self.kernels.len() * self.optimizers.len()
             + self.devices.len() * self.models.len() * self.memory_limits_gb.len()
+            + self.devices.len() * self.models.len() * self.traffic.len()
     }
 
     /// Expand into exactly `count` scenarios.  Deterministic: scenario `i`
@@ -305,6 +317,37 @@ impl MatrixSpec {
                     }
                 }
             }
+            // Serving sweep last: traffic-shaped scoring on the bit-width
+            // track, one scenario per device × model × profile, at the
+            // most generous configured memory limit (tight limits are the
+            // bit-width sweep's axis; serving probes the tail under load).
+            let serve_limit = self
+                .memory_limits_gb
+                .iter()
+                .cloned()
+                .fold(f64::NEG_INFINITY, f64::max);
+            for device in &self.devices {
+                for model in &self.models {
+                    for profile in &self.traffic {
+                        if out.len() >= self.count {
+                            break 'fill;
+                        }
+                        let i = out.len();
+                        let seed = root.split(i as u64).next_u64() & SEED_MASK;
+                        out.push(Scenario {
+                            name: format!("gen/tr/{device}/{model}/{profile}/p{pass}"),
+                            track: Track::Bitwidth,
+                            model: model.clone(),
+                            seed,
+                            device: device.clone(),
+                            memory_limit_gb: serve_limit,
+                            traffic: profile.clone(),
+                            backend: self.backend.clone(),
+                            ..Scenario::default()
+                        });
+                    }
+                }
+            }
             pass += 1;
         }
         out
@@ -331,6 +374,9 @@ fn scenario_to_json(s: &Scenario) -> Json {
         Track::Bitwidth => {
             o.set("model", Json::str(&s.model));
             o.set("memory_limit_gb", Json::Num(s.memory_limit_gb));
+            if !s.traffic.is_empty() {
+                o.set("traffic", Json::str(&s.traffic));
+            }
         }
         _ => {
             o.set("kernel", Json::str(&s.kernel));
@@ -459,6 +505,7 @@ mod tests {
             r#"{"count": 5, "memory_limits_gb": [-1]}"#,        // bad limit
             r#"{"count": 5, "devcies": ["cpu"]}"#,              // typo'd key
             r#"{"count": 5, "devices": []}"#,                   // empty list
+            r#"{"count": 5, "traffic": ["rush-hour"]}"#,        // unknown profile
         ] {
             let j = json::parse(bad).unwrap();
             assert!(
@@ -466,6 +513,36 @@ mod tests {
                 "spec must be rejected: {bad}"
             );
         }
+    }
+
+    #[test]
+    fn traffic_axis_generates_serving_scenarios() {
+        let spec = MatrixSpec {
+            traffic: vec!["chat-burst".into(), "mobile-single-user".into()],
+            count: 24,
+            ..small_spec()
+        };
+        // 16 classic + 2*2*2 serving per pass.
+        assert_eq!(spec.pass_len(), 24);
+        let v = spec.expand();
+        let serving: Vec<_> = v.iter().filter(|s| !s.traffic.is_empty()).collect();
+        assert_eq!(serving.len(), 8);
+        for s in &serving {
+            assert_eq!(s.track, Track::Bitwidth);
+            assert!(s.name.starts_with("gen/tr/"), "{}", s.name);
+            assert_eq!(s.memory_limit_gb, 12.0, "most generous limit");
+        }
+        // The traffic field survives rendering and reloading.
+        let rendered = render_batch(&v);
+        assert!(rendered.contains("\"traffic\""));
+        let path = std::env::temp_dir()
+            .join(format!("haqa_matrix_traffic_{}.json", std::process::id()));
+        std::fs::write(&path, &rendered).unwrap();
+        let loaded = Scenario::load_many(path.to_str().unwrap()).unwrap();
+        for (l, d) in loaded.iter().zip(&v) {
+            assert_eq!(l.traffic, d.traffic);
+        }
+        let _ = std::fs::remove_file(path);
     }
 
     #[test]

@@ -25,6 +25,13 @@
 //!   retry policy runs on.
 //! * [`fleet_state`] — the group-committed `fleet_state.jsonl` outcome
 //!   journal behind `haqa fleet --resume`.
+//! * [`traffic`] — the traffic-shaped serving simulator: named arrival
+//!   profiles (`traffic:` scenario axis) through a deterministic
+//!   continuous-batching engine, scoring quantization configs by
+//!   p50/p99/throughput/rejections instead of lone-request token time.
+//! * [`wire`] — the shared JSONL/TCP substrate those three protocols
+//!   speak: line framing, the bit-exact f64 codec, connection loops and
+//!   the per-connection error policies.
 //! * [`serve`] — the resident fleet daemon (`haqa serve`) and its
 //!   `haqa submit` client: submissions over the JSONL/TCP idiom, warm
 //!   cache/pool reuse across jobs, bounded admission queue, per-client
@@ -54,6 +61,8 @@ pub mod matrix;
 pub mod scenario;
 pub mod serve;
 pub mod tasklog;
+pub mod traffic;
+pub mod wire;
 pub mod workflow;
 
 pub use cache::{CacheStats, CompactReport, EvalCache};
@@ -65,4 +74,5 @@ pub use fleet::{FleetReport, FleetRunner};
 pub use matrix::MatrixSpec;
 pub use scenario::Scenario;
 pub use serve::{FleetDaemon, ServeConfig, SubmitClient};
+pub use traffic::{ServingEvaluator, ServingReport, TrafficProfile};
 pub use workflow::{RoundState, SessionStatus, TrackOutcome, TrackSession, Workflow};

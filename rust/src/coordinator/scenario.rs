@@ -71,6 +71,13 @@ pub struct Scenario {
     pub pretrain_steps: usize,
     /// Deployment memory budget for bit-width selection (GB).
     pub memory_limit_gb: f64,
+    /// Traffic profile name (see [`super::traffic::PROFILE_NAMES`]).
+    /// Empty (the default) keeps the classic lone-request bit-width
+    /// scoring; a profile name swaps in the serving simulator
+    /// ([`super::traffic::ServingEvaluator`]) on the bit-width track, and
+    /// is folded into cache keys and the serve codec — a traffic-scored
+    /// evaluation must never collide with its kernel-only twin.
+    pub traffic: String,
     /// Agent backend spec for `optimizer: "haqa"` — see
     /// [`crate::agent::backend_from_spec`]: `simulated` (default),
     /// `simulated-slow:<ms>`, `record:<path>`, `replay:<path>`,
@@ -113,6 +120,7 @@ impl Default for Scenario {
             step_scale: 0.25,
             pretrain_steps: 400,
             memory_limit_gb: 10.0,
+            traffic: String::new(),
             backend: "simulated".into(),
             evaluator: "simulated".into(),
         }
@@ -167,6 +175,9 @@ impl Scenario {
         if let Some(v) = j.get("memory_limit_gb").and_then(|v| v.as_f64()) {
             s.memory_limit_gb = v;
         }
+        if let Some(v) = j.get("traffic").and_then(|v| v.as_str()) {
+            s.traffic = v.to_string();
+        }
         if let Some(v) = j.get("backend").and_then(|v| v.as_str()) {
             s.backend = v.to_string();
         }
@@ -195,7 +206,8 @@ impl Scenario {
         const KNOWN_KEYS: &[&str] = &[
             "name", "task", "model", "precision", "bits", "optimizer", "budget",
             "seed", "device", "kernel", "steps_per_epoch", "step_scale",
-            "pretrain_steps", "memory_limit_gb", "backend", "evaluator",
+            "pretrain_steps", "memory_limit_gb", "traffic", "backend",
+            "evaluator",
         ];
         let text = std::fs::read_to_string(path)?;
         let j = crate::util::json::parse(&text)

@@ -48,7 +48,6 @@
 //!   the process exits 0 once idle.
 
 use std::collections::{HashMap, VecDeque};
-use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -59,13 +58,14 @@ use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use crate::agent::AgentPool;
 use crate::util::json::{self, Json};
+use crate::util::knob::Knob;
 use crate::util::{hash, lock};
 
 use super::cache::EvalCache;
-use super::cache_server::{validate_addr, Conn};
 use super::fleet::FleetRunner;
 use super::fleet_state::{self, scenario_key};
 use super::scenario::{parse_precision, Scenario, Track};
+use super::wire::{self, f64_hex, hex_f64, validate_addr, Conn, ErrorPolicy};
 use super::workflow::TrackOutcome;
 
 /// Default daemon endpoint — one above the cache server's 7435.
@@ -99,38 +99,21 @@ pub fn serve_addr_from_env(cli: Option<&str>) -> Result<String> {
 }
 
 /// Resolve the admission queue bound: CLI value, else `HAQA_QUEUE_CAP`,
-/// else [`DEFAULT_QUEUE_CAP`].  Zero is a hard error — a daemon that can
-/// admit nothing is a misconfiguration, not a policy.
+/// else [`DEFAULT_QUEUE_CAP`].  House [`Knob`] rules, and zero is a hard
+/// error — a daemon that can admit nothing is a misconfiguration, not a
+/// policy.
 pub fn queue_cap_from_env(cli: Option<usize>) -> Result<usize> {
-    let resolved = match cli {
-        Some(n) => Some(n),
-        None => match std::env::var("HAQA_QUEUE_CAP") {
-            Ok(v) => Some(v.trim().parse::<usize>().map_err(|_| {
-                anyhow!("HAQA_QUEUE_CAP '{}' is not a queue bound (expected a positive integer)", v.trim())
-            })?),
-            Err(_) => None,
-        },
-    };
-    match resolved {
-        Some(0) => Err(anyhow!(
-            "the queue cap must be >= 1 (omit --queue-cap/HAQA_QUEUE_CAP for the default of {DEFAULT_QUEUE_CAP})"
-        )),
-        Some(n) => Ok(n),
-        None => Ok(DEFAULT_QUEUE_CAP),
-    }
+    let cap = Knob::counter("HAQA_QUEUE_CAP", "a positive integer").require_nonzero(
+        cli,
+        &format!(
+            "the queue cap must be >= 1 (omit --queue-cap/HAQA_QUEUE_CAP \
+             for the default of {DEFAULT_QUEUE_CAP})"
+        ),
+    )?;
+    Ok(cap.unwrap_or(DEFAULT_QUEUE_CAP))
 }
 
 // ---- the bit-exact scenario codec ------------------------------------------
-
-fn f64_hex(x: f64) -> Json {
-    Json::str(format!("{:016x}", x.to_bits()))
-}
-
-fn hex_f64(s: &str) -> Option<f64> {
-    (s.len() == 16)
-        .then(|| u64::from_str_radix(s, 16).ok().map(f64::from_bits))
-        .flatten()
-}
 
 /// Canonical scenario-file `task` value for a track (the exact strings
 /// [`Track::parse`] accepts).
@@ -168,6 +151,7 @@ pub fn scenario_to_wire(sc: &Scenario) -> Json {
     j.set("memory_limit_gb", f64_hex(sc.memory_limit_gb));
     j.set("backend", Json::str(&sc.backend));
     j.set("evaluator", Json::str(&sc.evaluator));
+    j.set("traffic", Json::str(&sc.traffic));
     j
 }
 
@@ -217,6 +201,7 @@ pub fn scenario_from_wire(j: &Json) -> Result<Scenario> {
         memory_limit_gb: req_f64_hex(j, "memory_limit_gb")?,
         backend: req_str(j, "backend")?.to_string(),
         evaluator: req_str(j, "evaluator")?.to_string(),
+        traffic: req_str(j, "traffic")?.to_string(),
     })
 }
 
@@ -715,61 +700,17 @@ fn run_one(state: &Arc<DaemonState>, id: u64) {
 
 // ---- the accept loop / protocol --------------------------------------------
 
-fn accept_loop(listener: TcpListener, state: Arc<DaemonState>, stop: Arc<AtomicBool>) {
-    for conn in listener.incoming() {
-        if stop.load(Ordering::SeqCst) {
-            break;
-        }
-        if let Ok(stream) = conn {
-            let state = Arc::clone(&state);
-            std::thread::spawn(move || handle_conn(stream, &state));
-        }
-    }
-}
-
-/// Serve one client until it hangs up — or sends garbage: an erroring
+/// Serve each client until it hangs up — or sends garbage: an erroring
 /// request gets `{"ok":false,"error":…}` and the connection closes (the
-/// per-connection hard-error idiom).  A `busy` reply is **not** an error:
-/// the connection stays open so the client can back off and retry.
-fn handle_conn(stream: TcpStream, state: &Arc<DaemonState>) {
-    let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
-    let Ok(read_half) = stream.try_clone() else {
-        return;
-    };
-    let mut reader = BufReader::new(read_half);
-    let mut write_half = stream;
-    let mut line = String::new();
-    loop {
-        line.clear();
-        match reader.read_line(&mut line) {
-            Ok(0) => break,
-            Ok(_) => {
-                let trimmed = line.trim();
-                if trimmed.is_empty() {
-                    continue;
-                }
-                let (mut resp, hard_error) = match handle_request(state, trimmed) {
-                    Ok(j) => (j.to_string(), false),
-                    Err(e) => {
-                        let mut o = Json::obj();
-                        o.set("ok", Json::Bool(false));
-                        o.set("error", Json::str(format!("{e:#}")));
-                        (o.to_string(), true)
-                    }
-                };
-                resp.push('\n');
-                if write_half
-                    .write_all(resp.as_bytes())
-                    .and_then(|()| write_half.flush())
-                    .is_err()
-                    || hard_error
-                {
-                    break;
-                }
-            }
-            Err(_) => break,
-        }
-    }
+/// shared per-connection hard-error policy).  A `busy` reply is **not**
+/// an error: the connection stays open so the client can back off and
+/// retry.
+fn accept_loop(listener: TcpListener, state: Arc<DaemonState>, stop: Arc<AtomicBool>) {
+    wire::accept_loop(listener, stop, move |stream| {
+        wire::serve_conn(stream, ErrorPolicy::ReplyThenHangup, |line| {
+            handle_request(&state, line)
+        })
+    });
 }
 
 fn handle_request(state: &Arc<DaemonState>, line: &str) -> Result<Json> {
@@ -1005,7 +946,7 @@ impl SubmitClient {
         let stream = TcpStream::connect_timeout(&sock, Duration::from_secs(5))
             .with_context(|| format!("connecting to the fleet daemon at {addr}"))?;
         Ok(SubmitClient {
-            conn: Conn::new(stream, Duration::from_secs(30))?,
+            conn: Conn::new(stream, wire::READ_TIMEOUT, "fleet-daemon")?,
         })
     }
 
@@ -1158,11 +1099,13 @@ mod tests {
         sc.memory_limit_gb = 7.0 + 1e-12;
         sc.backend = "chaos:transient@1=simulated".into();
         sc.evaluator = "chaos:timeout@2=simulated".into();
+        sc.traffic = "chat-burst".into();
         let line = scenario_to_wire(&sc).to_string();
         let back = scenario_from_wire(&json::parse(&line).unwrap()).unwrap();
         assert_eq!(scenario_key(&back), scenario_key(&sc), "key survives the wire");
         assert_eq!(back.seed, sc.seed);
         assert_eq!(back.bits.to_bits(), sc.bits.to_bits());
+        assert_eq!(back.traffic, "chat-burst");
 
         // Partial scenarios are hard errors, not silent defaults.
         let err = scenario_from_wire(&json::parse(r#"{"name":"x"}"#).unwrap());

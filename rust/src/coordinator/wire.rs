@@ -1,0 +1,322 @@
+//! The shared JSONL/TCP substrate every network seam speaks.
+//!
+//! Three protocols grew on the same idiom — the device-measurement
+//! protocol ([`super::device`]), the warm-cache server
+//! ([`super::cache_server`]) and the resident fleet daemon
+//! ([`super::serve`]) — and each originally carried its own copy of the
+//! framing, codec and timeout plumbing.  This module is the one
+//! implementation they all import:
+//!
+//! * **Line framing** — one JSON object per `\n`-terminated line in each
+//!   direction.  [`Conn`] is the client half (pipelined requests, one
+//!   reply line per request, torn/closed replies are hard errors);
+//!   [`serve_conn`] is the server half (a per-connection handler loop
+//!   with a [`READ_TIMEOUT`] so idle clients never pin handler threads).
+//! * **Bit-exact float codec** — scores and every other f64 cross the
+//!   wire as the hex of their bit pattern ([`f64_hex`]/[`hex_f64`]),
+//!   never as decimal text, so both sides agree to the last bit.
+//!   [`encode_result`]/[`decode_result`] apply that rule to whole
+//!   [`Evaluation`] records (the `docs/CACHE.md` encoding minus the key).
+//! * **Error policy** — a failing request always gets an
+//!   `{"ok":false,"error":…}` reply; [`ErrorPolicy`] says what happens
+//!   next.  The cache server and the fleet daemon hang up on the confused
+//!   client (`ReplyThenHangup` — a per-connection hard error that can
+//!   never poison another client's session); the device server keeps the
+//!   connection open (`ReplyAndContinue` — it never closes a connection
+//!   in lieu of an answer).
+//! * **Endpoint hygiene** — [`validate_addr`] is the one `host:port`
+//!   validator behind every address knob, and [`BACKOFF_CAP`] bounds the
+//!   exponential connect backoff every client shares.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{anyhow, ensure, Context, Result};
+
+use crate::util::json::Json;
+
+use super::evaluator::Evaluation;
+
+/// Read timeout every server puts on a connection: an idle client is
+/// dropped rather than pinning its handler thread forever.  Clients use
+/// the same bound for reply reads ([`super::serve::SubmitClient`]).
+pub const READ_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Bounded exponential connect backoff: base × 2ⁿ, never beyond this.
+pub const BACKOFF_CAP: Duration = Duration::from_secs(2);
+
+/// Validate a `host:port` endpoint spec and return it trimmed.  The one
+/// rule behind every address knob (`--cache-addr`, `--addr`, …).
+pub(crate) fn validate_addr(spec: &str) -> Result<String> {
+    let spec = spec.trim();
+    let (host, port) = spec
+        .rsplit_once(':')
+        .ok_or_else(|| anyhow!("expected host:port"))?;
+    ensure!(!host.is_empty(), "empty host (expected host:port)");
+    port.parse::<u16>()
+        .map_err(|_| anyhow!("bad port '{port}' (expected host:port)"))?;
+    Ok(spec.to_string())
+}
+
+/// Debug-quoted 120-char prefix of a wire line for error messages.
+pub(crate) fn snip(s: &str) -> String {
+    let t: String = s.trim_end().chars().take(120).collect();
+    format!("{t:?}")
+}
+
+/// An f64 as the 16-hex-digit string of its bit pattern — decimal JSON
+/// does not round-trip doubles, bits do.
+pub(crate) fn f64_hex(x: f64) -> Json {
+    Json::str(format!("{:016x}", x.to_bits()))
+}
+
+/// Inverse of [`f64_hex`] (`None` for anything but 16 hex digits).
+pub(crate) fn hex_f64(s: &str) -> Option<f64> {
+    (s.len() == 16)
+        .then(|| u64::from_str_radix(s, 16).ok().map(f64::from_bits))
+        .flatten()
+}
+
+/// One measurement on the wire: `bits`/`extra` carry the authoritative f64
+/// bit patterns (the `docs/CACHE.md` record encoding, minus the key).
+/// Shared by the device and cache-server protocols, which ship the same
+/// record shape.
+pub(crate) fn encode_result(e: &Evaluation) -> Json {
+    let mut o = Json::obj();
+    o.set(
+        "score",
+        if e.score.is_finite() {
+            Json::Num(e.score)
+        } else {
+            Json::Null
+        },
+    );
+    o.set("bits", Json::str(format!("{:016x}", e.score.to_bits())));
+    if !e.extra.is_empty() {
+        o.set(
+            "extra",
+            Json::Arr(
+                e.extra
+                    .iter()
+                    .map(|x| Json::str(format!("{:016x}", x.to_bits())))
+                    .collect(),
+            ),
+        );
+    }
+    o.set("feedback", Json::Str(e.feedback.clone()));
+    o
+}
+
+/// Inverse of [`encode_result`] (`None` for records off the schema).
+pub(crate) fn decode_result(j: &Json) -> Option<Evaluation> {
+    let bits = u64::from_str_radix(j.get("bits")?.as_str()?, 16).ok()?;
+    let extra = match j.get("extra") {
+        None => Vec::new(),
+        Some(arr) => arr
+            .as_arr()?
+            .iter()
+            .map(|v| {
+                v.as_str()
+                    .and_then(|s| u64::from_str_radix(s, 16).ok())
+                    .map(f64::from_bits)
+            })
+            .collect::<Option<Vec<f64>>>()?,
+    };
+    let feedback = j.get("feedback")?.as_str()?.to_string();
+    Some(Evaluation {
+        score: f64::from_bits(bits),
+        extra,
+        feedback,
+    })
+}
+
+// ---- the client half --------------------------------------------------------
+
+/// One persistent client connection: requests and pipelined replies share
+/// the stream, so a sweep's `put`s cost one flush + one read loop.  The
+/// `peer` label (e.g. `"cache-server"`) names the far side in transport
+/// errors.
+pub(crate) struct Conn {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    peer: &'static str,
+}
+
+impl Conn {
+    /// Wrap a connected stream with both timeouts set.
+    pub(crate) fn new(stream: TcpStream, timeout: Duration, peer: &'static str) -> Result<Conn> {
+        stream.set_read_timeout(Some(timeout))?;
+        stream.set_write_timeout(Some(timeout))?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Conn {
+            reader,
+            writer: stream,
+            peer,
+        })
+    }
+
+    /// Write every request line, flush once, then read exactly one reply
+    /// line per request.  Any failure past the write is a hard error —
+    /// the requests may have reached the server.
+    pub(crate) fn exchange(&mut self, requests: &[String]) -> Result<Vec<String>> {
+        let mut out = String::new();
+        for r in requests {
+            out.push_str(r);
+            out.push('\n');
+        }
+        self.writer.write_all(out.as_bytes())?;
+        self.writer.flush()?;
+        let mut replies = Vec::with_capacity(requests.len());
+        for _ in requests {
+            let mut line = String::new();
+            let n = self
+                .reader
+                .read_line(&mut line)
+                .with_context(|| format!("reading {} reply", self.peer))?;
+            ensure!(
+                n > 0,
+                "{} closed the connection before replying",
+                self.peer.replace('-', " ")
+            );
+            ensure!(
+                line.ends_with('\n'),
+                "torn {} reply (connection closed mid-line): {}",
+                self.peer,
+                snip(&line)
+            );
+            replies.push(line);
+        }
+        Ok(replies)
+    }
+}
+
+// ---- the server half --------------------------------------------------------
+
+/// What a server does after replying `{"ok":false,…}` to a failing
+/// request (the reply itself is unconditional).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum ErrorPolicy {
+    /// Keep serving the connection — the device protocol never closes a
+    /// connection in lieu of an answer.
+    ReplyAndContinue,
+    /// Close the connection — a per-connection hard error (cache server,
+    /// fleet daemon): one client's garbage can never poison another's
+    /// session, and the confused client fails loudly.
+    ReplyThenHangup,
+}
+
+/// Serve one client until it hangs up: read `\n`-framed request lines
+/// (under [`READ_TIMEOUT`]), dispatch each through `handle`, reply one
+/// line per request.  A handler error becomes an `{"ok":false,"error":…}`
+/// reply and then `policy` decides whether the connection survives.  A
+/// half-written final line (client died mid-request) is simply dropped.
+pub(crate) fn serve_conn(
+    stream: TcpStream,
+    policy: ErrorPolicy,
+    mut handle: impl FnMut(&str) -> Result<Json>,
+) {
+    let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
+    let Ok(read_half) = stream.try_clone() else {
+        return;
+    };
+    let mut reader = BufReader::new(read_half);
+    let mut write_half = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => break,
+            Ok(_) => {
+                let trimmed = line.trim();
+                if trimmed.is_empty() {
+                    continue;
+                }
+                let (mut resp, hard_error) = match handle(trimmed) {
+                    Ok(j) => (j.to_string(), false),
+                    Err(e) => {
+                        let mut o = Json::obj();
+                        o.set("ok", Json::Bool(false));
+                        o.set("error", Json::str(format!("{e:#}")));
+                        (o.to_string(), policy == ErrorPolicy::ReplyThenHangup)
+                    }
+                };
+                resp.push('\n');
+                if write_half
+                    .write_all(resp.as_bytes())
+                    .and_then(|()| write_half.flush())
+                    .is_err()
+                    || hard_error
+                {
+                    break;
+                }
+            }
+            Err(_) => break,
+        }
+    }
+}
+
+/// The accept loop every server runs on its background thread: one
+/// handler thread per connection, until `stop` is raised (each server's
+/// `Drop` raises it and then unblocks the loop with a throwaway connect).
+pub(crate) fn accept_loop<F>(listener: TcpListener, stop: Arc<AtomicBool>, handler: F)
+where
+    F: Fn(TcpStream) + Send + Sync + Clone + 'static,
+{
+    for conn in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        if let Ok(stream) = conn {
+            let handler = handler.clone();
+            std::thread::spawn(move || handler(stream));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn floats_round_trip_as_bit_patterns() {
+        for x in [0.1 + 0.2, -36.86, f64::MAX, -0.0, f64::INFINITY] {
+            let j = f64_hex(x);
+            let back = hex_f64(j.as_str().unwrap()).unwrap();
+            assert_eq!(back.to_bits(), x.to_bits(), "{x} must survive the wire");
+        }
+        // NaN keeps its exact payload too — the codec is bits, not value.
+        let nan = f64::from_bits(0x7ff8_0000_dead_beef);
+        let back = hex_f64(f64_hex(nan).as_str().unwrap()).unwrap();
+        assert_eq!(back.to_bits(), nan.to_bits());
+        assert_eq!(hex_f64("xyz"), None);
+        assert_eq!(hex_f64("00"), None, "length-checked");
+    }
+
+    #[test]
+    fn results_round_trip_bit_exactly() {
+        let e = Evaluation {
+            score: -(0.1 + 0.2),
+            extra: vec![f64::NEG_INFINITY, 1e-300],
+            feedback: "{\"latency_us\": 36.86}".into(),
+        };
+        let back = decode_result(&encode_result(&e)).unwrap();
+        assert_eq!(back.score.to_bits(), e.score.to_bits());
+        assert_eq!(back.extra.len(), 2);
+        assert_eq!(back.extra[0].to_bits(), e.extra[0].to_bits());
+        assert_eq!(back.extra[1].to_bits(), e.extra[1].to_bits());
+        assert_eq!(back.feedback, e.feedback);
+        // Off-schema records decode to None, never to a default.
+        assert_eq!(decode_result(&Json::obj()), None);
+    }
+
+    #[test]
+    fn addr_validation_is_strict() {
+        assert_eq!(validate_addr(" h:1 ").unwrap(), "h:1", "trimmed");
+        for bad in ["", "hostonly", ":7435", "host:", "host:notaport", "host:99999"] {
+            assert!(validate_addr(bad).is_err(), "'{bad}' must be a hard error");
+        }
+    }
+}

@@ -396,9 +396,19 @@ impl<'a> Workflow<'a> {
                 }
                 Track::Bitwidth => {
                     super::device::require_simulated(sc)?;
-                    let e = BitwidthEvaluator::from_scenario(sc)?;
-                    let obj = e.objective();
-                    let ev = super::device::wrap_chaos(sc, Box::new(e))?;
+                    // A `traffic:` profile swaps the lone-request roofline
+                    // for the serving simulator — same track, same agent
+                    // task, different physics (p99 instead of mean).
+                    let (e, obj): (Box<dyn Evaluator>, Json) = if sc.traffic.is_empty() {
+                        let e = BitwidthEvaluator::from_scenario(sc)?;
+                        let obj = e.objective();
+                        (Box::new(e), obj)
+                    } else {
+                        let e = super::traffic::ServingEvaluator::from_scenario(sc)?;
+                        let obj = e.objective();
+                        (Box::new(e), obj)
+                    };
+                    let ev = super::device::wrap_chaos(sc, e)?;
                     (ev, obj, TaskKind::Bitwidth, RNG_BITWIDTH)
                 }
                 Track::Joint => bail!("joint scenarios chain three sessions — use run_joint"),
@@ -440,9 +450,16 @@ impl<'a> Workflow<'a> {
     /// cross-checked against the analytic selector.
     pub fn run_bitwidth(&self, sc: &Scenario) -> Result<TrackOutcome> {
         super::device::require_simulated(sc)?;
-        let e = BitwidthEvaluator::from_scenario(sc)?;
-        let obj = e.objective();
-        let ev = super::device::wrap_chaos(sc, Box::new(e))?;
+        let (e, obj): (Box<dyn Evaluator>, Json) = if sc.traffic.is_empty() {
+            let e = BitwidthEvaluator::from_scenario(sc)?;
+            let obj = e.objective();
+            (Box::new(e), obj)
+        } else {
+            let e = super::traffic::ServingEvaluator::from_scenario(sc)?;
+            let obj = e.objective();
+            (Box::new(e), obj)
+        };
+        let ev = super::device::wrap_chaos(sc, e)?;
         let mut opt = self.make_optimizer(sc, TaskKind::Bitwidth, obj)?;
         self.run_track(sc, opt.as_mut(), ev.as_ref(), RNG_BITWIDTH)
     }

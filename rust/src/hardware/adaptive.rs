@@ -12,17 +12,31 @@ use super::memory;
 use super::models::ModelProfile;
 use super::profile::DeviceProfile;
 
+/// The three roofline components of [`token_time_ms`], in order
+/// `(mem_ms, compute_ms, launch_ms)`: weight streaming, per-parameter
+/// compute overhead (dequant/MMA issue), per-layer kernel launch.
+///
+/// Exposed separately because they scale differently with batch size —
+/// one decode step of a continuous batch streams the weights **once**
+/// but pays the compute term per sequence — which is what the serving
+/// simulator ([`crate::coordinator::traffic`]) builds its batched decode
+/// step from.
+pub fn token_time_parts(model: &ModelProfile, scheme: Scheme, dev: &DeviceProfile) -> (f64, f64, f64) {
+    let params = model.params_b * 1e9;
+    let bytes = params * scheme.bytes_per_weight();
+    let mem_ms = bytes / (dev.mem_bw_gbps * 1e9) * 1e3;
+    let compute_ms = model.params_b * dev.ov_ps(scheme);
+    let launch_ms = model.layers as f64 * dev.launch_overhead_ms;
+    (mem_ms, compute_ms, launch_ms)
+}
+
 /// Decode-path token time (ms) for a model/scheme/device — the §4.4
 /// roofline: memory streaming + per-parameter compute overhead + per-layer
 /// launch overhead.  On devices without native INT4 the overhead term
 /// dominates the bandwidth savings, which is exactly the counterintuitive
 /// INT8-beats-INT4 result.
 pub fn token_time_ms(model: &ModelProfile, scheme: Scheme, dev: &DeviceProfile) -> f64 {
-    let params = model.params_b * 1e9;
-    let bytes = params * scheme.bytes_per_weight();
-    let mem_ms = bytes / (dev.mem_bw_gbps * 1e9) * 1e3;
-    let compute_ms = model.params_b * dev.ov_ps(scheme);
-    let launch_ms = model.layers as f64 * dev.launch_overhead_ms;
+    let (mem_ms, compute_ms, launch_ms) = token_time_parts(model, scheme, dev);
     mem_ms + compute_ms + launch_ms
 }
 

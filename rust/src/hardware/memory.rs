@@ -54,6 +54,17 @@ pub fn fits(model: &ModelProfile, scheme: Scheme, limit_gb: f64) -> bool {
     footprint_gb(model, scheme) <= limit_gb
 }
 
+/// KV-cache token budget under `limit_gb`: the tokens' worth of fp16 KV
+/// cache that fit after the weights and runtime buffers are resident.
+/// Negative when the weights alone bust the budget — callers treat that
+/// as deployment rejection.  This is the admission currency of the
+/// serving simulator ([`crate::coordinator::traffic`]): each in-flight
+/// request reserves `prompt + output` tokens of it.
+pub fn kv_budget_tokens(model: &ModelProfile, scheme: Scheme, limit_gb: f64) -> f64 {
+    let fp = footprint(model, scheme, 0);
+    (limit_gb - fp.weights_gb - fp.runtime_gb) * 1e9 / model.kv_bytes_per_token()
+}
+
 /// The paper's Table 5 memory budgets.
 pub const TABLE5_BUDGETS_GB: [f64; 4] = [4.0, 12.0, 20.0, 28.0];
 

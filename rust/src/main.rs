@@ -28,6 +28,7 @@
 //!                              + 10k-scenario scale phase → BENCH_6.json
 //!                              + chaos fault-overhead phase → BENCH_7.json
 //!                              + distributed remote-cache phase → BENCH_8.json
+//!                              + traffic-shaped serving phase → BENCH_10.json
 //! haqa serve [--addr]          resident fleet daemon: warm cache/agent pool
 //!                              across submissions, bounded admission queue,
 //!                              per-client scoped journals, graceful drain
@@ -108,11 +109,14 @@ haqa — hardware-aware quantization agent (paper reproduction)
                             a {\"matrix\": …} generator spec directly; the first
                             SIGINT drains in-flight work, a second force-kills)
   haqa scenarios gen        expand a scenario-matrix spec deterministically
-                            (--spec/--count/--seed/--out); feeds `haqa fleet`
+                            (--spec/--count/--seed/--out); axes include a
+                            `traffic` list of serving profiles; feeds `haqa
+                            fleet`
   haqa bench                cold/warm serial/fleet throughput harness plus the
                             agent-overlap, provider-batching, 10k-scenario
-                            scale, chaos fault-overhead and distributed
-                            remote-cache phases; --help
+                            scale, chaos fault-overhead, distributed
+                            remote-cache and traffic-shaped serving phases;
+                            --help
   haqa serve                resident fleet daemon on HOST:PORT (default
                             127.0.0.1:7436): submit/status/results/cancel/drain
                             over JSONL/TCP, warm eval cache + agent pool across
@@ -230,24 +234,41 @@ fn bitwidth(rest: Vec<String>) -> Result<()> {
         .opt_default("model", "llama2-13b", "deployment model")
         .opt_default("device", "a6000", "a6000 | adreno740")
         .opt_default("memory-gb", "10", "memory limit")
+        .opt(
+            "traffic",
+            "score under a named traffic profile (chat-burst | batch-offline | \
+             mobile-single-user) instead of lone-request token time",
+        )
+        .opt_default("seed", "0", "rng seed (shapes the traffic arrival stream)")
         .parse(rest)?;
+    let traffic = a.get("traffic").unwrap_or("").to_string();
     let sc = Scenario {
         name: "bitwidth".into(),
         track: Track::Bitwidth,
         model: a.get("model").unwrap().to_string(),
         device: a.get("device").unwrap().to_string(),
         memory_limit_gb: a.get_f64("memory-gb")?.unwrap_or(10.0),
+        seed: a.get_f64("seed")?.unwrap_or(0.0) as u64,
+        traffic: traffic.clone(),
         ..Scenario::default()
     };
     // Bit-width selection runs on the analytic models — no artifacts needed.
     let wf = Workflow::simulated();
     let out = wf.run_bitwidth(&sc)?;
     let o = &out.history[0];
-    println!(
-        "agent choice: {:?}  (simulated {:.2} tokens/s)",
-        o.config.get("quant"),
-        o.score
-    );
+    if traffic.is_empty() {
+        println!(
+            "agent choice: {:?}  (simulated {:.2} tokens/s)",
+            o.config.get("quant"),
+            o.score
+        );
+    } else {
+        println!(
+            "agent choice: {:?}  (simulated p99 {:.1} ms under '{traffic}')",
+            o.config.get("quant"),
+            -o.score
+        );
+    }
     println!("feedback: {}", o.feedback);
     Ok(())
 }
@@ -857,8 +878,9 @@ fn scenarios_cmd(rest: Vec<String>) -> Result<()> {
 /// Plus a batched-measurement microbench (per-call latency-model setup vs
 /// one setup per slice), the agent-overlap phase (`BENCH_3.json`), the
 /// provider-batching phase (`BENCH_5.json`), the 10k-scenario scale phase
-/// (`BENCH_6.json`), the chaos fault-overhead phase (`BENCH_7.json`) and
-/// the distributed remote-cache phase (`BENCH_8.json`).
+/// (`BENCH_6.json`), the chaos fault-overhead phase (`BENCH_7.json`), the
+/// distributed remote-cache phase (`BENCH_8.json`) and the traffic-shaped
+/// serving phase (`BENCH_10.json`).
 /// Hard-fails if any phase
 /// pair diverges, the warm run sees zero cache hits, overlap yields no
 /// speedup, or batching does not reduce provider requests — so CI can
@@ -892,11 +914,17 @@ fn bench_fleet(rest: Vec<String>) -> Result<()> {
             "BENCH_8.json",
             "distributed remote-cache report output path",
         )
+        .opt_default(
+            "traffic-out",
+            "BENCH_10.json",
+            "traffic-shaped serving report output path",
+        )
         .flag("skip-overlap", "skip the blocking-vs-pipelined agent-overlap phase")
         .flag("skip-batching", "skip the unbatched-vs-batched provider-request phase")
         .flag("skip-scale", "skip the generated-matrix capped-vs-unbounded scale phase")
         .flag("skip-chaos", "skip the fault-injection overhead/bit-identity phase")
         .flag("skip-distributed", "skip the two-fleets-one-cache-server distributed phase")
+        .flag("skip-traffic", "skip the traffic-shaped serving divergence/bit-identity phase")
         .flag("quick", "small scenario set (CI perf smoke)")
         .parse(rest)?;
     let quick = a.get_bool("quick");
@@ -1040,6 +1068,9 @@ fn bench_fleet(rest: Vec<String>) -> Result<()> {
             workers,
             a.get("distributed-out").unwrap_or("BENCH_8.json"),
         )?;
+    }
+    if !a.get_bool("skip-traffic") {
+        bench_traffic(quick, workers, a.get("traffic-out").unwrap_or("BENCH_10.json"))?;
     }
     Ok(())
 }
@@ -1555,6 +1586,156 @@ fn bench_chaos(quick: bool, rounds: usize, workers: usize, out_path: &str) -> Re
     anyhow::ensure!(
         overhead_ok,
         "chaos:none wrapper overhead {overhead:.2}x exceeds the noise bound"
+    );
+    Ok(())
+}
+
+/// The traffic-shaped serving phase (`BENCH_10.json`), two sub-phases:
+///
+/// 1. **Analytic sweep** — on the reference deployment (llama2-7b /
+///    a6000 / 24 GB) simulate every quantization scheme under every named
+///    traffic profile and record the p99-optimal scheme next to the
+///    scheme the lone-request roofline (mean token time) would pick.
+///    Hard-fails unless at least one profile's p99 winner **differs**
+///    from the roofline winner — the reason this phase exists: a batched
+///    decode step pays dequant compute per sequence but streams weights
+///    once, so the low-bit scheme that wins a lone request can lose the
+///    tail under bursty load.
+/// 2. **Fleet bit-identity** — a traffic-scored bit-width fleet run with
+///    1 worker and with N workers; hard-fails unless the scores are
+///    bit-identical, the same gate every other phase applies.
+fn bench_traffic(quick: bool, workers: usize, out_path: &str) -> Result<()> {
+    use haqa::coordinator::traffic::{simulate, TrafficProfile};
+    use haqa::coordinator::FleetReport;
+    use haqa::hardware::adaptive;
+    use haqa::quant::Scheme;
+    use haqa::util::json::Json;
+
+    const MODEL: &str = "llama2-7b";
+    const DEVICE: &str = "a6000";
+    const LIMIT_GB: f64 = 24.0;
+    const SEED: u64 = 11;
+
+    let model = haqa::coordinator::workflow::model_by_name(MODEL)?;
+    let dev = haqa::hardware::preset(DEVICE)
+        .ok_or_else(|| anyhow::anyhow!("unknown device preset '{DEVICE}'"))?;
+    println!("traffic: {MODEL} on {DEVICE} @ {LIMIT_GB} GB, seed {SEED}");
+
+    // The scheme the lone-request roofline ranks first — what a
+    // mean-latency objective would deploy.
+    let mean_best = Scheme::ALL
+        .into_iter()
+        .min_by(|a, b| {
+            adaptive::token_time_ms(&model, *a, &dev)
+                .total_cmp(&adaptive::token_time_ms(&model, *b, &dev))
+        })
+        .expect("Scheme::ALL is non-empty");
+
+    let mut profiles_json = Json::obj();
+    let mut divergent: Vec<&'static str> = Vec::new();
+    for profile in TrafficProfile::all() {
+        let mut best: Option<(Scheme, f64)> = None;
+        let mut schemes_json = Json::obj();
+        for scheme in Scheme::ALL {
+            let rep = simulate(&model, scheme, &dev, &profile, LIMIT_GB, SEED);
+            match best {
+                Some((_, incumbent)) if incumbent <= rep.p99_ms => {}
+                _ => best = Some((scheme, rep.p99_ms)),
+            }
+            schemes_json.set(scheme.label(), rep.to_json());
+        }
+        let (p99_best, p99_ms) = best.expect("Scheme::ALL is non-empty");
+        let diverges = p99_best != mean_best;
+        if diverges {
+            divergent.push(profile.name);
+        }
+        println!(
+            "  {:<18}: p99-optimal {} ({p99_ms:.1}ms)  roofline-optimal {}{}",
+            profile.name,
+            p99_best.label(),
+            mean_best.label(),
+            if diverges { "  << diverges" } else { "" }
+        );
+        let mut p = Json::obj();
+        p.set("p99_optimal", Json::str(p99_best.label()));
+        p.set("mean_optimal", Json::str(mean_best.label()));
+        p.set("diverges", Json::Bool(diverges));
+        p.set("schemes", schemes_json);
+        profiles_json.set(profile.name, p);
+    }
+
+    // Fleet sub-phase: the same traffic-scored scenarios through the
+    // full agent round loop, serial vs parallel.
+    let models: &[&str] = if quick { &[MODEL] } else { &[MODEL, "tinyllama-1.1b"] };
+    let mut scenarios = Vec::new();
+    for (i, m) in models.iter().enumerate() {
+        for (j, name) in haqa::coordinator::traffic::PROFILE_NAMES.iter().enumerate() {
+            scenarios.push(Scenario {
+                name: format!("bench_tr_{m}_{name}"),
+                track: Track::Bitwidth,
+                model: (*m).into(),
+                device: DEVICE.into(),
+                memory_limit_gb: LIMIT_GB,
+                traffic: (*name).into(),
+                budget: 6,
+                seed: SEED + (i * 16 + j) as u64,
+                ..Scenario::default()
+            });
+        }
+    }
+    let timed = |workers: usize| -> Result<(f64, Vec<u64>)> {
+        let t0 = std::time::Instant::now();
+        let report: FleetReport = FleetRunner::new(workers).quiet().run(&scenarios);
+        let wall = t0.elapsed().as_secs_f64();
+        let mut bits = Vec::with_capacity(scenarios.len());
+        for (sc, out) in scenarios.iter().zip(&report.outcomes) {
+            let o = out.as_ref().map_err(|e| anyhow::anyhow!("{}: {e:#}", sc.name))?;
+            bits.push(o.best_score.to_bits());
+        }
+        Ok((wall, bits))
+    };
+    let (serial_wall, serial_bits) = timed(1)?;
+    println!("  serial fleet : {serial_wall:8.3}s  ({} scenarios)", scenarios.len());
+    let (fleet_wall, fleet_bits) = timed(workers)?;
+    println!("  {workers}-worker fleet: {fleet_wall:7.3}s");
+    let bit_identical = serial_bits == fleet_bits;
+
+    let mut phases = Json::obj();
+    let phase = |wall: f64| -> Json {
+        let mut o = Json::obj();
+        o.set("wall_s", Json::Num(wall));
+        o
+    };
+    phases.set("serial_fleet", phase(serial_wall));
+    phases.set("worker_fleet", phase(fleet_wall));
+    let mut j = Json::obj();
+    j.set("bench", Json::str("haqa bench traffic"));
+    j.set("quick", Json::Bool(quick));
+    j.set("model", Json::str(MODEL));
+    j.set("device", Json::str(DEVICE));
+    j.set("memory_limit_gb", Json::Num(LIMIT_GB));
+    j.set("seed", Json::Num(SEED as f64));
+    j.set("profiles", profiles_json);
+    j.set(
+        "divergent_profiles",
+        Json::Arr(divergent.iter().map(|n| Json::str(*n)).collect()),
+    );
+    j.set("fleet_scenarios", Json::Num(scenarios.len() as f64));
+    j.set("workers", Json::Num(workers as f64));
+    j.set("phases", phases);
+    j.set("bit_identical", Json::Bool(bit_identical));
+    std::fs::write(out_path, j.to_string_pretty())?;
+    println!("  report       : {out_path}");
+
+    anyhow::ensure!(
+        !divergent.is_empty(),
+        "no traffic profile made the p99-optimal scheme diverge from the \
+         lone-request roofline pick — the serving simulator is gating nothing"
+    );
+    anyhow::ensure!(
+        bit_identical,
+        "serial and {workers}-worker traffic-scored fleets diverged — serving \
+         evaluations must be bit-identical under parallelism"
     );
     Ok(())
 }

@@ -1,0 +1,130 @@
+//! Unified CLI/env knob resolution.
+//!
+//! Every numeric tuning knob in the CLI follows one contract, stated in
+//! docs/ARCHITECTURE.md and previously re-implemented five times across
+//! the coordinator (`workers_from_env`, `cap_from_env`, `batch_from_env`,
+//! the retries and queue-cap parsers):
+//!
+//! * **CLI wins over env.**  An explicit flag value is taken verbatim —
+//!   the environment is only consulted when the flag is absent.
+//! * **Garbage is a hard error, never a silent default.**  An env value
+//!   that does not parse fails the run with
+//!   `"{ENV} must be {noun}, got '{value}'"` — the seed behavior of
+//!   falling back to the default turned typos into mis-sized fleets.
+//! * **Zero is a hard error where zero cannot mean anything.**  Knobs
+//!   whose zero value could only be a typo (batch size, cache capacity,
+//!   queue cap) reject it with a knob-specific message pointing at the
+//!   way to actually turn the feature off.
+//!
+//! [`Knob`] carries the env-var name, the noun used in the error message,
+//! and the parser; call sites keep their own defaults and clamps, which
+//! differ per knob.  The public `*_from_env` functions on
+//! [`FleetRunner`](crate::coordinator::FleetRunner),
+//! [`EvalCache`](crate::coordinator::EvalCache) and the serve CLI are thin
+//! delegations onto this module, so their pinned messages — asserted by
+//! tests — come from exactly one format string.
+
+use anyhow::{anyhow, Result};
+
+/// One CLI/env knob: where it reads from and how a raw string becomes a
+/// value.  See the module docs for the resolution contract.
+pub struct Knob<T> {
+    /// Environment variable consulted when the CLI flag is absent.
+    env: &'static str,
+    /// How the error message names the expected value ("a positive
+    /// integer", "a non-negative integer", …).
+    noun: &'static str,
+    /// Raw string → value; `None` means unparseable (a hard error).
+    parse: fn(&str) -> Option<T>,
+}
+
+impl<T> Knob<T> {
+    /// A knob reading `env` with `parse`, erroring as
+    /// `"{env} must be {noun}, got '…'"` on garbage.
+    pub fn new(env: &'static str, noun: &'static str, parse: fn(&str) -> Option<T>) -> Knob<T> {
+        Knob { env, noun, parse }
+    }
+
+    /// Resolve: the CLI value verbatim when present, else the env var
+    /// (garbage is a hard error), else `None` — the caller supplies the
+    /// default and any clamping.
+    pub fn get(&self, cli: Option<T>) -> Result<Option<T>> {
+        if let Some(n) = cli {
+            return Ok(Some(n));
+        }
+        match std::env::var(self.env) {
+            Ok(v) => match (self.parse)(&v) {
+                Some(n) => Ok(Some(n)),
+                None => Err(anyhow!("{} must be {}, got '{v}'", self.env, self.noun)),
+            },
+            Err(_) => Ok(None),
+        }
+    }
+}
+
+/// The whitespace-tolerant integer parser every counter knob shares.
+fn parse_usize(s: &str) -> Option<usize> {
+    s.trim().parse().ok()
+}
+
+impl Knob<usize> {
+    /// An integer-valued knob (the common case): trims whitespace, parses
+    /// as `usize`, hard-errors on anything else.
+    pub fn counter(env: &'static str, noun: &'static str) -> Knob<usize> {
+        Knob::new(env, noun, parse_usize)
+    }
+
+    /// [`Knob::get`] for knobs where 0 — from either source — is always a
+    /// typo: rejects `Some(0)` with the knob-specific `zero_msg` (which
+    /// should name how the feature is actually turned off).
+    pub fn require_nonzero(&self, cli: Option<usize>, zero_msg: &str) -> Result<Option<usize>> {
+        match self.get(cli)? {
+            Some(0) => Err(anyhow!("{zero_msg}")),
+            other => Ok(other),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resolution_order_and_messages_are_pinned() {
+        // One test so the env mutation is serialized (house pattern for
+        // every *_from_env test in the tree).  A dedicated variable keeps
+        // it from racing the real knobs' tests.
+        let knob = Knob::counter("HAQA_KNOB_SELFTEST", "a positive integer");
+
+        // CLI wins without consulting the env at all.
+        std::env::set_var("HAQA_KNOB_SELFTEST", "garbage");
+        let cli = knob.get(Some(7));
+        assert_eq!(cli.unwrap(), Some(7), "CLI value taken verbatim");
+
+        // Garbage env is a hard error with the pinned message shape.
+        let err = knob.get(None);
+        let msg = format!("{:#}", err.expect_err("typo must not be swallowed"));
+        assert_eq!(
+            msg, "HAQA_KNOB_SELFTEST must be a positive integer, got 'garbage'",
+            "the one shared format string"
+        );
+
+        // Whitespace-padded integers parse; absence resolves to None.
+        std::env::set_var("HAQA_KNOB_SELFTEST", " 42 ");
+        assert_eq!(knob.get(None).unwrap(), Some(42));
+        std::env::remove_var("HAQA_KNOB_SELFTEST");
+        assert_eq!(knob.get(None).unwrap(), None, "caller owns the default");
+
+        // Zero-rejecting knobs surface the caller's message for both
+        // sources; nonzero and absent pass through.
+        assert_eq!(knob.require_nonzero(Some(3), "no zeros").unwrap(), Some(3));
+        assert_eq!(knob.require_nonzero(None, "no zeros").unwrap(), None);
+        let err = knob.require_nonzero(Some(0), "no zeros please");
+        let msg = format!("{:#}", err.expect_err("zero is a typo"));
+        assert_eq!(msg, "no zeros please");
+        std::env::set_var("HAQA_KNOB_SELFTEST", "0");
+        let err = knob.require_nonzero(None, "no zeros please");
+        std::env::remove_var("HAQA_KNOB_SELFTEST");
+        assert!(err.is_err(), "env zero is the same typo");
+    }
+}

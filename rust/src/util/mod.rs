@@ -12,6 +12,7 @@ pub mod cli;
 pub mod hash;
 pub mod json;
 pub mod jsonl;
+pub mod knob;
 pub mod proptest;
 pub mod retry;
 pub mod rng;

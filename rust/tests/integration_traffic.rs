@@ -1,0 +1,205 @@
+//! Integration: the traffic-shaped serving simulator wired end to end —
+//! `traffic:` scenarios through the agent round loop, the fleet, the
+//! eval cache, the resume journal and the Pareto report.  Everything is
+//! analytic (no artifacts), so tier-1 `cargo test` covers the whole
+//! serving path offline.
+
+use haqa::coordinator::matrix::MatrixSpec;
+use haqa::coordinator::scenario::Track;
+use haqa::coordinator::{EvalCache, FleetRunner, Scenario};
+use haqa::util::json;
+
+/// Traffic-scored bit-width scenarios across every named profile on two
+/// models, one per (model, profile) cell.  Distinct seeds shape distinct
+/// arrival streams.
+fn traffic_scenarios(tag: &str) -> Vec<Scenario> {
+    let mut v = Vec::new();
+    for (i, model) in ["llama2-7b", "tinyllama-1.1b"].iter().enumerate() {
+        for (j, profile) in haqa::coordinator::traffic::PROFILE_NAMES.iter().enumerate() {
+            v.push(Scenario {
+                name: format!("{tag}_{model}_{profile}"),
+                track: Track::Bitwidth,
+                model: (*model).into(),
+                device: "a6000".into(),
+                memory_limit_gb: 24.0,
+                traffic: (*profile).into(),
+                budget: 5,
+                seed: 11 + (i * 16 + j) as u64,
+                ..Scenario::default()
+            });
+        }
+    }
+    v
+}
+
+fn score_bits(report: &haqa::coordinator::FleetReport) -> Vec<u64> {
+    report
+        .outcomes
+        .iter()
+        .map(|o| o.as_ref().expect("scenario failed").best_score.to_bits())
+        .collect()
+}
+
+fn temp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("haqa_it_traffic_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// The acceptance gate: a traffic-scored fleet is bit-identical run
+/// serially, run on a worker pool, and resumed from a torn journal (the
+/// SIGKILL shape: a prefix is journaled, the rest runs under `--resume`).
+#[test]
+fn traffic_fleet_is_bit_identical_serial_vs_parallel_vs_resumed() {
+    let scenarios = traffic_scenarios("tr_ident");
+    let serial = FleetRunner::new(1).quiet().run(&scenarios);
+    let parallel = FleetRunner::new(4).quiet().run(&scenarios);
+    assert_eq!(
+        score_bits(&serial),
+        score_bits(&parallel),
+        "worker parallelism changed a serving score"
+    );
+    // Serving scores are negated p99 latencies: finite and negative for a
+    // deployment that completes requests.
+    for out in &serial.outcomes {
+        let best = out.as_ref().unwrap().best_score;
+        assert!(best.is_finite() && best < 0.0, "score {best} is not a -p99");
+    }
+
+    // "Crash" after half the fleet, then resume over the full list.
+    let dir = temp_dir("resume");
+    let partial = FleetRunner::new(2)
+        .quiet()
+        .with_state_dir(&dir)
+        .unwrap()
+        .run(&scenarios[..3]);
+    assert_eq!(partial.journal.map(|(records, _)| records), Some(3));
+    let resumed = FleetRunner::new(2)
+        .quiet()
+        .with_state_dir(&dir)
+        .unwrap()
+        .run(&scenarios);
+    assert_eq!(resumed.resumed, 3, "the journaled prefix must be skipped");
+    assert_eq!(
+        score_bits(&serial),
+        score_bits(&resumed),
+        "journal replay changed a serving score"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A traffic-scored scenario and its kernel-only twin (identical except
+/// `traffic: ""`) must never share cache entries or journal rows: they
+/// answer different questions (p99 under load vs lone-request
+/// throughput) and their scores have opposite signs.
+#[test]
+fn traffic_scenario_never_collides_with_its_kernel_only_twin() {
+    let mut plain = Scenario {
+        name: "tr_twin".into(),
+        track: Track::Bitwidth,
+        model: "llama2-7b".into(),
+        device: "a6000".into(),
+        memory_limit_gb: 24.0,
+        budget: 5,
+        seed: 11,
+        ..Scenario::default()
+    };
+    let mut traffic = plain.clone();
+    traffic.traffic = "chat-burst".into();
+    // Same name on purpose: only the `traffic` field separates the keys.
+    let scenarios = vec![plain.clone(), traffic.clone()];
+    let report = FleetRunner::new(2)
+        .quiet()
+        .with_cache(EvalCache::new())
+        .run(&scenarios);
+    let bits = score_bits(&report);
+    assert_ne!(bits[0], bits[1], "twin scenarios returned one score");
+    let plain_best = report.outcomes[0].as_ref().unwrap().best_score;
+    let traffic_best = report.outcomes[1].as_ref().unwrap().best_score;
+    assert!(plain_best > 0.0, "bit-width score {plain_best} should be tokens/s");
+    assert!(traffic_best < 0.0, "serving score {traffic_best} should be -p99");
+
+    // And the resume journal separates them too: a state dir written by
+    // the plain twin must not satisfy the traffic twin.
+    let dir = temp_dir("twin");
+    plain.name = "tr_twin2".into();
+    traffic.name = "tr_twin2".into();
+    let first = FleetRunner::new(1)
+        .quiet()
+        .with_state_dir(&dir)
+        .unwrap()
+        .run(std::slice::from_ref(&plain));
+    assert_eq!(first.resumed, 0);
+    let second = FleetRunner::new(1)
+        .quiet()
+        .with_state_dir(&dir)
+        .unwrap()
+        .run(std::slice::from_ref(&traffic));
+    assert_eq!(second.resumed, 0, "the traffic twin replayed the plain journal row");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Serving evaluations flow through the persistent eval-cache journal
+/// like any other track: a fresh cache instance over the same directory
+/// replays them bit-identically with hits.
+#[test]
+fn serving_scores_warm_from_the_persistent_cache() {
+    let dir = temp_dir("warm");
+    std::fs::create_dir_all(&dir).unwrap();
+    let scenarios = traffic_scenarios("tr_warm");
+    let cold = FleetRunner::new(2)
+        .quiet()
+        .with_cache(EvalCache::with_dir(&dir).unwrap())
+        .run(&scenarios);
+    let warm = FleetRunner::new(2)
+        .quiet()
+        .with_cache(EvalCache::with_dir(&dir).unwrap())
+        .run(&scenarios);
+    assert_eq!(score_bits(&cold), score_bits(&warm));
+    let st = warm.cache.unwrap();
+    assert!(st.hits > 0, "warm run over serving scenarios saw zero cache hits");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The matrix `traffic` axis flows through generation, the fleet and the
+/// report: generated serving scenarios run like hand-written ones and
+/// surface as `device/serving` Pareto groups with
+/// `[-p99, tokens/s]` objective vectors.
+#[test]
+fn matrix_traffic_axis_flows_through_fleet_and_pareto() {
+    let j = json::parse(
+        r#"{"count": 12, "seed": 9,
+             "devices": ["a6000"],
+             "kernels": ["matmul:64"],
+             "optimizers": ["random"],
+             "models": ["tinyllama-1.1b"],
+             "memory_limits_gb": [24],
+             "traffic": ["chat-burst", "mobile-single-user"],
+             "budget": 3}"#,
+    )
+    .unwrap();
+    let spec = MatrixSpec::from_json(&j).unwrap();
+    let scenarios = spec.expand();
+    let serving: Vec<&Scenario> = scenarios.iter().filter(|s| !s.traffic.is_empty()).collect();
+    assert!(!serving.is_empty(), "the matrix generated no serving scenarios");
+    for sc in &serving {
+        assert_eq!(sc.track, Track::Bitwidth);
+        assert!(sc.name.starts_with("gen/tr/"), "{}", sc.name);
+    }
+
+    let report = FleetRunner::new(2).quiet().run(&scenarios);
+    for (sc, out) in scenarios.iter().zip(&report.outcomes) {
+        assert!(out.is_ok(), "{} failed: {:?}", sc.name, out.as_ref().err());
+    }
+    let fronts = report.pareto(&scenarios);
+    let serving_front = fronts
+        .iter()
+        .find(|f| f.group == "a6000/serving")
+        .expect("no a6000/serving Pareto group");
+    assert!(!serving_front.members.is_empty());
+    for (name, objs) in &serving_front.members {
+        assert_eq!(objs.len(), 2, "{name}: serving objectives are [-p99, tokens/s]");
+        assert!(objs[0] < 0.0, "{name}: -p99 must be negative, got {}", objs[0]);
+        assert!(objs[1] >= 0.0, "{name}: tokens/s must be non-negative");
+    }
+}
